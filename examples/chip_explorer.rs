@@ -1,0 +1,112 @@
+//! Chip-design explorer: sweep the reconfigurable design space
+//! (precision x sparsity x corner x FIFO depth x multi-core) and print
+//! the resulting operating points — the kind of what-if analysis the
+//! paper's reconfigurability enables.
+//!
+//! ```text
+//! cargo run --release --example chip_explorer
+//! ```
+
+use spidr::coordinator::MultiCoreScheduler;
+use spidr::energy::calibration::{measure, peak_layer};
+use spidr::energy::model::Corner;
+use spidr::energy::tech::scale_efficiency_to_node;
+use spidr::prop::SplitMix64;
+use spidr::quant::{Precision, ALL_PRECISIONS};
+use spidr::sim::SimConfig;
+use spidr::snn::spikes::SpikePlane;
+use spidr::snn::tensor::Mat;
+
+fn main() -> spidr::Result<()> {
+    println!("== operating-point sweep (precision x sparsity, LOW corner) ==");
+    println!("{:>6} {:>9} {:>10} {:>10} {:>9} {:>14}",
+             "prec", "sparsity", "GOPS", "TOPS/W", "mW", "TOPS/W @28nm");
+    for &p in &ALL_PRECISIONS {
+        for s in [0.70, 0.85, 0.95] {
+            let op = measure(p, Corner::LOW, s);
+            println!(
+                "{:>6} {:>8.0}% {:>10.2} {:>10.2} {:>9.2} {:>14.2}",
+                format!("{}b", p.weight_bits()),
+                s * 100.0,
+                op.gops,
+                op.tops_per_watt,
+                op.power_mw,
+                scale_efficiency_to_node(op.tops_per_watt, 65.0, 28.0)
+            );
+        }
+    }
+
+    println!("\n== multi-core scaling (channel-parallel, 72-ch layer) ==");
+    let layer = {
+        let mut l = peak_layer(Precision::W4V7);
+        // widen to 72 channels so a single core needs 2 passes
+        let mut w = Mat::zeros(l.fan_in(), 72);
+        let mut rng = SplitMix64::new(5);
+        for f in 0..l.fan_in() {
+            for k in 0..72 {
+                w.set(f, k, rng.below(15) as i32 - 7);
+            }
+        }
+        l.weights = Some(w);
+        l.out_shape = (72, l.out_shape.1, l.out_shape.2);
+        l
+    };
+    let frames: Vec<SpikePlane> = (0..2)
+        .map(|i| {
+            let mut rng = SplitMix64::new(100 + i);
+            let (c, h, w) = layer.in_shape;
+            let mut p = SpikePlane::zeros(c, h, w);
+            for j in 0..p.len() {
+                if rng.chance(0.05) {
+                    p.as_mut_slice()[j] = 1;
+                }
+            }
+            p
+        })
+        .collect();
+    let (m, k) = layer.vmem_shape()?;
+    let mut base = 0u64;
+    for cores in [1usize, 2, 4] {
+        let sched = MultiCoreScheduler::new(cores, SimConfig::timing_only(Precision::W4V7));
+        let mut state = Mat::zeros(m, k);
+        let (_, stats) = sched.run_layer(&layer, &frames, &mut state)?;
+        if cores == 1 {
+            base = stats.cycles;
+        }
+        println!(
+            "  {cores} core(s): {:>8} cycles  speedup {:.2}x  balance {:?}",
+            stats.cycles,
+            base as f64 / stats.cycles as f64,
+            stats.per_core_cycles
+        );
+    }
+
+    println!("\n== FIFO-depth ablation (S2A batching, see Fig. 10 bench) ==");
+    for depth in [1usize, 4, 16] {
+        let mut cfg = SimConfig::timing_only(Precision::W4V7);
+        cfg.fifo_depth = depth;
+        let core = spidr::sim::SpidrCore::new(cfg);
+        let layer = peak_layer(Precision::W4V7);
+        let frames: Vec<SpikePlane> = (0..2)
+            .map(|i| {
+                let mut rng = SplitMix64::new(7 + i);
+                let (c, h, w) = layer.in_shape;
+                let mut p = SpikePlane::zeros(c, h, w);
+                for j in 0..p.len() {
+                    if rng.chance(0.15) {
+                        p.as_mut_slice()[j] = 1;
+                    }
+                }
+                p
+            })
+            .collect();
+        let (m, k) = layer.vmem_shape()?;
+        let mut state = Mat::zeros(m, k);
+        let (_, stats) = core.run_layer(&layer, &frames, &mut state)?;
+        println!(
+            "  depth {depth:>2}: {} parity switches, {} cycles",
+            stats.run.parity_switches, stats.run.cycles
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,106 @@
+//! Gesture recognition end to end: synthetic DVS gesture events →
+//! streaming server (ingest thread + backpressure) → PJRT golden model
+//! (the AOT-compiled JAX network) → classification, with the cycle
+//! simulator reporting what the SpiDR core would spend.
+//!
+//! Requires `make artifacts`. Run:
+//! ```text
+//! cargo run --release --example gesture_recognition
+//! ```
+
+use spidr::coordinator::{Engine, InferenceServer, NetworkCompiler, ServerConfig};
+use spidr::dvs::binning::unbin_frames;
+use spidr::dvs::gesture::{make_gesture, GestureConfig, NUM_GESTURE_CLASSES};
+use spidr::energy::model::Corner;
+use spidr::error::Result;
+use spidr::quant::Precision;
+use spidr::runtime::{ArtifactStore, GoldenModel};
+use spidr::sim::SimConfig;
+use spidr::snn::network::gesture_network;
+use spidr::snn::spikes::SpikePlane;
+use spidr::snn::WeightBundle;
+
+struct GoldenEngine {
+    store: ArtifactStore,
+    model: GoldenModel,
+}
+
+impl Engine for GoldenEngine {
+    type Output = usize;
+
+    fn infer(&mut self, clip: &[SpikePlane]) -> Result<usize> {
+        self.model.run_clip(&mut self.store, clip)?;
+        Ok(self.model.argmax())
+    }
+}
+
+fn main() -> Result<()> {
+    let wb = 4u32;
+    let store = ArtifactStore::open("artifacts")?;
+    let model = GoldenModel::new(&store, &format!("gesture_w{wb}"))?;
+    let (_, h, w) = model.frame_shape();
+    let timesteps = model.timesteps;
+    println!("artifact gesture_w{wb}: {h}x{w}, {timesteps} timesteps, PJRT CPU");
+
+    // Build the request stream: events (as a DVS would emit them).
+    let cfg = GestureConfig { height: h, width: w, timesteps, noise_rate: 0.008 };
+    let n_clips = 11;
+    let mut labels = Vec::new();
+    let requests: Vec<_> = (0..n_clips)
+        .map(|i| {
+            let label = i % NUM_GESTURE_CLASSES;
+            labels.push(label);
+            let clip = make_gesture(label, 31_000 + i as u64, &cfg);
+            unbin_frames(&clip.frames, 1000)
+        })
+        .collect();
+
+    // Serve through the pipelined ingest -> infer flow.
+    let server = InferenceServer::new(ServerConfig {
+        height: h,
+        width: w,
+        timesteps,
+        bin_us: 1000,
+        queue_depth: 2,
+    });
+    let mut engine = GoldenEngine { store, model };
+    let (responses, metrics) = server.serve(requests, &mut engine)?;
+
+    let mut correct = 0;
+    for (resp, &label) in responses.iter().zip(&labels) {
+        let ok = resp.output == label;
+        correct += usize::from(ok);
+        println!(
+            "clip {:2}: label {:2} pred {:2} {} ({} us)",
+            resp.id, label, resp.output,
+            if ok { "ok " } else { "MISS" },
+            resp.latency.as_micros()
+        );
+    }
+    println!(
+        "\naccuracy {}/{} ({:.1} %) | mean latency {:.1} ms | p95 {:.1} ms | {:.1} clips/s",
+        correct,
+        n_clips,
+        correct as f64 / n_clips as f64 * 100.0,
+        metrics.mean_latency_us() / 1e3,
+        metrics.percentile_us(95.0) as f64 / 1e3,
+        metrics.clips_per_second()
+    );
+
+    // What would the SpiDR core spend? (cycle simulator, same weights)
+    let p = Precision::from_weight_bits(wb)?;
+    let bundle = WeightBundle::load(format!("artifacts/weights/gesture_w{wb}.swb"))?;
+    let net = gesture_network(&bundle, p, h, w, timesteps)?;
+    let compiled = NetworkCompiler::compile(net, SimConfig::timing_only(p))?;
+    let clip = make_gesture(3, 31_003, &cfg);
+    let mut state = compiled.network.init_state()?;
+    let report = compiled.run_clip(&clip.frames, &mut state)?;
+    println!(
+        "simulated core: {:.0} kcycles/clip ({:.2} ms @50 MHz), {:.2} uJ, {:.2} TOPS/W",
+        report.total.cycles as f64 / 1e3,
+        report.total.seconds(Corner::LOW) * 1e3,
+        report.total.total_energy_pj(Corner::LOW) / 1e6,
+        report.total.tops_per_watt(Corner::LOW),
+    );
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! **End-to-end validation driver** (DESIGN.md): optical-flow
+//! estimation on a synthetic driving scene — the paper's headline
+//! workload — exercising all three layers of the stack:
+//!
+//!  * L1/L2: the AOT-compiled JAX/Pallas network artifact executes on
+//!    the PJRT CPU client (golden model),
+//!  * L3: the cycle-level SpiDR simulator runs the *same integers* and
+//!    reports cycles/energy; its Vmem trajectory is checked bit-exact
+//!    against the golden model's on the fly,
+//!  * headline metric: AEE (px/step) + TOPS/W at the LOW corner.
+//!
+//! Requires `make artifacts`. Results are recorded in EXPERIMENTS.md.
+
+use spidr::coordinator::NetworkCompiler;
+use spidr::dvs::flow_scene::{average_endpoint_error, make_flow_scene, FlowSceneConfig};
+use spidr::energy::model::Corner;
+use spidr::error::Result;
+use spidr::quant::Precision;
+use spidr::runtime::{ArtifactStore, GoldenModel};
+use spidr::sim::SimConfig;
+use spidr::snn::network::flow_network;
+use spidr::snn::WeightBundle;
+
+fn main() -> Result<()> {
+    let wb = 8u32; // best-AEE precision point
+    let mut store = ArtifactStore::open("artifacts")?;
+    let mut golden = GoldenModel::new(&store, &format!("flow_w{wb}"))?;
+    let (_, h, w) = golden.frame_shape();
+    let timesteps = golden.timesteps;
+    println!("artifact flow_w{wb}: {h}x{w}, {timesteps} timesteps");
+
+    let p = Precision::from_weight_bits(wb)?;
+    let bundle = WeightBundle::load(store.swb_path("flow", wb))?;
+    let net = flow_network(&bundle, p, h, w, timesteps)?;
+    // functional + timing: we want the Vmem trajectory for the
+    // bit-exactness check
+    let compiled = NetworkCompiler::compile(net, SimConfig::default())?;
+
+    let cfg = FlowSceneConfig { height: h, width: w, timesteps, ..Default::default() };
+    let clips = 5;
+    let mut total_aee = 0.0;
+    let mut total_uj = 0.0;
+    let mut total_tw = 0.0;
+    for i in 0..clips {
+        let scene = make_flow_scene(51_000 + i as u64, &cfg);
+
+        // golden model (PJRT)
+        golden.run_clip(&mut store, &scene.frames)?;
+        let pred = golden.out_float();
+        let m = h * w;
+        let pred_u: Vec<f32> = (0..m).map(|j| pred[j * 2] as f32).collect();
+        let pred_v: Vec<f32> = (0..m).map(|j| pred[j * 2 + 1] as f32).collect();
+        let aee = average_endpoint_error(&scene, &pred_u, &pred_v);
+
+        // cycle simulator on the same integers
+        let mut state = compiled.network.init_state()?;
+        let report = compiled.run_clip(&scene.frames, &mut state)?;
+
+        // bit-exactness: simulator's output accumulator == golden's
+        let sim_acc = state.vmems.last().unwrap().as_slice();
+        assert_eq!(
+            sim_acc, &golden.out_acc[..],
+            "simulator diverged from the PJRT golden model"
+        );
+
+        let uj = report.total.total_energy_pj(Corner::LOW) / 1e6;
+        let tw = report.total.tops_per_watt(Corner::LOW);
+        total_aee += aee;
+        total_uj += uj;
+        total_tw += tw;
+        println!(
+            "clip {i}: AEE {:.3} px/step | sim {:.0} kcycles ({:.2} ms @50MHz), \
+             {:.2} uJ, {:.2} TOPS/W | golden==sim ✓",
+            aee,
+            report.total.cycles as f64 / 1e3,
+            report.total.seconds(Corner::LOW) * 1e3,
+            uj,
+            tw
+        );
+    }
+    println!(
+        "\nHEADLINE: mean AEE {:.3} px/step, {:.2} uJ/inference, {:.2} TOPS/W \
+         over {clips} clips (flow_w{wb}, {h}x{w})",
+        total_aee / clips as f64,
+        total_uj / clips as f64,
+        total_tw / clips as f64
+    );
+    Ok(())
+}

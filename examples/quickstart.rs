@@ -1,0 +1,78 @@
+//! Quickstart: simulate one spiking conv layer on the SpiDR core.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Builds a small Conv(2→12) layer, feeds three random event frames
+//! through the cycle-level simulator, and prints the mapping, cycle
+//! count, energy breakdown, and derived chip metrics — the minimal
+//! end-to-end tour of the public API.
+
+use spidr::coordinator::Mapper;
+use spidr::energy::model::Corner;
+use spidr::prop::SplitMix64;
+use spidr::quant::Precision;
+use spidr::sim::{SimConfig, SpidrCore};
+use spidr::snn::layer::{Layer, NeuronConfig, ResetMode};
+use spidr::snn::spikes::SpikePlane;
+use spidr::snn::tensor::Mat;
+
+fn main() -> spidr::Result<()> {
+    // 1. A quantized spiking conv layer (weights would normally come
+    //    from a trained .swb bundle; here they are synthetic).
+    let mut rng = SplitMix64::new(42);
+    let mut weights = Mat::zeros(2 * 9, 12);
+    for f in 0..18 {
+        for k in 0..12 {
+            weights.set(f, k, rng.below(15) as i32 - 7);
+        }
+    }
+    let layer = Layer::conv(
+        (2, 16, 16), // C,H,W input
+        12,          // output channels
+        3, 3, 1, 1,  // 3x3, stride 1, pad 1
+        weights,
+        NeuronConfig { theta: 8, leak: 2, leaky: true, reset: ResetMode::Soft },
+        false,
+    )?;
+
+    // 2. How does it map onto the core? (paper Fig. 12)
+    let mapping = Mapper::new(Precision::W4V7).map_layer(&layer)?;
+    println!("mapping: {:?}, rows/CU {:?}, {} tiles, {} pass(es)",
+             mapping.mode, mapping.rows_per_cu, mapping.tiles, mapping.passes);
+
+    // 3. Three timesteps of random events at ~90 % sparsity.
+    let frames: Vec<SpikePlane> = (0..3)
+        .map(|t| {
+            let mut p = SpikePlane::zeros(2, 16, 16);
+            for i in 0..p.len() {
+                if rng.chance(0.10) {
+                    p.as_mut_slice()[i] = 1;
+                }
+            }
+            println!("frame {t}: {:.1} % sparsity", p.sparsity() * 100.0);
+            p
+        })
+        .collect();
+
+    // 4. Run on the simulated core (functional + cycle/energy exact).
+    let core = SpidrCore::new(SimConfig::default());
+    let mut vmem_state = Mat::zeros(16 * 16, 12);
+    let (outputs, stats) = core.run_layer(&layer, &frames, &mut vmem_state)?;
+
+    let mut run = stats.run;
+    run.finalize_leakage(Corner::LOW, &core.cfg.energy);
+    println!("\nresults:");
+    for (t, o) in outputs.iter().enumerate() {
+        println!("  t{t}: {} output spikes", o.count_spikes());
+    }
+    println!("  cycles          : {}", run.cycles);
+    println!("  macro ops       : {}", run.macro_ops);
+    println!("  parity switches : {}", run.parity_switches);
+    println!("  energy          : {:.2} nJ", run.total_energy_pj(Corner::LOW) / 1e3);
+    println!("  CIM share       : {:.1} %", run.energy.cim_share() * 100.0);
+    println!("  throughput      : {:.2} GOPS @50 MHz", run.gops(Corner::LOW));
+    println!("  efficiency      : {:.2} TOPS/W", run.tops_per_watt(Corner::LOW));
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""Build-time Python for the SpiDR reproduction.
+
+Layers L1 (Pallas kernels) and L2 (JAX model), plus the AOT lowering
+(`aot.py`) that produces the HLO-text artifacts the Rust runtime loads.
+Never imported on the request path.
+"""

@@ -1,0 +1,214 @@
+"""AOT lowering: JAX network steps -> HLO text artifacts for the Rust runtime.
+
+Emits, for every (task, precision) pair trained by ``train.py``:
+
+  artifacts/{task}_w{B}.hlo.txt   — one full-network timestep
+      inputs : frame (C,H,W) i32, then one (M,K) i32 Vmem per stateful
+               layer, in layer order
+      outputs: tuple(out_acc (M_out,K_out) i32, counts (L,) i32,
+               vmem'_0, ..., vmem'_{L-1})
+
+plus a standalone compute-macro artifact used by the quickstart example
+and runtime unit tests:
+
+  artifacts/macro_w{B}.hlo.txt    — spiking_matmul at a fixed small shape
+
+and machine-readable metadata for the Rust side:
+
+  artifacts/manifest.txt          — line-oriented artifact descriptions
+  artifacts/weights/{task}_w{B}.swb — integer weight bundle (see swb format
+      doc below) consumed by the cycle-level simulator so that the sim and
+      the PJRT golden model compute from identical integers.
+
+HLO *text* (never ``HloModuleProto.serialize``) is the interchange
+format: jax >= 0.5 emits protos with 64-bit instruction ids that the
+``xla`` crate's xla_extension 0.5.1 rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+swb ("SpiDR weight bundle") binary format, all little-endian:
+    u32 magic = 0x53574231 ("SWB1")
+    u32 num_layers
+    per layer: u32 fan_in, u32 k, i32 theta, i32 leak, f64 scale,
+               i32 weights[fan_in * k]   (row-major, W[f][k])
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import struct
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import QuantizedNetwork, build_layers, flow_topology, gesture_topology, network_step
+from .quantize import PRECISIONS, PrecisionConfig
+
+SWB_MAGIC = 0x53574231
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax lowering to XLA HLO text (the interchange format).
+
+    ``print_large_constants=True`` is essential: the default printer
+    elides big dense literals as ``constant({...})``, which the text
+    parser on the Rust side then fills with garbage — the baked-in
+    trained weights would silently turn into nonsense (this bit us; see
+    EXPERIMENTS.md §Fig16 'HLO text round-trip' note).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(print_large_constants=True)
+    if "constant({...})" in text:
+        raise RuntimeError(
+            "HLO text still contains elided constants; the artifact "
+            "would be corrupt"
+        )
+    return text
+
+
+def load_bundle(path: pathlib.Path):
+    """Load a train.py npz bundle -> (wqs, scales, thetas, leaks, meta)."""
+    z = np.load(path)
+    n = int(z["num_layers"])
+    wqs = [z[f"w{i}"] for i in range(n)]
+    meta = {
+        "timesteps": int(z["timesteps"]),
+        "input_shape": tuple(int(x) for x in z["input_shape"]),
+    }
+    return wqs, list(z["scales"]), list(z["thetas"]), list(z["leaks"]), meta
+
+
+def write_swb(path: pathlib.Path, wqs, scales, thetas, leaks) -> None:
+    """Write the integer weight bundle the Rust simulator consumes."""
+    with open(path, "wb") as f:
+        f.write(struct.pack("<II", SWB_MAGIC, len(wqs)))
+        for wq, s, th, lk in zip(wqs, scales, thetas, leaks):
+            fan_in, k = wq.shape
+            f.write(struct.pack("<IIiid", fan_in, k, int(th), int(lk), float(s)))
+            f.write(np.ascontiguousarray(wq, dtype="<i4").tobytes())
+
+
+def build_network(task: str, wb: int, weights_dir: pathlib.Path) -> QuantizedNetwork:
+    """Reconstruct the quantized network for one (task, precision)."""
+    vb = {4: 7, 6: 11, 8: 15}[wb]
+    cfg = PrecisionConfig(wb, vb)
+    wqs, scales, thetas, leaks, meta = load_bundle(
+        weights_dir / f"{task}_w{wb}.npz")
+    topology = gesture_topology() if task == "gesture" else flow_topology()
+    layers = build_layers(topology, meta["input_shape"], wqs, thetas, leaks)
+    return QuantizedNetwork(
+        name=task, layers=layers, precision=cfg,
+        weight_scales=tuple(scales), timesteps=meta["timesteps"])
+
+
+def lower_network_step(net: QuantizedNetwork) -> str:
+    """Lower one full-network timestep to HLO text."""
+    c, h, w = net.layers[0].in_shape
+    frame_spec = jax.ShapeDtypeStruct((c, h, w), jnp.int32)
+    vmem_specs = [
+        jax.ShapeDtypeStruct(l.vmem_shape, jnp.int32)
+        for l in net.stateful_layers
+    ]
+
+    def step(frame, *vmems):
+        out_acc, counts, vmems_next = network_step(net, frame, list(vmems))
+        return (out_acc, counts, *vmems_next)
+
+    lowered = jax.jit(step).lower(frame_spec, *vmem_specs)
+    return to_hlo_text(lowered)
+
+
+def lower_macro(wb: int, m: int = 128, f: int = 72, k: int = 12) -> str:
+    """Lower a standalone compute-macro op (quickstart / runtime tests)."""
+    from .kernels.spiking_matmul import spiking_matmul
+    vb = {4: 7, 6: 11, 8: 15}[wb]
+
+    def macro(spikes, weights, vmem):
+        return (spiking_matmul(spikes, weights, vmem, vb),)
+
+    specs = (
+        jax.ShapeDtypeStruct((m, f), jnp.int32),
+        jax.ShapeDtypeStruct((f, k), jnp.int32),
+        jax.ShapeDtypeStruct((m, k), jnp.int32),
+    )
+    return to_hlo_text(jax.jit(macro).lower(*specs))
+
+
+def manifest_entry(kind: str, name: str, net: QuantizedNetwork | None,
+                   extra: dict) -> list[str]:
+    """Line-oriented manifest block (one `artifact` stanza)."""
+    lines = [f"artifact {name}", f"  kind {kind}"]
+    for key, val in extra.items():
+        lines.append(f"  {key} {val}")
+    if net is not None:
+        c, h, w = net.layers[0].in_shape
+        lines.append(f"  task {net.name}")
+        lines.append(f"  weight_bits {net.precision.weight_bits}")
+        lines.append(f"  vmem_bits {net.precision.vmem_bits}")
+        lines.append(f"  timesteps {net.timesteps}")
+        lines.append(f"  frame_shape {c} {h} {w}")
+        lines.append(f"  output_scale {float(net.output_scale):.17g}")
+        for i, l in enumerate(net.stateful_layers):
+            msize, ksize = l.vmem_shape
+            lines.append(f"  vmem {i} {msize} {ksize}")
+        out_l = net.stateful_layers[-1]
+        lines.append(f"  out_shape {out_l.vmem_shape[0]} {out_l.vmem_shape[1]}")
+        lines.append(f"  num_state_layers {len(net.stateful_layers)}")
+    lines.append("end")
+    return lines
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--tasks", nargs="*", default=["gesture", "flow"])
+    ap.add_argument("--precisions", nargs="*", type=int, default=[4, 6, 8])
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    weights_dir = out_dir / "weights"
+    if not weights_dir.exists():
+        print("error: run `python -m compile.train` first (no weights found)",
+              file=sys.stderr)
+        raise SystemExit(1)
+
+    manifest: list[str] = ["# SpiDR artifact manifest (generated by aot.py)"]
+
+    # Standalone macro artifacts (one per precision).
+    for wb in args.precisions:
+        name = f"macro_w{wb}"
+        text = lower_macro(wb)
+        (out_dir / f"{name}.hlo.txt").write_text(text)
+        manifest += manifest_entry(
+            "macro", name, None,
+            {"weight_bits": wb, "vmem_bits": {4: 7, 6: 11, 8: 15}[wb],
+             "m": 128, "f": 72, "k": 12})
+        print(f"wrote {name}.hlo.txt ({len(text)} chars)")
+
+    # Full-network step artifacts.
+    for task in args.tasks:
+        for wb in args.precisions:
+            net = build_network(task, wb, weights_dir)
+            name = f"{task}_w{wb}"
+            text = lower_network_step(net)
+            (out_dir / f"{name}.hlo.txt").write_text(text)
+            manifest += manifest_entry("network_step", name, net, {})
+            print(f"wrote {name}.hlo.txt ({len(text)} chars)")
+
+            wqs, scales, thetas, leaks, _ = load_bundle(
+                weights_dir / f"{task}_w{wb}.npz")
+            write_swb(weights_dir / f"{task}_w{wb}.swb",
+                      wqs, scales, thetas, leaks)
+
+    (out_dir / "manifest.txt").write_text("\n".join(manifest) + "\n")
+    print(f"wrote manifest.txt ({len(manifest)} lines)")
+
+
+if __name__ == "__main__":
+    main()

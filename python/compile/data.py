@@ -1,0 +1,232 @@
+"""Synthetic event-camera workload generators (build-time Python side).
+
+The paper evaluates on IBM DVS Gesture [19] and DSEC-flow [20]; neither
+dataset ships with this environment, so we substitute parametric event
+generators that preserve the properties the architecture cares about
+(DESIGN.md §2):
+
+  * binary ON/OFF event frames with realistic, *layer-varying* sparsity
+    (the entire point of Figs. 4/5/17 is how efficiency tracks sparsity),
+  * temporally-coherent motion so SNN state (Vmem) carries information
+    across timesteps,
+  * ground truth (class label / dense optical flow) for Fig. 16.
+
+``rust/src/dvs/`` implements the same generators with the same splitmix64
+PRNG so Rust-side benches and Python-side training see identical
+distributions (and identical frames for a given seed: cross-checked in
+integration tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+#: Gesture classes: 11, mirroring IBM DVS Gesture.
+NUM_GESTURE_CLASSES = 11
+
+
+def _splitmix64(state: int) -> tuple[int, int]:
+    """One step of splitmix64; mirrored by ``rust/src/prop/rng.rs``."""
+    state = (state + 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & 0xFFFFFFFFFFFFFFFF
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
+    return state, z ^ (z >> 31)
+
+
+class SplitMix64:
+    """Deterministic, language-portable PRNG (same stream as Rust)."""
+
+    def __init__(self, seed: int):
+        self.state = seed & 0xFFFFFFFFFFFFFFFF
+
+    def next_u64(self) -> int:
+        self.state, out = _splitmix64(self.state)
+        return out
+
+    def next_f64(self) -> float:
+        """Uniform in [0, 1): top 53 bits / 2^53 (same as Rust)."""
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def uniform(self, lo: float, hi: float) -> float:
+        return lo + (hi - lo) * self.next_f64()
+
+
+@dataclasses.dataclass(frozen=True)
+class GestureSample:
+    """One synthetic gesture clip: frames ``(T, 2, H, W)`` uint8, label."""
+
+    frames: np.ndarray
+    label: int
+
+
+def make_gesture(
+    label: int,
+    seed: int,
+    *,
+    height: int = 64,
+    width: int = 64,
+    timesteps: int = 20,
+    noise_rate: float = 0.008,
+) -> GestureSample:
+    """Generate one synthetic DVS gesture clip.
+
+    Each of the 11 classes is a parametric motion pattern of a bright
+    "arm" segment (orbit direction/speed/radius and oscillation mode
+    differ per class). Events fire where the rendered arm edge moves
+    between consecutive sub-frames: ON (channel 0) where intensity rises,
+    OFF (channel 1) where it falls — the DVS contrast model. Poisson-ish
+    background noise is added per pixel per channel.
+    """
+    if not 0 <= label < NUM_GESTURE_CLASSES:
+        raise ValueError(f"label {label} out of range")
+    rng = SplitMix64((seed << 8) ^ (label * 0x9E37) ^ 0xD5)
+    # Class-parametric motion, kept identical in rust/src/dvs/gesture.rs.
+    # Classes are separable both spatially (each class orbits around a
+    # class-specific center displaced from the image center) and
+    # temporally (orbit direction alternates by class parity) — like
+    # real DVS gestures, where "left-arm wave" vs "right-arm wave"
+    # differ in both where and how events fire.
+    min_hw = min(height, width)
+    class_ang = 6.28318 * label / NUM_GESTURE_CLASSES
+    cy = height / 2.0 + 0.26 * min_hw * np.sin(class_ang)
+    cx = width / 2.0 + 0.26 * min_hw * np.cos(class_ang)
+    direction = 1.0 if label % 2 == 0 else -1.0
+    omega = 0.30 + 0.06 * (label % 3)
+    radius0 = 0.14 * min_hw
+    wobble = 0.0
+    phase = rng.uniform(0.0, 6.28318)
+    arm_len = 0.22 * min_hw
+    thickness = 2.2
+
+    def render(t: float) -> np.ndarray:
+        ang = phase + direction * omega * t
+        r = radius0 * (1.0 + wobble * np.sin(0.5 * t + phase))
+        bx, by = cx + r * np.cos(ang), cy + r * np.sin(ang)
+        ex = bx + arm_len * np.cos(ang + 1.2)
+        ey = by + arm_len * np.sin(ang + 1.2)
+        ys, xs = np.mgrid[0:height, 0:width].astype(np.float64)
+        # distance from each pixel to the segment (bx,by)-(ex,ey)
+        dx, dy = ex - bx, ey - by
+        seg_len2 = dx * dx + dy * dy + 1e-9
+        tproj = np.clip(((xs - bx) * dx + (ys - by) * dy) / seg_len2, 0.0, 1.0)
+        px, py = bx + tproj * dx, by + tproj * dy
+        dist = np.sqrt((xs - px) ** 2 + (ys - py) ** 2)
+        return (dist < thickness).astype(np.float64)
+
+    frames = np.zeros((timesteps, 2, height, width), dtype=np.uint8)
+    prev = render(-1.0)
+    for t in range(timesteps):
+        cur = render(float(t))
+        diff = cur - prev
+        frames[t, 0] = (diff > 0.5).astype(np.uint8)   # ON events
+        frames[t, 1] = (diff < -0.5).astype(np.uint8)  # OFF events
+        prev = cur
+    # Background noise, deterministic per (t, c, y, x) order.
+    for t in range(timesteps):
+        for c in range(2):
+            mask = np.array(
+                [rng.next_f64() < noise_rate
+                 for _ in range(height * width)], dtype=np.uint8
+            ).reshape(height, width)
+            frames[t, c] |= mask
+    return GestureSample(frames=frames, label=label)
+
+
+@dataclasses.dataclass(frozen=True)
+class FlowSample:
+    """One synthetic driving-flow clip.
+
+    frames: ``(T, 2, H, W)`` uint8 event frames.
+    flow:   ``(2, H, W)`` float32 ground-truth pixel displacement per
+            timestep (u = x-flow, v = y-flow), constant over the clip.
+    """
+
+    frames: np.ndarray
+    flow: np.ndarray
+
+
+def make_flow_scene(
+    seed: int,
+    *,
+    height: int = 48,
+    width: int = 64,
+    timesteps: int = 10,
+    num_blobs: int = 24,
+    noise_rate: float = 0.005,
+) -> FlowSample:
+    """Generate a translating textured scene with ground-truth flow.
+
+    A field of Gaussian intensity blobs translates rigidly with a random
+    per-clip velocity (plus a weak expansion component, as in forward
+    driving motion). Events fire on temporal contrast like the gesture
+    generator. Dense ground-truth flow is the per-pixel displacement per
+    timestep, which for rigid translation + expansion is analytic.
+    """
+    rng = SplitMix64((seed << 8) ^ 0xF10)
+    vx = rng.uniform(-1.5, 1.5)
+    vy = rng.uniform(-1.0, 1.0)
+    expand = rng.uniform(0.0, 0.008)  # per-timestep radial expansion
+    cy, cx = height / 2.0, width / 2.0
+    blobs = [
+        (rng.uniform(-8, height + 8), rng.uniform(-8, width + 8),
+         rng.uniform(1.2, 3.0), rng.uniform(0.5, 1.0))
+        for _ in range(num_blobs)
+    ]
+    ys, xs = np.mgrid[0:height, 0:width].astype(np.float64)
+
+    def render(t: float) -> np.ndarray:
+        img = np.zeros((height, width), dtype=np.float64)
+        s = 1.0 + expand * t
+        for (by, bx, sig, amp) in blobs:
+            # rigid translation + expansion about the image center
+            py = cy + (by - cy) * s + vy * t
+            px = cx + (bx - cx) * s + vx * t
+            img += amp * np.exp(-(((ys - py) ** 2 + (xs - px) ** 2)
+                                  / (2.0 * sig * sig)))
+        return img
+
+    thresh = 0.08
+    frames = np.zeros((timesteps, 2, height, width), dtype=np.uint8)
+    prev = render(-1.0)
+    for t in range(timesteps):
+        cur = render(float(t))
+        diff = cur - prev
+        frames[t, 0] = (diff > thresh).astype(np.uint8)
+        frames[t, 1] = (diff < -thresh).astype(np.uint8)
+        prev = cur
+    for t in range(timesteps):
+        for c in range(2):
+            mask = np.array(
+                [rng.next_f64() < noise_rate
+                 for _ in range(height * width)], dtype=np.uint8
+            ).reshape(height, width)
+            frames[t, c] |= mask
+
+    u = vx + expand * (xs - cx)
+    v = vy + expand * (ys - cy)
+    flow = np.stack([u, v]).astype(np.float32)
+    return FlowSample(frames=frames, flow=flow)
+
+
+def gesture_batch(num: int, seed: int, **kw) -> tuple[np.ndarray, np.ndarray]:
+    """Batch of gesture clips: ``(N, T, 2, H, W)`` frames + ``(N,)`` labels."""
+    frames, labels = [], []
+    for i in range(num):
+        label = (seed + i) % NUM_GESTURE_CLASSES
+        s = make_gesture(label, seed=seed * 1000 + i, **kw)
+        frames.append(s.frames)
+        labels.append(s.label)
+    return np.stack(frames), np.array(labels, dtype=np.int32)
+
+
+def flow_batch(num: int, seed: int, **kw) -> tuple[np.ndarray, np.ndarray]:
+    """Batch of flow clips: ``(N, T, 2, H, W)`` frames + ``(N, 2, H, W)`` flow."""
+    frames, flows = [], []
+    for i in range(num):
+        s = make_flow_scene(seed=seed * 1000 + i, **kw)
+        frames.append(s.frames)
+        flows.append(s.flow)
+    return np.stack(frames), np.stack(flows)

@@ -1,0 +1,35 @@
+"""Export fig16_eval.json to the line format the Rust bench reads.
+
+Run automatically by `make artifacts` after training. Output lines:
+``<task> <metric> <precision|float> <value>``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+
+def export(json_path: pathlib.Path, txt_path: pathlib.Path) -> None:
+    data = json.loads(json_path.read_text())
+    lines = []
+    for task, entry in data["tasks"].items():
+        metric = entry["metric"]
+        lines.append(f"{task} {metric} float {entry['float']:.6f}")
+        for wb, metrics in sorted(entry["precisions"].items()):
+            lines.append(f"{task} {metric} {wb} {metrics[metric]:.6f}")
+    txt_path.write_text("\n".join(lines) + "\n")
+    print(f"wrote {txt_path} ({len(lines)} lines)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--artifacts", default="../artifacts")
+    args = ap.parse_args()
+    d = pathlib.Path(args.artifacts)
+    export(d / "fig16_eval.json", d / "fig16_eval.txt")
+
+
+if __name__ == "__main__":
+    main()

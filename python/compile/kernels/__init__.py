@@ -1,0 +1,6 @@
+"""L1 Pallas kernels: the SpiDR compute-macro and neuron-macro math."""
+
+from .neuron import neuron_update
+from .spiking_matmul import spiking_matmul, vmem_footprint_bytes
+
+__all__ = ["neuron_update", "spiking_matmul", "vmem_footprint_bytes"]

@@ -1,0 +1,120 @@
+"""Pallas kernel for the SpiDR neuron-macro pass.
+
+The neuron macro (72x48 SRAM: 32 partial-Vmem rows, 32 full-Vmem rows,
+8 parameter rows) integrates partial Vmems received from compute units
+into full Vmems, applies the configured neuron dynamics (IF / LIF) and
+reset mode (hard / soft), and emits output spikes.
+
+All four (leaky, soft_reset) combinations compile to distinct kernels —
+exactly like the silicon, where the neuron model is a configuration
+register latched before execution, not a per-cycle decision.
+
+Numerics are pinned bit-for-bit to ``ref.neuron_update_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..quantize import wrap_to_bits
+
+#: The neuron macro integrates 32 partial rows per pass (paper eq. 3).
+DEFAULT_BLOCK_M = 32
+DEFAULT_BLOCK_K = 48
+
+
+def _kernel(p_ref, v_ref, t_ref, l_ref, s_out, v_out, *,
+            vmem_bits: int, leaky: bool, soft_reset: bool):
+    """One grid step over a (bm, bk) Vmem tile."""
+    p = p_ref[...].astype(jnp.int32)
+    v = v_ref[...].astype(jnp.int32)
+    theta = t_ref[0, 0]
+    if leaky:
+        leak = l_ref[0, 0]
+        v = v - jnp.right_shift(v, jnp.maximum(leak, 1))
+    v = wrap_to_bits(v + p, vmem_bits)
+    spikes = (v >= theta).astype(jnp.int32)
+    if soft_reset:
+        v_reset = wrap_to_bits(v - theta, vmem_bits)
+    else:
+        v_reset = jnp.zeros_like(v)
+    s_out[...] = spikes
+    v_out[...] = jnp.maximum(jnp.where(spikes == 1, v_reset, v), -theta)
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    if dim <= preferred:
+        return dim
+    for cand in range(preferred, 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("vmem_bits", "leaky", "soft_reset", "block_m", "block_k",
+                     "interpret"),
+)
+def neuron_update(
+    vmem_partial: jnp.ndarray,
+    vmem_full: jnp.ndarray,
+    theta: jnp.ndarray,
+    leak: jnp.ndarray,
+    vmem_bits: int,
+    *,
+    leaky: bool,
+    soft_reset: bool,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Integrate partial Vmems, apply neuron dynamics, emit spikes.
+
+    Args:
+      vmem_partial: ``(M, K)`` int32 partial Vmems.
+      vmem_full:    ``(M, K)`` int32 persistent full Vmems.
+      theta: scalar int32 threshold (>= 1).
+      leak:  scalar int32 leak magnitude (LIF only).
+      vmem_bits: B_v adder width.
+      leaky / soft_reset: neuron model configuration (static).
+
+    Returns:
+      ``(spikes, vmem_next)`` int32 arrays of shape ``(M, K)``.
+    """
+    m, k = vmem_full.shape
+    if vmem_partial.shape != (m, k):
+        raise ValueError(
+            f"partial shape {vmem_partial.shape} != full shape {(m, k)}")
+    bm = _pick_block(m, block_m)
+    bk = _pick_block(k, block_k)
+    grid = (m // bm, k // bk)
+
+    theta2d = jnp.asarray(theta, dtype=jnp.int32).reshape(1, 1)
+    leak2d = jnp.asarray(leak, dtype=jnp.int32).reshape(1, 1)
+
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, vmem_bits=vmem_bits, leaky=leaky, soft_reset=soft_reset),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k), jnp.int32),
+            jax.ShapeDtypeStruct((m, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(vmem_partial.astype(jnp.int32), vmem_full.astype(jnp.int32),
+      theta2d, leak2d)

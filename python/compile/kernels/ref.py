@@ -1,0 +1,97 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the *numerical contract*: straightforward, obviously-correct
+implementations of the CIM macro math (``spiking_matmul_ref``) and the
+neuron macro math (``neuron_update_ref``). The Pallas kernels in
+``spiking_matmul.py`` / ``neuron.py`` must match them bit-for-bit
+(pytest + hypothesis enforce this), and the Rust cycle-level simulator
+matches the same trajectories through the AOT artifacts.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..quantize import wrap_to_bits
+
+
+def spiking_matmul_ref(
+    spikes: jnp.ndarray,
+    weights: jnp.ndarray,
+    vmem_in: jnp.ndarray,
+    vmem_bits: int,
+) -> jnp.ndarray:
+    """Accumulate weights into partial Vmems for binary input spikes.
+
+    This is what one SpiDR compute macro does for one IFspad worth of
+    input: every spike at IFspad position (Y, X) adds weight row Y into
+    the Vmem entry X of each mapped output neuron, with the B_v-bit
+    adder chain wrapping on overflow.
+
+    Args:
+      spikes:  ``(M, F)`` int32 in {0, 1} — im2col'd input spikes.
+               M = number of output pixels (Vmem entries), F = fan-in.
+      weights: ``(F, K)`` int32 quantized weights, K = output neurons.
+      vmem_in: ``(M, K)`` int32 partial Vmems (already in B_v range).
+      vmem_bits: adder chain width B_v.
+
+    Returns:
+      ``(M, K)`` int32 updated partial Vmems, wrapped to B_v bits.
+    """
+    acc = jnp.matmul(
+        spikes.astype(jnp.int32),
+        weights.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    return wrap_to_bits(vmem_in.astype(jnp.int32) + acc, vmem_bits)
+
+
+def neuron_update_ref(
+    vmem_partial: jnp.ndarray,
+    vmem_full: jnp.ndarray,
+    theta: jnp.ndarray,
+    leak: jnp.ndarray,
+    vmem_bits: int,
+    *,
+    leaky: bool,
+    soft_reset: bool,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One neuron-macro pass: integrate partials, leak, fire, reset.
+
+    Ordering contract (mirrored by ``rust/src/sim/neuron_macro.rs``):
+
+      1. leak   : decay the *full* Vmem toward zero by an arithmetic
+                  shift (LIF only): v -= v >> leak  (leak = shift amount)
+      2. integrate: add the partial Vmem (wrapping at B_v)
+      3. fire   : spike where Vmem >= theta
+      4. reset  : hard -> 0, soft -> Vmem - theta (wrapping)
+      5. floor  : clamp negative Vmems at -theta (digital-SNN
+                  underflow guard; keeps drift away from the wrap
+                  boundary — see DESIGN.md §2)
+
+    Args:
+      vmem_partial: ``(M, K)`` int32 partial Vmems from compute units.
+      vmem_full:    ``(M, K)`` int32 full Vmems (persistent state).
+      theta:        scalar int32 firing threshold (>= 1).
+      leak:         scalar int32 leak *shift* (>= 1, ignored if not leaky).
+      vmem_bits:    adder chain width B_v.
+      leaky:        IF (False) or LIF (True) neuron model.
+      soft_reset:   subtract-threshold reset (True) or reset-to-zero (False).
+
+    Returns:
+      ``(spikes, vmem_next)`` — int32 {0,1} spikes and updated full Vmems.
+    """
+    v = vmem_full.astype(jnp.int32)
+    theta = jnp.asarray(theta, dtype=jnp.int32)
+    leak = jnp.asarray(leak, dtype=jnp.int32)
+    if leaky:
+        v = v - jnp.right_shift(v, jnp.maximum(leak, 1))
+    v = wrap_to_bits(v + vmem_partial.astype(jnp.int32), vmem_bits)
+    spikes = (v >= theta).astype(jnp.int32)
+    if soft_reset:
+        v_reset = wrap_to_bits(v - theta, vmem_bits)
+    else:
+        v_reset = jnp.zeros_like(v)
+    vmem_next = jnp.where(spikes == 1, v_reset, v)
+    vmem_next = jnp.maximum(vmem_next, -theta)
+    return spikes, vmem_next

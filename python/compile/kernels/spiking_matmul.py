@@ -1,0 +1,130 @@
+"""Pallas kernel for the SpiDR compute-macro hot path.
+
+The compute macro performs weight-to-Vmem accumulation for binary input
+spikes: a GEMM where the left operand is a {0,1} spike matrix. This
+kernel is the L1 hot-spot of the stack — every spiking Conv/FC layer in
+the L2 JAX model lowers its im2col'd inner loop to ``spiking_matmul``.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the silicon macro
+is weight-stationary with 48 columns and 128 weight rows, streaming
+IFspad blocks of 128x16 spikes. The Pallas tiling mirrors that schedule:
+
+  * the weight tile ``(F, bk)`` stays resident in VMEM across the whole
+    grid row (weight-stationary),
+  * the spike matrix streams through in ``(bm, F)`` blocks — the IFspad
+    role — via BlockSpec index maps,
+  * accumulation happens into a ``(bm, bk)`` Vmem tile, wrapped to the
+    B_v-bit adder-chain width on the way out.
+
+On a real TPU the inner product maps onto the MXU with int8/int32
+accumulation; here the kernel runs under ``interpret=True`` (the CPU
+PJRT plugin cannot execute Mosaic custom-calls) and its numerics are
+pinned to ``ref.spiking_matmul_ref`` bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..quantize import wrap_to_bits
+
+#: Default block sizes. 128 matches the macro's weight-row count; the
+#: lane dimension tiles in multiples of the 48-column macro width.
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_K = 48
+
+
+def _kernel(s_ref, w_ref, v_ref, o_ref, *, vmem_bits: int):
+    """One grid step: o = wrap(v + s @ w, B_v) for one (bm, bk) tile."""
+    s = s_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+    v = v_ref[...].astype(jnp.int32)
+    acc = jax.lax.dot_general(
+        s,
+        w,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    o_ref[...] = wrap_to_bits(v + acc, vmem_bits)
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    """Largest divisor of ``dim`` that is <= ``preferred``.
+
+    Keeps the grid exact (no padding logic in the kernel) while staying
+    close to the macro-shaped tile sizes for typical layer dimensions.
+    """
+    if dim <= preferred:
+        return dim
+    for cand in range(preferred, 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+@functools.partial(
+    jax.jit, static_argnames=("vmem_bits", "block_m", "block_k", "interpret")
+)
+def spiking_matmul(
+    spikes: jnp.ndarray,
+    weights: jnp.ndarray,
+    vmem_in: jnp.ndarray,
+    vmem_bits: int,
+    *,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Accumulate binary spikes x quantized weights into partial Vmems.
+
+    Args:
+      spikes:  ``(M, F)`` int32 {0,1} im2col'd input spikes.
+      weights: ``(F, K)`` int32 quantized weights.
+      vmem_in: ``(M, K)`` int32 partial Vmems.
+      vmem_bits: B_v adder width (7, 11 or 15).
+      block_m / block_k: tile sizes (clamped to divisors of M / K).
+      interpret: run the Pallas interpreter (required on CPU PJRT).
+
+    Returns:
+      ``(M, K)`` int32 updated partial Vmems, wrapped to B_v bits.
+    """
+    m, f = spikes.shape
+    f2, k = weights.shape
+    if f != f2:
+        raise ValueError(f"fan-in mismatch: spikes {spikes.shape} vs weights {weights.shape}")
+    if vmem_in.shape != (m, k):
+        raise ValueError(f"vmem shape {vmem_in.shape} != ({m}, {k})")
+
+    bm = _pick_block(m, block_m)
+    bk = _pick_block(k, block_k)
+    grid = (m // bm, k // bk)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, vmem_bits=vmem_bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, f), lambda i, j: (i, 0)),
+            pl.BlockSpec((f, bk), lambda i, j: (0, j)),
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, k), jnp.int32),
+        interpret=interpret,
+    )(spikes.astype(jnp.int32), weights.astype(jnp.int32), vmem_in.astype(jnp.int32))
+
+
+def vmem_footprint_bytes(m: int, f: int, k: int, block_m: int = DEFAULT_BLOCK_M,
+                         block_k: int = DEFAULT_BLOCK_K) -> int:
+    """Estimated VMEM bytes held live per grid step (perf-model input).
+
+    spike tile (bm, F) + weight tile (F, bk) + two Vmem tiles (bm, bk),
+    all int32. Used by DESIGN.md §Perf to check tiles fit a ~16 MiB VMEM
+    budget and to estimate MXU occupancy on real hardware.
+    """
+    bm = _pick_block(m, block_m)
+    bk = _pick_block(k, block_k)
+    return 4 * (bm * f + f * bk + 2 * bm * bk)

@@ -1,0 +1,371 @@
+"""L2: the paper's SNN workloads as quantized JAX compute graphs.
+
+Implements both Table-II networks as *integer* spiking networks whose
+inner loops are the L1 Pallas kernels (``spiking_matmul`` for the
+compute macro, ``neuron_update`` for the neuron macro):
+
+  * Optical flow estimation — Conv(2,32) + 6x Conv(32,32) + Conv(32,2),
+    3x3/stride 1/pad 1, LIF soft-reset hidden layers, non-spiking
+    accumulator output (flow regressed from the output layer's Vmem).
+  * Gesture recognition — Conv(2,16) + 4x Conv(16,16) with 2x2 maxpool
+    after every two intermediate convs, a readout maxpool to 2x2, then
+    FC(64, 11) as a non-spiking accumulator (classify by Vmem argmax).
+
+Everything is ``int32`` end to end with B_v-bit wrap-around arithmetic —
+the same contract the Rust cycle simulator implements, so spike/Vmem
+trajectories are bit-exact across the two implementations.
+
+The im2col layout contract (shared with ``rust/src/snn/`` and the
+input-loader model in ``rust/src/sim/input_loader.rs``):
+
+    fan-in index  F = (c * KH + dy) * KW + dx
+    pixel index   M = y_out * W_out + x_out
+    weight matrix W[F, K], K = output channel
+
+``network_step`` is the unit the AOT pipeline lowers to HLO: one
+timestep of the whole network, carrying all per-layer Vmems.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.neuron import neuron_update
+from .kernels.spiking_matmul import spiking_matmul
+from .quantize import PrecisionConfig, wrap_to_bits
+
+
+def im2col(x: jnp.ndarray, kh: int, kw: int, stride: int, pad: int) -> jnp.ndarray:
+    """Unfold ``(C, H, W)`` into patches ``(M, F)`` (hardware layout).
+
+    This mirrors exactly what the SpiDR input loader does in hardware
+    when it populates the IFspad: padding and stride are folded into the
+    data layout, and the fan-in dimension is ordered (c, dy, dx).
+    """
+    c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    h_out = (h + 2 * pad - kh) // stride + 1
+    w_out = (w + 2 * pad - kw) // stride + 1
+    cols = []
+    for dy in range(kh):
+        for dx in range(kw):
+            cols.append(
+                jax.lax.slice(
+                    xp,
+                    (0, dy, dx),
+                    (c, dy + stride * (h_out - 1) + 1, dx + stride * (w_out - 1) + 1),
+                    (1, stride, stride),
+                )
+            )
+    # (kh*kw, C, Ho*Wo) -> (C, kh*kw, Ho*Wo) -> (F, M) -> (M, F)
+    stacked = jnp.stack(cols, axis=0).reshape(kh * kw, c, h_out * w_out)
+    patches = jnp.transpose(stacked, (1, 0, 2)).reshape(c * kh * kw, h_out * w_out)
+    return patches.T
+
+
+def maxpool_spikes(x: jnp.ndarray, size: int, stride: int) -> jnp.ndarray:
+    """2D maxpool over binary spike planes ``(C, H, W)``."""
+    return jax.lax.reduce_window(
+        x,
+        jnp.int32(0),
+        jax.lax.max,
+        window_dimensions=(1, size, size),
+        window_strides=(1, stride, stride),
+        padding="VALID",
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One layer of a quantized SpiDR network.
+
+    ``kind`` is one of ``conv`` / ``fc`` / ``pool``. Conv and FC layers
+    carry quantized integer weights ``(F, K)`` plus neuron parameters;
+    pool layers carry only the window geometry. ``accumulate=True``
+    marks a non-spiking output layer whose Vmem integrates across
+    timesteps (flow regression / classification logits).
+    """
+
+    kind: str
+    in_shape: tuple[int, int, int]          # (C, H, W) input
+    out_shape: tuple[int, int, int]         # (C, H, W) output
+    weights: Optional[np.ndarray] = None    # (F, K) int32
+    theta: int = 1
+    leak: int = 0
+    leaky: bool = False
+    soft_reset: bool = True
+    accumulate: bool = False
+    kh: int = 3
+    kw: int = 3
+    stride: int = 1
+    pad: int = 1
+
+    @property
+    def has_state(self) -> bool:
+        return self.kind in ("conv", "fc")
+
+    @property
+    def vmem_shape(self) -> tuple[int, int]:
+        """State carried for this layer: (M pixels, K neurons)."""
+        if self.kind == "conv":
+            _, h, w = self.out_shape
+            return (h * w, self.out_shape[0])
+        if self.kind == "fc":
+            return (1, self.out_shape[0])
+        raise ValueError(f"{self.kind} layer has no Vmem")
+
+    @property
+    def fan_in(self) -> int:
+        if self.kind == "conv":
+            return self.in_shape[0] * self.kh * self.kw
+        if self.kind == "fc":
+            c, h, w = self.in_shape
+            return c * h * w
+        raise ValueError(f"{self.kind} layer has no fan-in")
+
+    @property
+    def synops_per_spike(self) -> int:
+        """Synaptic operations triggered by one input spike (for GOPS)."""
+        return self.out_shape[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedNetwork:
+    """A full quantized network plus its precision operating point."""
+
+    name: str
+    layers: tuple[LayerSpec, ...]
+    precision: PrecisionConfig
+    weight_scales: tuple[float, ...]   # per stateful layer, in layer order
+    timesteps: int
+
+    @property
+    def stateful_layers(self) -> list[LayerSpec]:
+        return [l for l in self.layers if l.has_state]
+
+    def init_vmems(self) -> list[jnp.ndarray]:
+        return [
+            jnp.zeros(l.vmem_shape, dtype=jnp.int32) for l in self.stateful_layers
+        ]
+
+    @property
+    def output_scale(self) -> float:
+        """Scale converting the output accumulator to float units."""
+        return self.weight_scales[-1]
+
+
+def layer_step(
+    layer: LayerSpec,
+    spikes_in: jnp.ndarray,
+    vmem: Optional[jnp.ndarray],
+    vmem_bits: int,
+    *,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """Run one layer for one timestep.
+
+    Args:
+      spikes_in: ``(C, H, W)`` int32 {0,1} input spike plane.
+      vmem: layer state ``(M, K)`` or None for pool layers.
+
+    Returns:
+      ``(spikes_out (C', H', W'), vmem_next)``.
+    """
+    if layer.kind == "pool":
+        return maxpool_spikes(spikes_in, layer.kh, layer.stride), None
+
+    if layer.kind == "conv":
+        patches = im2col(spikes_in, layer.kh, layer.kw, layer.stride, layer.pad)
+    else:  # fc
+        patches = spikes_in.reshape(1, -1)
+
+    w = jnp.asarray(layer.weights, dtype=jnp.int32)
+    zero = jnp.zeros(layer.vmem_shape, dtype=jnp.int32)
+    partial = spiking_matmul(patches, w, zero, vmem_bits, interpret=interpret)
+
+    if layer.accumulate:
+        # Non-spiking output layer: the neuron macro only integrates.
+        vmem_next = wrap_to_bits(vmem + partial, vmem_bits)
+        k, h, wid = layer.out_shape
+        spikes_out = jnp.zeros((k, h, wid), dtype=jnp.int32)
+        return spikes_out, vmem_next
+
+    spikes_flat, vmem_next = neuron_update(
+        partial,
+        vmem,
+        jnp.int32(layer.theta),
+        jnp.int32(layer.leak),
+        vmem_bits,
+        leaky=layer.leaky,
+        soft_reset=layer.soft_reset,
+        interpret=interpret,
+    )
+    k, h, wid = layer.out_shape
+    spikes_out = spikes_flat.T.reshape(k, h, wid)
+    return spikes_out, vmem_next
+
+
+def network_step(
+    net: QuantizedNetwork,
+    frame: jnp.ndarray,
+    vmems: Sequence[jnp.ndarray],
+    *,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray, list[jnp.ndarray]]:
+    """One timestep of the full network.
+
+    Args:
+      frame: ``(C, H, W)`` int32 {0,1} input event frame.
+      vmems: per-stateful-layer Vmem states.
+
+    Returns:
+      ``(out_acc, spike_counts, vmems_next)`` where ``out_acc`` is the
+      output layer's accumulated Vmem ``(M, K)``, and ``spike_counts``
+      is an int32 vector with the number of *input* spikes each stateful
+      layer consumed this timestep (layer-sparsity telemetry, Fig. 5).
+    """
+    spikes = frame.astype(jnp.int32)
+    vmems = list(vmems)
+    vmems_next: list[jnp.ndarray] = []
+    counts: list[jnp.ndarray] = []
+    si = 0
+    out_acc = None
+    for layer in net.layers:
+        if layer.has_state:
+            counts.append(jnp.sum(spikes, dtype=jnp.int32))
+            spikes, v = layer_step(
+                layer, spikes, vmems[si], net.precision.vmem_bits,
+                interpret=interpret)
+            vmems_next.append(v)
+            if layer.accumulate:
+                out_acc = v
+            si += 1
+        else:
+            spikes, _ = layer_step(
+                layer, spikes, None, net.precision.vmem_bits,
+                interpret=interpret)
+    assert out_acc is not None, "network must end in an accumulate layer"
+    return out_acc, jnp.stack(counts), vmems_next
+
+
+def run_network(
+    net: QuantizedNetwork,
+    frames: np.ndarray,
+    *,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, np.ndarray]:
+    """Run all timesteps of a clip. Returns (out_acc, counts (T, L))."""
+    vmems = net.init_vmems()
+    all_counts = []
+    out = None
+    for t in range(frames.shape[0]):
+        out, counts, vmems = network_step(
+            net, jnp.asarray(frames[t], dtype=jnp.int32), vmems,
+            interpret=interpret)
+        all_counts.append(np.asarray(counts))
+    return out, np.stack(all_counts)
+
+
+# ---------------------------------------------------------------------------
+# Table-II network topologies
+# ---------------------------------------------------------------------------
+
+
+def conv_out(h: int, w: int, kh: int, kw: int, stride: int, pad: int) -> tuple[int, int]:
+    return ((h + 2 * pad - kh) // stride + 1, (w + 2 * pad - kw) // stride + 1)
+
+
+def flow_topology() -> list[dict]:
+    """Optical-flow net (Table II row 1): Conv(2,32) + 6x Conv(32,32) + Conv(32,2)."""
+    spec = []
+    chans = [2] + [32] * 7 + [2]
+    for i in range(8):
+        spec.append(dict(kind="conv", in_ch=chans[i], out_ch=chans[i + 1],
+                         kh=3, kw=3, stride=1, pad=1,
+                         accumulate=(i == 7), leaky=True, soft_reset=True))
+    return spec
+
+
+def gesture_topology() -> list[dict]:
+    """Gesture net (Table II row 2): Conv(2,16) + 4x Conv(16,16) + FC(64,11).
+
+    2x2 maxpool (stride 2) after every two intermediate conv layers; a
+    final readout maxpool brings the remaining plane to 2x2 so the FC
+    sees 16 ch * 2 * 2 = 64 inputs, matching the paper's FC(64, 11).
+    """
+    spec = [dict(kind="conv", in_ch=2, out_ch=16, kh=3, kw=3, stride=1, pad=1,
+                 accumulate=False, leaky=False, soft_reset=True)]
+    for i in range(4):
+        spec.append(dict(kind="conv", in_ch=16, out_ch=16, kh=3, kw=3,
+                         stride=1, pad=1, accumulate=False, leaky=False,
+                         soft_reset=True))
+        if i % 2 == 1:
+            spec.append(dict(kind="pool", size=2, stride=2))
+    spec.append(dict(kind="pool", size=8, stride=8))
+    spec.append(dict(kind="fc", out_ch=11, accumulate=True))
+    return spec
+
+
+def build_layers(
+    topology: list[dict],
+    input_shape: tuple[int, int, int],
+    weights: Sequence[np.ndarray],
+    thetas: Optional[Sequence[int]] = None,
+    leaks: Optional[Sequence[int]] = None,
+) -> tuple[LayerSpec, ...]:
+    """Materialize LayerSpecs from a topology + quantized weight list.
+
+    The readout pool in ``gesture_topology`` adapts its window to
+    whatever spatial size remains, so topologies work at any input
+    resolution (weights are resolution-independent).
+    """
+    layers: list[LayerSpec] = []
+    c, h, w = input_shape
+    wi = 0
+    for t in topology:
+        if t["kind"] == "pool":
+            size = min(t["size"], h, w)
+            stride = min(t["stride"], size)
+            ho, wo = h // stride, w // stride
+            layers.append(LayerSpec(
+                kind="pool", in_shape=(c, h, w), out_shape=(c, ho, wo),
+                kh=size, kw=size, stride=stride, pad=0))
+            h, w = ho, wo
+            continue
+        theta = thetas[wi] if thetas is not None else t.get("theta", 1)
+        leak = leaks[wi] if leaks is not None else t.get("leak", 0)
+        if t["kind"] == "conv":
+            ho, wo = conv_out(h, w, t["kh"], t["kw"], t["stride"], t["pad"])
+            wq = np.asarray(weights[wi], dtype=np.int32)
+            want = (c * t["kh"] * t["kw"], t["out_ch"])
+            if wq.shape != want:
+                raise ValueError(f"layer {wi}: weight shape {wq.shape} != {want}")
+            layers.append(LayerSpec(
+                kind="conv", in_shape=(c, h, w),
+                out_shape=(t["out_ch"], ho, wo), weights=wq,
+                theta=theta, leak=leak,
+                leaky=t["leaky"], soft_reset=t["soft_reset"],
+                accumulate=t["accumulate"], kh=t["kh"], kw=t["kw"],
+                stride=t["stride"], pad=t["pad"]))
+            c, h, w = t["out_ch"], ho, wo
+        else:  # fc
+            f = c * h * w
+            wq = np.asarray(weights[wi], dtype=np.int32)
+            if wq.shape != (f, t["out_ch"]):
+                raise ValueError(
+                    f"fc layer {wi}: weight shape {wq.shape} != {(f, t['out_ch'])}")
+            layers.append(LayerSpec(
+                kind="fc", in_shape=(c, h, w),
+                out_shape=(t["out_ch"], 1, 1), weights=wq,
+                theta=theta, leak=leak,
+                leaky=t.get("leaky", False),
+                soft_reset=t.get("soft_reset", True),
+                accumulate=t["accumulate"], kh=1, kw=1, stride=1, pad=0))
+            c, h, w = t["out_ch"], 1, 1
+        wi += 1
+    return tuple(layers)

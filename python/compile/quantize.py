@@ -1,0 +1,133 @@
+"""Fixed-point quantization contract shared with the Rust simulator.
+
+SpiDR stores synaptic weights at B_w in {4, 6, 8} bits and membrane
+potentials (Vmems) at B_v = 2*B_w - 1 in {7, 11, 15} bits (paper §II-A).
+Both are signed two's-complement integers. Accumulation inside the CIM
+macro is performed by a B_v-bit column adder chain which *wraps* on
+overflow (two's-complement modular arithmetic).
+
+Wrap-around is the architectural contract of this reproduction: modular
+addition is associative and commutative, so the order in which the S2A
+drains spikes from the even/odd FIFOs — and the order in which partial
+Vmems hop across compute units in Mode 2 — cannot change the result.
+This is what makes the JAX golden model (one int32 GEMM, then a single
+wrap) bit-exact against the cycle-level Rust simulator (per-event
+accumulation with per-step wraps).
+
+Everything in this module is mirrored by ``rust/src/quant/`` and covered
+by cross-language bit-exactness tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+#: Supported (weight, Vmem) precision pairs, from paper Fig. 8a.
+PRECISIONS = ((4, 7), (6, 11), (8, 15))
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionConfig:
+    """A reconfigurable precision operating point of the compute macro."""
+
+    weight_bits: int
+    vmem_bits: int
+
+    def __post_init__(self) -> None:
+        if (self.weight_bits, self.vmem_bits) not in PRECISIONS:
+            raise ValueError(
+                f"unsupported precision {self.weight_bits}/{self.vmem_bits}; "
+                f"supported: {PRECISIONS}"
+            )
+
+    @property
+    def weight_min(self) -> int:
+        return -(1 << (self.weight_bits - 1))
+
+    @property
+    def weight_max(self) -> int:
+        return (1 << (self.weight_bits - 1)) - 1
+
+    @property
+    def vmem_min(self) -> int:
+        return -(1 << (self.vmem_bits - 1))
+
+    @property
+    def vmem_max(self) -> int:
+        return (1 << (self.vmem_bits - 1)) - 1
+
+    @property
+    def neurons_per_row(self) -> int:
+        """Output neurons stored per 48-bit weight row (48 / B_w)."""
+        return 48 // self.weight_bits
+
+
+P4_7 = PrecisionConfig(4, 7)
+P6_11 = PrecisionConfig(6, 11)
+P8_15 = PrecisionConfig(8, 15)
+
+
+def wrap_to_bits(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Two's-complement wrap of int32 values to ``bits`` bits.
+
+    Implemented as an arithmetic shift-up/shift-down pair, which XLA
+    lowers to two cheap vector ops and which is exactly the sign
+    extension a ``bits``-wide adder chain performs in silicon.
+    """
+    shift = 32 - bits
+    x = x.astype(jnp.int32)
+    return jnp.right_shift(jnp.left_shift(x, shift), shift)
+
+
+def saturate_to_bits(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Saturating clamp to a signed ``bits``-bit range (optional mode)."""
+    lo = -(1 << (bits - 1))
+    hi = (1 << (bits - 1)) - 1
+    return jnp.clip(x.astype(jnp.int32), lo, hi)
+
+
+def quantize_weights(
+    w: np.ndarray, cfg: PrecisionConfig
+) -> tuple[np.ndarray, float]:
+    """Symmetric per-tensor quantization of float weights.
+
+    Returns ``(w_q, scale)`` with ``w ≈ w_q * scale`` and
+    ``w_q`` in ``[weight_min, weight_max]``.
+    """
+    w = np.asarray(w, dtype=np.float64)
+    max_abs = float(np.max(np.abs(w))) if w.size else 0.0
+    if max_abs == 0.0:
+        return np.zeros_like(w, dtype=np.int32), 1.0
+    scale = max_abs / cfg.weight_max
+    w_q = np.clip(np.round(w / scale), cfg.weight_min, cfg.weight_max)
+    return w_q.astype(np.int32), scale
+
+
+def quantize_threshold(theta: float, scale: float, cfg: PrecisionConfig) -> int:
+    """Quantize a firing threshold into the Vmem integer domain.
+
+    Vmem accumulates quantized weights directly (binary spikes), so the
+    Vmem scale equals the weight scale and thresholds divide through by
+    the same factor. Thresholds are clamped to be at least 1 so that a
+    quantized neuron can never fire on a zero Vmem.
+    """
+    q = int(round(theta / scale))
+    return max(1, min(q, cfg.vmem_max))
+
+
+def quantize_leak(leak: float, scale: float, cfg: PrecisionConfig) -> int:
+    """Convert a float LIF decay fraction into a leak *shift* amount.
+
+    The digital neuron macro implements leak as an arithmetic shift:
+    ``v -= v >> k``, i.e. a decay fraction of ``2^-k`` per timestep —
+    scale-free, so the same shift works at every precision pair.
+    ``leak`` is the float decay fraction (e.g. 0.25 -> k = 2).
+    """
+    del scale, cfg
+    if leak <= 0.0:
+        return 0
+    k = round(-np.log2(min(max(leak, 1e-6), 0.5)))
+    return int(max(1, min(k, 8)))

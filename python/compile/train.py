@@ -1,0 +1,552 @@
+"""Surrogate-gradient training for the Table-II workloads (build time).
+
+SpiDR is an inference chip: the paper's networks are trained offline
+with standard surrogate-gradient BPTT ("no modified training
+methodology", Table III) and deployed quantized. This module is that
+offline pipeline:
+
+  1. train a float *shadow* network (same topology, same im2col layout,
+     subtractive-leak LIF dynamics, fast-sigmoid surrogate spike),
+  2. post-training-quantize weights/thresholds/leaks to each supported
+     precision pair (4/7, 6/11, 8/15),
+  3. evaluate accuracy (gesture) / average endpoint error (flow) at
+     every precision — the data behind Fig. 16,
+  4. save per-precision integer weights for ``aot.py`` to bake into the
+     HLO artifacts the Rust runtime executes.
+
+Run as ``python -m compile.train --out ../artifacts`` (the Makefile's
+``artifacts`` target drives this, then ``aot.py``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import pathlib
+import time
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data
+from .model import build_layers, conv_out, flow_topology, gesture_topology
+from .quantize import (
+    PRECISIONS,
+    PrecisionConfig,
+    quantize_leak,
+    quantize_threshold,
+    quantize_weights,
+)
+
+# Float neuron parameters used for all hidden layers during training.
+# THETA is deliberately low and INIT_GAIN high relative to a He baseline:
+# spiking nets with sparse DVS inputs go silent in deep layers otherwise
+# (zero spikes -> zero surrogate gradient -> dead network).
+THETA = 0.5
+LEAK = 0.25  # per-timestep LIF decay fraction (shift 2 in hardware)
+SURROGATE_SLOPE = 4.0
+INIT_GAIN = 3.0
+
+
+# ---------------------------------------------------------------------------
+# Float shadow model (differentiable twin of model.py's integer network)
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def spike_fn(v: jnp.ndarray) -> jnp.ndarray:
+    """Heaviside step with a fast-sigmoid surrogate derivative."""
+    return (v >= 0.0).astype(v.dtype)
+
+
+def _spike_fwd(v):
+    return spike_fn(v), v
+
+
+def _spike_bwd(v, g):
+    # fast sigmoid surrogate: 1 / (1 + k|v|)^2
+    surr = 1.0 / (1.0 + SURROGATE_SLOPE * jnp.abs(v)) ** 2
+    return (g * surr,)
+
+
+spike_fn.defvjp(_spike_fwd, _spike_bwd)
+
+
+def _im2col_f(x: jnp.ndarray, kh: int, kw: int, stride: int, pad: int) -> jnp.ndarray:
+    """Batched float im2col, same (c, dy, dx) layout as model.im2col.
+
+    x: (B, C, H, W) -> (B, M, F).
+    """
+    b, c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    h_out = (h + 2 * pad - kh) // stride + 1
+    w_out = (w + 2 * pad - kw) // stride + 1
+    cols = []
+    for dy in range(kh):
+        for dx in range(kw):
+            cols.append(
+                jax.lax.slice(
+                    xp,
+                    (0, 0, dy, dx),
+                    (b, c, dy + stride * (h_out - 1) + 1,
+                     dx + stride * (w_out - 1) + 1),
+                    (1, 1, stride, stride),
+                )
+            )
+    stacked = jnp.stack(cols, axis=0).reshape(kh * kw, b, c, h_out * w_out)
+    # -> (B, C, kh*kw, M) -> (B, F, M) -> (B, M, F)
+    patches = jnp.transpose(stacked, (1, 2, 0, 3)).reshape(
+        b, c * kh * kw, h_out * w_out)
+    return jnp.transpose(patches, (0, 2, 1))
+
+
+def _maxpool_f(x: jnp.ndarray, size: int, stride: int) -> jnp.ndarray:
+    """Maxpool over (B, C, H, W) float spike planes."""
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max,
+        window_dimensions=(1, 1, size, size),
+        window_strides=(1, 1, stride, stride),
+        padding="VALID",
+    )
+
+
+def init_weights(topology: list[dict], input_shape, seed: int) -> list[np.ndarray]:
+    """He-initialized float weights, (F, K) layout per stateful layer."""
+    rng = np.random.default_rng(seed)
+    c, h, w = input_shape
+    ws = []
+    for t in topology:
+        if t["kind"] == "pool":
+            stride = min(t["stride"], min(t["size"], h, w))
+            h, w = h // stride, w // stride
+            continue
+        if t["kind"] == "conv":
+            f = c * t["kh"] * t["kw"]
+            k = t["out_ch"]
+            ws.append(rng.normal(0.0, INIT_GAIN * np.sqrt(2.0 / f),
+                                 (f, k)).astype(np.float32))
+            h, w = conv_out(h, w, t["kh"], t["kw"], t["stride"], t["pad"])
+            c = k
+        else:  # fc
+            f = c * h * w
+            k = t["out_ch"]
+            ws.append(rng.normal(0.0, INIT_GAIN * np.sqrt(2.0 / f),
+                                 (f, k)).astype(np.float32))
+            c, h, w = k, 1, 1
+    return ws
+
+
+def _fake_quant_weight(w: jnp.ndarray, cfg) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Straight-through fake quantization of a weight tensor.
+
+    Returns (w_fq, scale): the forward value equals the dequantized
+    integer weights the chip will use; the gradient passes through.
+    """
+    max_abs = jax.lax.stop_gradient(jnp.max(jnp.abs(w)) + 1e-12)
+    scale = max_abs / cfg.weight_max
+    q = jnp.clip(jnp.round(w / scale), cfg.weight_min, cfg.weight_max) * scale
+    return w + jax.lax.stop_gradient(q - w), scale
+
+
+def float_forward(
+    weights: Sequence[jnp.ndarray],
+    topology: list[dict],
+    input_shape: tuple[int, int, int],
+    frames: jnp.ndarray,
+    fake_quant=None,
+) -> jnp.ndarray:
+    """Run the float shadow network over a clip.
+
+    frames: (B, T, C, H, W) float {0,1}. Returns the accumulated output
+    (B, M, K) of the final (non-spiking) layer.
+
+    With ``fake_quant`` set to a PrecisionConfig, runs QAT-style: weights
+    are fake-quantized (straight-through estimator) and Vmems are clipped
+    to the B_v-bit range in float units, so the network learns to keep
+    its state inside the chip's adder-chain range. Without this, deep
+    accumulators drift past ±2^(B_v−1) and the deployed wrap-around
+    arithmetic destroys low-precision metrics (see EXPERIMENTS.md).
+    """
+    b, timesteps = frames.shape[0], frames.shape[1]
+
+    if fake_quant is not None:
+        fq = [_fake_quant_weight(w, fake_quant) for w in weights]
+        weights = [w for w, _ in fq]
+        vmem_clip = [
+            (s * fake_quant.vmem_min, s * fake_quant.vmem_max) for _, s in fq
+        ]
+    else:
+        vmem_clip = None
+
+    # Pre-compute static geometry per layer.
+    geo = []
+    c, h, w = input_shape
+    for t in topology:
+        if t["kind"] == "pool":
+            size = min(t["size"], h, w)
+            stride = min(t["stride"], size)
+            geo.append(("pool", size, stride))
+            h, w = h // stride, w // stride
+        elif t["kind"] == "conv":
+            ho, wo = conv_out(h, w, t["kh"], t["kw"], t["stride"], t["pad"])
+            geo.append(("conv", t, (c, h, w), (t["out_ch"], ho, wo)))
+            c, h, w = t["out_ch"], ho, wo
+        else:
+            geo.append(("fc", t, (c, h, w), (t["out_ch"], 1, 1)))
+            c, h, w = t["out_ch"], 1, 1
+
+    # Vmem states per stateful layer: (B, M, K).
+    vmems = []
+    for g in geo:
+        if g[0] == "conv":
+            _, _, _, (k, ho, wo) = g
+            vmems.append(jnp.zeros((b, ho * wo, k), dtype=jnp.float32))
+        elif g[0] == "fc":
+            _, _, _, (k, _, _) = g
+            vmems.append(jnp.zeros((b, 1, k), dtype=jnp.float32))
+
+    def step(vmems, frame):
+        x = frame.astype(jnp.float32)
+        new_vmems = []
+        si = 0
+        out = None
+        for g in geo:
+            if g[0] == "pool":
+                x = _maxpool_f(x, g[1], g[2])
+                continue
+            t = g[1]
+            if g[0] == "conv":
+                patches = _im2col_f(x, t["kh"], t["kw"], t["stride"], t["pad"])
+            else:
+                x_b = x.reshape(b, 1, -1)
+                patches = x_b
+            w_l = weights[si]
+            partial = jnp.einsum("bmf,fk->bmk", patches, w_l)
+            v = vmems[si]
+            if t["accumulate"]:
+                v = v + partial
+                if vmem_clip is not None:
+                    lo, hi = vmem_clip[si]
+                    v = jnp.clip(v, lo, hi)
+                new_vmems.append(v)
+                out = v
+                # output layer is last; no spikes propagate
+                si += 1
+                continue
+            if t.get("leaky", False):
+                v = v * (1.0 - LEAK)
+            v = v + partial
+            if vmem_clip is not None:
+                lo, hi = vmem_clip[si]
+                v = jnp.clip(v, lo, hi)
+            s = spike_fn(v - THETA)
+            v = v - THETA * s  # soft reset
+            v = jnp.maximum(v, -THETA)  # digital underflow floor
+            new_vmems.append(v)
+            si += 1
+            if g[0] == "conv":
+                k, ho, wo = g[3]
+                x = jnp.transpose(s, (0, 2, 1)).reshape(b, k, ho, wo)
+            else:
+                x = s
+        return new_vmems, out
+
+    out = None
+    for t in range(timesteps):
+        vmems, out = step(vmems, frames[:, t])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Hand-rolled Adam (optax is not available in this environment)
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params):
+    return ([jnp.zeros_like(p) for p in params],
+            [jnp.zeros_like(p) for p in params], 0)
+
+
+def adam_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    m, v, t = state
+    t += 1
+    new_params, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = b1 * mi + (1 - b1) * g
+        vi = b2 * vi + (1 - b2) * g * g
+        mhat = mi / (1 - b1 ** t)
+        vhat = vi / (1 - b2 ** t)
+        new_params.append(p - lr * mhat / (jnp.sqrt(vhat) + eps))
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_params, (new_m, new_v, t)
+
+
+# ---------------------------------------------------------------------------
+# Tasks
+# ---------------------------------------------------------------------------
+
+
+#: Accumulated output Vmems grow with timesteps; temper the CE softmax.
+LOGIT_SCALE = 0.2
+
+
+def gesture_loss(weights, topology, input_shape, frames, labels, fq=None):
+    out = float_forward(weights, topology, input_shape, frames,
+                        fake_quant=fq)  # (B,1,11)
+    logits = out[:, 0, :] * LOGIT_SCALE
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(logp[jnp.arange(labels.shape[0]), labels])
+
+
+def flow_loss(weights, topology, input_shape, frames, flows, fq=None):
+    out = float_forward(weights, topology, input_shape, frames,
+                        fake_quant=fq)  # (B,M,2)
+    b = flows.shape[0]
+    gt = flows.reshape(b, 2, -1).transpose(0, 2, 1)  # (B,M,2)
+    return jnp.mean(jnp.sum((out - gt) ** 2, axis=-1))
+
+
+def train_task(
+    task: str,
+    *,
+    steps: int,
+    batch: int,
+    seed: int,
+    input_hw: tuple[int, int],
+    timesteps: int,
+    lr: float,
+    init: Sequence[np.ndarray] | None = None,
+    fake_quant=None,
+    log=print,
+) -> tuple[list[np.ndarray], list[dict], dict]:
+    """Train one task; returns (float_weights, topology, train_info).
+
+    Pass ``init`` + ``fake_quant`` to run a QAT fine-tune from an
+    existing float checkpoint at one precision.
+    """
+    h, w = input_hw
+    input_shape = (2, h, w)
+    if task == "gesture":
+        topology = gesture_topology()
+        loss_fn = gesture_loss
+    elif task == "flow":
+        topology = flow_topology()
+        loss_fn = flow_loss
+    else:
+        raise ValueError(task)
+
+    if init is not None:
+        weights = [jnp.asarray(x) for x in init]
+    else:
+        weights = [jnp.asarray(x) for x in init_weights(topology, input_shape, seed)]
+    opt = adam_init(weights)
+
+    grad_fn = jax.jit(lambda ws, fr, tg: jax.value_and_grad(
+        lambda ws_: loss_fn(ws_, topology, input_shape, fr, tg,
+                            fq=fake_quant))(ws))
+
+    losses = []
+    t0 = time.time()
+    for step in range(steps):
+        if task == "gesture":
+            frames, target = data.gesture_batch(
+                batch, seed=seed + step * 17, height=h, width=w,
+                timesteps=timesteps)
+        else:
+            frames, target = data.flow_batch(
+                batch, seed=seed + step * 17, height=h, width=w,
+                timesteps=timesteps)
+        loss, grads = grad_fn(
+            weights, jnp.asarray(frames, dtype=jnp.float32),
+            jnp.asarray(target))
+        # Global-norm gradient clipping: spiking BPTT is spiky (pun intended).
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads))
+        clip = jnp.minimum(1.0, 5.0 / (gnorm + 1e-9))
+        grads = [g * clip for g in grads]
+        weights, opt = adam_update(weights, grads, opt, lr=lr)
+        losses.append(float(loss))
+        if step % 10 == 0 or step == steps - 1:
+            log(f"  [{task}] step {step:4d} loss {float(loss):.4f} "
+                f"({time.time() - t0:.1f}s)")
+    info = {"losses": losses, "steps": steps, "batch": batch,
+            "input_hw": list(input_hw), "timesteps": timesteps,
+            "train_seconds": time.time() - t0}
+    return [np.asarray(wt) for wt in weights], topology, info
+
+
+# ---------------------------------------------------------------------------
+# Quantization + evaluation (Fig. 16 data)
+# ---------------------------------------------------------------------------
+
+
+def quantize_network(float_weights, cfg: PrecisionConfig):
+    """PTQ to one precision pair: (int weights, scales, thetas, leaks)."""
+    wqs, scales, thetas, leaks = [], [], [], []
+    for wf in float_weights:
+        wq, s = quantize_weights(wf, cfg)
+        wqs.append(wq)
+        scales.append(s)
+        thetas.append(quantize_threshold(THETA, s, cfg))
+        leaks.append(quantize_leak(LEAK, s, cfg))
+    return wqs, scales, thetas, leaks
+
+
+def eval_gesture_float(weights, topology, input_shape, frames, labels) -> float:
+    out = float_forward([jnp.asarray(w) for w in weights], topology,
+                        input_shape, jnp.asarray(frames, dtype=jnp.float32))
+    pred = np.asarray(jnp.argmax(out[:, 0, :], axis=-1))
+    return float(np.mean(pred == labels))
+
+
+def eval_flow_float(weights, topology, input_shape, frames, flows) -> float:
+    out = float_forward([jnp.asarray(w) for w in weights], topology,
+                        input_shape, jnp.asarray(frames, dtype=jnp.float32))
+    b = flows.shape[0]
+    gt = flows.reshape(b, 2, -1).transpose(0, 2, 1)
+    epe = np.asarray(jnp.sqrt(jnp.sum((out - gt) ** 2, axis=-1)))
+    return float(np.mean(epe))
+
+
+def eval_gesture_quant(net, frames_batch, labels) -> float:
+    from .model import run_network
+    correct = 0
+    for i in range(frames_batch.shape[0]):
+        out, _ = run_network(net, frames_batch[i])
+        pred = int(np.argmax(np.asarray(out)[0]))
+        correct += int(pred == labels[i])
+    return correct / frames_batch.shape[0]
+
+
+def eval_flow_quant(net, frames_batch, flows) -> float:
+    from .model import run_network
+    epes = []
+    for i in range(frames_batch.shape[0]):
+        out, _ = run_network(net, frames_batch[i])
+        pred = np.asarray(out).astype(np.float64) * net.output_scale
+        h, w = flows.shape[2], flows.shape[3]
+        gt = flows[i].reshape(2, -1).T  # (M, 2)
+        epes.append(np.mean(np.sqrt(np.sum((pred - gt) ** 2, axis=-1))))
+    return float(np.mean(epes))
+
+
+def build_quantized(task, topology, input_shape, wqs, scales, thetas, leaks,
+                    cfg, timesteps):
+    from .model import QuantizedNetwork
+    layers = build_layers(topology, input_shape, wqs, thetas, leaks)
+    return QuantizedNetwork(
+        name=task, layers=layers, precision=cfg,
+        weight_scales=tuple(scales), timesteps=timesteps)
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps-gesture", type=int, default=300)
+    ap.add_argument("--steps-flow", type=int, default=120)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--eval-clips", type=int, default=22)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--gesture-hw", type=int, nargs=2, default=(64, 64),
+                    help="training/eval resolution for the gesture net "
+                         "(weights are resolution-independent; Table-II "
+                         "deploy resolution is 64x64)")
+    ap.add_argument("--flow-hw", type=int, nargs=2, default=(24, 32),
+                    help="training/eval resolution for the flow net "
+                         "(Table-II deploy resolution is 288x384)")
+    ap.add_argument("--gesture-timesteps", type=int, default=10)
+    ap.add_argument("--flow-timesteps", type=int, default=10)
+    ap.add_argument("--qat-steps", type=int, default=40,
+                    help="per-precision QAT fine-tune steps")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    (out_dir / "weights").mkdir(parents=True, exist_ok=True)
+    fig16: dict = {"tasks": {}}
+
+    jobs = [
+        ("gesture", args.steps_gesture, tuple(args.gesture_hw),
+         args.gesture_timesteps, 1.5e-3),
+        ("flow", args.steps_flow, tuple(args.flow_hw),
+         args.flow_timesteps, 5e-4),
+    ]
+    for task, steps, hw, timesteps, lr in jobs:
+        print(f"=== training {task} at {hw} x{timesteps}t ===")
+        weights, topology, info = train_task(
+            task, steps=steps, batch=args.batch, seed=args.seed,
+            input_hw=hw, timesteps=timesteps, lr=lr)
+        input_shape = (2, hw[0], hw[1])
+
+        # Held-out eval set.
+        if task == "gesture":
+            ev_frames, ev_target = data.gesture_batch(
+                args.eval_clips, seed=990_000, height=hw[0], width=hw[1],
+                timesteps=timesteps)
+            float_metric = eval_gesture_float(
+                weights, topology, input_shape, ev_frames, ev_target)
+            metric_name = "accuracy"
+        else:
+            ev_frames, ev_target = data.flow_batch(
+                args.eval_clips, seed=990_000, height=hw[0], width=hw[1],
+                timesteps=timesteps)
+            float_metric = eval_flow_float(
+                weights, topology, input_shape, ev_frames, ev_target)
+            metric_name = "aee"
+        print(f"  float {metric_name}: {float_metric:.4f}")
+
+        task_entry = {"metric": metric_name, "float": float_metric,
+                      "train": {k: v for k, v in info.items() if k != "losses"},
+                      "loss_first": info["losses"][0],
+                      "loss_last": info["losses"][-1],
+                      "precisions": {}}
+
+        for wb, vb in PRECISIONS:
+            cfg = PrecisionConfig(wb, vb)
+            # Short QAT fine-tune from the float checkpoint: the
+            # straight-through fake-quant forward + Vmem range clipping
+            # teaches the network to live inside the B_v-bit adder
+            # range, which post-training quantization alone does not
+            # (see EXPERIMENTS.md §Fig16 for the ablation).
+            qat_weights, _, qinfo = train_task(
+                task, steps=args.qat_steps, batch=args.batch,
+                seed=args.seed + wb, input_hw=hw, timesteps=timesteps,
+                lr=lr / 3.0, init=weights, fake_quant=cfg)
+            print(f"  qat w{wb}: loss {qinfo['losses'][0]:.4f} -> "
+                  f"{qinfo['losses'][-1]:.4f}")
+            wqs, scales, thetas, leaks = quantize_network(qat_weights, cfg)
+            net = build_quantized(task, topology, input_shape, wqs, scales,
+                                  thetas, leaks, cfg, timesteps)
+            if task == "gesture":
+                qm = eval_gesture_quant(net, ev_frames, ev_target)
+            else:
+                qm = eval_flow_quant(net, ev_frames, ev_target)
+            print(f"  {wb}/{vb}-bit {metric_name}: {qm:.4f}")
+            task_entry["precisions"][str(wb)] = {metric_name: qm}
+
+            np.savez(
+                out_dir / "weights" / f"{task}_w{wb}.npz",
+                num_layers=len(wqs),
+                timesteps=timesteps,
+                input_shape=np.array(input_shape, dtype=np.int32),
+                scales=np.array(scales, dtype=np.float64),
+                thetas=np.array(thetas, dtype=np.int32),
+                leaks=np.array(leaks, dtype=np.int32),
+                **{f"w{i}": wq for i, wq in enumerate(wqs)},
+            )
+        fig16["tasks"][task] = task_entry
+
+    with open(out_dir / "fig16_eval.json", "w") as f:
+        json.dump(fig16, f, indent=2)
+    print(f"wrote {out_dir}/fig16_eval.json")
+
+
+if __name__ == "__main__":
+    main()

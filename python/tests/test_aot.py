@@ -1,0 +1,122 @@
+"""AOT pipeline tests: HLO text generation, swb bundles, manifests.
+
+Tests that need trained weights are skipped until `make artifacts` has
+run (they then validate the real artifacts in-place).
+"""
+
+import pathlib
+import struct
+
+import numpy as np
+import pytest
+
+from compile.aot import (
+    SWB_MAGIC,
+    lower_macro,
+    manifest_entry,
+    to_hlo_text,
+    write_swb,
+)
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+
+def test_lower_macro_produces_hlo_text():
+    text = lower_macro(4, m=16, f=8, k=4)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # int32 computation with our shapes somewhere in the module
+    assert "s32[16,8]" in text
+    assert "s32[8,4]" in text
+
+
+def test_lower_macro_all_precisions():
+    for wb in (4, 6, 8):
+        assert "HloModule" in lower_macro(wb, m=8, f=8, k=4)
+
+
+def test_to_hlo_text_simple_fn():
+    import jax
+    import jax.numpy as jnp
+
+    def f(x):
+        return (x * 2 + 1,)
+
+    lowered = jax.jit(f).lower(jax.ShapeDtypeStruct((4,), jnp.int32))
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+
+
+def test_swb_roundtrip(tmp_path):
+    wqs = [np.arange(12, dtype=np.int32).reshape(4, 3),
+           np.full((2, 5), -3, dtype=np.int32)]
+    path = tmp_path / "t.swb"
+    write_swb(path, wqs, [0.5, 0.25], [10, 20], [1, 2])
+    blob = path.read_bytes()
+    magic, n = struct.unpack_from("<II", blob, 0)
+    assert magic == SWB_MAGIC and n == 2
+    off = 8
+    fan_in, k, th, lk, sc = struct.unpack_from("<IIiid", blob, off)
+    assert (fan_in, k, th, lk, sc) == (4, 3, 10, 1, 0.5)
+    off += struct.calcsize("<IIiid")
+    w0 = np.frombuffer(blob, dtype="<i4", count=12, offset=off)
+    np.testing.assert_array_equal(w0.reshape(4, 3), wqs[0])
+
+
+def test_manifest_entry_macro():
+    lines = manifest_entry("macro", "macro_w4", None,
+                           {"weight_bits": 4, "m": 128})
+    assert lines[0] == "artifact macro_w4"
+    assert "  kind macro" in lines
+    assert lines[-1] == "end"
+
+
+needs_artifacts = pytest.mark.skipif(
+    not (ARTIFACTS / "manifest.txt").exists(),
+    reason="run `make artifacts` first",
+)
+
+
+@needs_artifacts
+def test_real_manifest_lists_all_artifacts():
+    text = (ARTIFACTS / "manifest.txt").read_text()
+    for task in ("gesture", "flow"):
+        for wb in (4, 6, 8):
+            assert f"artifact {task}_w{wb}" in text
+            assert (ARTIFACTS / f"{task}_w{wb}.hlo.txt").exists()
+    for wb in (4, 6, 8):
+        assert (ARTIFACTS / f"macro_w{wb}.hlo.txt").exists()
+
+
+@needs_artifacts
+def test_real_artifacts_are_hlo_text():
+    for p in ARTIFACTS.glob("*.hlo.txt"):
+        head = p.read_text()[:200]
+        assert "HloModule" in head, p
+
+
+@needs_artifacts
+def test_real_swb_bundles_parse():
+    for p in (ARTIFACTS / "weights").glob("*.swb"):
+        blob = p.read_bytes()
+        magic, n = struct.unpack_from("<II", blob, 0)
+        assert magic == SWB_MAGIC
+        off = 8
+        for _ in range(n):
+            fan_in, k, th, lk, sc = struct.unpack_from("<IIiid", blob, off)
+            assert fan_in > 0 and k > 0 and th >= 1 and lk >= 0 and sc > 0
+            off += struct.calcsize("<IIiid") + 4 * fan_in * k
+        assert off == len(blob), p
+
+
+@needs_artifacts
+def test_fig16_eval_results_recorded():
+    import json
+
+    data = json.loads((ARTIFACTS / "fig16_eval.json").read_text())
+    assert set(data["tasks"]) == {"gesture", "flow"}
+    for task, entry in data["tasks"].items():
+        assert set(entry["precisions"]) == {"4", "6", "8"}
+        for wb, m in entry["precisions"].items():
+            val = m[entry["metric"]]
+            assert np.isfinite(val)

@@ -1,0 +1,102 @@
+"""Synthetic event-generator tests: determinism, sparsity bands, PRNG."""
+
+import numpy as np
+import pytest
+
+from compile.data import (
+    NUM_GESTURE_CLASSES,
+    SplitMix64,
+    flow_batch,
+    gesture_batch,
+    make_flow_scene,
+    make_gesture,
+)
+
+
+def test_splitmix64_known_vector():
+    """Golden values mirrored by rust/src/prop/rng.rs tests."""
+    rng = SplitMix64(0)
+    vals = [rng.next_u64() for _ in range(3)]
+    assert vals == [
+        0xE220A8397B1DCDAF,
+        0x6E789E6AA1B965F4,
+        0x06C45D188009454F,
+    ]
+
+
+def test_splitmix64_f64_range():
+    rng = SplitMix64(42)
+    xs = [rng.next_f64() for _ in range(1000)]
+    assert all(0.0 <= x < 1.0 for x in xs)
+    assert 0.3 < float(np.mean(xs)) < 0.7
+
+
+def test_gesture_deterministic():
+    a = make_gesture(3, seed=11, height=32, width=32, timesteps=5)
+    b = make_gesture(3, seed=11, height=32, width=32, timesteps=5)
+    np.testing.assert_array_equal(a.frames, b.frames)
+
+
+def test_gesture_classes_distinct():
+    a = make_gesture(0, seed=5, height=32, width=32, timesteps=8)
+    b = make_gesture(1, seed=5, height=32, width=32, timesteps=8)
+    assert not np.array_equal(a.frames, b.frames)
+
+
+def test_gesture_shape_and_binary():
+    s = make_gesture(2, seed=1, height=48, width=40, timesteps=6)
+    assert s.frames.shape == (6, 2, 48, 40)
+    assert set(np.unique(s.frames)) <= {0, 1}
+    assert s.label == 2
+
+
+def test_gesture_sparsity_band():
+    """Input sparsity must land in the high-sparsity DVS regime."""
+    s = make_gesture(4, seed=9, height=64, width=64, timesteps=20)
+    density = s.frames.mean()
+    assert 0.001 < density < 0.15, density
+
+
+def test_gesture_label_validation():
+    with pytest.raises(ValueError):
+        make_gesture(NUM_GESTURE_CLASSES, seed=0)
+
+
+def test_flow_scene_shapes():
+    s = make_flow_scene(seed=3, height=24, width=32, timesteps=5)
+    assert s.frames.shape == (5, 2, 24, 32)
+    assert s.flow.shape == (2, 24, 32)
+    assert set(np.unique(s.frames)) <= {0, 1}
+
+
+def test_flow_deterministic():
+    a = make_flow_scene(seed=7, height=24, width=32, timesteps=4)
+    b = make_flow_scene(seed=7, height=24, width=32, timesteps=4)
+    np.testing.assert_array_equal(a.frames, b.frames)
+    np.testing.assert_array_equal(a.flow, b.flow)
+
+
+def test_flow_has_motion_events():
+    s = make_flow_scene(seed=5, height=32, width=48, timesteps=8)
+    # events should exist after the first frame (temporal contrast)
+    assert s.frames[1:].sum() > 0
+    # flow magnitude should be non-trivial somewhere
+    mag = np.sqrt(s.flow[0] ** 2 + s.flow[1] ** 2)
+    assert mag.max() > 0.1
+
+
+def test_flow_denser_than_gesture():
+    """The flow workload drives the low-sparsity regime of Fig. 5."""
+    g = make_gesture(1, seed=2, height=48, width=64, timesteps=10)
+    f = make_flow_scene(seed=2, height=48, width=64, timesteps=10)
+    assert f.frames.mean() > g.frames.mean()
+
+
+def test_batches():
+    frames, labels = gesture_batch(4, seed=1, height=16, width=16,
+                                   timesteps=3)
+    assert frames.shape == (4, 3, 2, 16, 16)
+    assert labels.shape == (4,)
+    frames2, flows = flow_batch(3, seed=1, height=16, width=16, timesteps=3)
+    assert frames2.shape == (3, 3, 2, 16, 16)
+    assert flows.shape == (3, 2, 16, 16)

@@ -1,0 +1,120 @@
+"""L1 correctness: Pallas spiking_matmul vs the pure-jnp oracle.
+
+This is the core correctness signal for the compute-macro kernel:
+bit-exact equality against ``ref.spiking_matmul_ref`` across shapes,
+precisions, sparsities and block configurations — including hypothesis
+sweeps over the shape/sparsity space (the Pallas analogue of fuzzing
+the macro's address space).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.ref import spiking_matmul_ref
+from compile.kernels.spiking_matmul import spiking_matmul, vmem_footprint_bytes
+from compile.quantize import PRECISIONS, PrecisionConfig
+
+
+def _random_case(rng, m, f, k, cfg, density):
+    spikes = (rng.random((m, f)) < density).astype(np.int32)
+    weights = rng.integers(cfg.weight_min, cfg.weight_max + 1, (f, k),
+                           dtype=np.int32)
+    vmem = rng.integers(cfg.vmem_min, cfg.vmem_max + 1, (m, k),
+                        dtype=np.int32)
+    return jnp.asarray(spikes), jnp.asarray(weights), jnp.asarray(vmem)
+
+
+@pytest.mark.parametrize("wb,vb", PRECISIONS)
+@pytest.mark.parametrize("density", [0.0, 0.05, 0.25, 1.0])
+def test_matches_ref_across_precisions(wb, vb, density):
+    cfg = PrecisionConfig(wb, vb)
+    rng = np.random.default_rng(wb * 100 + int(density * 10))
+    s, w, v = _random_case(rng, 96, 72, 24, cfg, density)
+    out = spiking_matmul(s, w, v, vb)
+    ref = spiking_matmul_ref(s, w, v, vb)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_macro_native_shape():
+    """The silicon-native case: 128x16 IFspad, 48-col macro at 4-bit."""
+    cfg = PrecisionConfig(4, 7)
+    rng = np.random.default_rng(1)
+    s, w, v = _random_case(rng, 16, 128, 12, cfg, 0.2)
+    out = spiking_matmul(s, w, v, 7)
+    ref = spiking_matmul_ref(s, w, v, 7)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_wraparound_is_exercised():
+    """Saturating-range inputs must wrap, not clamp."""
+    s = jnp.ones((1, 4), dtype=jnp.int32)
+    w = jnp.full((4, 1), 7, dtype=jnp.int32)   # +28 accumulation
+    v = jnp.full((1, 1), 60, dtype=jnp.int32)  # 60 + 28 = 88 > 63
+    out = np.asarray(spiking_matmul(s, w, v, 7))
+    # 88 wraps to 88 - 128 = -40 in 7-bit two's complement.
+    assert out[0, 0] == -40
+
+
+def test_zero_spikes_identity():
+    """With no input spikes the macro must not disturb Vmems."""
+    rng = np.random.default_rng(3)
+    cfg = PrecisionConfig(6, 11)
+    s = jnp.zeros((32, 54), dtype=jnp.int32)
+    w = jnp.asarray(rng.integers(-32, 32, (54, 8), dtype=np.int32))
+    v = jnp.asarray(rng.integers(-1024, 1024, (32, 8), dtype=np.int32))
+    out = spiking_matmul(s, w, v, 11)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(v))
+
+
+def test_block_configs_equivalent():
+    """Tiling must not change numerics (order-independence contract)."""
+    cfg = PrecisionConfig(4, 7)
+    rng = np.random.default_rng(4)
+    s, w, v = _random_case(rng, 64, 90, 36, cfg, 0.3)
+    outs = [
+        np.asarray(spiking_matmul(s, w, v, 7, block_m=bm, block_k=bk))
+        for bm, bk in [(64, 36), (32, 12), (16, 9), (8, 4)]
+    ]
+    for o in outs[1:]:
+        np.testing.assert_array_equal(outs[0], o)
+
+
+def test_shape_mismatch_raises():
+    s = jnp.zeros((4, 8), dtype=jnp.int32)
+    w = jnp.zeros((9, 2), dtype=jnp.int32)
+    v = jnp.zeros((4, 2), dtype=jnp.int32)
+    with pytest.raises(ValueError, match="fan-in"):
+        spiking_matmul(s, w, v, 7)
+    w_ok = jnp.zeros((8, 2), dtype=jnp.int32)
+    v_bad = jnp.zeros((5, 2), dtype=jnp.int32)
+    with pytest.raises(ValueError, match="vmem shape"):
+        spiking_matmul(s, w_ok, v_bad, 7)
+
+
+def test_vmem_footprint_positive_and_monotone():
+    small = vmem_footprint_bytes(128, 72, 12)
+    big = vmem_footprint_bytes(128, 1152, 48)
+    assert 0 < small < big
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    f=st.integers(1, 160),
+    k=st.integers(1, 48),
+    wb=st.sampled_from([4, 6, 8]),
+    density=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_sweep(m, f, k, wb, density, seed):
+    """Randomized shape/precision/sparsity sweep, kernel == oracle."""
+    vb = {4: 7, 6: 11, 8: 15}[wb]
+    cfg = PrecisionConfig(wb, vb)
+    rng = np.random.default_rng(seed)
+    s, w, v = _random_case(rng, m, f, k, cfg, density)
+    out = spiking_matmul(s, w, v, vb)
+    ref = spiking_matmul_ref(s, w, v, vb)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))

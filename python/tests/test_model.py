@@ -1,0 +1,184 @@
+"""L2 model tests: im2col layout, layer geometry, network stepping."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    LayerSpec,
+    QuantizedNetwork,
+    build_layers,
+    conv_out,
+    flow_topology,
+    gesture_topology,
+    im2col,
+    layer_step,
+    maxpool_spikes,
+    network_step,
+    run_network,
+)
+from compile.quantize import PrecisionConfig
+
+
+def test_im2col_layout_contract():
+    """F = (c*KH + dy)*KW + dx; M = y*W_out + x — the hardware layout."""
+    c, h, w = 2, 4, 4
+    x = np.arange(c * h * w, dtype=np.int32).reshape(c, h, w)
+    patches = np.asarray(im2col(jnp.asarray(x), 3, 3, 1, 1))
+    assert patches.shape == (16, 18)
+    # output pixel (1,1) with pad 1 sees input window [0:3, 0:3]
+    m = 1 * 4 + 1
+    for ci in range(c):
+        for dy in range(3):
+            for dx in range(3):
+                f = (ci * 3 + dy) * 3 + dx
+                assert patches[m, f] == x[ci, dy, dx]
+
+
+def test_im2col_zero_padding():
+    x = jnp.ones((1, 3, 3), dtype=jnp.int32)
+    patches = np.asarray(im2col(x, 3, 3, 1, 1))
+    # corner output pixel (0,0): only the 2x2 in-bounds part is 1
+    assert patches[0].sum() == 4
+
+
+def test_im2col_stride():
+    x = jnp.ones((1, 6, 6), dtype=jnp.int32)
+    patches = np.asarray(im2col(x, 3, 3, 2, 1))
+    ho, wo = conv_out(6, 6, 3, 3, 2, 1)
+    assert patches.shape == (ho * wo, 9)
+
+
+def test_maxpool_binary():
+    x = jnp.asarray(
+        [[[1, 0, 0, 0], [0, 0, 0, 0], [0, 0, 0, 1], [0, 0, 1, 0]]],
+        dtype=jnp.int32)
+    out = np.asarray(maxpool_spikes(x, 2, 2))
+    assert out.tolist() == [[[1, 0], [0, 1]]]
+
+
+def _tiny_conv_layer(c=1, h=4, w=4, k=2, accumulate=False, seed=0):
+    rng = np.random.default_rng(seed)
+    wq = rng.integers(-7, 8, (c * 9, k), dtype=np.int32)
+    ho, wo = conv_out(h, w, 3, 3, 1, 1)
+    return LayerSpec(
+        kind="conv", in_shape=(c, h, w), out_shape=(k, ho, wo),
+        weights=wq, theta=5, leak=1, leaky=True, soft_reset=True,
+        accumulate=accumulate)
+
+
+def test_layer_step_conv_shapes():
+    layer = _tiny_conv_layer()
+    spikes = jnp.asarray(
+        np.random.default_rng(1).integers(0, 2, (1, 4, 4), dtype=np.int32))
+    vmem = jnp.zeros(layer.vmem_shape, dtype=jnp.int32)
+    out, vnext = layer_step(layer, spikes, vmem, 7)
+    assert out.shape == (2, 4, 4)
+    assert vnext.shape == layer.vmem_shape
+    assert set(np.unique(np.asarray(out))) <= {0, 1}
+
+
+def test_accumulate_layer_never_spikes():
+    layer = _tiny_conv_layer(accumulate=True)
+    spikes = jnp.ones((1, 4, 4), dtype=jnp.int32)
+    vmem = jnp.zeros(layer.vmem_shape, dtype=jnp.int32)
+    out, vnext = layer_step(layer, spikes, vmem, 7)
+    assert np.asarray(out).sum() == 0
+    assert np.asarray(vnext).any()
+
+
+def test_spike_reshape_channel_major():
+    """Spikes (M, K) -> (K, H, W) must be channel-major (K first)."""
+    c, h, w, k = 1, 2, 2, 3
+    wq = np.zeros((9, k), dtype=np.int32)
+    wq[4, 1] = 7  # center tap, channel 1 only
+    layer = LayerSpec(kind="conv", in_shape=(c, h, w), out_shape=(k, h, w),
+                      weights=wq, theta=5, leaky=False, soft_reset=False)
+    spikes = jnp.asarray([[[1, 0], [0, 0]]], dtype=jnp.int32)
+    vmem = jnp.zeros((h * w, k), dtype=jnp.int32)
+    out, _ = layer_step(layer, spikes, vmem, 7)
+    out = np.asarray(out)
+    assert out[1, 0, 0] == 1          # channel 1 fires at (0,0)
+    assert out.sum() == 1             # nowhere else
+
+
+def _build_gesture_net(hw=(16, 16), wb=4, seed=0, timesteps=4):
+    vb = {4: 7, 6: 11, 8: 15}[wb]
+    cfg = PrecisionConfig(wb, vb)
+    topo = gesture_topology()
+    rng = np.random.default_rng(seed)
+    c, h, w = 2, hw[0], hw[1]
+    weights = []
+    ch, hh, ww = c, h, w
+    for t in topo:
+        if t["kind"] == "pool":
+            stride = min(t["stride"], min(t["size"], hh, ww))
+            hh, ww = hh // stride, ww // stride
+            continue
+        if t["kind"] == "conv":
+            f = ch * 9
+            weights.append(rng.integers(cfg.weight_min, cfg.weight_max + 1,
+                                        (f, t["out_ch"]), dtype=np.int32))
+            ch = t["out_ch"]
+        else:
+            f = ch * hh * ww
+            weights.append(rng.integers(cfg.weight_min, cfg.weight_max + 1,
+                                        (f, t["out_ch"]), dtype=np.int32))
+            ch, hh, ww = t["out_ch"], 1, 1
+    layers = build_layers(topo, (2, hw[0], hw[1]), weights)
+    return QuantizedNetwork(name="gesture", layers=layers, precision=cfg,
+                            weight_scales=tuple([0.1] * len(weights)),
+                            timesteps=timesteps)
+
+
+def test_gesture_network_geometry():
+    net = _build_gesture_net(hw=(64, 64))
+    stateful = net.stateful_layers
+    assert len(stateful) == 6                      # 5 conv + 1 fc
+    assert stateful[-1].kind == "fc"
+    assert stateful[-1].fan_in == 64               # paper: FC(64, 11)
+    assert stateful[-1].out_shape[0] == 11
+    assert stateful[-1].accumulate
+
+
+def test_flow_network_geometry():
+    topo = flow_topology()
+    assert len(topo) == 8
+    assert topo[0]["in_ch"] == 2 and topo[0]["out_ch"] == 32
+    assert topo[-1]["out_ch"] == 2 and topo[-1]["accumulate"]
+
+
+def test_network_step_state_evolution():
+    net = _build_gesture_net()
+    vmems = net.init_vmems()
+    frame = jnp.asarray(
+        np.random.default_rng(2).integers(0, 2, (2, 16, 16), dtype=np.int32))
+    out, counts, vmems2 = network_step(net, frame, vmems)
+    assert out.shape == (1, 11)
+    assert counts.shape == (6,)
+    assert int(counts[0]) == int(frame.sum())
+    # at least the first layer's Vmem must have changed
+    assert not np.array_equal(np.asarray(vmems[0]), np.asarray(vmems2[0]))
+
+
+def test_run_network_accumulates_over_time():
+    net = _build_gesture_net(timesteps=3)
+    rng = np.random.default_rng(3)
+    frames = rng.integers(0, 2, (3, 2, 16, 16), dtype=np.int32)
+    out, counts = run_network(net, frames)
+    assert out.shape == (1, 11)
+    assert counts.shape == (3, 6)
+
+
+def test_empty_frames_keep_everything_zero():
+    net = _build_gesture_net(timesteps=2)
+    frames = np.zeros((2, 2, 16, 16), dtype=np.int32)
+    out, counts = run_network(net, frames)
+    assert np.asarray(out).sum() == 0
+    assert counts.sum() == 0
+
+
+def test_build_layers_rejects_bad_weights():
+    topo = gesture_topology()
+    with pytest.raises(ValueError, match="weight shape"):
+        build_layers(topo, (2, 16, 16), [np.zeros((5, 5), dtype=np.int32)] * 6)

@@ -1,0 +1,130 @@
+"""L1 correctness: Pallas neuron_update vs the pure-jnp oracle.
+
+Covers all four neuron configurations the neuron macro supports
+(IF/LIF x hard/soft reset), plus targeted dynamics checks: reset
+semantics, leak direction, threshold edge cases, and hypothesis sweeps.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.neuron import neuron_update
+from compile.kernels.ref import neuron_update_ref
+from compile.quantize import PRECISIONS, PrecisionConfig
+
+CONFIGS = [(leaky, soft) for leaky in (False, True) for soft in (False, True)]
+
+
+def _case(rng, m, k, cfg, theta=None, leak=None):
+    p = rng.integers(cfg.vmem_min, cfg.vmem_max + 1, (m, k), dtype=np.int32)
+    v = rng.integers(cfg.vmem_min, cfg.vmem_max + 1, (m, k), dtype=np.int32)
+    theta = theta if theta is not None else int(rng.integers(1, cfg.vmem_max))
+    leak = leak if leak is not None else int(rng.integers(0, max(cfg.vmem_max // 8, 1)))
+    return jnp.asarray(p), jnp.asarray(v), theta, leak
+
+
+@pytest.mark.parametrize("leaky,soft", CONFIGS)
+@pytest.mark.parametrize("wb,vb", PRECISIONS)
+def test_all_neuron_models_match_ref(leaky, soft, wb, vb):
+    cfg = PrecisionConfig(wb, vb)
+    rng = np.random.default_rng(wb + leaky * 10 + soft * 100)
+    p, v, theta, leak = _case(rng, 64, 48, cfg)
+    s1, v1 = neuron_update(p, v, theta, leak, vb, leaky=leaky, soft_reset=soft)
+    s2, v2 = neuron_update_ref(p, v, theta, leak, vb, leaky=leaky,
+                               soft_reset=soft)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+
+
+def test_hard_reset_zeroes_fired_neurons():
+    p = jnp.asarray([[25, 0]], dtype=jnp.int32)
+    v = jnp.asarray([[10, 10]], dtype=jnp.int32)
+    s, vn = neuron_update(p, v, 30, 0, 7, leaky=False, soft_reset=False)
+    assert np.asarray(s).tolist() == [[1, 0]]
+    assert np.asarray(vn).tolist() == [[0, 10]]
+
+
+def test_soft_reset_retains_residual():
+    p = jnp.asarray([[25]], dtype=jnp.int32)
+    v = jnp.asarray([[10]], dtype=jnp.int32)
+    s, vn = neuron_update(p, v, 30, 0, 7, leaky=False, soft_reset=True)
+    assert np.asarray(s).tolist() == [[1]]
+    assert np.asarray(vn).tolist() == [[5]]  # 35 - 30
+
+
+def test_integration_wraps_at_vmem_bits():
+    """20 + 50 = 70 wraps to -58 in 7-bit: no spike, then the underflow
+    floor clamps the wrapped value at -theta (DESIGN §2 contract)."""
+    p = jnp.asarray([[50]], dtype=jnp.int32)
+    v = jnp.asarray([[20]], dtype=jnp.int32)
+    s, vn = neuron_update(p, v, 30, 0, 7, leaky=False, soft_reset=False)
+    assert np.asarray(s).tolist() == [[0]]
+    assert np.asarray(vn).tolist() == [[-30]]
+
+
+def test_shift_leak_decays_toward_zero():
+    """LIF leak is an arithmetic shift: v -= v >> k (k = leak)."""
+    p = jnp.zeros((1, 2), dtype=jnp.int32)
+    v = jnp.asarray([[16, -16]], dtype=jnp.int32)
+    s, vn = neuron_update(p, v, 100, 2, 7, leaky=True, soft_reset=True)
+    assert np.asarray(s).tolist() == [[0, 0]]
+    # 16>>2=4 -> 12 ; -16>>2=-4 -> -12
+    assert np.asarray(vn).tolist() == [[12, -12]]
+
+
+def test_negative_vmem_floors_at_minus_theta():
+    """Digital underflow guard: Vmem never drops below -theta."""
+    p = jnp.asarray([[-50]], dtype=jnp.int32)
+    v = jnp.asarray([[-10]], dtype=jnp.int32)
+    s, vn = neuron_update(p, v, 20, 0, 7, leaky=False, soft_reset=True)
+    assert np.asarray(s).tolist() == [[0]]
+    assert np.asarray(vn).tolist() == [[-20]]
+
+
+def test_threshold_boundary_fires_at_exact_theta():
+    """The macro compares Vmem >= theta (paper: threshold comparison)."""
+    p = jnp.asarray([[0, 0]], dtype=jnp.int32)
+    v = jnp.asarray([[30, 29]], dtype=jnp.int32)
+    s, _ = neuron_update(p, v, 30, 0, 7, leaky=False, soft_reset=False)
+    assert np.asarray(s).tolist() == [[1, 0]]
+
+
+def test_if_neuron_ignores_leak_value():
+    rng = np.random.default_rng(9)
+    cfg = PrecisionConfig(4, 7)
+    p, v, theta, _ = _case(rng, 16, 12, cfg)
+    s1, v1 = neuron_update(p, v, theta, 0, 7, leaky=False, soft_reset=True)
+    s2, v2 = neuron_update(p, v, theta, 63, 7, leaky=False, soft_reset=True)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+
+
+def test_partial_shape_mismatch_raises():
+    p = jnp.zeros((2, 3), dtype=jnp.int32)
+    v = jnp.zeros((2, 4), dtype=jnp.int32)
+    with pytest.raises(ValueError, match="partial shape"):
+        neuron_update(p, v, 1, 0, 7, leaky=False, soft_reset=True)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 72),
+    k=st.integers(1, 48),
+    wb=st.sampled_from([4, 6, 8]),
+    leaky=st.booleans(),
+    soft=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_sweep(m, k, wb, leaky, soft, seed):
+    vb = {4: 7, 6: 11, 8: 15}[wb]
+    cfg = PrecisionConfig(wb, vb)
+    rng = np.random.default_rng(seed)
+    p, v, theta, leak = _case(rng, m, k, cfg)
+    s1, v1 = neuron_update(p, v, theta, leak, vb, leaky=leaky, soft_reset=soft)
+    s2, v2 = neuron_update_ref(p, v, theta, leak, vb, leaky=leaky,
+                               soft_reset=soft)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))

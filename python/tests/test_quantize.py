@@ -1,0 +1,103 @@
+"""Quantization contract tests (mirrored by rust/src/quant tests)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.quantize import (
+    PRECISIONS,
+    PrecisionConfig,
+    quantize_leak,
+    quantize_threshold,
+    quantize_weights,
+    saturate_to_bits,
+    wrap_to_bits,
+)
+
+
+@pytest.mark.parametrize("wb,vb", PRECISIONS)
+def test_precision_ranges(wb, vb):
+    cfg = PrecisionConfig(wb, vb)
+    assert cfg.vmem_bits == 2 * cfg.weight_bits - 1  # paper §II-A
+    assert cfg.weight_max == 2 ** (wb - 1) - 1
+    assert cfg.vmem_min == -(2 ** (vb - 1))
+    assert cfg.neurons_per_row == 48 // wb
+
+
+def test_unsupported_precision_rejected():
+    with pytest.raises(ValueError):
+        PrecisionConfig(5, 9)
+
+
+def test_wrap_known_values():
+    x = jnp.asarray([63, 64, 127, 128, -64, -65], dtype=jnp.int32)
+    out = np.asarray(wrap_to_bits(x, 7))
+    assert out.tolist() == [63, -64, -1, 0, -64, 63]
+
+
+def test_wrap_idempotent_in_range():
+    x = jnp.arange(-64, 64, dtype=jnp.int32)
+    np.testing.assert_array_equal(np.asarray(wrap_to_bits(x, 7)),
+                                  np.asarray(x))
+
+
+def test_saturate_clamps():
+    x = jnp.asarray([1000, -1000, 5], dtype=jnp.int32)
+    out = np.asarray(saturate_to_bits(x, 7))
+    assert out.tolist() == [63, -64, 5]
+
+
+@settings(max_examples=50, deadline=None)
+@given(x=st.integers(-(2**30), 2**30), bits=st.sampled_from([7, 11, 15]))
+def test_wrap_matches_modular_arithmetic(x, bits):
+    expected = ((x + (1 << (bits - 1))) % (1 << bits)) - (1 << (bits - 1))
+    got = int(np.asarray(wrap_to_bits(jnp.asarray([x], dtype=jnp.int32),
+                                      bits))[0])
+    assert got == expected
+
+
+def test_wrap_is_additive_homomorphism():
+    """wrap(a)+b then wrap == wrap(a+b): order independence, DESIGN §2."""
+    rng = np.random.default_rng(0)
+    a = rng.integers(-60, 60, 100)
+    b = rng.integers(-60, 60, 100)
+    c = rng.integers(-60, 60, 100)
+    lhs = wrap_to_bits(
+        wrap_to_bits(jnp.asarray(a + b, dtype=jnp.int32), 7)
+        + jnp.asarray(c, dtype=jnp.int32), 7)
+    rhs = wrap_to_bits(jnp.asarray(a + b + c, dtype=jnp.int32), 7)
+    np.testing.assert_array_equal(np.asarray(lhs), np.asarray(rhs))
+
+
+@pytest.mark.parametrize("wb,vb", PRECISIONS)
+def test_quantize_weights_range_and_roundtrip(wb, vb):
+    cfg = PrecisionConfig(wb, vb)
+    rng = np.random.default_rng(wb)
+    w = rng.normal(0, 0.5, (64, 16)).astype(np.float32)
+    wq, scale = quantize_weights(w, cfg)
+    assert wq.min() >= cfg.weight_min and wq.max() <= cfg.weight_max
+    # reconstruction error bounded by scale/2 per element
+    np.testing.assert_allclose(wq * scale, w, atol=scale * 0.5 + 1e-9)
+
+
+def test_quantize_weights_zero_tensor():
+    cfg = PrecisionConfig(4, 7)
+    wq, scale = quantize_weights(np.zeros((3, 3)), cfg)
+    assert scale == 1.0
+    assert wq.sum() == 0
+
+
+def test_quantize_threshold_at_least_one():
+    cfg = PrecisionConfig(4, 7)
+    assert quantize_threshold(0.0001, 1.0, cfg) == 1
+    assert quantize_threshold(1e9, 1.0, cfg) == cfg.vmem_max
+
+
+def test_quantize_leak_is_shift_amount():
+    cfg = PrecisionConfig(4, 7)
+    assert quantize_leak(-5.0, 1.0, cfg) == 0     # no leak
+    assert quantize_leak(0.25, 0.01, cfg) == 2    # 2^-2 decay
+    assert quantize_leak(0.5, 1.0, cfg) == 1
+    assert quantize_leak(0.015625, 1.0, cfg) == 6

@@ -1,0 +1,55 @@
+//! Shared helpers for the bench binaries (criterion is not in this
+//! environment; every bench is a `harness = false` main that prints
+//! the same rows/series the paper reports, plus wall-clock info).
+
+#![allow(dead_code)]
+
+use std::time::Instant;
+
+use spidr::prop::SplitMix64;
+use spidr::snn::spikes::SpikePlane;
+
+/// Print a bench header.
+pub fn header(id: &str, what: &str) {
+    println!("==================================================================");
+    println!("{id} — {what}");
+    println!("==================================================================");
+}
+
+/// Random binary plane at a density.
+pub fn random_plane(c: usize, h: usize, w: usize, density: f64, seed: u64) -> SpikePlane {
+    let mut rng = SplitMix64::new(seed);
+    let mut p = SpikePlane::zeros(c, h, w);
+    for i in 0..p.len() {
+        if rng.chance(density) {
+            p.as_mut_slice()[i] = 1;
+        }
+    }
+    p
+}
+
+/// Random clip (frames over timesteps).
+pub fn random_clip(
+    c: usize,
+    h: usize,
+    w: usize,
+    t: usize,
+    density: f64,
+    seed: u64,
+) -> Vec<SpikePlane> {
+    (0..t)
+        .map(|i| random_plane(c, h, w, density, seed.wrapping_add(i as u64 * 77)))
+        .collect()
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Simple machine-readable result line (grep-able from bench logs).
+pub fn emit(series: &str, x: f64, y: f64) {
+    println!("DATA {series} {x:.6} {y:.6}");
+}

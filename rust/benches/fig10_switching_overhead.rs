@@ -1,0 +1,111 @@
+//! Fig. 10 — peripheral switching overhead: energy per macro op as a
+//! function of consecutive same-parity operations.
+//!
+//! The paper: switching RBL switches + column peripherals after every
+//! op costs ~1.5x the energy of batching 15 consecutive same-parity
+//! ops; beyond FIFO depth ~16 the returns vanish (which is why the
+//! silicon FIFOs are 16 deep).
+//!
+//! Reproduced two ways: (a) analytically from the energy model
+//! (E_op + E_switch / run_length), and (b) by simulating the S2A
+//! ping-pong against the naive switch-every-op policy at several FIFO
+//! depths on a real spike stream.
+
+mod common;
+
+use spidr::energy::model::EnergyParams;
+use spidr::quant::Overflow;
+use spidr::sim::compute_macro::ComputeMacro;
+use spidr::sim::ifspad::IfSpad;
+use spidr::sim::s2a::{run_tile, S2aOptions};
+use spidr::snn::tensor::Mat;
+
+fn energy_per_op(stats: &spidr::sim::s2a::TileCuStats, e: &EnergyParams) -> f64 {
+    let total = stats.macro_ops as f64 * e.macro_op(4)
+        + stats.parity_switches as f64 * e.e_parity_switch;
+    total / stats.macro_ops.max(1) as f64
+}
+
+fn spad_with_density(density: f64, seed: u64) -> IfSpad {
+    let mut rng = spidr::prop::SplitMix64::new(seed);
+    let mut s = IfSpad::new();
+    s.clear(128, 16);
+    for y in 0..128 {
+        for x in 0..16 {
+            if rng.chance(density) {
+                s.write(y, x, true);
+            }
+        }
+    }
+    s
+}
+
+fn main() {
+    common::header(
+        "Fig. 10",
+        "energy/op vs consecutive same-parity ops (peripheral switching)",
+    );
+    let e = EnergyParams::default();
+
+    // (a) analytic: batching N same-parity ops amortizes one switch.
+    println!("analytic model (E_op + E_switch/N):");
+    println!("{:>14} {:>12} {:>9}", "batch N", "pJ/op", "vs N=1");
+    let per_op_at = |n: f64| e.macro_op(4) + e.e_parity_switch / n;
+    for n in [1u32, 2, 4, 8, 15, 16, 24, 32] {
+        let pj = per_op_at(n as f64);
+        println!("{:>14} {:>12.2} {:>9.3}", n, pj, per_op_at(1.0) / pj);
+        common::emit("fig10_analytic", n as f64, pj);
+    }
+    println!(
+        "-> batching 15 ops: {:.2}x energy reduction (paper: ~1.5x)",
+        per_op_at(1.0) / per_op_at(15.0)
+    );
+
+    // (b) simulated S2A at 25 % density.
+    println!("\nsimulated S2A (128x16 IFspad, 25 % density):");
+    println!(
+        "{:>22} {:>9} {:>11} {:>9}",
+        "policy", "switches", "pJ/op", "vs naive"
+    );
+    let mk_cm = || ComputeMacro::new(Mat::zeros(128, 12), 7, Overflow::Wrap, false);
+    let spad = spad_with_density(0.25, 0x16);
+    let ready: Vec<u64> = (1..=128).collect();
+
+    let naive = run_tile(
+        &spad,
+        &ready,
+        &mut mk_cm(),
+        &S2aOptions {
+            ping_pong: false,
+            ..Default::default()
+        },
+    );
+    let naive_pj = energy_per_op(&naive, &e);
+    println!(
+        "{:>22} {:>9} {:>11.2} {:>9.3}",
+        "switch every op", naive.parity_switches, naive_pj, 1.0
+    );
+
+    for depth in [2usize, 4, 8, 16, 32] {
+        let st = run_tile(
+            &spad,
+            &ready,
+            &mut mk_cm(),
+            &S2aOptions {
+                fifo_depth: depth,
+                ping_pong: true,
+                ..Default::default()
+            },
+        );
+        let pj = energy_per_op(&st, &e);
+        println!(
+            "{:>22} {:>9} {:>11.2} {:>9.3}",
+            format!("ping-pong depth {depth}"),
+            st.parity_switches,
+            pj,
+            naive_pj / pj
+        );
+        common::emit("fig10_simulated", depth as f64, pj);
+    }
+    println!("\npaper: 16-deep FIFOs; deeper gives no significant extra energy reduction");
+}

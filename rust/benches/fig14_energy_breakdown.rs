@@ -1,0 +1,79 @@
+//! Fig. 14 — energy breakdown by component at 75 % and 95 % input
+//! sparsity.
+//!
+//! The paper's claims reproduced here:
+//!   * CIM macros (compute + neuron units) dominate at both sparsities,
+//!   * total energy drops by >50 % from 75 % to 95 % sparsity,
+//!   * data movement is only a small fraction of the total.
+
+mod common;
+
+use spidr::energy::model::Corner;
+use spidr::quant::Precision;
+use spidr::sim::config::SimConfig;
+use spidr::sim::core::SpidrCore;
+use spidr::snn::layer::{Layer, NeuronConfig, ResetMode};
+use spidr::snn::tensor::Mat;
+
+fn main() {
+    common::header("Fig. 14", "energy breakdown by component @75 % and 95 % sparsity");
+    // A flow-net-like conv layer: Conv(32->32), 24x32 output pixels.
+    let layer = Layer::conv(
+        (32, 24, 32),
+        32,
+        3,
+        3,
+        1,
+        1,
+        Mat::zeros(288, 32),
+        NeuronConfig { theta: 16, leak: 2, leaky: true, reset: ResetMode::Soft },
+        false,
+    )
+    .unwrap();
+
+    let mut cfg = SimConfig::timing_only(Precision::W4V7);
+    cfg.corner = Corner::LOW;
+    let core = SpidrCore::new(cfg);
+
+    let mut totals = Vec::new();
+    for &sparsity in &[0.75f64, 0.95] {
+        let frames = common::random_clip(32, 24, 32, 4, 1.0 - sparsity, 0x14);
+        let mut state = Mat::zeros(24 * 32, 32);
+        let (_, stats) = core.run_layer(&layer, &frames, &mut state).unwrap();
+        let mut run = stats.run;
+        run.finalize_leakage(cfg.corner, &cfg.energy);
+        let b = run.energy;
+        let total = b.total();
+        totals.push(total);
+        println!("\nsparsity {:.0} % — total {:.1} nJ:", sparsity * 100.0, total / 1e3);
+        let rows = [
+            ("compute macros", b.compute_macro),
+            ("periph. switch", b.peripheral_switch),
+            ("neuron units", b.neuron_units),
+            ("S2A (det+queue)", b.s2a),
+            ("input loader", b.input_loader),
+            ("IFmem", b.ifmem),
+            ("data movement", b.data_movement),
+            ("control", b.control),
+            ("leakage", b.leakage),
+        ];
+        for (name, val) in rows {
+            let share = val / total * 100.0;
+            let bar = "#".repeat((share / 2.0).round() as usize);
+            println!("  {:<16} {:>9.1} nJ {:>6.1} %  {}", name, val / 1e3, share, bar);
+            common::emit(&format!("fig14_{}_{}", name.replace(' ', "_"), sparsity), sparsity, share);
+        }
+        println!(
+            "  CIM share {:.1} % | data movement {:.1} %",
+            b.cim_share() * 100.0,
+            b.data_movement_share() * 100.0
+        );
+        assert!(b.cim_share() > 0.4, "CIM macros should dominate");
+    }
+    let drop = 1.0 - totals[1] / totals[0];
+    println!(
+        "\n75 % -> 95 % sparsity: total energy drops {:.1} % (paper: >50 %)",
+        drop * 100.0
+    );
+    common::emit("fig14_energy_drop", 0.0, drop);
+}

@@ -1,0 +1,87 @@
+//! Fig. 16 — accuracy (gesture) / AEE (flow) vs energy at different
+//! weight precisions (50 MHz / 0.9 V).
+//!
+//! The task metrics come from the build-time evaluation
+//! (`artifacts/fig16_eval.txt`, written by `make artifacts`); the
+//! energy per inference comes from the cycle simulator running the
+//! same trained networks on synthetic clips. "Since this is a digital
+//! CIM design, there is no loss in accuracy at hardware
+//! implementation" — our equivalent statement is the bit-exactness of
+//! the simulator against the quantized model (checked in tests).
+
+mod common;
+
+use std::collections::HashMap;
+
+use spidr::coordinator::NetworkCompiler;
+use spidr::dvs::flow_scene::{make_flow_scene, FlowSceneConfig};
+use spidr::dvs::gesture::{make_gesture, GestureConfig};
+use spidr::energy::model::Corner;
+use spidr::quant::Precision;
+use spidr::sim::SimConfig;
+use spidr::snn::network::{flow_network, gesture_network};
+use spidr::snn::WeightBundle;
+
+fn load_metrics() -> Option<HashMap<(String, String), f64>> {
+    let text = std::fs::read_to_string("artifacts/fig16_eval.txt").ok()?;
+    let mut out = HashMap::new();
+    for line in text.lines() {
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        if parts.len() == 4 {
+            if let Ok(v) = parts[3].parse::<f64>() {
+                out.insert((parts[0].to_string(), parts[2].to_string()), v);
+            }
+        }
+    }
+    Some(out)
+}
+
+fn main() {
+    common::header("Fig. 16", "accuracy / AEE and energy vs weight precision");
+    let Some(metrics) = load_metrics() else {
+        println!("SKIPPED: artifacts/fig16_eval.txt missing — run `make artifacts`");
+        return;
+    };
+
+    for task in ["gesture", "flow"] {
+        let metric_name = if task == "gesture" { "accuracy" } else { "AEE (px/step)" };
+        println!("\n{task} — {metric_name} + simulated energy/inference:");
+        println!("{:>7} {:>10} {:>14} {:>12}", "prec", "metric", "uJ/inference", "TOPS/W");
+        if let Some(fl) = metrics.get(&(task.to_string(), "float".to_string())) {
+            println!("{:>7} {:>10.4} {:>14} {:>12}", "float", fl, "-", "-");
+        }
+        for wb in [4u32, 6, 8] {
+            let key = (task.to_string(), wb.to_string());
+            let Some(&m) = metrics.get(&key) else { continue };
+            let p = Precision::from_weight_bits(wb).unwrap();
+            let bundle = match WeightBundle::load(format!("artifacts/weights/{task}_w{wb}.swb")) {
+                Ok(b) => b,
+                Err(e) => {
+                    println!("{:>7} {:>10.4}   (no bundle: {e})", format!("{wb}b"), m);
+                    continue;
+                }
+            };
+            // Energy on a small synthetic clip at the trained geometry.
+            let (net, frames) = if task == "gesture" {
+                let net = gesture_network(&bundle, p, 64, 64, 10).unwrap();
+                let clip = make_gesture(3, 55, &GestureConfig {
+                    height: 64, width: 64, timesteps: 10, noise_rate: 0.008 });
+                (net, clip.frames)
+            } else {
+                let net = flow_network(&bundle, p, 24, 32, 10).unwrap();
+                let scene = make_flow_scene(55, &FlowSceneConfig {
+                    height: 24, width: 32, timesteps: 10, ..Default::default() });
+                (net, scene.frames)
+            };
+            let compiled = NetworkCompiler::compile(net, SimConfig::timing_only(p)).unwrap();
+            let mut state = compiled.network.init_state().unwrap();
+            let report = compiled.run_clip(&frames, &mut state).unwrap();
+            let uj = report.total.total_energy_pj(Corner::LOW) / 1e6;
+            let tw = report.total.tops_per_watt(Corner::LOW);
+            println!("{:>7} {:>10.4} {:>14.2} {:>12.2}", format!("{wb}b"), m, uj, tw);
+            common::emit(&format!("fig16_{task}_metric"), wb as f64, m);
+            common::emit(&format!("fig16_{task}_uj"), wb as f64, uj);
+        }
+    }
+    println!("\npaper: lower precision trades task metric for proportionally lower energy");
+}

@@ -1,0 +1,47 @@
+//! Fig. 17 — peak performance (GOPS) and energy efficiency (TOPS/W) as
+//! a function of input sparsity and weight precision.
+//!
+//! Paper claims: ~2x throughput moving 8-bit -> 4-bit at equal
+//! sparsity, and ~2x moving 80 % -> 95 % sparsity at 4-bit.
+
+mod common;
+
+use spidr::energy::calibration::measure;
+use spidr::energy::model::Corner;
+use spidr::quant::{Precision, ALL_PRECISIONS};
+
+fn main() {
+    common::header("Fig. 17", "GOPS & TOPS/W vs sparsity x precision (50 MHz / 0.9 V)");
+    let sparsities = [0.60, 0.70, 0.80, 0.85, 0.90, 0.95];
+
+    println!("{:>10} | {:>8} {:>8} {:>8} | {:>8} {:>8} {:>8}",
+             "sparsity", "4b GOPS", "6b GOPS", "8b GOPS",
+             "4b T/W", "6b T/W", "8b T/W");
+    let mut table = Vec::new();
+    for &s in &sparsities {
+        let pts: Vec<_> = ALL_PRECISIONS
+            .iter()
+            .map(|&p| measure(p, Corner::LOW, s))
+            .collect();
+        println!(
+            "{:>9.0}% | {:>8.2} {:>8.2} {:>8.2} | {:>8.2} {:>8.2} {:>8.2}",
+            s * 100.0,
+            pts[0].gops, pts[1].gops, pts[2].gops,
+            pts[0].tops_per_watt, pts[1].tops_per_watt, pts[2].tops_per_watt
+        );
+        for pt in &pts {
+            common::emit(&format!("fig17_gops_w{}", pt.weight_bits), s, pt.gops);
+            common::emit(&format!("fig17_topsw_w{}", pt.weight_bits), s, pt.tops_per_watt);
+        }
+        table.push(pts);
+    }
+
+    let p4_95 = &table[5][0];
+    let p8_95 = &table[5][2];
+    let p4_80 = &table[2][0];
+    println!("\n8b->4b @95 %: {:.2}x throughput (paper ~2x)", p4_95.gops / p8_95.gops);
+    println!("80->95 % @4b: {:.2}x throughput (paper ~2x)", p4_95.gops / p4_80.gops);
+
+    let hi4 = measure(Precision::W4V7, Corner::HIGH, 0.95);
+    println!("peak: {:.2} GOPS @150 MHz/1 V, 4-bit, 95 % (paper: 73.59)", hi4.gops);
+}

@@ -1,0 +1,62 @@
+//! Fig. 4 — overhead of AER input representation vs raw bitmaps as a
+//! function of input sparsity, for the example spiking-conv layer
+//! input (2 x 128 x 128 → 15-bit addresses + 4-bit protocol overhead).
+//!
+//! The paper's claim: AER pays off only above ~94.7 % sparsity; below
+//! that the explicit addresses cost more than the raw bitmap. Both the
+//! bit-traffic crossover and the input-path energy crossover are
+//! reported.
+
+mod common;
+
+use spidr::baselines::{aer_input_cost, raw_input_cost};
+use spidr::energy::model::EnergyParams;
+
+fn main() {
+    common::header(
+        "Fig. 4",
+        "AER vs raw-bitmap input cost across sparsity (2x128x128 layer input)",
+    );
+    let e = EnergyParams::default();
+    let sparsities = [
+        0.50, 0.60, 0.70, 0.80, 0.85, 0.90, 0.92, 0.94, 0.945, 0.947, 0.95,
+        0.96, 0.97, 0.98, 0.99, 0.995,
+    ];
+    println!(
+        "{:>9} {:>12} {:>12} {:>9} | {:>12} {:>12} {:>9}",
+        "sparsity", "AER kbit", "raw kbit", "ratio", "AER nJ", "raw nJ", "ratio"
+    );
+    let mut bit_crossover = None;
+    let mut prev_ratio = f64::INFINITY;
+    for &s in &sparsities {
+        let plane = common::random_plane(2, 128, 128, 1.0 - s, 0x41);
+        let a = aer_input_cost(&plane, &e);
+        let r = raw_input_cost(&plane, &e);
+        let bit_ratio = a.bits as f64 / r.bits as f64;
+        let e_ratio = a.energy_pj / r.energy_pj;
+        println!(
+            "{:>8.1}% {:>12.1} {:>12.1} {:>9.3} | {:>12.2} {:>12.2} {:>9.3}",
+            s * 100.0,
+            a.bits as f64 / 1e3,
+            r.bits as f64 / 1e3,
+            bit_ratio,
+            a.energy_pj / 1e3,
+            r.energy_pj / 1e3,
+            e_ratio
+        );
+        common::emit("fig4_bits_ratio", s, bit_ratio);
+        common::emit("fig4_energy_ratio", s, e_ratio);
+        if prev_ratio > 1.0 && bit_ratio <= 1.0 && bit_crossover.is_none() {
+            bit_crossover = Some(s);
+        }
+        prev_ratio = bit_ratio;
+    }
+    println!();
+    match bit_crossover {
+        Some(s) => println!(
+            "bit-traffic crossover at ~{:.1} % sparsity (paper: 94.7 %)",
+            s * 100.0
+        ),
+        None => println!("no crossover found in sweep range"),
+    }
+}

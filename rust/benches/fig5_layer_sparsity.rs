@@ -1,0 +1,167 @@
+//! Fig. 5 — variation in input sparsity across layers of the two
+//! Table-II networks (gesture recognition and optical flow).
+//!
+//! The paper's observation: the flow net's second layer sees 60–75 %
+//! sparsity (AER-hostile) while later layers range 75–99 % — the
+//! motivation for sparsity handling that works across the whole range.
+//!
+//! Runs the reference executor over synthetic clips (trained weight
+//! bundles when artifacts exist, synthetic weights otherwise) and
+//! prints per-layer min/mean/max input sparsity.
+
+mod common;
+
+use spidr::dvs::flow_scene::{make_flow_scene, FlowSceneConfig};
+use spidr::dvs::gesture::{make_gesture, GestureConfig};
+use spidr::quant::Precision;
+use spidr::snn::layer::NeuronConfig;
+use spidr::snn::network::{flow_network, gesture_network, Network, NetworkBuilder};
+use spidr::snn::spikes::{SparsityStats, SpikePlane};
+use spidr::snn::tensor::Mat;
+use spidr::snn::WeightBundle;
+
+/// Synthetic fallback networks when no trained artifacts exist.
+fn synthetic_flow(h: usize, w: usize) -> Network {
+    let mut rng = spidr::prop::SplitMix64::new(0xF10F);
+    let mut b = NetworkBuilder::new("flow-syn", Precision::W4V7, 10, (2, h, w));
+    let chans = [2usize, 32, 32, 32, 32, 32, 32, 32, 2];
+    for i in 0..8 {
+        let f = chans[i] * 9;
+        let mut m = Mat::zeros(f, chans[i + 1]);
+        for r in 0..f {
+            for c in 0..chans[i + 1] {
+                m.set(r, c, (rng.below(15) as i32) - 7);
+            }
+        }
+        let neuron = NeuronConfig { theta: 24, leak: 2, leaky: true, ..Default::default() };
+        b = b.conv3x3(chans[i + 1], m, neuron, i == 7).unwrap();
+    }
+    b.build().unwrap()
+}
+
+fn synthetic_gesture(h: usize, w: usize) -> Network {
+    let mut rng = spidr::prop::SplitMix64::new(0x6E5);
+    let mut b = NetworkBuilder::new("gesture-syn", Precision::W4V7, 10, (2, h, w));
+    let chans = [2usize, 16, 16, 16, 16, 16];
+    for i in 0..5 {
+        let f = chans[i] * 9;
+        let mut m = Mat::zeros(f, chans[i + 1]);
+        for r in 0..f {
+            for c in 0..chans[i + 1] {
+                m.set(r, c, (rng.below(15) as i32) - 7);
+            }
+        }
+        let neuron = NeuronConfig { theta: 20, ..Default::default() };
+        b = b.conv3x3(chans[i + 1], m, neuron, false).unwrap();
+        if i == 2 || i == 4 {
+            b = b.pool(2, 2);
+        }
+    }
+    b = b.pool(8, 8);
+    let (c, hh, ww) = b.shape();
+    let f = c * hh * ww;
+    let mut m = Mat::zeros(f, 11);
+    for r in 0..f {
+        for cc in 0..11 {
+            m.set(r, cc, (rng.below(15) as i32) - 7);
+        }
+    }
+    b.fc(11, m, NeuronConfig::default(), true).unwrap().build().unwrap()
+}
+
+fn load_or_synthetic(task: &str, h: usize, w: usize) -> (Network, &'static str) {
+    let path = format!("artifacts/weights/{task}_w4.swb");
+    if let Ok(bundle) = WeightBundle::load(&path) {
+        let net = match task {
+            "gesture" => gesture_network(&bundle, Precision::W4V7, h, w, 10),
+            _ => flow_network(&bundle, Precision::W4V7, h, w, 10),
+        };
+        if let Ok(n) = net {
+            return (n, "trained");
+        }
+    }
+    match task {
+        "gesture" => (synthetic_gesture(h, w), "synthetic"),
+        _ => (synthetic_flow(h, w), "synthetic"),
+    }
+}
+
+fn report(name: &str, net: &Network, clips: &[Vec<SpikePlane>]) {
+    let n_layers = net.stateful_layers().count();
+    let mut stats: Vec<SparsityStats> = (0..n_layers).map(|_| SparsityStats::new()).collect();
+    for frames in clips {
+        let mut state = net.init_state().unwrap();
+        for f in frames {
+            let t = net.step(f, &mut state).unwrap();
+            for (i, (&s, &c)) in t
+                .layer_input_spikes
+                .iter()
+                .zip(&t.layer_input_cells)
+                .enumerate()
+            {
+                stats[i].record_counts(s, c);
+            }
+        }
+    }
+    println!("\n{name}:");
+    println!("{:>7} {:>9} {:>9} {:>9}", "layer", "min%", "mean%", "max%");
+    for (i, s) in stats.iter().enumerate() {
+        println!(
+            "{:>7} {:>9.1} {:>9.1} {:>9.1}",
+            format!("L{}", i + 1),
+            s.min_sparsity() * 100.0,
+            s.mean_sparsity() * 100.0,
+            s.max_sparsity() * 100.0
+        );
+        common::emit(&format!("fig5_{name}_mean"), (i + 1) as f64, s.mean_sparsity());
+        common::emit(&format!("fig5_{name}_min"), (i + 1) as f64, s.min_sparsity());
+        common::emit(&format!("fig5_{name}_max"), (i + 1) as f64, s.max_sparsity());
+    }
+}
+
+fn main() {
+    common::header("Fig. 5", "input sparsity across network layers");
+    let full = std::env::args().any(|a| a == "--full");
+    // Reduced geometry by default (weights are resolution-independent);
+    // --full uses the Table-II deploy sizes (288x384 / 64x64).
+    let (fh, fw) = if full { (288, 384) } else { (96, 128) };
+    let (gh, gw) = (64, 64);
+
+    let (flow_net, src_f) = load_or_synthetic("flow", fh, fw);
+    let flow_clips: Vec<_> = (0..3)
+        .map(|i| {
+            make_flow_scene(
+                40 + i,
+                &FlowSceneConfig {
+                    height: fh,
+                    width: fw,
+                    timesteps: 10,
+                    num_blobs: 24 * (fh * fw) / (48 * 64),
+                    noise_rate: 0.005,
+                },
+            )
+            .frames
+        })
+        .collect();
+    report(&format!("optical-flow ({src_f}, {fh}x{fw})"), &flow_net, &flow_clips);
+
+    let (gest_net, src_g) = load_or_synthetic("gesture", gh, gw);
+    let gest_clips: Vec<_> = (0..5)
+        .map(|i| {
+            make_gesture(
+                (i % 11) as usize,
+                70 + i,
+                &GestureConfig {
+                    height: gh,
+                    width: gw,
+                    timesteps: 10,
+                    noise_rate: 0.008,
+                },
+            )
+            .frames
+        })
+        .collect();
+    report(&format!("gesture ({src_g}, {gh}x{gw})"), &gest_net, &gest_clips);
+
+    println!("\npaper: flow L2 sparsity 60-75 %; L3 75-99 %; gesture 75-99 %");
+}

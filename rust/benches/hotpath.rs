@@ -1,0 +1,105 @@
+//! Hot-path microbenchmarks (the §Perf harness): wall-clock throughput
+//! of the simulator's inner loops, used to drive the optimization pass
+//! recorded in EXPERIMENTS.md §Perf.
+
+mod common;
+
+use std::time::Instant;
+
+use spidr::quant::{Overflow, Precision};
+use spidr::sim::compute_macro::ComputeMacro;
+use spidr::sim::config::SimConfig;
+use spidr::sim::core::SpidrCore;
+use spidr::sim::ifspad::IfSpad;
+use spidr::sim::s2a::{run_tile, S2aOptions};
+use spidr::snn::layer::{Layer, NeuronConfig};
+use spidr::snn::tensor::Mat;
+
+fn bench_s2a(density: f64) -> (f64, u64) {
+    let mut rng = spidr::prop::SplitMix64::new(0xBE);
+    let mut spad = IfSpad::new();
+    spad.clear(128, 16);
+    for y in 0..128 {
+        for x in 0..16 {
+            if rng.chance(density) {
+                spad.write(y, x, true);
+            }
+        }
+    }
+    let ready: Vec<u64> = (1..=128).collect();
+    let mut w = Mat::zeros(128, 12);
+    for f in 0..128 {
+        for k in 0..12 {
+            w.set(f, k, ((f * k) % 15) as i32 - 7);
+        }
+    }
+    let mut cm = ComputeMacro::new(w, 7, Overflow::Wrap, true);
+    let opts = S2aOptions::default();
+    let iters = 2000;
+    let t0 = Instant::now();
+    let mut ops = 0;
+    for _ in 0..iters {
+        cm.reset_vmems();
+        let st = run_tile(&spad, &ready, &mut cm, &opts);
+        ops += st.macro_ops;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    (ops as f64 / dt, ops / iters)
+}
+
+fn bench_layer(functional: bool) -> f64 {
+    let layer = Layer::conv(
+        (32, 24, 32),
+        32,
+        3,
+        3,
+        1,
+        1,
+        Mat::zeros(288, 32),
+        NeuronConfig { theta: 16, leak: 2, leaky: true, ..Default::default() },
+        false,
+    )
+    .unwrap();
+    let frames = common::random_clip(32, 24, 32, 4, 0.25, 0x99);
+    let mut cfg = SimConfig::timing_only(Precision::W4V7);
+    cfg.functional = functional;
+    let core = SpidrCore::new(cfg);
+    let iters = 3;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let mut state = Mat::zeros(24 * 32, 32);
+        core.run_layer(&layer, &frames, &mut state).unwrap();
+    }
+    let dt = t0.elapsed().as_secs_f64() / iters as f64;
+    let synops = layer.dense_synops() * 4;
+    synops as f64 / dt
+}
+
+fn main() {
+    common::header("hotpath", "simulator wall-clock throughput (perf pass harness)");
+
+    for &d in &[0.05f64, 0.25] {
+        let (ops_s, ops_tile) = bench_s2a(d);
+        println!(
+            "S2A+macro tile @{:>4.0}% density: {:>10.2} M macro-ops/s wall ({} ops/tile)",
+            d * 100.0,
+            ops_s / 1e6,
+            ops_tile
+        );
+        common::emit("hotpath_s2a_mops", d, ops_s / 1e6);
+    }
+
+    for functional in [true, false] {
+        let ops_s = bench_layer(functional);
+        println!(
+            "run_layer (flow-like conv, {} ): {:>8.2} M dense-synops/s wall",
+            if functional { "functional " } else { "timing-only" },
+            ops_s / 1e6
+        );
+        common::emit(
+            if functional { "hotpath_layer_func" } else { "hotpath_layer_timing" },
+            0.0,
+            ops_s / 1e6,
+        );
+    }
+}

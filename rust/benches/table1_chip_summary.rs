@@ -1,0 +1,54 @@
+//! Table I — chip summary: power, energy efficiency (TOPS/W) and
+//! throughput (GOPS) at both corners, all precisions, 95 % sparsity.
+//!
+//! Regenerates the measurement rows of the paper's Table I from the
+//! calibrated simulator and prints them side by side with the paper's
+//! silicon numbers.
+
+mod common;
+
+use spidr::energy::calibration::{measure, table1_targets};
+use spidr::energy::model::Corner;
+use spidr::quant::Precision;
+
+fn main() {
+    common::header("Table I", "chip summary @ 95 % input sparsity");
+    let targets = table1_targets();
+
+    println!(
+        "{:<6} {:<14} {:>10} {:>10} {:>9} | {:>10} {:>10}",
+        "prec", "corner", "GOPS", "TOPS/W", "mW", "paperGOPS", "paperT/W"
+    );
+    for t in &targets {
+        let p = Precision::from_weight_bits(t.weight_bits).unwrap();
+        for (cname, corner, pg, pt) in [
+            ("50MHz/0.9V", Corner::LOW, t.gops_low, t.tops_w_low),
+            ("150MHz/1.0V", Corner::HIGH, t.gops_high, t.tops_w_high),
+        ] {
+            let (op, secs) = common::timed(|| measure(p, corner, 0.95));
+            println!(
+                "{:<6} {:<14} {:>10.2} {:>10.2} {:>9.2} | {:>10.2} {:>10.2}   ({secs:.2}s)",
+                format!("{}b", t.weight_bits),
+                cname,
+                op.gops,
+                op.tops_per_watt,
+                op.power_mw,
+                pg,
+                pt
+            );
+            common::emit(
+                &format!("table1_gops_w{}_{}", t.weight_bits, corner.freq_mhz),
+                op.sparsity,
+                op.gops,
+            );
+            common::emit(
+                &format!("table1_topsw_w{}_{}", t.weight_bits, corner.freq_mhz),
+                op.sparsity,
+                op.tops_per_watt,
+            );
+        }
+    }
+    println!();
+    println!("paper: 4.9 mW @50MHz/0.9V and 18 mW @150MHz/1V (Table I)");
+    println!("headline: up to 5 TOPS/W at 95 % sparsity, 4-bit weights");
+}

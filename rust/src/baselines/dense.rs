@@ -1,0 +1,70 @@
+//! Dense (no zero-skipping) execution baseline.
+//!
+//! Convenience wrapper that runs a layer through the cycle simulator
+//! with zero-skipping disabled — every IFspad position is processed
+//! regardless of spikes — quantifying what the S2A's sparse path saves
+//! (Figs. 14 and 17 ablations).
+
+use crate::error::Result;
+use crate::sim::core::{LayerStats, SpidrCore};
+use crate::sim::SimConfig;
+use crate::snn::layer::Layer;
+use crate::snn::spikes::SpikePlane;
+use crate::snn::tensor::Mat;
+
+/// Run one layer densely (zero-skipping off) and return its stats.
+pub fn dense_layer_stats(
+    layer: &Layer,
+    inputs: &[SpikePlane],
+    cfg: &SimConfig,
+) -> Result<LayerStats> {
+    let mut dense_cfg = *cfg;
+    dense_cfg.zero_skipping = false;
+    let core = SpidrCore::new(dense_cfg);
+    let (m, k) = layer.vmem_shape()?;
+    let mut state = Mat::zeros(m, k);
+    let (_, stats) = core.run_layer(layer, inputs, &mut state)?;
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::SplitMix64;
+    use crate::quant::Precision;
+    use crate::snn::layer::NeuronConfig;
+
+    #[test]
+    fn dense_ignores_sparsity() {
+        let mut w = Mat::zeros(9, 4);
+        for f in 0..9 {
+            w.set(f, 0, 1);
+        }
+        let layer = Layer::conv((1, 6, 6), 4, 3, 3, 1, 1, w,
+                                NeuronConfig::default(), false).unwrap();
+        let cfg = SimConfig::timing_only(Precision::W4V7);
+
+        let mut rng = SplitMix64::new(4);
+        let mut frames = Vec::new();
+        for _ in 0..2 {
+            let mut p = SpikePlane::zeros(1, 6, 6);
+            for i in 0..p.len() {
+                if rng.chance(0.02) {
+                    p.as_mut_slice()[i] = 1;
+                }
+            }
+            frames.push(p);
+        }
+        let dense = dense_layer_stats(&layer, &frames, &cfg).unwrap();
+
+        let mut denser_frames = frames.clone();
+        for f in &mut denser_frames {
+            for v in f.as_mut_slice().iter_mut() {
+                *v = 1;
+            }
+        }
+        let dense_full = dense_layer_stats(&layer, &denser_frames, &cfg).unwrap();
+        // dense-mode macro op count does not depend on spike density
+        assert_eq!(dense.run.macro_ops, dense_full.run.macro_ops);
+    }
+}

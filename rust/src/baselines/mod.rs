@@ -1,0 +1,9 @@
+//! Baseline input-handling and processing schemes the paper compares
+//! against: AER event-driven input (Fig. 4) and dense, non-zero-
+//! skipping execution (the sparsity ablation).
+
+pub mod aer_pipeline;
+pub mod dense;
+
+pub use aer_pipeline::{aer_input_cost, raw_input_cost, InputCost};
+pub use dense::dense_layer_stats;

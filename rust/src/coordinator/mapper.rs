@@ -1,0 +1,146 @@
+//! Layer mapper: decides how each layer occupies the core (paper
+//! §II-E, Fig. 12) and reports the mapping for planning and benches.
+
+use crate::error::{Error, Result};
+use crate::quant::Precision;
+use crate::sim::config::{OperatingMode, IFSPAD_COLS, IFSPAD_ROWS};
+use crate::snn::layer::{Layer, LayerKind};
+
+/// How one layer maps onto the SpiDR core.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerMapping {
+    /// Selected operating mode.
+    pub mode: OperatingMode,
+    /// Fan-in rows per chained compute unit.
+    pub rows_per_cu: Vec<usize>,
+    /// Output-channel groups of `48/B_w` neurons.
+    pub channel_groups: usize,
+    /// Weight-reconfiguration passes (input re-streams).
+    pub passes: usize,
+    /// Output-pixel tiles of 16.
+    pub tiles: usize,
+    /// Fraction of weight-memory rows actually used (utilization).
+    pub row_utilization: f64,
+}
+
+/// The mapper.
+#[derive(Debug, Clone, Copy)]
+pub struct Mapper {
+    /// Precision in effect (determines neurons/row).
+    pub precision: Precision,
+}
+
+impl Mapper {
+    /// New mapper at a precision.
+    pub fn new(precision: Precision) -> Self {
+        Mapper { precision }
+    }
+
+    /// Map one stateful layer.
+    pub fn map_layer(&self, layer: &Layer) -> Result<LayerMapping> {
+        if layer.kind == LayerKind::Pool {
+            return Err(Error::mapping("pool layers run in the loader, not the core"));
+        }
+        let fan_in = layer.fan_in();
+        let mode = if fan_in <= OperatingMode::Mode1.max_fan_in() {
+            OperatingMode::Mode1
+        } else if fan_in <= OperatingMode::Mode2.max_fan_in() {
+            OperatingMode::Mode2
+        } else {
+            return Err(Error::mapping(format!(
+                "layer fan-in {fan_in} exceeds Mode-2 capacity {}",
+                OperatingMode::Mode2.max_fan_in()
+            )));
+        };
+        let chain = mode.cus_per_pipeline();
+        let base = fan_in / chain;
+        let extra = fan_in % chain;
+        let rows_per_cu: Vec<usize> = (0..chain)
+            .map(|i| base + usize::from(i < extra))
+            .collect();
+        let npr = self.precision.neurons_per_row();
+        let k = layer.out_shape.0;
+        let channel_groups = k.div_ceil(npr);
+        let passes = channel_groups.div_ceil(mode.pipelines());
+        let (m, _) = layer.vmem_shape()?;
+        let tiles = m.div_ceil(IFSPAD_COLS);
+        let used_rows: usize = rows_per_cu.iter().sum();
+        let row_utilization =
+            used_rows as f64 / (chain * IFSPAD_ROWS) as f64;
+        Ok(LayerMapping {
+            mode,
+            rows_per_cu,
+            channel_groups,
+            passes,
+            tiles,
+            row_utilization,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::layer::NeuronConfig;
+    use crate::snn::tensor::Mat;
+
+    fn conv(in_ch: usize, out_ch: usize, h: usize, w: usize) -> Layer {
+        Layer::conv(
+            (in_ch, h, w),
+            out_ch,
+            3,
+            3,
+            1,
+            1,
+            Mat::zeros(in_ch * 9, out_ch),
+            NeuronConfig::default(),
+            false,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn flow_layer_maps_to_mode1() {
+        // Conv(32,32): fan-in 288 <= 384 -> mode 1, 96 rows/CU.
+        let m = Mapper::new(Precision::W4V7)
+            .map_layer(&conv(32, 32, 288, 384))
+            .unwrap();
+        assert_eq!(m.mode, OperatingMode::Mode1);
+        assert_eq!(m.rows_per_cu, vec![96, 96, 96]);
+        assert_eq!(m.channel_groups, 3); // 32 channels / 12 per group
+        assert_eq!(m.passes, 1);
+        assert_eq!(m.tiles, (288 * 384usize).div_ceil(16));
+    }
+
+    #[test]
+    fn large_fan_in_needs_mode2() {
+        let m = Mapper::new(Precision::W4V7)
+            .map_layer(&conv(48, 12, 8, 8))
+            .unwrap();
+        assert_eq!(m.mode, OperatingMode::Mode2);
+        assert_eq!(m.rows_per_cu.len(), 9);
+        assert_eq!(m.rows_per_cu.iter().sum::<usize>(), 432);
+    }
+
+    #[test]
+    fn precision_changes_groups() {
+        let l = conv(16, 16, 16, 16);
+        let m4 = Mapper::new(Precision::W4V7).map_layer(&l).unwrap();
+        let m8 = Mapper::new(Precision::W8V15).map_layer(&l).unwrap();
+        assert_eq!(m4.channel_groups, 2); // 16/12
+        assert_eq!(m8.channel_groups, 3); // 16/6
+        assert!(m8.passes >= m4.passes);
+    }
+
+    #[test]
+    fn oversized_rejected() {
+        let l = conv(129, 4, 4, 4); // fan-in 1161 > 1152
+        assert!(Mapper::new(Precision::W4V7).map_layer(&l).is_err());
+    }
+
+    #[test]
+    fn pool_rejected() {
+        let p = Layer::pool((4, 8, 8), 2, 2);
+        assert!(Mapper::new(Precision::W4V7).map_layer(&p).is_err());
+    }
+}

@@ -1,0 +1,84 @@
+//! Lightweight latency/throughput metrics for the streaming server.
+
+use std::time::Duration;
+
+/// Online metrics aggregator.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    latencies_us: Vec<u64>,
+    /// Clips processed.
+    pub clips: u64,
+    /// Frames processed.
+    pub frames: u64,
+    /// Total busy wall time.
+    pub busy: Duration,
+}
+
+impl Metrics {
+    /// Empty metrics.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one completed clip.
+    pub fn record_clip(&mut self, latency: Duration, frames: u64) {
+        self.latencies_us.push(latency.as_micros() as u64);
+        self.clips += 1;
+        self.frames += frames;
+        self.busy += latency;
+    }
+
+    /// Mean latency in microseconds.
+    pub fn mean_latency_us(&self) -> f64 {
+        if self.latencies_us.is_empty() {
+            return 0.0;
+        }
+        self.latencies_us.iter().sum::<u64>() as f64 / self.latencies_us.len() as f64
+    }
+
+    /// Latency percentile (0–100) in microseconds.
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        if self.latencies_us.is_empty() {
+            return 0;
+        }
+        let mut v = self.latencies_us.clone();
+        v.sort_unstable();
+        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+        v[idx.min(v.len() - 1)]
+    }
+
+    /// Throughput in clips/second over the busy time.
+    pub fn clips_per_second(&self) -> f64 {
+        let s = self.busy.as_secs_f64();
+        if s == 0.0 {
+            return 0.0;
+        }
+        self.clips as f64 / s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates() {
+        let mut m = Metrics::new();
+        m.record_clip(Duration::from_micros(100), 10);
+        m.record_clip(Duration::from_micros(300), 10);
+        assert_eq!(m.clips, 2);
+        assert_eq!(m.frames, 20);
+        assert!((m.mean_latency_us() - 200.0).abs() < 1e-9);
+        assert_eq!(m.percentile_us(0.0), 100);
+        assert_eq!(m.percentile_us(100.0), 300);
+        assert!(m.clips_per_second() > 0.0);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.mean_latency_us(), 0.0);
+        assert_eq!(m.percentile_us(50.0), 0);
+        assert_eq!(m.clips_per_second(), 0.0);
+    }
+}

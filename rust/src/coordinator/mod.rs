@@ -1,0 +1,17 @@
+//! L3 coordinator: the request path. Layer mapping (paper Fig. 12),
+//! network compilation onto the simulated core, multi-core channel
+//! scheduling, streaming event ingestion with backpressure, and
+//! metrics. Python never runs here — the functional math comes from
+//! either the cycle simulator or the AOT PJRT artifacts.
+
+pub mod compiler;
+pub mod mapper;
+pub mod metrics;
+pub mod scheduler;
+pub mod server;
+
+pub use compiler::{ClipReport, CompiledNetwork, NetworkCompiler};
+pub use mapper::{LayerMapping, Mapper};
+pub use metrics::Metrics;
+pub use scheduler::{MultiCoreScheduler, MultiCoreStats};
+pub use server::{Engine, InferenceServer, Response, ServerConfig};

@@ -1,0 +1,125 @@
+//! Address-event representation (AER) codec.
+//!
+//! The paper's Fig. 4 studies the cost of AER-encoding layer inputs:
+//! each event carries an explicit address of `ceil(log2(C·H·W))` bits,
+//! so AER beats a raw bitmap only above a sparsity crossover
+//! (~94.7 % for the example layer). This module implements the codec
+//! and the bit-cost accounting used by the Fig. 4 bench and the AER
+//! baseline pipeline.
+
+use crate::snn::spikes::SpikePlane;
+
+/// Bits per AER event address for a `(c, h, w)` layer input.
+pub fn aer_address_bits(c: usize, h: usize, w: usize) -> u32 {
+    let cells = (c * h * w) as u64;
+    if cells <= 1 {
+        return 1;
+    }
+    64 - (cells - 1).leading_zeros()
+}
+
+/// Fixed per-event overhead bits (timestamp share + handshake), the
+/// "protocol tax" of asynchronous AER links.
+pub const AER_BITS_PER_EVENT: u32 = 4;
+
+/// An AER-encoded spike plane: a list of flat cell addresses.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AerPacket {
+    /// Flat addresses (channel-major, same layout as `SpikePlane`).
+    pub addresses: Vec<u32>,
+    /// Source plane shape.
+    pub shape: (usize, usize, usize),
+}
+
+impl AerPacket {
+    /// Total encoded size in bits (address + protocol overhead per event).
+    pub fn size_bits(&self) -> u64 {
+        let (c, h, w) = self.shape;
+        self.addresses.len() as u64
+            * (aer_address_bits(c, h, w) + AER_BITS_PER_EVENT) as u64
+    }
+
+    /// Raw-bitmap size of the same plane in bits.
+    pub fn bitmap_bits(&self) -> u64 {
+        let (c, h, w) = self.shape;
+        (c * h * w) as u64
+    }
+}
+
+/// Encode a spike plane to AER.
+pub fn aer_encode(plane: &SpikePlane) -> AerPacket {
+    let mut addresses = Vec::new();
+    for (i, &v) in plane.as_slice().iter().enumerate() {
+        if v != 0 {
+            addresses.push(i as u32);
+        }
+    }
+    AerPacket {
+        addresses,
+        shape: plane.shape(),
+    }
+}
+
+/// Decode an AER packet back to a spike plane.
+pub fn aer_decode(packet: &AerPacket) -> SpikePlane {
+    let (c, h, w) = packet.shape;
+    let mut plane = SpikePlane::zeros(c, h, w);
+    let buf = plane.as_mut_slice();
+    for &a in &packet.addresses {
+        buf[a as usize] = 1;
+    }
+    plane
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::check;
+
+    #[test]
+    fn address_bits() {
+        assert_eq!(aer_address_bits(1, 1, 2), 1);
+        assert_eq!(aer_address_bits(2, 16, 16), 9);
+        // paper-scale layer: 32ch x 288x384 = 3.5M cells -> 22 bits
+        assert_eq!(aer_address_bits(32, 288, 384), 22);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut p = SpikePlane::zeros(2, 4, 4);
+        p.set(0, 1, 2, 1);
+        p.set(1, 3, 3, 1);
+        let enc = aer_encode(&p);
+        assert_eq!(enc.addresses.len(), 2);
+        assert_eq!(aer_decode(&enc), p);
+    }
+
+    #[test]
+    fn prop_roundtrip_random_planes() {
+        check("aer_roundtrip", 50, |g| {
+            let (c, h, w) = (1 + g.index(3), 1 + g.index(8), 1 + g.index(8));
+            let mut p = SpikePlane::zeros(c, h, w);
+            let density = g.f64();
+            for i in 0..p.len() {
+                if g.chance(density) {
+                    p.as_mut_slice()[i] = 1;
+                }
+            }
+            aer_decode(&aer_encode(&p)) == p
+        });
+    }
+
+    #[test]
+    fn crossover_exists() {
+        // dense plane: AER bigger than bitmap; very sparse: smaller.
+        let mut dense = SpikePlane::zeros(2, 16, 16);
+        dense.as_mut_slice().fill(1);
+        let e = aer_encode(&dense);
+        assert!(e.size_bits() > e.bitmap_bits());
+
+        let mut sparse = SpikePlane::zeros(2, 16, 16);
+        sparse.set(0, 0, 0, 1);
+        let e = aer_encode(&sparse);
+        assert!(e.size_bits() < e.bitmap_bits());
+    }
+}

@@ -1,0 +1,114 @@
+//! Event-stream to spike-frame binning.
+//!
+//! A DVS front end delivers an asynchronous event stream; SpiDR's
+//! IFmem stores raw (uncompressed) binary frames per timestep. This
+//! module bins timestamped events into fixed-width timestep frames —
+//! the ingestion step of the streaming coordinator.
+
+use crate::dvs::event::Event;
+use crate::snn::spikes::SpikePlane;
+
+/// Bin events into `timesteps` frames of `(2, height, width)`.
+///
+/// Events with `t_us >= timesteps * bin_us` are dropped (they belong
+/// to the next window); multiple events on one (pixel, polarity) in a
+/// bin collapse to a single spike, like a real binary frame buffer.
+pub fn bin_events(
+    events: &[Event],
+    height: usize,
+    width: usize,
+    timesteps: usize,
+    bin_us: u32,
+) -> Vec<SpikePlane> {
+    let mut frames: Vec<SpikePlane> = (0..timesteps)
+        .map(|_| SpikePlane::zeros(2, height, width))
+        .collect();
+    for e in events {
+        let t = (e.t_us / bin_us) as usize;
+        if t >= timesteps || e.y as usize >= height || e.x as usize >= width {
+            continue;
+        }
+        frames[t].set(e.polarity.channel(), e.y as usize, e.x as usize, 1);
+    }
+    frames
+}
+
+/// Flatten spike frames back into a sorted event stream (one event per
+/// set cell, timestamped at the bin start) — used by tests and the AER
+/// baseline.
+pub fn unbin_frames(frames: &[SpikePlane], bin_us: u32) -> Vec<Event> {
+    use crate::dvs::event::Polarity;
+    let mut events = Vec::new();
+    for (t, f) in frames.iter().enumerate() {
+        for c in 0..f.c {
+            for y in 0..f.h {
+                for x in 0..f.w {
+                    if f.get(c, y, x) != 0 {
+                        events.push(Event {
+                            y: y as u16,
+                            x: x as u16,
+                            polarity: Polarity::from_channel(c),
+                            t_us: t as u32 * bin_us,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    events
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dvs::event::Polarity;
+
+    #[test]
+    fn bins_by_timestamp() {
+        let events = [
+            Event { y: 1, x: 2, polarity: Polarity::On, t_us: 0 },
+            Event { y: 1, x: 2, polarity: Polarity::Off, t_us: 1500 },
+            Event { y: 0, x: 0, polarity: Polarity::On, t_us: 999 },
+        ];
+        let frames = bin_events(&events, 4, 4, 2, 1000);
+        assert_eq!(frames[0].get(0, 1, 2), 1);
+        assert_eq!(frames[0].get(0, 0, 0), 1);
+        assert_eq!(frames[1].get(1, 1, 2), 1);
+        assert_eq!(frames[1].get(0, 1, 2), 0);
+    }
+
+    #[test]
+    fn duplicate_events_collapse() {
+        let events = [
+            Event { y: 0, x: 0, polarity: Polarity::On, t_us: 10 },
+            Event { y: 0, x: 0, polarity: Polarity::On, t_us: 20 },
+        ];
+        let frames = bin_events(&events, 2, 2, 1, 1000);
+        assert_eq!(frames[0].count_spikes(), 1);
+    }
+
+    #[test]
+    fn out_of_window_and_bounds_dropped() {
+        let events = [
+            Event { y: 0, x: 0, polarity: Polarity::On, t_us: 5000 },
+            Event { y: 9, x: 0, polarity: Polarity::On, t_us: 0 },
+        ];
+        let frames = bin_events(&events, 2, 2, 2, 1000);
+        assert_eq!(frames[0].count_spikes() + frames[1].count_spikes(), 0);
+    }
+
+    #[test]
+    fn roundtrip_through_unbin() {
+        let events = [
+            Event { y: 1, x: 1, polarity: Polarity::On, t_us: 0 },
+            Event { y: 0, x: 1, polarity: Polarity::Off, t_us: 1000 },
+        ];
+        let frames = bin_events(&events, 2, 2, 2, 1000);
+        let back = unbin_frames(&frames, 1000);
+        assert_eq!(back.len(), 2);
+        let frames2 = bin_events(&back, 2, 2, 2, 1000);
+        for (a, b) in frames.iter().zip(&frames2) {
+            assert_eq!(a.as_slice(), b.as_slice());
+        }
+    }
+}

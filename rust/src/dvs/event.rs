@@ -1,0 +1,55 @@
+//! Address-event representation primitives.
+
+/// Event polarity: intensity increase (ON) or decrease (OFF).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Polarity {
+    /// Intensity increased.
+    On,
+    /// Intensity decreased.
+    Off,
+}
+
+impl Polarity {
+    /// Channel index in the 2-channel frame layout (ON = 0, OFF = 1).
+    pub fn channel(self) -> usize {
+        match self {
+            Polarity::On => 0,
+            Polarity::Off => 1,
+        }
+    }
+
+    /// Inverse of [`Polarity::channel`].
+    pub fn from_channel(c: usize) -> Self {
+        if c == 0 {
+            Polarity::On
+        } else {
+            Polarity::Off
+        }
+    }
+}
+
+/// One DVS event: pixel address, polarity, timestamp.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    /// Pixel row.
+    pub y: u16,
+    /// Pixel column.
+    pub x: u16,
+    /// Polarity.
+    pub polarity: Polarity,
+    /// Timestamp in microseconds.
+    pub t_us: u32,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn polarity_channel_roundtrip() {
+        assert_eq!(Polarity::On.channel(), 0);
+        assert_eq!(Polarity::Off.channel(), 1);
+        assert_eq!(Polarity::from_channel(0), Polarity::On);
+        assert_eq!(Polarity::from_channel(1), Polarity::Off);
+    }
+}

@@ -1,0 +1,241 @@
+//! Synthetic driving-scene flow generator (mirror of
+//! `data.make_flow_scene`): a field of Gaussian blobs under rigid
+//! translation plus weak expansion, with analytic dense ground-truth
+//! flow. Drives the *low*-sparsity regime of Fig. 5 (the flow net's
+//! second layer sees 60–75 % sparsity in the paper).
+
+use crate::prop::SplitMix64;
+use crate::snn::spikes::SpikePlane;
+
+/// Generator parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct FlowSceneConfig {
+    /// Frame height.
+    pub height: usize,
+    /// Frame width.
+    pub width: usize,
+    /// Timesteps per clip.
+    pub timesteps: usize,
+    /// Number of Gaussian blobs.
+    pub num_blobs: usize,
+    /// Per-pixel background noise probability.
+    pub noise_rate: f64,
+}
+
+impl Default for FlowSceneConfig {
+    fn default() -> Self {
+        FlowSceneConfig {
+            height: 48,
+            width: 64,
+            timesteps: 10,
+            num_blobs: 24,
+            noise_rate: 0.005,
+        }
+    }
+}
+
+/// One generated clip with dense ground truth.
+#[derive(Debug, Clone)]
+pub struct FlowScene {
+    /// Event frames, one per timestep.
+    pub frames: Vec<SpikePlane>,
+    /// Ground-truth flow `u` (x-displacement / timestep), `h*w` row-major.
+    pub flow_u: Vec<f32>,
+    /// Ground-truth flow `v` (y-displacement / timestep).
+    pub flow_v: Vec<f32>,
+}
+
+struct Blob {
+    by: f64,
+    bx: f64,
+    sigma: f64,
+    amp: f64,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn render(
+    blobs: &[Blob],
+    t: f64,
+    h: usize,
+    w: usize,
+    cy: f64,
+    cx: f64,
+    vx: f64,
+    vy: f64,
+    expand: f64,
+    out: &mut [f64],
+) {
+    out.fill(0.0);
+    let s = 1.0 + expand * t;
+    for b in blobs {
+        let py = cy + (b.by - cy) * s + vy * t;
+        let px = cx + (b.bx - cx) * s + vx * t;
+        let inv2s2 = 1.0 / (2.0 * b.sigma * b.sigma);
+        for y in 0..h {
+            for x in 0..w {
+                let d2 = (y as f64 - py).powi(2) + (x as f64 - px).powi(2);
+                out[y * w + x] += b.amp * (-d2 * inv2s2).exp();
+            }
+        }
+    }
+}
+
+/// Generate one clip (same parameterization as the Python generator).
+pub fn make_flow_scene(seed: u64, cfg: &FlowSceneConfig) -> FlowScene {
+    let (h, w, timesteps) = (cfg.height, cfg.width, cfg.timesteps);
+    let mut rng = SplitMix64::new((seed << 8) ^ 0xF10);
+    let vx = rng.uniform(-1.5, 1.5);
+    let vy = rng.uniform(-1.0, 1.0);
+    let expand = rng.uniform(0.0, 0.008);
+    let cy = h as f64 / 2.0;
+    let cx = w as f64 / 2.0;
+    let blobs: Vec<Blob> = (0..cfg.num_blobs)
+        .map(|_| Blob {
+            by: rng.uniform(-8.0, h as f64 + 8.0),
+            bx: rng.uniform(-8.0, w as f64 + 8.0),
+            sigma: rng.uniform(1.2, 3.0),
+            amp: rng.uniform(0.5, 1.0),
+        })
+        .collect();
+
+    let thresh = 0.08;
+    let mut frames: Vec<SpikePlane> =
+        (0..timesteps).map(|_| SpikePlane::zeros(2, h, w)).collect();
+    let mut prev = vec![0.0f64; h * w];
+    let mut cur = vec![0.0f64; h * w];
+    render(&blobs, -1.0, h, w, cy, cx, vx, vy, expand, &mut prev);
+    for (t, frame) in frames.iter_mut().enumerate() {
+        render(&blobs, t as f64, h, w, cy, cx, vx, vy, expand, &mut cur);
+        for y in 0..h {
+            for x in 0..w {
+                let diff = cur[y * w + x] - prev[y * w + x];
+                if diff > thresh {
+                    frame.set(0, y, x, 1);
+                } else if diff < -thresh {
+                    frame.set(1, y, x, 1);
+                }
+            }
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    for frame in frames.iter_mut() {
+        for c in 0..2 {
+            for y in 0..h {
+                for x in 0..w {
+                    if rng.chance(cfg.noise_rate) {
+                        frame.set(c, y, x, 1);
+                    }
+                }
+            }
+        }
+    }
+
+    let mut flow_u = vec![0.0f32; h * w];
+    let mut flow_v = vec![0.0f32; h * w];
+    for y in 0..h {
+        for x in 0..w {
+            flow_u[y * w + x] = (vx + expand * (x as f64 - cx)) as f32;
+            flow_v[y * w + x] = (vy + expand * (y as f64 - cy)) as f32;
+        }
+    }
+    FlowScene {
+        frames,
+        flow_u,
+        flow_v,
+    }
+}
+
+/// Average endpoint error between a predicted flow field and the clip's
+/// ground truth (`pred_*` are `h*w` row-major, in pixels/timestep).
+pub fn average_endpoint_error(
+    scene: &FlowScene,
+    pred_u: &[f32],
+    pred_v: &[f32],
+) -> f64 {
+    assert_eq!(pred_u.len(), scene.flow_u.len());
+    assert_eq!(pred_v.len(), scene.flow_v.len());
+    let n = pred_u.len() as f64;
+    scene
+        .flow_u
+        .iter()
+        .zip(&scene.flow_v)
+        .zip(pred_u.iter().zip(pred_v))
+        .map(|((gu, gv), (pu, pv))| {
+            (((gu - pu) as f64).powi(2) + ((gv - pv) as f64).powi(2)).sqrt()
+        })
+        .sum::<f64>()
+        / n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> FlowSceneConfig {
+        FlowSceneConfig {
+            height: 24,
+            width: 32,
+            timesteps: 5,
+            num_blobs: 12,
+            noise_rate: 0.005,
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = make_flow_scene(7, &small());
+        let b = make_flow_scene(7, &small());
+        for (fa, fb) in a.frames.iter().zip(&b.frames) {
+            assert_eq!(fa.as_slice(), fb.as_slice());
+        }
+        assert_eq!(a.flow_u, b.flow_u);
+    }
+
+    #[test]
+    fn has_motion_events_and_flow() {
+        let s = make_flow_scene(5, &small());
+        let spikes: u64 = s.frames[1..].iter().map(|f| f.count_spikes()).sum();
+        assert!(spikes > 0);
+        let max_mag = s
+            .flow_u
+            .iter()
+            .zip(&s.flow_v)
+            .map(|(u, v)| (u * u + v * v).sqrt())
+            .fold(0.0f32, f32::max);
+        assert!(max_mag > 0.1);
+    }
+
+    #[test]
+    fn denser_than_gesture() {
+        use crate::dvs::gesture::{make_gesture, GestureConfig};
+        let f = make_flow_scene(2, &FlowSceneConfig {
+            height: 48,
+            width: 64,
+            timesteps: 10,
+            ..Default::default()
+        });
+        let g = make_gesture(1, 2, &GestureConfig {
+            height: 48,
+            width: 64,
+            timesteps: 10,
+            noise_rate: 0.01,
+        });
+        let fd: f64 = f.frames.iter().map(|p| p.density()).sum::<f64>() / 10.0;
+        let gd: f64 = g.frames.iter().map(|p| p.density()).sum::<f64>() / 10.0;
+        assert!(fd > gd, "flow density {fd} <= gesture density {gd}");
+    }
+
+    #[test]
+    fn aee_zero_for_perfect_prediction() {
+        let s = make_flow_scene(3, &small());
+        let aee = average_endpoint_error(&s, &s.flow_u, &s.flow_v);
+        assert!(aee < 1e-9);
+    }
+
+    #[test]
+    fn aee_positive_for_zero_prediction() {
+        let s = make_flow_scene(3, &small());
+        let z = vec![0.0f32; s.flow_u.len()];
+        assert!(average_endpoint_error(&s, &z, &z) > 0.0);
+    }
+}

@@ -1,0 +1,216 @@
+//! Synthetic DVS gesture generator (mirror of `data.make_gesture`).
+//!
+//! Eleven parametric motion classes of a bright "arm" segment orbiting
+//! the image center; events fire on temporal contrast between rendered
+//! sub-frames (ON where intensity rises, OFF where it falls), plus
+//! uniform background noise. The same splitmix64 stream as the Python
+//! generator, so frames agree across languages (up to last-ulp libm
+//! differences at mask boundaries, < 0.1 % of pixels).
+
+use crate::prop::SplitMix64;
+use crate::snn::spikes::SpikePlane;
+
+/// Number of gesture classes (mirrors IBM DVS Gesture's 11).
+pub const NUM_GESTURE_CLASSES: usize = 11;
+
+/// Generator parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct GestureConfig {
+    /// Frame height.
+    pub height: usize,
+    /// Frame width.
+    pub width: usize,
+    /// Timesteps per clip.
+    pub timesteps: usize,
+    /// Per-pixel background noise probability.
+    pub noise_rate: f64,
+}
+
+impl Default for GestureConfig {
+    fn default() -> Self {
+        GestureConfig {
+            height: 64,
+            width: 64,
+            timesteps: 20,
+            noise_rate: 0.008,
+        }
+    }
+}
+
+/// One generated clip: frames `(T)` of `(2, H, W)` planes plus label.
+#[derive(Debug, Clone)]
+pub struct GestureClip {
+    /// Event frames, one per timestep.
+    pub frames: Vec<SpikePlane>,
+    /// Class label in `[0, NUM_GESTURE_CLASSES)`.
+    pub label: usize,
+}
+
+struct ArmParams {
+    cy: f64,
+    cx: f64,
+    direction: f64,
+    omega: f64,
+    radius0: f64,
+    wobble: f64,
+    phase: f64,
+    arm_len: f64,
+    thickness: f64,
+}
+
+fn render(p: &ArmParams, t: f64, h: usize, w: usize, out: &mut [f64]) {
+    let ang = p.phase + p.direction * p.omega * t;
+    let r = p.radius0 * (1.0 + p.wobble * (0.5 * t + p.phase).sin());
+    let bx = p.cx + r * ang.cos();
+    let by = p.cy + r * ang.sin();
+    let ex = bx + p.arm_len * (ang + 1.2).cos();
+    let ey = by + p.arm_len * (ang + 1.2).sin();
+    let dx = ex - bx;
+    let dy = ey - by;
+    let seg_len2 = dx * dx + dy * dy + 1e-9;
+    for y in 0..h {
+        for x in 0..w {
+            let (xf, yf) = (x as f64, y as f64);
+            let tproj =
+                (((xf - bx) * dx + (yf - by) * dy) / seg_len2).clamp(0.0, 1.0);
+            let px = bx + tproj * dx;
+            let py = by + tproj * dy;
+            let dist = ((xf - px).powi(2) + (yf - py).powi(2)).sqrt();
+            out[y * w + x] = if dist < p.thickness { 1.0 } else { 0.0 };
+        }
+    }
+}
+
+/// Generate one clip (same parameterization as the Python generator).
+pub fn make_gesture(label: usize, seed: u64, cfg: &GestureConfig) -> GestureClip {
+    assert!(label < NUM_GESTURE_CLASSES, "label {label} out of range");
+    let (h, w, timesteps) = (cfg.height, cfg.width, cfg.timesteps);
+    let mut rng = SplitMix64::new(
+        (seed << 8) ^ (label as u64).wrapping_mul(0x9E37) ^ 0xD5,
+    );
+    // Classes are separable both spatially (class-specific orbit
+    // center) and temporally (direction by parity) — mirror of
+    // python/compile/data.py.
+    let min_hw = h.min(w) as f64;
+    let class_ang = 6.28318 * label as f64 / NUM_GESTURE_CLASSES as f64;
+    let params = ArmParams {
+        cy: h as f64 / 2.0 + 0.26 * min_hw * class_ang.sin(),
+        cx: w as f64 / 2.0 + 0.26 * min_hw * class_ang.cos(),
+        direction: if label % 2 == 0 { 1.0 } else { -1.0 },
+        omega: 0.30 + 0.06 * (label % 3) as f64,
+        radius0: 0.14 * min_hw,
+        wobble: 0.0,
+        phase: rng.uniform(0.0, 6.28318),
+        arm_len: 0.22 * min_hw,
+        thickness: 2.2,
+    };
+
+    let mut frames: Vec<SpikePlane> =
+        (0..timesteps).map(|_| SpikePlane::zeros(2, h, w)).collect();
+    let mut prev = vec![0.0f64; h * w];
+    let mut cur = vec![0.0f64; h * w];
+    render(&params, -1.0, h, w, &mut prev);
+    for (t, frame) in frames.iter_mut().enumerate() {
+        render(&params, t as f64, h, w, &mut cur);
+        for y in 0..h {
+            for x in 0..w {
+                let diff = cur[y * w + x] - prev[y * w + x];
+                if diff > 0.5 {
+                    frame.set(0, y, x, 1);
+                } else if diff < -0.5 {
+                    frame.set(1, y, x, 1);
+                }
+            }
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    // Background noise: identical (t, c, y, x) consumption order.
+    for frame in frames.iter_mut() {
+        for c in 0..2 {
+            for y in 0..h {
+                for x in 0..w {
+                    if rng.chance(cfg.noise_rate) {
+                        frame.set(c, y, x, 1);
+                    }
+                }
+            }
+        }
+    }
+    GestureClip { frames, label }
+}
+
+/// Generate a labeled batch with the Python `gesture_batch` seeding.
+pub fn gesture_batch(
+    num: usize,
+    seed: u64,
+    cfg: &GestureConfig,
+) -> Vec<GestureClip> {
+    (0..num)
+        .map(|i| {
+            let label = (seed as usize + i) % NUM_GESTURE_CLASSES;
+            make_gesture(label, seed * 1000 + i as u64, cfg)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> GestureConfig {
+        GestureConfig {
+            height: 32,
+            width: 32,
+            timesteps: 6,
+            noise_rate: 0.01,
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = make_gesture(3, 11, &small());
+        let b = make_gesture(3, 11, &small());
+        for (fa, fb) in a.frames.iter().zip(&b.frames) {
+            assert_eq!(fa.as_slice(), fb.as_slice());
+        }
+    }
+
+    #[test]
+    fn classes_differ() {
+        let a = make_gesture(0, 5, &small());
+        let b = make_gesture(1, 5, &small());
+        assert!(a
+            .frames
+            .iter()
+            .zip(&b.frames)
+            .any(|(x, y)| x.as_slice() != y.as_slice()));
+    }
+
+    #[test]
+    fn binary_and_sparse() {
+        let clip = make_gesture(4, 9, &GestureConfig::default());
+        let mut total = 0u64;
+        let mut cells = 0u64;
+        for f in &clip.frames {
+            assert!(f.as_slice().iter().all(|&v| v <= 1));
+            total += f.count_spikes();
+            cells += f.len() as u64;
+        }
+        let density = total as f64 / cells as f64;
+        assert!(density > 0.001 && density < 0.15, "density {density}");
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn label_validated() {
+        make_gesture(NUM_GESTURE_CLASSES, 0, &small());
+    }
+
+    #[test]
+    fn batch_labels_cycle() {
+        let batch = gesture_batch(13, 1, &small());
+        assert_eq!(batch[0].label, 1);
+        assert_eq!(batch[10].label, 0);
+        assert_eq!(batch[12].label, 2);
+    }
+}

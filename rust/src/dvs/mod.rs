@@ -1,0 +1,20 @@
+//! Synthetic event-camera workloads and event representations.
+//!
+//! Substitutes for the paper's IBM DVS Gesture and DSEC-flow datasets
+//! (DESIGN.md §2): parametric generators that produce binary ON/OFF
+//! event frames with realistic sparsity statistics and ground truth,
+//! driven by the same splitmix64 stream as `python/compile/data.py`
+//! (frames are byte-identical across the two languages for equal
+//! seeds — checked in `rust/tests/cross_language.rs`).
+
+pub mod aer;
+pub mod binning;
+pub mod event;
+pub mod flow_scene;
+pub mod gesture;
+
+pub use aer::{aer_decode, aer_encode, AerPacket, AER_BITS_PER_EVENT};
+pub use binning::bin_events;
+pub use event::{Event, Polarity};
+pub use flow_scene::{FlowScene, FlowSceneConfig};
+pub use gesture::{GestureClip, GestureConfig, NUM_GESTURE_CLASSES};

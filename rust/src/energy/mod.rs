@@ -1,0 +1,14 @@
+//! Energy and power modeling for the simulated SpiDR core.
+//!
+//! The paper's energy numbers come from silicon measurement; here they
+//! come from an analytic per-operation model whose *structure* follows
+//! the architecture (what scales with spikes, with parity switches,
+//! with cycles, with voltage) and whose *coefficients* are calibrated
+//! so the simulated core reproduces the Table-I corners (DESIGN.md §2).
+
+pub mod calibration;
+pub mod model;
+pub mod tech;
+
+pub use model::{Corner, EnergyBreakdown, EnergyParams};
+pub use tech::{scale_efficiency_to_node, scale_energy_to_node};

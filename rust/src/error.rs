@@ -1,0 +1,57 @@
+//! Unified error type for the SpiDR library.
+
+use thiserror::Error;
+
+/// Errors surfaced by the SpiDR library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// A layer/network/mapping configuration is invalid.
+    #[error("configuration error: {0}")]
+    Config(String),
+
+    /// A workload does not fit the selected operating mode / core.
+    #[error("mapping error: {0}")]
+    Mapping(String),
+
+    /// Artifact files (HLO text, weight bundles, manifests) are
+    /// missing or malformed.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// PJRT / XLA runtime failures.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Shape or dimension mismatch between tensors.
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    /// I/O failures while loading artifacts or traces.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+/// Library-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Shorthand constructor for configuration errors.
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+
+    /// Shorthand constructor for mapping errors.
+    pub fn mapping(msg: impl Into<String>) -> Self {
+        Error::Mapping(msg.into())
+    }
+
+    /// Shorthand constructor for artifact errors.
+    pub fn artifact(msg: impl Into<String>) -> Self {
+        Error::Artifact(msg.into())
+    }
+
+    /// Shorthand constructor for shape errors.
+    pub fn shape(msg: impl Into<String>) -> Self {
+        Error::Shape(msg.into())
+    }
+}

@@ -1,0 +1,44 @@
+//! # SpiDR — Reconfigurable Digital Compute-in-Memory SNN Accelerator
+//!
+//! A full-system reproduction of *"SpiDR: A Reconfigurable Digital
+//! Compute-in-Memory Spiking Neural Network Accelerator for Event-based
+//! Perception"* (Sharma et al., 2024).
+//!
+//! The fabricated 65 nm chip is substituted by a cycle-level,
+//! energy-accounted simulator (see `DESIGN.md §2`); the functional SNN
+//! compute is AOT-compiled from JAX/Pallas to HLO-text artifacts and
+//! executed through the PJRT C API as a *golden model* that the
+//! simulator matches bit-for-bit.
+//!
+//! Module map (bottom-up):
+//!
+//! * [`prop`] — in-repo property-testing harness (splitmix64 PRNG,
+//!   generators, shrinking) used across the test suite.
+//! * [`quant`] — the fixed-point arithmetic contract (4/7, 6/11,
+//!   8/15-bit precision pairs, two's-complement wrap).
+//! * [`snn`] — tensors, layers, Table-II networks, weight bundles.
+//! * [`dvs`] — synthetic event-camera workloads + AER codec.
+//! * [`energy`] — per-operation energy model, voltage/frequency
+//!   corners, technology scaling.
+//! * [`sim`] — the cycle-level SpiDR core: CIM macros, IFspad, S2A,
+//!   input loader, compute/neuron units, reconfigurable modes,
+//!   timestep pipelining.
+//! * [`baselines`] — AER event-driven pipeline and dense (no
+//!   zero-skipping) baselines for the paper's comparisons.
+//! * [`coordinator`] — layer mapper, network compiler, multi-core
+//!   scheduler, streaming inference server (the L3 request path).
+//! * [`runtime`] — PJRT client that loads and executes the AOT HLO
+//!   artifacts (the golden model; Python never runs at request time).
+
+pub mod baselines;
+pub mod coordinator;
+pub mod dvs;
+pub mod energy;
+pub mod error;
+pub mod prop;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+pub mod snn;
+
+pub use error::{Error, Result};

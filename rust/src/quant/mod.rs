@@ -1,0 +1,231 @@
+//! Fixed-point arithmetic contract (mirror of `python/compile/quantize.py`).
+//!
+//! SpiDR stores weights at `B_w ∈ {4, 6, 8}` bits and membrane
+//! potentials at `B_v = 2·B_w − 1 ∈ {7, 11, 15}` bits (paper §II-A),
+//! both signed two's-complement. The B_v-bit column adder chain *wraps*
+//! on overflow; modular addition being associative/commutative is what
+//! lets the even/odd FIFO batching and Mode-2 partial-Vmem hopping
+//! reorder operations freely without changing results (DESIGN.md §2).
+
+use crate::error::{Error, Result};
+
+/// A reconfigurable weight/Vmem precision operating point (Fig. 8a).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// 4-bit weights / 7-bit Vmems.
+    W4V7,
+    /// 6-bit weights / 11-bit Vmems.
+    W6V11,
+    /// 8-bit weights / 15-bit Vmems.
+    W8V15,
+}
+
+/// All supported precision pairs, in Fig. 8a order.
+pub const ALL_PRECISIONS: [Precision; 3] =
+    [Precision::W4V7, Precision::W6V11, Precision::W8V15];
+
+impl Precision {
+    /// Construct from a weight bit-width.
+    pub fn from_weight_bits(wb: u32) -> Result<Self> {
+        match wb {
+            4 => Ok(Precision::W4V7),
+            6 => Ok(Precision::W6V11),
+            8 => Ok(Precision::W8V15),
+            _ => Err(Error::config(format!(
+                "unsupported weight precision {wb} (supported: 4, 6, 8)"
+            ))),
+        }
+    }
+
+    /// Weight bit-width `B_w`.
+    pub fn weight_bits(self) -> u32 {
+        match self {
+            Precision::W4V7 => 4,
+            Precision::W6V11 => 6,
+            Precision::W8V15 => 8,
+        }
+    }
+
+    /// Vmem bit-width `B_v = 2·B_w − 1`.
+    pub fn vmem_bits(self) -> u32 {
+        2 * self.weight_bits() - 1
+    }
+
+    /// Minimum representable weight value.
+    pub fn weight_min(self) -> i32 {
+        -(1 << (self.weight_bits() - 1))
+    }
+
+    /// Maximum representable weight value.
+    pub fn weight_max(self) -> i32 {
+        (1 << (self.weight_bits() - 1)) - 1
+    }
+
+    /// Minimum representable Vmem value.
+    pub fn vmem_min(self) -> i32 {
+        -(1 << (self.vmem_bits() - 1))
+    }
+
+    /// Maximum representable Vmem value.
+    pub fn vmem_max(self) -> i32 {
+        (1 << (self.vmem_bits() - 1)) - 1
+    }
+
+    /// Output neurons stored per 48-bit weight row: `48 / B_w` (eq. 1).
+    pub fn neurons_per_row(self) -> usize {
+        48 / self.weight_bits() as usize
+    }
+
+    /// Output neurons per compute macro: `(48 / B_w) · 16` (eq. 1) —
+    /// 16 is the effective Vmem row count (32 physical rows, two per
+    /// staggered B_v-bit entry).
+    pub fn neurons_per_macro(self) -> usize {
+        self.neurons_per_row() * 16
+    }
+}
+
+/// Two's-complement wrap of an i32 to `bits` bits (arithmetic
+/// shift-up/shift-down pair — exactly the adder chain's sign behavior).
+#[inline(always)]
+pub fn wrap_to_bits(x: i32, bits: u32) -> i32 {
+    let shift = 32 - bits;
+    (x << shift) >> shift
+}
+
+/// Saturating clamp to a signed `bits`-bit range (optional macro mode).
+#[inline(always)]
+pub fn saturate_to_bits(x: i32, bits: u32) -> i32 {
+    let hi = (1 << (bits - 1)) - 1;
+    let lo = -(1 << (bits - 1));
+    x.clamp(lo, hi)
+}
+
+/// Overflow behavior of the column adder chain.
+///
+/// `Wrap` is the architectural contract (order-independent, bit-exact
+/// vs. the JAX golden model); `Saturate` is provided for ablations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Overflow {
+    /// Two's-complement modular wrap (default).
+    #[default]
+    Wrap,
+    /// Clamp at the representable range.
+    Saturate,
+}
+
+impl Overflow {
+    /// Apply the overflow policy at a given bit width.
+    #[inline(always)]
+    pub fn apply(self, x: i32, bits: u32) -> i32 {
+        match self {
+            Overflow::Wrap => wrap_to_bits(x, bits),
+            Overflow::Saturate => saturate_to_bits(x, bits),
+        }
+    }
+}
+
+/// Symmetric per-tensor weight quantization: `w ≈ w_q · scale`.
+pub fn quantize_weights(w: &[f32], precision: Precision) -> (Vec<i32>, f64) {
+    let max_abs = w.iter().fold(0.0f64, |m, &x| m.max((x as f64).abs()));
+    if max_abs == 0.0 {
+        return (vec![0; w.len()], 1.0);
+    }
+    let scale = max_abs / precision.weight_max() as f64;
+    let q = w
+        .iter()
+        .map(|&x| {
+            ((x as f64 / scale).round() as i32)
+                .clamp(precision.weight_min(), precision.weight_max())
+        })
+        .collect();
+    (q, scale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::check;
+
+    #[test]
+    fn precision_tables() {
+        assert_eq!(Precision::W4V7.vmem_bits(), 7);
+        assert_eq!(Precision::W6V11.vmem_bits(), 11);
+        assert_eq!(Precision::W8V15.vmem_bits(), 15);
+        assert_eq!(Precision::W4V7.neurons_per_row(), 12);
+        assert_eq!(Precision::W6V11.neurons_per_row(), 8);
+        assert_eq!(Precision::W8V15.neurons_per_row(), 6);
+        assert_eq!(Precision::W4V7.neurons_per_macro(), 192);
+        assert_eq!(Precision::W4V7.weight_min(), -8);
+        assert_eq!(Precision::W8V15.vmem_max(), 16383);
+    }
+
+    #[test]
+    fn from_weight_bits_rejects_unsupported() {
+        assert!(Precision::from_weight_bits(5).is_err());
+        assert!(Precision::from_weight_bits(4).is_ok());
+    }
+
+    #[test]
+    fn wrap_known_values() {
+        // Mirrors python test_quantize.py::test_wrap_known_values.
+        let xs = [63, 64, 127, 128, -64, -65];
+        let expect = [63, -64, -1, 0, -64, 63];
+        for (x, e) in xs.iter().zip(expect) {
+            assert_eq!(wrap_to_bits(*x, 7), e);
+        }
+    }
+
+    #[test]
+    fn wrap_matches_modular_arithmetic() {
+        check("wrap_mod", 500, |g| {
+            let bits = *g.choose(&[7u32, 11, 15]);
+            let x = g.i32_in(-(1 << 30)..=1 << 30);
+            let m = 1i64 << bits;
+            let expected =
+                ((x as i64 + m / 2).rem_euclid(m) - m / 2) as i32;
+            wrap_to_bits(x, bits) == expected
+        });
+    }
+
+    #[test]
+    fn wrap_is_order_independent() {
+        // wrap(wrap(a+b)+c) == wrap(a+b+c): the associativity property
+        // that makes even/odd batching and Mode-2 hopping sound.
+        check("wrap_assoc", 500, |g| {
+            let bits = *g.choose(&[7u32, 11, 15]);
+            let (a, b, c) = (
+                g.i32_in(-100_000..=100_000),
+                g.i32_in(-100_000..=100_000),
+                g.i32_in(-100_000..=100_000),
+            );
+            wrap_to_bits(wrap_to_bits(a + b, bits) + c, bits)
+                == wrap_to_bits(a + b + c, bits)
+        });
+    }
+
+    #[test]
+    fn saturate_clamps() {
+        assert_eq!(saturate_to_bits(1000, 7), 63);
+        assert_eq!(saturate_to_bits(-1000, 7), -64);
+        assert_eq!(saturate_to_bits(5, 7), 5);
+    }
+
+    #[test]
+    fn quantize_bounds_and_roundtrip() {
+        let w: Vec<f32> = (-32..32).map(|i| i as f32 * 0.017).collect();
+        for p in ALL_PRECISIONS {
+            let (q, scale) = quantize_weights(&w, p);
+            for (&qi, &wi) in q.iter().zip(&w) {
+                assert!(qi >= p.weight_min() && qi <= p.weight_max());
+                assert!((qi as f64 * scale - wi as f64).abs() <= scale * 0.5 + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_zero_tensor() {
+        let (q, scale) = quantize_weights(&[0.0; 9], Precision::W4V7);
+        assert_eq!(scale, 1.0);
+        assert!(q.iter().all(|&x| x == 0));
+    }
+}

@@ -1,0 +1,92 @@
+//! Artifact store: locates, compiles and caches AOT executables.
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use super::client::{Executable, PjrtRuntime};
+use super::manifest::{Manifest, ManifestEntry};
+
+/// A directory of AOT artifacts plus compiled-executable cache.
+pub struct ArtifactStore {
+    dir: PathBuf,
+    /// Parsed manifest.
+    pub manifest: Manifest,
+    runtime: PjrtRuntime,
+    cache: HashMap<String, Executable>,
+}
+
+impl ArtifactStore {
+    /// Open an artifacts directory (expects `manifest.txt`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let runtime = PjrtRuntime::cpu()?;
+        Ok(ArtifactStore {
+            dir,
+            manifest,
+            runtime,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// The artifacts directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Path of an artifact's HLO text.
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// Path of a task's weight bundle.
+    pub fn swb_path(&self, task: &str, weight_bits: u32) -> PathBuf {
+        self.dir
+            .join("weights")
+            .join(format!("{task}_w{weight_bits}.swb"))
+    }
+
+    /// Manifest entry by name.
+    pub fn entry(&self, name: &str) -> Result<&ManifestEntry> {
+        self.manifest
+            .get(name)
+            .ok_or_else(|| Error::artifact(format!("no artifact '{name}' in manifest")))
+    }
+
+    /// Compile (or fetch cached) an executable for a network-step
+    /// artifact. Output count = out_acc + counts + one Vmem per layer.
+    pub fn network_executable(&mut self, name: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(name) {
+            let entry = self.entry(name)?.clone();
+            if entry.kind != "network_step" {
+                return Err(Error::artifact(format!(
+                    "artifact '{name}' is a {} (need network_step)",
+                    entry.kind
+                )));
+            }
+            let num_outputs = 2 + entry.vmem_shapes.len();
+            let exe = self
+                .runtime
+                .compile_hlo_file(self.hlo_path(name), num_outputs)?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Compile (or fetch cached) a standalone macro artifact (1 output).
+    pub fn macro_executable(&mut self, name: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(name) {
+            let entry = self.entry(name)?.clone();
+            if entry.kind != "macro" {
+                return Err(Error::artifact(format!(
+                    "artifact '{name}' is a {} (need macro)",
+                    entry.kind
+                )));
+            }
+            let exe = self.runtime.compile_hlo_file(self.hlo_path(name), 1)?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+}

@@ -1,0 +1,160 @@
+//! Golden-model executor: drives a network-step artifact timestep by
+//! timestep from the Rust request path.
+//!
+//! The artifact computes one full-network timestep
+//! `(frame, vmem_0..vmem_{L-1}) -> (out_acc, counts, vmem'_0..)` with
+//! the trained integer weights baked in as constants. This executor
+//! owns the Vmem state between calls, exactly mirroring what the SNN
+//! core's neuron units hold on-chip.
+
+use crate::error::{Error, Result};
+use crate::snn::spikes::SpikePlane;
+
+use super::artifact::ArtifactStore;
+
+/// Stateful golden model for one (task, precision) artifact.
+pub struct GoldenModel {
+    name: String,
+    frame_shape: (usize, usize, usize),
+    vmem_shapes: Vec<(usize, usize)>,
+    out_shape: (usize, usize),
+    /// Output accumulator → float units.
+    pub output_scale: f64,
+    /// Timesteps the network was trained for.
+    pub timesteps: usize,
+    vmems: Vec<Vec<i32>>,
+    /// Per-layer input spike counts from the last step (Fig. 5
+    /// telemetry surfaced by the artifact itself).
+    pub last_counts: Vec<i32>,
+    /// Latest output accumulator.
+    pub out_acc: Vec<i32>,
+}
+
+impl GoldenModel {
+    /// Build from a manifest entry (does not compile yet).
+    pub fn new(store: &ArtifactStore, name: &str) -> Result<Self> {
+        let e = store.entry(name)?;
+        let frame_shape = e
+            .frame_shape
+            .ok_or_else(|| Error::artifact(format!("{name}: missing frame_shape")))?;
+        let out_shape = e
+            .out_shape
+            .ok_or_else(|| Error::artifact(format!("{name}: missing out_shape")))?;
+        let vmem_shapes = e.vmem_shapes.clone();
+        if vmem_shapes.is_empty() {
+            return Err(Error::artifact(format!("{name}: no vmem shapes")));
+        }
+        Ok(GoldenModel {
+            name: name.to_string(),
+            frame_shape,
+            vmem_shapes: vmem_shapes.clone(),
+            out_shape,
+            output_scale: e.output_scale.unwrap_or(1.0),
+            timesteps: e.timesteps.unwrap_or(1),
+            vmems: vmem_shapes.iter().map(|&(m, k)| vec![0; m * k]).collect(),
+            last_counts: Vec::new(),
+            out_acc: vec![0; out_shape.0 * out_shape.1],
+        })
+    }
+
+    /// Input frame shape `(C, H, W)`.
+    pub fn frame_shape(&self) -> (usize, usize, usize) {
+        self.frame_shape
+    }
+
+    /// Reset all Vmem state (new clip).
+    pub fn reset(&mut self) {
+        for v in &mut self.vmems {
+            v.fill(0);
+        }
+        self.out_acc.fill(0);
+        self.last_counts.clear();
+    }
+
+    /// Current Vmem bank of stateful layer `i` (bit-exactness checks).
+    pub fn vmem(&self, i: usize) -> &[i32] {
+        &self.vmems[i]
+    }
+
+    /// Execute one timestep on the PJRT executable.
+    pub fn step(&mut self, store: &mut ArtifactStore, frame: &SpikePlane) -> Result<()> {
+        let (c, h, w) = self.frame_shape;
+        if frame.shape() != (c, h, w) {
+            return Err(Error::shape(format!(
+                "frame {:?} != artifact input {:?}",
+                frame.shape(),
+                self.frame_shape
+            )));
+        }
+        let frame_i32: Vec<i32> =
+            frame.as_slice().iter().map(|&b| b as i32).collect();
+        let frame_dims = [c as i64, h as i64, w as i64];
+
+        let mut inputs: Vec<(&[i32], &[i64])> = Vec::with_capacity(1 + self.vmems.len());
+        inputs.push((&frame_i32, &frame_dims));
+        let vmem_dims: Vec<[i64; 2]> = self
+            .vmem_shapes
+            .iter()
+            .map(|&(m, k)| [m as i64, k as i64])
+            .collect();
+        for (v, d) in self.vmems.iter().zip(&vmem_dims) {
+            inputs.push((v.as_slice(), d.as_slice()));
+        }
+
+        let exe = store.network_executable(&self.name)?;
+        let mut outputs = exe.run_i32(&inputs)?;
+        // outputs: [out_acc, counts, vmem'_0, ..., vmem'_{L-1}]
+        if outputs.len() != 2 + self.vmems.len() {
+            return Err(Error::Runtime(format!(
+                "unexpected output arity {}",
+                outputs.len()
+            )));
+        }
+        let mut rest = outputs.split_off(2);
+        for (v, nv) in self.vmems.iter_mut().zip(rest.drain(..)) {
+            *v = nv;
+        }
+        self.last_counts = outputs[1].clone();
+        self.out_acc = outputs[0].clone();
+        Ok(())
+    }
+
+    /// Run a whole clip (resets state first). Returns per-timestep
+    /// per-layer input spike counts.
+    pub fn run_clip(
+        &mut self,
+        store: &mut ArtifactStore,
+        frames: &[SpikePlane],
+    ) -> Result<Vec<Vec<i32>>> {
+        self.reset();
+        let mut counts = Vec::with_capacity(frames.len());
+        for f in frames {
+            self.step(store, f)?;
+            counts.push(self.last_counts.clone());
+        }
+        Ok(counts)
+    }
+
+    /// Output accumulator in float units (flow field / logits).
+    pub fn out_float(&self) -> Vec<f64> {
+        self.out_acc
+            .iter()
+            .map(|&v| v as f64 * self.output_scale)
+            .collect()
+    }
+
+    /// Argmax of the output accumulator (classification readout).
+    pub fn argmax(&self) -> usize {
+        self.out_acc
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &v)| v)
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    /// Output shape `(M, K)`.
+    pub fn out_shape(&self) -> (usize, usize) {
+        self.out_shape
+    }
+}

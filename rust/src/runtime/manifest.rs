@@ -1,0 +1,243 @@
+//! Parser for `artifacts/manifest.txt` (written by `aot.py`).
+//!
+//! A deliberately simple line-oriented format (no serde in this
+//! environment): `artifact <name>` opens a stanza, indented
+//! `<key> <values…>` lines describe it, `end` closes it.
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// One artifact stanza.
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    /// Artifact name (file stem of the `.hlo.txt`).
+    pub name: String,
+    /// `macro` or `network_step`.
+    pub kind: String,
+    /// Task name for network artifacts ("gesture", "flow").
+    pub task: Option<String>,
+    /// Weight precision.
+    pub weight_bits: u32,
+    /// Vmem precision.
+    pub vmem_bits: u32,
+    /// Timesteps the network was trained for.
+    pub timesteps: Option<usize>,
+    /// Input frame shape `(C, H, W)`.
+    pub frame_shape: Option<(usize, usize, usize)>,
+    /// Per-stateful-layer Vmem shapes `(M, K)`.
+    pub vmem_shapes: Vec<(usize, usize)>,
+    /// Output accumulator shape `(M, K)`.
+    pub out_shape: Option<(usize, usize)>,
+    /// Output scale (accumulator → float units).
+    pub output_scale: Option<f64>,
+    /// All raw key/value pairs (macro geometry etc.).
+    pub raw: HashMap<String, String>,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    /// Entries in file order.
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    /// Parse manifest text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = Vec::new();
+        let mut cur: Option<ManifestEntry> = None;
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix("artifact ") {
+                if cur.is_some() {
+                    return Err(Error::artifact(format!(
+                        "line {}: nested artifact stanza",
+                        ln + 1
+                    )));
+                }
+                cur = Some(ManifestEntry {
+                    name: name.trim().to_string(),
+                    kind: String::new(),
+                    task: None,
+                    weight_bits: 0,
+                    vmem_bits: 0,
+                    timesteps: None,
+                    frame_shape: None,
+                    vmem_shapes: Vec::new(),
+                    out_shape: None,
+                    output_scale: None,
+                    raw: HashMap::new(),
+                });
+                continue;
+            }
+            if line == "end" {
+                let e = cur.take().ok_or_else(|| {
+                    Error::artifact(format!("line {}: stray 'end'", ln + 1))
+                })?;
+                if e.kind.is_empty() {
+                    return Err(Error::artifact(format!(
+                        "artifact {}: missing kind",
+                        e.name
+                    )));
+                }
+                entries.push(e);
+                continue;
+            }
+            let e = cur.as_mut().ok_or_else(|| {
+                Error::artifact(format!("line {}: key outside stanza", ln + 1))
+            })?;
+            let (key, val) = line
+                .split_once(' ')
+                .ok_or_else(|| Error::artifact(format!("line {}: bad line", ln + 1)))?;
+            let val = val.trim();
+            let parse_usize = |v: &str| {
+                v.parse::<usize>()
+                    .map_err(|_| Error::artifact(format!("line {}: bad int {v}", ln + 1)))
+            };
+            match key {
+                "kind" => e.kind = val.to_string(),
+                "task" => e.task = Some(val.to_string()),
+                "weight_bits" => e.weight_bits = parse_usize(val)? as u32,
+                "vmem_bits" => e.vmem_bits = parse_usize(val)? as u32,
+                "timesteps" => e.timesteps = Some(parse_usize(val)?),
+                "frame_shape" => {
+                    let parts: Vec<usize> = val
+                        .split_whitespace()
+                        .map(parse_usize)
+                        .collect::<Result<_>>()?;
+                    if parts.len() != 3 {
+                        return Err(Error::artifact(format!(
+                            "line {}: frame_shape needs 3 dims",
+                            ln + 1
+                        )));
+                    }
+                    e.frame_shape = Some((parts[0], parts[1], parts[2]));
+                }
+                "vmem" => {
+                    let parts: Vec<usize> = val
+                        .split_whitespace()
+                        .map(parse_usize)
+                        .collect::<Result<_>>()?;
+                    if parts.len() != 3 {
+                        return Err(Error::artifact(format!(
+                            "line {}: vmem needs index m k",
+                            ln + 1
+                        )));
+                    }
+                    if parts[0] != e.vmem_shapes.len() {
+                        return Err(Error::artifact(format!(
+                            "line {}: vmem index out of order",
+                            ln + 1
+                        )));
+                    }
+                    e.vmem_shapes.push((parts[1], parts[2]));
+                }
+                "out_shape" => {
+                    let parts: Vec<usize> = val
+                        .split_whitespace()
+                        .map(parse_usize)
+                        .collect::<Result<_>>()?;
+                    e.out_shape = Some((parts[0], parts[1]));
+                }
+                "output_scale" => {
+                    e.output_scale = Some(val.parse::<f64>().map_err(|_| {
+                        Error::artifact(format!("line {}: bad float {val}", ln + 1))
+                    })?);
+                }
+                _ => {
+                    e.raw.insert(key.to_string(), val.to_string());
+                }
+            }
+        }
+        if cur.is_some() {
+            return Err(Error::artifact("unterminated artifact stanza"));
+        }
+        Ok(Manifest { entries })
+    }
+
+    /// Load and parse `manifest.txt` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let path = dir.as_ref().join("manifest.txt");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::artifact(format!(
+                "cannot read {}: {e} (run `make artifacts`)",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text)
+    }
+
+    /// Find an entry by name.
+    pub fn get(&self, name: &str) -> Option<&ManifestEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Find a network entry by task + weight bits.
+    pub fn network(&self, task: &str, weight_bits: u32) -> Option<&ManifestEntry> {
+        self.entries.iter().find(|e| {
+            e.kind == "network_step"
+                && e.task.as_deref() == Some(task)
+                && e.weight_bits == weight_bits
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+artifact macro_w4
+  kind macro
+  weight_bits 4
+  vmem_bits 7
+  m 128
+end
+artifact gesture_w4
+  kind network_step
+  task gesture
+  weight_bits 4
+  vmem_bits 7
+  timesteps 10
+  frame_shape 2 64 64
+  output_scale 0.125
+  vmem 0 4096 16
+  vmem 1 64 11
+  out_shape 1 11
+  num_state_layers 2
+end
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let g = m.network("gesture", 4).unwrap();
+        assert_eq!(g.frame_shape, Some((2, 64, 64)));
+        assert_eq!(g.vmem_shapes, vec![(4096, 16), (64, 11)]);
+        assert_eq!(g.out_shape, Some((1, 11)));
+        assert_eq!(g.output_scale, Some(0.125));
+        assert_eq!(m.get("macro_w4").unwrap().raw["m"], "128");
+        assert_eq!(g.raw["num_state_layers"], "2");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("end").is_err());
+        assert!(Manifest::parse("artifact a\n  kind x").is_err());
+        assert!(Manifest::parse("artifact a\nartifact b\nend").is_err());
+        assert!(Manifest::parse("key outside").is_err());
+    }
+
+    #[test]
+    fn missing_network_is_none() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.network("flow", 4).is_none());
+        assert!(m.network("gesture", 6).is_none());
+    }
+}

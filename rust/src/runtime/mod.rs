@@ -1,0 +1,12 @@
+//! PJRT runtime: loads AOT HLO-text artifacts and executes them as the
+//! golden model on the request path (Python is never invoked).
+
+pub mod artifact;
+pub mod client;
+pub mod golden;
+pub mod manifest;
+
+pub use artifact::ArtifactStore;
+pub use client::PjrtRuntime;
+pub use golden::GoldenModel;
+pub use manifest::{Manifest, ManifestEntry};

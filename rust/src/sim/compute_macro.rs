@@ -1,0 +1,209 @@
+//! The 160x48 compute-in-memory macro (paper §II-A, Figs. 7–8).
+//!
+//! Top 128 rows store weights; 32 bottom rows store partial Vmems in a
+//! staggered layout (B_v ≈ 2·B_w, so one weight row's Vmems occupy two
+//! physical rows — even-indexed neurons at row 2X, odd-indexed at
+//! 2X+1). One `(Y, X)` address pair therefore takes *two* pipelined
+//! R/C/S passes: an even-parity pass and an odd-parity pass, each
+//! accumulating half of the row's neurons into the selected Vmem row.
+//!
+//! The functional model here works on logical integers; the staggering
+//! is preserved in which neurons each parity touches, so parity-batched
+//! execution orders are exercised for real.
+
+use crate::quant::Overflow;
+use crate::snn::tensor::Mat;
+
+use super::config::{IFSPAD_COLS, IFSPAD_ROWS, MACRO_COLS};
+
+/// Even or odd accumulation pass (which neuron parity / Vmem row).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Parity {
+    /// Even-indexed neurons → Vmem row 2X.
+    Even,
+    /// Odd-indexed neurons → Vmem row 2X+1.
+    Odd,
+}
+
+impl Parity {
+    /// The other parity.
+    pub fn flip(self) -> Parity {
+        match self {
+            Parity::Even => Parity::Odd,
+            Parity::Odd => Parity::Even,
+        }
+    }
+
+    /// Starting neuron index of this parity.
+    pub fn start(self) -> usize {
+        match self {
+            Parity::Even => 0,
+            Parity::Odd => 1,
+        }
+    }
+}
+
+/// One compute macro: a fan-in slice of weights plus 16 logical Vmem
+/// entries for the current tile.
+#[derive(Debug, Clone)]
+pub struct ComputeMacro {
+    /// Weight slice `(rows ≤ 128, neurons ≤ 48/B_w)`.
+    weights: Mat,
+    /// Partial Vmems, `IFSPAD_COLS` entries x `neurons`, row-major.
+    vmem: Vec<i32>,
+    /// Logical neurons mapped on the columns.
+    pub neurons: usize,
+    /// Vmem bit width.
+    pub vmem_bits: u32,
+    /// Overflow policy.
+    pub overflow: Overflow,
+    /// Functional datapath enabled.
+    pub functional: bool,
+}
+
+impl ComputeMacro {
+    /// Create a macro holding a weight slice. `weights` is
+    /// `(fan_in_slice, neurons)` with `fan_in_slice ≤ 128` and
+    /// `neurons ≤ 48 / B_w`.
+    pub fn new(
+        weights: Mat,
+        vmem_bits: u32,
+        overflow: Overflow,
+        functional: bool,
+    ) -> Self {
+        assert!(weights.rows <= IFSPAD_ROWS, "weight slice too tall");
+        assert!(weights.cols <= MACRO_COLS, "too many neurons per macro");
+        let neurons = weights.cols;
+        ComputeMacro {
+            weights,
+            vmem: vec![0; IFSPAD_COLS * neurons],
+            neurons,
+            vmem_bits,
+            overflow,
+            functional,
+        }
+    }
+
+    /// A timing-only macro with a given geometry and no weight data.
+    pub fn timing_only(rows: usize, neurons: usize, vmem_bits: u32) -> Self {
+        ComputeMacro::new(
+            Mat::zeros(rows, neurons),
+            vmem_bits,
+            Overflow::Wrap,
+            false,
+        )
+    }
+
+    /// Weight rows held (the CU's fan-in slice length).
+    pub fn rows(&self) -> usize {
+        self.weights.rows
+    }
+
+    /// Reset all partial Vmems (start of a tile/timestep).
+    pub fn reset_vmems(&mut self) {
+        self.vmem.fill(0);
+    }
+
+    /// Perform one accumulation pass for address pair `(y, x)` at a
+    /// parity: adds the parity's neurons of weight row `y` into Vmem
+    /// entry `x`. One R/C/S pipeline pass = one cycle once the
+    /// pipeline is full (counted by the caller).
+    #[inline]
+    pub fn op(&mut self, y: usize, x: usize, parity: Parity) {
+        if !self.functional {
+            return;
+        }
+        debug_assert!(y < self.weights.rows && x < IFSPAD_COLS);
+        let w = self.weights.row(y);
+        let v = &mut self.vmem[x * self.neurons..(x + 1) * self.neurons];
+        let (bits, overflow) = (self.vmem_bits, self.overflow);
+        let mut k = parity.start();
+        while k < w.len() {
+            v[k] = overflow.apply(v[k] + w[k], bits);
+            k += 2;
+        }
+    }
+
+    /// Read the partial Vmems of entry `x` (transfer to the next unit).
+    pub fn vmem_entry(&self, x: usize) -> &[i32] {
+        &self.vmem[x * self.neurons..(x + 1) * self.neurons]
+    }
+
+    /// Accumulate another unit's partials into entry `x` (Mode-2 /
+    /// Mode-1 chain merge; wrap keeps this order-independent).
+    pub fn merge_entry(&mut self, x: usize, incoming: &[i32]) {
+        if !self.functional {
+            return;
+        }
+        let (bits, overflow) = (self.vmem_bits, self.overflow);
+        let v = &mut self.vmem[x * self.neurons..(x + 1) * self.neurons];
+        for (vi, &inc) in v.iter_mut().zip(incoming) {
+            *vi = overflow.apply(*vi + inc, bits);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::wrap_to_bits;
+
+    fn macro_with(rows: usize, neurons: usize, f: impl Fn(usize, usize) -> i32) -> ComputeMacro {
+        let mut m = Mat::zeros(rows, neurons);
+        for r in 0..rows {
+            for c in 0..neurons {
+                m.set(r, c, f(r, c));
+            }
+        }
+        ComputeMacro::new(m, 7, Overflow::Wrap, true)
+    }
+
+    #[test]
+    fn even_odd_touch_disjoint_neurons() {
+        let mut cm = macro_with(4, 6, |_, k| (k + 1) as i32);
+        cm.op(0, 0, Parity::Even);
+        assert_eq!(cm.vmem_entry(0), &[1, 0, 3, 0, 5, 0]);
+        cm.op(0, 0, Parity::Odd);
+        assert_eq!(cm.vmem_entry(0), &[1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn op_accumulates_with_wrap() {
+        let mut cm = macro_with(1, 2, |_, _| 60);
+        cm.op(0, 0, Parity::Even);
+        cm.op(0, 0, Parity::Even);
+        // 120 wraps at 7 bits to -8
+        assert_eq!(cm.vmem_entry(0)[0], wrap_to_bits(120, 7));
+    }
+
+    #[test]
+    fn entries_are_independent() {
+        let mut cm = macro_with(2, 2, |r, _| r as i32 + 1);
+        cm.op(1, 3, Parity::Even);
+        assert_eq!(cm.vmem_entry(3)[0], 2);
+        assert_eq!(cm.vmem_entry(0)[0], 0);
+    }
+
+    #[test]
+    fn merge_wraps() {
+        let mut cm = macro_with(1, 2, |_, _| 0);
+        cm.merge_entry(0, &[60, 10]);
+        cm.merge_entry(0, &[60, 10]);
+        assert_eq!(cm.vmem_entry(0), &[wrap_to_bits(120, 7), 20]);
+    }
+
+    #[test]
+    fn timing_only_skips_functional_work() {
+        let mut cm = ComputeMacro::timing_only(4, 6, 7);
+        cm.op(0, 0, Parity::Even);
+        assert_eq!(cm.vmem_entry(0), &[0, 0, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut cm = macro_with(1, 2, |_, _| 3);
+        cm.op(0, 0, Parity::Even);
+        cm.reset_vmems();
+        assert_eq!(cm.vmem_entry(0), &[0, 0]);
+    }
+}

@@ -1,0 +1,212 @@
+//! A compute unit: IFmem → input loader → IFspad → S2A → compute macro.
+
+use crate::snn::layer::Layer;
+use crate::snn::spikes::SpikePlane;
+use crate::snn::tensor::Mat;
+
+use super::compute_macro::ComputeMacro;
+use super::config::SimConfig;
+use super::ifspad::IfSpad;
+use super::input_loader::{load_tile, LoadedTile};
+use super::s2a::{run_tile, run_tile_dense, S2aOptions};
+
+pub use super::s2a::TileCuStats;
+
+/// One compute unit executing a fan-in slice of the current layer.
+#[derive(Debug, Clone)]
+pub struct ComputeUnit {
+    /// This unit's fan-in slice `[fan_lo, fan_hi)`.
+    pub fan_lo: usize,
+    /// Slice end (exclusive).
+    pub fan_hi: usize,
+    cm: ComputeMacro,
+    spad: IfSpad,
+    s2a_opts: S2aOptions,
+    zero_skipping: bool,
+}
+
+/// Per-tile result from one compute unit.
+#[derive(Debug, Clone)]
+pub struct CuTileResult {
+    /// S2A / macro statistics.
+    pub stats: TileCuStats,
+    /// Loader statistics.
+    pub load: LoadedTile,
+}
+
+impl ComputeUnit {
+    /// Configure a unit for a layer: `weights_slice` is the layer's
+    /// `(fan_hi - fan_lo, group_neurons)` weight sub-matrix.
+    pub fn new(
+        fan_lo: usize,
+        fan_hi: usize,
+        weights_slice: Mat,
+        cfg: &SimConfig,
+    ) -> Self {
+        let cm = ComputeMacro::new(
+            weights_slice,
+            cfg.precision.vmem_bits(),
+            cfg.overflow,
+            cfg.functional,
+        );
+        ComputeUnit {
+            fan_lo,
+            fan_hi,
+            cm,
+            spad: IfSpad::new(),
+            s2a_opts: S2aOptions {
+                fifo_depth: cfg.fifo_depth,
+                switch_cycles: cfg.parity_switch_cycles,
+                ping_pong: true,
+                detector_cycles_per_spike: cfg.detector_cycles_per_spike,
+            },
+            zero_skipping: cfg.zero_skipping,
+        }
+    }
+
+    /// Number of neurons mapped on this unit's macro columns.
+    pub fn neurons(&self) -> usize {
+        self.cm.neurons
+    }
+
+    /// Process one tile for one timestep: load the IFspad, run the
+    /// S2A + macro, leave partial Vmems in the macro.
+    pub fn process_tile(
+        &mut self,
+        layer: &Layer,
+        input: &SpikePlane,
+        pixel_base: usize,
+        pixels: usize,
+    ) -> CuTileResult {
+        self.cm.reset_vmems();
+        let load = load_tile(
+            layer,
+            input,
+            pixel_base,
+            pixels,
+            self.fan_lo,
+            self.fan_hi,
+            &mut self.spad,
+        );
+        let stats = if self.zero_skipping {
+            run_tile(&self.spad, &load.row_ready, &mut self.cm, &self.s2a_opts)
+        } else {
+            run_tile_dense(&self.spad, &mut self.cm, &self.s2a_opts)
+        };
+        CuTileResult { stats, load }
+    }
+
+    /// Partial Vmems of entry `x` after `process_tile`.
+    pub fn partial_entry(&self, x: usize) -> &[i32] {
+        self.cm.vmem_entry(x)
+    }
+
+    /// Merge an upstream unit's partials into this one (chain hop).
+    pub fn merge_from(&mut self, x: usize, incoming: &[i32]) {
+        self.cm.merge_entry(x, incoming);
+    }
+
+    /// Replace the macro weights (layer reconfiguration, multi-pass).
+    pub fn reload_weights(&mut self, weights_slice: Mat, cfg: &SimConfig) {
+        self.cm = ComputeMacro::new(
+            weights_slice,
+            cfg.precision.vmem_bits(),
+            cfg.overflow,
+            cfg.functional,
+        );
+    }
+}
+
+/// Split a fan-in evenly across `n` units (the balanced distribution
+/// of §II-F: equal row counts minimize pipeline wait variance).
+pub fn split_fan_in(fan_in: usize, n: usize) -> Vec<(usize, usize)> {
+    let base = fan_in / n;
+    let extra = fan_in % n;
+    let mut out = Vec::with_capacity(n);
+    let mut lo = 0;
+    for i in 0..n {
+        let len = base + usize::from(i < extra);
+        out.push((lo, lo + len));
+        lo += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::layer::NeuronConfig;
+
+    fn layer() -> Layer {
+        let mut w = Mat::zeros(9, 4);
+        for f in 0..9 {
+            for k in 0..4 {
+                w.set(f, k, (f + k) as i32 % 3);
+            }
+        }
+        Layer::conv((1, 4, 4), 4, 3, 3, 1, 1, w, NeuronConfig::default(), false).unwrap()
+    }
+
+    #[test]
+    fn split_fan_in_balanced() {
+        assert_eq!(split_fan_in(288, 3), vec![(0, 96), (96, 192), (192, 288)]);
+        assert_eq!(split_fan_in(10, 3), vec![(0, 4), (4, 7), (7, 10)]);
+        let total: usize = split_fan_in(1151, 9).iter().map(|(a, b)| b - a).sum();
+        assert_eq!(total, 1151);
+        // balanced: sizes differ by at most 1
+        let sizes: Vec<usize> = split_fan_in(1151, 9).iter().map(|(a, b)| b - a).collect();
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn process_tile_counts_and_partials() {
+        let l = layer();
+        let cfg = SimConfig::default();
+        let w = l.weights.as_ref().unwrap().clone();
+        let mut cu = ComputeUnit::new(0, 9, w, &cfg);
+        let mut input = SpikePlane::zeros(1, 4, 4);
+        input.set(0, 1, 1, 1);
+        let r = cu.process_tile(&l, &input, 0, 16);
+        assert!(r.stats.detect_spikes > 0);
+        assert_eq!(r.stats.macro_ops, 2 * r.stats.detect_spikes);
+        // pixel m=5 sees the spike at its center tap f=4: weights row 4
+        let expect: Vec<i32> = (0..4).map(|k| (4 + k) as i32 % 3).collect();
+        assert_eq!(cu.partial_entry(5), &expect[..]);
+    }
+
+    #[test]
+    fn dense_mode_same_function_more_ops() {
+        let l = layer();
+        let mut cfg = SimConfig::default();
+        let w = l.weights.as_ref().unwrap().clone();
+        let mut input = SpikePlane::zeros(1, 4, 4);
+        input.set(0, 2, 2, 1);
+
+        let mut cu = ComputeUnit::new(0, 9, w.clone(), &cfg);
+        let sparse = cu.process_tile(&l, &input, 0, 16);
+        let p_sparse: Vec<i32> = cu.partial_entry(5).to_vec();
+
+        cfg.zero_skipping = false;
+        let mut cu2 = ComputeUnit::new(0, 9, w, &cfg);
+        let dense = cu2.process_tile(&l, &input, 0, 16);
+        assert_eq!(cu2.partial_entry(5), &p_sparse[..]);
+        assert!(dense.stats.macro_ops > sparse.stats.macro_ops);
+    }
+
+    #[test]
+    fn merge_chains_partials() {
+        let l = layer();
+        let cfg = SimConfig::default();
+        let w = l.weights.as_ref().unwrap().clone();
+        let mut cu = ComputeUnit::new(0, 9, w, &cfg);
+        let mut input = SpikePlane::zeros(1, 4, 4);
+        input.set(0, 1, 1, 1);
+        cu.process_tile(&l, &input, 0, 16);
+        let before = cu.partial_entry(5).to_vec();
+        cu.merge_from(5, &[1, 1, 1, 1]);
+        let after = cu.partial_entry(5).to_vec();
+        for (b, a) in before.iter().zip(&after) {
+            assert_eq!(a - b, 1);
+        }
+    }
+}

@@ -1,0 +1,143 @@
+//! Core geometry constants and simulation configuration.
+
+use crate::energy::model::{Corner, EnergyParams};
+use crate::quant::{Overflow, Precision};
+
+/// Compute units in the core (paper Fig. 6).
+pub const NUM_CU: usize = 9;
+/// Neuron units in the core.
+pub const NUM_NU: usize = 3;
+/// IFspad rows (= weight rows per compute macro).
+pub const IFSPAD_ROWS: usize = 128;
+/// IFspad columns (= Vmem entries per macro: 32 physical rows / 2).
+pub const IFSPAD_COLS: usize = 16;
+/// Compute-macro SRAM columns.
+pub const MACRO_COLS: usize = 48;
+/// Even/odd address-FIFO depth (Fig. 10: deeper gives no further win).
+pub const FIFO_DEPTH: usize = 16;
+/// Neuron-macro pass length in cycles: 2·32 + 2 (paper eq. 3).
+pub const NEURON_PASS_CYCLES: u64 = 2 * 32 + 2;
+
+/// Reconfigurable operating mode (paper §II-E, Fig. 12).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OperatingMode {
+    /// Three parallel pipelines of 3 CUs + 1 NU; fan-in ≤ 3·128;
+    /// 3·(48/B_w) output channels in parallel (eq. 2).
+    Mode1,
+    /// One pipeline of 9 CUs + 1 NU; fan-in ≤ 9·128; 48/B_w output
+    /// channels in parallel.
+    Mode2,
+}
+
+impl OperatingMode {
+    /// Compute units chained per pipeline.
+    pub fn cus_per_pipeline(self) -> usize {
+        match self {
+            OperatingMode::Mode1 => 3,
+            OperatingMode::Mode2 => 9,
+        }
+    }
+
+    /// Parallel pipelines.
+    pub fn pipelines(self) -> usize {
+        match self {
+            OperatingMode::Mode1 => 3,
+            OperatingMode::Mode2 => 1,
+        }
+    }
+
+    /// Maximum mappable fan-in.
+    pub fn max_fan_in(self) -> usize {
+        self.cus_per_pipeline() * IFSPAD_ROWS
+    }
+
+    /// Output channels processed in parallel at a precision (eq. 2).
+    pub fn parallel_channels(self, precision: Precision) -> usize {
+        self.pipelines() * precision.neurons_per_row()
+    }
+}
+
+/// Simulation configuration for one run.
+#[derive(Debug, Clone, Copy)]
+pub struct SimConfig {
+    /// Weight/Vmem precision operating point.
+    pub precision: Precision,
+    /// Adder-chain overflow policy (wrap is the architectural default).
+    pub overflow: Overflow,
+    /// Voltage/frequency corner.
+    pub corner: Corner,
+    /// Per-event energy coefficients.
+    pub energy: EnergyParams,
+    /// Simulate the functional datapath (weight/Vmem values). Timing
+    /// and energy are value-independent, so sweeps can disable this.
+    pub functional: bool,
+    /// Zero-skipping enabled (the S2A processes only spikes). Disabling
+    /// reproduces the dense baseline for the sparsity ablation.
+    pub zero_skipping: bool,
+    /// Cycles lost reconfiguring peripherals on an even/odd switch.
+    pub parity_switch_cycles: u64,
+    /// Cycles to transfer one partial-Vmem row between adjacent units.
+    pub transfer_cycles_per_row: u64,
+    /// Even/odd FIFO depth (16 in silicon; swept in the Fig.-10 bench).
+    pub fifo_depth: usize,
+    /// Detector cycles per extracted spike address.
+    pub detector_cycles_per_spike: u64,
+    /// Cycles to reset the macro's 32 partial-Vmem rows before each
+    /// tile-timestep (the "R" stage in Fig. 13).
+    pub tile_reset_cycles: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            precision: Precision::W4V7,
+            overflow: Overflow::Wrap,
+            corner: Corner::LOW,
+            energy: EnergyParams::default(),
+            functional: true,
+            zero_skipping: true,
+            parity_switch_cycles: 1,
+            transfer_cycles_per_row: 1,
+            fifo_depth: FIFO_DEPTH,
+            detector_cycles_per_spike: 2,
+            tile_reset_cycles: 32,
+        }
+    }
+}
+
+impl SimConfig {
+    /// Timing-only configuration (functional datapath disabled).
+    pub fn timing_only(precision: Precision) -> Self {
+        SimConfig {
+            precision,
+            functional: false,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_geometry() {
+        assert_eq!(OperatingMode::Mode1.max_fan_in(), 384);
+        assert_eq!(OperatingMode::Mode2.max_fan_in(), 1152);
+        assert_eq!(OperatingMode::Mode1.pipelines(), 3);
+        assert_eq!(OperatingMode::Mode2.pipelines(), 1);
+    }
+
+    #[test]
+    fn parallel_channels_eq2() {
+        // eq. 2: 3·48/W_b (mode 1) or 48/W_b (mode 2)
+        assert_eq!(OperatingMode::Mode1.parallel_channels(Precision::W4V7), 36);
+        assert_eq!(OperatingMode::Mode2.parallel_channels(Precision::W4V7), 12);
+        assert_eq!(OperatingMode::Mode1.parallel_channels(Precision::W8V15), 18);
+    }
+
+    #[test]
+    fn neuron_pass_is_66() {
+        assert_eq!(NEURON_PASS_CYCLES, 66);
+    }
+}

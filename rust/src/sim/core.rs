@@ -1,0 +1,480 @@
+//! The SpiDR core: 9 compute units + 3 neuron units, reconfigurable
+//! operating modes, tile/timestep scheduling (paper §II-E/F, Fig. 12).
+//!
+//! Execution plan for one layer (weight-stationary):
+//!
+//! * **Mode 1** (fan-in ≤ 3·128): three pipelines of 3 CUs + 1 NU run
+//!   *different output-channel groups* of the same tile concurrently.
+//! * **Mode 2** (fan-in ≤ 9·128): one pipeline of 9 CUs + 1 NU; one
+//!   channel group at a time.
+//!
+//! Within a tile (16 output pixels), timesteps pipeline across the
+//! chained units with asynchronous handshaking; across tiles the core
+//! runs sequentially (the NU's 32 full-Vmem rows hold exactly one
+//! tile, so all timesteps of a tile complete before it is swapped).
+//! If a layer has more output channels than a mode can map, the input
+//! is re-streamed once per extra pass (weights are reconfigured).
+
+use crate::error::{Error, Result};
+use crate::snn::layer::Layer;
+use crate::snn::spikes::SpikePlane;
+use crate::snn::tensor::Mat;
+
+use super::compute_unit::{split_fan_in, ComputeUnit};
+use super::config::{OperatingMode, SimConfig, IFSPAD_COLS, NEURON_PASS_CYCLES};
+use super::neuron_macro::NeuronMacro;
+use super::pipeline::{
+    pipeline_makespan, synchronous_makespan, worst_case_makespan, PipelineTimeline,
+};
+use super::stats::RunStats;
+
+/// Per-layer execution report.
+#[derive(Debug, Clone)]
+pub struct LayerStats {
+    /// Aggregate counters and energy.
+    pub run: RunStats,
+    /// Mode the mapper chose.
+    pub mode: OperatingMode,
+    /// Weight-reconfiguration passes needed for all channel groups.
+    pub passes: usize,
+    /// Pixel tiles processed per pass.
+    pub tiles: usize,
+    /// Example timeline (first pass, first tile) for Fig.-13-style
+    /// visualization.
+    pub example_timeline: Option<PipelineTimeline>,
+}
+
+/// The simulated SpiDR core.
+#[derive(Debug, Clone)]
+pub struct SpidrCore {
+    /// Simulation configuration.
+    pub cfg: SimConfig,
+}
+
+impl SpidrCore {
+    /// New core with a configuration.
+    pub fn new(cfg: SimConfig) -> Self {
+        SpidrCore { cfg }
+    }
+
+    /// Select the operating mode for a fan-in (paper Fig. 12).
+    pub fn select_mode(&self, fan_in: usize) -> Result<OperatingMode> {
+        if fan_in <= OperatingMode::Mode1.max_fan_in() {
+            Ok(OperatingMode::Mode1)
+        } else if fan_in <= OperatingMode::Mode2.max_fan_in() {
+            Ok(OperatingMode::Mode2)
+        } else {
+            Err(Error::mapping(format!(
+                "fan-in {fan_in} exceeds Mode 2 capacity {} (layer must be \
+                 split upstream)",
+                OperatingMode::Mode2.max_fan_in()
+            )))
+        }
+    }
+
+    /// Execute one stateful layer over all timesteps.
+    ///
+    /// * `inputs` — one input spike plane per timestep.
+    /// * `state` — the layer's full Vmem bank `(M, K)`, updated in
+    ///   place (bit-exact vs. the golden model when
+    ///   `cfg.functional`).
+    ///
+    /// Returns the output spike planes per timestep plus statistics.
+    pub fn run_layer(
+        &self,
+        layer: &Layer,
+        inputs: &[SpikePlane],
+        state: &mut Mat,
+    ) -> Result<(Vec<SpikePlane>, LayerStats)> {
+        let weights = layer
+            .weights
+            .as_ref()
+            .ok_or_else(|| Error::mapping("pool layers are not mapped to the core"))?;
+        let fan_in = layer.fan_in();
+        let mode = self.select_mode(fan_in)?;
+        let (m_total, k_total) = layer.vmem_shape()?;
+        if state.rows != m_total || state.cols != k_total {
+            return Err(Error::shape(format!(
+                "state {}x{} != expected {m_total}x{k_total}",
+                state.rows, state.cols
+            )));
+        }
+        let timesteps = inputs.len();
+        if timesteps == 0 {
+            return Err(Error::config("no timesteps"));
+        }
+
+        let npr = self.cfg.precision.neurons_per_row();
+        let groups: Vec<(usize, usize)> = (0..k_total)
+            .step_by(npr)
+            .map(|lo| (lo, (lo + npr).min(k_total)))
+            .collect();
+        let pipelines = mode.pipelines();
+        let passes = groups.len().div_ceil(pipelines);
+        let tiles = m_total.div_ceil(IFSPAD_COLS);
+        let chain = mode.cus_per_pipeline();
+        let slices = split_fan_in(fan_in, chain);
+
+        let (ko, ho, wo) = layer.out_shape;
+        let mut outputs: Vec<SpikePlane> =
+            (0..timesteps).map(|_| SpikePlane::zeros(ko, ho, wo)).collect();
+
+        let mut run = RunStats::default();
+        let e = &self.cfg.energy;
+        let wb = self.cfg.precision.weight_bits();
+        let mut example_timeline = None;
+
+        // Layer-input sparsity telemetry (counted once, not per pass).
+        for inp in inputs {
+            run.spikes += inp.count_spikes();
+            run.cells += inp.len() as u64;
+        }
+        run.dense_synops = layer.dense_synops() * timesteps as u64;
+
+        for pass in 0..passes {
+            // Active (pipeline, channel-group) assignments this pass.
+            let active: Vec<(usize, usize)> = (0..pipelines)
+                .filter_map(|pi| {
+                    let g = pass * pipelines + pi;
+                    (g < groups.len()).then_some((pi, g))
+                })
+                .collect();
+
+            // Build each active pipeline's CU chain + NU.
+            let mut chains: Vec<(Vec<ComputeUnit>, NeuronMacro, usize, usize)> =
+                Vec::new();
+            for &(_, g) in &active {
+                let (ks, ke) = groups[g];
+                let cus: Vec<ComputeUnit> = slices
+                    .iter()
+                    .map(|&(lo, hi)| {
+                        let mut wslice = Mat::zeros(hi - lo, ke - ks);
+                        for (r, f) in (lo..hi).enumerate() {
+                            for (c, kk) in (ks..ke).enumerate() {
+                                wslice.set(r, c, weights.get(f, kk));
+                            }
+                        }
+                        ComputeUnit::new(lo, hi, wslice, &self.cfg)
+                    })
+                    .collect();
+                let nm = NeuronMacro::new(
+                    ke - ks,
+                    self.cfg.precision.vmem_bits(),
+                    self.cfg.overflow,
+                    layer.neuron,
+                    layer.accumulate,
+                );
+                chains.push((cus, nm, ks, ke));
+            }
+
+            for tile in 0..tiles {
+                let pixel_base = tile * IFSPAD_COLS;
+                let pixels = IFSPAD_COLS.min(m_total - pixel_base);
+                let transfer =
+                    self.cfg.transfer_cycles_per_row * 2 * pixels as u64;
+
+                let mut tile_makespan = 0u64;
+                let mut tile_sync = 0u64;
+                let mut tile_worst = 0u64;
+
+                for (ci, (cus, nm, ks, ke)) in chains.iter_mut().enumerate() {
+                    let neurons = *ke - *ks;
+                    // Restore this tile's full Vmems into the NU.
+                    let mut full = vec![0i32; IFSPAD_COLS * neurons];
+                    for p in 0..pixels {
+                        for (c, kk) in (*ks..*ke).enumerate() {
+                            full[p * neurons + c] = state.get(pixel_base + p, kk);
+                        }
+                    }
+                    nm.load_vmems(&full);
+
+                    let mut durations: Vec<Vec<u64>> =
+                        vec![vec![0; timesteps]; cus.len()];
+                    // §Perf: one partial buffer reused across timesteps
+                    let mut partial = vec![0i32; pixels * neurons];
+                    for (t, input) in inputs.iter().enumerate() {
+                        partial.fill(0);
+                        for (i, cu) in cus.iter_mut().enumerate() {
+                            let r = cu.process_tile(layer, input, pixel_base, pixels);
+                            // + the Fig.-13 "R" stage: partial-Vmem reset
+                            durations[i][t] =
+                                r.stats.cycles + self.cfg.tile_reset_cycles;
+                            // energy from this CU's tile execution
+                            run.energy.compute_macro +=
+                                r.stats.macro_ops as f64 * e.macro_op(wb);
+                            run.energy.peripheral_switch +=
+                                r.stats.parity_switches as f64 * e.e_parity_switch;
+                            run.energy.s2a += r.stats.detect_rows as f64
+                                * e.e_detect_row
+                                + (r.stats.queue_pushes + r.stats.queue_pops) as f64
+                                    * e.e_queue_op;
+                            run.energy.input_loader +=
+                                r.load.spad_writes as f64 * e.e_il_write;
+                            run.energy.ifmem +=
+                                r.load.ifmem_reads as f64 * e.e_ifmem_read;
+                            run.energy.control +=
+                                r.stats.cycles as f64 * e.e_ctrl_cycle;
+                            run.macro_ops += r.stats.macro_ops;
+                            run.synops +=
+                                r.stats.detect_spikes as u64 * neurons as u64;
+                            run.parity_switches += r.stats.parity_switches;
+                            // functional: chain-merge this CU's partials
+                            if self.cfg.functional {
+                                for p in 0..pixels {
+                                    let src = cu.partial_entry(p);
+                                    let dst =
+                                        &mut partial[p * neurons..(p + 1) * neurons];
+                                    for (d, &s) in dst.iter_mut().zip(src) {
+                                        *d = self.cfg.overflow.apply(
+                                            *d + s,
+                                            self.cfg.precision.vmem_bits(),
+                                        );
+                                    }
+                                }
+                            }
+                        }
+                        // transfers along the chain (CU→CU…→NU)
+                        let hops = cus.len() as u64;
+                        run.energy.data_movement +=
+                            hops as f64 * 2.0 * pixels as f64 * e.e_transfer_row;
+
+                        // neuron pass
+                        let out = nm.pass(&partial, pixels);
+                        run.energy.neuron_units +=
+                            out.cycles as f64 * e.e_neuron_cycle;
+                        run.energy.control += out.cycles as f64 * e.e_ctrl_cycle;
+                        if !layer.accumulate && self.cfg.functional {
+                            for p in 0..pixels {
+                                let m = pixel_base + p;
+                                let (y, x) = (m / wo, m % wo);
+                                for (c, kk) in (*ks..*ke).enumerate() {
+                                    if out.spikes[p * neurons + c] != 0 {
+                                        outputs[t].set(kk, y, x, 1);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    // persist the tile's full Vmems back to layer state
+                    if self.cfg.functional {
+                        let v = nm.vmems();
+                        for p in 0..pixels {
+                            for (c, kk) in (*ks..*ke).enumerate() {
+                                state.set(pixel_base + p, kk, v[p * neurons + c]);
+                            }
+                        }
+                    }
+
+                    // timing for this pipeline over the tile
+                    let tl = pipeline_makespan(&durations, transfer, NEURON_PASS_CYCLES);
+                    tile_sync = tile_sync
+                        .max(synchronous_makespan(&durations, transfer, NEURON_PASS_CYCLES));
+                    tile_worst = tile_worst
+                        .max(worst_case_makespan(&durations, transfer, NEURON_PASS_CYCLES));
+                    tile_makespan = tile_makespan.max(tl.makespan);
+                    if pass == 0 && tile == 0 && ci == 0 && example_timeline.is_none() {
+                        example_timeline = Some(tl);
+                    }
+                }
+
+                run.cycles += tile_makespan;
+                run.sync_cycles += tile_sync;
+                run.worst_case_cycles += tile_worst;
+            }
+        }
+
+        Ok((
+            outputs,
+            LayerStats {
+                run,
+                mode,
+                passes,
+                tiles,
+                example_timeline,
+            },
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::Precision;
+    use crate::snn::layer::{NeuronConfig, ResetMode};
+    use crate::snn::network::{NetworkBuilder, NetworkState};
+    use crate::prop::check;
+
+    fn mat_fill(rows: usize, cols: usize, f: impl Fn(usize, usize) -> i32) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                m.set(r, c, f(r, c));
+            }
+        }
+        m
+    }
+
+    fn conv_layer(in_ch: usize, out_ch: usize, h: usize, w: usize) -> Layer {
+        let f = in_ch * 9;
+        Layer::conv(
+            (in_ch, h, w),
+            out_ch,
+            3,
+            3,
+            1,
+            1,
+            mat_fill(f, out_ch, |r, c| ((r * 31 + c * 7) % 11) as i32 - 5),
+            NeuronConfig {
+                theta: 4,
+                leak: 1,
+                leaky: true,
+                reset: ResetMode::Soft,
+            },
+            false,
+        )
+        .unwrap()
+    }
+
+    fn random_frames(
+        c: usize,
+        h: usize,
+        w: usize,
+        t: usize,
+        density: f64,
+        seed: u64,
+    ) -> Vec<SpikePlane> {
+        let mut rng = crate::prop::SplitMix64::new(seed);
+        (0..t)
+            .map(|_| {
+                let mut p = SpikePlane::zeros(c, h, w);
+                for i in 0..p.len() {
+                    if rng.chance(density) {
+                        p.as_mut_slice()[i] = 1;
+                    }
+                }
+                p
+            })
+            .collect()
+    }
+
+    #[test]
+    fn mode_selection() {
+        let core = SpidrCore::new(SimConfig::default());
+        assert_eq!(core.select_mode(288).unwrap(), OperatingMode::Mode1);
+        assert_eq!(core.select_mode(385).unwrap(), OperatingMode::Mode2);
+        assert!(core.select_mode(1153).is_err());
+    }
+
+    #[test]
+    fn sim_matches_reference_network() {
+        // The core's functional output must equal Network::step's.
+        let layer = conv_layer(2, 4, 6, 6);
+        let frames = random_frames(2, 6, 6, 3, 0.3, 42);
+
+        // reference
+        let net = NetworkBuilder::new("t", Precision::W4V7, 3, (2, 6, 6))
+            .conv3x3(4, layer.weights.clone().unwrap(), layer.neuron, false)
+            .unwrap()
+            .fc(
+                1,
+                mat_fill(4 * 36, 1, |_, _| 0),
+                NeuronConfig::default(),
+                true,
+            )
+            .unwrap()
+            .build()
+            .unwrap();
+        let mut ref_state: NetworkState = net.init_state().unwrap();
+
+        // simulator
+        let core = SpidrCore::new(SimConfig::default());
+        let mut sim_state = Mat::zeros(36, 4);
+        let (sim_out, stats) = core.run_layer(&layer, &frames, &mut sim_state).unwrap();
+
+        // step the reference layer-by-layer to extract layer-1 spikes
+        for (t, f) in frames.iter().enumerate() {
+            net.step(f, &mut ref_state).unwrap();
+            // recompute reference layer output independently:
+            // (Network::step consumed it internally; easiest check is
+            // state equality below plus spike count sanity)
+            let _ = t;
+        }
+        assert_eq!(
+            ref_state.vmems[0].as_slice(),
+            sim_state.as_slice(),
+            "sim Vmem trajectory diverged from reference"
+        );
+        assert!(stats.run.macro_ops > 0);
+        assert_eq!(sim_out.len(), 3);
+    }
+
+    #[test]
+    fn multi_pass_when_channels_exceed_mode_capacity() {
+        // 40 output channels at 4-bit: mode 1 maps 36/pass -> 2 passes.
+        let layer = conv_layer(2, 40, 4, 4);
+        let frames = random_frames(2, 4, 4, 1, 0.3, 7);
+        let core = SpidrCore::new(SimConfig::default());
+        let mut state = Mat::zeros(16, 40);
+        let (_, stats) = core.run_layer(&layer, &frames, &mut state).unwrap();
+        assert_eq!(stats.passes, 2);
+        assert_eq!(stats.mode, OperatingMode::Mode1);
+    }
+
+    #[test]
+    fn mode2_used_for_large_fan_in() {
+        // 48 input channels * 9 = 432 fan-in > 384 -> mode 2
+        let layer = conv_layer(48, 4, 3, 3);
+        let frames = random_frames(48, 3, 3, 1, 0.2, 9);
+        let core = SpidrCore::new(SimConfig::default());
+        let mut state = Mat::zeros(9, 4);
+        let (_, stats) = core.run_layer(&layer, &frames, &mut state).unwrap();
+        assert_eq!(stats.mode, OperatingMode::Mode2);
+    }
+
+    #[test]
+    fn sparser_input_is_cheaper() {
+        let layer = conv_layer(2, 8, 8, 8);
+        let core = SpidrCore::new(SimConfig::timing_only(Precision::W4V7));
+        let dense = random_frames(2, 8, 8, 2, 0.4, 1);
+        let sparse = random_frames(2, 8, 8, 2, 0.05, 1);
+        let mut s1 = Mat::zeros(64, 8);
+        let (_, st_dense) = core.run_layer(&layer, &dense, &mut s1).unwrap();
+        let mut s2 = Mat::zeros(64, 8);
+        let (_, st_sparse) = core.run_layer(&layer, &sparse, &mut s2).unwrap();
+        assert!(st_sparse.run.cycles < st_dense.run.cycles);
+        assert!(st_sparse.run.energy.total() < st_dense.run.energy.total());
+    }
+
+    #[test]
+    fn async_beats_sync_beats_worst_case() {
+        let layer = conv_layer(2, 4, 8, 8);
+        let frames = random_frames(2, 8, 8, 4, 0.25, 3);
+        let core = SpidrCore::new(SimConfig::default());
+        let mut state = Mat::zeros(64, 4);
+        let (_, st) = core.run_layer(&layer, &frames, &mut state).unwrap();
+        assert!(st.run.cycles <= st.run.sync_cycles);
+        assert!(st.run.sync_cycles <= st.run.worst_case_cycles);
+    }
+
+    #[test]
+    fn prop_functional_independent_of_precision_geometry() {
+        // Same weights, same inputs: functional Vmems must not depend
+        // on timing knobs (fifo depth, switch cost, zero-skipping).
+        check("functional_invariance", 10, |g| {
+            let layer = conv_layer(1, 3, 5, 5);
+            let frames = random_frames(1, 5, 5, 2, 0.3, g.u64());
+            let mut base_state = Mat::zeros(25, 3);
+            let core = SpidrCore::new(SimConfig::default());
+            core.run_layer(&layer, &frames, &mut base_state).unwrap();
+
+            let mut cfg = SimConfig::default();
+            cfg.fifo_depth = 1 + g.index(32);
+            cfg.parity_switch_cycles = g.u64_in(0..=4);
+            cfg.zero_skipping = g.chance(0.5);
+            let core2 = SpidrCore::new(cfg);
+            let mut state2 = Mat::zeros(25, 3);
+            core2.run_layer(&layer, &frames, &mut state2).unwrap();
+            base_state.as_slice() == state2.as_slice()
+        });
+    }
+}

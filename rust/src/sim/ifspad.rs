@@ -1,0 +1,130 @@
+//! The 128x16 dual-port input scratchpad (IFspad).
+//!
+//! Row `Y` maps to weight row `Y` of the compute macro; column `X`
+//! maps to the staggered Vmem row pair `(2X, 2X+1)` (paper Fig. 9).
+//! The input loader writes through one port while the spike detector
+//! reads through the other, which is what hides the hardware-im2col
+//! latency (paper §II-D).
+
+use super::config::{IFSPAD_COLS, IFSPAD_ROWS};
+
+/// IFspad contents: one 16-bit spike mask per row.
+#[derive(Debug, Clone)]
+pub struct IfSpad {
+    rows: [u16; IFSPAD_ROWS],
+    /// Rows that carry valid data for the current tile (fan-in slice
+    /// length); the detector does not scan beyond this.
+    pub valid_rows: usize,
+    /// Columns that carry valid data (output pixels in the tile).
+    pub valid_cols: usize,
+}
+
+impl Default for IfSpad {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl IfSpad {
+    /// Empty scratchpad.
+    pub fn new() -> Self {
+        IfSpad {
+            rows: [0; IFSPAD_ROWS],
+            valid_rows: 0,
+            valid_cols: 0,
+        }
+    }
+
+    /// Clear all rows and validity (new tile).
+    pub fn clear(&mut self, valid_rows: usize, valid_cols: usize) {
+        debug_assert!(valid_rows <= IFSPAD_ROWS && valid_cols <= IFSPAD_COLS);
+        self.rows = [0; IFSPAD_ROWS];
+        self.valid_rows = valid_rows;
+        self.valid_cols = valid_cols;
+    }
+
+    /// Write one spike bit (input-loader port).
+    #[inline(always)]
+    pub fn write(&mut self, y: usize, x: usize, v: bool) {
+        debug_assert!(y < IFSPAD_ROWS && x < IFSPAD_COLS);
+        if v {
+            self.rows[y] |= 1 << x;
+        } else {
+            self.rows[y] &= !(1 << x);
+        }
+    }
+
+    /// Write a whole row mask at once (the loader's row-granular path).
+    #[inline(always)]
+    pub fn write_row(&mut self, y: usize, mask: u16) {
+        debug_assert!(y < IFSPAD_ROWS);
+        self.rows[y] = mask;
+    }
+
+    /// Read one spike bit (detector port).
+    #[inline(always)]
+    pub fn read(&self, y: usize, x: usize) -> bool {
+        self.rows[y] & (1 << x) != 0
+    }
+
+    /// Read a row mask (detector port).
+    #[inline(always)]
+    pub fn row_mask(&self, y: usize) -> u16 {
+        self.rows[y]
+    }
+
+    /// Spikes currently stored (valid region only).
+    pub fn count_spikes(&self) -> u32 {
+        self.rows[..self.valid_rows]
+            .iter()
+            .map(|r| r.count_ones())
+            .sum()
+    }
+
+    /// Density over the valid region.
+    pub fn density(&self) -> f64 {
+        let cells = (self.valid_rows * self.valid_cols) as f64;
+        if cells == 0.0 {
+            return 0.0;
+        }
+        self.count_spikes() as f64 / cells
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_read_roundtrip() {
+        let mut s = IfSpad::new();
+        s.clear(128, 16);
+        s.write(5, 3, true);
+        assert!(s.read(5, 3));
+        assert!(!s.read(5, 2));
+        s.write(5, 3, false);
+        assert!(!s.read(5, 3));
+    }
+
+    #[test]
+    fn row_mask_and_count() {
+        let mut s = IfSpad::new();
+        s.clear(4, 16);
+        s.write_row(0, 0b1010);
+        s.write_row(3, 0b0001);
+        assert_eq!(s.row_mask(0), 0b1010);
+        assert_eq!(s.count_spikes(), 3);
+        assert!((s.density() - 3.0 / 64.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut s = IfSpad::new();
+        s.clear(128, 16);
+        s.write(0, 0, true);
+        s.clear(10, 8);
+        assert_eq!(s.count_spikes(), 0);
+        assert_eq!(s.valid_rows, 10);
+        assert_eq!(s.valid_cols, 8);
+    }
+}

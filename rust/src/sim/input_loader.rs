@@ -1,0 +1,201 @@
+//! The input loader: hardware im2col into the IFspad (paper §II-D).
+//!
+//! For each tile (a group of ≤16 output pixels) and each CU's fan-in
+//! slice, the loader reads rows from the IFmem (the raw input spike
+//! frame) and writes aligned rows into the IFspad, folding zero
+//! padding and stride into the layout. The write port runs concurrently
+//! with the S2A's read port, so detection starts as soon as the first
+//! rows land — modeled by the per-row ready schedule this module emits.
+
+use crate::snn::layer::{Layer, LayerKind};
+use crate::snn::spikes::SpikePlane;
+
+use super::ifspad::IfSpad;
+
+/// Per-tile loader output: IFspad contents plus the write schedule.
+#[derive(Debug, Clone)]
+pub struct LoadedTile {
+    /// Cycle at which each IFspad row became valid (one row per cycle
+    /// through the write port, starting at cycle 1).
+    pub row_ready: Vec<u64>,
+    /// IFmem rows read to assemble this tile.
+    pub ifmem_reads: u64,
+    /// IFspad row writes performed.
+    pub spad_writes: u64,
+}
+
+/// Fill the IFspad for one conv/FC tile.
+///
+/// * `layer` — the layer being executed.
+/// * `input` — the input spike plane for this timestep.
+/// * `pixel_base` — first output-pixel index of the tile (`m` index).
+/// * `pixels` — pixels in this tile (≤ 16).
+/// * `fan_lo..fan_hi` — this CU's fan-in slice.
+pub fn load_tile(
+    layer: &Layer,
+    input: &SpikePlane,
+    pixel_base: usize,
+    pixels: usize,
+    fan_lo: usize,
+    fan_hi: usize,
+    spad: &mut IfSpad,
+) -> LoadedTile {
+    debug_assert!(pixels <= super::config::IFSPAD_COLS);
+    let rows = fan_hi - fan_lo;
+    spad.clear(rows, pixels);
+
+    let (_, _, wo) = layer.out_shape;
+    let mut ready = Vec::with_capacity(rows);
+    let mut ifmem_reads = 0u64;
+
+    match layer.kind {
+        LayerKind::Conv => {
+            // Hot path (§Perf): decompose the fan-in index once per row
+            // and walk output pixels incrementally instead of calling
+            // patch_value per cell (saves 2 div/mod per cell).
+            let kh = layer.kh;
+            let kw = layer.kw;
+            let stride = layer.stride as isize;
+            let pad = layer.pad as isize;
+            let (ih, iw) = (input.h as isize, input.w as isize);
+            for (r, f) in (fan_lo..fan_hi).enumerate() {
+                let c = f / (kh * kw);
+                let rem = f % (kh * kw);
+                let dy = (rem / kw) as isize;
+                let dx = (rem % kw) as isize;
+                let mut mask: u16 = 0;
+                let mut oy = (pixel_base / wo) as isize;
+                let mut ox = (pixel_base % wo) as isize;
+                for p in 0..pixels {
+                    let iy = oy * stride + dy - pad;
+                    let ix = ox * stride + dx - pad;
+                    if iy >= 0
+                        && ix >= 0
+                        && iy < ih
+                        && ix < iw
+                        && input.get(c, iy as usize, ix as usize) != 0
+                    {
+                        mask |= 1 << p;
+                    }
+                    ox += 1;
+                    if ox == wo as isize {
+                        ox = 0;
+                        oy += 1;
+                    }
+                }
+                debug_assert_eq!(mask & !((1u32 << pixels) as u16).wrapping_sub(1), 0);
+                spad.write_row(r, mask);
+                // The loader streams one IFmem row read + one IFspad
+                // row write per cycle; row r is readable at cycle r+1.
+                ready.push(r as u64 + 1);
+                ifmem_reads += 1;
+            }
+        }
+        LayerKind::Fc => {
+            // FC: tile is the single output "pixel"; fan-in is the
+            // flattened input. Each IFspad row holds one input bit in
+            // column 0 (no weight reuse: only 2 of 32 Vmem rows used).
+            let flat = input.as_slice();
+            for (r, f) in (fan_lo..fan_hi).enumerate() {
+                let mask: u16 = if flat[f] != 0 { 1 } else { 0 };
+                spad.write_row(r, mask);
+                ready.push(r as u64 + 1);
+                ifmem_reads += 1;
+            }
+        }
+        LayerKind::Pool => panic!("pool layers are not mapped to compute units"),
+    }
+
+    LoadedTile {
+        row_ready: ready,
+        ifmem_reads,
+        spad_writes: rows as u64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::layer::NeuronConfig;
+    use crate::snn::tensor::Mat;
+
+    fn conv_layer() -> Layer {
+        Layer::conv(
+            (1, 4, 4),
+            2,
+            3,
+            3,
+            1,
+            1,
+            Mat::zeros(9, 2),
+            NeuronConfig::default(),
+            false,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn conv_tile_matches_patch_values() {
+        let layer = conv_layer();
+        let mut input = SpikePlane::zeros(1, 4, 4);
+        input.set(0, 1, 1, 1);
+        input.set(0, 2, 3, 1);
+        let mut spad = IfSpad::new();
+        let t = load_tile(&layer, &input, 0, 16, 0, 9, &mut spad);
+        assert_eq!(t.spad_writes, 9);
+        assert_eq!(t.ifmem_reads, 9);
+        // spot-check: output pixel m=0 (0,0), tap f=8 is input (1,1)
+        assert!(spad.read(8, 0));
+        // output pixel m=5 (1,1), center tap f=4 is input (1,1)
+        assert!(spad.read(4, 5));
+    }
+
+    #[test]
+    fn fan_in_slicing() {
+        let layer = conv_layer();
+        let mut input = SpikePlane::zeros(1, 4, 4);
+        input.set(0, 1, 1, 1);
+        let mut spad = IfSpad::new();
+        load_tile(&layer, &input, 0, 16, 4, 9, &mut spad);
+        assert_eq!(spad.valid_rows, 5);
+        // f=4 now lands at local row 0
+        assert!(spad.read(0, 5));
+    }
+
+    #[test]
+    fn partial_tile_fewer_cols() {
+        let layer = conv_layer();
+        let input = SpikePlane::zeros(1, 4, 4);
+        let mut spad = IfSpad::new();
+        load_tile(&layer, &input, 0, 7, 0, 9, &mut spad);
+        assert_eq!(spad.valid_cols, 7);
+    }
+
+    #[test]
+    fn fc_tile_uses_column_zero() {
+        let layer = Layer::fc(
+            (1, 2, 2),
+            3,
+            Mat::zeros(4, 3),
+            NeuronConfig::default(),
+            true,
+        )
+        .unwrap();
+        let mut input = SpikePlane::zeros(1, 2, 2);
+        input.set(0, 1, 0, 1); // flat index 2
+        let mut spad = IfSpad::new();
+        load_tile(&layer, &input, 0, 1, 0, 4, &mut spad);
+        assert!(spad.read(2, 0));
+        assert!(!spad.read(1, 0));
+        assert_eq!(spad.count_spikes(), 1);
+    }
+
+    #[test]
+    fn ready_schedule_is_streaming() {
+        let layer = conv_layer();
+        let input = SpikePlane::zeros(1, 4, 4);
+        let mut spad = IfSpad::new();
+        let t = load_tile(&layer, &input, 0, 16, 0, 9, &mut spad);
+        assert_eq!(t.row_ready, (1..=9).collect::<Vec<u64>>());
+    }
+}

@@ -1,0 +1,39 @@
+//! Cycle-level simulator of the SpiDR SNN core (the paper's §II).
+//!
+//! The simulated microarchitecture:
+//!
+//! ```text
+//!              ┌────────────────────────── SNN core ───────────────────────────┐
+//!              │  CU1 ─ CU2 ─ CU3 ─► NU1     (Mode 1: three 3-CU pipelines)    │
+//!  events ──►  │  CU4 ─ CU5 ─ CU6 ─► NU2     (Mode 2: CU1─…─CU9 ─► NU1)        │
+//!              │  CU7 ─ CU8 ─ CU9 ─► NU3                                       │
+//!              └────────────────────────────────────────────────────────────────┘
+//!  CU = IFmem → input loader → IFspad(128x16) → S2A → compute macro (160x48)
+//!  NU = neuron SRAM controller → neuron macro (72x48)
+//! ```
+//!
+//! Timing is cycle-approximate at the unit level (every FIFO push/pop,
+//! parity switch, macro pass, transfer and neuron pass is counted;
+//! bit-level switching inside a pass is aggregated), and the functional
+//! datapath is bit-exact against the JAX golden model (wrap-around
+//! B_v-bit accumulation, the [`crate::quant`] contract).
+
+pub mod compute_macro;
+pub mod compute_unit;
+pub mod config;
+pub mod core;
+pub mod ifspad;
+pub mod input_loader;
+pub mod neuron_macro;
+pub mod pipeline;
+pub mod s2a;
+pub mod stats;
+
+pub use compute_macro::ComputeMacro;
+pub use compute_unit::{ComputeUnit, TileCuStats};
+pub use config::{OperatingMode, SimConfig, IFSPAD_COLS, IFSPAD_ROWS, NUM_CU, NUM_NU};
+pub use core::{LayerStats, SpidrCore};
+pub use ifspad::IfSpad;
+pub use neuron_macro::NeuronMacro;
+pub use pipeline::{pipeline_makespan, synchronous_makespan, PipelineTimeline};
+pub use stats::RunStats;

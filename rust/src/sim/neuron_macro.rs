@@ -1,0 +1,203 @@
+//! The 72x48 neuron macro (paper §II-A).
+//!
+//! 32 rows hold incoming partial Vmems, 32 rows hold full Vmems, and 8
+//! parameter rows hold thresholds/leaks. One pass costs 66 cycles
+//! (eq. 3: 2·32 partial→full accumulation + threshold cycles, +2
+//! pipeline fill/drain) regardless of spike activity — the fixed-time
+//! stage the asynchronous handshake hides behind variable CU times.
+
+use crate::quant::Overflow;
+use crate::snn::layer::{NeuronConfig, ResetMode};
+
+use super::config::{IFSPAD_COLS, NEURON_PASS_CYCLES};
+
+/// One neuron macro holding full Vmems for the current tile.
+#[derive(Debug, Clone)]
+pub struct NeuronMacro {
+    /// Full Vmems: `IFSPAD_COLS` entries x `neurons`, row-major.
+    vmem: Vec<i32>,
+    /// Neurons per entry.
+    pub neurons: usize,
+    /// Vmem bit width.
+    pub vmem_bits: u32,
+    /// Overflow policy.
+    pub overflow: Overflow,
+    /// Neuron dynamics configuration (from the parameter rows).
+    pub config: NeuronConfig,
+    /// Non-spiking accumulator mode (output layers).
+    pub accumulate: bool,
+}
+
+/// Result of one neuron pass.
+#[derive(Debug, Clone)]
+pub struct NeuronPass {
+    /// Spikes emitted: `entries x neurons`, row-major (empty in
+    /// accumulate mode).
+    pub spikes: Vec<u8>,
+    /// Fixed pass latency in cycles.
+    pub cycles: u64,
+}
+
+impl NeuronMacro {
+    /// New neuron macro for up to `neurons` mapped columns.
+    pub fn new(
+        neurons: usize,
+        vmem_bits: u32,
+        overflow: Overflow,
+        config: NeuronConfig,
+        accumulate: bool,
+    ) -> Self {
+        NeuronMacro {
+            vmem: vec![0; IFSPAD_COLS * neurons],
+            neurons,
+            vmem_bits,
+            overflow,
+            config,
+            accumulate,
+        }
+    }
+
+    /// Load full Vmems for a new tile (restored from the layer's state).
+    pub fn load_vmems(&mut self, values: &[i32]) {
+        debug_assert_eq!(values.len(), self.vmem.len());
+        self.vmem.copy_from_slice(values);
+    }
+
+    /// Current full Vmems (to persist back into layer state).
+    pub fn vmems(&self) -> &[i32] {
+        &self.vmem
+    }
+
+    /// Run one pass: shift-leak, integrate partials, fire, reset,
+    /// floor-clamp (the ordering contract of
+    /// `kernels/ref.py::neuron_update_ref`).
+    ///
+    /// `partials` is `entries x neurons` row-major, `entries` the
+    /// number of valid Vmem entries in the tile.
+    pub fn pass(&mut self, partials: &[i32], entries: usize) -> NeuronPass {
+        debug_assert!(entries <= IFSPAD_COLS);
+        debug_assert_eq!(partials.len(), entries * self.neurons);
+        let mut spikes = if self.accumulate {
+            Vec::new()
+        } else {
+            vec![0u8; entries * self.neurons]
+        };
+        let NeuronConfig {
+            theta,
+            leak,
+            leaky,
+            reset,
+        } = self.config;
+        for e in 0..entries {
+            for k in 0..self.neurons {
+                let idx = e * self.neurons + k;
+                let mut v = self.vmem[idx];
+                if !self.accumulate && leaky && leak > 0 {
+                    v -= v >> leak.clamp(1, 30) as u32;
+                }
+                v = self.overflow.apply(v + partials[idx], self.vmem_bits);
+                if !self.accumulate && v >= theta {
+                    spikes[idx] = 1;
+                    v = match reset {
+                        ResetMode::Hard => 0,
+                        ResetMode::Soft => {
+                            self.overflow.apply(v - theta, self.vmem_bits)
+                        }
+                    };
+                }
+                if !self.accumulate {
+                    // digital underflow floor (see DESIGN.md §2)
+                    v = v.max(-theta);
+                }
+                self.vmem[idx] = v;
+            }
+        }
+        NeuronPass {
+            spikes,
+            cycles: NEURON_PASS_CYCLES,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::wrap_to_bits;
+
+    fn nm(theta: i32, leaky: bool, reset: ResetMode, accumulate: bool) -> NeuronMacro {
+        NeuronMacro::new(
+            4,
+            7,
+            Overflow::Wrap,
+            NeuronConfig {
+                theta,
+                leak: 2,
+                leaky,
+                reset,
+            },
+            accumulate,
+        )
+    }
+
+    #[test]
+    fn pass_cost_is_fixed_66() {
+        let mut m = nm(10, false, ResetMode::Soft, false);
+        let p = vec![0i32; 16 * 4];
+        assert_eq!(m.pass(&p, 16).cycles, 66);
+    }
+
+    #[test]
+    fn integrate_fire_soft_reset() {
+        let mut m = nm(10, false, ResetMode::Soft, false);
+        let mut partials = vec![0i32; 4];
+        partials[0] = 25;
+        let out = m.pass(&partials, 1);
+        assert_eq!(out.spikes[0], 1);
+        assert_eq!(m.vmems()[0], 15); // 25 - 10
+    }
+
+    #[test]
+    fn integrate_fire_hard_reset() {
+        let mut m = nm(10, false, ResetMode::Hard, false);
+        let mut partials = vec![0i32; 4];
+        partials[0] = 25;
+        m.pass(&partials, 1);
+        assert_eq!(m.vmems()[0], 0);
+    }
+
+    #[test]
+    fn leak_applies_before_integration() {
+        let mut m = nm(100, true, ResetMode::Soft, false);
+        m.load_vmems(&{
+            let mut v = vec![0i32; 16 * 4];
+            v[0] = 10;
+            v
+        });
+        let mut partials = vec![0i32; 4];
+        partials[0] = 5;
+        m.pass(&partials, 1);
+        // leak 2: 10 -> 8, then +5 -> 13
+        assert_eq!(m.vmems()[0], 13);
+    }
+
+    #[test]
+    fn accumulate_mode_never_fires_and_wraps() {
+        let mut m = nm(1, false, ResetMode::Soft, true);
+        let partials = vec![60i32; 4];
+        let o1 = m.pass(&partials, 1);
+        assert!(o1.spikes.is_empty());
+        m.pass(&partials, 1);
+        assert_eq!(m.vmems()[0], wrap_to_bits(120, 7));
+    }
+
+    #[test]
+    fn threshold_is_inclusive() {
+        let mut m = nm(10, false, ResetMode::Soft, false);
+        let mut partials = vec![0i32; 4];
+        partials[0] = 10;
+        partials[1] = 9;
+        let out = m.pass(&partials, 1);
+        assert_eq!(out.spikes[0], 1);
+        assert_eq!(out.spikes[1], 0);
+    }
+}

@@ -1,0 +1,187 @@
+//! Timestep pipelining with asynchronous handshaking (paper §II-F,
+//! Fig. 13).
+//!
+//! Within one tile, compute units process *different timesteps*
+//! concurrently: CU_i integrates its local fan-in slice for timestep
+//! `t`, then the partial Vmems hop along the chain
+//! (CU_1 → CU_2 → … → NU), each hop a rendezvous handshake. A unit can
+//! start its next timestep the moment it has forwarded the previous
+//! one — so delays come only from true data dependence, not from a
+//! global clocked schedule.
+//!
+//! This module computes the resulting schedule as a discrete-event
+//! recurrence (the simulator's timing model) and, for comparison, the
+//! synchronous-baseline schedules the paper argues against.
+
+/// Timeline of one pipeline over a tile: per-unit busy intervals.
+#[derive(Debug, Clone)]
+pub struct PipelineTimeline {
+    /// `intervals[i][t] = (start, end)` of unit `i`'s local compute for
+    /// timestep `t` (units: chained CUs, then the NU last).
+    pub intervals: Vec<Vec<(u64, u64)>>,
+    /// Total makespan in cycles.
+    pub makespan: u64,
+}
+
+/// Asynchronous-handshake schedule.
+///
+/// * `cu_durations[i][t]` — local compute cycles of chained unit `i`
+///   at timestep `t` (sparsity-dependent).
+/// * `transfer` — cycles to hand a tile's partial Vmems to the next
+///   unit (32 staggered rows, row per cycle, plus handshake).
+/// * `nu_cycles` — the neuron unit's fixed pass time (66).
+///
+/// Recurrence: unit `i` starts timestep `t` once it has forwarded
+/// timestep `t-1`; it forwards `t` once its local compute is done AND
+/// the upstream partial for `t` has arrived.
+pub fn pipeline_makespan(
+    cu_durations: &[Vec<u64>],
+    transfer: u64,
+    nu_cycles: u64,
+) -> PipelineTimeline {
+    let n = cu_durations.len();
+    assert!(n > 0);
+    let timesteps = cu_durations[0].len();
+    let mut intervals = vec![vec![(0u64, 0u64); timesteps]; n + 1];
+    // forward[i][t]: cycle at which unit i has handed timestep t on.
+    let mut forward = vec![vec![0u64; timesteps]; n];
+    let mut nu_end = vec![0u64; timesteps];
+
+    for t in 0..timesteps {
+        for i in 0..n {
+            let free = if t == 0 { 0 } else { forward[i][t - 1] };
+            let start = free;
+            let local_end = start + cu_durations[i][t];
+            intervals[i][t] = (start, local_end);
+            let upstream = if i == 0 {
+                0
+            } else {
+                forward[i - 1][t]
+            };
+            forward[i][t] = local_end.max(upstream) + transfer;
+        }
+        let nu_free = if t == 0 { 0 } else { nu_end[t - 1] };
+        let nu_start = forward[n - 1][t].max(nu_free);
+        nu_end[t] = nu_start + nu_cycles;
+        intervals[n][t] = (nu_start, nu_end[t]);
+    }
+
+    PipelineTimeline {
+        makespan: nu_end[timesteps - 1],
+        intervals,
+    }
+}
+
+/// Lockstep-synchronous baseline: every stage advances on a global
+/// barrier per timestep (stage time = the slowest unit that timestep).
+pub fn synchronous_makespan(
+    cu_durations: &[Vec<u64>],
+    transfer: u64,
+    nu_cycles: u64,
+) -> u64 {
+    let n = cu_durations.len();
+    let timesteps = cu_durations[0].len();
+    let mut total = 0u64;
+    for t in 0..timesteps {
+        let slowest = (0..n).map(|i| cu_durations[i][t]).max().unwrap_or(0);
+        total += slowest + n as u64 * transfer + nu_cycles;
+    }
+    total
+}
+
+/// Worst-case-provisioned baseline: a fixed schedule sized for the
+/// slowest unit-timestep anywhere (what a constant-time pipeline must
+/// assume, per §II-F).
+pub fn worst_case_makespan(
+    cu_durations: &[Vec<u64>],
+    transfer: u64,
+    nu_cycles: u64,
+) -> u64 {
+    let n = cu_durations.len();
+    let timesteps = cu_durations[0].len() as u64;
+    let worst = cu_durations
+        .iter()
+        .flat_map(|d| d.iter().copied())
+        .max()
+        .unwrap_or(0);
+    timesteps * (worst + n as u64 * transfer + nu_cycles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::check;
+
+    #[test]
+    fn single_unit_single_timestep() {
+        let tl = pipeline_makespan(&[vec![100]], 2, 66);
+        assert_eq!(tl.makespan, 100 + 2 + 66);
+        assert_eq!(tl.intervals[0][0], (0, 100));
+    }
+
+    #[test]
+    fn timesteps_pipeline_across_units() {
+        // 3 units, 4 timesteps, uniform 100-cycle work: async should
+        // approach 100/timestep steady-state, not 300.
+        let d = vec![vec![100; 4]; 3];
+        let tl = pipeline_makespan(&d, 1, 66);
+        let sync = synchronous_makespan(&d, 1, 66);
+        assert!(tl.makespan < sync, "async {} sync {}", tl.makespan, sync);
+        // unit 0 starts timestep 1 right after forwarding timestep 0
+        let (s1, _) = tl.intervals[0][1];
+        assert_eq!(s1, 100 + 1);
+    }
+
+    #[test]
+    fn variable_durations_only_data_dependent_delay() {
+        // CU2 slow at t0; CU1's t1 shouldn't wait for CU2 beyond the
+        // forwarding handshake.
+        let d = vec![vec![10, 10], vec![500, 10]];
+        let tl = pipeline_makespan(&d, 1, 66);
+        let (s, _) = tl.intervals[0][1];
+        assert_eq!(s, 11); // forwarded t0 at 10+1
+    }
+
+    #[test]
+    fn worst_case_dominates_all() {
+        let d = vec![vec![10, 200, 30], vec![40, 50, 60]];
+        let wc = worst_case_makespan(&d, 2, 66);
+        let sync = synchronous_makespan(&d, 2, 66);
+        let tl = pipeline_makespan(&d, 2, 66);
+        assert!(wc >= sync);
+        assert!(sync >= tl.makespan);
+    }
+
+    #[test]
+    fn prop_async_never_worse_than_sync() {
+        check("async_le_sync", 100, |g| {
+            let units = 1 + g.index(9);
+            let steps = 1 + g.index(6);
+            let d: Vec<Vec<u64>> = (0..units)
+                .map(|_| (0..steps).map(|_| g.u64_in(1..=300)).collect())
+                .collect();
+            let transfer = g.u64_in(0..=8);
+            let tl = pipeline_makespan(&d, transfer, 66);
+            tl.makespan <= synchronous_makespan(&d, transfer, 66)
+        });
+    }
+
+    #[test]
+    fn prop_makespan_at_least_critical_path() {
+        check("critical_path", 100, |g| {
+            let units = 1 + g.index(5);
+            let steps = 1 + g.index(5);
+            let d: Vec<Vec<u64>> = (0..units)
+                .map(|_| (0..steps).map(|_| g.u64_in(1..=100)).collect())
+                .collect();
+            let tl = pipeline_makespan(&d, 1, 66);
+            // lower bounds: any single unit's total work; NU serial time
+            let nu_lb = steps as u64 * 66;
+            let unit_lb = (0..units)
+                .map(|i| d[i].iter().sum::<u64>())
+                .max()
+                .unwrap();
+            tl.makespan >= nu_lb && tl.makespan >= unit_lb
+        });
+    }
+}

@@ -1,0 +1,390 @@
+//! Spike-to-address converter: spike detector, even/odd ping-pong
+//! FIFOs, and the macro SRAM controller (paper §II-B/C, Figs. 9–11).
+//!
+//! The detector (a trailing-zero scanner) reads IFspad rows through the
+//! read port as soon as the input loader has written them, emitting
+//! `(Y, X)` address tuples into the *even* FIFO. The controller drains
+//! the even FIFO — one macro pass per cycle — re-queuing each tuple
+//! into the *odd* FIFO, and switches parity only when the current FIFO
+//! runs empty or the other fills up. This batches same-parity passes,
+//! amortizing the peripheral reconfiguration energy (Fig. 10: ~1.5x
+//! energy/op at batch 15 vs. switching every cycle).
+
+use std::collections::VecDeque;
+
+use super::compute_macro::{ComputeMacro, Parity};
+use super::ifspad::IfSpad;
+
+/// S2A policy knobs (a view of the relevant `SimConfig` fields).
+#[derive(Debug, Clone, Copy)]
+pub struct S2aOptions {
+    /// Even/odd FIFO depth.
+    pub fifo_depth: usize,
+    /// Cycles lost per parity switch.
+    pub switch_cycles: u64,
+    /// Ping-pong batching on (silicon behavior). When off, each tuple
+    /// is processed even-then-odd immediately — the naive policy whose
+    /// overhead Fig. 10 quantifies.
+    pub ping_pong: bool,
+    /// Detector cycles per extracted spike address (trailing-zero
+    /// priority encode + FIFO write handshake).
+    pub detector_cycles_per_spike: u64,
+}
+
+impl Default for S2aOptions {
+    fn default() -> Self {
+        S2aOptions {
+            fifo_depth: super::config::FIFO_DEPTH,
+            switch_cycles: 1,
+            ping_pong: true,
+            detector_cycles_per_spike: 2,
+        }
+    }
+}
+
+/// Per-tile, per-CU execution statistics.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TileCuStats {
+    /// Total cycles from tile start until the last odd pass retires.
+    pub cycles: u64,
+    /// Macro accumulation passes executed (even + odd).
+    pub macro_ops: u64,
+    /// Peripheral parity switches.
+    pub parity_switches: u64,
+    /// IFspad rows scanned by the detector.
+    pub detect_rows: u64,
+    /// Spike addresses extracted.
+    pub detect_spikes: u64,
+    /// FIFO pushes (even + odd).
+    pub queue_pushes: u64,
+    /// FIFO pops.
+    pub queue_pops: u64,
+    /// Cycles the detector stalled on a full even FIFO.
+    pub detector_stalls: u64,
+    /// Cycles the controller idled waiting for addresses.
+    pub controller_idle: u64,
+}
+
+impl TileCuStats {
+    /// Merge another tile's stats (sequential composition).
+    pub fn add(&mut self, o: &TileCuStats) {
+        self.cycles += o.cycles;
+        self.macro_ops += o.macro_ops;
+        self.parity_switches += o.parity_switches;
+        self.detect_rows += o.detect_rows;
+        self.detect_spikes += o.detect_spikes;
+        self.queue_pushes += o.queue_pushes;
+        self.queue_pops += o.queue_pops;
+        self.detector_stalls += o.detector_stalls;
+        self.controller_idle += o.controller_idle;
+    }
+}
+
+/// Simulate one tile through the S2A + compute macro.
+///
+/// `row_ready[y]` is the cycle at which the input loader finished
+/// writing IFspad row `y` (the dual-port overlap); the detector reads a
+/// row no earlier than that.
+pub fn run_tile(
+    spad: &IfSpad,
+    row_ready: &[u64],
+    cm: &mut ComputeMacro,
+    opts: &S2aOptions,
+) -> TileCuStats {
+    let mut st = TileCuStats::default();
+    let valid_rows = spad.valid_rows;
+    debug_assert!(row_ready.len() >= valid_rows);
+
+    // Detector state.
+    let mut det_y = 0usize; // next row to scan
+    let mut det_pending: u16 = 0; // spikes left to extract from current row
+    let mut det_row: usize = 0; // row the pending mask belongs to
+    let mut det_t: u64 = 0; // detector's local clock
+
+    // Controller state.
+    let mut even_q: VecDeque<(u8, u8)> = VecDeque::with_capacity(opts.fifo_depth);
+    let mut odd_q: VecDeque<(u8, u8)> = VecDeque::with_capacity(opts.fifo_depth);
+    let mut parity = Parity::Even;
+    let mut ctrl_t: u64 = 0;
+    // R/C/S pipeline fill (2 cycles) before the first pass retires.
+    let mut first_op_done = false;
+    let mut busy_cycles: u64 = 0;
+
+    loop {
+        let det_done = det_y >= valid_rows && det_pending == 0;
+        if det_done && even_q.is_empty() && odd_q.is_empty() {
+            break;
+        }
+
+        // Earliest cycle at which the detector can take its next action
+        // (reading a new row waits for the input loader's write).
+        let det_next = if det_done {
+            u64::MAX
+        } else if det_pending != 0 {
+            det_t
+        } else {
+            det_t.max(row_ready[det_y])
+        };
+
+        let ctrl_has_work = match parity {
+            Parity::Even => !even_q.is_empty() && odd_q.len() < opts.fifo_depth,
+            Parity::Odd => !odd_q.is_empty(),
+        };
+        // Switch policy (paper §II-C): leave Even when the odd FIFO is
+        // full or the even FIFO has drained (and no address arrives by
+        // the controller's current cycle); leave Odd when the odd FIFO
+        // has drained. The naive non-ping-pong policy switches after
+        // every op.
+        let ctrl_should_switch = match parity {
+            Parity::Even => {
+                let odd_full = odd_q.len() >= opts.fifo_depth && !even_q.is_empty();
+                let even_drained =
+                    even_q.is_empty() && !odd_q.is_empty() && det_next > ctrl_t;
+                let naive = !opts.ping_pong && !odd_q.is_empty();
+                odd_full || even_drained || naive
+            }
+            Parity::Odd => odd_q.is_empty() && (!even_q.is_empty() || !det_done),
+        };
+        let ctrl_can_act = ctrl_has_work || ctrl_should_switch;
+
+        // Causal interleave: the agent with the earlier clock acts;
+        // ties go to the controller (a pop frees FIFO space for a push
+        // in the same cycle).
+        if ctrl_can_act && ctrl_t <= det_next {
+            // A pending switch preempts further same-parity pops: for
+            // ping-pong the two are mutually exclusive anyway; for the
+            // naive policy the switch after every op is the whole point.
+            if ctrl_should_switch {
+                parity = parity.flip();
+                st.parity_switches += 1;
+                ctrl_t += opts.switch_cycles;
+                busy_cycles += opts.switch_cycles;
+            } else if ctrl_has_work {
+                match parity {
+                    Parity::Even => {
+                        let (y, x) = even_q.pop_front().unwrap();
+                        st.queue_pops += 1;
+                        cm.op(y as usize, x as usize, Parity::Even);
+                        st.macro_ops += 1;
+                        odd_q.push_back((y, x));
+                        st.queue_pushes += 1;
+                    }
+                    Parity::Odd => {
+                        let (y, x) = odd_q.pop_front().unwrap();
+                        st.queue_pops += 1;
+                        cm.op(y as usize, x as usize, Parity::Odd);
+                        st.macro_ops += 1;
+                    }
+                }
+                if !first_op_done {
+                    ctrl_t += 2; // pipeline fill
+                    busy_cycles += 2;
+                    first_op_done = true;
+                }
+                ctrl_t += 1;
+                busy_cycles += 1;
+            }
+            continue;
+        }
+
+        if !det_done {
+            // Detector acts at det_next.
+            det_t = det_next;
+            if det_pending == 0 {
+                // read the next row (1 cycle), latch its spike mask
+                det_pending = spad.row_mask(det_y) & mask_cols(spad.valid_cols);
+                det_row = det_y;
+                det_y += 1;
+                st.detect_rows += 1;
+                det_t += 1;
+            } else if even_q.len() >= opts.fifo_depth {
+                // stall until the controller frees a slot; the
+                // controller necessarily has work (queues non-empty)
+                let wait = ctrl_t.max(det_t + 1);
+                st.detector_stalls += wait - det_t;
+                det_t = wait;
+            } else {
+                // extract one trailing spike (1 cycle) and push it
+                let x = det_pending.trailing_zeros() as u8;
+                det_pending &= det_pending - 1;
+                even_q.push_back((det_row as u8, x));
+                st.queue_pushes += 1;
+                st.detect_spikes += 1;
+                det_t += opts.detector_cycles_per_spike;
+            }
+            // The controller cannot act before the detector's clock if
+            // it has nothing to do: fast-forward it (starvation).
+            if !ctrl_can_act && ctrl_t < det_t {
+                ctrl_t = det_t;
+            }
+            continue;
+        }
+
+        // det_done and controller can't act => queues empty; loop exits.
+        unreachable!("S2A interleave wedged");
+    }
+
+    st.cycles = det_t.max(ctrl_t);
+    st.controller_idle = st.cycles.saturating_sub(busy_cycles);
+    st
+}
+
+#[inline(always)]
+fn mask_cols(valid_cols: usize) -> u16 {
+    if valid_cols >= 16 {
+        u16::MAX
+    } else {
+        (1u16 << valid_cols) - 1
+    }
+}
+
+/// Closed-form stats for the dense (no zero-skipping) controller: every
+/// `(Y, X)` position is processed regardless of spikes. The detector
+/// and FIFOs are bypassed; parity switches once per column sweep.
+pub fn run_tile_dense(
+    spad: &IfSpad,
+    cm: &mut ComputeMacro,
+    opts: &S2aOptions,
+) -> TileCuStats {
+    let rows = spad.valid_rows as u64;
+    let cols = spad.valid_cols as u64;
+    let mut st = TileCuStats::default();
+    st.macro_ops = 2 * rows * cols;
+    st.parity_switches = 2 * cols;
+    st.detect_rows = 0;
+    st.cycles = st.macro_ops + st.parity_switches * opts.switch_cycles + 2;
+    // Functional: only true spikes accumulate (the dense design gates
+    // the add by the spike bit; it just cannot skip the cycle).
+    for y in 0..spad.valid_rows {
+        let mask = spad.row_mask(y) & mask_cols(spad.valid_cols);
+        let mut m = mask;
+        while m != 0 {
+            let x = m.trailing_zeros() as usize;
+            m &= m - 1;
+            cm.op(y, x, Parity::Even);
+            cm.op(y, x, Parity::Odd);
+            st.detect_spikes += 1;
+        }
+    }
+    st
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::Overflow;
+    use crate::snn::tensor::Mat;
+
+    fn spad_with(spikes: &[(usize, usize)], rows: usize, cols: usize) -> IfSpad {
+        let mut s = IfSpad::new();
+        s.clear(rows, cols);
+        for &(y, x) in spikes {
+            s.write(y, x, true);
+        }
+        s
+    }
+
+    fn cm(rows: usize) -> ComputeMacro {
+        let mut w = Mat::zeros(rows, 4);
+        for r in 0..rows {
+            for k in 0..4 {
+                w.set(r, k, (r + k) as i32 % 3 + 1);
+            }
+        }
+        ComputeMacro::new(w, 7, Overflow::Wrap, true)
+    }
+
+    fn ready_now(rows: usize) -> Vec<u64> {
+        vec![0; rows]
+    }
+
+    #[test]
+    fn empty_tile_scans_rows_only() {
+        let spad = spad_with(&[], 8, 16);
+        let mut m = cm(8);
+        let st = run_tile(&spad, &ready_now(8), &mut m, &S2aOptions::default());
+        assert_eq!(st.macro_ops, 0);
+        assert_eq!(st.detect_rows, 8);
+        assert_eq!(st.detect_spikes, 0);
+        assert!(st.cycles >= 8);
+    }
+
+    #[test]
+    fn each_spike_two_ops() {
+        let spad = spad_with(&[(0, 0), (1, 3), (5, 7)], 8, 16);
+        let mut m = cm(8);
+        let st = run_tile(&spad, &ready_now(8), &mut m, &S2aOptions::default());
+        assert_eq!(st.detect_spikes, 3);
+        assert_eq!(st.macro_ops, 6);
+        // every tuple pushed to even then to odd
+        assert_eq!(st.queue_pushes, 6);
+        assert_eq!(st.queue_pops, 6);
+    }
+
+    #[test]
+    fn ping_pong_batches_switches() {
+        // 20 spikes spread over rows: ping-pong should switch far fewer
+        // than 2x per spike.
+        let spikes: Vec<(usize, usize)> = (0..20).map(|i| (i % 16, (i * 7) % 16)).collect();
+        let spad = spad_with(&spikes, 16, 16);
+        let mut m1 = cm(16);
+        let st_pp = run_tile(&spad, &ready_now(16), &mut m1,
+                             &S2aOptions { ping_pong: true, ..Default::default() });
+        let mut m2 = cm(16);
+        let st_naive = run_tile(&spad, &ready_now(16), &mut m2,
+                                &S2aOptions { ping_pong: false, ..Default::default() });
+        assert_eq!(st_pp.macro_ops, st_naive.macro_ops);
+        assert!(st_pp.parity_switches < st_naive.parity_switches,
+                "pp {} vs naive {}", st_pp.parity_switches, st_naive.parity_switches);
+        // functional result identical regardless of order
+        assert_eq!(m1.vmem_entry(3), m2.vmem_entry(3));
+    }
+
+    #[test]
+    fn functional_accumulation_matches_direct() {
+        let spikes = [(0, 0), (2, 0), (0, 1)];
+        let spad = spad_with(&spikes, 4, 16);
+        let mut m = cm(4);
+        run_tile(&spad, &ready_now(4), &mut m, &S2aOptions::default());
+        // direct expectation for entry 0: rows 0 and 2 accumulated
+        let mut expect = [0i32; 4];
+        for &(y, _) in &[(0, 0), (2, 0)] {
+            for (k, e) in expect.iter_mut().enumerate() {
+                *e += (y + k) as i32 % 3 + 1;
+            }
+        }
+        assert_eq!(m.vmem_entry(0), &expect);
+    }
+
+    #[test]
+    fn row_ready_delays_detection() {
+        let spad = spad_with(&[(7, 0)], 8, 16);
+        let mut ready = ready_now(8);
+        ready[7] = 100; // loader finishes row 7 late
+        let mut m = cm(8);
+        let st = run_tile(&spad, &ready, &mut m, &S2aOptions::default());
+        assert!(st.cycles > 100);
+    }
+
+    #[test]
+    fn dense_processes_everything() {
+        let spad = spad_with(&[(0, 0)], 4, 8);
+        let mut m = cm(4);
+        let st = run_tile_dense(&spad, &mut m, &S2aOptions::default());
+        assert_eq!(st.macro_ops, 2 * 4 * 8);
+        assert_eq!(st.detect_spikes, 1);
+        // functional result only reflects the actual spike
+        assert_eq!(m.vmem_entry(0)[0], 1); // w[0][0] = 1
+    }
+
+    #[test]
+    fn dense_costs_more_at_high_sparsity() {
+        let spad = spad_with(&[(3, 2)], 16, 16);
+        let mut m1 = cm(16);
+        let sparse = run_tile(&spad, &ready_now(16), &mut m1, &S2aOptions::default());
+        let mut m2 = cm(16);
+        let dense = run_tile_dense(&spad, &mut m2, &S2aOptions::default());
+        assert!(dense.cycles > sparse.cycles);
+        assert_eq!(m1.vmem_entry(2), m2.vmem_entry(2));
+    }
+}

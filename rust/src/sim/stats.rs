@@ -1,0 +1,161 @@
+//! Aggregated run statistics and derived metrics.
+
+use crate::energy::model::{Corner, EnergyBreakdown, EnergyParams};
+
+/// Statistics accumulated over a whole run (layers x timesteps).
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    /// Total core-busy cycles (asynchronous-pipeline makespan).
+    pub cycles: u64,
+    /// What a lockstep-synchronous pipeline would have taken.
+    pub sync_cycles: u64,
+    /// What a worst-case-provisioned pipeline would have taken.
+    pub worst_case_cycles: u64,
+    /// Dynamic energy by component (pJ at the 0.9 V reference).
+    pub energy: EnergyBreakdown,
+    /// Macro accumulation passes executed.
+    pub macro_ops: u64,
+    /// Executed synaptic operations (spike-triggered accumulates).
+    pub synops: u64,
+    /// Dense-equivalent synaptic operations (the GOPS denominator).
+    pub dense_synops: u64,
+    /// Parity switches.
+    pub parity_switches: u64,
+    /// Input spikes consumed.
+    pub spikes: u64,
+    /// Input cells observed (for sparsity).
+    pub cells: u64,
+}
+
+impl RunStats {
+    /// Merge another run's statistics (sequential composition).
+    pub fn add(&mut self, o: &RunStats) {
+        self.cycles += o.cycles;
+        self.sync_cycles += o.sync_cycles;
+        self.worst_case_cycles += o.worst_case_cycles;
+        self.energy.add(&o.energy);
+        self.macro_ops += o.macro_ops;
+        self.synops += o.synops;
+        self.dense_synops += o.dense_synops;
+        self.parity_switches += o.parity_switches;
+        self.spikes += o.spikes;
+        self.cells += o.cells;
+    }
+
+    /// Mean input sparsity over the run.
+    pub fn sparsity(&self) -> f64 {
+        if self.cells == 0 {
+            return 1.0;
+        }
+        1.0 - self.spikes as f64 / self.cells as f64
+    }
+
+    /// Finalize leakage for a corner (leak power x wall time).
+    pub fn finalize_leakage(&mut self, corner: Corner, params: &EnergyParams) {
+        let leak_scale = (corner.voltage / 0.9).powi(2);
+        self.energy.leakage =
+            params.p_leak_mw * leak_scale * corner.period_ns() * self.cycles as f64;
+    }
+
+    /// Total energy at a corner in pJ (dynamic scaled by V², leakage
+    /// must have been finalized for the same corner).
+    pub fn total_energy_pj(&self, corner: Corner) -> f64 {
+        let mut e = self.energy;
+        let leak = e.leakage;
+        e.leakage = 0.0;
+        e.total() * corner.dynamic_scale() + leak
+    }
+
+    /// Wall-clock seconds at a corner.
+    pub fn seconds(&self, corner: Corner) -> f64 {
+        self.cycles as f64 * corner.period_ns() * 1e-9
+    }
+
+    /// Effective throughput in GOPS (dense-equivalent ops / time) —
+    /// the paper's throughput convention for sparse workloads.
+    pub fn gops(&self, corner: Corner) -> f64 {
+        let s = self.seconds(corner);
+        if s == 0.0 {
+            return 0.0;
+        }
+        self.dense_synops as f64 / s / 1e9
+    }
+
+    /// Energy efficiency in TOPS/W (dense-equivalent ops per joule).
+    pub fn tops_per_watt(&self, corner: Corner) -> f64 {
+        let e = self.total_energy_pj(corner);
+        if e == 0.0 {
+            return 0.0;
+        }
+        self.dense_synops as f64 / e
+    }
+
+    /// Average power in mW at a corner.
+    pub fn power_mw(&self, corner: Corner) -> f64 {
+        let s = self.seconds(corner);
+        if s == 0.0 {
+            return 0.0;
+        }
+        self.total_energy_pj(corner) * 1e-12 / s * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats() -> RunStats {
+        let mut s = RunStats {
+            cycles: 1_000_000,
+            dense_synops: 500_000_000,
+            spikes: 50,
+            cells: 1000,
+            ..Default::default()
+        };
+        s.energy.compute_macro = 2_000_000.0;
+        s.energy.neuron_units = 500_000.0;
+        s
+    }
+
+    #[test]
+    fn sparsity() {
+        assert!((stats().sparsity() - 0.95).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gops_scales_with_frequency() {
+        let s = stats();
+        let lo = s.gops(Corner::LOW);
+        let hi = s.gops(Corner::HIGH);
+        assert!((hi / lo - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tops_w_inverse_to_energy() {
+        let mut s = stats();
+        s.finalize_leakage(Corner::LOW, &EnergyParams::default());
+        let t1 = s.tops_per_watt(Corner::LOW);
+        s.energy.compute_macro *= 2.0;
+        let t2 = s.tops_per_watt(Corner::LOW);
+        assert!(t2 < t1);
+    }
+
+    #[test]
+    fn power_consistent_with_energy_and_time() {
+        let mut s = stats();
+        s.finalize_leakage(Corner::LOW, &EnergyParams::default());
+        let p = s.power_mw(Corner::LOW);
+        let expect =
+            s.total_energy_pj(Corner::LOW) * 1e-12 / s.seconds(Corner::LOW) * 1e3;
+        assert!((p - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn add_accumulates() {
+        let mut a = stats();
+        let b = stats();
+        a.add(&b);
+        assert_eq!(a.cycles, 2_000_000);
+        assert_eq!(a.dense_synops, 1_000_000_000);
+    }
+}

@@ -1,0 +1,271 @@
+//! Layer specifications (mirror of `python/compile/model.py`).
+
+use crate::error::{Error, Result};
+use crate::snn::tensor::Mat;
+
+/// Post-fire reset behavior of the neuron macro (paper §II-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ResetMode {
+    /// Reset Vmem to zero.
+    Hard,
+    /// Subtract the threshold, retaining residual potential (default —
+    /// retains sub-threshold information across timesteps).
+    #[default]
+    Soft,
+}
+
+/// Neuron dynamics configuration held in the neuron macro's parameter
+/// rows: IF/LIF selection, threshold, leak and reset mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NeuronConfig {
+    /// Firing threshold (Vmem integer domain, >= 1).
+    pub theta: i32,
+    /// Leak magnitude per timestep (LIF only, >= 0).
+    pub leak: i32,
+    /// LIF (true) or IF (false).
+    pub leaky: bool,
+    /// Reset behavior after a spike.
+    pub reset: ResetMode,
+}
+
+impl Default for NeuronConfig {
+    fn default() -> Self {
+        NeuronConfig {
+            theta: 1,
+            leak: 0,
+            leaky: false,
+            reset: ResetMode::Soft,
+        }
+    }
+}
+
+/// What a layer is, structurally.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    /// 2-D convolution (im2col'd to GEMM by the input loader).
+    Conv,
+    /// Fully-connected.
+    Fc,
+    /// Maxpool over binary spike planes.
+    Pool,
+}
+
+/// One layer of a SpiDR network.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    /// Structural kind.
+    pub kind: LayerKind,
+    /// Input shape `(C, H, W)`.
+    pub in_shape: (usize, usize, usize),
+    /// Output shape `(C, H, W)`.
+    pub out_shape: (usize, usize, usize),
+    /// Quantized weights `(F, K)`; `None` for pool layers.
+    pub weights: Option<Mat>,
+    /// Neuron configuration (ignored for pool layers).
+    pub neuron: NeuronConfig,
+    /// Non-spiking output layer whose Vmem accumulates across timesteps.
+    pub accumulate: bool,
+    /// Kernel height (pool window height for pools).
+    pub kh: usize,
+    /// Kernel width.
+    pub kw: usize,
+    /// Stride.
+    pub stride: usize,
+    /// Zero padding.
+    pub pad: usize,
+    /// Weight quantization scale (w ≈ w_q · scale).
+    pub weight_scale: f64,
+}
+
+impl Layer {
+    /// Build a conv layer, deriving the output shape.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv(
+        in_shape: (usize, usize, usize),
+        out_ch: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        pad: usize,
+        weights: Mat,
+        neuron: NeuronConfig,
+        accumulate: bool,
+    ) -> Result<Self> {
+        let (c, h, w) = in_shape;
+        let f = c * kh * kw;
+        if weights.rows != f || weights.cols != out_ch {
+            return Err(Error::shape(format!(
+                "conv weights {}x{} != fan-in {f} x out_ch {out_ch}",
+                weights.rows, weights.cols
+            )));
+        }
+        let ho = (h + 2 * pad - kh) / stride + 1;
+        let wo = (w + 2 * pad - kw) / stride + 1;
+        Ok(Layer {
+            kind: LayerKind::Conv,
+            in_shape,
+            out_shape: (out_ch, ho, wo),
+            weights: Some(weights),
+            neuron,
+            accumulate,
+            kh,
+            kw,
+            stride,
+            pad,
+            weight_scale: 1.0,
+        })
+    }
+
+    /// Build an FC layer over a flattened input.
+    pub fn fc(
+        in_shape: (usize, usize, usize),
+        out_neurons: usize,
+        weights: Mat,
+        neuron: NeuronConfig,
+        accumulate: bool,
+    ) -> Result<Self> {
+        let (c, h, w) = in_shape;
+        let f = c * h * w;
+        if weights.rows != f || weights.cols != out_neurons {
+            return Err(Error::shape(format!(
+                "fc weights {}x{} != fan-in {f} x out {out_neurons}",
+                weights.rows, weights.cols
+            )));
+        }
+        Ok(Layer {
+            kind: LayerKind::Fc,
+            in_shape,
+            out_shape: (out_neurons, 1, 1),
+            weights: Some(weights),
+            neuron,
+            accumulate,
+            kh: 1,
+            kw: 1,
+            stride: 1,
+            pad: 0,
+            weight_scale: 1.0,
+        })
+    }
+
+    /// Build a maxpool layer (window == stride, floor division, the
+    /// same adaptive clamping as the Python model).
+    pub fn pool(in_shape: (usize, usize, usize), size: usize, stride: usize) -> Self {
+        let (c, h, w) = in_shape;
+        let size = size.min(h).min(w);
+        let stride = stride.min(size);
+        Layer {
+            kind: LayerKind::Pool,
+            in_shape,
+            out_shape: (c, h / stride, w / stride),
+            weights: None,
+            neuron: NeuronConfig::default(),
+            accumulate: false,
+            kh: size,
+            kw: size,
+            stride,
+            pad: 0,
+            weight_scale: 1.0,
+        }
+    }
+
+    /// Attach the weight quantization scale.
+    pub fn with_scale(mut self, scale: f64) -> Self {
+        self.weight_scale = scale;
+        self
+    }
+
+    /// True for layers that carry Vmem state (conv/fc).
+    pub fn has_state(&self) -> bool {
+        matches!(self.kind, LayerKind::Conv | LayerKind::Fc)
+    }
+
+    /// Vmem state shape `(M, K)`.
+    pub fn vmem_shape(&self) -> Result<(usize, usize)> {
+        match self.kind {
+            LayerKind::Conv => {
+                let (k, h, w) = self.out_shape;
+                Ok((h * w, k))
+            }
+            LayerKind::Fc => Ok((1, self.out_shape.0)),
+            LayerKind::Pool => Err(Error::config("pool layer has no Vmem")),
+        }
+    }
+
+    /// Fan-in per output neuron (`R·S·C` for conv, inputs for FC).
+    pub fn fan_in(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv => self.in_shape.0 * self.kh * self.kw,
+            LayerKind::Fc => self.in_shape.0 * self.in_shape.1 * self.in_shape.2,
+            LayerKind::Pool => 0,
+        }
+    }
+
+    /// Synaptic ops triggered by one input spike (= output channels hit).
+    pub fn synops_per_spike(&self) -> usize {
+        self.out_shape.0
+    }
+
+    /// Dense-equivalent synaptic operations for one full timestep
+    /// (every input position × every mapped output): the denominator
+    /// of the paper's effective-GOPS numbers.
+    pub fn dense_synops(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv => {
+                let (_, ho, wo) = self.out_shape;
+                (ho * wo) as u64 * self.fan_in() as u64 * self.out_shape.0 as u64
+            }
+            LayerKind::Fc => self.fan_in() as u64 * self.out_shape.0 as u64,
+            LayerKind::Pool => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn w(f: usize, k: usize) -> Mat {
+        Mat::zeros(f, k)
+    }
+
+    #[test]
+    fn conv_shapes() {
+        let l = Layer::conv((2, 8, 8), 4, 3, 3, 1, 1, w(18, 4),
+                            NeuronConfig::default(), false).unwrap();
+        assert_eq!(l.out_shape, (4, 8, 8));
+        assert_eq!(l.vmem_shape().unwrap(), (64, 4));
+        assert_eq!(l.fan_in(), 18);
+        assert_eq!(l.dense_synops(), 64 * 18 * 4);
+    }
+
+    #[test]
+    fn conv_stride_shapes() {
+        let l = Layer::conv((1, 9, 9), 2, 3, 3, 2, 1, w(9, 2),
+                            NeuronConfig::default(), false).unwrap();
+        assert_eq!(l.out_shape, (2, 5, 5));
+    }
+
+    #[test]
+    fn conv_rejects_bad_weights() {
+        assert!(Layer::conv((2, 8, 8), 4, 3, 3, 1, 1, w(17, 4),
+                            NeuronConfig::default(), false).is_err());
+    }
+
+    #[test]
+    fn fc_shapes() {
+        let l = Layer::fc((16, 2, 2), 11, w(64, 11),
+                          NeuronConfig::default(), true).unwrap();
+        assert_eq!(l.out_shape, (11, 1, 1));
+        assert_eq!(l.vmem_shape().unwrap(), (1, 11));
+        assert_eq!(l.fan_in(), 64);
+    }
+
+    #[test]
+    fn pool_adapts_window() {
+        let l = Layer::pool((16, 4, 4), 8, 8);
+        assert_eq!(l.kh, 4); // clamped to remaining spatial size
+        assert_eq!(l.out_shape, (16, 1, 1));
+        assert!(l.vmem_shape().is_err());
+        assert!(!l.has_state());
+    }
+}

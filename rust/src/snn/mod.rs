@@ -1,0 +1,14 @@
+//! SNN data structures: spike tensors, layer specs, Table-II networks,
+//! and the `.swb` weight-bundle loader shared with the Python AOT path.
+
+pub mod layer;
+pub mod network;
+pub mod spikes;
+pub mod swb;
+pub mod tensor;
+
+pub use layer::{Layer, LayerKind, NeuronConfig, ResetMode};
+pub use network::{Network, NetworkBuilder};
+pub use spikes::{SpikePlane, SparsityStats};
+pub use swb::WeightBundle;
+pub use tensor::Tensor3;

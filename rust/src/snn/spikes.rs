@@ -1,0 +1,114 @@
+//! Binary spike planes and sparsity statistics.
+
+use crate::snn::tensor::Tensor3;
+
+/// A binary spike plane `(C, H, W)` — one timestep of one layer's input
+/// or output activity.
+pub type SpikePlane = Tensor3<u8>;
+
+impl SpikePlane {
+    /// Count of set spikes.
+    pub fn count_spikes(&self) -> u64 {
+        self.as_slice().iter().map(|&b| b as u64).sum()
+    }
+
+    /// Spike density in [0, 1].
+    pub fn density(&self) -> f64 {
+        if self.is_empty() {
+            return 0.0;
+        }
+        self.count_spikes() as f64 / self.len() as f64
+    }
+
+    /// Sparsity in [0, 1] (1 − density) — the paper's x-axis everywhere.
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.density()
+    }
+}
+
+/// Streaming sparsity statistics across timesteps / layers (Fig. 5).
+#[derive(Debug, Clone, Default)]
+pub struct SparsityStats {
+    /// Total cells observed.
+    pub cells: u64,
+    /// Total spikes observed.
+    pub spikes: u64,
+    /// Per-observation sparsities (for min/max bands).
+    samples: Vec<f64>,
+}
+
+impl SparsityStats {
+    /// Empty statistics.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one spike plane.
+    pub fn record(&mut self, plane: &SpikePlane) {
+        self.record_counts(plane.count_spikes(), plane.len() as u64);
+    }
+
+    /// Record raw counts.
+    pub fn record_counts(&mut self, spikes: u64, cells: u64) {
+        self.spikes += spikes;
+        self.cells += cells;
+        if cells > 0 {
+            self.samples.push(1.0 - spikes as f64 / cells as f64);
+        }
+    }
+
+    /// Mean sparsity over everything recorded.
+    pub fn mean_sparsity(&self) -> f64 {
+        if self.cells == 0 {
+            return 1.0;
+        }
+        1.0 - self.spikes as f64 / self.cells as f64
+    }
+
+    /// Minimum per-observation sparsity (densest moment).
+    pub fn min_sparsity(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Maximum per-observation sparsity.
+    pub fn max_sparsity(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Number of observations recorded.
+    pub fn observations(&self) -> usize {
+        self.samples.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn density_and_sparsity() {
+        let mut p = SpikePlane::zeros(1, 2, 2);
+        p.set(0, 0, 0, 1);
+        assert_eq!(p.count_spikes(), 1);
+        assert!((p.density() - 0.25).abs() < 1e-12);
+        assert!((p.sparsity() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_aggregate() {
+        let mut s = SparsityStats::new();
+        s.record_counts(10, 100); // 0.90
+        s.record_counts(30, 100); // 0.70
+        assert!((s.mean_sparsity() - 0.80).abs() < 1e-12);
+        assert!((s.min_sparsity() - 0.70).abs() < 1e-12);
+        assert!((s.max_sparsity() - 0.90).abs() < 1e-12);
+        assert_eq!(s.observations(), 2);
+    }
+
+    #[test]
+    fn empty_stats_defaults() {
+        let s = SparsityStats::new();
+        assert_eq!(s.mean_sparsity(), 1.0);
+        assert_eq!(s.observations(), 0);
+    }
+}

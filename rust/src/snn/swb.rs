@@ -1,0 +1,183 @@
+//! `.swb` (SpiDR weight bundle) loader.
+//!
+//! The bundle is written by `python/compile/aot.py::write_swb` and holds
+//! the *same integers* baked into the HLO artifacts, so the cycle-level
+//! simulator and the PJRT golden model compute from identical weights.
+//!
+//! Format (little-endian):
+//! ```text
+//! u32 magic = 0x53574231 ("SWB1")
+//! u32 num_layers
+//! per layer: u32 fan_in, u32 k, i32 theta, i32 leak, f64 scale,
+//!            i32 weights[fan_in * k]     (row-major W[f][k])
+//! ```
+
+use crate::error::{Error, Result};
+use crate::snn::tensor::Mat;
+use std::path::Path;
+
+/// Magic tag for the bundle format.
+pub const SWB_MAGIC: u32 = 0x5357_4231;
+
+/// One layer's parameters from a bundle.
+#[derive(Debug, Clone)]
+pub struct BundleLayer {
+    /// Quantized weights `(F, K)`.
+    pub weights: Mat,
+    /// Quantized firing threshold.
+    pub theta: i32,
+    /// Quantized leak magnitude.
+    pub leak: i32,
+    /// Weight quantization scale.
+    pub scale: f64,
+}
+
+/// A parsed weight bundle.
+#[derive(Debug, Clone)]
+pub struct WeightBundle {
+    /// Per-stateful-layer parameters, in network order.
+    pub layers: Vec<BundleLayer>,
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(Error::artifact(format!(
+                "swb truncated at offset {} (need {n} bytes, have {})",
+                self.pos,
+                self.buf.len() - self.pos
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn i32(&mut self) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+impl WeightBundle {
+    /// Parse a bundle from bytes.
+    pub fn parse(bytes: &[u8]) -> Result<Self> {
+        let mut c = Cursor { buf: bytes, pos: 0 };
+        let magic = c.u32()?;
+        if magic != SWB_MAGIC {
+            return Err(Error::artifact(format!(
+                "bad swb magic {magic:#010x} (expected {SWB_MAGIC:#010x})"
+            )));
+        }
+        let n = c.u32()? as usize;
+        if n == 0 || n > 1024 {
+            return Err(Error::artifact(format!("implausible layer count {n}")));
+        }
+        let mut layers = Vec::with_capacity(n);
+        for i in 0..n {
+            let fan_in = c.u32()? as usize;
+            let k = c.u32()? as usize;
+            let theta = c.i32()?;
+            let leak = c.i32()?;
+            let scale = c.f64()?;
+            if fan_in == 0 || k == 0 {
+                return Err(Error::artifact(format!(
+                    "layer {i}: zero dimension ({fan_in}x{k})"
+                )));
+            }
+            let raw = c.take(4 * fan_in * k)?;
+            let data: Vec<i32> = raw
+                .chunks_exact(4)
+                .map(|b| i32::from_le_bytes(b.try_into().unwrap()))
+                .collect();
+            layers.push(BundleLayer {
+                weights: Mat::from_vec(fan_in, k, data)?,
+                theta,
+                leak,
+                scale,
+            });
+        }
+        if c.pos != bytes.len() {
+            return Err(Error::artifact(format!(
+                "swb trailing bytes: parsed {} of {}",
+                c.pos,
+                bytes.len()
+            )));
+        }
+        Ok(WeightBundle { layers })
+    }
+
+    /// Load a bundle from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let bytes = std::fs::read(path.as_ref())?;
+        Self::parse(&bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn encode(layers: &[(u32, u32, i32, i32, f64, Vec<i32>)]) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&SWB_MAGIC.to_le_bytes());
+        out.extend_from_slice(&(layers.len() as u32).to_le_bytes());
+        for (f, k, th, lk, sc, w) in layers {
+            out.extend_from_slice(&f.to_le_bytes());
+            out.extend_from_slice(&k.to_le_bytes());
+            out.extend_from_slice(&th.to_le_bytes());
+            out.extend_from_slice(&lk.to_le_bytes());
+            out.extend_from_slice(&sc.to_le_bytes());
+            for v in w {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn roundtrip() {
+        let bytes = encode(&[
+            (2, 3, 5, 1, 0.5, vec![1, 2, 3, 4, 5, 6]),
+            (1, 2, 7, 0, 0.25, vec![-1, -2]),
+        ]);
+        let b = WeightBundle::parse(&bytes).unwrap();
+        assert_eq!(b.layers.len(), 2);
+        assert_eq!(b.layers[0].weights.get(1, 2), 6);
+        assert_eq!(b.layers[0].theta, 5);
+        assert_eq!(b.layers[1].scale, 0.25);
+        assert_eq!(b.layers[1].weights.get(0, 1), -2);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut bytes = encode(&[(1, 1, 1, 0, 1.0, vec![0])]);
+        bytes[0] ^= 0xFF;
+        assert!(WeightBundle::parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let bytes = encode(&[(2, 2, 1, 0, 1.0, vec![1, 2, 3, 4])]);
+        assert!(WeightBundle::parse(&bytes[..bytes.len() - 2]).is_err());
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let mut bytes = encode(&[(1, 1, 1, 0, 1.0, vec![0])]);
+        bytes.push(0);
+        assert!(WeightBundle::parse(&bytes).is_err());
+    }
+}

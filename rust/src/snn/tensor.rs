@@ -1,0 +1,180 @@
+//! Small dense tensor types used across the simulator and coordinator.
+
+use crate::error::{Error, Result};
+
+/// A dense 3-D tensor in `(C, H, W)` channel-major layout, matching the
+/// JAX model's frame layout and the input loader's addressing.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Tensor3<T> {
+    /// Channels.
+    pub c: usize,
+    /// Height.
+    pub h: usize,
+    /// Width.
+    pub w: usize,
+    data: Vec<T>,
+}
+
+impl<T: Copy + Default> Tensor3<T> {
+    /// Zero-filled tensor.
+    pub fn zeros(c: usize, h: usize, w: usize) -> Self {
+        Tensor3 {
+            c,
+            h,
+            w,
+            data: vec![T::default(); c * h * w],
+        }
+    }
+
+    /// Build from a flat `(C, H, W)` row-major buffer.
+    pub fn from_vec(c: usize, h: usize, w: usize, data: Vec<T>) -> Result<Self> {
+        if data.len() != c * h * w {
+            return Err(Error::shape(format!(
+                "Tensor3 buffer length {} != {c}x{h}x{w}",
+                data.len()
+            )));
+        }
+        Ok(Tensor3 { c, h, w, data })
+    }
+
+    /// Total number of elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when the tensor holds no elements.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Immutable element access.
+    #[inline(always)]
+    pub fn get(&self, c: usize, y: usize, x: usize) -> T {
+        debug_assert!(c < self.c && y < self.h && x < self.w);
+        self.data[(c * self.h + y) * self.w + x]
+    }
+
+    /// Mutable element access.
+    #[inline(always)]
+    pub fn set(&mut self, c: usize, y: usize, x: usize, v: T) {
+        debug_assert!(c < self.c && y < self.h && x < self.w);
+        self.data[(c * self.h + y) * self.w + x] = v;
+    }
+
+    /// Flat view of the underlying buffer.
+    pub fn as_slice(&self) -> &[T] {
+        &self.data
+    }
+
+    /// Mutable flat view.
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    /// Shape tuple `(c, h, w)`.
+    pub fn shape(&self) -> (usize, usize, usize) {
+        (self.c, self.h, self.w)
+    }
+}
+
+/// A dense 2-D `i32` matrix in row-major layout (weights `(F, K)`,
+/// Vmem banks `(M, K)`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Mat {
+    /// Rows.
+    pub rows: usize,
+    /// Columns.
+    pub cols: usize,
+    data: Vec<i32>,
+}
+
+impl Mat {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat {
+            rows,
+            cols,
+            data: vec![0; rows * cols],
+        }
+    }
+
+    /// From a flat row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<i32>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::shape(format!(
+                "Mat buffer length {} != {rows}x{cols}",
+                data.len()
+            )));
+        }
+        Ok(Mat { rows, cols, data })
+    }
+
+    /// Immutable element access.
+    #[inline(always)]
+    pub fn get(&self, r: usize, c: usize) -> i32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    /// Mutable element access.
+    #[inline(always)]
+    pub fn set(&mut self, r: usize, c: usize, v: i32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Immutable row view.
+    #[inline(always)]
+    pub fn row(&self, r: usize) -> &[i32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Mutable row view.
+    #[inline(always)]
+    pub fn row_mut(&mut self, r: usize) -> &mut [i32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Flat view.
+    pub fn as_slice(&self) -> &[i32] {
+        &self.data
+    }
+
+    /// Mutable flat view.
+    pub fn as_mut_slice(&mut self) -> &mut [i32] {
+        &mut self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor3_indexing_is_chw() {
+        let mut t = Tensor3::<u8>::zeros(2, 3, 4);
+        t.set(1, 2, 3, 9);
+        assert_eq!(t.get(1, 2, 3), 9);
+        // channel-major flat layout
+        assert_eq!(t.as_slice()[(1 * 3 + 2) * 4 + 3], 9);
+    }
+
+    #[test]
+    fn tensor3_from_vec_validates() {
+        assert!(Tensor3::<u8>::from_vec(1, 2, 2, vec![0; 3]).is_err());
+        assert!(Tensor3::<u8>::from_vec(1, 2, 2, vec![0; 4]).is_ok());
+    }
+
+    #[test]
+    fn mat_rows() {
+        let mut m = Mat::zeros(3, 4);
+        m.row_mut(1).copy_from_slice(&[1, 2, 3, 4]);
+        assert_eq!(m.row(1), &[1, 2, 3, 4]);
+        assert_eq!(m.get(1, 2), 3);
+    }
+
+    #[test]
+    fn mat_from_vec_validates() {
+        assert!(Mat::from_vec(2, 2, vec![1, 2, 3]).is_err());
+    }
+}
