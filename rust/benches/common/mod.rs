@@ -1,19 +1,30 @@
 //! Shared helpers for the bench binaries (criterion is not in this
 //! environment; every bench is a `harness = false` main that prints
 //! the same rows/series the paper reports, plus wall-clock info).
+//!
+//! Besides the grep-able `DATA` stdout lines, [`emit`] appends one
+//! JSON object per line to `BENCH_<bench>.json` at the repo root
+//! (e.g. `BENCH_hotpath.json`), so the perf trajectory is tracked
+//! across PRs; `<bench>` is the id passed to [`header`].
 
 #![allow(dead_code)]
 
-use std::time::Instant;
+use std::io::Write as _;
+use std::sync::Mutex;
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
 
 use spidr::prop::SplitMix64;
 use spidr::snn::spikes::SpikePlane;
 
-/// Print a bench header.
+/// The bench id set by [`header`], used to name the JSON output file.
+static CURRENT_BENCH: Mutex<Option<String>> = Mutex::new(None);
+
+/// Print a bench header and select the JSON output file for [`emit`].
 pub fn header(id: &str, what: &str) {
     println!("==================================================================");
     println!("{id} — {what}");
     println!("==================================================================");
+    *CURRENT_BENCH.lock().unwrap() = Some(id.to_string());
 }
 
 /// Random binary plane at a density.
@@ -49,7 +60,35 @@ pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
     (out, t0.elapsed().as_secs_f64())
 }
 
-/// Simple machine-readable result line (grep-able from bench logs).
+/// Machine-readable result: a grep-able `DATA` stdout line plus a JSON
+/// line appended to `BENCH_<bench>.json`. The output directory is
+/// `SPIDR_BENCH_DIR` when set, falling back to the compile-time
+/// manifest root (right for `cargo bench` run in the checkout that
+/// built it; set the env var when running a relocated binary).
 pub fn emit(series: &str, x: f64, y: f64) {
     println!("DATA {series} {x:.6} {y:.6}");
+    let bench = CURRENT_BENCH.lock().unwrap().clone();
+    if let Some(bench) = bench {
+        let finite = |v: f64| if v.is_finite() { v } else { 0.0 };
+        let unix = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        let line = format!(
+            "{{\"bench\":\"{bench}\",\"series\":\"{series}\",\"x\":{},\"y\":{},\"unix\":{unix}}}\n",
+            finite(x),
+            finite(y),
+        );
+        let dir = std::env::var("SPIDR_BENCH_DIR")
+            .unwrap_or_else(|_| env!("CARGO_MANIFEST_DIR").to_string());
+        let path = format!("{dir}/BENCH_{bench}.json");
+        let write = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .and_then(|mut f| f.write_all(line.as_bytes()));
+        if let Err(e) = write {
+            eprintln!("warning: could not append bench row to {path}: {e}");
+        }
+    }
 }

@@ -75,6 +75,39 @@ fn bench_layer(functional: bool) -> f64 {
     synops as f64 / dt
 }
 
+/// Multi-pass Mode-1 shape: 72 output channels at 4-bit map 36 channels
+/// per pass (3 pipelines × 12 neurons/row) → 6 channel groups over 2
+/// passes, all replaying each tile's cached spike stream (§Perf — the
+/// tile-stream cache's best case: loader + S2A host work drops by
+/// ~passes × pipelines).
+fn bench_layer_multipass(functional: bool) -> f64 {
+    let layer = Layer::conv(
+        (16, 16, 16),
+        72,
+        3,
+        3,
+        1,
+        1,
+        Mat::zeros(144, 72),
+        NeuronConfig { theta: 16, leak: 2, leaky: true, ..Default::default() },
+        false,
+    )
+    .unwrap();
+    let frames = common::random_clip(16, 16, 16, 4, 0.25, 0x5A);
+    let mut cfg = SimConfig::timing_only(Precision::W4V7);
+    cfg.functional = functional;
+    let core = SpidrCore::new(cfg);
+    let iters = 5;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let mut state = Mat::zeros(16 * 16, 72);
+        core.run_layer(&layer, &frames, &mut state).unwrap();
+    }
+    let dt = t0.elapsed().as_secs_f64() / iters as f64;
+    let synops = layer.dense_synops() * 4;
+    synops as f64 / dt
+}
+
 fn main() {
     common::header("hotpath", "simulator wall-clock throughput (perf pass harness)");
 
@@ -98,6 +131,24 @@ fn main() {
         );
         common::emit(
             if functional { "hotpath_layer_func" } else { "hotpath_layer_timing" },
+            0.0,
+            ops_s / 1e6,
+        );
+    }
+
+    for functional in [true, false] {
+        let ops_s = bench_layer_multipass(functional);
+        println!(
+            "run_layer (multi-pass conv, {} ): {:>8.2} M dense-synops/s wall",
+            if functional { "functional " } else { "timing-only" },
+            ops_s / 1e6,
+        );
+        common::emit(
+            if functional {
+                "hotpath_layer_multipass_func"
+            } else {
+                "hotpath_layer_multipass_timing"
+            },
             0.0,
             ops_s / 1e6,
         );

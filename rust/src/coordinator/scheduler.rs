@@ -77,25 +77,15 @@ impl MultiCoreScheduler {
             .ok_or_else(|| Error::mapping("pool layer on scheduler"))?;
         let (m_total, _) = layer.vmem_shape()?;
 
-        // Build per-core sub-layers (channel slices of the weights).
+        // Build per-core sub-layers (channel slices of the weights,
+        // via row-slice block copies — §Perf).
         let mut jobs = Vec::new();
         for &(ks, ke) in &parts {
-            let mut w = Mat::zeros(weights.rows, ke - ks);
-            for f in 0..weights.rows {
-                for (c, kk) in (ks..ke).enumerate() {
-                    w.set(f, c, weights.get(f, kk));
-                }
-            }
             let mut sub = layer.clone();
-            sub.weights = Some(w);
+            sub.weights = Some(weights.submatrix(0, weights.rows, ks, ke));
             sub.out_shape = (ke - ks, layer.out_shape.1, layer.out_shape.2);
             // initial sub-state from the big bank
-            let mut sub_state = Mat::zeros(m_total, ke - ks);
-            for m in 0..m_total {
-                for (c, kk) in (ks..ke).enumerate() {
-                    sub_state.set(m, c, state.get(m, kk));
-                }
-            }
+            let sub_state = state.submatrix(0, m_total, ks, ke);
             jobs.push((sub, sub_state, ks, ke));
         }
 

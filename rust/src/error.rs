@@ -1,34 +1,62 @@
 //! Unified error type for the SpiDR library.
+//!
+//! Hand-rolled `Display`/`Error`/`From` impls instead of `thiserror`:
+//! the default build carries zero external dependencies so `cargo test`
+//! is hermetic in registry-less environments (DESIGN.md §3).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors surfaced by the SpiDR library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// A layer/network/mapping configuration is invalid.
-    #[error("configuration error: {0}")]
     Config(String),
 
     /// A workload does not fit the selected operating mode / core.
-    #[error("mapping error: {0}")]
     Mapping(String),
 
     /// Artifact files (HLO text, weight bundles, manifests) are
     /// missing or malformed.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
-    /// PJRT / XLA runtime failures.
-    #[error("runtime error: {0}")]
+    /// PJRT / XLA runtime failures (or the runtime being compiled out;
+    /// see the `pjrt` cargo feature).
     Runtime(String),
 
     /// Shape or dimension mismatch between tensors.
-    #[error("shape error: {0}")]
     Shape(String),
 
     /// I/O failures while loading artifacts or traces.
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "configuration error: {m}"),
+            Error::Mapping(m) => write!(f, "mapping error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            // transparent, matching the previous `#[error(transparent)]`
+            Error::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Library-wide result alias.
@@ -53,5 +81,29 @@ impl Error {
     /// Shorthand constructor for shape errors.
     pub fn shape(msg: impl Into<String>) -> Self {
         Error::Shape(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes() {
+        assert_eq!(Error::config("x").to_string(), "configuration error: x");
+        assert_eq!(Error::mapping("x").to_string(), "mapping error: x");
+        assert_eq!(Error::artifact("x").to_string(), "artifact error: x");
+        assert_eq!(Error::shape("x").to_string(), "shape error: x");
+        assert_eq!(Error::Runtime("x".into()).to_string(), "runtime error: x");
+    }
+
+    #[test]
+    fn io_is_transparent_with_source() {
+        use std::error::Error as _;
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let msg = io.to_string();
+        let e: Error = io.into();
+        assert_eq!(e.to_string(), msg);
+        assert!(e.source().is_some());
     }
 }

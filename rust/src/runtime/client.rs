@@ -3,94 +3,171 @@
 //! HLO *text* is the interchange format (never serialized protos):
 //! jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
 //! rejects; the text parser reassigns ids and round-trips cleanly.
+//!
+//! The real client is gated behind the `pjrt` cargo feature (which
+//! additionally requires the `xla` crate, not vendored here). The
+//! default build substitutes a stub with the same API whose every
+//! entry point returns [`Error::Runtime`], keeping `cargo test`
+//! hermetic; artifact-dependent tests skip themselves when no
+//! `artifacts/manifest.txt` is present.
 
-use crate::error::{Error, Result};
-use std::path::Path;
+#[cfg(feature = "pjrt")]
+mod imp {
+    // The `xla` crate is not vendored in this environment (the default
+    // build is dependency-free). Make enabling the feature without it
+    // fail with an actionable message instead of an unresolved-import
+    // cascade; vendor/add the crate and delete this guard to activate
+    // the real client below.
+    compile_error!(
+        "the `pjrt` feature requires the `xla` crate: add it as a \
+         dependency in Cargo.toml and remove this compile_error! guard \
+         in rust/src/runtime/client.rs"
+    );
 
-/// A PJRT CPU runtime holding the client connection.
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-}
+    use crate::error::{Error, Result};
+    use std::path::Path;
 
-/// A compiled executable plus its calling convention.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    /// Number of outputs in the result tuple.
-    pub num_outputs: usize,
-}
-
-impl PjrtRuntime {
-    /// Connect to the in-process PJRT CPU backend.
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| Error::Runtime(format!("PJRT CPU client: {e}")))?;
-        Ok(PjrtRuntime { client })
+    /// A PJRT CPU runtime holding the client connection.
+    pub struct PjrtRuntime {
+        client: xla::PjRtClient,
     }
 
-    /// Backend platform name (diagnostics).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// A compiled executable plus its calling convention.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+        /// Number of outputs in the result tuple.
+        pub num_outputs: usize,
     }
 
-    /// Load an HLO-text artifact and compile it.
-    pub fn compile_hlo_file(
-        &self,
-        path: impl AsRef<Path>,
-        num_outputs: usize,
-    ) -> Result<Executable> {
-        let path = path.as_ref();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str()
-                .ok_or_else(|| Error::artifact("non-UTF-8 artifact path"))?,
-        )
-        .map_err(|e| Error::Runtime(format!("parse {}: {e}", path.display())))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| Error::Runtime(format!("compile {}: {e}", path.display())))?;
-        Ok(Executable { exe, num_outputs })
-    }
-}
-
-impl Executable {
-    /// Execute with i32 tensor inputs; returns the flattened i32
-    /// outputs (the artifact's outputs are all i32 by construction).
-    ///
-    /// `inputs` are `(flat_data, dims)` pairs in artifact argument
-    /// order.
-    pub fn run_i32(&self, inputs: &[(&[i32], &[i64])]) -> Result<Vec<Vec<i32>>> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|(data, dims)| {
-                xla::Literal::vec1(data)
-                    .reshape(dims)
-                    .map_err(|e| Error::Runtime(format!("reshape input: {e}")))
-            })
-            .collect::<Result<_>>()?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| Error::Runtime(format!("execute: {e}")))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| Error::Runtime(format!("fetch result: {e}")))?;
-        let parts = tuple
-            .to_tuple()
-            .map_err(|e| Error::Runtime(format!("untuple result: {e}")))?;
-        if parts.len() != self.num_outputs {
-            return Err(Error::Runtime(format!(
-                "artifact returned {} outputs, expected {}",
-                parts.len(),
-                self.num_outputs
-            )));
+    impl PjrtRuntime {
+        /// Connect to the in-process PJRT CPU backend.
+        pub fn cpu() -> Result<Self> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| Error::Runtime(format!("PJRT CPU client: {e}")))?;
+            Ok(PjrtRuntime { client })
         }
-        parts
-            .into_iter()
-            .map(|l| {
-                l.to_vec::<i32>()
-                    .map_err(|e| Error::Runtime(format!("read output: {e}")))
-            })
-            .collect()
+
+        /// Backend platform name (diagnostics).
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load an HLO-text artifact and compile it.
+        pub fn compile_hlo_file(
+            &self,
+            path: impl AsRef<Path>,
+            num_outputs: usize,
+        ) -> Result<Executable> {
+            let path = path.as_ref();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| Error::artifact("non-UTF-8 artifact path"))?,
+            )
+            .map_err(|e| Error::Runtime(format!("parse {}: {e}", path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| Error::Runtime(format!("compile {}: {e}", path.display())))?;
+            Ok(Executable { exe, num_outputs })
+        }
+    }
+
+    impl Executable {
+        /// Execute with i32 tensor inputs; returns the flattened i32
+        /// outputs (the artifact's outputs are all i32 by construction).
+        ///
+        /// `inputs` are `(flat_data, dims)` pairs in artifact argument
+        /// order.
+        pub fn run_i32(&self, inputs: &[(&[i32], &[i64])]) -> Result<Vec<Vec<i32>>> {
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|(data, dims)| {
+                    xla::Literal::vec1(data)
+                        .reshape(dims)
+                        .map_err(|e| Error::Runtime(format!("reshape input: {e}")))
+                })
+                .collect::<Result<_>>()?;
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| Error::Runtime(format!("execute: {e}")))?;
+            let tuple = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| Error::Runtime(format!("fetch result: {e}")))?;
+            let parts = tuple
+                .to_tuple()
+                .map_err(|e| Error::Runtime(format!("untuple result: {e}")))?;
+            if parts.len() != self.num_outputs {
+                return Err(Error::Runtime(format!(
+                    "artifact returned {} outputs, expected {}",
+                    parts.len(),
+                    self.num_outputs
+                )));
+            }
+            parts
+                .into_iter()
+                .map(|l| {
+                    l.to_vec::<i32>()
+                        .map_err(|e| Error::Runtime(format!("read output: {e}")))
+                })
+                .collect()
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use crate::error::{Error, Result};
+    use std::path::Path;
+
+    fn unavailable() -> Error {
+        Error::Runtime(
+            "PJRT runtime not compiled in: rebuild with `--features pjrt` \
+             (requires the `xla` crate) to execute AOT golden-model \
+             artifacts"
+                .into(),
+        )
+    }
+
+    /// Stub PJRT runtime (the `pjrt` feature is off).
+    pub struct PjrtRuntime {
+        _priv: (),
+    }
+
+    /// Stub executable (never constructed; all constructors fail).
+    pub struct Executable {
+        /// Number of outputs in the result tuple.
+        pub num_outputs: usize,
+    }
+
+    impl PjrtRuntime {
+        /// Always fails: the backend is compiled out.
+        pub fn cpu() -> Result<Self> {
+            Err(unavailable())
+        }
+
+        /// Backend platform name (diagnostics).
+        pub fn platform(&self) -> String {
+            "pjrt-unavailable".into()
+        }
+
+        /// Always fails: the backend is compiled out.
+        pub fn compile_hlo_file(
+            &self,
+            _path: impl AsRef<Path>,
+            _num_outputs: usize,
+        ) -> Result<Executable> {
+            Err(unavailable())
+        }
+    }
+
+    impl Executable {
+        /// Always fails: the backend is compiled out.
+        pub fn run_i32(&self, _inputs: &[(&[i32], &[i64])]) -> Result<Vec<Vec<i32>>> {
+            Err(unavailable())
+        }
+    }
+}
+
+pub use imp::{Executable, PjrtRuntime};

@@ -124,6 +124,32 @@ impl ComputeMacro {
         }
     }
 
+    /// Fused even+odd accumulation for address pair `(y, x)`: one
+    /// contiguous `v[k] += w[k]` sweep over all neurons instead of two
+    /// strided parity passes (§Perf, used by the tile-stream replay
+    /// path).
+    ///
+    /// Bit-exact vs. `op(y, x, Even); op(y, x, Odd)` for *any* overflow
+    /// policy: the parities touch disjoint neuron indices, so each
+    /// element sees exactly one `overflow.apply(v + w)` either way —
+    /// only the (irrelevant) interleaving across disjoint elements
+    /// changes. See DESIGN.md §Perf for why replaying address pairs in
+    /// detector-extraction order also preserves each element's
+    /// *cross-address* operation order exactly.
+    #[inline]
+    pub fn op_row(&mut self, y: usize, x: usize) {
+        if !self.functional {
+            return;
+        }
+        debug_assert!(y < self.weights.rows && x < IFSPAD_COLS);
+        let w = self.weights.row(y);
+        let v = &mut self.vmem[x * self.neurons..(x + 1) * self.neurons];
+        let (bits, overflow) = (self.vmem_bits, self.overflow);
+        for (vk, &wk) in v.iter_mut().zip(w) {
+            *vk = overflow.apply(*vk + wk, bits);
+        }
+    }
+
     /// Read the partial Vmems of entry `x` (transfer to the next unit).
     pub fn vmem_entry(&self, x: usize) -> &[i32] {
         &self.vmem[x * self.neurons..(x + 1) * self.neurons]
@@ -190,6 +216,30 @@ mod tests {
         cm.merge_entry(0, &[60, 10]);
         cm.merge_entry(0, &[60, 10]);
         assert_eq!(cm.vmem_entry(0), &[wrap_to_bits(120, 7), 20]);
+    }
+
+    #[test]
+    fn op_row_equals_even_plus_odd() {
+        use crate::quant::Overflow;
+        for overflow in [Overflow::Wrap, Overflow::Saturate] {
+            let mut w = Mat::zeros(3, 5);
+            for r in 0..3 {
+                for k in 0..5 {
+                    w.set(r, k, 40 * (r as i32 + 1) - 7 * k as i32);
+                }
+            }
+            let mut a = ComputeMacro::new(w.clone(), 7, overflow, true);
+            let mut b = ComputeMacro::new(w, 7, overflow, true);
+            // several address pairs, repeated to exercise wrap/saturate
+            for &(y, x) in &[(0usize, 0usize), (1, 0), (0, 0), (2, 3), (1, 0)] {
+                a.op(y, x, Parity::Even);
+                a.op(y, x, Parity::Odd);
+                b.op_row(y, x);
+            }
+            for x in [0usize, 3] {
+                assert_eq!(a.vmem_entry(x), b.vmem_entry(x), "{overflow:?}");
+            }
+        }
     }
 
     #[test]

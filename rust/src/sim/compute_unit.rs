@@ -1,4 +1,11 @@
 //! A compute unit: IFmem → input loader → IFspad → S2A → compute macro.
+//!
+//! [`ComputeUnit::process_tile`] is the *reference* execution path: it
+//! re-runs the loader and the cycle-accurate S2A interleave every call.
+//! The hot path in `sim::core` instead replays cached
+//! [`TileStream`](super::stream::TileStream)s (computed once per
+//! `(tile, fan-slice, timestep)`) and is property-tested bit-identical
+//! against this implementation (`sim::stream`).
 
 use crate::snn::layer::Layer;
 use crate::snn::spikes::SpikePlane;

@@ -14,19 +14,34 @@
 //! tile, so all timesteps of a tile complete before it is swapped).
 //! If a layer has more output channels than a mode can map, the input
 //! is re-streamed once per extra pass (weights are reconfigured).
+//!
+//! **Host execution strategy (§Perf, DESIGN.md §Perf):** the spike
+//! content of a tile is weight-independent, so the input loader + S2A
+//! interleave runs once per `(tile, fan-slice, timestep)` into a
+//! [`StreamCache`], and every `(pass × pipeline)` channel group
+//! *replays* the cached address stream through its own weights via the
+//! fused [`ComputeMacro::op_row`] pass. Channel groups touch disjoint
+//! weight columns, Vmem columns and output channels, so they execute
+//! on independent host threads (`std::thread::scope`, mirroring
+//! `coordinator/scheduler.rs`) — Mode 1's three pipelines genuinely
+//! run concurrently on the host. `ComputeUnit::process_tile` remains
+//! the reference implementation the fast path is property-tested
+//! against (`sim::stream`).
 
 use crate::error::{Error, Result};
 use crate::snn::layer::Layer;
 use crate::snn::spikes::SpikePlane;
 use crate::snn::tensor::Mat;
 
-use super::compute_unit::{split_fan_in, ComputeUnit};
+use super::compute_macro::ComputeMacro;
+use super::compute_unit::split_fan_in;
 use super::config::{OperatingMode, SimConfig, IFSPAD_COLS, NEURON_PASS_CYCLES};
 use super::neuron_macro::NeuronMacro;
 use super::pipeline::{
     pipeline_makespan, synchronous_makespan, worst_case_makespan, PipelineTimeline,
 };
 use super::stats::RunStats;
+use super::stream::StreamCache;
 
 /// Per-layer execution report.
 #[derive(Debug, Clone)]
@@ -49,6 +64,28 @@ pub struct LayerStats {
 pub struct SpidrCore {
     /// Simulation configuration.
     pub cfg: SimConfig,
+}
+
+/// Everything one channel group's pipeline produces over a layer run.
+/// Built on a worker thread; merged deterministically (group order) by
+/// `run_layer`.
+struct ChainOutcome {
+    /// Channel-group bounds `[ks, ke)`.
+    ks: usize,
+    ke: usize,
+    /// Per-tile `(async, synchronous, worst-case)` makespans.
+    per_tile: Vec<(u64, u64, u64)>,
+    /// Energy + op counters (cycle fields left zero; timing is reduced
+    /// across pipelines per pass, not summed per chain).
+    run: RunStats,
+    /// Updated Vmem columns `(m_total, ke-ks)`; `None` when
+    /// timing-only.
+    state: Option<Mat>,
+    /// Output spikes as `(timestep, local channel, pixel)` tuples;
+    /// empty when timing-only or in accumulate mode.
+    spikes: Vec<(u32, u32, u32)>,
+    /// Fig.-13 example timeline (first tile of group 0 only).
+    timeline: Option<PipelineTimeline>,
 }
 
 impl SpidrCore {
@@ -120,9 +157,6 @@ impl SpidrCore {
             (0..timesteps).map(|_| SpikePlane::zeros(ko, ho, wo)).collect();
 
         let mut run = RunStats::default();
-        let e = &self.cfg.energy;
-        let wb = self.cfg.precision.weight_bits();
-        let mut example_timeline = None;
 
         // Layer-input sparsity telemetry (counted once, not per pass).
         for inp in inputs {
@@ -131,155 +165,99 @@ impl SpidrCore {
         }
         run.dense_synops = layer.dense_synops() * timesteps as u64;
 
-        for pass in 0..passes {
-            // Active (pipeline, channel-group) assignments this pass.
-            let active: Vec<(usize, usize)> = (0..pipelines)
-                .filter_map(|pi| {
-                    let g = pass * pipelines + pi;
-                    (g < groups.len()).then_some((pi, g))
-                })
-                .collect();
+        // §Perf: every weight-independent tile stream is computed
+        // exactly once and shared by all channel groups below.
+        let cache = StreamCache::build(layer, inputs, &slices, tiles, m_total, &self.cfg);
 
-            // Build each active pipeline's CU chain + NU.
-            let mut chains: Vec<(Vec<ComputeUnit>, NeuronMacro, usize, usize)> =
-                Vec::new();
-            for &(_, g) in &active {
-                let (ks, ke) = groups[g];
-                let cus: Vec<ComputeUnit> = slices
-                    .iter()
-                    .map(|&(lo, hi)| {
-                        let mut wslice = Mat::zeros(hi - lo, ke - ks);
-                        for (r, f) in (lo..hi).enumerate() {
-                            for (c, kk) in (ks..ke).enumerate() {
-                                wslice.set(r, c, weights.get(f, kk));
-                            }
-                        }
-                        ComputeUnit::new(lo, hi, wslice, &self.cfg)
+        let outcomes: Vec<ChainOutcome> = if groups.len() == 1 {
+            vec![self.run_chain(
+                layer, weights, state, &cache, &slices, groups[0], m_total, tiles, true,
+            )]
+        } else {
+            let state_ref: &Mat = state;
+            let cache_ref = &cache;
+            let slices_ref = &slices[..];
+            let groups_ref = &groups[..];
+            // Cap the fan-out at the host's parallelism (contiguous
+            // group chunks, same pattern as the stream-cache build).
+            let workers = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .min(groups.len());
+            let chunk = groups.len().div_ceil(workers);
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..workers)
+                    .map(|wi| {
+                        let lo = (wi * chunk).min(groups_ref.len());
+                        let hi = ((wi + 1) * chunk).min(groups_ref.len());
+                        scope.spawn(move || {
+                            groups_ref[lo..hi]
+                                .iter()
+                                .enumerate()
+                                .map(|(off, &grp)| {
+                                    self.run_chain(
+                                        layer, weights, state_ref, cache_ref, slices_ref,
+                                        grp, m_total, tiles, lo + off == 0,
+                                    )
+                                })
+                                .collect::<Vec<_>>()
+                        })
                     })
                     .collect();
-                let nm = NeuronMacro::new(
-                    ke - ks,
-                    self.cfg.precision.vmem_bits(),
-                    self.cfg.overflow,
-                    layer.neuron,
-                    layer.accumulate,
-                );
-                chains.push((cus, nm, ks, ke));
-            }
+                let mut all = Vec::with_capacity(groups_ref.len());
+                for h in handles {
+                    all.extend(h.join().expect("pipeline-chain thread panicked"));
+                }
+                all
+            })
+        };
 
+        // Deterministic merge, group order. Energy + op counters first.
+        for oc in &outcomes {
+            run.energy.add(&oc.run.energy);
+            run.macro_ops += oc.run.macro_ops;
+            run.synops += oc.run.synops;
+            run.parity_switches += oc.run.parity_switches;
+        }
+        // Timing: within a pass the active pipelines run concurrently
+        // in silicon, so each tile costs the slowest of them; passes
+        // and tiles are sequential.
+        for pass in 0..passes {
             for tile in 0..tiles {
-                let pixel_base = tile * IFSPAD_COLS;
-                let pixels = IFSPAD_COLS.min(m_total - pixel_base);
-                let transfer =
-                    self.cfg.transfer_cycles_per_row * 2 * pixels as u64;
-
-                let mut tile_makespan = 0u64;
-                let mut tile_sync = 0u64;
-                let mut tile_worst = 0u64;
-
-                for (ci, (cus, nm, ks, ke)) in chains.iter_mut().enumerate() {
-                    let neurons = *ke - *ks;
-                    // Restore this tile's full Vmems into the NU.
-                    let mut full = vec![0i32; IFSPAD_COLS * neurons];
-                    for p in 0..pixels {
-                        for (c, kk) in (*ks..*ke).enumerate() {
-                            full[p * neurons + c] = state.get(pixel_base + p, kk);
-                        }
+                let mut mk = 0u64;
+                let mut sync = 0u64;
+                let mut worst = 0u64;
+                for pi in 0..pipelines {
+                    let g = pass * pipelines + pi;
+                    if g >= groups.len() {
+                        break;
                     }
-                    nm.load_vmems(&full);
-
-                    let mut durations: Vec<Vec<u64>> =
-                        vec![vec![0; timesteps]; cus.len()];
-                    // §Perf: one partial buffer reused across timesteps
-                    let mut partial = vec![0i32; pixels * neurons];
-                    for (t, input) in inputs.iter().enumerate() {
-                        partial.fill(0);
-                        for (i, cu) in cus.iter_mut().enumerate() {
-                            let r = cu.process_tile(layer, input, pixel_base, pixels);
-                            // + the Fig.-13 "R" stage: partial-Vmem reset
-                            durations[i][t] =
-                                r.stats.cycles + self.cfg.tile_reset_cycles;
-                            // energy from this CU's tile execution
-                            run.energy.compute_macro +=
-                                r.stats.macro_ops as f64 * e.macro_op(wb);
-                            run.energy.peripheral_switch +=
-                                r.stats.parity_switches as f64 * e.e_parity_switch;
-                            run.energy.s2a += r.stats.detect_rows as f64
-                                * e.e_detect_row
-                                + (r.stats.queue_pushes + r.stats.queue_pops) as f64
-                                    * e.e_queue_op;
-                            run.energy.input_loader +=
-                                r.load.spad_writes as f64 * e.e_il_write;
-                            run.energy.ifmem +=
-                                r.load.ifmem_reads as f64 * e.e_ifmem_read;
-                            run.energy.control +=
-                                r.stats.cycles as f64 * e.e_ctrl_cycle;
-                            run.macro_ops += r.stats.macro_ops;
-                            run.synops +=
-                                r.stats.detect_spikes as u64 * neurons as u64;
-                            run.parity_switches += r.stats.parity_switches;
-                            // functional: chain-merge this CU's partials
-                            if self.cfg.functional {
-                                for p in 0..pixels {
-                                    let src = cu.partial_entry(p);
-                                    let dst =
-                                        &mut partial[p * neurons..(p + 1) * neurons];
-                                    for (d, &s) in dst.iter_mut().zip(src) {
-                                        *d = self.cfg.overflow.apply(
-                                            *d + s,
-                                            self.cfg.precision.vmem_bits(),
-                                        );
-                                    }
-                                }
-                            }
-                        }
-                        // transfers along the chain (CU→CU…→NU)
-                        let hops = cus.len() as u64;
-                        run.energy.data_movement +=
-                            hops as f64 * 2.0 * pixels as f64 * e.e_transfer_row;
-
-                        // neuron pass
-                        let out = nm.pass(&partial, pixels);
-                        run.energy.neuron_units +=
-                            out.cycles as f64 * e.e_neuron_cycle;
-                        run.energy.control += out.cycles as f64 * e.e_ctrl_cycle;
-                        if !layer.accumulate && self.cfg.functional {
-                            for p in 0..pixels {
-                                let m = pixel_base + p;
-                                let (y, x) = (m / wo, m % wo);
-                                for (c, kk) in (*ks..*ke).enumerate() {
-                                    if out.spikes[p * neurons + c] != 0 {
-                                        outputs[t].set(kk, y, x, 1);
-                                    }
-                                }
-                            }
-                        }
-                    }
-                    // persist the tile's full Vmems back to layer state
-                    if self.cfg.functional {
-                        let v = nm.vmems();
-                        for p in 0..pixels {
-                            for (c, kk) in (*ks..*ke).enumerate() {
-                                state.set(pixel_base + p, kk, v[p * neurons + c]);
-                            }
-                        }
-                    }
-
-                    // timing for this pipeline over the tile
-                    let tl = pipeline_makespan(&durations, transfer, NEURON_PASS_CYCLES);
-                    tile_sync = tile_sync
-                        .max(synchronous_makespan(&durations, transfer, NEURON_PASS_CYCLES));
-                    tile_worst = tile_worst
-                        .max(worst_case_makespan(&durations, transfer, NEURON_PASS_CYCLES));
-                    tile_makespan = tile_makespan.max(tl.makespan);
-                    if pass == 0 && tile == 0 && ci == 0 && example_timeline.is_none() {
-                        example_timeline = Some(tl);
+                    let (m, s, w) = outcomes[g].per_tile[tile];
+                    mk = mk.max(m);
+                    sync = sync.max(s);
+                    worst = worst.max(w);
+                }
+                run.cycles += mk;
+                run.sync_cycles += sync;
+                run.worst_case_cycles += worst;
+            }
+        }
+        // Functional write-back: groups own disjoint channel slices.
+        let mut example_timeline = None;
+        for (gi, oc) in outcomes.into_iter().enumerate() {
+            if gi == 0 {
+                example_timeline = oc.timeline;
+            }
+            if let Some(os) = oc.state {
+                for m in 0..m_total {
+                    for (c, kk) in (oc.ks..oc.ke).enumerate() {
+                        state.set(m, kk, os.get(m, c));
                     }
                 }
-
-                run.cycles += tile_makespan;
-                run.sync_cycles += tile_sync;
-                run.worst_case_cycles += tile_worst;
+            }
+            for &(t, c, m) in &oc.spikes {
+                let m = m as usize;
+                outputs[t as usize].set(oc.ks + c as usize, m / wo, m % wo, 1);
             }
         }
 
@@ -294,15 +272,181 @@ impl SpidrCore {
             },
         ))
     }
+
+    /// Run one channel group's pipeline over every tile and timestep,
+    /// replaying cached tile streams through this group's weights.
+    #[allow(clippy::too_many_arguments)]
+    fn run_chain(
+        &self,
+        layer: &Layer,
+        weights: &Mat,
+        state: &Mat,
+        cache: &StreamCache,
+        slices: &[(usize, usize)],
+        (ks, ke): (usize, usize),
+        m_total: usize,
+        tiles: usize,
+        want_timeline: bool,
+    ) -> ChainOutcome {
+        let e = &self.cfg.energy;
+        let wb = self.cfg.precision.weight_bits();
+        let bits = self.cfg.precision.vmem_bits();
+        let overflow = self.cfg.overflow;
+        let functional = self.cfg.functional;
+        let timesteps = cache.timesteps();
+        let neurons = ke - ks;
+        let chain_len = slices.len();
+
+        // Weight slices land in the macros once per group — row-slice
+        // copies (§Perf), not per-element get/set, and not at all when
+        // the functional datapath is off.
+        let mut cms: Vec<ComputeMacro> = if functional {
+            slices
+                .iter()
+                .map(|&(lo, hi)| {
+                    ComputeMacro::new(weights.submatrix(lo, hi, ks, ke), bits, overflow, true)
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let mut nm =
+            NeuronMacro::new(neurons, bits, overflow, layer.neuron, layer.accumulate);
+
+        let mut run = RunStats::default();
+        let mut per_tile = Vec::with_capacity(tiles);
+        let mut timeline = None;
+        let mut out_state = if functional {
+            Some(Mat::zeros(m_total, neurons))
+        } else {
+            None
+        };
+        let mut spikes: Vec<(u32, u32, u32)> = Vec::new();
+        let mut durations = vec![vec![0u64; timesteps]; chain_len];
+        let mut partial = vec![0i32; IFSPAD_COLS * neurons];
+        let mut full = vec![0i32; IFSPAD_COLS * neurons];
+
+        for tile in 0..tiles {
+            let pixel_base = tile * IFSPAD_COLS;
+            let pixels = IFSPAD_COLS.min(m_total - pixel_base);
+            let transfer = self.cfg.transfer_cycles_per_row * 2 * pixels as u64;
+
+            if functional {
+                // Restore this tile's full Vmems into the NU.
+                for p in 0..pixels {
+                    for (c, kk) in (ks..ke).enumerate() {
+                        full[p * neurons + c] = state.get(pixel_base + p, kk);
+                    }
+                }
+                nm.load_vmems(&full);
+            }
+
+            for t in 0..timesteps {
+                if functional {
+                    partial[..pixels * neurons].fill(0);
+                }
+                for (i, dur) in durations.iter_mut().enumerate() {
+                    let s = cache.get(tile, i, t);
+                    // + the Fig.-13 "R" stage: partial-Vmem reset
+                    dur[t] = s.stats.cycles + self.cfg.tile_reset_cycles;
+                    // energy from this CU's (cached) tile execution
+                    run.energy.compute_macro +=
+                        s.stats.macro_ops as f64 * e.macro_op(wb);
+                    run.energy.peripheral_switch +=
+                        s.stats.parity_switches as f64 * e.e_parity_switch;
+                    run.energy.s2a += s.stats.detect_rows as f64 * e.e_detect_row
+                        + (s.stats.queue_pushes + s.stats.queue_pops) as f64
+                            * e.e_queue_op;
+                    run.energy.input_loader +=
+                        s.load.spad_writes as f64 * e.e_il_write;
+                    run.energy.ifmem += s.load.ifmem_reads as f64 * e.e_ifmem_read;
+                    run.energy.control += s.stats.cycles as f64 * e.e_ctrl_cycle;
+                    run.macro_ops += s.stats.macro_ops;
+                    run.synops += s.stats.detect_spikes * neurons as u64;
+                    run.parity_switches += s.stats.parity_switches;
+                    // functional: fused replay, then chain-merge this
+                    // CU's partials (identical structure to the
+                    // reference interleave, see DESIGN.md §Perf)
+                    if functional {
+                        let cm = &mut cms[i];
+                        cm.reset_vmems();
+                        for &(y, x) in s.addrs() {
+                            cm.op_row(y as usize, x as usize);
+                        }
+                        for p in 0..pixels {
+                            let src = cm.vmem_entry(p);
+                            let dst = &mut partial[p * neurons..(p + 1) * neurons];
+                            for (d, &sv) in dst.iter_mut().zip(src) {
+                                *d = overflow.apply(*d + sv, bits);
+                            }
+                        }
+                    }
+                }
+                // transfers along the chain (CU→CU…→NU)
+                run.energy.data_movement +=
+                    chain_len as f64 * 2.0 * pixels as f64 * e.e_transfer_row;
+                // neuron pass (fixed 66-cycle cost; arithmetic only on
+                // the functional datapath)
+                run.energy.neuron_units +=
+                    NEURON_PASS_CYCLES as f64 * e.e_neuron_cycle;
+                run.energy.control += NEURON_PASS_CYCLES as f64 * e.e_ctrl_cycle;
+                if functional {
+                    let out = nm.pass(&partial[..pixels * neurons], pixels);
+                    if !layer.accumulate {
+                        for p in 0..pixels {
+                            for c in 0..neurons {
+                                if out.spikes[p * neurons + c] != 0 {
+                                    spikes.push((
+                                        t as u32,
+                                        c as u32,
+                                        (pixel_base + p) as u32,
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            // persist the tile's full Vmems back to the group state
+            if let Some(os) = out_state.as_mut() {
+                let v = nm.vmems();
+                for p in 0..pixels {
+                    for c in 0..neurons {
+                        os.set(pixel_base + p, c, v[p * neurons + c]);
+                    }
+                }
+            }
+
+            // timing for this pipeline over the tile
+            let tl = pipeline_makespan(&durations, transfer, NEURON_PASS_CYCLES);
+            let sync = synchronous_makespan(&durations, transfer, NEURON_PASS_CYCLES);
+            let worst = worst_case_makespan(&durations, transfer, NEURON_PASS_CYCLES);
+            let mk = tl.makespan;
+            if want_timeline && tile == 0 {
+                timeline = Some(tl);
+            }
+            per_tile.push((mk, sync, worst));
+        }
+
+        ChainOutcome {
+            ks,
+            ke,
+            per_tile,
+            run,
+            state: out_state,
+            spikes,
+            timeline,
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prop::check;
     use crate::quant::Precision;
     use crate::snn::layer::{NeuronConfig, ResetMode};
     use crate::snn::network::{NetworkBuilder, NetworkState};
-    use crate::prop::check;
 
     fn mat_fill(rows: usize, cols: usize, f: impl Fn(usize, usize) -> i32) -> Mat {
         let mut m = Mat::zeros(rows, cols);
@@ -409,6 +553,39 @@ mod tests {
     }
 
     #[test]
+    fn multi_group_functional_matches_reference() {
+        // 40 output channels -> 4 groups over 2 passes: the
+        // group-parallel replay path must still be bit-exact.
+        let layer = conv_layer(2, 40, 4, 4);
+        let frames = random_frames(2, 4, 4, 3, 0.3, 11);
+        let net = NetworkBuilder::new("t", Precision::W4V7, 3, (2, 4, 4))
+            .conv3x3(40, layer.weights.clone().unwrap(), layer.neuron, false)
+            .unwrap()
+            .fc(
+                1,
+                mat_fill(40 * 16, 1, |_, _| 0),
+                NeuronConfig::default(),
+                true,
+            )
+            .unwrap()
+            .build()
+            .unwrap();
+        let mut ref_state = net.init_state().unwrap();
+        for f in &frames {
+            net.step(f, &mut ref_state).unwrap();
+        }
+        let core = SpidrCore::new(SimConfig::default());
+        let mut sim_state = Mat::zeros(16, 40);
+        let (_, stats) = core.run_layer(&layer, &frames, &mut sim_state).unwrap();
+        assert_eq!(stats.passes, 2);
+        assert_eq!(
+            ref_state.vmems[0].as_slice(),
+            sim_state.as_slice(),
+            "multi-group Vmem trajectory diverged from reference"
+        );
+    }
+
+    #[test]
     fn multi_pass_when_channels_exceed_mode_capacity() {
         // 40 output channels at 4-bit: mode 1 maps 36/pass -> 2 passes.
         let layer = conv_layer(2, 40, 4, 4);
@@ -457,6 +634,30 @@ mod tests {
     }
 
     #[test]
+    fn stats_independent_of_functional_flag() {
+        // Timing/energy must not depend on whether the functional
+        // datapath runs (it is value-independent by construction).
+        let layer = conv_layer(2, 40, 6, 6);
+        let frames = random_frames(2, 6, 6, 2, 0.25, 5);
+        let run = |functional: bool| {
+            let mut cfg = SimConfig::timing_only(Precision::W4V7);
+            cfg.functional = functional;
+            let core = SpidrCore::new(cfg);
+            let mut state = Mat::zeros(36, 40);
+            let (_, st) = core.run_layer(&layer, &frames, &mut state).unwrap();
+            st
+        };
+        let a = run(true);
+        let b = run(false);
+        assert_eq!(a.run.cycles, b.run.cycles);
+        assert_eq!(a.run.sync_cycles, b.run.sync_cycles);
+        assert_eq!(a.run.worst_case_cycles, b.run.worst_case_cycles);
+        assert_eq!(a.run.macro_ops, b.run.macro_ops);
+        assert_eq!(a.run.parity_switches, b.run.parity_switches);
+        assert!((a.run.energy.total() - b.run.energy.total()).abs() < 1e-6);
+    }
+
+    #[test]
     fn prop_functional_independent_of_precision_geometry() {
         // Same weights, same inputs: functional Vmems must not depend
         // on timing knobs (fifo depth, switch cost, zero-skipping).
@@ -467,10 +668,12 @@ mod tests {
             let core = SpidrCore::new(SimConfig::default());
             core.run_layer(&layer, &frames, &mut base_state).unwrap();
 
-            let mut cfg = SimConfig::default();
-            cfg.fifo_depth = 1 + g.index(32);
-            cfg.parity_switch_cycles = g.u64_in(0..=4);
-            cfg.zero_skipping = g.chance(0.5);
+            let cfg = SimConfig {
+                fifo_depth: 1 + g.index(32),
+                parity_switch_cycles: g.u64_in(0..=4),
+                zero_skipping: g.chance(0.5),
+                ..SimConfig::default()
+            };
             let core2 = SpidrCore::new(cfg);
             let mut state2 = Mat::zeros(25, 3);
             core2.run_layer(&layer, &frames, &mut state2).unwrap();

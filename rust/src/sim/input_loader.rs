@@ -84,7 +84,13 @@ pub fn load_tile(
                     }
                 }
                 debug_assert_eq!(mask & !((1u32 << pixels) as u16).wrapping_sub(1), 0);
-                spad.write_row(r, mask);
+                // §Perf: `clear` already zeroed the row; skip the
+                // store for spike-free rows (the common case at high
+                // sparsity). Stats are unaffected — the hardware write
+                // happens either way.
+                if mask != 0 {
+                    spad.write_row(r, mask);
+                }
                 // The loader streams one IFmem row read + one IFspad
                 // row write per cycle; row r is readable at cycle r+1.
                 ready.push(r as u64 + 1);
@@ -97,8 +103,9 @@ pub fn load_tile(
             // column 0 (no weight reuse: only 2 of 32 Vmem rows used).
             let flat = input.as_slice();
             for (r, f) in (fan_lo..fan_hi).enumerate() {
-                let mask: u16 = if flat[f] != 0 { 1 } else { 0 };
-                spad.write_row(r, mask);
+                if flat[f] != 0 {
+                    spad.write_row(r, 1);
+                }
                 ready.push(r as u64 + 1);
                 ifmem_reads += 1;
             }

@@ -28,6 +28,7 @@ pub mod neuron_macro;
 pub mod pipeline;
 pub mod s2a;
 pub mod stats;
+pub mod stream;
 
 pub use compute_macro::ComputeMacro;
 pub use compute_unit::{ComputeUnit, TileCuStats};
@@ -37,3 +38,4 @@ pub use ifspad::IfSpad;
 pub use neuron_macro::NeuronMacro;
 pub use pipeline::{pipeline_makespan, synchronous_makespan, PipelineTimeline};
 pub use stats::RunStats;
+pub use stream::{StreamCache, TileStream};

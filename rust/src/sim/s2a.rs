@@ -229,6 +229,27 @@ pub fn run_tile(
     st
 }
 
+/// Extract the tile's spike addresses in detector order: rows scanned
+/// top-down, spikes within a row popped lowest-X-first (the
+/// trailing-zero priority encode). This is exactly the order in which
+/// `run_tile`'s even FIFO — and therefore, FIFO discipline preserving
+/// it, the odd FIFO too — retires macro passes for any ping-pong /
+/// FIFO-depth configuration, which is what makes replaying the list
+/// with [`ComputeMacro::op_row`] bit-exact (DESIGN.md §Perf).
+pub fn extract_addresses(spad: &IfSpad) -> Vec<(u8, u8)> {
+    let cols = mask_cols(spad.valid_cols);
+    let mut out = Vec::with_capacity(spad.count_spikes() as usize);
+    for y in 0..spad.valid_rows {
+        let mut m = spad.row_mask(y) & cols;
+        while m != 0 {
+            let x = m.trailing_zeros() as u8;
+            m &= m - 1;
+            out.push((y as u8, x));
+        }
+    }
+    out
+}
+
 #[inline(always)]
 fn mask_cols(valid_cols: usize) -> u16 {
     if valid_cols >= 16 {
@@ -248,11 +269,14 @@ pub fn run_tile_dense(
 ) -> TileCuStats {
     let rows = spad.valid_rows as u64;
     let cols = spad.valid_cols as u64;
-    let mut st = TileCuStats::default();
-    st.macro_ops = 2 * rows * cols;
-    st.parity_switches = 2 * cols;
-    st.detect_rows = 0;
-    st.cycles = st.macro_ops + st.parity_switches * opts.switch_cycles + 2;
+    let macro_ops = 2 * rows * cols;
+    let parity_switches = 2 * cols;
+    let mut st = TileCuStats {
+        macro_ops,
+        parity_switches,
+        cycles: macro_ops + parity_switches * opts.switch_cycles + 2,
+        ..Default::default()
+    };
     // Functional: only true spikes accumulate (the dense design gates
     // the add by the spike bit; it just cannot skip the cycle).
     for y in 0..spad.valid_rows {
@@ -364,6 +388,20 @@ mod tests {
         let mut m = cm(8);
         let st = run_tile(&spad, &ready, &mut m, &S2aOptions::default());
         assert!(st.cycles > 100);
+    }
+
+    #[test]
+    fn extract_addresses_in_detector_order() {
+        let spad = spad_with(&[(0, 5), (0, 1), (3, 0), (2, 7)], 8, 16);
+        let addrs = extract_addresses(&spad);
+        assert_eq!(addrs, vec![(0, 1), (0, 5), (2, 7), (3, 0)]);
+        let mut m = cm(8);
+        let st = run_tile(&spad, &ready_now(8), &mut m, &S2aOptions::default());
+        assert_eq!(st.detect_spikes as usize, addrs.len());
+        // out-of-validity columns are masked out
+        let mut s = spad_with(&[(1, 2)], 4, 4);
+        s.write(1, 9, true); // beyond valid_cols
+        assert_eq!(extract_addresses(&s), vec![(1, 2)]);
     }
 
     #[test]

@@ -1,0 +1,347 @@
+//! Tile-stream caching: run the input loader + S2A detector **once**
+//! per `(tile, fan-slice, timestep)` and reuse the result across every
+//! channel group, pass and pipeline (§Perf; DESIGN.md §Perf).
+//!
+//! The spike content of a tile depends only on the layer geometry, the
+//! input frame, the tile's pixel window and the CU's fan-in slice —
+//! *not* on which output-channel group is currently mapped. The
+//! weight-stationary schedule therefore used to redo identical host
+//! work (hardware-im2col into the IFspad plus the cycle-accurate S2A /
+//! controller interleave) once per `(pass × pipeline)` combination. A
+//! [`TileStream`] captures everything that interleave produces that is
+//! weight-independent:
+//!
+//! * the extracted `(Y, X)` spike-address list in detector order,
+//! * the full cycle-accurate [`TileCuStats`] (cycles, FIFO traffic,
+//!   parity switches, stalls), and
+//! * the loader's read/write counts.
+//!
+//! Functional execution then *replays* the address list into a
+//! [`ComputeMacro`](super::compute_macro::ComputeMacro) via the fused
+//! `op_row` pass, and timing/energy accounting reads the cached stats.
+//! Replay is bit-exact against the interleave — including under
+//! saturating overflow — because both FIFOs preserve extraction order,
+//! so every Vmem element sees the same additions in the same order
+//! (see `prop_stream_replay_bit_identical` below and DESIGN.md §Perf).
+
+use crate::snn::layer::Layer;
+use crate::snn::spikes::SpikePlane;
+
+use super::compute_macro::ComputeMacro;
+use super::config::{SimConfig, IFSPAD_COLS};
+use super::ifspad::IfSpad;
+use super::input_loader::load_tile;
+use super::s2a::{extract_addresses, run_tile, run_tile_dense, S2aOptions, TileCuStats};
+
+/// Loader statistics kept per stream (the `row_ready` schedule is
+/// consumed during the build and not retained — it would dominate the
+/// cache's memory footprint on large layers).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LoadStats {
+    /// IFmem rows read to assemble the tile.
+    pub ifmem_reads: u64,
+    /// IFspad row writes performed.
+    pub spad_writes: u64,
+}
+
+/// One precomputed, weight-independent tile execution.
+#[derive(Debug, Clone)]
+pub struct TileStream {
+    /// Spike addresses in detector-extraction order (empty in
+    /// timing-only runs, where no replay happens).
+    addrs: Vec<(u8, u8)>,
+    /// Cycle-accurate S2A + controller statistics.
+    pub stats: TileCuStats,
+    /// Loader statistics.
+    pub load: LoadStats,
+}
+
+impl TileStream {
+    /// The `(Y, X)` spike-address list, in detector-extraction order.
+    pub fn addrs(&self) -> &[(u8, u8)] {
+        &self.addrs
+    }
+}
+
+/// All of a layer's tile streams, indexed by `(tile, slice, timestep)`.
+#[derive(Debug, Clone)]
+pub struct StreamCache {
+    streams: Vec<TileStream>,
+    slices: usize,
+    timesteps: usize,
+}
+
+impl StreamCache {
+    /// Build every stream for a layer run.
+    ///
+    /// * `slices` — the per-CU fan-in slices (identical for every
+    ///   pipeline of the mode, which is what makes the cache shareable).
+    /// * `tiles` / `m_total` — the pixel tiling of the output plane.
+    ///
+    /// Tiles are independent, so the build fans out over host threads
+    /// when there is enough work to amortize the spawns.
+    pub fn build(
+        layer: &Layer,
+        inputs: &[SpikePlane],
+        slices: &[(usize, usize)],
+        tiles: usize,
+        m_total: usize,
+        cfg: &SimConfig,
+    ) -> StreamCache {
+        let timesteps = inputs.len();
+        let entries = tiles * slices.len() * timesteps;
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(tiles);
+        let streams = if workers <= 1 || entries < 64 {
+            build_tile_range(layer, inputs, slices, 0, tiles, m_total, cfg)
+        } else {
+            let chunk = tiles.div_ceil(workers);
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..workers)
+                    .map(|wi| {
+                        let lo = (wi * chunk).min(tiles);
+                        let hi = ((wi + 1) * chunk).min(tiles);
+                        scope.spawn(move || {
+                            build_tile_range(layer, inputs, slices, lo, hi, m_total, cfg)
+                        })
+                    })
+                    .collect();
+                let mut all = Vec::with_capacity(entries);
+                for h in handles {
+                    all.extend(h.join().expect("stream-build thread panicked"));
+                }
+                all
+            })
+        };
+        debug_assert_eq!(streams.len(), entries);
+        StreamCache {
+            streams,
+            slices: slices.len(),
+            timesteps,
+        }
+    }
+
+    /// The stream for `(tile, slice, timestep)`.
+    #[inline]
+    pub fn get(&self, tile: usize, slice: usize, t: usize) -> &TileStream {
+        debug_assert!(slice < self.slices && t < self.timesteps);
+        &self.streams[(tile * self.slices + slice) * self.timesteps + t]
+    }
+
+    /// Timesteps covered per `(tile, slice)` pair.
+    pub fn timesteps(&self) -> usize {
+        self.timesteps
+    }
+
+    /// Total cached streams (diagnostics).
+    pub fn len(&self) -> usize {
+        self.streams.len()
+    }
+
+    /// True when the cache holds no streams.
+    pub fn is_empty(&self) -> bool {
+        self.streams.is_empty()
+    }
+}
+
+/// Build the streams of tiles `tile_lo..tile_hi`, in
+/// `(tile, slice, timestep)` index order.
+fn build_tile_range(
+    layer: &Layer,
+    inputs: &[SpikePlane],
+    slices: &[(usize, usize)],
+    tile_lo: usize,
+    tile_hi: usize,
+    m_total: usize,
+    cfg: &SimConfig,
+) -> Vec<TileStream> {
+    let opts = S2aOptions {
+        fifo_depth: cfg.fifo_depth,
+        switch_cycles: cfg.parity_switch_cycles,
+        ping_pong: true,
+        detector_cycles_per_spike: cfg.detector_cycles_per_spike,
+    };
+    let mut spad = IfSpad::new();
+    let mut out = Vec::with_capacity((tile_hi - tile_lo) * slices.len() * inputs.len());
+    for tile in tile_lo..tile_hi {
+        let pixel_base = tile * IFSPAD_COLS;
+        let pixels = IFSPAD_COLS.min(m_total - pixel_base);
+        for &(lo, hi) in slices {
+            // Timing-only macro: `run_tile` needs a macro for its ops,
+            // but stats are weight- and value-independent, so a
+            // 1-neuron no-op geometry suffices.
+            let mut cm = ComputeMacro::timing_only(hi - lo, 1, cfg.precision.vmem_bits());
+            for input in inputs {
+                let load = load_tile(layer, input, pixel_base, pixels, lo, hi, &mut spad);
+                let stats = if cfg.zero_skipping {
+                    run_tile(&spad, &load.row_ready, &mut cm, &opts)
+                } else {
+                    run_tile_dense(&spad, &mut cm, &opts)
+                };
+                let addrs = if cfg.functional {
+                    extract_addresses(&spad)
+                } else {
+                    Vec::new()
+                };
+                out.push(TileStream {
+                    addrs,
+                    stats,
+                    load: LoadStats {
+                        ifmem_reads: load.ifmem_reads,
+                        spad_writes: load.spad_writes,
+                    },
+                });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::check;
+    use crate::quant::Overflow;
+    use crate::sim::compute_unit::ComputeUnit;
+    use crate::snn::layer::NeuronConfig;
+    use crate::snn::tensor::Mat;
+
+    fn rand_layer_and_input(g: &mut crate::prop::Gen) -> (Layer, SpikePlane) {
+        let in_ch = 1 + g.index(2);
+        let h = 3 + g.index(4);
+        let w = 3 + g.index(4);
+        let out_ch = 1 + g.index(6);
+        let fan = in_ch * 9;
+        let mut wm = Mat::zeros(fan, out_ch);
+        for r in 0..fan {
+            for c in 0..out_ch {
+                wm.set(r, c, g.i32_in(-8..=7));
+            }
+        }
+        let layer = Layer::conv(
+            (in_ch, h, w),
+            out_ch,
+            3,
+            3,
+            1,
+            1,
+            wm,
+            NeuronConfig::default(),
+            false,
+        )
+        .unwrap();
+        let density = g.f64() * 0.6;
+        let mut input = SpikePlane::zeros(in_ch, h, w);
+        for i in 0..input.len() {
+            if g.chance(density) {
+                input.as_mut_slice()[i] = 1;
+            }
+        }
+        (layer, input)
+    }
+
+    /// Satellite: the fast path must be *bit-identical* to the old
+    /// `run_tile` interleave — Vmems and every `TileCuStats` field —
+    /// across random tiles, densities, FIFO depths, switch costs,
+    /// overflow policies and the dense (no-zero-skipping) mode.
+    /// `ComputeUnit::process_tile` stays as the reference
+    /// implementation.
+    #[test]
+    fn prop_stream_replay_bit_identical() {
+        check("stream_replay_equiv", 40, |g| {
+            let (layer, input) = rand_layer_and_input(g);
+            let cfg = SimConfig {
+                fifo_depth: 1 + g.index(32),
+                parity_switch_cycles: g.u64_in(0..=4),
+                detector_cycles_per_spike: g.u64_in(1..=3),
+                zero_skipping: g.chance(0.8),
+                overflow: if g.chance(0.5) {
+                    Overflow::Wrap
+                } else {
+                    Overflow::Saturate
+                },
+                ..SimConfig::default()
+            };
+            let fan = layer.fan_in();
+            let (m_total, _) = layer.vmem_shape().unwrap();
+            let pixels = m_total.min(IFSPAD_COLS);
+            let wmat = layer.weights.clone().unwrap();
+
+            // Reference: the original loader + interleave.
+            let mut cu = ComputeUnit::new(0, fan, wmat.clone(), &cfg);
+            let r = cu.process_tile(&layer, &input, 0, pixels);
+
+            // Fast path: cached stream + fused replay.
+            let inputs = [input];
+            let cache = StreamCache::build(&layer, &inputs, &[(0, fan)], 1, m_total, &cfg);
+            let s = cache.get(0, 0, 0);
+            if s.stats != r.stats {
+                return false;
+            }
+            if s.load.ifmem_reads != r.load.ifmem_reads
+                || s.load.spad_writes != r.load.spad_writes
+            {
+                return false;
+            }
+            let mut cm = ComputeMacro::new(
+                wmat,
+                cfg.precision.vmem_bits(),
+                cfg.overflow,
+                true,
+            );
+            for &(y, x) in s.addrs() {
+                cm.op_row(y as usize, x as usize);
+            }
+            (0..pixels).all(|p| cm.vmem_entry(p) == cu.partial_entry(p))
+        });
+    }
+
+    #[test]
+    fn cache_indexing_covers_all_timesteps_and_slices() {
+        let mut wm = Mat::zeros(18, 4);
+        for r in 0..18 {
+            wm.set(r, 0, 1);
+        }
+        let layer = Layer::conv((2, 8, 8), 4, 3, 3, 1, 1, wm, NeuronConfig::default(), false)
+            .unwrap();
+        let mut inputs = Vec::new();
+        for t in 0..3 {
+            let mut p = SpikePlane::zeros(2, 8, 8);
+            p.set(0, t, t, 1);
+            inputs.push(p);
+        }
+        let slices = [(0usize, 9usize), (9, 18)];
+        let cache = StreamCache::build(&layer, &inputs, &slices, 4, 64, &SimConfig::default());
+        assert_eq!(cache.len(), 4 * 2 * 3);
+        assert!(!cache.is_empty());
+        // every entry carries a full loader schedule's worth of rows
+        for tile in 0..4 {
+            for si in 0..2 {
+                for t in 0..3 {
+                    assert_eq!(cache.get(tile, si, t).load.spad_writes, 9);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn timing_only_cache_skips_address_storage() {
+        let mut wm = Mat::zeros(9, 2);
+        wm.set(0, 0, 1);
+        let layer = Layer::conv((1, 6, 6), 2, 3, 3, 1, 1, wm, NeuronConfig::default(), false)
+            .unwrap();
+        let mut p = SpikePlane::zeros(1, 6, 6);
+        for i in 0..p.len() {
+            p.as_mut_slice()[i] = 1;
+        }
+        let cfg = SimConfig::timing_only(crate::quant::Precision::W4V7);
+        let cache = StreamCache::build(&layer, &[p], &[(0, 9)], 3, 36, &cfg);
+        for tile in 0..3 {
+            let s = cache.get(tile, 0, 0);
+            assert!(s.addrs().is_empty());
+            assert!(s.stats.detect_spikes > 0);
+        }
+    }
+}

@@ -135,6 +135,21 @@ impl Mat {
         &mut self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// Copy the rectangular block `rows r0..r1 × cols c0..c1` into a
+    /// new matrix using per-row slice copies (§Perf: replaces the
+    /// element-wise `get`/`set` loops that used to rebuild CU weight
+    /// slices on every pass).
+    pub fn submatrix(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Mat {
+        debug_assert!(r0 <= r1 && r1 <= self.rows);
+        debug_assert!(c0 <= c1 && c1 <= self.cols);
+        let (rows, cols) = (r1 - r0, c1 - c0);
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in r0..r1 {
+            data.extend_from_slice(&self.row(r)[c0..c1]);
+        }
+        Mat { rows, cols, data }
+    }
+
     /// Flat view.
     pub fn as_slice(&self) -> &[i32] {
         &self.data
@@ -176,5 +191,23 @@ mod tests {
     #[test]
     fn mat_from_vec_validates() {
         assert!(Mat::from_vec(2, 2, vec![1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn submatrix_copies_block() {
+        let mut m = Mat::zeros(4, 5);
+        for r in 0..4 {
+            for c in 0..5 {
+                m.set(r, c, (r * 10 + c) as i32);
+            }
+        }
+        let s = m.submatrix(1, 3, 2, 5);
+        assert_eq!(s.rows, 2);
+        assert_eq!(s.cols, 3);
+        assert_eq!(s.as_slice(), &[12, 13, 14, 22, 23, 24]);
+        // degenerate blocks are fine
+        let empty = m.submatrix(2, 2, 0, 5);
+        assert_eq!(empty.rows, 0);
+        assert_eq!(empty.as_slice().len(), 0);
     }
 }
