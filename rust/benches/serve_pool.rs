@@ -1,0 +1,107 @@
+//! Serving-tier throughput bench: the single-engine server vs the
+//! sharded worker pool on the same request stream.
+//!
+//! Series (`DATA` lines + JSONL rows appended to `BENCH_serve.json`):
+//!
+//! * `serve_single_clips_per_s` — the pre-pool three-stage server
+//!   (one functional engine on the calling thread), the baseline.
+//! * `serve_pool_clips_per_s`  — pool throughput vs worker count.
+//! * `serve_pool_speedup`     — pool / single ratio vs worker count
+//!   (the acceptance series: ≥ 2× at 4 workers).
+//! * `serve_pool_sim_clips_per_s` — the same request path with each
+//!   worker wrapping a cycle-level `ScheduledEngine`.
+
+mod common;
+
+use spidr::coordinator::{
+    InferenceServer, MultiCoreScheduler, PoolConfig, ReferenceEngine, ScheduledEngine,
+    ServerConfig,
+};
+use spidr::dvs::event::{Event, Polarity};
+use spidr::prop::SplitMix64;
+use spidr::sim::SimConfig;
+use spidr::snn::network::demo_serving_network;
+
+fn cfg() -> ServerConfig {
+    ServerConfig {
+        height: 16,
+        width: 16,
+        timesteps: 16,
+        bin_us: 1000,
+        queue_depth: 4,
+    }
+}
+
+/// One synthetic DVS burst (~events random events over the clip window).
+fn burst(seed: u64, events: usize) -> Vec<Event> {
+    let mut rng = SplitMix64::new(seed);
+    (0..events)
+        .map(|_| Event {
+            y: rng.below(16) as u16,
+            x: rng.below(16) as u16,
+            polarity: if rng.chance(0.5) { Polarity::On } else { Polarity::Off },
+            t_us: rng.below(16 * 1000) as u32,
+        })
+        .collect()
+}
+
+fn requests(n: usize) -> Vec<Vec<Event>> {
+    (0..n).map(|i| burst(1000 + i as u64, 220)).collect()
+}
+
+fn main() {
+    common::header("serve", "sharded serving tier: pool vs single engine");
+    let server = InferenceServer::new(cfg());
+    let net = demo_serving_network(16).expect("demo workload");
+
+    // Baseline: the single-engine three-stage server.
+    const N: usize = 96;
+    let mut single = ReferenceEngine::new(net.clone()).expect("engine");
+    let (out, secs) = common::timed(|| server.serve(requests(N), &mut single).unwrap());
+    let single_cps = N as f64 / secs;
+    assert_eq!(out.0.len(), N);
+    println!("single-engine serve: {N} clips in {secs:.3}s");
+    common::emit("serve_single_clips_per_s", 1.0, single_cps);
+
+    // The pool, at 1/2/4 workers, same workload and request stream.
+    for workers in [1usize, 2, 4] {
+        let pool = PoolConfig::with_workers(workers);
+        let (out, secs) = common::timed(|| {
+            server
+                .serve_pool(requests(N), &pool, |_| ReferenceEngine::new(net.clone()))
+                .unwrap()
+        });
+        let cps = N as f64 / secs;
+        let (resp, metrics) = out;
+        assert_eq!(resp.len(), N);
+        assert!(resp.iter().enumerate().all(|(i, r)| r.id == i as u64));
+        println!(
+            "pool x{workers}: {N} clips in {secs:.3}s, util {:.0}%, {} stolen",
+            metrics.pool_utilization() * 100.0,
+            metrics.total_stolen()
+        );
+        common::emit("serve_pool_clips_per_s", workers as f64, cps);
+        common::emit("serve_pool_speedup", workers as f64, cps / single_cps);
+    }
+
+    // The same tier with cycle-level simulated cores per worker
+    // (fewer clips; the simulator is orders of magnitude heavier).
+    const NSIM: usize = 12;
+    for workers in [1usize, 4] {
+        let pool = PoolConfig::with_workers(workers);
+        let (out, secs) = common::timed(|| {
+            server
+                .serve_pool(requests(NSIM), &pool, |_| {
+                    ScheduledEngine::new(
+                        net.clone(),
+                        MultiCoreScheduler::new(1, SimConfig::default()),
+                    )
+                })
+                .unwrap()
+        });
+        let (resp, _) = out;
+        assert_eq!(resp.len(), NSIM);
+        println!("sim pool x{workers}: {NSIM} clips in {secs:.3}s");
+        common::emit("serve_pool_sim_clips_per_s", workers as f64, NSIM as f64 / secs);
+    }
+}

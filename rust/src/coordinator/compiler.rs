@@ -10,8 +10,13 @@ use crate::snn::network::{pool_step, Network, NetworkState};
 use crate::snn::spikes::SpikePlane;
 
 use super::mapper::{LayerMapping, Mapper};
+use super::server::Engine;
 
 /// A compiled network: per-stateful-layer mappings, ready to execute.
+///
+/// The public fields are snapshots taken together by
+/// [`NetworkCompiler::compile`]; mutating one (e.g. swapping
+/// `network`) desyncs the others — recompile instead.
 #[derive(Debug, Clone)]
 pub struct CompiledNetwork {
     /// The workload.
@@ -20,6 +25,9 @@ pub struct CompiledNetwork {
     pub mappings: Vec<LayerMapping>,
     /// Simulation configuration.
     pub cfg: SimConfig,
+    /// Vmem state reused by the `Engine` path (lazily allocated,
+    /// zeroed per clip so every request is an independent inference).
+    engine_state: Option<NetworkState>,
 }
 
 /// Clip-level execution report.
@@ -44,16 +52,58 @@ impl NetworkCompiler {
     /// always matches the quantization the weights were produced at.
     pub fn compile(network: Network, mut cfg: SimConfig) -> Result<CompiledNetwork> {
         cfg.precision = network.precision;
-        let mapper = Mapper::new(cfg.precision);
-        let mut mappings = Vec::new();
-        for layer in network.layers.iter().filter(|l| l.has_state()) {
-            mappings.push(mapper.map_layer(layer)?);
-        }
+        let mappings = Mapper::new(cfg.precision).map_network(&network)?;
         Ok(CompiledNetwork {
             network,
             mappings,
             cfg,
+            engine_state: None,
         })
+    }
+}
+
+/// A compiled network is directly usable as a serving-pool engine:
+/// each clip is an independent inference on the simulated core (state
+/// is freshly initialized per clip), reporting the full cycle/energy
+/// telemetry. Pool workers clone one compiled network each
+/// (weights stay worker-resident; DESIGN.md §Serve).
+impl CompiledNetwork {
+    /// True when every bank of `state` matches the current network's
+    /// stateful-layer shapes — guards the engine-state cache against
+    /// `network` being swapped through the public field between calls.
+    fn state_shape_matches(&self, state: &NetworkState) -> bool {
+        let mut n = 0;
+        for layer in self.network.stateful_layers() {
+            let Ok((m, k)) = layer.vmem_shape() else {
+                return false;
+            };
+            match state.vmems.get(n) {
+                Some(bank) if bank.rows == m && bank.cols == k => {}
+                _ => return false,
+            }
+            n += 1;
+        }
+        n == state.vmems.len()
+    }
+}
+
+impl Engine for CompiledNetwork {
+    type Output = ClipReport;
+
+    fn infer(&mut self, clip: &[SpikePlane]) -> Result<ClipReport> {
+        // Take the cached state out so `run_clip(&self, ...)` can
+        // borrow self while the state is mutated, then put it back.
+        // Rebuild instead of reusing if its shape no longer matches.
+        let mut state = match self.engine_state.take() {
+            Some(mut s) if self.state_shape_matches(&s) => {
+                s.reset();
+                s
+            }
+            _ => self.network.init_state()?,
+        };
+        let report = self.run_clip(clip, &mut state);
+        self.engine_state = Some(state);
+        report
     }
 }
 

@@ -5,6 +5,7 @@ use crate::error::{Error, Result};
 use crate::quant::Precision;
 use crate::sim::config::{OperatingMode, IFSPAD_COLS, IFSPAD_ROWS};
 use crate::snn::layer::{Layer, LayerKind};
+use crate::snn::network::Network;
 
 /// How one layer maps onto the SpiDR core.
 #[derive(Debug, Clone, PartialEq)]
@@ -75,6 +76,16 @@ impl Mapper {
             tiles,
             row_utilization,
         })
+    }
+
+    /// Map every stateful layer of a network, in `stateful_layers()`
+    /// order — the plan the compiler and the serving tier's layer-group
+    /// sharding both consume. Fails on the first unmappable layer.
+    pub fn map_network(&self, network: &Network) -> Result<Vec<LayerMapping>> {
+        network
+            .stateful_layers()
+            .map(|l| self.map_layer(l))
+            .collect()
     }
 }
 

@@ -1,6 +1,47 @@
-//! Lightweight latency/throughput metrics for the streaming server.
+//! Lightweight latency/throughput metrics for the streaming server
+//! and the sharded serving pool.
 
 use std::time::Duration;
+
+/// Per-worker counters from one pool run (DESIGN.md §Serve): how many
+/// clips each worker served, how its wall time split between busy and
+/// idle, how much work it stole from peers, and how deep its bounded
+/// inbox ever got.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerMetrics {
+    /// Worker id (index into the pool).
+    pub worker: usize,
+    /// Clips served by this worker.
+    pub clips: u64,
+    /// Clips acquired from a peer's inbox (work stealing).
+    pub stolen: u64,
+    /// Wall time spent inside `Engine::infer`.
+    pub busy: Duration,
+    /// Wall time spent waiting for work.
+    pub idle: Duration,
+    /// Queue-depth high-water mark of this worker's bounded inbox.
+    pub inbox_high_water: usize,
+}
+
+impl WorkerMetrics {
+    /// Fresh counters for worker `worker`.
+    pub fn new(worker: usize) -> Self {
+        WorkerMetrics {
+            worker,
+            ..WorkerMetrics::default()
+        }
+    }
+
+    /// Fraction of this worker's accounted wall time spent serving
+    /// clips (0 when it never ran).
+    pub fn utilization(&self) -> f64 {
+        let total = self.busy.as_secs_f64() + self.idle.as_secs_f64();
+        if total == 0.0 {
+            return 0.0;
+        }
+        self.busy.as_secs_f64() / total
+    }
+}
 
 /// Online metrics aggregator.
 #[derive(Debug, Clone, Default)]
@@ -10,8 +51,17 @@ pub struct Metrics {
     pub clips: u64,
     /// Frames processed.
     pub frames: u64,
-    /// Total busy wall time.
+    /// Sum of per-clip end-to-end latencies. Latencies **overlap**
+    /// across pool workers (and include queue wait), so this exceeds
+    /// elapsed time on the pool path — use [`Metrics::wall`] for
+    /// throughput.
     pub busy: Duration,
+    /// Wall-clock span of the serve call that produced these metrics
+    /// (zero when metrics are composed manually).
+    pub wall: Duration,
+    /// Per-worker counters (empty for the single-engine `serve` path;
+    /// one entry per pool worker for `serve_pool`).
+    pub workers: Vec<WorkerMetrics>,
 }
 
 impl Metrics {
@@ -47,13 +97,34 @@ impl Metrics {
         v[idx.min(v.len() - 1)]
     }
 
-    /// Throughput in clips/second over the busy time.
+    /// Throughput in clips/second — over the wall-clock span when the
+    /// serve path recorded one, else over summed busy time (correct
+    /// only while clips never overlap, i.e. a single engine).
     pub fn clips_per_second(&self) -> f64 {
-        let s = self.busy.as_secs_f64();
+        let span = if self.wall > Duration::ZERO {
+            self.wall
+        } else {
+            self.busy
+        };
+        let s = span.as_secs_f64();
         if s == 0.0 {
             return 0.0;
         }
         self.clips as f64 / s
+    }
+
+    /// Mean busy fraction across pool workers (0 without a pool).
+    pub fn pool_utilization(&self) -> f64 {
+        if self.workers.is_empty() {
+            return 0.0;
+        }
+        self.workers.iter().map(|w| w.utilization()).sum::<f64>()
+            / self.workers.len() as f64
+    }
+
+    /// Total clips that changed workers via stealing.
+    pub fn total_stolen(&self) -> u64 {
+        self.workers.iter().map(|w| w.stolen).sum()
     }
 }
 
@@ -75,10 +146,41 @@ mod tests {
     }
 
     #[test]
+    fn throughput_prefers_wall_clock_over_overlapping_latencies() {
+        // Two clips served concurrently: latencies sum to 400 us but
+        // only 200 us of wall time elapsed. Throughput must use wall.
+        let mut m = Metrics::new();
+        m.record_clip(Duration::from_micros(200), 1);
+        m.record_clip(Duration::from_micros(200), 1);
+        m.wall = Duration::from_micros(200);
+        assert!((m.clips_per_second() - 10_000.0).abs() < 1e-6);
+    }
+
+    #[test]
     fn empty_is_zero() {
         let m = Metrics::new();
         assert_eq!(m.mean_latency_us(), 0.0);
         assert_eq!(m.percentile_us(50.0), 0);
         assert_eq!(m.clips_per_second(), 0.0);
+        assert_eq!(m.pool_utilization(), 0.0);
+        assert_eq!(m.total_stolen(), 0);
+    }
+
+    #[test]
+    fn worker_counters_compose() {
+        let mut m = Metrics::new();
+        let mut w0 = WorkerMetrics::new(0);
+        w0.clips = 3;
+        w0.stolen = 1;
+        w0.busy = Duration::from_millis(30);
+        w0.idle = Duration::from_millis(10);
+        let mut w1 = WorkerMetrics::new(1);
+        w1.busy = Duration::from_millis(0);
+        w1.idle = Duration::from_millis(40);
+        m.workers = vec![w0, w1];
+        assert!((m.workers[0].utilization() - 0.75).abs() < 1e-9);
+        assert_eq!(m.workers[1].utilization(), 0.0);
+        assert!((m.pool_utilization() - 0.375).abs() < 1e-9);
+        assert_eq!(m.total_stolen(), 1);
     }
 }

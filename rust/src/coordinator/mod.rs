@@ -1,17 +1,28 @@
 //! L3 coordinator: the request path. Layer mapping (paper Fig. 12),
 //! network compilation onto the simulated core, multi-core channel
-//! scheduling, streaming event ingestion with backpressure, and
-//! metrics. Python never runs here — the functional math comes from
-//! either the cycle simulator or the AOT PJRT artifacts.
+//! scheduling, streaming event ingestion with backpressure, the
+//! sharded serving pool, and metrics. Python never runs here — the
+//! functional math comes from either the cycle simulator, the
+//! functional reference executor, or the AOT PJRT artifacts.
+//!
+//! Request path at a glance (README.md has the full diagram):
+//!
+//! ```text
+//! events ─► ingest (bin) ─► dispatch ─► worker pool ─► reorder ─► responses
+//!                           bounded       N engines     by seq
+//!                           inboxes      (1 core each)
+//! ```
 
 pub mod compiler;
 pub mod mapper;
 pub mod metrics;
+pub mod pool;
 pub mod scheduler;
 pub mod server;
 
 pub use compiler::{ClipReport, CompiledNetwork, NetworkCompiler};
 pub use mapper::{LayerMapping, Mapper};
-pub use metrics::Metrics;
-pub use scheduler::{MultiCoreScheduler, MultiCoreStats};
-pub use server::{Engine, InferenceServer, Response, ServerConfig};
+pub use metrics::{Metrics, WorkerMetrics};
+pub use pool::{run_pool, ClipJob, CompletedClip, PoolConfig, PoolRun, StealPolicy};
+pub use scheduler::{MultiCoreScheduler, MultiCoreStats, ScheduledEngine};
+pub use server::{Engine, InferenceServer, ReferenceEngine, Response, ServerConfig};

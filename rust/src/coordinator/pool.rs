@@ -1,0 +1,724 @@
+//! Sharded serving tier: a load-balanced pool of inference workers.
+//!
+//! The single-engine server serializes every clip behind one engine;
+//! one slow clip stalls the whole request path. The pool scales that
+//! path out: N worker threads, each wrapping its **own** engine
+//! instance (simulated [`SpidrCore`](crate::sim::core::SpidrCore)
+//! via [`ScheduledEngine`](super::scheduler::ScheduledEngine), a
+//! compiled network, or the functional reference executor), fed by a
+//! work-stealing dispatch queue with **bounded per-worker inboxes**.
+//!
+//! Three invariants (DESIGN.md §Serve):
+//!
+//! * **Backpressure** — a full pool blocks the dispatcher, which
+//!   blocks the bounded ingest channel, which throttles event binning.
+//!   Clips are never dropped; saturation propagates to the source
+//!   exactly as the chip's asynchronous handshaking stalls a producer
+//!   whose consumer FIFO is full.
+//! * **Ordering** — workers complete out of order (heterogeneous
+//!   latencies); the emission stage holds a sequence-number reorder
+//!   buffer and releases responses strictly in arrival order.
+//! * **Work conservation** — under [`StealPolicy::Steal`], an idle
+//!   worker drains the back of the most-loaded peer inbox, so one
+//!   slow clip cannot strand queued work behind it.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::snn::spikes::SpikePlane;
+
+use super::metrics::WorkerMetrics;
+use super::server::Engine;
+
+/// How idle workers acquire work beyond their own inbox.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StealPolicy {
+    /// Workers only consume their own inbox (strict affinity; a slow
+    /// worker can strand clips queued behind it until it catches up).
+    Pinned,
+    /// Idle workers steal from the back of the most-loaded peer inbox
+    /// (work-conserving; the default).
+    Steal,
+}
+
+/// Serving-pool configuration, sibling of
+/// [`ServerConfig`](super::server::ServerConfig).
+#[derive(Debug, Clone, Copy)]
+pub struct PoolConfig {
+    /// Worker threads, each owning one engine instance.
+    pub workers: usize,
+    /// Bounded inbox depth per worker (backpressure window).
+    pub inbox_depth: usize,
+    /// Idle-worker acquisition policy.
+    pub steal: StealPolicy,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            workers: 4,
+            inbox_depth: 2,
+            steal: StealPolicy::Steal,
+        }
+    }
+}
+
+impl PoolConfig {
+    /// A pool of `workers` workers with default inbox depth and
+    /// stealing enabled.
+    pub fn with_workers(workers: usize) -> Self {
+        PoolConfig {
+            workers,
+            ..PoolConfig::default()
+        }
+    }
+
+    /// Maximum clips resident in the pool at once (inboxes plus one
+    /// in-flight clip per worker) — the pool's backpressure bound.
+    pub fn capacity(&self) -> usize {
+        self.workers.max(1) * (self.inbox_depth.max(1) + 1)
+    }
+}
+
+/// One unit of pool work: a binned clip tagged with its arrival
+/// sequence number and ingestion start time.
+#[derive(Debug)]
+pub struct ClipJob {
+    /// Arrival order (the reorder key).
+    pub seq: u64,
+    /// Ingestion start (end-to-end latency reference).
+    pub t0: Instant,
+    /// Binned spike frames, one per timestep.
+    pub frames: Vec<SpikePlane>,
+}
+
+/// One clip completed by the pool, in emission (= arrival) order.
+#[derive(Debug)]
+pub struct CompletedClip<O> {
+    /// Arrival sequence number.
+    pub seq: u64,
+    /// Engine output.
+    pub output: O,
+    /// End-to-end latency (ingestion start → inference done).
+    pub latency: Duration,
+    /// Frames in the clip.
+    pub frames: u64,
+    /// Worker that served the clip.
+    pub worker: usize,
+}
+
+/// Result of draining a job stream through the pool.
+#[derive(Debug)]
+pub struct PoolRun<O> {
+    /// Completed clips, reordered into arrival-sequence order.
+    pub clips: Vec<CompletedClip<O>>,
+    /// Per-worker counters, indexed by worker id.
+    pub workers: Vec<WorkerMetrics>,
+}
+
+/// Everything a worker sends to the emission stage.
+type WorkerResult<O> = std::result::Result<CompletedClip<O>, Error>;
+
+/// Shared dispatch state: per-worker bounded inboxes guarded by one
+/// mutex, with condvars for "work arrived" and "a slot freed".
+struct PoolState {
+    /// Per-worker inboxes, each bounded by `inbox_depth`.
+    inboxes: Vec<VecDeque<ClipJob>>,
+    /// Queue-depth high-water mark per inbox.
+    high_water: Vec<usize>,
+    /// No more jobs will be dispatched; workers drain and exit.
+    closed: bool,
+    /// A worker reported an error: stop admitting new jobs (fail
+    /// fast); at most the clips already resident still complete.
+    aborted: bool,
+    /// Workers still running (dispatch aborts when this hits zero).
+    alive: usize,
+    /// Round-robin cursor breaking ties between equally loaded inboxes.
+    rr: usize,
+}
+
+struct SharedQueue {
+    state: Mutex<PoolState>,
+    /// Signaled when work is enqueued or the pool closes.
+    work: Condvar,
+    /// Signaled when an inbox slot frees or a worker exits.
+    space: Condvar,
+}
+
+impl SharedQueue {
+    fn new(workers: usize) -> Self {
+        SharedQueue {
+            state: Mutex::new(PoolState {
+                inboxes: (0..workers).map(|_| VecDeque::new()).collect(),
+                high_water: vec![0; workers],
+                closed: false,
+                aborted: false,
+                alive: workers,
+                rr: 0,
+            }),
+            work: Condvar::new(),
+            space: Condvar::new(),
+        }
+    }
+
+    /// Enqueue a job onto the least-loaded inbox with a free slot,
+    /// blocking while every inbox is full (this is the backpressure
+    /// edge). Returns `false` once every worker has exited or a
+    /// worker reported an error (fail fast — don't grind the rest of
+    /// the stream just to discard it).
+    fn dispatch(&self, depth: usize, job: ClipJob) -> bool {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.alive == 0 || st.aborted {
+                return false;
+            }
+            let n = st.inboxes.len();
+            let mut best: Option<usize> = None;
+            for off in 0..n {
+                let i = (st.rr + off) % n;
+                let len = st.inboxes[i].len();
+                if len < depth {
+                    let better = match best {
+                        None => true,
+                        Some(b) => len < st.inboxes[b].len(),
+                    };
+                    if better {
+                        best = Some(i);
+                    }
+                }
+            }
+            match best {
+                Some(i) => {
+                    st.inboxes[i].push_back(job);
+                    if st.inboxes[i].len() > st.high_water[i] {
+                        st.high_water[i] = st.inboxes[i].len();
+                    }
+                    st.rr = (i + 1) % n;
+                    drop(st);
+                    self.work.notify_all();
+                    return true;
+                }
+                None => st = self.space.wait(st).unwrap(),
+            }
+        }
+    }
+
+    /// Next job for worker `me`: own inbox first, then (under
+    /// [`StealPolicy::Steal`]) the back of the most-loaded peer inbox.
+    /// Blocks while the pool is open and empty; returns `None` once it
+    /// is closed and drained. The second tuple field marks a steal.
+    fn next(&self, me: usize, steal: StealPolicy) -> Option<(ClipJob, bool)> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(job) = st.inboxes[me].pop_front() {
+                drop(st);
+                self.space.notify_all();
+                return Some((job, false));
+            }
+            if steal == StealPolicy::Steal {
+                let n = st.inboxes.len();
+                let mut victim: Option<usize> = None;
+                for i in 0..n {
+                    if i != me && !st.inboxes[i].is_empty() {
+                        let better = match victim {
+                            None => true,
+                            Some(v) => st.inboxes[i].len() > st.inboxes[v].len(),
+                        };
+                        if better {
+                            victim = Some(i);
+                        }
+                    }
+                }
+                if let Some(v) = victim {
+                    let job = st.inboxes[v].pop_back().unwrap();
+                    drop(st);
+                    self.space.notify_all();
+                    return Some((job, true));
+                }
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.work.wait(st).unwrap();
+        }
+    }
+
+    /// Mark the job stream exhausted and wake every waiting worker.
+    fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.work.notify_all();
+    }
+
+    /// Flag an engine/factory failure: stop admitting jobs and wake a
+    /// dispatcher blocked on a full pool so it can observe the flag.
+    fn abort(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.aborted = true;
+        drop(st);
+        self.space.notify_all();
+    }
+
+    /// Deregister an exiting worker; returns its inbox high-water mark.
+    fn worker_exit(&self, me: usize) -> usize {
+        let mut st = self.state.lock().unwrap();
+        st.alive -= 1;
+        let hw = st.high_water[me];
+        drop(st);
+        // Wake the dispatcher (it must re-check `alive`) and peers.
+        self.space.notify_all();
+        self.work.notify_all();
+        hw
+    }
+}
+
+/// Body of one worker thread: build the engine, serve jobs until the
+/// queue closes, and account busy/idle/steal counters.
+fn worker_loop<E, F>(
+    me: usize,
+    queue: &SharedQueue,
+    factory: &F,
+    results: Sender<WorkerResult<E::Output>>,
+    steal: StealPolicy,
+) -> WorkerMetrics
+where
+    E: Engine,
+    F: Fn(usize) -> Result<E>,
+{
+    /// Deregister on unwind too: if `Engine::infer` panics and the
+    /// worker silently leaks its `alive` registration, a dispatcher
+    /// blocked on a full pool waits on `space` forever instead of the
+    /// panic propagating through `join` in [`run_pool`].
+    struct ExitGuard<'a> {
+        queue: &'a SharedQueue,
+        me: usize,
+        armed: bool,
+    }
+    impl Drop for ExitGuard<'_> {
+        fn drop(&mut self) {
+            if self.armed {
+                self.queue.worker_exit(self.me);
+            }
+        }
+    }
+
+    let mut wm = WorkerMetrics::new(me);
+    let mut guard = ExitGuard {
+        queue,
+        me,
+        armed: true,
+    };
+    let mut engine = match factory(me) {
+        Ok(e) => e,
+        Err(e) => {
+            queue.abort();
+            let _ = results.send(Err(e));
+            guard.armed = false;
+            wm.inbox_high_water = queue.worker_exit(me);
+            return wm;
+        }
+    };
+    loop {
+        let wait0 = Instant::now();
+        let Some((job, stolen)) = queue.next(me, steal) else {
+            wm.idle += wait0.elapsed(); // final wait-for-close counts too
+            break;
+        };
+        wm.idle += wait0.elapsed();
+        if stolen {
+            wm.stolen += 1;
+        }
+        let busy0 = Instant::now();
+        let outcome = engine.infer(&job.frames);
+        wm.busy += busy0.elapsed();
+        match outcome {
+            Ok(output) => {
+                wm.clips += 1;
+                let done = CompletedClip {
+                    seq: job.seq,
+                    output,
+                    latency: job.t0.elapsed(),
+                    frames: job.frames.len() as u64,
+                    worker: me,
+                };
+                if results.send(Ok(done)).is_err() {
+                    break;
+                }
+            }
+            Err(e) => {
+                queue.abort();
+                let _ = results.send(Err(e));
+                break;
+            }
+        }
+    }
+    guard.armed = false;
+    wm.inbox_high_water = queue.worker_exit(me);
+    wm
+}
+
+/// Drain a stream of [`ClipJob`]s through a pool of engine workers.
+///
+/// `factory` builds one engine per worker **inside that worker's
+/// thread** (so engines — like PJRT handles — never need to be
+/// `Send`); it must be `Sync` because every worker borrows it. The
+/// call returns once the job sender is dropped and every in-flight
+/// clip has been emitted.
+///
+/// Responses are reordered into sequence order by the emission stage
+/// before being returned. The first engine or factory error fails
+/// fast: dispatch stops admitting jobs, at most the clips already
+/// resident in the pool complete, and the run returns that error; a
+/// dead worker's queued clips are re-acquired by its peers under
+/// [`StealPolicy::Steal`]. A panicking engine propagates its panic
+/// out of `run_pool` (worker registration is unwound by a drop
+/// guard, so the dispatcher cannot hang on a full pool).
+pub fn run_pool<E, F>(
+    cfg: &PoolConfig,
+    jobs: Receiver<ClipJob>,
+    factory: &F,
+) -> Result<PoolRun<E::Output>>
+where
+    E: Engine,
+    F: Fn(usize) -> Result<E> + Sync,
+{
+    let workers = cfg.workers.max(1);
+    let depth = cfg.inbox_depth.max(1);
+    let steal = cfg.steal;
+    let queue = SharedQueue::new(workers);
+    let (rtx, rrx) = channel::<WorkerResult<E::Output>>();
+
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(workers);
+        for wi in 0..workers {
+            let queue = &queue;
+            let rtx = rtx.clone();
+            handles.push(
+                scope.spawn(move || worker_loop::<E, F>(wi, queue, factory, rtx, steal)),
+            );
+        }
+        // The emission stage owns the only non-worker receiver end;
+        // drop our sender so it terminates when the workers do.
+        drop(rtx);
+
+        // Emission stage: sequence-number reorder buffer. Clips arrive
+        // in completion order; they leave in arrival order.
+        let emission = scope.spawn(move || {
+            let mut pending: BTreeMap<u64, CompletedClip<E::Output>> = BTreeMap::new();
+            let mut next_seq = 0u64;
+            let mut ready: Vec<CompletedClip<E::Output>> = Vec::new();
+            let mut first_err: Option<Error> = None;
+            for msg in rrx.iter() {
+                match msg {
+                    Ok(done) => {
+                        pending.insert(done.seq, done);
+                        while let Some(d) = pending.remove(&next_seq) {
+                            ready.push(d);
+                            next_seq += 1;
+                        }
+                    }
+                    Err(e) => {
+                        if first_err.is_none() {
+                            first_err = Some(e);
+                        }
+                    }
+                }
+            }
+            // After an error some sequence numbers never complete;
+            // flush the stragglers in order so output stays sorted.
+            for d in pending.into_values() {
+                ready.push(d);
+            }
+            (ready, first_err)
+        });
+
+        // Dispatch stage (the calling thread): bounded inboxes make
+        // `dispatch` block when the pool saturates, which leaves jobs
+        // unread in `jobs`, which blocks the bounded ingest channel —
+        // backpressure reaches the event source without drops.
+        for job in jobs.iter() {
+            if !queue.dispatch(depth, job) {
+                break; // every worker exited (errors already reported)
+            }
+        }
+        queue.close();
+
+        let mut wm = Vec::with_capacity(workers);
+        for h in handles {
+            wm.push(h.join().expect("pool worker panicked"));
+        }
+        let (clips, first_err) = emission.join().expect("emission stage panicked");
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        Ok(PoolRun { clips, workers: wm })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    use std::sync::mpsc::sync_channel;
+    use std::sync::Arc;
+
+    /// Deterministic engine: output = total spikes in the clip.
+    struct CountEngine;
+
+    impl Engine for CountEngine {
+        type Output = u64;
+
+        fn infer(&mut self, clip: &[SpikePlane]) -> Result<u64> {
+            Ok(clip.iter().map(|p| p.count_spikes()).sum())
+        }
+    }
+
+    /// Engine whose service time varies with clip content, so
+    /// completion order scrambles under a multi-worker pool.
+    struct SkewEngine;
+
+    impl Engine for SkewEngine {
+        type Output = u64;
+
+        fn infer(&mut self, clip: &[SpikePlane]) -> Result<u64> {
+            let n: u64 = clip.iter().map(|p| p.count_spikes()).sum();
+            // later-arriving small clips finish before earlier big ones
+            std::thread::sleep(Duration::from_millis((n % 5) * 3));
+            Ok(n)
+        }
+    }
+
+    fn job(seq: u64, spikes: usize) -> ClipJob {
+        let mut p = SpikePlane::zeros(1, 8, 8);
+        for i in 0..spikes.min(p.len()) {
+            p.as_mut_slice()[i] = 1;
+        }
+        ClipJob {
+            seq,
+            t0: Instant::now(),
+            frames: vec![p],
+        }
+    }
+
+    /// Pre-fill an unbounded channel with `n` jobs of varying size.
+    fn job_stream(n: u64) -> Receiver<ClipJob> {
+        let (tx, rx) = channel();
+        for seq in 0..n {
+            tx.send(job(seq, (seq as usize * 7 + 3) % 23)).unwrap();
+        }
+        rx
+    }
+
+    #[test]
+    fn responses_reordered_into_arrival_order() {
+        let cfg = PoolConfig {
+            workers: 4,
+            inbox_depth: 2,
+            steal: StealPolicy::Steal,
+        };
+        let run = run_pool(&cfg, job_stream(24), &|_| Ok(SkewEngine)).unwrap();
+        assert_eq!(run.clips.len(), 24);
+        for (i, c) in run.clips.iter().enumerate() {
+            assert_eq!(c.seq, i as u64, "reorder buffer must restore order");
+            assert_eq!(c.output, ((i as u64 * 7 + 3) % 23).min(64));
+        }
+        let served: u64 = run.workers.iter().map(|w| w.clips).sum();
+        assert_eq!(served, 24);
+    }
+
+    #[test]
+    fn pinned_pool_still_serves_everything_in_order() {
+        let cfg = PoolConfig {
+            workers: 3,
+            inbox_depth: 1,
+            steal: StealPolicy::Pinned,
+        };
+        let run = run_pool(&cfg, job_stream(17), &|_| Ok(CountEngine)).unwrap();
+        assert_eq!(run.clips.len(), 17);
+        assert!(run.clips.windows(2).all(|w| w[0].seq < w[1].seq));
+        assert!(run.workers.iter().all(|w| w.stolen == 0));
+    }
+
+    /// Satellite (b): a saturated pool throttles ingestion instead of
+    /// dropping clips. With every engine gated shut, the number of
+    /// jobs the producer manages to hand over can never exceed the
+    /// pool capacity plus the one job the dispatcher holds — an
+    /// invariant that holds at *every* instant, so sampling it while
+    /// the gate is closed is deterministic. Once the gate opens, all
+    /// clips must complete.
+    #[test]
+    fn saturated_pool_throttles_ingestion_without_drops() {
+        const TOTAL: u64 = 32;
+        let cfg = PoolConfig {
+            workers: 2,
+            inbox_depth: 1,
+            steal: StealPolicy::Steal,
+        };
+        let gate = Arc::new(AtomicBool::new(false));
+        let sent = Arc::new(AtomicUsize::new(0));
+        let sent_at_release = Arc::new(AtomicUsize::new(usize::MAX));
+
+        // Rendezvous job channel: a send completes only when the
+        // dispatcher takes the job, so `sent` counts admitted jobs.
+        let (tx, rx) = sync_channel::<ClipJob>(0);
+        let producer = {
+            let sent = Arc::clone(&sent);
+            std::thread::spawn(move || {
+                for seq in 0..TOTAL {
+                    if tx.send(job(seq, 4)).is_err() {
+                        return;
+                    }
+                    sent.fetch_add(1, Ordering::SeqCst);
+                }
+            })
+        };
+        let releaser = {
+            let gate = Arc::clone(&gate);
+            let sent = Arc::clone(&sent);
+            let sent_at_release = Arc::clone(&sent_at_release);
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(60));
+                sent_at_release.store(sent.load(Ordering::SeqCst), Ordering::SeqCst);
+                gate.store(true, Ordering::SeqCst);
+            })
+        };
+
+        struct GatedEngine(Arc<AtomicBool>);
+        impl Engine for GatedEngine {
+            type Output = u64;
+            fn infer(&mut self, clip: &[SpikePlane]) -> Result<u64> {
+                while !self.0.load(Ordering::SeqCst) {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Ok(clip.iter().map(|p| p.count_spikes()).sum())
+            }
+        }
+
+        let gate_f = Arc::clone(&gate);
+        let run = run_pool(&cfg, rx, &move |_| Ok(GatedEngine(Arc::clone(&gate_f))))
+            .unwrap();
+        producer.join().unwrap();
+        releaser.join().unwrap();
+
+        // capacity = workers * (inbox_depth + 1) = 4, plus the one job
+        // the dispatcher may hold while blocked on a full pool.
+        let bound = cfg.capacity() + 1;
+        let admitted = sent_at_release.load(Ordering::SeqCst);
+        assert!(
+            admitted <= bound,
+            "saturated pool admitted {admitted} > bound {bound}"
+        );
+        // Nothing was dropped: every clip completed after release.
+        assert_eq!(run.clips.len(), TOTAL as usize);
+        assert_eq!(sent.load(Ordering::SeqCst), TOTAL as usize);
+        assert!(run.clips.windows(2).all(|w| w[0].seq < w[1].seq));
+    }
+
+    #[test]
+    fn stealing_moves_work_off_a_slow_worker() {
+        struct PerWorker {
+            slow: bool,
+        }
+        impl Engine for PerWorker {
+            type Output = u64;
+            fn infer(&mut self, clip: &[SpikePlane]) -> Result<u64> {
+                if self.slow {
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Ok(clip.iter().map(|p| p.count_spikes()).sum())
+            }
+        }
+        let cfg = PoolConfig {
+            workers: 2,
+            inbox_depth: 2,
+            steal: StealPolicy::Steal,
+        };
+        let run = run_pool(&cfg, job_stream(12), &|wi| Ok(PerWorker { slow: wi == 0 }))
+            .unwrap();
+        assert_eq!(run.clips.len(), 12);
+        // the fast worker must end up serving at least as many clips
+        // as the one sleeping 20 ms per clip
+        assert!(run.workers[1].clips >= run.workers[0].clips);
+        assert_eq!(run.workers[0].clips + run.workers[1].clips, 12);
+    }
+
+    #[test]
+    fn engine_error_propagates_and_fails_fast() {
+        use std::sync::atomic::{AtomicU64, Ordering as AOrd};
+        // Every infer errors; count how many the pool attempted.
+        static TRIED: AtomicU64 = AtomicU64::new(0);
+        struct Bad;
+        impl Engine for Bad {
+            type Output = ();
+            fn infer(&mut self, _: &[SpikePlane]) -> Result<()> {
+                TRIED.fetch_add(1, AOrd::SeqCst);
+                Err(Error::Runtime("boom".into()))
+            }
+        }
+        let cfg = PoolConfig::with_workers(2);
+        assert!(run_pool(&cfg, job_stream(64), &|_| Ok(Bad)).is_err());
+        // Fail fast: dispatch stops on the first error, so at most the
+        // clips resident in the pool (plus one per worker already
+        // in-flight) were ever attempted — nowhere near all 64.
+        assert!(TRIED.load(AOrd::SeqCst) <= (cfg.capacity() + 1) as u64);
+    }
+
+    #[test]
+    #[should_panic(expected = "pool worker panicked")]
+    fn worker_panic_propagates_instead_of_hanging() {
+        struct Panicker;
+        impl Engine for Panicker {
+            type Output = ();
+            fn infer(&mut self, _: &[SpikePlane]) -> Result<()> {
+                panic!("engine exploded")
+            }
+        }
+        // One worker + a deep job stream: without the exit guard the
+        // dispatcher would block forever on a full pool.
+        let cfg = PoolConfig {
+            workers: 1,
+            inbox_depth: 1,
+            steal: StealPolicy::Steal,
+        };
+        let _ = run_pool(&cfg, job_stream(16), &|_| Ok(Panicker));
+    }
+
+    #[test]
+    fn factory_error_propagates() {
+        let cfg = PoolConfig::with_workers(2);
+        let r = run_pool::<CountEngine, _>(&cfg, job_stream(3), &|wi| {
+            if wi == 0 {
+                Err(Error::Runtime("no engine".into()))
+            } else {
+                Ok(CountEngine)
+            }
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn high_water_marks_respect_inbox_depth() {
+        let cfg = PoolConfig {
+            workers: 2,
+            inbox_depth: 3,
+            steal: StealPolicy::Steal,
+        };
+        let run = run_pool(&cfg, job_stream(40), &|_| Ok(CountEngine)).unwrap();
+        for w in &run.workers {
+            assert!(w.inbox_high_water <= 3, "{w:?}");
+        }
+    }
+
+    #[test]
+    fn empty_job_stream() {
+        let (tx, rx) = channel::<ClipJob>();
+        drop(tx);
+        let run = run_pool(&PoolConfig::default(), rx, &|_| Ok(CountEngine)).unwrap();
+        assert!(run.clips.is_empty());
+        assert_eq!(run.workers.len(), 4);
+    }
+}

@@ -7,14 +7,25 @@
 //! same input stream against its channel slice. Host-side execution
 //! uses real threads (one per simulated core); simulated time is the
 //! max over cores, energy the sum (plus idle leakage on the laggards).
+//!
+//! For the serving tier the same partitioning generalizes one level
+//! up: [`MultiCoreScheduler::partition_layer_groups`] shards a
+//! multi-layer network's stateful layers into contiguous,
+//! cost-balanced groups — the layer-stationary placement a pool
+//! worker keeps resident — and [`ScheduledEngine`] adapts whole-clip
+//! multi-core execution to the [`Engine`] trait so the pool can wrap
+//! simulated cores directly (DESIGN.md §Serve).
 
 use crate::error::{Error, Result};
 use crate::sim::config::SimConfig;
 use crate::sim::core::SpidrCore;
 use crate::sim::stats::RunStats;
-use crate::snn::layer::Layer;
+use crate::snn::layer::{Layer, LayerKind};
+use crate::snn::network::{pool_step, Network, NetworkState};
 use crate::snn::spikes::SpikePlane;
 use crate::snn::tensor::Mat;
+
+use super::server::Engine;
 
 /// Multi-core scheduler over `num_cores` SpiDR cores.
 #[derive(Debug, Clone)]
@@ -46,17 +57,54 @@ impl MultiCoreScheduler {
     /// Partition output channels `0..k` across cores (contiguous,
     /// balanced).
     pub fn partition_channels(&self, k: usize) -> Vec<(usize, usize)> {
-        let n = self.num_cores.min(k).max(1);
-        let base = k / n;
-        let extra = k % n;
-        let mut out = Vec::with_capacity(n);
-        let mut lo = 0;
-        for i in 0..n {
-            let len = base + usize::from(i < extra);
-            out.push((lo, lo + len));
-            lo += len;
+        partition(k, self.num_cores)
+    }
+
+    /// Plan how a network's **stateful layers** would shard into
+    /// contiguous groups, one per core/pool-worker, balancing the
+    /// per-layer dense-synaptic-op cost greedily — the
+    /// layer-stationary analogue of [`Self::partition_channels`].
+    /// Today's pool workers each keep the whole network resident and
+    /// this plan feeds placement diagnostics (`examples/serving.rs`);
+    /// it becomes the actual placement when layer groups move to
+    /// separate processes/hosts (ROADMAP "Cross-process sharding",
+    /// DESIGN.md §Serve). Ranges index `stateful_layers()` order.
+    pub fn partition_layer_groups(&self, network: &Network) -> Vec<(usize, usize)> {
+        let costs: Vec<u64> = network
+            .stateful_layers()
+            .map(|l| l.dense_synops().max(1))
+            .collect();
+        let s = costs.len();
+        if s == 0 {
+            return Vec::new();
         }
-        out
+        let n = self.num_cores.min(s).max(1);
+        let total: u64 = costs.iter().sum();
+        let mut groups = Vec::with_capacity(n);
+        let mut lo = 0usize;
+        let mut acc = 0u64;
+        let mut served = 0u64;
+        for (i, &c) in costs.iter().enumerate() {
+            acc += c;
+            let groups_left = n - groups.len(); // incl. the open group
+            if groups_left == 1 {
+                continue; // the last group swallows the tail
+            }
+            let layers_left = s - i - 1;
+            // Close the open group once it reaches its fair share of
+            // the remaining cost — or when the remaining layers are
+            // only just enough to give every later group one layer.
+            // Never close unless each later group can still get one.
+            let fair = (total - served).div_ceil(groups_left as u64);
+            if layers_left >= groups_left - 1 && (acc >= fair || layers_left == groups_left - 1) {
+                groups.push((lo, i + 1));
+                lo = i + 1;
+                served += acc;
+                acc = 0;
+            }
+        }
+        groups.push((lo, s));
+        groups
     }
 
     /// Run one layer's timesteps across cores (channel-parallel).
@@ -168,6 +216,128 @@ impl MultiCoreScheduler {
             },
         ))
     }
+
+    /// Run a whole multi-layer clip, sharding **every stateful layer's
+    /// output channels** across the simulated cores (pool layers run
+    /// in the loader, as on silicon). Layers execute in sequence —
+    /// layer `l` at timestep `t` consumes layer `l−1`'s spikes — so
+    /// simulated cycles add across layers while each layer's makespan
+    /// is the max over its channel shards. `state` must come from
+    /// [`Network::init_state`] (reset it between independent clips).
+    pub fn run_network_clip(
+        &self,
+        network: &Network,
+        frames: &[SpikePlane],
+        state: &mut NetworkState,
+    ) -> Result<(Vec<SpikePlane>, MultiCoreStats)> {
+        let (c0, h0, w0) = network
+            .layers
+            .first()
+            .ok_or_else(|| Error::config("empty network"))?
+            .in_shape;
+        for f in frames {
+            if f.shape() != (c0, h0, w0) {
+                return Err(Error::shape(format!(
+                    "frame shape {:?} != network input {:?}",
+                    f.shape(),
+                    (c0, h0, w0)
+                )));
+            }
+        }
+        let mut planes: Vec<SpikePlane> = frames.to_vec();
+        let mut total = MultiCoreStats {
+            cycles: 0,
+            run: RunStats::default(),
+            per_core_cycles: Vec::new(),
+        };
+        let mut si = 0;
+        for layer in &network.layers {
+            match layer.kind {
+                LayerKind::Pool => {
+                    planes = planes.iter().map(|p| pool_step(layer, p)).collect();
+                }
+                LayerKind::Conv | LayerKind::Fc => {
+                    let (out, stats) =
+                        self.run_layer(layer, &planes, &mut state.vmems[si])?;
+                    total.cycles += stats.cycles;
+                    total.run.add(&stats.run);
+                    for (i, c) in stats.per_core_cycles.iter().enumerate() {
+                        if i >= total.per_core_cycles.len() {
+                            total.per_core_cycles.push(0);
+                        }
+                        total.per_core_cycles[i] += c;
+                    }
+                    planes = out;
+                    si += 1;
+                }
+            }
+        }
+        Ok((planes, total))
+    }
+}
+
+/// Contiguous balanced partition of `0..k` into at most `n` ranges.
+fn partition(k: usize, n: usize) -> Vec<(usize, usize)> {
+    let n = n.min(k).max(1);
+    let base = k / n;
+    let extra = k % n;
+    let mut out = Vec::with_capacity(n);
+    let mut lo = 0;
+    for i in 0..n {
+        let len = base + usize::from(i < extra);
+        out.push((lo, lo + len));
+        lo += len;
+    }
+    out
+}
+
+/// [`Engine`] adapter over the multi-core scheduler: each clip is an
+/// independent inference of a multi-layer network, with every layer's
+/// channels sharded across the scheduler's simulated cores. This is
+/// the engine a pool worker wraps to put the cycle-level simulator on
+/// the sharded request path (DESIGN.md §Serve); its Vmem state is
+/// allocated once and zeroed between clips.
+#[derive(Debug, Clone)]
+pub struct ScheduledEngine {
+    // Private: `state` was sized for `network` at construction, so
+    // swapping either field independently would desync them.
+    network: Network,
+    scheduler: MultiCoreScheduler,
+    state: NetworkState,
+}
+
+impl ScheduledEngine {
+    /// Build an engine around a workload (allocates state once).
+    pub fn new(network: Network, scheduler: MultiCoreScheduler) -> Result<Self> {
+        let state = network.init_state()?;
+        Ok(ScheduledEngine {
+            network,
+            scheduler,
+            state,
+        })
+    }
+
+    /// The workload this engine serves.
+    pub fn network(&self) -> &Network {
+        &self.network
+    }
+
+    /// The scheduler sharding each layer across simulated cores.
+    pub fn scheduler(&self) -> &MultiCoreScheduler {
+        &self.scheduler
+    }
+}
+
+impl Engine for ScheduledEngine {
+    type Output = MultiCoreStats;
+
+    fn infer(&mut self, clip: &[SpikePlane]) -> Result<MultiCoreStats> {
+        self.state.reset();
+        let (_, stats) =
+            self.scheduler
+                .run_network_clip(&self.network, clip, &mut self.state)?;
+        Ok(stats)
+    }
 }
 
 #[cfg(test)]
@@ -232,6 +402,133 @@ mod tests {
         // more cores -> shorter makespan (or equal for degenerate work)
         assert!(st4.cycles <= st1.cycles);
         assert_eq!(st4.per_core_cycles.len(), 4);
+    }
+
+    fn tiny_network() -> Network {
+        use crate::quant::Precision;
+        use crate::snn::network::NetworkBuilder;
+        let mut w1 = Mat::zeros(9, 4);
+        for f in 0..9 {
+            for k in 0..4 {
+                w1.set(f, k, ((f + 2 * k) % 5) as i32 - 2);
+            }
+        }
+        let w2 = Mat::zeros(4 * 4 * 4, 2);
+        NetworkBuilder::new("sched-tiny", Precision::W4V7, 2, (1, 8, 8))
+            .conv3x3(4, w1, NeuronConfig { theta: 3, ..Default::default() }, false)
+            .unwrap()
+            .pool(2, 2)
+            .fc(2, w2, NeuronConfig::default(), true)
+            .unwrap()
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn layer_groups_cover_all_stateful_layers_contiguously() {
+        let net = tiny_network(); // 2 stateful layers (conv, fc)
+        for cores in [1usize, 2, 3, 8] {
+            let s = MultiCoreScheduler::new(cores, SimConfig::default());
+            let groups = s.partition_layer_groups(&net);
+            assert_eq!(groups.len(), cores.min(2));
+            assert_eq!(groups[0].0, 0);
+            assert_eq!(groups.last().unwrap().1, 2);
+            for w in groups.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "groups must be contiguous");
+            }
+            assert!(groups.iter().all(|(a, b)| a < b), "no empty group");
+        }
+    }
+
+    #[test]
+    fn layer_groups_balance_cost() {
+        // 6 equal-cost stateful layers over 3 workers -> 2 each.
+        use crate::quant::Precision;
+        use crate::snn::network::NetworkBuilder;
+        let mut b = NetworkBuilder::new("six", Precision::W4V7, 1, (2, 6, 6));
+        for i in 0..6 {
+            // the builder requires an accumulate output layer
+            b = b
+                .conv3x3(2, Mat::zeros(18, 2), NeuronConfig::default(), i == 5)
+                .unwrap();
+        }
+        let net = b.build().unwrap();
+        let s = MultiCoreScheduler::new(3, SimConfig::default());
+        let groups = s.partition_layer_groups(&net);
+        assert_eq!(groups, vec![(0, 2), (2, 4), (4, 6)]);
+    }
+
+    #[test]
+    fn network_clip_matches_reference_executor() {
+        let net = tiny_network();
+        let fs: Vec<SpikePlane> = {
+            let mut rng = SplitMix64::new(17);
+            (0..2)
+                .map(|_| {
+                    let mut p = SpikePlane::zeros(1, 8, 8);
+                    for i in 0..p.len() {
+                        if rng.chance(0.3) {
+                            p.as_mut_slice()[i] = 1;
+                        }
+                    }
+                    p
+                })
+                .collect()
+        };
+
+        // reference trajectory
+        let mut ref_state = net.init_state().unwrap();
+        for f in &fs {
+            net.step(f, &mut ref_state).unwrap();
+        }
+
+        // channel-sharded multi-core trajectory
+        let s = MultiCoreScheduler::new(3, SimConfig::default());
+        let mut state = net.init_state().unwrap();
+        let (_, stats) = s.run_network_clip(&net, &fs, &mut state).unwrap();
+
+        for (a, b) in ref_state.vmems.iter().zip(&state.vmems) {
+            assert_eq!(a.as_slice(), b.as_slice());
+        }
+        assert!(stats.cycles > 0);
+        assert!(!stats.per_core_cycles.is_empty());
+    }
+
+    #[test]
+    fn network_clip_rejects_mismatched_frames() {
+        let net = tiny_network(); // expects (1, 8, 8) input
+        let s = MultiCoreScheduler::new(2, SimConfig::default());
+        let mut state = net.init_state().unwrap();
+        let wrong = vec![SpikePlane::zeros(1, 16, 16)];
+        assert!(s.run_network_clip(&net, &wrong, &mut state).is_err());
+    }
+
+    #[test]
+    fn scheduled_engine_resets_between_clips() {
+        let net = tiny_network();
+        let fs: Vec<SpikePlane> = {
+            let mut rng = SplitMix64::new(23);
+            (0..2)
+                .map(|_| {
+                    let mut p = SpikePlane::zeros(1, 8, 8);
+                    for i in 0..p.len() {
+                        if rng.chance(0.25) {
+                            p.as_mut_slice()[i] = 1;
+                        }
+                    }
+                    p
+                })
+                .collect()
+        };
+        let mut e =
+            ScheduledEngine::new(net, MultiCoreScheduler::new(2, SimConfig::default()))
+                .unwrap();
+        let a = e.infer(&fs).unwrap();
+        let b = e.infer(&fs).unwrap();
+        // identical clips on reset state -> identical simulated run
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.run.spikes, b.run.spikes);
+        assert_eq!(a.run.synops, b.run.synops);
     }
 
     #[test]

@@ -6,6 +6,12 @@
 //! golden model) → emission. Backpressure propagates through the
 //! bounded channels; a slow inference stage throttles ingestion
 //! instead of dropping events.
+//!
+//! Two inference stages are available: [`InferenceServer::serve`]
+//! runs one engine on the calling thread (PJRT handles are not
+//! `Send`), and [`InferenceServer::serve_pool`] shards clips across a
+//! load-balanced worker pool ([`super::pool`]) while preserving
+//! response order (DESIGN.md §Serve).
 
 use std::sync::mpsc::{sync_channel, Receiver};
 use std::time::{Duration, Instant};
@@ -13,9 +19,11 @@ use std::time::{Duration, Instant};
 use crate::dvs::binning::bin_events;
 use crate::dvs::event::Event;
 use crate::error::{Error, Result};
+use crate::snn::network::{Network, NetworkState};
 use crate::snn::spikes::SpikePlane;
 
 use super::metrics::Metrics;
+use super::pool::{run_pool, ClipJob, PoolConfig};
 
 /// Server configuration.
 #[derive(Debug, Clone, Copy)]
@@ -89,20 +97,12 @@ impl InferenceServer {
         engine: &mut E,
     ) -> Result<(Vec<Response<E::Output>>, Metrics)> {
         let cfg = self.cfg;
-        let (tx, rx): (_, Receiver<(u64, Instant, Vec<SpikePlane>)>) =
-            sync_channel(cfg.queue_depth);
+        let wall0 = Instant::now();
+        let (tx, rx): (_, Receiver<ClipJob>) = sync_channel(cfg.queue_depth);
 
         let ingest = std::thread::spawn(move || {
-            for (id, events) in requests.into_iter().enumerate() {
-                let t0 = Instant::now();
-                let frames = bin_events(
-                    &events,
-                    cfg.height,
-                    cfg.width,
-                    cfg.timesteps,
-                    cfg.bin_us,
-                );
-                if tx.send((id as u64, t0, frames)).is_err() {
+            for (seq, events) in requests.into_iter().enumerate() {
+                if tx.send(bin_request(cfg, seq as u64, &events)).is_err() {
                     return; // consumer dropped
                 }
             }
@@ -110,12 +110,12 @@ impl InferenceServer {
 
         let mut responses = Vec::new();
         let mut metrics = Metrics::new();
-        for (id, t0, frames) in rx.iter() {
-            let output = engine.infer(&frames)?;
-            let latency = t0.elapsed();
-            metrics.record_clip(latency, frames.len() as u64);
+        for job in rx.iter() {
+            let output = engine.infer(&job.frames)?;
+            let latency = job.t0.elapsed();
+            metrics.record_clip(latency, job.frames.len() as u64);
             responses.push(Response {
-                id,
+                id: job.seq,
                 output,
                 latency,
             });
@@ -123,7 +123,106 @@ impl InferenceServer {
         ingest
             .join()
             .map_err(|_| Error::Runtime("ingest thread panicked".into()))?;
+        metrics.wall = wall0.elapsed();
         Ok((responses, metrics))
+    }
+
+    /// Serve a stream of event bursts through the **sharded pool
+    /// tier**: ingestion (event binning, own thread) → dispatch into
+    /// the pool's bounded per-worker inboxes → N engine workers →
+    /// emission through a sequence-number reorder buffer.
+    ///
+    /// `factory` builds one engine per worker, inside that worker's
+    /// thread. Responses come back in arrival order regardless of
+    /// per-clip latency skew, and a saturated pool throttles the
+    /// ingest channel instead of dropping clips (DESIGN.md §Serve).
+    /// [`Metrics::workers`] carries the per-worker counters.
+    pub fn serve_pool<E, F>(
+        &self,
+        requests: Vec<Vec<Event>>,
+        pool: &PoolConfig,
+        factory: F,
+    ) -> Result<(Vec<Response<E::Output>>, Metrics)>
+    where
+        E: Engine,
+        F: Fn(usize) -> Result<E> + Sync,
+    {
+        let cfg = self.cfg;
+        let wall0 = Instant::now();
+        std::thread::scope(|scope| {
+            let (jtx, jrx) = sync_channel::<ClipJob>(cfg.queue_depth);
+            let ingest = scope.spawn(move || {
+                for (seq, events) in requests.into_iter().enumerate() {
+                    if jtx.send(bin_request(cfg, seq as u64, &events)).is_err() {
+                        return; // pool aborted; stop binning
+                    }
+                }
+            });
+            let run = run_pool(pool, jrx, &factory);
+            ingest
+                .join()
+                .map_err(|_| Error::Runtime("ingest thread panicked".into()))?;
+            let run = run?;
+            let mut metrics = Metrics::new();
+            let mut responses = Vec::with_capacity(run.clips.len());
+            for done in run.clips {
+                metrics.record_clip(done.latency, done.frames);
+                responses.push(Response {
+                    id: done.seq,
+                    output: done.output,
+                    latency: done.latency,
+                });
+            }
+            metrics.workers = run.workers;
+            metrics.wall = wall0.elapsed();
+            Ok((responses, metrics))
+        })
+    }
+}
+
+/// Bin one request into a sequenced clip job — the shared ingest step
+/// of both serve paths. `t0` anchors end-to-end latency at ingestion
+/// start, so queue wait is part of every reported latency.
+fn bin_request(cfg: ServerConfig, seq: u64, events: &[Event]) -> ClipJob {
+    let t0 = Instant::now();
+    let frames = bin_events(events, cfg.height, cfg.width, cfg.timesteps, cfg.bin_us);
+    ClipJob { seq, t0, frames }
+}
+
+/// Functional serving engine: the single-threaded reference executor
+/// ([`Network::step`]), the serving backend when neither the
+/// cycle-level simulator nor PJRT execution is required. Vmem state is
+/// allocated once and zeroed between clips, so each request is an
+/// independent inference. The output is the final layer's accumulator
+/// bank — bit-comparable across engine instances.
+#[derive(Debug, Clone)]
+pub struct ReferenceEngine {
+    network: Network,
+    state: NetworkState,
+}
+
+impl ReferenceEngine {
+    /// Build an engine around a workload (allocates state once).
+    pub fn new(network: Network) -> Result<Self> {
+        let state = network.init_state()?;
+        Ok(ReferenceEngine { network, state })
+    }
+}
+
+impl Engine for ReferenceEngine {
+    type Output = Vec<i32>;
+
+    fn infer(&mut self, clip: &[SpikePlane]) -> Result<Vec<i32>> {
+        self.state.reset();
+        for frame in clip {
+            self.network.step(frame, &mut self.state)?;
+        }
+        Ok(self
+            .state
+            .vmems
+            .last()
+            .map(|m| m.as_slice().to_vec())
+            .unwrap_or_default())
     }
 }
 
@@ -196,5 +295,97 @@ mod tests {
         let (resp, metrics) = server.serve(vec![], &mut CountEngine).unwrap();
         assert!(resp.is_empty());
         assert_eq!(metrics.clips, 0);
+    }
+
+    fn tiny_network() -> Network {
+        use crate::quant::Precision;
+        use crate::snn::layer::NeuronConfig;
+        use crate::snn::network::NetworkBuilder;
+        use crate::snn::tensor::Mat;
+        let mut w1 = Mat::zeros(2 * 9, 4);
+        for f in 0..18 {
+            for k in 0..4 {
+                w1.set(f, k, ((f * 5 + k) % 9) as i32 - 4);
+            }
+        }
+        let w2 = Mat::zeros(4 * 4 * 4, 3);
+        NetworkBuilder::new("serve-tiny", Precision::W4V7, 4, (2, 8, 8))
+            .conv3x3(4, w1, NeuronConfig { theta: 3, ..Default::default() }, false)
+            .unwrap()
+            .pool(2, 2)
+            .fc(3, w2, NeuronConfig::default(), true)
+            .unwrap()
+            .build()
+            .unwrap()
+    }
+
+    /// Satellite (c): a pool of one worker is bit-identical in output
+    /// to the single-engine server on the same request stream.
+    #[test]
+    fn pool_of_one_bit_identical_to_single_engine() {
+        let server = InferenceServer::new(small_cfg());
+        let reqs: Vec<Vec<Event>> = (0..6).map(|i| burst(5 + i * 9)).collect();
+        let net = tiny_network();
+
+        let mut single = ReferenceEngine::new(net.clone()).unwrap();
+        let (a, _) = server.serve(reqs.clone(), &mut single).unwrap();
+        let (b, mb) = server
+            .serve_pool(reqs, &PoolConfig::with_workers(1), |_| {
+                ReferenceEngine::new(net.clone())
+            })
+            .unwrap();
+
+        assert_eq!(a.len(), b.len());
+        for (ra, rb) in a.iter().zip(&b) {
+            assert_eq!(ra.id, rb.id);
+            assert_eq!(ra.output, rb.output, "request {} diverged", ra.id);
+        }
+        assert_eq!(mb.workers.len(), 1);
+        assert_eq!(mb.workers[0].clips, 6);
+    }
+
+    /// Satellite (a): responses come back in request order despite
+    /// unequal worker latencies.
+    #[test]
+    fn pool_preserves_request_order_under_latency_skew() {
+        struct Skew;
+        impl Engine for Skew {
+            type Output = u64;
+            fn infer(&mut self, clip: &[SpikePlane]) -> Result<u64> {
+                let n: u64 = clip.iter().map(|p| p.count_spikes()).sum();
+                std::thread::sleep(Duration::from_millis((n % 4) * 3));
+                Ok(n)
+            }
+        }
+        let server = InferenceServer::new(small_cfg());
+        let reqs: Vec<Vec<Event>> = (0..16).map(|i| burst(3 + i * 5)).collect();
+        let mut reference = CountEngine;
+        let (want, _) = server.serve(reqs.clone(), &mut reference).unwrap();
+        let (got, metrics) = server
+            .serve_pool(reqs, &PoolConfig::with_workers(4), |_| Ok(Skew))
+            .unwrap();
+        assert_eq!(got.len(), 16);
+        for (i, r) in got.iter().enumerate() {
+            assert_eq!(r.id, i as u64, "emission must restore arrival order");
+            assert_eq!(r.output, want[i].output);
+        }
+        let total: u64 = metrics.workers.iter().map(|w| w.clips).sum();
+        assert_eq!(total, 16);
+        assert_eq!(metrics.clips, 16);
+    }
+
+    #[test]
+    fn pool_propagates_engine_error() {
+        struct Bad;
+        impl Engine for Bad {
+            type Output = ();
+            fn infer(&mut self, _: &[SpikePlane]) -> Result<()> {
+                Err(Error::Runtime("boom".into()))
+            }
+        }
+        let server = InferenceServer::new(small_cfg());
+        assert!(server
+            .serve_pool(vec![burst(3); 4], &PoolConfig::with_workers(2), |_| Ok(Bad))
+            .is_err());
     }
 }

@@ -26,9 +26,12 @@
 //! * [`baselines`] — AER event-driven pipeline and dense (no
 //!   zero-skipping) baselines for the paper's comparisons.
 //! * [`coordinator`] — layer mapper, network compiler, multi-core
-//!   scheduler, streaming inference server (the L3 request path).
+//!   scheduler, streaming inference server and the sharded serving
+//!   pool (the L3 request path; DESIGN.md §Serve).
 //! * [`runtime`] — PJRT client that loads and executes the AOT HLO
 //!   artifacts (the golden model; Python never runs at request time).
+
+#![warn(missing_docs)]
 
 pub mod baselines;
 pub mod coordinator;

@@ -39,6 +39,17 @@ pub struct NetworkState {
     pub vmems: Vec<Mat>,
 }
 
+impl NetworkState {
+    /// Zero every Vmem bank in place, making the next clip an
+    /// independent inference without reallocating (serving engines
+    /// reset between requests; see `coordinator::server`).
+    pub fn reset(&mut self) {
+        for bank in &mut self.vmems {
+            bank.as_mut_slice().fill(0);
+        }
+    }
+}
+
 /// Telemetry from one network step.
 #[derive(Debug, Clone, Default)]
 pub struct StepTelemetry {
@@ -448,6 +459,42 @@ pub fn gesture_network(
     b.build()
 }
 
+/// Build the synthetic serving-demo workload shared by the `serving`
+/// example and the `serve_pool` bench: Conv(2→12) → pool(2×2) → fc(4)
+/// on a 16×16 retina at W4V7 — small enough that one clip takes
+/// milliseconds, big enough that per-clip compute dominates thread
+/// setup, and with an fc fan-in (12·8·8 = 768) that still maps onto
+/// the simulated core in Mode 2.
+pub fn demo_serving_network(timesteps: usize) -> Result<Network> {
+    let mut rng = crate::prop::SplitMix64::new(0x5E);
+    let mut w1 = Mat::zeros(2 * 9, 12);
+    for f in 0..18 {
+        for k in 0..12 {
+            w1.set(f, k, rng.below(15) as i32 - 7);
+        }
+    }
+    let mut w2 = Mat::zeros(12 * 8 * 8, 4);
+    for f in 0..(12 * 8 * 8) {
+        for k in 0..4 {
+            w2.set(f, k, rng.below(15) as i32 - 7);
+        }
+    }
+    NetworkBuilder::new("serving-demo", Precision::W4V7, timesteps, (2, 16, 16))
+        .conv3x3(
+            12,
+            w1,
+            NeuronConfig {
+                theta: 6,
+                leak: 1,
+                ..Default::default()
+            },
+            false,
+        )?
+        .pool(2, 2)
+        .fc(4, w2, NeuronConfig::default(), true)?
+        .build()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -587,5 +634,22 @@ mod tests {
                     .all(|&x| x >= p.vmem_min() && x <= p.vmem_max())
             })
         });
+    }
+
+    #[test]
+    fn reset_zeroes_state_in_place() {
+        let net = tiny_net(2);
+        let mut state = net.init_state().unwrap();
+        for bank in &mut state.vmems {
+            for v in bank.as_mut_slice() {
+                *v = 5;
+            }
+        }
+        state.reset();
+        let fresh = net.init_state().unwrap();
+        assert_eq!(state.vmems.len(), fresh.vmems.len());
+        for (a, b) in state.vmems.iter().zip(&fresh.vmems) {
+            assert_eq!(a.as_slice(), b.as_slice());
+        }
     }
 }
