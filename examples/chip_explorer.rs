@@ -19,8 +19,10 @@ use spidr::snn::tensor::Mat;
 
 fn main() -> spidr::Result<()> {
     println!("== operating-point sweep (precision x sparsity, LOW corner) ==");
-    println!("{:>6} {:>9} {:>10} {:>10} {:>9} {:>14}",
-             "prec", "sparsity", "GOPS", "TOPS/W", "mW", "TOPS/W @28nm");
+    println!(
+        "{:>6} {:>9} {:>10} {:>10} {:>9} {:>14}",
+        "prec", "sparsity", "GOPS", "TOPS/W", "mW", "TOPS/W @28nm"
+    );
     for &p in &ALL_PRECISIONS {
         for s in [0.70, 0.85, 0.95] {
             let op = measure(p, Corner::LOW, s);

@@ -62,6 +62,7 @@ fn main() -> Result<()> {
         timesteps,
         bin_us: 1000,
         queue_depth: 2,
+        ..Default::default()
     });
     let mut engine = GoldenEngine { store, model };
     let (responses, metrics) = server.serve(requests, &mut engine)?;

@@ -39,8 +39,10 @@ fn main() -> spidr::Result<()> {
 
     // 2. How does it map onto the core? (paper Fig. 12)
     let mapping = Mapper::new(Precision::W4V7).map_layer(&layer)?;
-    println!("mapping: {:?}, rows/CU {:?}, {} tiles, {} pass(es)",
-             mapping.mode, mapping.rows_per_cu, mapping.tiles, mapping.passes);
+    println!(
+        "mapping: {:?}, rows/CU {:?}, {} tiles, {} pass(es)",
+        mapping.mode, mapping.rows_per_cu, mapping.tiles, mapping.passes
+    );
 
     // 3. Three timesteps of random events at ~90 % sparsity.
     let frames: Vec<SpikePlane> = (0..3)

@@ -41,6 +41,7 @@ fn main() -> spidr::Result<()> {
         timesteps: 10,
         bin_us: 1000,
         queue_depth: 4,
+        ..Default::default()
     });
     let requests: Vec<Vec<Event>> = (0..24).map(|i| burst(100 + i)).collect();
 

@@ -60,8 +60,10 @@ fn main() {
     // Gantt of the first tile: rows = units (CU1..CU9, NU), columns =
     // time buckets; digits mark which timestep occupies the unit.
     if let Some(tl) = &stats.example_timeline {
-        println!("\nfirst-tile timeline (each char ≈ {} cycles; digit = timestep):",
-                 (tl.makespan / 78).max(1));
+        println!(
+            "\nfirst-tile timeline (each char ≈ {} cycles; digit = timestep):",
+            (tl.makespan / 78).max(1)
+        );
         let scale = (tl.makespan / 78).max(1);
         for (u, row) in tl.intervals.iter().enumerate() {
             let name = if u < tl.intervals.len() - 1 {

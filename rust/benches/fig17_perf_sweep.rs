@@ -14,9 +14,10 @@ fn main() {
     common::header("Fig. 17", "GOPS & TOPS/W vs sparsity x precision (50 MHz / 0.9 V)");
     let sparsities = [0.60, 0.70, 0.80, 0.85, 0.90, 0.95];
 
-    println!("{:>10} | {:>8} {:>8} {:>8} | {:>8} {:>8} {:>8}",
-             "sparsity", "4b GOPS", "6b GOPS", "8b GOPS",
-             "4b T/W", "6b T/W", "8b T/W");
+    println!(
+        "{:>10} | {:>8} {:>8} {:>8} | {:>8} {:>8} {:>8}",
+        "sparsity", "4b GOPS", "6b GOPS", "8b GOPS", "4b T/W", "6b T/W", "8b T/W"
+    );
     let mut table = Vec::new();
     for &s in &sparsities {
         let pts: Vec<_> = ALL_PRECISIONS

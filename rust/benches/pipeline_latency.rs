@@ -1,0 +1,73 @@
+//! Single-clip latency bench: staged layer-group pipeline vs the
+//! sequential reference executor on the same multi-layer clip
+//! (DESIGN.md §Pipeline).
+//!
+//! Series (`DATA` lines + JSONL rows appended to `BENCH_pipeline.json`):
+//!
+//! * `clip_latency_sequential_us` — `ReferenceEngine` (whole-network
+//!   `Network::step` per timestep), the baseline; x = 1.
+//! * `clip_latency_pipelined_us`  — `PipelinedEngine` latency vs
+//!   stage count.
+//! * `clip_latency_speedup`      — sequential / pipelined vs stage
+//!   count (the acceptance series: expected ≥ 1.5× once ≥ 3 stages
+//!   carry comparable cost — latency approaches the *max* stage cost
+//!   instead of the sum).
+//! * `pipeline_stage_occupancy`  — mean stage occupancy at each
+//!   stage count (how well the stages overlap).
+//!
+//! Outputs are asserted bit-identical between the two engines on
+//! every shape — this bench doubles as an end-to-end equivalence
+//! smoke on a real workload.
+
+mod common;
+
+use spidr::coordinator::{Engine, PipelineConfig, PipelinedEngine, ReferenceEngine};
+use spidr::snn::network::demo_pipeline_network;
+use spidr::snn::spikes::SpikePlane;
+
+const TIMESTEPS: usize = 12;
+const REPS: usize = 5;
+
+/// Best-of-N single-clip latency in microseconds.
+fn best_latency_us<E: Engine>(engine: &mut E, clip: &[SpikePlane]) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..REPS {
+        let (_, secs) = common::timed(|| engine.infer(clip).unwrap());
+        best = best.min(secs * 1e6);
+    }
+    best
+}
+
+fn main() {
+    common::header(
+        "pipeline",
+        "single-clip latency: staged layer-group pipeline vs sequential",
+    );
+    let net = demo_pipeline_network(TIMESTEPS).expect("demo workload");
+    let clip = common::random_clip(2, 24, 24, TIMESTEPS, 0.2, 42);
+
+    let mut seq = ReferenceEngine::new(net.clone()).expect("reference engine");
+    let want = seq.infer(&clip).expect("reference clip");
+    let seq_us = best_latency_us(&mut seq, &clip);
+    println!("sequential: {seq_us:.0} us/clip ({TIMESTEPS} steps, 5 stateful layers)");
+    common::emit("clip_latency_sequential_us", 1.0, seq_us);
+
+    for stages in [2usize, 3, 4, 5] {
+        let mut pipe = PipelinedEngine::new(net.clone(), PipelineConfig::with_stages(stages))
+            .expect("pipelined engine");
+        let got = pipe.infer(&clip).expect("pipelined clip");
+        assert_eq!(got, want, "pipelined output diverged at {stages} stages");
+        let pipe_us = best_latency_us(&mut pipe, &clip);
+        let speedup = seq_us / pipe_us;
+        let occupancy = pipe.stage_metrics().iter().map(|s| s.occupancy()).sum::<f64>()
+            / pipe.stage_metrics().len() as f64;
+        println!(
+            "pipelined x{}: {pipe_us:.0} us/clip, speedup {speedup:.2}, occupancy {:.0}%",
+            pipe.groups().len(),
+            occupancy * 100.0
+        );
+        common::emit("clip_latency_pipelined_us", stages as f64, pipe_us);
+        common::emit("clip_latency_speedup", stages as f64, speedup);
+        common::emit("pipeline_stage_occupancy", stages as f64, occupancy);
+    }
+}

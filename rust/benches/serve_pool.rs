@@ -29,6 +29,7 @@ fn cfg() -> ServerConfig {
         timesteps: 16,
         bin_us: 1000,
         queue_depth: 4,
+        ..Default::default()
     }
 }
 

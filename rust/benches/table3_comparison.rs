@@ -49,8 +49,12 @@ fn main() {
     for r in literature_rows() {
         let scaled = r
             .tops_w_native
-            .map(|t| format!(" [{:.1} T/W @28nm]",
-                             scale_efficiency_to_node(t, r.tech_nm, 28.0)))
+            .map(|t| {
+                format!(
+                    " [{:.1} T/W @28nm]",
+                    scale_efficiency_to_node(t, r.tech_nm, 28.0)
+                )
+            })
             .unwrap_or_default();
         println!(
             "{:<13} {:<12} {:>6} {:>8}  {:<16} {:<8} {:<6} {:<6}  {}{}",

@@ -40,8 +40,8 @@ mod tests {
         for f in 0..9 {
             w.set(f, 0, 1);
         }
-        let layer = Layer::conv((1, 6, 6), 4, 3, 3, 1, 1, w,
-                                NeuronConfig::default(), false).unwrap();
+        let layer =
+            Layer::conv((1, 6, 6), 4, 3, 3, 1, 1, w, NeuronConfig::default(), false).unwrap();
         let cfg = SimConfig::timing_only(Precision::W4V7);
 
         let mut rng = SplitMix64::new(4);

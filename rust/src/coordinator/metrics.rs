@@ -1,7 +1,72 @@
-//! Lightweight latency/throughput metrics for the streaming server
-//! and the sharded serving pool.
+//! Lightweight latency/throughput metrics for the streaming server,
+//! the sharded serving pool, and the timestep-staged layer-group
+//! pipeline.
 
 use std::time::Duration;
+
+/// Per-stage counters from pipelined clip execution
+/// (`coordinator::pipeline`, DESIGN.md §Pipeline): how a stage's wall
+/// time split between stepping its layer group (`busy`), waiting on
+/// its upstream spike-frame channel (`stall_in`) and blocking on a
+/// full downstream channel (`stall_out`), plus the fill/drain
+/// latencies it observed. Counters accumulate across clips when one
+/// engine serves several ([`StageMetrics::absorb`]).
+#[derive(Debug, Clone, Default)]
+pub struct StageMetrics {
+    /// Stage index (= layer-group index, upstream to downstream).
+    pub stage: usize,
+    /// Full-layer index span `[lo, hi)` of this stage's group.
+    pub layers: (usize, usize),
+    /// Timesteps stepped.
+    pub steps: u64,
+    /// Wall time inside `Network::step_group`.
+    pub busy: Duration,
+    /// Wall time blocked on the upstream channel (the starvation
+    /// counter; includes the initial fill wait).
+    pub stall_in: Duration,
+    /// Wall time blocked on a full downstream channel (the
+    /// backpressure counter — a full FIFO stalls its producer, never
+    /// drops).
+    pub stall_out: Duration,
+    /// Latency from clip start until this stage's first frame arrived
+    /// (the fill front reaching this stage).
+    pub fill: Duration,
+    /// Wall time between this stage finishing its last timestep and
+    /// the whole pipeline completing (the drain tail behind it).
+    pub drain: Duration,
+}
+
+impl StageMetrics {
+    /// Fresh counters for stage `stage` covering full-layer span
+    /// `layers`.
+    pub fn new(stage: usize, layers: (usize, usize)) -> Self {
+        StageMetrics {
+            stage,
+            layers,
+            ..StageMetrics::default()
+        }
+    }
+
+    /// Fraction of this stage's accounted wall time spent stepping
+    /// its layer group (0 when it never ran).
+    pub fn occupancy(&self) -> f64 {
+        let total = self.busy + self.stall_in + self.stall_out;
+        if total.is_zero() {
+            return 0.0;
+        }
+        self.busy.as_secs_f64() / total.as_secs_f64()
+    }
+
+    /// Fold another run's counters for the same stage into this one.
+    pub fn absorb(&mut self, other: &StageMetrics) {
+        self.steps += other.steps;
+        self.busy += other.busy;
+        self.stall_in += other.stall_in;
+        self.stall_out += other.stall_out;
+        self.fill += other.fill;
+        self.drain += other.drain;
+    }
+}
 
 /// Per-worker counters from one pool run (DESIGN.md §Serve): how many
 /// clips each worker served, how its wall time split between busy and
@@ -62,6 +127,10 @@ pub struct Metrics {
     /// Per-worker counters (empty for the single-engine `serve` path;
     /// one entry per pool worker for `serve_pool`).
     pub workers: Vec<WorkerMetrics>,
+    /// Per-pipeline-stage counters (empty unless a pipelined engine's
+    /// accumulated [`StageMetrics`] were attached after serving; see
+    /// `PipelinedEngine::stage_metrics`).
+    pub stages: Vec<StageMetrics>,
 }
 
 impl Metrics {
@@ -126,6 +195,15 @@ impl Metrics {
     pub fn total_stolen(&self) -> u64 {
         self.workers.iter().map(|w| w.stolen).sum()
     }
+
+    /// Mean busy fraction across pipeline stages (0 without stage
+    /// counters attached).
+    pub fn pipeline_occupancy(&self) -> f64 {
+        if self.stages.is_empty() {
+            return 0.0;
+        }
+        self.stages.iter().map(|s| s.occupancy()).sum::<f64>() / self.stages.len() as f64
+    }
 }
 
 #[cfg(test)]
@@ -164,6 +242,30 @@ mod tests {
         assert_eq!(m.clips_per_second(), 0.0);
         assert_eq!(m.pool_utilization(), 0.0);
         assert_eq!(m.total_stolen(), 0);
+        assert_eq!(m.pipeline_occupancy(), 0.0);
+    }
+
+    #[test]
+    fn stage_counters_compose() {
+        let mut s0 = StageMetrics::new(0, (0, 2));
+        s0.steps = 4;
+        s0.busy = Duration::from_millis(30);
+        s0.stall_in = Duration::from_millis(5);
+        s0.stall_out = Duration::from_millis(5);
+        assert!((s0.occupancy() - 0.75).abs() < 1e-9);
+        assert_eq!(StageMetrics::new(1, (2, 3)).occupancy(), 0.0);
+
+        // absorb accumulates every counter
+        let mut acc = StageMetrics::new(0, (0, 2));
+        acc.absorb(&s0);
+        acc.absorb(&s0);
+        assert_eq!(acc.steps, 8);
+        assert_eq!(acc.busy, Duration::from_millis(60));
+        assert_eq!(acc.stall_in, Duration::from_millis(10));
+
+        let mut m = Metrics::new();
+        m.stages = vec![s0, StageMetrics::new(1, (2, 3))];
+        assert!((m.pipeline_occupancy() - 0.375).abs() < 1e-9);
     }
 
     #[test]

@@ -12,17 +12,27 @@
 //!                           bounded       N engines     by seq
 //!                           inboxes      (1 core each)
 //! ```
+//!
+//! Inside a worker, a clip runs on one of three engines: the
+//! sequential functional reference, the cycle-level simulator, or the
+//! timestep-staged layer-group pipeline ([`pipeline`], DESIGN.md
+//! §Pipeline) — stage `g` steps timestep `t` while stage `g−1` steps
+//! `t+1`, bounded spike-frame channels handshaking between them.
 
 pub mod compiler;
 pub mod mapper;
 pub mod metrics;
+pub mod pipeline;
 pub mod pool;
 pub mod scheduler;
 pub mod server;
 
 pub use compiler::{ClipReport, CompiledNetwork, NetworkCompiler};
 pub use mapper::{LayerMapping, Mapper};
-pub use metrics::{Metrics, WorkerMetrics};
+pub use metrics::{Metrics, StageMetrics, WorkerMetrics};
+pub use pipeline::{run_pipeline_clip, FunctionalEngine, PipelineConfig, PipelinedEngine};
 pub use pool::{run_pool, ClipJob, CompletedClip, PoolConfig, PoolRun, StealPolicy};
-pub use scheduler::{MultiCoreScheduler, MultiCoreStats, ScheduledEngine};
+pub use scheduler::{
+    balanced_partition, plan_layer_groups, MultiCoreScheduler, MultiCoreStats, ScheduledEngine,
+};
 pub use server::{Engine, InferenceServer, ReferenceEngine, Response, ServerConfig};

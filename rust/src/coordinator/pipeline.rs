@@ -1,0 +1,670 @@
+//! Timestep-pipelined layer-group execution (DESIGN.md §Pipeline).
+//!
+//! The sequential executors step a clip layer by layer: every layer of
+//! timestep `t` finishes before timestep `t+1` starts, so single-clip
+//! latency is the *sum* of the per-layer costs. But layer group `g` at
+//! timestep `t` only depends on group `g−1` at `t` — the dependence
+//! structure the paper exploits with inter-timestep pipelining and
+//! asynchronous handshaking between chained units. This module lifts
+//! that mechanism to whole layer groups:
+//!
+//! ```text
+//! frames ─► stage 0 ═►═ stage 1 ═►═ … ═►═ stage G-1 ─► output Vmems
+//!          (group 0)   (group 1)          (group G-1)
+//!                bounded spike-frame channels
+//! ```
+//!
+//! Each layer group from `plan_layer_groups` runs on its own stage
+//! thread, owning its group's slice of the partitioned
+//! [`NetworkState`]. Adjacent stages are connected by **bounded**
+//! spike-frame channels — the software analogue of the chip's
+//! handshaking FIFOs: a full channel blocks the upstream stage
+//! (backpressure), an empty one blocks the downstream stage
+//! (starvation), and frames are never dropped. Timestep `t` of group
+//! `g` overlaps with timestep `t+1` of group `g−1`, so steady-state
+//! clip latency approaches `(G−1)·t_stage + T·t_stage` with `t_stage`
+//! the slowest group's per-timestep cost — the *max* over stages
+//! instead of the sum over layers.
+//!
+//! Every stage calls the same [`Network::step_group`] the sequential
+//! paths use, so pipelined execution is **bit-identical** to
+//! [`Network::run`] and to `MultiCoreScheduler::run_network_clip`
+//! (`prop_pipeline_bit_identical_to_reference`).
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::snn::network::{GroupSpan, Network, NetworkState, StepTelemetry};
+use crate::snn::spikes::SpikePlane;
+use crate::snn::tensor::Mat;
+
+use super::metrics::StageMetrics;
+use super::scheduler::plan_layer_groups;
+use super::server::{Engine, ReferenceEngine};
+
+/// Configuration of the staged layer-group pipeline, sibling of
+/// `ServerConfig`/`PoolConfig` (both of which carry an
+/// `Option<PipelineConfig>` to select the pipelined functional
+/// engine).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PipelineConfig {
+    /// Desired stage count; clamped to the network's stateful-layer
+    /// count (`plan_layer_groups` never returns an empty group).
+    pub stages: usize,
+    /// Bounded spike-frame channel depth between adjacent stages (the
+    /// handshaking FIFO depth; a full channel stalls the producer).
+    pub channel_depth: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            stages: 4,
+            channel_depth: 2,
+        }
+    }
+}
+
+impl PipelineConfig {
+    /// A pipeline of `stages` stages with the default channel depth.
+    pub fn with_stages(stages: usize) -> Self {
+        PipelineConfig {
+            stages,
+            ..PipelineConfig::default()
+        }
+    }
+}
+
+/// What one stage thread hands back when its clip share completes.
+struct StageOutcome {
+    metrics: StageMetrics,
+    /// This group's telemetry fragment, one entry per timestep.
+    telemetry: Vec<StepTelemetry>,
+    /// Completion time relative to the pipeline epoch (drain
+    /// accounting happens in the parent, which knows the full wall).
+    finished_at: Duration,
+}
+
+/// Secondary error a stage reports when a neighbour exited early and
+/// tore the channel down; the parent prefers the neighbour's primary
+/// error over this one.
+fn channel_torn_down(stage: usize, dir: &str) -> Error {
+    Error::Runtime(format!(
+        "pipeline stage {stage}: {dir} stage channel closed early"
+    ))
+}
+
+fn is_channel_teardown(e: &Error) -> bool {
+    matches!(e, Error::Runtime(m) if m.contains("stage channel closed early"))
+}
+
+/// Body of one stage thread: step this group once per timestep,
+/// pulling frames from the upstream channel (or the clip itself for
+/// stage 0) and pushing output frames downstream (except for the last
+/// stage, whose output lives in its Vmem banks).
+#[allow(clippy::too_many_arguments)]
+fn stage_loop(
+    network: &Network,
+    span: &GroupSpan,
+    vmems: &mut [Mat],
+    frames: &[SpikePlane],
+    rx: Option<Receiver<SpikePlane>>,
+    tx: Option<SyncSender<SpikePlane>>,
+    stage: usize,
+    epoch: Instant,
+) -> Result<StageOutcome> {
+    let mut sm = StageMetrics::new(stage, span.layers);
+    let mut telemetry = Vec::with_capacity(frames.len());
+    for (t, clip_frame) in frames.iter().enumerate() {
+        let wait0 = Instant::now();
+        let owned;
+        let frame = match &rx {
+            None => clip_frame,
+            Some(rx) => {
+                owned = rx
+                    .recv()
+                    .map_err(|_| channel_torn_down(stage, "upstream"))?;
+                &owned
+            }
+        };
+        sm.stall_in += wait0.elapsed();
+        if t == 0 {
+            sm.fill = epoch.elapsed();
+        }
+        let busy0 = Instant::now();
+        let (out, tele) = network.step_group(span, frame, vmems)?;
+        sm.busy += busy0.elapsed();
+        telemetry.push(tele);
+        if let Some(tx) = &tx {
+            let send0 = Instant::now();
+            tx.send(out)
+                .map_err(|_| channel_torn_down(stage, "downstream"))?;
+            sm.stall_out += send0.elapsed();
+        }
+        sm.steps += 1;
+    }
+    Ok(StageOutcome {
+        metrics: sm,
+        telemetry,
+        finished_at: epoch.elapsed(),
+    })
+}
+
+/// Run one clip through the staged layer-group pipeline.
+///
+/// `groups` are contiguous stateful-layer ranges (from
+/// [`plan_layer_groups`] / `partition_layer_groups`); each resolves to
+/// a [`GroupSpan`] running on its own stage thread over its slice of
+/// `state` (disjoint `split_at_mut` partitions — no locking on the
+/// step path). Bounded channels of depth `channel_depth` connect
+/// adjacent stages; frames flow through them in timestep order, so the
+/// result is bit-identical to [`Network::run`] on the same
+/// `frames`/`state`: same final Vmem trajectory, same per-step
+/// telemetry (returned merged in layer order).
+///
+/// On a stage error the channels tear down, every other stage unwinds,
+/// and the originating stage's error is returned (`state` is left
+/// partially stepped — reset it before reuse, as the engines do).
+/// Returns the merged telemetry plus one [`StageMetrics`] per stage
+/// (occupancy, stall, fill/drain).
+pub fn run_pipeline_clip(
+    network: &Network,
+    frames: &[SpikePlane],
+    state: &mut NetworkState,
+    groups: &[(usize, usize)],
+    channel_depth: usize,
+) -> Result<(Vec<StepTelemetry>, Vec<StageMetrics>)> {
+    let (c0, h0, w0) = network
+        .layers
+        .first()
+        .ok_or_else(|| Error::config("empty network"))?
+        .in_shape;
+    for f in frames {
+        if f.shape() != (c0, h0, w0) {
+            return Err(Error::shape(format!(
+                "frame shape {:?} != network input {:?}",
+                f.shape(),
+                (c0, h0, w0)
+            )));
+        }
+    }
+    let spans = network.group_spans(groups)?;
+    let needed: usize = spans.iter().map(|s| s.banks()).sum();
+    if state.vmems.len() != needed {
+        return Err(Error::config(format!(
+            "state holds {} Vmem banks, network has {needed} stateful layers",
+            state.vmems.len()
+        )));
+    }
+    let depth = channel_depth.max(1);
+    let stages = spans.len();
+
+    // Partition the state: each stage owns its group's banks.
+    let mut slices: Vec<&mut [Mat]> = Vec::with_capacity(stages);
+    let mut rest: &mut [Mat] = &mut state.vmems;
+    for span in &spans {
+        let (head, tail) = rest.split_at_mut(span.banks());
+        slices.push(head);
+        rest = tail;
+    }
+
+    let epoch = Instant::now();
+    let outcomes: Vec<Result<StageOutcome>> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(stages);
+        let mut prev_rx: Option<Receiver<SpikePlane>> = None;
+        for (gi, (span, vmems)) in spans.iter().zip(slices).enumerate() {
+            let rx = prev_rx.take();
+            let tx = if gi + 1 < stages {
+                let (tx, next_rx) = sync_channel(depth);
+                prev_rx = Some(next_rx);
+                Some(tx)
+            } else {
+                None
+            };
+            handles.push(scope.spawn(move || {
+                stage_loop(network, span, vmems, frames, rx, tx, gi, epoch)
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("pipeline stage panicked"))
+            .collect()
+    });
+    let wall = epoch.elapsed();
+
+    // Prefer a stage's own failure over the secondary channel-teardown
+    // errors its neighbours observe.
+    let mut teardown: Option<Error> = None;
+    let mut stage_outs = Vec::with_capacity(stages);
+    for r in outcomes {
+        match r {
+            Ok(o) => stage_outs.push(o),
+            Err(e) if is_channel_teardown(&e) => {
+                if teardown.is_none() {
+                    teardown = Some(e);
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    if let Some(e) = teardown {
+        return Err(e);
+    }
+
+    // Merge the per-group telemetry fragments back into layer order
+    // and finish the drain accounting.
+    let mut merged: Vec<StepTelemetry> =
+        (0..frames.len()).map(|_| StepTelemetry::default()).collect();
+    let mut metrics = Vec::with_capacity(stages);
+    for o in stage_outs {
+        for (t, frag) in o.telemetry.into_iter().enumerate() {
+            merged[t].layer_input_spikes.extend(frag.layer_input_spikes);
+            merged[t].layer_input_cells.extend(frag.layer_input_cells);
+        }
+        let mut sm = o.metrics;
+        sm.drain = wall.saturating_sub(o.finished_at);
+        metrics.push(sm);
+    }
+    Ok((merged, metrics))
+}
+
+/// The pipelined functional serving engine: the third engine on the
+/// serving tier beside `ReferenceEngine` (sequential functional) and
+/// `ScheduledEngine` (cycle-level multi-core). Each clip runs through
+/// [`run_pipeline_clip`] over the layer-group plan fixed at
+/// construction; the output is the final accumulator bank,
+/// bit-identical to `ReferenceEngine` on the same clip. Vmem state is
+/// allocated once and zeroed between clips; [`StageMetrics`]
+/// accumulate across clips.
+#[derive(Debug, Clone)]
+pub struct PipelinedEngine {
+    // Private: `state` and `groups` were derived from `network` at
+    // construction, so swapping any field independently would desync
+    // them.
+    network: Network,
+    groups: Vec<(usize, usize)>,
+    channel_depth: usize,
+    state: NetworkState,
+    stages: Vec<StageMetrics>,
+}
+
+impl PipelinedEngine {
+    /// Build an engine around a workload: plan the layer groups,
+    /// allocate state once, and zero the per-stage counters.
+    pub fn new(network: Network, cfg: PipelineConfig) -> Result<Self> {
+        let groups = plan_layer_groups(&network, cfg.stages.max(1));
+        if groups.is_empty() {
+            return Err(Error::config("network has no stateful layers to pipeline"));
+        }
+        let spans = network.group_spans(&groups)?;
+        let stages = spans
+            .iter()
+            .enumerate()
+            .map(|(i, s)| StageMetrics::new(i, s.layers))
+            .collect();
+        let state = network.init_state()?;
+        Ok(PipelinedEngine {
+            network,
+            groups,
+            channel_depth: cfg.channel_depth.max(1),
+            state,
+            stages,
+        })
+    }
+
+    /// The workload this engine serves.
+    pub fn network(&self) -> &Network {
+        &self.network
+    }
+
+    /// The stateful-layer group backing each stage.
+    pub fn groups(&self) -> &[(usize, usize)] {
+        &self.groups
+    }
+
+    /// Per-stage counters accumulated over every clip served so far.
+    pub fn stage_metrics(&self) -> &[StageMetrics] {
+        &self.stages
+    }
+}
+
+impl Engine for PipelinedEngine {
+    type Output = Vec<i32>;
+
+    fn infer(&mut self, clip: &[SpikePlane]) -> Result<Vec<i32>> {
+        self.state.reset();
+        let (_, stage_metrics) = run_pipeline_clip(
+            &self.network,
+            clip,
+            &mut self.state,
+            &self.groups,
+            self.channel_depth,
+        )?;
+        for (acc, sm) in self.stages.iter_mut().zip(&stage_metrics) {
+            acc.absorb(sm);
+        }
+        Ok(self
+            .state
+            .vmems
+            .last()
+            .map(|m| m.as_slice().to_vec())
+            .unwrap_or_default())
+    }
+}
+
+/// The functional engine a server/pool config selects: sequential
+/// reference stepping by default, the staged pipeline when
+/// `ServerConfig::pipeline` / `PoolConfig::pipeline` is set. Both
+/// variants emit the final accumulator bank, so outputs are
+/// bit-comparable across selections (and across pool workers).
+#[derive(Debug, Clone)]
+pub enum FunctionalEngine {
+    /// Sequential whole-network stepping (`Network::step`).
+    Reference(ReferenceEngine),
+    /// Timestep-pipelined layer-group stepping.
+    Pipelined(PipelinedEngine),
+}
+
+impl FunctionalEngine {
+    /// Build the engine a config selects (`None` → reference).
+    pub fn from_config(network: Network, pipeline: Option<PipelineConfig>) -> Result<Self> {
+        Ok(match pipeline {
+            None => FunctionalEngine::Reference(ReferenceEngine::new(network)?),
+            Some(cfg) => FunctionalEngine::Pipelined(PipelinedEngine::new(network, cfg)?),
+        })
+    }
+
+    /// Accumulated per-stage counters (empty for the reference
+    /// variant) — attach to `Metrics::stages` after serving.
+    pub fn stage_metrics(&self) -> &[StageMetrics] {
+        match self {
+            FunctionalEngine::Reference(_) => &[],
+            FunctionalEngine::Pipelined(e) => e.stage_metrics(),
+        }
+    }
+}
+
+impl Engine for FunctionalEngine {
+    type Output = Vec<i32>;
+
+    fn infer(&mut self, clip: &[SpikePlane]) -> Result<Vec<i32>> {
+        match self {
+            FunctionalEngine::Reference(e) => e.infer(clip),
+            FunctionalEngine::Pipelined(e) => e.infer(clip),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::MultiCoreScheduler;
+    use crate::prop::{check, Gen, SplitMix64};
+    use crate::quant::Precision;
+    use crate::sim::config::SimConfig;
+    use crate::snn::layer::{NeuronConfig, ResetMode};
+    use crate::snn::network::NetworkBuilder;
+
+    fn rand_mat(g: &mut Gen, rows: usize, cols: usize) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                m.set(r, c, g.i32_in(-7..=7));
+            }
+        }
+        m
+    }
+
+    /// A random spiking network: 1–3 hidden conv layers (random
+    /// channels, thresholds, leaks, reset modes), an optional pool,
+    /// and an accumulate FC readout.
+    fn random_network(g: &mut Gen) -> Network {
+        let in_ch = 1 + g.index(2);
+        let h = 4 + 2 * g.index(3);
+        let w = 4 + 2 * g.index(3);
+        let hidden = 1 + g.index(3);
+        let pool_after = g.index(hidden + 1); // == hidden means "none"
+        let mut b = NetworkBuilder::new("prop-pipe", Precision::W4V7, 3, (in_ch, h, w));
+        for i in 0..hidden {
+            let (c, _, _) = b.shape();
+            let out_ch = 2 + g.index(5);
+            let neuron = NeuronConfig {
+                theta: 1 + g.i32_in(0..=6),
+                leak: g.i32_in(0..=2),
+                leaky: g.chance(0.5),
+                reset: if g.chance(0.5) {
+                    ResetMode::Soft
+                } else {
+                    ResetMode::Hard
+                },
+            };
+            let wm = rand_mat(g, c * 9, out_ch);
+            b = b.conv3x3(out_ch, wm, neuron, false).unwrap();
+            if i == pool_after {
+                b = b.pool(2, 2);
+            }
+        }
+        let (c, hh, ww) = b.shape();
+        let out = 2 + g.index(3);
+        let wm = rand_mat(g, c * hh * ww, out);
+        b.fc(out, wm, NeuronConfig::default(), true)
+            .unwrap()
+            .build()
+            .unwrap()
+    }
+
+    fn random_frames(g: &mut Gen, net: &Network, t: usize) -> Vec<SpikePlane> {
+        let (c, h, w) = net.layers[0].in_shape;
+        let density = 0.1 + g.f64() * 0.4;
+        (0..t)
+            .map(|_| {
+                let mut p = SpikePlane::zeros(c, h, w);
+                for i in 0..p.len() {
+                    if g.chance(density) {
+                        p.as_mut_slice()[i] = 1;
+                    }
+                }
+                p
+            })
+            .collect()
+    }
+
+    fn demo_net() -> Network {
+        crate::snn::network::demo_serving_network(6).unwrap()
+    }
+
+    fn demo_clip(seed: u64, t: usize) -> Vec<SpikePlane> {
+        let mut rng = SplitMix64::new(seed);
+        (0..t)
+            .map(|_| {
+                let mut p = SpikePlane::zeros(2, 16, 16);
+                for i in 0..p.len() {
+                    if rng.chance(0.2) {
+                        p.as_mut_slice()[i] = 1;
+                    }
+                }
+                p
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pipeline_matches_sequential_reference() {
+        let net = demo_net();
+        let frames = demo_clip(9, 6);
+
+        let mut ref_state = net.init_state().unwrap();
+        let ref_tel = net.run(&frames, &mut ref_state).unwrap();
+
+        let groups = plan_layer_groups(&net, 2);
+        assert_eq!(groups.len(), 2);
+        let mut pipe_state = net.init_state().unwrap();
+        let (tel, stages) = run_pipeline_clip(&net, &frames, &mut pipe_state, &groups, 2).unwrap();
+
+        for (a, b) in ref_state.vmems.iter().zip(&pipe_state.vmems) {
+            assert_eq!(a.as_slice(), b.as_slice());
+        }
+        assert_eq!(tel, ref_tel);
+        assert_eq!(stages.len(), 2);
+        for (gi, sm) in stages.iter().enumerate() {
+            assert_eq!(sm.stage, gi);
+            assert_eq!(sm.steps, 6);
+            assert!(sm.occupancy() > 0.0 && sm.occupancy() <= 1.0);
+        }
+        // the fill front reaches later stages later
+        assert!(stages[1].fill >= stages[0].fill);
+    }
+
+    #[test]
+    fn single_group_pipeline_is_sequential() {
+        let net = demo_net();
+        let frames = demo_clip(11, 4);
+        let mut ref_state = net.init_state().unwrap();
+        net.run(&frames, &mut ref_state).unwrap();
+        let mut state = net.init_state().unwrap();
+        let (_, stages) = run_pipeline_clip(&net, &frames, &mut state, &[(0, 2)], 1).unwrap();
+        assert_eq!(stages.len(), 1);
+        assert_eq!(stages[0].stall_out, Duration::ZERO);
+        for (a, b) in ref_state.vmems.iter().zip(&state.vmems) {
+            assert_eq!(a.as_slice(), b.as_slice());
+        }
+    }
+
+    #[test]
+    fn empty_clip_is_a_noop() {
+        let net = demo_net();
+        let mut state = net.init_state().unwrap();
+        let groups = plan_layer_groups(&net, 2);
+        let (tel, stages) = run_pipeline_clip(&net, &[], &mut state, &groups, 1).unwrap();
+        assert!(tel.is_empty());
+        assert!(stages.iter().all(|s| s.steps == 0));
+        assert!(state.vmems.iter().all(|v| v.as_slice().iter().all(|&x| x == 0)));
+    }
+
+    #[test]
+    fn bad_frame_shape_rejected_before_spawning() {
+        let net = demo_net();
+        let mut state = net.init_state().unwrap();
+        let groups = plan_layer_groups(&net, 2);
+        let wrong = vec![SpikePlane::zeros(2, 8, 8)];
+        assert!(run_pipeline_clip(&net, &wrong, &mut state, &groups, 1).is_err());
+    }
+
+    /// A stage failing mid-clip tears the channels down; the
+    /// originating stage's error (not a neighbour's secondary
+    /// channel error) comes back.
+    #[test]
+    fn stage_error_propagates_as_the_root_cause() {
+        // Hand-build a network whose second stateful layer is broken
+        // (no weights) — the builder can't make one, the struct can.
+        let good = crate::snn::layer::Layer::conv(
+            (1, 4, 4),
+            2,
+            3,
+            3,
+            1,
+            1,
+            Mat::zeros(9, 2),
+            NeuronConfig::default(),
+            false,
+        )
+        .unwrap();
+        let mut bad = crate::snn::layer::Layer::fc(
+            (2, 4, 4),
+            3,
+            Mat::zeros(32, 3),
+            NeuronConfig::default(),
+            true,
+        )
+        .unwrap();
+        bad.weights = None;
+        let net = Network {
+            name: "broken".into(),
+            layers: vec![good, bad],
+            precision: Precision::W4V7,
+            timesteps: 4,
+        };
+        let mut state = net.init_state().unwrap();
+        let frames: Vec<SpikePlane> = (0..4).map(|_| SpikePlane::zeros(1, 4, 4)).collect();
+        let err = run_pipeline_clip(&net, &frames, &mut state, &[(0, 1), (1, 2)], 1).unwrap_err();
+        assert!(
+            matches!(err, Error::Config(ref m) if m.contains("weights")),
+            "want the broken layer's error, got: {err}"
+        );
+    }
+
+    #[test]
+    fn engine_resets_between_clips_and_accumulates_stage_metrics() {
+        let net = demo_net();
+        let clip = demo_clip(21, 6);
+        let mut ref_engine = ReferenceEngine::new(net.clone()).unwrap();
+        let want = ref_engine.infer(&clip).unwrap();
+
+        let mut e = PipelinedEngine::new(net, PipelineConfig::with_stages(2)).unwrap();
+        let a = e.infer(&clip).unwrap();
+        let b = e.infer(&clip).unwrap();
+        assert_eq!(a, want, "pipelined output != reference output");
+        assert_eq!(a, b, "state must reset between clips");
+        assert_eq!(e.groups().len(), 2);
+        // counters accumulated over both clips
+        assert!(e.stage_metrics().iter().all(|s| s.steps == 12));
+    }
+
+    #[test]
+    fn from_config_selects_the_engine() {
+        let net = demo_net();
+        let clip = demo_clip(33, 4);
+        let mut r = FunctionalEngine::from_config(net.clone(), None).unwrap();
+        assert!(matches!(&r, FunctionalEngine::Reference(_)));
+        assert!(r.stage_metrics().is_empty());
+        let mut p =
+            FunctionalEngine::from_config(net, Some(PipelineConfig::with_stages(2))).unwrap();
+        assert!(matches!(&p, FunctionalEngine::Pipelined(_)));
+        assert_eq!(r.infer(&clip).unwrap(), p.infer(&clip).unwrap());
+        assert_eq!(p.stage_metrics().len(), 2);
+    }
+
+    /// Satellite: pipelined execution is bit-identical to
+    /// `Network::run` *and* to the scheduler's `run_network_clip`
+    /// across random networks, group counts, channel depths, and
+    /// timestep counts.
+    #[test]
+    fn prop_pipeline_bit_identical_to_reference() {
+        check("pipeline_bit_identical", 12, |g| {
+            let net = random_network(g);
+            let t = 1 + g.index(4);
+            let frames = random_frames(g, &net, t);
+            let stateful = net.stateful_layers().count();
+            let stages = 1 + g.index(stateful + 2); // may exceed the layer count
+            let depth = 1 + g.index(3);
+
+            // sequential reference
+            let mut ref_state = net.init_state().unwrap();
+            let ref_tel = net.run(&frames, &mut ref_state).unwrap();
+
+            // staged pipeline
+            let groups = plan_layer_groups(&net, stages);
+            let mut pipe_state = net.init_state().unwrap();
+            let (tel, _) =
+                run_pipeline_clip(&net, &frames, &mut pipe_state, &groups, depth).unwrap();
+
+            // cycle-level scheduler path (shares the per-group core)
+            let sched = MultiCoreScheduler::new(1 + g.index(3), SimConfig::default());
+            let mut sim_state = net.init_state().unwrap();
+            sched.run_network_clip(&net, &frames, &mut sim_state).unwrap();
+
+            tel == ref_tel
+                && ref_state
+                    .vmems
+                    .iter()
+                    .zip(&pipe_state.vmems)
+                    .all(|(a, b)| a.as_slice() == b.as_slice())
+                && ref_state
+                    .vmems
+                    .iter()
+                    .zip(&sim_state.vmems)
+                    .all(|(a, b)| a.as_slice() == b.as_slice())
+        });
+    }
+}

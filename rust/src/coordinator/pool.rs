@@ -31,6 +31,7 @@ use crate::error::{Error, Result};
 use crate::snn::spikes::SpikePlane;
 
 use super::metrics::WorkerMetrics;
+use super::pipeline::PipelineConfig;
 use super::server::Engine;
 
 /// How idle workers acquire work beyond their own inbox.
@@ -54,6 +55,12 @@ pub struct PoolConfig {
     pub inbox_depth: usize,
     /// Idle-worker acquisition policy.
     pub steal: StealPolicy,
+    /// Select the timestep-pipelined functional engine (`Some`) over
+    /// the sequential reference (`None`) when worker engines are built
+    /// from this config (`FunctionalEngine::from_config`) — each
+    /// worker then runs its clips through a staged layer-group
+    /// pipeline of its own (DESIGN.md §Pipeline).
+    pub pipeline: Option<PipelineConfig>,
 }
 
 impl Default for PoolConfig {
@@ -62,6 +69,7 @@ impl Default for PoolConfig {
             workers: 4,
             inbox_depth: 2,
             steal: StealPolicy::Steal,
+            pipeline: None,
         }
     }
 }
@@ -519,6 +527,7 @@ mod tests {
             workers: 4,
             inbox_depth: 2,
             steal: StealPolicy::Steal,
+            ..PoolConfig::default()
         };
         let run = run_pool(&cfg, job_stream(24), &|_| Ok(SkewEngine)).unwrap();
         assert_eq!(run.clips.len(), 24);
@@ -536,6 +545,7 @@ mod tests {
             workers: 3,
             inbox_depth: 1,
             steal: StealPolicy::Pinned,
+            ..PoolConfig::default()
         };
         let run = run_pool(&cfg, job_stream(17), &|_| Ok(CountEngine)).unwrap();
         assert_eq!(run.clips.len(), 17);
@@ -557,6 +567,7 @@ mod tests {
             workers: 2,
             inbox_depth: 1,
             steal: StealPolicy::Steal,
+            ..PoolConfig::default()
         };
         let gate = Arc::new(AtomicBool::new(false));
         let sent = Arc::new(AtomicUsize::new(0));
@@ -636,6 +647,7 @@ mod tests {
             workers: 2,
             inbox_depth: 2,
             steal: StealPolicy::Steal,
+            ..PoolConfig::default()
         };
         let run = run_pool(&cfg, job_stream(12), &|wi| Ok(PerWorker { slow: wi == 0 }))
             .unwrap();
@@ -683,6 +695,7 @@ mod tests {
             workers: 1,
             inbox_depth: 1,
             steal: StealPolicy::Steal,
+            ..PoolConfig::default()
         };
         let _ = run_pool(&cfg, job_stream(16), &|_| Ok(Panicker));
     }
@@ -706,6 +719,7 @@ mod tests {
             workers: 2,
             inbox_depth: 3,
             steal: StealPolicy::Steal,
+            ..PoolConfig::default()
         };
         let run = run_pool(&cfg, job_stream(40), &|_| Ok(CountEngine)).unwrap();
         for w in &run.workers {

@@ -21,7 +21,7 @@ use crate::sim::config::SimConfig;
 use crate::sim::core::SpidrCore;
 use crate::sim::stats::RunStats;
 use crate::snn::layer::{Layer, LayerKind};
-use crate::snn::network::{pool_step, Network, NetworkState};
+use crate::snn::network::{pool_step, GroupSpan, Network, NetworkState};
 use crate::snn::spikes::SpikePlane;
 use crate::snn::tensor::Mat;
 
@@ -46,6 +46,59 @@ pub struct MultiCoreStats {
     pub run: RunStats,
     /// Per-core cycle counts (load-balance diagnostics).
     pub per_core_cycles: Vec<u64>,
+    /// Simulated cycles per layer group (one entry per group on the
+    /// [`MultiCoreScheduler::run_network_clip`] path; empty for
+    /// single-layer runs) — the stage costs of the fill/drain latency
+    /// model (DESIGN.md §Pipeline).
+    pub per_group_cycles: Vec<u64>,
+}
+
+impl MultiCoreStats {
+    /// Empty stats, ready for accumulation.
+    fn empty() -> Self {
+        MultiCoreStats {
+            cycles: 0,
+            run: RunStats::default(),
+            per_core_cycles: Vec::new(),
+            per_group_cycles: Vec::new(),
+        }
+    }
+
+    /// Fold one layer/group result into this accumulator: cycles add
+    /// (layers/groups run back to back on the sequential path), core
+    /// cycle counters add index-wise, energies and op counts sum.
+    /// `per_group_cycles` is *not* folded — the clip executor records
+    /// one entry per group itself.
+    fn accumulate(&mut self, part: &MultiCoreStats) {
+        self.cycles += part.cycles;
+        self.run.add(&part.run);
+        for (i, c) in part.per_core_cycles.iter().enumerate() {
+            if i >= self.per_core_cycles.len() {
+                self.per_core_cycles.push(0);
+            }
+            self.per_core_cycles[i] += c;
+        }
+    }
+
+    /// Modeled single-clip makespan if the recorded layer groups ran
+    /// as a timestep-staged pipeline instead of back to back:
+    /// `T_clip ≈ (G−1)·t_stage + T·t_stage`, with `t_stage` the
+    /// slowest group's per-timestep cost (DESIGN.md §Pipeline). Falls
+    /// back to the sequential `cycles` when no group breakdown was
+    /// recorded or `timesteps` is zero.
+    pub fn pipelined_cycle_estimate(&self, timesteps: u64) -> u64 {
+        let g = self.per_group_cycles.len() as u64;
+        if g == 0 || timesteps == 0 {
+            return self.cycles;
+        }
+        let t_stage = self
+            .per_group_cycles
+            .iter()
+            .map(|c| c.div_ceil(timesteps))
+            .max()
+            .unwrap_or(0);
+        (g - 1 + timesteps) * t_stage
+    }
 }
 
 impl MultiCoreScheduler {
@@ -55,56 +108,24 @@ impl MultiCoreScheduler {
     }
 
     /// Partition output channels `0..k` across cores (contiguous,
-    /// balanced).
+    /// balanced — [`balanced_partition`] over unit costs).
     pub fn partition_channels(&self, k: usize) -> Vec<(usize, usize)> {
-        partition(k, self.num_cores)
+        balanced_partition(&vec![1u64; k], self.num_cores)
     }
 
-    /// Plan how a network's **stateful layers** would shard into
-    /// contiguous groups, one per core/pool-worker, balancing the
+    /// Plan how a network's **stateful layers** shard into contiguous
+    /// groups, one per core/pool-worker/pipeline-stage, balancing the
     /// per-layer dense-synaptic-op cost greedily — the
     /// layer-stationary analogue of [`Self::partition_channels`].
-    /// Today's pool workers each keep the whole network resident and
-    /// this plan feeds placement diagnostics (`examples/serving.rs`);
-    /// it becomes the actual placement when layer groups move to
-    /// separate processes/hosts (ROADMAP "Cross-process sharding",
-    /// DESIGN.md §Serve). Ranges index `stateful_layers()` order.
+    /// Networks with fewer stateful layers than cores get one group
+    /// per layer (never an empty group); a network with no stateful
+    /// layers gets no groups. Ranges index `stateful_layers()` order.
+    /// This plan is the stage topology of the timestep pipeline
+    /// (`coordinator::pipeline`, DESIGN.md §Pipeline) and becomes the
+    /// actual placement when layer groups move to separate
+    /// processes/hosts (ROADMAP "Cross-process sharding").
     pub fn partition_layer_groups(&self, network: &Network) -> Vec<(usize, usize)> {
-        let costs: Vec<u64> = network
-            .stateful_layers()
-            .map(|l| l.dense_synops().max(1))
-            .collect();
-        let s = costs.len();
-        if s == 0 {
-            return Vec::new();
-        }
-        let n = self.num_cores.min(s).max(1);
-        let total: u64 = costs.iter().sum();
-        let mut groups = Vec::with_capacity(n);
-        let mut lo = 0usize;
-        let mut acc = 0u64;
-        let mut served = 0u64;
-        for (i, &c) in costs.iter().enumerate() {
-            acc += c;
-            let groups_left = n - groups.len(); // incl. the open group
-            if groups_left == 1 {
-                continue; // the last group swallows the tail
-            }
-            let layers_left = s - i - 1;
-            // Close the open group once it reaches its fair share of
-            // the remaining cost — or when the remaining layers are
-            // only just enough to give every later group one layer.
-            // Never close unless each later group can still get one.
-            let fair = (total - served).div_ceil(groups_left as u64);
-            if layers_left >= groups_left - 1 && (acc >= fair || layers_left == groups_left - 1) {
-                groups.push((lo, i + 1));
-                lo = i + 1;
-                served += acc;
-                acc = 0;
-            }
-        }
-        groups.push((lo, s));
-        groups
+        plan_layer_groups(network, self.num_cores)
     }
 
     /// Run one layer's timesteps across cores (channel-parallel).
@@ -213,16 +234,63 @@ impl MultiCoreScheduler {
                 cycles: makespan,
                 run,
                 per_core_cycles,
+                per_group_cycles: Vec::new(),
             },
         ))
     }
 
+    /// Run one layer-group span over a clip — the per-group building
+    /// block shared by [`Self::run_network_clip`] (groups back to
+    /// back) and a cycle-level pipeline stage (one group per stage
+    /// thread; `coordinator::pipeline`, DESIGN.md §Pipeline). Pool
+    /// layers run in the loader, as on silicon; every stateful
+    /// layer's output channels shard across the simulated cores.
+    /// `vmems` must hold exactly the span's Vmem banks in
+    /// stateful-layer order (the span's slice of
+    /// [`NetworkState::vmems`]).
+    pub fn run_group(
+        &self,
+        network: &Network,
+        span: &GroupSpan,
+        mut planes: Vec<SpikePlane>,
+        vmems: &mut [Mat],
+    ) -> Result<(Vec<SpikePlane>, MultiCoreStats)> {
+        if vmems.len() != span.banks() {
+            return Err(Error::config(format!(
+                "group state holds {} Vmem banks, span {:?} needs {}",
+                vmems.len(),
+                span.stateful,
+                span.banks()
+            )));
+        }
+        let mut total = MultiCoreStats::empty();
+        let mut si = 0;
+        for layer in &network.layers[span.layers.0..span.layers.1] {
+            match layer.kind {
+                LayerKind::Pool => {
+                    planes = planes.iter().map(|p| pool_step(layer, p)).collect();
+                }
+                LayerKind::Conv | LayerKind::Fc => {
+                    let (out, stats) = self.run_layer(layer, &planes, &mut vmems[si])?;
+                    total.accumulate(&stats);
+                    planes = out;
+                    si += 1;
+                }
+            }
+        }
+        Ok((planes, total))
+    }
+
     /// Run a whole multi-layer clip, sharding **every stateful layer's
-    /// output channels** across the simulated cores (pool layers run
-    /// in the loader, as on silicon). Layers execute in sequence —
-    /// layer `l` at timestep `t` consumes layer `l−1`'s spikes — so
-    /// simulated cycles add across layers while each layer's makespan
-    /// is the max over its channel shards. `state` must come from
+    /// output channels** across the simulated cores. Execution
+    /// delegates to [`Self::run_group`] over the layer-group plan of
+    /// [`Self::partition_layer_groups`] — the same per-group stepping
+    /// core the timestep pipeline drives — with the groups running
+    /// back to back: layer `l` at timestep `t` consumes layer `l−1`'s
+    /// spikes, simulated cycles add across layers/groups, and each
+    /// layer's makespan is the max over its channel shards.
+    /// [`MultiCoreStats::per_group_cycles`] records the per-group
+    /// split (one entry per group). `state` must come from
     /// [`Network::init_state`] (reset it between independent clips).
     pub fn run_network_clip(
         &self,
@@ -244,51 +312,73 @@ impl MultiCoreScheduler {
                 )));
             }
         }
+        let spans = network.group_spans(&self.partition_layer_groups(network))?;
         let mut planes: Vec<SpikePlane> = frames.to_vec();
-        let mut total = MultiCoreStats {
-            cycles: 0,
-            run: RunStats::default(),
-            per_core_cycles: Vec::new(),
-        };
+        let mut total = MultiCoreStats::empty();
         let mut si = 0;
-        for layer in &network.layers {
-            match layer.kind {
-                LayerKind::Pool => {
-                    planes = planes.iter().map(|p| pool_step(layer, p)).collect();
-                }
-                LayerKind::Conv | LayerKind::Fc => {
-                    let (out, stats) =
-                        self.run_layer(layer, &planes, &mut state.vmems[si])?;
-                    total.cycles += stats.cycles;
-                    total.run.add(&stats.run);
-                    for (i, c) in stats.per_core_cycles.iter().enumerate() {
-                        if i >= total.per_core_cycles.len() {
-                            total.per_core_cycles.push(0);
-                        }
-                        total.per_core_cycles[i] += c;
-                    }
-                    planes = out;
-                    si += 1;
-                }
-            }
+        for span in &spans {
+            let banks = span.banks();
+            let (out, stats) =
+                self.run_group(network, span, planes, &mut state.vmems[si..si + banks])?;
+            total.accumulate(&stats);
+            total.per_group_cycles.push(stats.cycles);
+            planes = out;
+            si += banks;
         }
         Ok((planes, total))
     }
 }
 
-/// Contiguous balanced partition of `0..k` into at most `n` ranges.
-fn partition(k: usize, n: usize) -> Vec<(usize, usize)> {
-    let n = n.min(k).max(1);
-    let base = k / n;
-    let extra = k % n;
-    let mut out = Vec::with_capacity(n);
-    let mut lo = 0;
-    for i in 0..n {
-        let len = base + usize::from(i < extra);
-        out.push((lo, lo + len));
-        lo += len;
+/// Plan how a network's stateful layers shard into at most `groups`
+/// contiguous, dense-synaptic-op-balanced groups (see
+/// [`MultiCoreScheduler::partition_layer_groups`]). A free function so
+/// the pipeline can plan stages without constructing a scheduler.
+pub fn plan_layer_groups(network: &Network, groups: usize) -> Vec<(usize, usize)> {
+    let costs: Vec<u64> = network.stateful_layers().map(|l| l.dense_synops()).collect();
+    balanced_partition(&costs, groups)
+}
+
+/// Contiguous, cost-balanced partition of `costs` into at most `n`
+/// **non-empty** groups — the shared core of
+/// [`MultiCoreScheduler::partition_channels`] (unit costs) and
+/// [`plan_layer_groups`] (dense-synop costs).
+///
+/// Greedy fair-share closing: the open group closes once it reaches
+/// `ceil(remaining_cost / groups_left)`, but never so early that a
+/// later group would end up empty, and never so late that the
+/// remaining items cannot give every later group at least one. Edge
+/// cases: fewer items than `n` yields one group per item; a single
+/// item yields one group; zero-cost items close immediately (their
+/// fair share is zero) but still land in non-empty groups; an empty
+/// cost list yields no groups.
+pub fn balanced_partition(costs: &[u64], n: usize) -> Vec<(usize, usize)> {
+    let s = costs.len();
+    if s == 0 {
+        return Vec::new();
     }
-    out
+    let n = n.min(s).max(1);
+    let total: u64 = costs.iter().sum();
+    let mut groups = Vec::with_capacity(n);
+    let mut lo = 0usize;
+    let mut acc = 0u64;
+    let mut served = 0u64;
+    for (i, &c) in costs.iter().enumerate() {
+        acc += c;
+        let groups_left = n - groups.len(); // incl. the open group
+        if groups_left == 1 {
+            continue; // the last group swallows the tail
+        }
+        let items_left = s - i - 1;
+        let fair = (total - served).div_ceil(groups_left as u64);
+        if items_left >= groups_left - 1 && (acc >= fair || items_left == groups_left - 1) {
+            groups.push((lo, i + 1));
+            lo = i + 1;
+            served += acc;
+            acc = 0;
+        }
+    }
+    groups.push((lo, s));
+    groups
 }
 
 /// [`Engine`] adapter over the multi-core scheduler: each clip is an
@@ -353,9 +443,11 @@ mod tests {
                 w.set(f, k, ((f * 3 + k) % 7) as i32 - 3);
             }
         }
-        Layer::conv((2, 6, 6), out_ch, 3, 3, 1, 1, w,
-                    NeuronConfig { theta: 4, ..Default::default() }, false)
-            .unwrap()
+        let neuron = NeuronConfig {
+            theta: 4,
+            ..Default::default()
+        };
+        Layer::conv((2, 6, 6), out_ch, 3, 3, 1, 1, w, neuron, false).unwrap()
     }
 
     fn frames(t: usize) -> Vec<SpikePlane> {
@@ -380,6 +472,44 @@ mod tests {
         assert_eq!(parts.len(), 4);
         let total: usize = parts.iter().map(|(a, b)| b - a).sum();
         assert_eq!(total, 10);
+        // unit costs split as evenly as possible: sizes differ by ≤ 1
+        let sizes: Vec<usize> = parts.iter().map(|(a, b)| b - a).collect();
+        assert_eq!(sizes, vec![3, 3, 2, 2]);
+    }
+
+    /// Every partition the helper returns is contiguous, covering,
+    /// and free of empty groups.
+    fn assert_valid_partition(parts: &[(usize, usize)], items: usize) {
+        assert_eq!(parts.first().map(|p| p.0), Some(0));
+        assert_eq!(parts.last().map(|p| p.1), Some(items));
+        for w in parts.windows(2) {
+            assert_eq!(w[0].1, w[1].0, "partition must be contiguous");
+        }
+        assert!(parts.iter().all(|(a, b)| a < b), "no empty group");
+    }
+
+    #[test]
+    fn balanced_partition_edge_cases() {
+        // more groups than items: one group per item
+        assert_eq!(balanced_partition(&[5, 7], 8), vec![(0, 1), (1, 2)]);
+        // single item
+        assert_eq!(balanced_partition(&[9], 4), vec![(0, 1)]);
+        // empty cost list: no groups
+        assert!(balanced_partition(&[], 3).is_empty());
+        // zero-cost items still land in non-empty covering groups
+        let z = balanced_partition(&[0, 0, 0, 0], 2);
+        assert_eq!(z.len(), 2);
+        assert_valid_partition(&z, 4);
+        // a dominant item takes a group of its own
+        assert_eq!(balanced_partition(&[100, 1, 1, 1], 2), vec![(0, 1), (1, 4)]);
+        // n = 0 is clamped to one group
+        assert_eq!(balanced_partition(&[3, 3], 0), vec![(0, 2)]);
+        // mixed zero/non-zero costs stay valid at every group count
+        for n in 1..=6 {
+            let p = balanced_partition(&[0, 4, 0, 0, 9, 1], n);
+            assert_valid_partition(&p, 6);
+            assert!(p.len() <= n.max(1));
+        }
     }
 
     #[test]
@@ -431,13 +561,34 @@ mod tests {
             let s = MultiCoreScheduler::new(cores, SimConfig::default());
             let groups = s.partition_layer_groups(&net);
             assert_eq!(groups.len(), cores.min(2));
-            assert_eq!(groups[0].0, 0);
-            assert_eq!(groups.last().unwrap().1, 2);
-            for w in groups.windows(2) {
-                assert_eq!(w[0].1, w[1].0, "groups must be contiguous");
-            }
-            assert!(groups.iter().all(|(a, b)| a < b), "no empty group");
+            assert_valid_partition(&groups, 2);
         }
+    }
+
+    /// Satellite: a network with fewer stateful layers than cores gets
+    /// one non-empty group per layer — callers can always feed the
+    /// plan straight into `Network::group_spans` regardless of the
+    /// core/worker/stage count.
+    #[test]
+    fn layer_groups_with_fewer_layers_than_cores() {
+        let net = tiny_network(); // 2 stateful layers
+        for cores in [3usize, 4, 17] {
+            let s = MultiCoreScheduler::new(cores, SimConfig::default());
+            let groups = s.partition_layer_groups(&net);
+            assert_eq!(groups, vec![(0, 1), (1, 2)]);
+            // and the plan resolves to spans without caller-side fixups
+            let spans = net.group_spans(&groups).unwrap();
+            assert_eq!(spans.len(), 2);
+        }
+        // free-function form, single stateful layer
+        use crate::quant::Precision;
+        use crate::snn::network::NetworkBuilder;
+        let one = NetworkBuilder::new("one", Precision::W4V7, 1, (1, 4, 4))
+            .conv3x3(2, Mat::zeros(9, 2), NeuronConfig::default(), true)
+            .unwrap()
+            .build()
+            .unwrap();
+        assert_eq!(plan_layer_groups(&one, 6), vec![(0, 1)]);
     }
 
     #[test]
@@ -456,6 +607,46 @@ mod tests {
         let s = MultiCoreScheduler::new(3, SimConfig::default());
         let groups = s.partition_layer_groups(&net);
         assert_eq!(groups, vec![(0, 2), (2, 4), (4, 6)]);
+    }
+
+    /// Group-at-a-time execution composes to the same trajectory as
+    /// the whole-clip executor (they share `run_group`).
+    #[test]
+    fn run_group_composes_to_network_clip() {
+        let net = tiny_network();
+        let fs = {
+            let mut rng = SplitMix64::new(5);
+            (0..2)
+                .map(|_| {
+                    let mut p = SpikePlane::zeros(1, 8, 8);
+                    for i in 0..p.len() {
+                        if rng.chance(0.3) {
+                            p.as_mut_slice()[i] = 1;
+                        }
+                    }
+                    p
+                })
+                .collect::<Vec<_>>()
+        };
+        let s = MultiCoreScheduler::new(2, SimConfig::default());
+        let mut whole = net.init_state().unwrap();
+        let (out_whole, _) = s.run_network_clip(&net, &fs, &mut whole).unwrap();
+
+        let spans = net.group_spans(&[(0, 1), (1, 2)]).unwrap();
+        let mut grouped = net.init_state().unwrap();
+        let (g0, g1) = grouped.vmems.split_at_mut(1);
+        let (mid, _) = s.run_group(&net, &spans[0], fs.clone(), g0).unwrap();
+        let (out_grouped, _) = s.run_group(&net, &spans[1], mid, g1).unwrap();
+
+        for (a, b) in whole.vmems.iter().zip(&grouped.vmems) {
+            assert_eq!(a.as_slice(), b.as_slice());
+        }
+        for (a, b) in out_whole.iter().zip(&out_grouped) {
+            assert_eq!(a.as_slice(), b.as_slice());
+        }
+        // bank-count mismatch is rejected
+        let mut bad = net.init_state().unwrap();
+        assert!(s.run_group(&net, &spans[0], fs, &mut bad.vmems).is_err());
     }
 
     #[test]
@@ -492,6 +683,26 @@ mod tests {
         }
         assert!(stats.cycles > 0);
         assert!(!stats.per_core_cycles.is_empty());
+        // per-group split: one entry per layer group, summing to the
+        // sequential makespan, and the pipelined estimate beats it
+        // once there is more than one group.
+        let groups = s.partition_layer_groups(&net);
+        assert_eq!(stats.per_group_cycles.len(), groups.len());
+        assert_eq!(stats.per_group_cycles.iter().sum::<u64>(), stats.cycles);
+        // fill/drain model: (G-1+T)·t_stage with t_stage the slowest
+        // group's per-timestep cost
+        let t = fs.len() as u64;
+        let t_stage = stats
+            .per_group_cycles
+            .iter()
+            .map(|c| c.div_ceil(t))
+            .max()
+            .unwrap();
+        assert_eq!(
+            stats.pipelined_cycle_estimate(t),
+            (groups.len() as u64 - 1 + t) * t_stage
+        );
+        assert_eq!(stats.pipelined_cycle_estimate(0), stats.cycles);
     }
 
     #[test]
@@ -521,8 +732,7 @@ mod tests {
                 .collect()
         };
         let mut e =
-            ScheduledEngine::new(net, MultiCoreScheduler::new(2, SimConfig::default()))
-                .unwrap();
+            ScheduledEngine::new(net, MultiCoreScheduler::new(2, SimConfig::default())).unwrap();
         let a = e.infer(&fs).unwrap();
         let b = e.infer(&fs).unwrap();
         // identical clips on reset state -> identical simulated run

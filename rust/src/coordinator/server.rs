@@ -23,6 +23,7 @@ use crate::snn::network::{Network, NetworkState};
 use crate::snn::spikes::SpikePlane;
 
 use super::metrics::Metrics;
+use super::pipeline::PipelineConfig;
 use super::pool::{run_pool, ClipJob, PoolConfig};
 
 /// Server configuration.
@@ -38,6 +39,10 @@ pub struct ServerConfig {
     pub bin_us: u32,
     /// Bounded queue depth between stages (backpressure window).
     pub queue_depth: usize,
+    /// Select the timestep-pipelined functional engine (`Some`) over
+    /// the sequential reference (`None`) when engines are built from
+    /// this config (`FunctionalEngine::from_config`).
+    pub pipeline: Option<PipelineConfig>,
 }
 
 impl Default for ServerConfig {
@@ -48,6 +53,7 @@ impl Default for ServerConfig {
             timesteps: 10,
             bin_us: 1000,
             queue_depth: 2,
+            pipeline: None,
         }
     }
 }
@@ -259,6 +265,7 @@ mod tests {
             timesteps: 4,
             bin_us: 1000,
             queue_depth: 2,
+            pipeline: None,
         }
     }
 
@@ -372,6 +379,55 @@ mod tests {
         let total: u64 = metrics.workers.iter().map(|w| w.clips).sum();
         assert_eq!(total, 16);
         assert_eq!(metrics.clips, 16);
+    }
+
+    /// The third engine on the tier: selecting the pipelined
+    /// functional engine via `ServerConfig::pipeline` /
+    /// `PoolConfig::pipeline` yields bit-identical responses to the
+    /// sequential reference on both serve paths.
+    #[test]
+    fn pipelined_engine_selected_by_config_is_bit_identical() {
+        use super::super::pipeline::{FunctionalEngine, PipelineConfig};
+
+        let net = tiny_network();
+        let reqs: Vec<Vec<Event>> = (0..5).map(|i| burst(7 + i * 11)).collect();
+
+        // baseline: reference engine on the single-engine path
+        let server = InferenceServer::new(small_cfg());
+        let mut single = ReferenceEngine::new(net.clone()).unwrap();
+        let (want, _) = server.serve(reqs.clone(), &mut single).unwrap();
+
+        // pipelined engine selected via ServerConfig, single-engine path
+        let mut cfg = small_cfg();
+        cfg.pipeline = Some(PipelineConfig {
+            stages: 2,
+            channel_depth: 1,
+        });
+        let pserver = InferenceServer::new(cfg);
+        let mut piped = FunctionalEngine::from_config(net.clone(), pserver.cfg.pipeline).unwrap();
+        let (got, mut metrics) = pserver.serve(reqs.clone(), &mut piped).unwrap();
+        metrics.stages = piped.stage_metrics().to_vec();
+        assert_eq!(want.len(), got.len());
+        for (a, b) in want.iter().zip(&got) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.output, b.output, "request {} diverged", a.id);
+        }
+        assert_eq!(metrics.stages.len(), 2);
+        assert!(metrics.pipeline_occupancy() > 0.0);
+
+        // pipelined engines selected via PoolConfig, pool path
+        let pool = PoolConfig {
+            pipeline: cfg.pipeline,
+            ..PoolConfig::with_workers(2)
+        };
+        let (pooled, _) = pserver
+            .serve_pool(reqs, &pool, |_| {
+                FunctionalEngine::from_config(net.clone(), pool.pipeline)
+            })
+            .unwrap();
+        for (a, b) in want.iter().zip(&pooled) {
+            assert_eq!(a.output, b.output, "pooled request {} diverged", a.id);
+        }
     }
 
     #[test]

@@ -273,6 +273,32 @@ impl SpidrCore {
         ))
     }
 
+    /// Per-timestep stepping API for staged layer-group pipelines
+    /// (`coordinator::pipeline`, DESIGN.md §Pipeline): execute one
+    /// stateful layer for a single timestep, carrying Vmem state in
+    /// `state`.
+    ///
+    /// Functionally this is exactly [`Self::run_layer`] — the full
+    /// Vmem bank round-trips through `state` between calls, so
+    /// stepping a clip frame by frame produces bit-identical Vmems
+    /// and spikes to one whole-clip call
+    /// (`stepwise_equals_whole_clip_run`). The *timing* model
+    /// differs: whole-clip execution keeps a tile's full Vmems
+    /// resident in the neuron unit across all timesteps, while
+    /// per-timestep stepping swaps every tile in and out each call —
+    /// the stage-resident cost a hardware layer-group pipeline pays
+    /// at its boundaries. Cycle/energy sums therefore upper-bound the
+    /// whole-clip numbers.
+    pub fn step_layer(
+        &self,
+        layer: &Layer,
+        frame: &SpikePlane,
+        state: &mut Mat,
+    ) -> Result<(SpikePlane, LayerStats)> {
+        let (mut out, stats) = self.run_layer(layer, std::slice::from_ref(frame), state)?;
+        Ok((out.pop().expect("one timestep in, one plane out"), stats))
+    }
+
     /// Run one channel group's pipeline over every tile and timestep,
     /// replaying cached tile streams through this group's weights.
     #[allow(clippy::too_many_arguments)]
@@ -583,6 +609,32 @@ mod tests {
             sim_state.as_slice(),
             "multi-group Vmem trajectory diverged from reference"
         );
+    }
+
+    #[test]
+    fn stepwise_equals_whole_clip_run() {
+        // Per-timestep stepping (the pipeline-stage API) must be
+        // functionally identical to the whole-clip run: same Vmems,
+        // same output spikes.
+        let layer = conv_layer(2, 4, 6, 6);
+        let frames = random_frames(2, 6, 6, 4, 0.3, 31);
+        let core = SpidrCore::new(SimConfig::default());
+
+        let mut whole_state = Mat::zeros(36, 4);
+        let (whole_out, _) = core.run_layer(&layer, &frames, &mut whole_state).unwrap();
+
+        let mut step_state = Mat::zeros(36, 4);
+        let mut step_out = Vec::new();
+        for f in &frames {
+            let (o, st) = core.step_layer(&layer, f, &mut step_state).unwrap();
+            assert_eq!(st.tiles, 3);
+            step_out.push(o);
+        }
+
+        assert_eq!(whole_state.as_slice(), step_state.as_slice());
+        for (a, b) in whole_out.iter().zip(&step_out) {
+            assert_eq!(a.as_slice(), b.as_slice());
+        }
     }
 
     #[test]

@@ -352,14 +352,24 @@ mod tests {
         let spikes: Vec<(usize, usize)> = (0..20).map(|i| (i % 16, (i * 7) % 16)).collect();
         let spad = spad_with(&spikes, 16, 16);
         let mut m1 = cm(16);
-        let st_pp = run_tile(&spad, &ready_now(16), &mut m1,
-                             &S2aOptions { ping_pong: true, ..Default::default() });
+        let pp = S2aOptions {
+            ping_pong: true,
+            ..Default::default()
+        };
+        let st_pp = run_tile(&spad, &ready_now(16), &mut m1, &pp);
         let mut m2 = cm(16);
-        let st_naive = run_tile(&spad, &ready_now(16), &mut m2,
-                                &S2aOptions { ping_pong: false, ..Default::default() });
+        let naive = S2aOptions {
+            ping_pong: false,
+            ..Default::default()
+        };
+        let st_naive = run_tile(&spad, &ready_now(16), &mut m2, &naive);
         assert_eq!(st_pp.macro_ops, st_naive.macro_ops);
-        assert!(st_pp.parity_switches < st_naive.parity_switches,
-                "pp {} vs naive {}", st_pp.parity_switches, st_naive.parity_switches);
+        assert!(
+            st_pp.parity_switches < st_naive.parity_switches,
+            "pp {} vs naive {}",
+            st_pp.parity_switches,
+            st_naive.parity_switches
+        );
         // functional result identical regardless of order
         assert_eq!(m1.vmem_entry(3), m2.vmem_entry(3));
     }

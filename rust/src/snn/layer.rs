@@ -205,6 +205,20 @@ impl Layer {
         self.out_shape.0
     }
 
+    /// One-line human-readable summary ("conv 2→16@24x24",
+    /// "pool 3x3", "fc 1024→4") for stage-topology printouts
+    /// (`examples/pipeline.rs`, DESIGN.md §Pipeline).
+    pub fn describe(&self) -> String {
+        match self.kind {
+            LayerKind::Conv => format!(
+                "conv {}→{}@{}x{}",
+                self.in_shape.0, self.out_shape.0, self.out_shape.1, self.out_shape.2
+            ),
+            LayerKind::Fc => format!("fc {}→{}", self.fan_in(), self.out_shape.0),
+            LayerKind::Pool => format!("pool {}x{}", self.kh, self.kw),
+        }
+    }
+
     /// Dense-equivalent synaptic operations for one full timestep
     /// (every input position × every mapped output): the denominator
     /// of the paper's effective-GOPS numbers.
@@ -230,34 +244,35 @@ mod tests {
 
     #[test]
     fn conv_shapes() {
-        let l = Layer::conv((2, 8, 8), 4, 3, 3, 1, 1, w(18, 4),
-                            NeuronConfig::default(), false).unwrap();
+        let l = Layer::conv((2, 8, 8), 4, 3, 3, 1, 1, w(18, 4), NeuronConfig::default(), false)
+            .unwrap();
         assert_eq!(l.out_shape, (4, 8, 8));
         assert_eq!(l.vmem_shape().unwrap(), (64, 4));
         assert_eq!(l.fan_in(), 18);
         assert_eq!(l.dense_synops(), 64 * 18 * 4);
+        assert_eq!(l.describe(), "conv 2→4@8x8");
     }
 
     #[test]
     fn conv_stride_shapes() {
-        let l = Layer::conv((1, 9, 9), 2, 3, 3, 2, 1, w(9, 2),
-                            NeuronConfig::default(), false).unwrap();
+        let l = Layer::conv((1, 9, 9), 2, 3, 3, 2, 1, w(9, 2), NeuronConfig::default(), false)
+            .unwrap();
         assert_eq!(l.out_shape, (2, 5, 5));
     }
 
     #[test]
     fn conv_rejects_bad_weights() {
-        assert!(Layer::conv((2, 8, 8), 4, 3, 3, 1, 1, w(17, 4),
-                            NeuronConfig::default(), false).is_err());
+        let r = Layer::conv((2, 8, 8), 4, 3, 3, 1, 1, w(17, 4), NeuronConfig::default(), false);
+        assert!(r.is_err());
     }
 
     #[test]
     fn fc_shapes() {
-        let l = Layer::fc((16, 2, 2), 11, w(64, 11),
-                          NeuronConfig::default(), true).unwrap();
+        let l = Layer::fc((16, 2, 2), 11, w(64, 11), NeuronConfig::default(), true).unwrap();
         assert_eq!(l.out_shape, (11, 1, 1));
         assert_eq!(l.vmem_shape().unwrap(), (1, 11));
         assert_eq!(l.fan_in(), 64);
+        assert_eq!(l.describe(), "fc 64→11");
     }
 
     #[test]
@@ -267,5 +282,6 @@ mod tests {
         assert_eq!(l.out_shape, (16, 1, 1));
         assert!(l.vmem_shape().is_err());
         assert!(!l.has_state());
+        assert_eq!(l.describe(), "pool 4x4");
     }
 }

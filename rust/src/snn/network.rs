@@ -51,12 +51,34 @@ impl NetworkState {
 }
 
 /// Telemetry from one network step.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct StepTelemetry {
     /// Input spikes consumed per stateful layer.
     pub layer_input_spikes: Vec<u64>,
     /// Input cells per stateful layer (for sparsity).
     pub layer_input_cells: Vec<u64>,
+}
+
+/// One contiguous layer group of a network, in both index spaces: the
+/// full layer stack (pool layers included) and the stateful-layer
+/// order that [`NetworkState::vmems`] is indexed by. Spans come from
+/// [`Network::group_spans`] and are the unit of work of both the
+/// sequential per-group executor and the timestep-staged pipeline
+/// (`coordinator::pipeline`, DESIGN.md §Pipeline).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GroupSpan {
+    /// Full-layer index range `[lo, hi)` into [`Network::layers`].
+    pub layers: (usize, usize),
+    /// Stateful-layer index range `[a, b)` in `stateful_layers()`
+    /// order — the group's slice of [`NetworkState::vmems`].
+    pub stateful: (usize, usize),
+}
+
+impl GroupSpan {
+    /// Vmem banks this span owns.
+    pub fn banks(&self) -> usize {
+        self.stateful.1 - self.stateful.0
+    }
 }
 
 impl Network {
@@ -88,6 +110,68 @@ impl Network {
         self.layers.iter().map(|l| l.dense_synops()).sum()
     }
 
+    /// The span covering the whole network as one group.
+    pub fn full_span(&self) -> GroupSpan {
+        GroupSpan {
+            layers: (0, self.layers.len()),
+            stateful: (0, self.stateful_layers().count()),
+        }
+    }
+
+    /// Resolve contiguous **stateful-layer** group ranges (as produced
+    /// by `MultiCoreScheduler::partition_layer_groups` /
+    /// `plan_layer_groups`) into [`GroupSpan`]s over the full layer
+    /// stack. Pool layers are attached to the group of the next
+    /// stateful layer downstream of them (they run in the loader, in
+    /// front of the group's first CIM layer); trailing pool layers —
+    /// impossible in built networks, which end in an accumulate layer
+    /// — fold into the last group. Groups must be non-empty,
+    /// contiguous, and cover every stateful layer.
+    pub fn group_spans(&self, groups: &[(usize, usize)]) -> Result<Vec<GroupSpan>> {
+        let positions: Vec<usize> = self
+            .layers
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.has_state())
+            .map(|(i, _)| i)
+            .collect();
+        if groups.is_empty() {
+            return Err(Error::config("no layer groups"));
+        }
+        if groups[0].0 != 0 || groups[groups.len() - 1].1 != positions.len() {
+            return Err(Error::config(format!(
+                "groups {groups:?} must cover stateful layers 0..{}",
+                positions.len()
+            )));
+        }
+        for w in groups.windows(2) {
+            if w[0].1 != w[1].0 {
+                return Err(Error::config(format!(
+                    "groups {:?} and {:?} are not contiguous",
+                    w[0], w[1]
+                )));
+            }
+        }
+        let mut spans = Vec::with_capacity(groups.len());
+        let mut lo = 0usize;
+        for (gi, &(a, b)) in groups.iter().enumerate() {
+            if a >= b {
+                return Err(Error::config(format!("empty layer group ({a}, {b})")));
+            }
+            let hi = if gi + 1 == groups.len() {
+                self.layers.len()
+            } else {
+                positions[b - 1] + 1
+            };
+            spans.push(GroupSpan {
+                layers: (lo, hi),
+                stateful: (a, b),
+            });
+            lo = hi;
+        }
+        Ok(spans)
+    }
+
     /// Run one timestep; returns the output accumulator view and
     /// telemetry. `frame` must match the first layer's input shape.
     pub fn step(
@@ -95,10 +179,45 @@ impl Network {
         frame: &SpikePlane,
         state: &mut NetworkState,
     ) -> Result<StepTelemetry> {
-        let (c0, h0, w0) = self.layers[0].in_shape;
+        let (_, telemetry) = self.step_group(&self.full_span(), frame, &mut state.vmems)?;
+        Ok(telemetry)
+    }
+
+    /// Run one timestep of one layer group: the shared functional core
+    /// of [`Network::step`] (whole network as a single span), the
+    /// scheduler's per-group clip executor, and the timestep-staged
+    /// pipeline (DESIGN.md §Pipeline).
+    ///
+    /// `frame` must match the span's first layer's input shape and
+    /// `vmems` must hold exactly the span's Vmem banks, in
+    /// stateful-layer order. Returns the spike plane the span's last
+    /// layer emits (the next group's input; zeros for an accumulate
+    /// output layer) plus the span's slice of the step telemetry.
+    pub fn step_group(
+        &self,
+        span: &GroupSpan,
+        frame: &SpikePlane,
+        vmems: &mut [Mat],
+    ) -> Result<(SpikePlane, StepTelemetry)> {
+        let (lo, hi) = span.layers;
+        if lo >= hi || hi > self.layers.len() {
+            return Err(Error::config(format!(
+                "layer span {lo}..{hi} is invalid for a {}-layer network",
+                self.layers.len()
+            )));
+        }
+        if vmems.len() != span.banks() {
+            return Err(Error::config(format!(
+                "group state holds {} Vmem banks, span {:?} needs {}",
+                vmems.len(),
+                span.stateful,
+                span.banks()
+            )));
+        }
+        let (c0, h0, w0) = self.layers[lo].in_shape;
         if frame.shape() != (c0, h0, w0) {
             return Err(Error::shape(format!(
-                "frame shape {:?} != network input {:?}",
+                "frame shape {:?} != layer {lo} input {:?}",
                 frame.shape(),
                 (c0, h0, w0)
             )));
@@ -107,7 +226,7 @@ impl Network {
         let mut telemetry = StepTelemetry::default();
         let mut spikes = frame.clone();
         let mut si = 0;
-        for layer in &self.layers {
+        for layer in &self.layers[lo..hi] {
             match layer.kind {
                 LayerKind::Pool => {
                     spikes = pool_step(layer, &spikes);
@@ -115,12 +234,12 @@ impl Network {
                 LayerKind::Conv | LayerKind::Fc => {
                     telemetry.layer_input_spikes.push(spikes.count_spikes());
                     telemetry.layer_input_cells.push(spikes.len() as u64);
-                    spikes = stateful_step(layer, &spikes, &mut state.vmems[si], vb)?;
+                    spikes = stateful_step(layer, &spikes, &mut vmems[si], vb)?;
                     si += 1;
                 }
             }
         }
-        Ok(telemetry)
+        Ok((spikes, telemetry))
     }
 
     /// Run a full clip (frames indexed by timestep). Returns per-step
@@ -495,6 +614,46 @@ pub fn demo_serving_network(timesteps: usize) -> Result<Network> {
         .build()
 }
 
+/// Build the synthetic deep workload of the `pipeline` example and the
+/// `pipeline_latency` bench: four 3×3 conv stages (2→16, then three
+/// 16→16) on a 24×24 retina, a 3×3 maxpool, and an FC(4) readout at
+/// W4V7. Five stateful layers with three roughly comparable-cost
+/// conv stages in the middle give a staged layer-group pipeline
+/// (DESIGN.md §Pipeline) real headroom over sequential stepping, and
+/// the FC fan-in (16·8·8 = 1024) still maps onto the simulated core
+/// in Mode 2.
+pub fn demo_pipeline_network(timesteps: usize) -> Result<Network> {
+    let mut rng = crate::prop::SplitMix64::new(0xD1);
+    let mut rand_mat = |rows: usize, cols: usize| {
+        let mut m = Mat::zeros(rows, cols);
+        for f in 0..rows {
+            for k in 0..cols {
+                m.set(f, k, rng.below(15) as i32 - 7);
+            }
+        }
+        m
+    };
+    let w1 = rand_mat(2 * 9, 16);
+    let w2 = rand_mat(16 * 9, 16);
+    let w3 = rand_mat(16 * 9, 16);
+    let w4 = rand_mat(16 * 9, 16);
+    let w5 = rand_mat(16 * 8 * 8, 4);
+    let lif = |theta: i32| NeuronConfig {
+        theta,
+        leak: 1,
+        leaky: true,
+        reset: ResetMode::Soft,
+    };
+    NetworkBuilder::new("pipeline-demo", Precision::W4V7, timesteps, (2, 24, 24))
+        .conv3x3(16, w1, lif(5), false)?
+        .conv3x3(16, w2, lif(8), false)?
+        .conv3x3(16, w3, lif(8), false)?
+        .conv3x3(16, w4, lif(8), false)?
+        .pool(3, 3)
+        .fc(4, w5, NeuronConfig::default(), true)?
+        .build()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -634,6 +793,111 @@ mod tests {
                     .all(|&x| x >= p.vmem_min() && x <= p.vmem_max())
             })
         });
+    }
+
+    #[test]
+    fn full_span_covers_everything() {
+        let net = tiny_net(1);
+        let span = net.full_span();
+        assert_eq!(span.layers, (0, 2));
+        assert_eq!(span.stateful, (0, 2));
+        assert_eq!(span.banks(), 2);
+    }
+
+    #[test]
+    fn group_spans_attach_pool_layers_downstream() {
+        // conv | pool | fc split as [(0,1), (1,2)]: the pool belongs
+        // to the fc's group (it feeds the group's first CIM layer).
+        let w1 = mat_fill(9, 2, |f, k| (f + k) as i32 % 3 - 1);
+        let w2 = mat_fill(2, 3, |f, k| (f * 3 + k) as i32 % 5 - 2);
+        let net = NetworkBuilder::new("g", Precision::W4V7, 1, (1, 2, 2))
+            .conv3x3(2, w1, NeuronConfig::default(), false)
+            .unwrap()
+            .pool(2, 2)
+            .fc(3, w2, NeuronConfig::default(), true)
+            .unwrap()
+            .build()
+            .unwrap();
+        let spans = net.group_spans(&[(0, 1), (1, 2)]).unwrap();
+        assert_eq!(
+            spans,
+            vec![
+                GroupSpan {
+                    layers: (0, 1),
+                    stateful: (0, 1)
+                },
+                GroupSpan {
+                    layers: (1, 3),
+                    stateful: (1, 2)
+                },
+            ]
+        );
+        // single group = the full span
+        assert_eq!(net.group_spans(&[(0, 2)]).unwrap(), vec![net.full_span()]);
+    }
+
+    #[test]
+    fn group_spans_reject_bad_partitions() {
+        let net = tiny_net(1);
+        assert!(net.group_spans(&[]).is_err());
+        assert!(net.group_spans(&[(0, 1)]).is_err(), "must cover all layers");
+        assert!(net.group_spans(&[(0, 1), (1, 1), (1, 2)]).is_err(), "empty group");
+        assert!(net.group_spans(&[(0, 2), (1, 2)]).is_err(), "overlap");
+        assert!(net.group_spans(&[(1, 2)]).is_err(), "must start at 0");
+    }
+
+    #[test]
+    fn grouped_stepping_matches_monolithic_step() {
+        let net = tiny_net(2);
+        let spans = net.group_spans(&[(0, 1), (1, 2)]).unwrap();
+
+        let mut whole = net.init_state().unwrap();
+        let mut grouped = net.init_state().unwrap();
+        let mut rng = crate::prop::SplitMix64::new(77);
+        for _ in 0..3 {
+            let mut frame = SpikePlane::zeros(1, 2, 2);
+            for i in 0..4 {
+                if rng.chance(0.5) {
+                    frame.set(0, i / 2, i % 2, 1);
+                }
+            }
+            let tel = net.step(&frame, &mut whole).unwrap();
+
+            let (g0, g1) = grouped.vmems.split_at_mut(1);
+            let (mid, t0) = net.step_group(&spans[0], &frame, g0).unwrap();
+            let (_, t1) = net.step_group(&spans[1], &mid, g1).unwrap();
+            assert_eq!(
+                tel.layer_input_spikes,
+                [t0.layer_input_spikes, t1.layer_input_spikes].concat()
+            );
+            for (a, b) in whole.vmems.iter().zip(&grouped.vmems) {
+                assert_eq!(a.as_slice(), b.as_slice());
+            }
+        }
+    }
+
+    #[test]
+    fn step_group_validates_bank_count_and_shape() {
+        let net = tiny_net(1);
+        let mut state = net.init_state().unwrap();
+        let frame = SpikePlane::zeros(1, 2, 2);
+        let span = net.full_span();
+        // too few banks for the span
+        assert!(net.step_group(&span, &frame, &mut state.vmems[..1]).is_err());
+        // wrong input shape for the second group
+        let spans = net.group_spans(&[(0, 1), (1, 2)]).unwrap();
+        assert!(net
+            .step_group(&spans[1], &frame, &mut state.vmems[1..])
+            .is_err());
+    }
+
+    #[test]
+    fn demo_pipeline_network_shape() {
+        let net = demo_pipeline_network(4).unwrap();
+        assert_eq!(net.stateful_layers().count(), 5);
+        assert_eq!(net.out_shape().unwrap(), (1, 4));
+        // every layer maps onto the simulated core (Mode 2 cap)
+        assert!(net.stateful_layers().all(|l| l.fan_in() <= 1152));
     }
 
     #[test]

@@ -113,6 +113,7 @@ fn server_roundtrip_preserves_frames() {
         timesteps: 4,
         bin_us: 1000,
         queue_depth: 1,
+        ..Default::default()
     });
     let mut engine = Capture(Vec::new());
     server.serve(vec![events], &mut engine).unwrap();
