@@ -1,0 +1,141 @@
+//! Distributed shard serving, end to end (DESIGN.md §Distributed).
+//!
+//! ```text
+//! # self-hosted loopback constellation (no sockets):
+//! cargo run --release --example distributed
+//!
+//! # against real shard processes (the CI two-process smoke):
+//! cargo run --release -- shard --listen 127.0.0.1:7401 --sessions 1 &
+//! cargo run --release -- shard --listen 127.0.0.1:7402 --sessions 1 &
+//! cargo run --release --example distributed -- --connect 127.0.0.1:7401,127.0.0.1:7402
+//! ```
+//!
+//! Either way the example acts as the coordinator: it builds the
+//! pipeline-demo workload, runs the same clips through the sequential
+//! reference executor and the distributed engine, **asserts the
+//! outputs and Vmems are bit-identical** (a non-zero exit means the
+//! wire path diverged — this is the CI smoke's oracle), and prints the
+//! shard topology and per-hop wire metrics.
+
+use std::time::{Duration, Instant};
+
+use spidr::coordinator::{Engine, ReferenceEngine};
+use spidr::net::{DistributedConfig, DistributedEngine, TcpTransport, Transport};
+use spidr::prop::SplitMix64;
+use spidr::snn::network::{demo_pipeline_network, Network};
+use spidr::snn::spikes::SpikePlane;
+
+const TIMESTEPS: usize = 12;
+
+/// Random clip of binned frames for the workload.
+fn random_clip(net: &Network, seed: u64) -> Vec<SpikePlane> {
+    let (c, h, w) = net.layers[0].in_shape;
+    let mut rng = SplitMix64::new(seed);
+    (0..TIMESTEPS)
+        .map(|_| {
+            let mut p = SpikePlane::zeros(c, h, w);
+            for i in 0..p.len() {
+                if rng.chance(0.2) {
+                    p.as_mut_slice()[i] = 1;
+                }
+            }
+            p
+        })
+        .collect()
+}
+
+/// Connect with retries: the CI smoke starts the shard processes in
+/// the background, so the listeners may lag this coordinator.
+fn connect_retry(addr: &str) -> spidr::Result<TcpTransport> {
+    let mut last = None;
+    for _ in 0..40 {
+        match TcpTransport::connect(addr) {
+            Ok(t) => return Ok(t),
+            Err(e) => last = Some(e),
+        }
+        std::thread::sleep(Duration::from_millis(250));
+    }
+    Err(last.unwrap())
+}
+
+fn print_hops(engine: &DistributedEngine) {
+    let net = engine.network();
+    for sm in engine.stage_metrics() {
+        let layers: Vec<String> = net.layers[sm.layers.0..sm.layers.1]
+            .iter()
+            .map(|l| l.describe())
+            .collect();
+        println!(
+            "  shard {}: [{}] {} frames, wire busy {:?}, stall in/out {:?}/{:?}",
+            sm.stage,
+            layers.join(" → "),
+            sm.steps,
+            sm.busy,
+            sm.stall_in,
+            sm.stall_out,
+        );
+    }
+}
+
+fn main() -> spidr::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let connect = args
+        .iter()
+        .position(|a| a == "--connect")
+        .and_then(|i| args.get(i + 1).cloned());
+
+    let net = demo_pipeline_network(TIMESTEPS)?;
+    let clips: Vec<Vec<SpikePlane>> = (0..4).map(|i| random_clip(&net, 40 + i)).collect();
+
+    // Oracle: the sequential reference executor on the same clips.
+    let mut reference = ReferenceEngine::new(net.clone())?;
+    let mut want = Vec::new();
+    for clip in &clips {
+        want.push(reference.infer(clip)?);
+    }
+
+    let mut engine = match &connect {
+        // Real shard processes over TCP: one link per address, in
+        // layer-group order.
+        Some(addrs) => {
+            let mut links: Vec<Box<dyn Transport>> = Vec::new();
+            for addr in addrs.split(',') {
+                links.push(Box::new(connect_retry(addr)?));
+            }
+            println!("coordinator: chaining {} TCP shard(s): {addrs}", links.len());
+            DistributedEngine::connect(net.clone(), links, 2)?
+        }
+        // Self-hosted loopback constellation: the same protocol,
+        // windowing and reassembly with no sockets.
+        None => {
+            println!("coordinator: self-hosting a 3-shard loopback constellation");
+            DistributedEngine::loopback(net.clone(), &DistributedConfig::with_shards(3))?
+        }
+    };
+    println!("layer-group placement: {:?}", engine.groups());
+
+    let t0 = Instant::now();
+    for (i, clip) in clips.iter().enumerate() {
+        let got = engine.infer(clip)?;
+        assert_eq!(
+            got, want[i],
+            "distributed output diverged from the reference on clip {i}"
+        );
+    }
+    let wall = t0.elapsed();
+
+    // The reassembled Vmems must match the reference trajectory too.
+    let mut state = net.init_state()?;
+    net.run(clips.last().unwrap(), &mut state)?;
+    for (a, b) in state.vmems.iter().zip(engine.last_vmems()) {
+        assert_eq!(a.as_slice(), b.as_slice(), "reassembled Vmems diverged");
+    }
+
+    println!(
+        "{} clips × {TIMESTEPS} steps over the wire in {wall:?} — outputs, Vmems and \
+         telemetry bit-identical to the reference executor: ok",
+        clips.len(),
+    );
+    print_hops(&engine);
+    Ok(())
+}

@@ -97,10 +97,11 @@ fn main() -> spidr::Result<()> {
         bin_us: 1000,
         queue_depth: 4,
         pipeline: Some(PipelineConfig::with_stages(2)),
+        ..Default::default()
     };
     let server = InferenceServer::new(cfg);
     let requests: Vec<Vec<Event>> = (0..12).map(|i| burst(900 + i)).collect();
-    let mut engine = FunctionalEngine::from_config(net, cfg.pipeline)?;
+    let mut engine = FunctionalEngine::from_config(net, cfg.pipeline, cfg.distributed)?;
     let (responses, mut metrics) = server.serve(requests, &mut engine)?;
     metrics.stages = engine.stage_metrics().to_vec();
     println!(

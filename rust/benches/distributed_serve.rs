@@ -1,0 +1,94 @@
+//! Distributed-serving latency bench: what the wire costs
+//! (DESIGN.md §Distributed).
+//!
+//! Series (`DATA` lines + JSONL rows appended to
+//! `BENCH_distributed.json`):
+//!
+//! * `clip_latency_local_us`    — `ReferenceEngine` single-clip
+//!   latency (no wire), the baseline; x = 1.
+//! * `clip_latency_loopback_us` — `DistributedEngine` over in-process
+//!   loopback byte pipes vs shard count (codec + windowing +
+//!   reassembly, no sockets).
+//! * `clip_latency_tcp_us`      — the same constellation over real
+//!   localhost TCP sockets vs shard count (the acceptance series:
+//!   loopback-vs-TCP separates protocol cost from socket cost).
+//! * `distributed_overhead`     — TCP / local latency ratio vs shard
+//!   count (how much the wire costs on a workload this small; deeper
+//!   groups amortize it).
+//!
+//! Outputs are asserted bit-identical to the reference on every
+//! topology — this bench doubles as an end-to-end equivalence smoke
+//! over both transports.
+
+mod common;
+
+use spidr::coordinator::{Engine, ReferenceEngine};
+use spidr::net::{DistributedConfig, DistributedEngine, ShardHost, TcpTransport, Transport};
+use spidr::snn::network::demo_pipeline_network;
+use spidr::snn::spikes::SpikePlane;
+
+const TIMESTEPS: usize = 12;
+const REPS: usize = 5;
+
+/// Best-of-N single-clip latency in microseconds.
+fn best_latency_us<E: Engine>(engine: &mut E, clip: &[SpikePlane]) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..REPS {
+        let (_, secs) = common::timed(|| engine.infer(clip).unwrap());
+        best = best.min(secs * 1e6);
+    }
+    best
+}
+
+fn main() {
+    common::header(
+        "distributed",
+        "distributed shard serving: loopback vs TCP clip latency",
+    );
+    let net = demo_pipeline_network(TIMESTEPS).expect("demo workload");
+    let clip = common::random_clip(2, 24, 24, TIMESTEPS, 0.2, 42);
+
+    let mut local = ReferenceEngine::new(net.clone()).expect("reference engine");
+    let want = local.infer(&clip).expect("reference clip");
+    let local_us = best_latency_us(&mut local, &clip);
+    println!("local reference: {local_us:.0} us/clip ({TIMESTEPS} steps, 5 stateful layers)");
+    common::emit("clip_latency_local_us", 1.0, local_us);
+
+    for shards in [2usize, 3] {
+        // Loopback: the whole wire path, no sockets.
+        let cfg = DistributedConfig::with_shards(shards);
+        let mut loopback =
+            DistributedEngine::loopback(net.clone(), &cfg).expect("loopback constellation");
+        let got = loopback.infer(&clip).expect("loopback clip");
+        assert_eq!(got, want, "loopback output diverged at {shards} shards");
+        let loopback_us = best_latency_us(&mut loopback, &clip);
+        common::emit("clip_latency_loopback_us", shards as f64, loopback_us);
+
+        // TCP: the same shard hosts behind real localhost sockets.
+        let mut links: Vec<Box<dyn Transport>> = Vec::new();
+        for _ in 0..shards {
+            let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind");
+            let addr = listener.local_addr().expect("addr");
+            let shard_net = net.clone();
+            std::thread::spawn(move || {
+                let (stream, _) = listener.accept().expect("accept");
+                let mut link = TcpTransport::from_stream(stream);
+                ShardHost::new(shard_net).serve(&mut link).expect("shard session");
+            });
+            links.push(Box::new(TcpTransport::connect(addr).expect("connect")));
+        }
+        let mut tcp = DistributedEngine::connect(net.clone(), links, cfg.window)
+            .expect("tcp constellation");
+        let got = tcp.infer(&clip).expect("tcp clip");
+        assert_eq!(got, want, "TCP output diverged at {shards} shards");
+        let tcp_us = best_latency_us(&mut tcp, &clip);
+
+        println!(
+            "{shards} shards: loopback {loopback_us:.0} us/clip, tcp {tcp_us:.0} us/clip \
+             ({:.2}x local)",
+            tcp_us / local_us
+        );
+        common::emit("clip_latency_tcp_us", shards as f64, tcp_us);
+        common::emit("distributed_overhead", shards as f64, tcp_us / local_us);
+    }
+}

@@ -70,8 +70,9 @@ impl StageMetrics {
 
 /// Per-worker counters from one pool run (DESIGN.md §Serve): how many
 /// clips each worker served, how its wall time split between busy and
-/// idle, how much work it stole from peers, and how deep its bounded
-/// inbox ever got.
+/// idle, how much work it stole from peers, how deep its bounded
+/// inbox ever got, and whether dynamic sizing retired it before the
+/// stream closed.
 #[derive(Debug, Clone, Default)]
 pub struct WorkerMetrics {
     /// Worker id (index into the pool).
@@ -86,6 +87,9 @@ pub struct WorkerMetrics {
     pub idle: Duration,
     /// Queue-depth high-water mark of this worker's bounded inbox.
     pub inbox_high_water: usize,
+    /// Dynamic sizing retired this worker over a drained queue
+    /// (`PoolConfig::sizing`; always `false` for fixed pools).
+    pub retired: bool,
 }
 
 impl WorkerMetrics {

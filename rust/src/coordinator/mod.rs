@@ -13,11 +13,16 @@
 //!                           inboxes      (1 core each)
 //! ```
 //!
-//! Inside a worker, a clip runs on one of three engines: the
-//! sequential functional reference, the cycle-level simulator, or the
+//! Inside a worker, a clip runs on one of four engines: the
+//! sequential functional reference, the cycle-level simulator, the
 //! timestep-staged layer-group pipeline ([`pipeline`], DESIGN.md
 //! §Pipeline) — stage `g` steps timestep `t` while stage `g−1` steps
-//! `t+1`, bounded spike-frame channels handshaking between them.
+//! `t+1`, bounded spike-frame channels handshaking between them — or
+//! the distributed shard engine (`crate::net`, DESIGN.md
+//! §Distributed), the same staging chained across processes/hosts
+//! over a binary wire protocol. Under `PoolConfig::sizing`, the pool
+//! itself grows and shrinks with the load between a min/max worker
+//! count.
 
 pub mod compiler;
 pub mod mapper;

@@ -35,6 +35,7 @@ use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
+use crate::net::coordinator::{DistributedConfig, DistributedEngine};
 use crate::snn::network::{GroupSpan, Network, NetworkState, StepTelemetry};
 use crate::snn::spikes::SpikePlane;
 use crate::snn::tensor::Mat;
@@ -355,23 +356,45 @@ impl Engine for PipelinedEngine {
 
 /// The functional engine a server/pool config selects: sequential
 /// reference stepping by default, the staged pipeline when
-/// `ServerConfig::pipeline` / `PoolConfig::pipeline` is set. Both
-/// variants emit the final accumulator bank, so outputs are
+/// `ServerConfig::pipeline` / `PoolConfig::pipeline` is set, the
+/// distributed loopback constellation when
+/// `ServerConfig::distributed` / `PoolConfig::distributed` is set.
+/// Every variant emits the final accumulator bank, so outputs are
 /// bit-comparable across selections (and across pool workers).
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub enum FunctionalEngine {
     /// Sequential whole-network stepping (`Network::step`).
     Reference(ReferenceEngine),
     /// Timestep-pipelined layer-group stepping.
     Pipelined(PipelinedEngine),
+    /// Layer groups on self-hosted shard threads behind the wire
+    /// protocol (`net`, DESIGN.md §Distributed).
+    Distributed(DistributedEngine),
 }
 
 impl FunctionalEngine {
-    /// Build the engine a config selects (`None` → reference).
-    pub fn from_config(network: Network, pipeline: Option<PipelineConfig>) -> Result<Self> {
-        Ok(match pipeline {
-            None => FunctionalEngine::Reference(ReferenceEngine::new(network)?),
-            Some(cfg) => FunctionalEngine::Pipelined(PipelinedEngine::new(network, cfg)?),
+    /// Build the engine a config selects (`None`/`None` → reference).
+    /// Selecting both the pipeline and the distributed engine at once
+    /// is a configuration error — they are alternative executors over
+    /// the same layer-group plan.
+    pub fn from_config(
+        network: Network,
+        pipeline: Option<PipelineConfig>,
+        distributed: Option<DistributedConfig>,
+    ) -> Result<Self> {
+        Ok(match (pipeline, distributed) {
+            (Some(_), Some(_)) => {
+                return Err(Error::config(
+                    "select either the pipelined or the distributed engine, not both",
+                ));
+            }
+            (None, None) => FunctionalEngine::Reference(ReferenceEngine::new(network)?),
+            (Some(cfg), None) => {
+                FunctionalEngine::Pipelined(PipelinedEngine::new(network, cfg)?)
+            }
+            (None, Some(cfg)) => {
+                FunctionalEngine::Distributed(DistributedEngine::loopback(network, &cfg)?)
+            }
         })
     }
 
@@ -381,6 +404,7 @@ impl FunctionalEngine {
         match self {
             FunctionalEngine::Reference(_) => &[],
             FunctionalEngine::Pipelined(e) => e.stage_metrics(),
+            FunctionalEngine::Distributed(e) => e.stage_metrics(),
         }
     }
 }
@@ -392,6 +416,7 @@ impl Engine for FunctionalEngine {
         match self {
             FunctionalEngine::Reference(e) => e.infer(clip),
             FunctionalEngine::Pipelined(e) => e.infer(clip),
+            FunctionalEngine::Distributed(e) => e.infer(clip),
         }
     }
 }
@@ -615,14 +640,38 @@ mod tests {
     fn from_config_selects_the_engine() {
         let net = demo_net();
         let clip = demo_clip(33, 4);
-        let mut r = FunctionalEngine::from_config(net.clone(), None).unwrap();
+        let mut r = FunctionalEngine::from_config(net.clone(), None, None).unwrap();
         assert!(matches!(&r, FunctionalEngine::Reference(_)));
         assert!(r.stage_metrics().is_empty());
-        let mut p =
-            FunctionalEngine::from_config(net, Some(PipelineConfig::with_stages(2))).unwrap();
+        let want = r.infer(&clip).unwrap();
+
+        let mut p = FunctionalEngine::from_config(
+            net.clone(),
+            Some(PipelineConfig::with_stages(2)),
+            None,
+        )
+        .unwrap();
         assert!(matches!(&p, FunctionalEngine::Pipelined(_)));
-        assert_eq!(r.infer(&clip).unwrap(), p.infer(&clip).unwrap());
+        assert_eq!(p.infer(&clip).unwrap(), want);
         assert_eq!(p.stage_metrics().len(), 2);
+
+        let mut d = FunctionalEngine::from_config(
+            net.clone(),
+            None,
+            Some(DistributedConfig::with_shards(2)),
+        )
+        .unwrap();
+        assert!(matches!(&d, FunctionalEngine::Distributed(_)));
+        assert_eq!(d.infer(&clip).unwrap(), want);
+        assert_eq!(d.stage_metrics().len(), 2);
+
+        // the two staged executors are alternatives, not composable
+        assert!(FunctionalEngine::from_config(
+            net,
+            Some(PipelineConfig::default()),
+            Some(DistributedConfig::default()),
+        )
+        .is_err());
     }
 
     /// Satellite: pipelined execution is bit-identical to

@@ -28,6 +28,7 @@ use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
+use crate::net::coordinator::DistributedConfig;
 use crate::snn::spikes::SpikePlane;
 
 use super::metrics::WorkerMetrics;
@@ -45,11 +46,46 @@ pub enum StealPolicy {
     Steal,
 }
 
+/// Dynamic pool sizing (ROADMAP "dynamic pool sizing"): let the pool
+/// breathe with the load instead of pinning the worker count.
+///
+/// The dispatcher **grows** the pool — starting one more worker, up to
+/// `max_workers` — at the exact moment it would otherwise block: every
+/// active inbox full (the same queue-pressure signal
+/// `WorkerMetrics::inbox_high_water` records). A worker **shrinks**
+/// the pool by retiring when it has waited `shrink_idle` with every
+/// inbox empty and more than `min_workers` workers alive — the
+/// busy/idle split that `WorkerMetrics` tracks, applied online.
+/// Retired workers report [`WorkerMetrics::retired`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolSizing {
+    /// Floor: the pool never shrinks below this many workers
+    /// (clamped to ≥ 1). This is also the number started up front.
+    pub min_workers: usize,
+    /// Ceiling: the pool never grows beyond this many workers
+    /// (clamped to ≥ `min_workers`).
+    pub max_workers: usize,
+    /// How long a worker must sit idle, with every inbox drained,
+    /// before it retires.
+    pub shrink_idle: Duration,
+}
+
+impl Default for PoolSizing {
+    fn default() -> Self {
+        PoolSizing {
+            min_workers: 1,
+            max_workers: 4,
+            shrink_idle: Duration::from_millis(100),
+        }
+    }
+}
+
 /// Serving-pool configuration, sibling of
 /// [`ServerConfig`](super::server::ServerConfig).
 #[derive(Debug, Clone, Copy)]
 pub struct PoolConfig {
-    /// Worker threads, each owning one engine instance.
+    /// Worker threads, each owning one engine instance (the fixed
+    /// count; superseded by `sizing` when that is set).
     pub workers: usize,
     /// Bounded inbox depth per worker (backpressure window).
     pub inbox_depth: usize,
@@ -61,6 +97,14 @@ pub struct PoolConfig {
     /// worker then runs its clips through a staged layer-group
     /// pipeline of its own (DESIGN.md §Pipeline).
     pub pipeline: Option<PipelineConfig>,
+    /// Select the distributed shard engine (`Some`) when worker
+    /// engines are built from this config — each worker then drives
+    /// its own loopback shard constellation (`net`, DESIGN.md
+    /// §Distributed). Mutually exclusive with `pipeline`.
+    pub distributed: Option<DistributedConfig>,
+    /// Dynamic sizing between a min/max worker count (`None` keeps the
+    /// fixed `workers` count).
+    pub sizing: Option<PoolSizing>,
 }
 
 impl Default for PoolConfig {
@@ -70,6 +114,8 @@ impl Default for PoolConfig {
             inbox_depth: 2,
             steal: StealPolicy::Steal,
             pipeline: None,
+            distributed: None,
+            sizing: None,
         }
     }
 }
@@ -86,8 +132,14 @@ impl PoolConfig {
 
     /// Maximum clips resident in the pool at once (inboxes plus one
     /// in-flight clip per worker) — the pool's backpressure bound.
+    /// Under dynamic `sizing` the worker count is `max_workers`, the
+    /// most the pool can grow to.
     pub fn capacity(&self) -> usize {
-        self.workers.max(1) * (self.inbox_depth.max(1) + 1)
+        let workers = match self.sizing {
+            Some(s) => s.max_workers.max(s.min_workers).max(1),
+            None => self.workers.max(1),
+        };
+        workers * (self.inbox_depth.max(1) + 1)
     }
 }
 
@@ -123,20 +175,52 @@ pub struct CompletedClip<O> {
 pub struct PoolRun<O> {
     /// Completed clips, reordered into arrival-sequence order.
     pub clips: Vec<CompletedClip<O>>,
-    /// Per-worker counters, indexed by worker id.
+    /// Per-worker counters, one entry per worker thread ever started
+    /// (in spawn order). Under dynamic sizing a retired worker's slot
+    /// id can be revived by a later grow, so `worker` ids may repeat
+    /// across entries; `inbox_high_water` is tracked per slot.
     pub workers: Vec<WorkerMetrics>,
 }
 
 /// Everything a worker sends to the emission stage.
 type WorkerResult<O> = std::result::Result<CompletedClip<O>, Error>;
 
+/// What the dispatcher got back for one job.
+enum Dispatch {
+    /// Placed on an inbox.
+    Placed,
+    /// Every active inbox is full and the pool may still grow: the
+    /// caller should start a worker and re-dispatch the returned job.
+    Grow(ClipJob),
+    /// Every worker exited or a worker reported an error (fail fast —
+    /// don't grind the rest of the stream just to discard it).
+    Closed,
+}
+
+/// What a worker's wait for work produced.
+enum Fetched {
+    /// A job; the flag marks a steal.
+    Job(ClipJob, bool),
+    /// The pool closed and drained; exit normally.
+    Closed,
+    /// The worker retired under dynamic sizing (already deregistered;
+    /// carries its inbox high-water mark).
+    Retired(usize),
+}
+
 /// Shared dispatch state: per-worker bounded inboxes guarded by one
 /// mutex, with condvars for "work arrived" and "a slot freed".
+/// Inboxes are appended by [`SharedQueue::start_worker`], so the pool
+/// can grow mid-stream under dynamic sizing.
 struct PoolState {
-    /// Per-worker inboxes, each bounded by `inbox_depth`.
+    /// Per-worker inboxes, each bounded by `inbox_depth`; one per
+    /// worker ever started.
     inboxes: Vec<VecDeque<ClipJob>>,
     /// Queue-depth high-water mark per inbox.
     high_water: Vec<usize>,
+    /// Workers that retired under dynamic sizing (their inboxes are
+    /// empty and no longer receive dispatches).
+    retired: Vec<bool>,
     /// No more jobs will be dispatched; workers drain and exit.
     closed: bool,
     /// A worker reported an error: stop admitting new jobs (fail
@@ -157,14 +241,15 @@ struct SharedQueue {
 }
 
 impl SharedQueue {
-    fn new(workers: usize) -> Self {
+    fn new() -> Self {
         SharedQueue {
             state: Mutex::new(PoolState {
-                inboxes: (0..workers).map(|_| VecDeque::new()).collect(),
-                high_water: vec![0; workers],
+                inboxes: Vec::new(),
+                high_water: Vec::new(),
+                retired: Vec::new(),
                 closed: false,
                 aborted: false,
-                alive: workers,
+                alive: 0,
                 rr: 0,
             }),
             work: Condvar::new(),
@@ -172,21 +257,45 @@ impl SharedQueue {
         }
     }
 
-    /// Enqueue a job onto the least-loaded inbox with a free slot,
-    /// blocking while every inbox is full (this is the backpressure
-    /// edge). Returns `false` once every worker has exited or a
-    /// worker reported an error (fail fast — don't grind the rest of
-    /// the stream just to discard it).
-    fn dispatch(&self, depth: usize, job: ClipJob) -> bool {
+    /// Register one more worker and return its slot id (the caller
+    /// spawns the thread). A slot freed by an earlier retirement is
+    /// reused — its thread has already exited and its inbox is empty
+    /// by the retire invariant — so grow/shrink churn on a long stream
+    /// keeps pool state proportional to `max_workers`, not to the
+    /// number of resizes.
+    fn start_worker(&self) -> usize {
+        let mut st = self.state.lock().unwrap();
+        st.alive += 1;
+        if let Some(slot) = st.retired.iter().position(|&r| r) {
+            st.retired[slot] = false;
+            debug_assert!(st.inboxes[slot].is_empty());
+            return slot;
+        }
+        st.inboxes.push(VecDeque::new());
+        st.high_water.push(0);
+        st.retired.push(false);
+        st.inboxes.len() - 1
+    }
+
+    /// Enqueue a job onto the least-loaded active inbox with a free
+    /// slot, blocking while every inbox is full (this is the
+    /// backpressure edge). When every active inbox is full and fewer
+    /// than `grow_limit` workers are alive, the job comes back as
+    /// [`Dispatch::Grow`] instead — the queue-pressure signal dynamic
+    /// sizing grows on.
+    fn dispatch(&self, depth: usize, job: ClipJob, grow_limit: usize) -> Dispatch {
         let mut st = self.state.lock().unwrap();
         loop {
             if st.alive == 0 || st.aborted {
-                return false;
+                return Dispatch::Closed;
             }
             let n = st.inboxes.len();
             let mut best: Option<usize> = None;
             for off in 0..n {
                 let i = (st.rr + off) % n;
+                if st.retired[i] {
+                    continue;
+                }
                 let len = st.inboxes[i].len();
                 if len < depth {
                     let better = match best {
@@ -207,8 +316,9 @@ impl SharedQueue {
                     st.rr = (i + 1) % n;
                     drop(st);
                     self.work.notify_all();
-                    return true;
+                    return Dispatch::Placed;
                 }
+                None if st.alive < grow_limit => return Dispatch::Grow(job),
                 None => st = self.space.wait(st).unwrap(),
             }
         }
@@ -216,15 +326,17 @@ impl SharedQueue {
 
     /// Next job for worker `me`: own inbox first, then (under
     /// [`StealPolicy::Steal`]) the back of the most-loaded peer inbox.
-    /// Blocks while the pool is open and empty; returns `None` once it
-    /// is closed and drained. The second tuple field marks a steal.
-    fn next(&self, me: usize, steal: StealPolicy) -> Option<(ClipJob, bool)> {
+    /// Blocks while the pool is open and empty. With `shrink` set to
+    /// `(idle, min_workers)`, a worker whose wait times out while
+    /// every inbox is drained and more than `min_workers` are alive
+    /// retires instead of waiting on (dynamic sizing's shrink edge).
+    fn next(&self, me: usize, steal: StealPolicy, shrink: Option<(Duration, usize)>) -> Fetched {
         let mut st = self.state.lock().unwrap();
         loop {
             if let Some(job) = st.inboxes[me].pop_front() {
                 drop(st);
                 self.space.notify_all();
-                return Some((job, false));
+                return Fetched::Job(job, false);
             }
             if steal == StealPolicy::Steal {
                 let n = st.inboxes.len();
@@ -244,13 +356,34 @@ impl SharedQueue {
                     let job = st.inboxes[v].pop_back().unwrap();
                     drop(st);
                     self.space.notify_all();
-                    return Some((job, true));
+                    return Fetched::Job(job, true);
                 }
             }
             if st.closed {
-                return None;
+                return Fetched::Closed;
             }
-            st = self.work.wait(st).unwrap();
+            match shrink {
+                None => st = self.work.wait(st).unwrap(),
+                Some((idle, min_workers)) => {
+                    let (next_st, timeout) = self.work.wait_timeout(st, idle).unwrap();
+                    st = next_st;
+                    if timeout.timed_out()
+                        && !st.closed
+                        && st.alive > min_workers
+                        && st.inboxes.iter().all(|q| q.is_empty())
+                    {
+                        st.retired[me] = true;
+                        st.alive -= 1;
+                        let hw = st.high_water[me];
+                        drop(st);
+                        // Wake the dispatcher (it must re-check
+                        // `alive`) and peers.
+                        self.space.notify_all();
+                        self.work.notify_all();
+                        return Fetched::Retired(hw);
+                    }
+                }
+            }
         }
     }
 
@@ -285,13 +418,15 @@ impl SharedQueue {
 }
 
 /// Body of one worker thread: build the engine, serve jobs until the
-/// queue closes, and account busy/idle/steal counters.
+/// queue closes (or the worker retires under dynamic sizing), and
+/// account busy/idle/steal counters.
 fn worker_loop<E, F>(
     me: usize,
     queue: &SharedQueue,
     factory: &F,
     results: Sender<WorkerResult<E::Output>>,
     steal: StealPolicy,
+    shrink: Option<(Duration, usize)>,
 ) -> WorkerMetrics
 where
     E: Engine,
@@ -332,9 +467,21 @@ where
     };
     loop {
         let wait0 = Instant::now();
-        let Some((job, stolen)) = queue.next(me, steal) else {
-            wm.idle += wait0.elapsed(); // final wait-for-close counts too
-            break;
+        let (job, stolen) = match queue.next(me, steal, shrink) {
+            Fetched::Job(job, stolen) => (job, stolen),
+            Fetched::Closed => {
+                wm.idle += wait0.elapsed(); // final wait-for-close counts too
+                break;
+            }
+            Fetched::Retired(high_water) => {
+                // `next` already deregistered this worker; skip the
+                // drop-guard's `worker_exit`.
+                wm.idle += wait0.elapsed();
+                wm.retired = true;
+                wm.inbox_high_water = high_water;
+                guard.armed = false;
+                return wm;
+            }
         };
         wm.idle += wait0.elapsed();
         if stolen {
@@ -385,6 +532,14 @@ where
 /// [`StealPolicy::Steal`]. A panicking engine propagates its panic
 /// out of `run_pool` (worker registration is unwound by a drop
 /// guard, so the dispatcher cannot hang on a full pool).
+///
+/// With [`PoolConfig::sizing`] set, the pool starts at `min_workers`
+/// and breathes with the load: the dispatcher starts another worker
+/// (up to `max_workers`, reusing slots freed by retirement) whenever
+/// every inbox is full, and a worker that has idled `shrink_idle`
+/// over a drained queue retires down to `min_workers`.
+/// [`PoolRun::workers`] reports one entry per worker thread ever
+/// started, retirees included.
 pub fn run_pool<E, F>(
     cfg: &PoolConfig,
     jobs: Receiver<ClipJob>,
@@ -394,24 +549,31 @@ where
     E: Engine,
     F: Fn(usize) -> Result<E> + Sync,
 {
-    let workers = cfg.workers.max(1);
     let depth = cfg.inbox_depth.max(1);
     let steal = cfg.steal;
-    let queue = SharedQueue::new(workers);
+    // Fixed pools start all workers up front and never grow or shrink
+    // (a grow limit of 0 disables growth; no shrink timeout).
+    let (initial, grow_limit, shrink) = match cfg.sizing {
+        None => (cfg.workers.max(1), 0, None),
+        Some(s) => {
+            let min = s.min_workers.max(1);
+            let max = s.max_workers.max(min);
+            (min, max, Some((s.shrink_idle, min)))
+        }
+    };
+    let queue = SharedQueue::new();
     let (rtx, rrx) = channel::<WorkerResult<E::Output>>();
 
     std::thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(workers);
-        for wi in 0..workers {
+        let mut handles = Vec::with_capacity(initial);
+        for _ in 0..initial {
+            let wi = queue.start_worker();
             let queue = &queue;
             let rtx = rtx.clone();
-            handles.push(
-                scope.spawn(move || worker_loop::<E, F>(wi, queue, factory, rtx, steal)),
-            );
+            handles.push(scope.spawn(move || {
+                worker_loop::<E, F>(wi, queue, factory, rtx, steal, shrink)
+            }));
         }
-        // The emission stage owns the only non-worker receiver end;
-        // drop our sender so it terminates when the workers do.
-        drop(rtx);
 
         // Emission stage: sequence-number reorder buffer. Clips arrive
         // in completion order; they leave in arrival order.
@@ -447,15 +609,33 @@ where
         // Dispatch stage (the calling thread): bounded inboxes make
         // `dispatch` block when the pool saturates, which leaves jobs
         // unread in `jobs`, which blocks the bounded ingest channel —
-        // backpressure reaches the event source without drops.
-        for job in jobs.iter() {
-            if !queue.dispatch(depth, job) {
-                break; // every worker exited (errors already reported)
+        // backpressure reaches the event source without drops. Under
+        // dynamic sizing, saturation first grows the pool; only a
+        // full pool at `max_workers` blocks.
+        'dispatch: for job in jobs.iter() {
+            let mut job = job;
+            loop {
+                match queue.dispatch(depth, job, grow_limit) {
+                    Dispatch::Placed => continue 'dispatch,
+                    Dispatch::Closed => break 'dispatch,
+                    Dispatch::Grow(returned) => {
+                        job = returned;
+                        let wi = queue.start_worker();
+                        let queue = &queue;
+                        let rtx = rtx.clone();
+                        handles.push(scope.spawn(move || {
+                            worker_loop::<E, F>(wi, queue, factory, rtx, steal, shrink)
+                        }));
+                    }
+                }
             }
         }
         queue.close();
+        // The emission stage owns the only other receiver-facing end;
+        // drop our sender so it terminates when the workers do.
+        drop(rtx);
 
-        let mut wm = Vec::with_capacity(workers);
+        let mut wm = Vec::with_capacity(handles.len());
         for h in handles {
             wm.push(h.join().expect("pool worker panicked"));
         }
@@ -627,6 +807,93 @@ mod tests {
         assert_eq!(run.clips.len(), TOTAL as usize);
         assert_eq!(sent.load(Ordering::SeqCst), TOTAL as usize);
         assert!(run.clips.windows(2).all(|w| w[0].seq < w[1].seq));
+    }
+
+    /// Satellite: dynamic sizing. A bursty load against gated engines
+    /// forces the dispatcher to grow the pool to `max_workers` (with
+    /// every engine blocked, placing the 5th job is impossible at two
+    /// workers × depth 1 — growth is the only way the burst fits), and
+    /// a drained queue shrinks it back toward `min_workers` before the
+    /// final trickle job arrives.
+    #[test]
+    fn pool_grows_under_burst_and_shrinks_when_drained() {
+        let cfg = PoolConfig {
+            inbox_depth: 1,
+            steal: StealPolicy::Steal,
+            sizing: Some(PoolSizing {
+                min_workers: 1,
+                max_workers: 3,
+                shrink_idle: Duration::from_millis(25),
+            }),
+            ..PoolConfig::default()
+        };
+
+        struct GatedEngine(Arc<AtomicBool>);
+        impl Engine for GatedEngine {
+            type Output = u64;
+            fn infer(&mut self, clip: &[SpikePlane]) -> Result<u64> {
+                while !self.0.load(Ordering::SeqCst) {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Ok(clip.iter().map(|p| p.count_spikes()).sum())
+            }
+        }
+
+        let gate = Arc::new(AtomicBool::new(false));
+        // Rendezvous job channel: a send completes only when the
+        // dispatcher takes the job, so the whole burst being admitted
+        // while the gate is closed proves the pool grew.
+        let (tx, rx) = sync_channel::<ClipJob>(0);
+        let producer = {
+            let gate = Arc::clone(&gate);
+            std::thread::spawn(move || {
+                // Phase 1: a 6-job burst nobody can serve yet. At max
+                // capacity (3 workers × (1 inbox + 1 in-flight)) it
+                // fits exactly — but only after two growth steps.
+                for seq in 0..6 {
+                    tx.send(job(seq, 4)).unwrap();
+                }
+                gate.store(true, Ordering::SeqCst);
+                // Phase 2: the queue drains, then idles far beyond
+                // shrink_idle; surplus workers retire down to min.
+                std::thread::sleep(Duration::from_millis(400));
+                tx.send(job(6, 4)).unwrap();
+            })
+        };
+
+        let gate_f = Arc::clone(&gate);
+        let run = run_pool(&cfg, rx, &move |_| Ok(GatedEngine(Arc::clone(&gate_f)))).unwrap();
+        producer.join().unwrap();
+
+        assert_eq!(run.clips.len(), 7);
+        assert!(run.clips.windows(2).all(|w| w[0].seq < w[1].seq));
+        // the burst grew the pool from min (1) to max (3)
+        assert_eq!(run.workers.len(), 3, "{:?}", run.workers);
+        // the drained queue retired surplus workers, never below min
+        let retired = run.workers.iter().filter(|w| w.retired).count();
+        assert!(
+            (1..=2).contains(&retired),
+            "want 1–2 retirees, got {:?}",
+            run.workers
+        );
+        // nothing was lost across the resize
+        let served: u64 = run.workers.iter().map(|w| w.clips).sum();
+        assert_eq!(served, 7);
+    }
+
+    /// Without a sizing policy the pool is exactly as static as
+    /// before: all workers start up front, none retire.
+    #[test]
+    fn fixed_pool_never_resizes() {
+        let cfg = PoolConfig {
+            workers: 3,
+            inbox_depth: 1,
+            steal: StealPolicy::Steal,
+            ..PoolConfig::default()
+        };
+        let run = run_pool(&cfg, job_stream(9), &|_| Ok(CountEngine)).unwrap();
+        assert_eq!(run.workers.len(), 3);
+        assert!(run.workers.iter().all(|w| !w.retired));
     }
 
     #[test]

@@ -19,6 +19,7 @@ use std::time::{Duration, Instant};
 use crate::dvs::binning::bin_events;
 use crate::dvs::event::Event;
 use crate::error::{Error, Result};
+use crate::net::coordinator::DistributedConfig;
 use crate::snn::network::{Network, NetworkState};
 use crate::snn::spikes::SpikePlane;
 
@@ -43,6 +44,11 @@ pub struct ServerConfig {
     /// the sequential reference (`None`) when engines are built from
     /// this config (`FunctionalEngine::from_config`).
     pub pipeline: Option<PipelineConfig>,
+    /// Select the distributed shard engine (`Some`) — layer groups on
+    /// self-hosted shard threads behind the wire protocol (`net`,
+    /// DESIGN.md §Distributed) — when engines are built from this
+    /// config. Mutually exclusive with `pipeline`.
+    pub distributed: Option<DistributedConfig>,
 }
 
 impl Default for ServerConfig {
@@ -54,6 +60,7 @@ impl Default for ServerConfig {
             bin_us: 1000,
             queue_depth: 2,
             pipeline: None,
+            distributed: None,
         }
     }
 }
@@ -265,7 +272,7 @@ mod tests {
             timesteps: 4,
             bin_us: 1000,
             queue_depth: 2,
-            pipeline: None,
+            ..Default::default()
         }
     }
 
@@ -404,7 +411,8 @@ mod tests {
             channel_depth: 1,
         });
         let pserver = InferenceServer::new(cfg);
-        let mut piped = FunctionalEngine::from_config(net.clone(), pserver.cfg.pipeline).unwrap();
+        let mut piped =
+            FunctionalEngine::from_config(net.clone(), pserver.cfg.pipeline, None).unwrap();
         let (got, mut metrics) = pserver.serve(reqs.clone(), &mut piped).unwrap();
         metrics.stages = piped.stage_metrics().to_vec();
         assert_eq!(want.len(), got.len());
@@ -422,7 +430,59 @@ mod tests {
         };
         let (pooled, _) = pserver
             .serve_pool(reqs, &pool, |_| {
-                FunctionalEngine::from_config(net.clone(), pool.pipeline)
+                FunctionalEngine::from_config(net.clone(), pool.pipeline, None)
+            })
+            .unwrap();
+        for (a, b) in want.iter().zip(&pooled) {
+            assert_eq!(a.output, b.output, "pooled request {} diverged", a.id);
+        }
+    }
+
+    /// The fourth engine on the tier: selecting the distributed shard
+    /// constellation via `ServerConfig::distributed` /
+    /// `PoolConfig::distributed` yields bit-identical responses to the
+    /// sequential reference on both serve paths (DESIGN.md
+    /// §Distributed).
+    #[test]
+    fn distributed_engine_selected_by_config_is_bit_identical() {
+        use super::super::pipeline::FunctionalEngine;
+        use crate::net::coordinator::DistributedConfig;
+
+        let net = tiny_network();
+        let reqs: Vec<Vec<Event>> = (0..5).map(|i| burst(9 + i * 13)).collect();
+
+        // baseline: reference engine on the single-engine path
+        let server = InferenceServer::new(small_cfg());
+        let mut single = ReferenceEngine::new(net.clone()).unwrap();
+        let (want, _) = server.serve(reqs.clone(), &mut single).unwrap();
+
+        // distributed engine selected via ServerConfig
+        let mut cfg = small_cfg();
+        cfg.distributed = Some(DistributedConfig {
+            shards: 2,
+            window: 1,
+        });
+        let dserver = InferenceServer::new(cfg);
+        let mut dist =
+            FunctionalEngine::from_config(net.clone(), None, dserver.cfg.distributed).unwrap();
+        let (got, mut metrics) = dserver.serve(reqs.clone(), &mut dist).unwrap();
+        metrics.stages = dist.stage_metrics().to_vec();
+        assert_eq!(want.len(), got.len());
+        for (a, b) in want.iter().zip(&got) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.output, b.output, "request {} diverged", a.id);
+        }
+        assert_eq!(metrics.stages.len(), 2);
+
+        // distributed engines selected via PoolConfig: each pool
+        // worker runs its own shard constellation
+        let pool = PoolConfig {
+            distributed: cfg.distributed,
+            ..PoolConfig::with_workers(2)
+        };
+        let (pooled, _) = dserver
+            .serve_pool(reqs, &pool, |_| {
+                FunctionalEngine::from_config(net.clone(), None, pool.distributed)
             })
             .unwrap();
         for (a, b) in want.iter().zip(&pooled) {

@@ -26,6 +26,11 @@ pub enum Error {
     /// Shape or dimension mismatch between tensors.
     Shape(String),
 
+    /// Wire-protocol failures on the distributed shard path: malformed
+    /// or truncated frames, checksum mismatches, version skew, or a
+    /// peer violating the session protocol (see `net::wire`).
+    Protocol(String),
+
     /// I/O failures while loading artifacts or traces.
     Io(std::io::Error),
 }
@@ -38,6 +43,7 @@ impl fmt::Display for Error {
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Protocol(m) => write!(f, "protocol error: {m}"),
             // transparent, matching the previous `#[error(transparent)]`
             Error::Io(e) => write!(f, "{e}"),
         }
@@ -82,6 +88,11 @@ impl Error {
     pub fn shape(msg: impl Into<String>) -> Self {
         Error::Shape(msg.into())
     }
+
+    /// Shorthand constructor for wire-protocol errors.
+    pub fn protocol(msg: impl Into<String>) -> Self {
+        Error::Protocol(msg.into())
+    }
 }
 
 #[cfg(test)]
@@ -94,6 +105,7 @@ mod tests {
         assert_eq!(Error::mapping("x").to_string(), "mapping error: x");
         assert_eq!(Error::artifact("x").to_string(), "artifact error: x");
         assert_eq!(Error::shape("x").to_string(), "shape error: x");
+        assert_eq!(Error::protocol("x").to_string(), "protocol error: x");
         assert_eq!(Error::Runtime("x".into()).to_string(), "runtime error: x");
     }
 

@@ -28,6 +28,10 @@
 //! * [`coordinator`] — layer mapper, network compiler, multi-core
 //!   scheduler, streaming inference server and the sharded serving
 //!   pool (the L3 request path; DESIGN.md §Serve).
+//! * [`net`] — distributed shard serving: layer groups on remote
+//!   hosts behind a binary wire protocol, TCP and loopback transports,
+//!   the shard host and the distributed engine (DESIGN.md
+//!   §Distributed).
 //! * [`runtime`] — PJRT client that loads and executes the AOT HLO
 //!   artifacts (the golden model; Python never runs at request time).
 
@@ -38,6 +42,7 @@ pub mod coordinator;
 pub mod dvs;
 pub mod energy;
 pub mod error;
+pub mod net;
 pub mod prop;
 pub mod quant;
 pub mod runtime;

@@ -12,6 +12,11 @@
 //!                  run synthetic flow clips, report AEE + energy
 //! spidr map      [--task gesture|flow] [--wb 4] [--artifacts DIR]
 //!                  show the layer-by-layer core mapping
+//! spidr shard    [--listen HOST:PORT] [--workload pipeline-demo|serving-demo]
+//!                [--timesteps N] [--sessions N]
+//!                  host layer-group shards for a distributed
+//!                  coordinator (DESIGN.md §Distributed); serves
+//!                  sessions forever, or exactly N with --sessions
 //! ```
 
 use std::collections::HashMap;
@@ -22,11 +27,14 @@ use spidr::dvs::flow_scene::{average_endpoint_error, make_flow_scene, FlowSceneC
 use spidr::dvs::gesture::{make_gesture, GestureConfig, NUM_GESTURE_CLASSES};
 use spidr::energy::calibration::measure;
 use spidr::energy::model::Corner;
-use spidr::error::Result;
+use spidr::error::{Error, Result};
+use spidr::net::{ShardHost, TcpTransport};
 use spidr::quant::Precision;
 use spidr::runtime::{ArtifactStore, GoldenModel};
 use spidr::sim::SimConfig;
-use spidr::snn::network::{flow_network, gesture_network};
+use spidr::snn::network::{
+    demo_pipeline_network, demo_serving_network, flow_network, gesture_network,
+};
 use spidr::snn::WeightBundle;
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -105,6 +113,57 @@ fn cmd_map(flags: &HashMap<String, String>) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// Host layer-group shards: listen for coordinator sessions and serve
+/// each through a [`ShardHost`] over TCP. The workload is materialized
+/// locally by name (layer-stationary placement — weights never cross
+/// the wire); the coordinator's `LoadGroup` frame assigns which layer
+/// group this process owns.
+fn cmd_shard(flags: &HashMap<String, String>) -> Result<()> {
+    let listen = flags
+        .get("listen")
+        .cloned()
+        .unwrap_or_else(|| "127.0.0.1:7400".into());
+    let workload = flags
+        .get("workload")
+        .cloned()
+        .unwrap_or_else(|| "pipeline-demo".into());
+    let timesteps: usize = flag(flags, "timesteps", 12);
+    let sessions: u64 = flag(flags, "sessions", 0); // 0 = serve forever
+    let net = match workload.as_str() {
+        "pipeline-demo" => demo_pipeline_network(timesteps)?,
+        "serving-demo" => demo_serving_network(timesteps)?,
+        other => {
+            return Err(Error::config(format!(
+                "unknown shard workload '{other}' (pipeline-demo|serving-demo)"
+            )));
+        }
+    };
+    let listener = std::net::TcpListener::bind(&listen)?;
+    eprintln!(
+        "spidr-shard: hosting '{workload}' ({timesteps} steps) on {}",
+        listener.local_addr()?
+    );
+    let mut served = 0u64;
+    loop {
+        let (stream, peer) = listener.accept()?;
+        let mut link = TcpTransport::from_stream(stream);
+        let mut host = ShardHost::new(net.clone());
+        match host.serve(&mut link) {
+            Ok(report) => eprintln!(
+                "spidr-shard: session from {peer} done ({} clips, {} frames, span {:?})",
+                report.clips,
+                report.frames,
+                host.span()
+            ),
+            Err(e) => eprintln!("spidr-shard: session from {peer} failed: {e}"),
+        }
+        served += 1;
+        if sessions > 0 && served >= sessions {
+            return Ok(());
+        }
+    }
 }
 
 fn cmd_gesture(flags: &HashMap<String, String>) -> Result<()> {
@@ -224,11 +283,13 @@ fn main() -> ExitCode {
         "map" => cmd_map(&flags),
         "gesture" => cmd_gesture(&flags),
         "flow" => cmd_flow(&flags),
+        "shard" => cmd_shard(&flags),
         _ => {
             eprintln!(
-                "usage: spidr <chip|map|gesture|flow> [--wb 4|6|8] \
+                "usage: spidr <chip|map|gesture|flow|shard> [--wb 4|6|8] \
                  [--sparsity S] [--corner low|high] [--task T] \
-                 [--clips N] [--artifacts DIR]"
+                 [--clips N] [--artifacts DIR] [--listen HOST:PORT] \
+                 [--workload W] [--timesteps N] [--sessions N]"
             );
             return ExitCode::from(2);
         }

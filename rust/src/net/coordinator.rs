@@ -1,0 +1,746 @@
+//! The distributed coordinator: chain shard hosts into one serving
+//! engine (DESIGN.md §Distributed).
+//!
+//! [`DistributedEngine`] owns one [`Transport`] link per layer group
+//! and relays spike frames along the shard chain, one hop thread per
+//! link:
+//!
+//! ```text
+//! frames ─► hop 0 ═link═ shard 0      hop g feeds its shard over the
+//!             │                       wire (≤ `window` frames in
+//!             ▼ bounded channel       flight), reorders replies by
+//!           hop 1 ═link═ shard 1      seq, and hands each output
+//!             │                       plane to hop g+1 — so shard g
+//!             ▼                       steps timestep `t` while shard
+//!            ...                      g−1 steps `t+1`, the pipeline
+//! ```
+//!
+//! The discipline is `coordinator/pipeline.rs` lifted across address
+//! spaces: bounded in-process channels between hop threads plus the
+//! per-link protocol window bound how far any shard can run ahead
+//! (backpressure propagates through the wire — frames are never
+//! dropped), and the per-hop reorder buffer is the pool's
+//! sequence-number emission discipline applied to reply frames. Every
+//! shard runs the same `Network::step_group` core, so the engine is
+//! **bit-identical** to `ReferenceEngine`
+//! (`prop_distributed_bit_identical_to_reference`).
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::coordinator::metrics::StageMetrics;
+use crate::coordinator::scheduler::plan_layer_groups;
+use crate::coordinator::server::Engine;
+use crate::error::{Error, Result};
+use crate::net::shard::{ShardHost, ShardReport};
+use crate::net::transport::{LoopbackTransport, Transport};
+use crate::net::wire::{Frame, Role};
+use crate::snn::network::{GroupSpan, Network, StepTelemetry};
+use crate::snn::spikes::SpikePlane;
+use crate::snn::tensor::Mat;
+
+/// Configuration of the distributed shard engine, sibling of
+/// `PipelineConfig` (`ServerConfig::distributed` /
+/// `PoolConfig::distributed` select it on the serving tier).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DistributedConfig {
+    /// Desired shard count; clamped to the network's stateful-layer
+    /// count (`plan_layer_groups` never returns an empty group).
+    pub shards: usize,
+    /// Per-link protocol window: how many spike frames may be in
+    /// flight toward one shard before its hop blocks on the reply
+    /// stream (the handshaking FIFO depth of the wire).
+    pub window: usize,
+}
+
+impl Default for DistributedConfig {
+    fn default() -> Self {
+        DistributedConfig {
+            shards: 2,
+            window: 2,
+        }
+    }
+}
+
+impl DistributedConfig {
+    /// A constellation of `shards` shards with the default window.
+    pub fn with_shards(shards: usize) -> Self {
+        DistributedConfig {
+            shards,
+            ..DistributedConfig::default()
+        }
+    }
+}
+
+/// Compact frame label for protocol-error messages (full `Debug`
+/// output would dump whole spike planes).
+fn frame_name(f: &Option<Frame>) -> &'static str {
+    match f {
+        None => "end of stream",
+        Some(Frame::Hello { .. }) => "Hello",
+        Some(Frame::LoadGroup { .. }) => "LoadGroup",
+        Some(Frame::SpikeFrame { .. }) => "SpikeFrame",
+        Some(Frame::Telemetry { .. }) => "Telemetry",
+        Some(Frame::Drain { .. }) => "Drain",
+        Some(Frame::Error { .. }) => "Error",
+    }
+}
+
+/// Secondary error a hop reports when a neighbour exited early and
+/// tore the inter-hop channel down; the parent prefers the
+/// neighbour's primary error over this one.
+fn hop_torn_down(hop: usize, dir: &str) -> Error {
+    Error::Runtime(format!(
+        "distributed hop {hop}: {dir} hop channel closed early"
+    ))
+}
+
+fn is_hop_teardown(e: &Error) -> bool {
+    matches!(e, Error::Runtime(m) if m.contains("hop channel closed early"))
+}
+
+/// What one hop thread hands back when its clip share completes.
+struct HopOutcome {
+    /// The shard's telemetry fragments, one per timestep.
+    telemetry: Vec<StepTelemetry>,
+    /// The shard's Vmem banks after the clip.
+    vmems: Vec<Mat>,
+    metrics: StageMetrics,
+    finished_at: std::time::Duration,
+}
+
+/// Receive one reply from the shard and forward any now-in-order
+/// output planes downstream (the reorder-buffer discipline applied to
+/// reply frames).
+fn pump_reply(
+    link: &mut dyn Transport,
+    hop: usize,
+    clip_id: u64,
+    reorder: &mut BTreeMap<u32, SpikePlane>,
+    next_fwd: &mut u32,
+    tx: &Option<SyncSender<SpikePlane>>,
+    sm: &mut StageMetrics,
+) -> Result<()> {
+    let wait0 = Instant::now();
+    let reply = link.recv()?;
+    sm.busy += wait0.elapsed();
+    match reply {
+        Some(Frame::SpikeFrame { clip, seq, plane }) if clip == clip_id => {
+            reorder.insert(seq, plane);
+        }
+        Some(Frame::SpikeFrame { clip, .. }) => {
+            return Err(Error::protocol(format!(
+                "hop {hop}: reply for clip {clip} while clip {clip_id} is in flight"
+            )));
+        }
+        Some(Frame::Error { message }) => return Err(Error::Protocol(message)),
+        other => {
+            return Err(Error::protocol(format!(
+                "hop {hop}: expected a spike-frame reply, got {}",
+                frame_name(&other)
+            )));
+        }
+    }
+    while let Some(plane) = reorder.remove(next_fwd) {
+        *next_fwd += 1;
+        if let Some(tx) = tx {
+            let send0 = Instant::now();
+            tx.send(plane)
+                .map_err(|_| hop_torn_down(hop, "downstream"))?;
+            sm.stall_out += send0.elapsed();
+        }
+    }
+    Ok(())
+}
+
+/// Body of one hop thread: relay this clip's frames to one shard,
+/// keeping at most `window` frames in flight, and hand ordered output
+/// planes to the next hop.
+#[allow(clippy::too_many_arguments)]
+fn hop_loop(
+    link: &mut dyn Transport,
+    span: &GroupSpan,
+    hop: usize,
+    frames: &[SpikePlane],
+    clip_id: u64,
+    window: usize,
+    rx: Option<Receiver<SpikePlane>>,
+    tx: Option<SyncSender<SpikePlane>>,
+    epoch: Instant,
+) -> Result<HopOutcome> {
+    let mut sm = StageMetrics::new(hop, span.layers);
+    let t_total = frames.len();
+    let mut reorder: BTreeMap<u32, SpikePlane> = BTreeMap::new();
+    let mut next_fwd: u32 = 0;
+    let mut inflight = 0usize;
+    for (t, clip_frame) in frames.iter().enumerate() {
+        let owned;
+        let plane = match &rx {
+            None => clip_frame,
+            Some(rx) => {
+                let wait0 = Instant::now();
+                owned = rx.recv().map_err(|_| hop_torn_down(hop, "upstream"))?;
+                sm.stall_in += wait0.elapsed();
+                &owned
+            }
+        };
+        if t == 0 {
+            sm.fill = epoch.elapsed();
+        }
+        if inflight == window {
+            pump_reply(link, hop, clip_id, &mut reorder, &mut next_fwd, &tx, &mut sm)?;
+            inflight -= 1;
+        }
+        let send0 = Instant::now();
+        link.send(&Frame::SpikeFrame {
+            clip: clip_id,
+            seq: t as u32,
+            plane: plane.clone(),
+        })?;
+        sm.busy += send0.elapsed();
+        sm.steps += 1;
+        inflight += 1;
+    }
+    while inflight > 0 {
+        pump_reply(link, hop, clip_id, &mut reorder, &mut next_fwd, &tx, &mut sm)?;
+        inflight -= 1;
+    }
+    link.send(&Frame::Drain { clip: clip_id })?;
+    let wait0 = Instant::now();
+    let reply = link.recv()?;
+    sm.busy += wait0.elapsed();
+    let (telemetry, vmems) = match reply {
+        Some(Frame::Telemetry { clip, steps, vmems }) if clip == clip_id => (steps, vmems),
+        Some(Frame::Telemetry { clip, .. }) => {
+            return Err(Error::protocol(format!(
+                "hop {hop}: drained clip {clip} while clip {clip_id} is in flight"
+            )));
+        }
+        Some(Frame::Error { message }) => return Err(Error::Protocol(message)),
+        other => {
+            return Err(Error::protocol(format!(
+                "hop {hop}: expected drained telemetry, got {}",
+                frame_name(&other)
+            )));
+        }
+    };
+    if telemetry.len() != t_total {
+        return Err(Error::protocol(format!(
+            "hop {hop}: shard drained {} timesteps for a {t_total}-frame clip",
+            telemetry.len()
+        )));
+    }
+    Ok(HopOutcome {
+        telemetry,
+        vmems,
+        metrics: sm,
+        finished_at: epoch.elapsed(),
+    })
+}
+
+/// The distributed serving engine: layer groups execute on shard
+/// hosts in other threads/processes/hosts, chained over [`Transport`]
+/// links, bit-identical in output and telemetry to `ReferenceEngine`.
+///
+/// Built either against already-connected links
+/// ([`DistributedEngine::connect`] — the real multi-process topology,
+/// see the `spidr shard` CLI mode) or as a self-hosted in-process
+/// constellation over loopback pipes
+/// ([`DistributedEngine::loopback`] — what
+/// `ServerConfig::distributed` / `PoolConfig::distributed` select via
+/// `FunctionalEngine::from_config`).
+///
+/// After a transport or shard error the engine is poisoned (remote
+/// Vmem state and sequence counters are no longer trustworthy) and
+/// every later `infer` fails; build a fresh engine to recover.
+pub struct DistributedEngine {
+    network: Network,
+    groups: Vec<(usize, usize)>,
+    spans: Vec<GroupSpan>,
+    links: Vec<Box<dyn Transport>>,
+    window: usize,
+    next_clip: u64,
+    poisoned: bool,
+    stages: Vec<StageMetrics>,
+    last_telemetry: Vec<StepTelemetry>,
+    last_vmems: Vec<Mat>,
+    /// Self-hosted loopback shard threads (empty for `connect`); they
+    /// exit when the links drop at engine drop.
+    hosts: Vec<JoinHandle<Result<ShardReport>>>,
+}
+
+impl fmt::Debug for DistributedEngine {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("DistributedEngine")
+            .field("network", &self.network.name)
+            .field("groups", &self.groups)
+            .field("window", &self.window)
+            .field("next_clip", &self.next_clip)
+            .field("poisoned", &self.poisoned)
+            .field("self_hosted_shards", &self.hosts.len())
+            .finish()
+    }
+}
+
+impl DistributedEngine {
+    /// Chain already-connected shard links into an engine: plan one
+    /// layer group per link, then handshake (`Hello`) and place
+    /// (`LoadGroup`) each shard, validating that every shard resolved
+    /// the span the coordinator planned.
+    pub fn connect(
+        network: Network,
+        mut links: Vec<Box<dyn Transport>>,
+        window: usize,
+    ) -> Result<Self> {
+        if links.is_empty() {
+            return Err(Error::config("distributed engine needs at least one shard link"));
+        }
+        let groups = plan_layer_groups(&network, links.len());
+        if groups.len() != links.len() {
+            return Err(Error::config(format!(
+                "{} shard links but the network shards into at most {} layer groups",
+                links.len(),
+                groups.len()
+            )));
+        }
+        let spans = network.group_spans(&groups)?;
+        let wire_groups: Vec<(u32, u32)> =
+            groups.iter().map(|&(a, b)| (a as u32, b as u32)).collect();
+        for (i, link) in links.iter_mut().enumerate() {
+            link.send(&Frame::Hello {
+                role: Role::Coordinator,
+                name: network.name.clone(),
+            })?;
+            match link.recv()? {
+                Some(Frame::Hello { role: Role::Shard, .. }) => {}
+                Some(Frame::Error { message }) => return Err(Error::Protocol(message)),
+                other => {
+                    return Err(Error::protocol(format!(
+                        "shard {i}: expected a hello, got {}",
+                        frame_name(&other)
+                    )));
+                }
+            }
+            link.send(&Frame::LoadGroup {
+                shard: i as u32,
+                groups: wire_groups.clone(),
+                span: None,
+            })?;
+            match link.recv()? {
+                Some(Frame::LoadGroup { span: Some(span), .. }) => {
+                    if span != spans[i] {
+                        return Err(Error::protocol(format!(
+                            "shard {i} resolved span {span:?}, coordinator planned {:?}",
+                            spans[i]
+                        )));
+                    }
+                }
+                Some(Frame::Error { message }) => return Err(Error::Protocol(message)),
+                other => {
+                    return Err(Error::protocol(format!(
+                        "shard {i}: expected a load-group ack, got {}",
+                        frame_name(&other)
+                    )));
+                }
+            }
+        }
+        let stages = spans
+            .iter()
+            .enumerate()
+            .map(|(i, s)| StageMetrics::new(i, s.layers))
+            .collect();
+        Ok(DistributedEngine {
+            network,
+            groups,
+            spans,
+            links,
+            window: window.max(1),
+            next_clip: 0,
+            poisoned: false,
+            stages,
+            last_telemetry: Vec::new(),
+            last_vmems: Vec::new(),
+            hosts: Vec::new(),
+        })
+    }
+
+    /// Self-host a constellation: spawn one [`ShardHost`] thread per
+    /// layer group, paired to the engine over [`LoopbackTransport`]
+    /// byte pipes — the whole distributed path (codec, windowing,
+    /// reorder, drain) with no sockets, deterministic enough for
+    /// tests. The shard threads exit when the engine (and with it the
+    /// pipes) drops.
+    pub fn loopback(network: Network, cfg: &DistributedConfig) -> Result<Self> {
+        let groups = plan_layer_groups(&network, cfg.shards.max(1));
+        if groups.is_empty() {
+            return Err(Error::config("network has no stateful layers to shard"));
+        }
+        let mut links: Vec<Box<dyn Transport>> = Vec::with_capacity(groups.len());
+        let mut hosts = Vec::with_capacity(groups.len());
+        for i in 0..groups.len() {
+            let (coord_end, mut shard_end) = LoopbackTransport::pair();
+            let net = network.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("spidr-shard-{i}"))
+                .spawn(move || ShardHost::new(net).serve(&mut shard_end))?;
+            links.push(Box::new(coord_end));
+            hosts.push(handle);
+        }
+        let mut engine = Self::connect(network, links, cfg.window)?;
+        engine.hosts = hosts;
+        Ok(engine)
+    }
+
+    /// The workload this engine serves.
+    pub fn network(&self) -> &Network {
+        &self.network
+    }
+
+    /// The stateful-layer group placed on each shard.
+    pub fn groups(&self) -> &[(usize, usize)] {
+        &self.groups
+    }
+
+    /// Per-hop counters accumulated over every clip served so far
+    /// (`busy` is wire round-trip time — remote compute plus codec —
+    /// `stall_in`/`stall_out` are inter-hop channel waits).
+    pub fn stage_metrics(&self) -> &[StageMetrics] {
+        &self.stages
+    }
+
+    /// The last served clip's merged per-timestep telemetry, in layer
+    /// order (the shard fragments reassembled).
+    pub fn last_telemetry(&self) -> &[StepTelemetry] {
+        &self.last_telemetry
+    }
+
+    /// The last served clip's final Vmem banks, in stateful-layer
+    /// order (the shard banks reassembled — bit-comparable to
+    /// `NetworkState::vmems` after `Network::run`).
+    pub fn last_vmems(&self) -> &[Mat] {
+        &self.last_vmems
+    }
+
+    /// Drive one clip through the shard chain, filling
+    /// `last_telemetry` / `last_vmems` and absorbing hop metrics.
+    fn run_clip(&mut self, clip: &[SpikePlane]) -> Result<()> {
+        if self.poisoned {
+            return Err(Error::Runtime(
+                "distributed engine is poisoned by an earlier error; rebuild it".into(),
+            ));
+        }
+        let (c0, h0, w0) = self
+            .network
+            .layers
+            .first()
+            .ok_or_else(|| Error::config("empty network"))?
+            .in_shape;
+        for f in clip {
+            if f.shape() != (c0, h0, w0) {
+                return Err(Error::shape(format!(
+                    "frame shape {:?} != network input {:?}",
+                    f.shape(),
+                    (c0, h0, w0)
+                )));
+            }
+        }
+        let clip_id = self.next_clip;
+        self.next_clip += 1;
+        let window = self.window;
+        let hops = self.links.len();
+        let epoch = Instant::now();
+        let results: Vec<Result<HopOutcome>> = std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(hops);
+            let mut prev_rx: Option<Receiver<SpikePlane>> = None;
+            for (gi, (link, span)) in self.links.iter_mut().zip(self.spans.iter()).enumerate() {
+                let rx = prev_rx.take();
+                let tx = if gi + 1 < hops {
+                    let (tx, next_rx) = sync_channel(window);
+                    prev_rx = Some(next_rx);
+                    Some(tx)
+                } else {
+                    None
+                };
+                handles.push(scope.spawn(move || {
+                    hop_loop(&mut **link, span, gi, clip, clip_id, window, rx, tx, epoch)
+                }));
+            }
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("distributed hop panicked"))
+                .collect()
+        });
+        let wall = epoch.elapsed();
+
+        // Prefer a hop's own failure over the secondary channel-teardown
+        // errors its neighbours observe.
+        let mut teardown: Option<Error> = None;
+        let mut outcomes = Vec::with_capacity(hops);
+        for r in results {
+            match r {
+                Ok(o) => outcomes.push(o),
+                Err(e) if is_hop_teardown(&e) => {
+                    if teardown.is_none() {
+                        teardown = Some(e);
+                    }
+                }
+                Err(e) => {
+                    self.poisoned = true;
+                    return Err(e);
+                }
+            }
+        }
+        if let Some(e) = teardown {
+            self.poisoned = true;
+            return Err(e);
+        }
+
+        let mut merged: Vec<StepTelemetry> =
+            (0..clip.len()).map(|_| StepTelemetry::default()).collect();
+        let mut vmems = Vec::new();
+        for (o, acc) in outcomes.into_iter().zip(&mut self.stages) {
+            for (t, frag) in o.telemetry.into_iter().enumerate() {
+                merged[t].layer_input_spikes.extend(frag.layer_input_spikes);
+                merged[t].layer_input_cells.extend(frag.layer_input_cells);
+            }
+            let mut sm = o.metrics;
+            sm.drain = wall.saturating_sub(o.finished_at);
+            acc.absorb(&sm);
+            vmems.extend(o.vmems);
+        }
+        self.last_telemetry = merged;
+        self.last_vmems = vmems;
+        Ok(())
+    }
+}
+
+impl Engine for DistributedEngine {
+    type Output = Vec<i32>;
+
+    fn infer(&mut self, clip: &[SpikePlane]) -> Result<Vec<i32>> {
+        self.run_clip(clip)?;
+        Ok(self
+            .last_vmems
+            .last()
+            .map(|m| m.as_slice().to_vec())
+            .unwrap_or_default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::ReferenceEngine;
+    use crate::net::transport::TcpTransport;
+    use crate::prop::{check, Gen, SplitMix64};
+    use crate::quant::Precision;
+    use crate::sim::config::SimConfig;
+    use crate::snn::layer::{NeuronConfig, ResetMode};
+    use crate::snn::network::{demo_pipeline_network, demo_serving_network, NetworkBuilder};
+
+    fn demo_clip(seed: u64, t: usize, c: usize, h: usize, w: usize) -> Vec<SpikePlane> {
+        let mut rng = SplitMix64::new(seed);
+        (0..t)
+            .map(|_| {
+                let mut p = SpikePlane::zeros(c, h, w);
+                for i in 0..p.len() {
+                    if rng.chance(0.2) {
+                        p.as_mut_slice()[i] = 1;
+                    }
+                }
+                p
+            })
+            .collect()
+    }
+
+    #[test]
+    fn loopback_engine_matches_reference_and_resets_between_clips() {
+        let net = demo_serving_network(6).unwrap();
+        let clip = demo_clip(9, 6, 2, 16, 16);
+        let mut reference = ReferenceEngine::new(net.clone()).unwrap();
+        let want = reference.infer(&clip).unwrap();
+
+        let mut e = DistributedEngine::loopback(net, &DistributedConfig::with_shards(2)).unwrap();
+        assert_eq!(e.groups().len(), 2);
+        let a = e.infer(&clip).unwrap();
+        let b = e.infer(&clip).unwrap();
+        assert_eq!(a, want, "distributed output != reference output");
+        assert_eq!(a, b, "shard banks must reset between clips");
+        // hop counters accumulated over both clips
+        assert!(e.stage_metrics().iter().all(|s| s.steps == 12));
+        assert_eq!(e.last_telemetry().len(), 6);
+    }
+
+    #[test]
+    fn empty_clip_is_a_noop() {
+        let net = demo_serving_network(4).unwrap();
+        let mut e = DistributedEngine::loopback(net, &DistributedConfig::with_shards(2)).unwrap();
+        let out = e.infer(&[]).unwrap();
+        assert!(out.iter().all(|&v| v == 0));
+        assert!(e.last_telemetry().is_empty());
+        assert!(e.stage_metrics().iter().all(|s| s.steps == 0));
+    }
+
+    #[test]
+    fn more_links_than_layer_groups_is_rejected() {
+        // 2 stateful layers cannot feed 3 links
+        let net = demo_serving_network(4).unwrap();
+        let links: Vec<Box<dyn Transport>> = (0..3)
+            .map(|_| Box::new(LoopbackTransport::pair().0) as Box<dyn Transport>)
+            .collect();
+        assert!(DistributedEngine::connect(net, links, 2).is_err());
+    }
+
+    #[test]
+    fn bad_frame_shape_is_rejected_without_poisoning() {
+        let net = demo_serving_network(4).unwrap();
+        let mut e = DistributedEngine::loopback(net, &DistributedConfig::with_shards(2)).unwrap();
+        let wrong = vec![SpikePlane::zeros(2, 8, 8)];
+        assert!(e.infer(&wrong).is_err());
+        // shape validation happens before any frame leaves, so the
+        // engine stays serviceable
+        let ok = demo_clip(3, 4, 2, 16, 16);
+        assert!(e.infer(&ok).is_ok());
+    }
+
+    /// The real multi-process shape, in-process: two shard hosts behind
+    /// TCP sockets on localhost, chained by the coordinator — output
+    /// and Vmems bit-identical to the reference executor.
+    #[test]
+    fn tcp_constellation_matches_reference() {
+        let net = demo_pipeline_network(5).unwrap();
+        let clip = demo_clip(21, 5, 2, 24, 24);
+        let mut reference = ReferenceEngine::new(net.clone()).unwrap();
+        let want = reference.infer(&clip).unwrap();
+
+        let mut links: Vec<Box<dyn Transport>> = Vec::new();
+        let mut hosts = Vec::new();
+        for _ in 0..2 {
+            let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            let shard_net = net.clone();
+            hosts.push(std::thread::spawn(move || {
+                let (stream, _) = listener.accept().unwrap();
+                let mut link = TcpTransport::from_stream(stream);
+                ShardHost::new(shard_net).serve(&mut link)
+            }));
+            links.push(Box::new(TcpTransport::connect(addr).unwrap()));
+        }
+        let mut e = DistributedEngine::connect(net, links, 2).unwrap();
+        let got = e.infer(&clip).unwrap();
+        assert_eq!(got, want, "TCP-distributed output != reference output");
+        drop(e); // closes the sockets; shard sessions end cleanly
+        for h in hosts {
+            let report = h.join().unwrap().unwrap();
+            assert_eq!(report.clips, 1);
+            assert_eq!(report.frames, 5);
+        }
+    }
+
+    fn rand_mat(g: &mut Gen, rows: usize, cols: usize) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                m.set(r, c, g.i32_in(-7..=7));
+            }
+        }
+        m
+    }
+
+    /// A random spiking network: 1–3 hidden conv layers (random
+    /// channels, thresholds, leaks, reset modes), an optional pool,
+    /// and an accumulate FC readout (mirrors the pipeline prop test).
+    fn random_network(g: &mut Gen) -> crate::snn::network::Network {
+        let in_ch = 1 + g.index(2);
+        let h = 4 + 2 * g.index(3);
+        let w = 4 + 2 * g.index(3);
+        let hidden = 1 + g.index(3);
+        let pool_after = g.index(hidden + 1); // == hidden means "none"
+        let mut b = NetworkBuilder::new("prop-dist", Precision::W4V7, 3, (in_ch, h, w));
+        for i in 0..hidden {
+            let (c, _, _) = b.shape();
+            let out_ch = 2 + g.index(5);
+            let neuron = NeuronConfig {
+                theta: 1 + g.i32_in(0..=6),
+                leak: g.i32_in(0..=2),
+                leaky: g.chance(0.5),
+                reset: if g.chance(0.5) {
+                    ResetMode::Soft
+                } else {
+                    ResetMode::Hard
+                },
+            };
+            let wm = rand_mat(g, c * 9, out_ch);
+            b = b.conv3x3(out_ch, wm, neuron, false).unwrap();
+            if i == pool_after {
+                b = b.pool(2, 2);
+            }
+        }
+        let (c, hh, ww) = b.shape();
+        let out = 2 + g.index(3);
+        let wm = rand_mat(g, c * hh * ww, out);
+        b.fc(out, wm, NeuronConfig::default(), true)
+            .unwrap()
+            .build()
+            .unwrap()
+    }
+
+    /// Acceptance: over random networks, shard counts and windows, the
+    /// loopback constellation's Vmems *and* telemetry are bit-identical
+    /// to `Network::run` — and the scheduler's cycle-level path agrees,
+    /// so all three executors stay pinned to one functional core.
+    #[test]
+    fn prop_distributed_bit_identical_to_reference() {
+        check("distributed_bit_identical", 10, |g| {
+            let net = random_network(g);
+            let t = 1 + g.index(4);
+            let (c, h, w) = net.layers[0].in_shape;
+            let density = 0.1 + g.f64() * 0.4;
+            let frames: Vec<SpikePlane> = (0..t)
+                .map(|_| {
+                    let mut p = SpikePlane::zeros(c, h, w);
+                    for i in 0..p.len() {
+                        if g.chance(density) {
+                            p.as_mut_slice()[i] = 1;
+                        }
+                    }
+                    p
+                })
+                .collect();
+            let stateful = net.stateful_layers().count();
+            let cfg = DistributedConfig {
+                shards: 1 + g.index(stateful + 2), // may exceed the layer count
+                window: 1 + g.index(3),
+            };
+
+            // sequential reference
+            let mut ref_state = net.init_state().unwrap();
+            let ref_tel = net.run(&frames, &mut ref_state).unwrap();
+
+            // distributed constellation
+            let mut e = DistributedEngine::loopback(net.clone(), &cfg).unwrap();
+            e.infer(&frames).unwrap();
+
+            // cycle-level scheduler path as a cross-check
+            let sched =
+                crate::coordinator::scheduler::MultiCoreScheduler::new(2, SimConfig::default());
+            let mut sim_state = net.init_state().unwrap();
+            sched.run_network_clip(&net, &frames, &mut sim_state).unwrap();
+
+            e.last_telemetry() == &ref_tel[..]
+                && ref_state
+                    .vmems
+                    .iter()
+                    .zip(e.last_vmems())
+                    .all(|(a, b)| a.as_slice() == b.as_slice())
+                && ref_state
+                    .vmems
+                    .iter()
+                    .zip(&sim_state.vmems)
+                    .all(|(a, b)| a.as_slice() == b.as_slice())
+        });
+    }
+}

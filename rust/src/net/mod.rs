@@ -1,0 +1,35 @@
+//! Distributed shard serving: layer-group execution across
+//! processes/hosts over a binary wire protocol (DESIGN.md
+//! §Distributed).
+//!
+//! The serving tier's next scale step after in-process pipelining
+//! (`coordinator::pipeline`): a deep network's layer groups can
+//! outgrow one address space, so each group moves to a **shard host**
+//! that keeps its weights and Vmem banks resident (layer-stationary
+//! placement) while spike frames — the only data that is small per
+//! timestep — travel over a versioned, checksummed binary protocol.
+//!
+//! * [`wire`] — the frame codec (`Hello`, `LoadGroup`, `SpikeFrame`,
+//!   `Telemetry`, `Drain`, `Error`), length-prefixed + checksummed,
+//!   total on decode.
+//! * [`transport`] — the [`Transport`](transport::Transport) narrow
+//!   waist: TCP for real topologies, bounded in-process byte pipes
+//!   (loopback) for deterministic sockets-free tests.
+//! * [`shard`] — [`ShardHost`](shard::ShardHost), the remote half:
+//!   owns one layer-group span, services frames through
+//!   `Network::step_group`.
+//! * [`coordinator`] —
+//!   [`DistributedEngine`](coordinator::DistributedEngine), the local
+//!   half: chains shards, windows frames over each link, reassembles
+//!   telemetry/Vmems; a serving `Engine`, bit-identical to the
+//!   reference executor.
+
+pub mod coordinator;
+pub mod shard;
+pub mod transport;
+pub mod wire;
+
+pub use coordinator::{DistributedConfig, DistributedEngine};
+pub use shard::{ShardHost, ShardReport};
+pub use transport::{LoopbackTransport, TcpTransport, Transport};
+pub use wire::{Frame, Role};

@@ -1,0 +1,324 @@
+//! The shard host: one process/thread owning one layer-group span
+//! (DESIGN.md §Distributed).
+//!
+//! A [`ShardHost`] is the remote half of the distributed engine: it
+//! holds the whole network's weights locally (layer-stationary
+//! placement — weights never cross the wire), is assigned one
+//! contiguous layer group by a `LoadGroup` frame, and then services
+//! `SpikeFrame`s one timestep at a time through the same
+//! [`Network::step_group`] core every in-process executor uses — so
+//! distributed execution is bit-identical to the reference by
+//! construction.
+//!
+//! Backpressure follows `coordinator/pipeline.rs`: the host serves
+//! strictly one frame per reply, so the number of frames in flight
+//! toward a shard is bounded by the coordinator's protocol window plus
+//! the transport buffer — a saturated shard stalls its producer
+//! through the link, exactly as a full handshaking FIFO stalls the
+//! upstream compute unit on silicon; frames are never dropped.
+
+use crate::error::{Error, Result};
+use crate::net::transport::Transport;
+use crate::net::wire::{Frame, Role};
+use crate::snn::network::{GroupSpan, Network, StepTelemetry};
+use crate::snn::tensor::Mat;
+
+/// What one shard session served, for logs and smoke assertions.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShardReport {
+    /// Clips drained.
+    pub clips: u64,
+    /// Spike frames stepped.
+    pub frames: u64,
+}
+
+/// A shard host serving one layer-group span of a network.
+pub struct ShardHost {
+    network: Network,
+    name: String,
+    span: Option<GroupSpan>,
+    vmems: Vec<Mat>,
+    telemetry: Vec<StepTelemetry>,
+    clip: Option<u64>,
+}
+
+impl ShardHost {
+    /// A host around a locally-materialized network (the weights stay
+    /// pinned here; only the group assignment and spike frames travel).
+    pub fn new(network: Network) -> Self {
+        let name = format!("{}-shard", network.name);
+        ShardHost {
+            network,
+            name,
+            span: None,
+            vmems: Vec::new(),
+            telemetry: Vec::new(),
+            clip: None,
+        }
+    }
+
+    /// The span this host was assigned, once loaded.
+    pub fn span(&self) -> Option<&GroupSpan> {
+        self.span.as_ref()
+    }
+
+    /// Serve one session: handle frames until the peer closes the link
+    /// (clean EOF → `Ok` with the session report). On a protocol or
+    /// execution error the host sends an `Error` frame to the peer and
+    /// returns the error.
+    pub fn serve<T: Transport>(&mut self, link: &mut T) -> Result<ShardReport> {
+        let mut report = ShardReport::default();
+        loop {
+            let frame = match link.recv()? {
+                Some(f) => f,
+                None => return Ok(report),
+            };
+            match self.handle(frame, &mut report) {
+                Ok(Some(reply)) => link.send(&reply)?,
+                Ok(None) => {}
+                Err(e) => {
+                    let _ = link.send(&Frame::Error {
+                        message: e.to_string(),
+                    });
+                    return Err(e);
+                }
+            }
+        }
+    }
+
+    /// Handle one frame, returning the reply to send (if any).
+    fn handle(&mut self, frame: Frame, report: &mut ShardReport) -> Result<Option<Frame>> {
+        match frame {
+            Frame::Hello { role: Role::Coordinator, .. } => Ok(Some(Frame::Hello {
+                role: Role::Shard,
+                name: self.name.clone(),
+            })),
+            Frame::Hello { role: Role::Shard, .. } => {
+                Err(Error::protocol("shard greeted by another shard"))
+            }
+            Frame::LoadGroup { shard, groups, .. } => {
+                let plan: Vec<(usize, usize)> = groups
+                    .iter()
+                    .map(|&(a, b)| (a as usize, b as usize))
+                    .collect();
+                let spans = self.network.group_spans(&plan)?;
+                let span = *spans.get(shard as usize).ok_or_else(|| {
+                    Error::protocol(format!(
+                        "shard index {shard} out of range for a {}-group plan",
+                        spans.len()
+                    ))
+                })?;
+                self.vmems = self.network.span_state(&span)?;
+                self.telemetry.clear();
+                self.clip = None;
+                self.span = Some(span);
+                Ok(Some(Frame::LoadGroup {
+                    shard,
+                    groups,
+                    span: Some(span),
+                }))
+            }
+            Frame::SpikeFrame { clip, seq, plane } => {
+                let span = self
+                    .span
+                    .ok_or_else(|| Error::protocol("spike frame before a group was loaded"))?;
+                match self.clip {
+                    None => self.clip = Some(clip),
+                    Some(current) if current != clip => {
+                        return Err(Error::protocol(format!(
+                            "frame for clip {clip} while clip {current} is in flight"
+                        )));
+                    }
+                    Some(_) => {}
+                }
+                if seq as usize != self.telemetry.len() {
+                    return Err(Error::protocol(format!(
+                        "out-of-order frame: seq {seq}, expected {}",
+                        self.telemetry.len()
+                    )));
+                }
+                let (out, tele) = self.network.step_group(&span, &plane, &mut self.vmems)?;
+                self.telemetry.push(tele);
+                report.frames += 1;
+                Ok(Some(Frame::SpikeFrame {
+                    clip,
+                    seq,
+                    plane: out,
+                }))
+            }
+            Frame::Drain { clip } => {
+                if self.span.is_none() {
+                    return Err(Error::protocol("drain before a group was loaded"));
+                }
+                if let Some(current) = self.clip {
+                    if current != clip {
+                        return Err(Error::protocol(format!(
+                            "drain for clip {clip} while clip {current} is in flight"
+                        )));
+                    }
+                }
+                let reply = Frame::Telemetry {
+                    clip,
+                    steps: std::mem::take(&mut self.telemetry),
+                    vmems: self.vmems.clone(),
+                };
+                // reset-on-drain: the next clip starts from zeroed banks
+                for bank in &mut self.vmems {
+                    bank.as_mut_slice().fill(0);
+                }
+                self.clip = None;
+                report.clips += 1;
+                Ok(Some(reply))
+            }
+            Frame::Error { message } => Err(Error::Protocol(message)),
+            Frame::Telemetry { .. } => {
+                Err(Error::protocol("unexpected telemetry frame on a shard"))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::transport::LoopbackTransport;
+    use crate::prop::SplitMix64;
+    use crate::snn::network::demo_serving_network;
+    use crate::snn::spikes::SpikePlane;
+
+    fn rand_frame(seed: u64) -> SpikePlane {
+        let mut rng = SplitMix64::new(seed);
+        let mut p = SpikePlane::zeros(2, 16, 16);
+        for i in 0..p.len() {
+            if rng.chance(0.25) {
+                p.as_mut_slice()[i] = 1;
+            }
+        }
+        p
+    }
+
+    /// Spawn a host over loopback; returns the coordinator end and the
+    /// server thread handle.
+    fn spawn_host() -> (
+        LoopbackTransport,
+        std::thread::JoinHandle<Result<ShardReport>>,
+    ) {
+        let (coord, mut shard_end) = LoopbackTransport::pair();
+        let handle = std::thread::spawn(move || {
+            ShardHost::new(demo_serving_network(4).unwrap()).serve(&mut shard_end)
+        });
+        (coord, handle)
+    }
+
+    #[test]
+    fn session_matches_local_step_group() {
+        let net = demo_serving_network(4).unwrap();
+        let (mut link, host) = spawn_host();
+
+        link.send(&Frame::Hello {
+            role: Role::Coordinator,
+            name: "test".into(),
+        })
+        .unwrap();
+        assert!(matches!(
+            link.recv().unwrap(),
+            Some(Frame::Hello { role: Role::Shard, .. })
+        ));
+
+        // own the first of two groups: the conv layer
+        let groups = vec![(0u32, 1u32), (1, 2)];
+        link.send(&Frame::LoadGroup {
+            shard: 0,
+            groups: groups.clone(),
+            span: None,
+        })
+        .unwrap();
+        let spans = net.group_spans(&[(0, 1), (1, 2)]).unwrap();
+        match link.recv().unwrap() {
+            Some(Frame::LoadGroup { span: Some(s), .. }) => assert_eq!(s, spans[0]),
+            other => panic!("want LoadGroup ack, got {other:?}"),
+        }
+
+        // drive two clips; the shard must match local stepping and
+        // reset its banks between them (clip 1 == clip 2 bit-for-bit).
+        let mut drained = Vec::new();
+        for clip in 0..2u64 {
+            let mut vmems = net.span_state(&spans[0]).unwrap();
+            for seq in 0..3u32 {
+                let frame = rand_frame(100 + seq as u64); // same frames per clip
+                link.send(&Frame::SpikeFrame {
+                    clip,
+                    seq,
+                    plane: frame.clone(),
+                })
+                .unwrap();
+                let (want_out, _) = net.step_group(&spans[0], &frame, &mut vmems).unwrap();
+                match link.recv().unwrap() {
+                    Some(Frame::SpikeFrame { clip: c, seq: s, plane }) => {
+                        assert_eq!((c, s), (clip, seq));
+                        assert_eq!(plane, want_out, "clip {clip} seq {seq} diverged");
+                    }
+                    other => panic!("want SpikeFrame reply, got {other:?}"),
+                }
+            }
+            link.send(&Frame::Drain { clip }).unwrap();
+            match link.recv().unwrap() {
+                Some(Frame::Telemetry { clip: c, steps, vmems: got }) => {
+                    assert_eq!(c, clip);
+                    assert_eq!(steps.len(), 3);
+                    assert_eq!(got, vmems, "drained Vmems diverged");
+                    drained.push(got);
+                }
+                other => panic!("want Telemetry reply, got {other:?}"),
+            }
+        }
+        assert_eq!(drained[0], drained[1], "banks must reset between clips");
+
+        drop(link);
+        let report = host.join().unwrap().unwrap();
+        assert_eq!((report.clips, report.frames), (2, 6));
+    }
+
+    #[test]
+    fn frames_before_load_group_fail_the_session() {
+        let (mut link, host) = spawn_host();
+        link.send(&Frame::SpikeFrame {
+            clip: 0,
+            seq: 0,
+            plane: rand_frame(1),
+        })
+        .unwrap();
+        // the host reports the violation and ends the session
+        assert!(matches!(
+            link.recv().unwrap(),
+            Some(Frame::Error { message }) if message.contains("before a group")
+        ));
+        assert!(host.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn out_of_order_frames_are_rejected() {
+        let (mut link, host) = spawn_host();
+        link.send(&Frame::LoadGroup {
+            shard: 0,
+            groups: vec![(0, 2)],
+            span: None,
+        })
+        .unwrap();
+        assert!(matches!(
+            link.recv().unwrap(),
+            Some(Frame::LoadGroup { span: Some(_), .. })
+        ));
+        link.send(&Frame::SpikeFrame {
+            clip: 0,
+            seq: 5, // skips 0..5
+            plane: rand_frame(2),
+        })
+        .unwrap();
+        assert!(matches!(
+            link.recv().unwrap(),
+            Some(Frame::Error { message }) if message.contains("out-of-order")
+        ));
+        assert!(host.join().unwrap().is_err());
+    }
+}

@@ -1,0 +1,328 @@
+//! Frame transports: how [`Frame`]s move between a coordinator and a
+//! shard host (DESIGN.md §Distributed).
+//!
+//! The [`Transport`] trait is the narrow waist — blocking, ordered,
+//! reliable frame delivery in both directions. Two implementations:
+//!
+//! * [`TcpTransport`] over `std::net` for real multi-process /
+//!   multi-host topologies (the `spidr shard` mode and the CI
+//!   two-process smoke run on it), and
+//! * [`LoopbackTransport`], a pair of **bounded in-process byte
+//!   pipes**, so every distributed test and the loopback constellation
+//!   run deterministically with no sockets, while still exercising the
+//!   exact same codec, flow control (a full pipe blocks the writer,
+//!   like a full TCP send buffer) and EOF semantics.
+
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::error::Result;
+use crate::net::wire::Frame;
+
+/// Blocking, ordered, reliable frame delivery to one peer.
+///
+/// `send` delivers one frame (blocking while the link is congested —
+/// the wire analogue of a full handshaking FIFO stalling its
+/// producer); `recv` blocks for the next frame and returns `Ok(None)`
+/// when the peer closed the link cleanly between frames.
+pub trait Transport: Send {
+    /// Deliver one frame, blocking on link backpressure.
+    fn send(&mut self, frame: &Frame) -> Result<()>;
+
+    /// Receive the next frame; `Ok(None)` means the peer closed the
+    /// link cleanly at a frame boundary.
+    fn recv(&mut self) -> Result<Option<Frame>>;
+}
+
+// ---------------------------------------------------------------------------
+// TCP
+// ---------------------------------------------------------------------------
+
+/// [`Transport`] over a TCP stream.
+pub struct TcpTransport {
+    stream: TcpStream,
+}
+
+impl TcpTransport {
+    /// Connect to a listening shard (or coordinator).
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Self> {
+        Ok(Self::from_stream(TcpStream::connect(addr)?))
+    }
+
+    /// Wrap an accepted stream. Disables Nagle coalescing — the
+    /// protocol is request/reply per timestep, so latency beats
+    /// batching here.
+    pub fn from_stream(stream: TcpStream) -> Self {
+        let _ = stream.set_nodelay(true);
+        TcpTransport { stream }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn send(&mut self, frame: &Frame) -> Result<()> {
+        frame.write_to(&mut self.stream)
+    }
+
+    fn recv(&mut self) -> Result<Option<Frame>> {
+        Frame::read_from(&mut self.stream)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Loopback byte pipes
+// ---------------------------------------------------------------------------
+
+/// Default per-direction pipe capacity (matches the ballpark of an OS
+/// TCP send buffer, so loopback runs see the same flow-control shape
+/// as socket runs).
+pub const DEFAULT_PIPE_CAPACITY: usize = 256 * 1024;
+
+/// One bounded unidirectional byte queue.
+struct PipeState {
+    data: VecDeque<u8>,
+    capacity: usize,
+    write_closed: bool,
+    read_closed: bool,
+}
+
+struct Pipe {
+    state: Mutex<PipeState>,
+    /// Signaled when bytes arrive or the writer closes.
+    readable: Condvar,
+    /// Signaled when space frees or the reader closes.
+    writable: Condvar,
+}
+
+fn byte_pipe(capacity: usize) -> (PipeWriter, PipeReader) {
+    let pipe = Arc::new(Pipe {
+        state: Mutex::new(PipeState {
+            data: VecDeque::new(),
+            capacity: capacity.max(1),
+            write_closed: false,
+            read_closed: false,
+        }),
+        readable: Condvar::new(),
+        writable: Condvar::new(),
+    });
+    (
+        PipeWriter {
+            pipe: Arc::clone(&pipe),
+        },
+        PipeReader { pipe },
+    )
+}
+
+/// Write half of a bounded in-process byte pipe. A full pipe blocks
+/// the writer until the reader drains it; dropping the writer is a
+/// clean EOF for the reader.
+pub struct PipeWriter {
+    pipe: Arc<Pipe>,
+}
+
+impl Write for PipeWriter {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        if buf.is_empty() {
+            return Ok(0);
+        }
+        let mut st = self.pipe.state.lock().unwrap();
+        loop {
+            if st.read_closed {
+                return Err(io::Error::new(
+                    io::ErrorKind::BrokenPipe,
+                    "loopback peer closed",
+                ));
+            }
+            let free = st.capacity - st.data.len();
+            if free > 0 {
+                let n = free.min(buf.len());
+                st.data.extend(&buf[..n]);
+                self.pipe.readable.notify_all();
+                return Ok(n);
+            }
+            st = self.pipe.writable.wait(st).unwrap();
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+impl Drop for PipeWriter {
+    fn drop(&mut self) {
+        let mut st = self.pipe.state.lock().unwrap();
+        st.write_closed = true;
+        drop(st);
+        self.pipe.readable.notify_all();
+    }
+}
+
+/// Read half of a bounded in-process byte pipe. Reads block until
+/// bytes arrive; once the writer drops, remaining bytes drain and then
+/// reads return `Ok(0)` (EOF).
+pub struct PipeReader {
+    pipe: Arc<Pipe>,
+}
+
+impl Read for PipeReader {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        if buf.is_empty() {
+            return Ok(0);
+        }
+        let mut st = self.pipe.state.lock().unwrap();
+        loop {
+            if !st.data.is_empty() {
+                let n = buf.len().min(st.data.len());
+                for (dst, b) in buf.iter_mut().zip(st.data.drain(..n)) {
+                    *dst = b;
+                }
+                self.pipe.writable.notify_all();
+                return Ok(n);
+            }
+            if st.write_closed {
+                return Ok(0);
+            }
+            st = self.pipe.readable.wait(st).unwrap();
+        }
+    }
+}
+
+impl Drop for PipeReader {
+    fn drop(&mut self) {
+        let mut st = self.pipe.state.lock().unwrap();
+        st.read_closed = true;
+        drop(st);
+        self.pipe.writable.notify_all();
+    }
+}
+
+/// In-process [`Transport`]: one end of a pair of bounded byte pipes.
+///
+/// [`LoopbackTransport::pair`] returns two connected ends; frames
+/// written to one are read by the other, through the same codec and
+/// the same bounded-buffer flow control as a socket. Dropping an end
+/// closes both of its pipe halves: the peer's next `recv` sees a clean
+/// EOF and its next `send` fails — identical to a TCP hangup.
+pub struct LoopbackTransport {
+    tx: PipeWriter,
+    rx: PipeReader,
+}
+
+impl LoopbackTransport {
+    /// A connected pair with [`DEFAULT_PIPE_CAPACITY`] per direction.
+    pub fn pair() -> (Self, Self) {
+        Self::pair_with_capacity(DEFAULT_PIPE_CAPACITY)
+    }
+
+    /// A connected pair with an explicit per-direction byte capacity
+    /// (small capacities make the backpressure observable in tests).
+    pub fn pair_with_capacity(capacity: usize) -> (Self, Self) {
+        let (a_tx, b_rx) = byte_pipe(capacity);
+        let (b_tx, a_rx) = byte_pipe(capacity);
+        (
+            LoopbackTransport { tx: a_tx, rx: a_rx },
+            LoopbackTransport { tx: b_tx, rx: b_rx },
+        )
+    }
+}
+
+impl Transport for LoopbackTransport {
+    fn send(&mut self, frame: &Frame) -> Result<()> {
+        frame.write_to(&mut self.tx)
+    }
+
+    fn recv(&mut self) -> Result<Option<Frame>> {
+        Frame::read_from(&mut self.rx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::time::Duration;
+
+    fn ping(clip: u64) -> Frame {
+        Frame::Drain { clip }
+    }
+
+    #[test]
+    fn loopback_roundtrips_both_directions() {
+        let (mut a, mut b) = LoopbackTransport::pair();
+        a.send(&ping(1)).unwrap();
+        b.send(&ping(2)).unwrap();
+        assert_eq!(b.recv().unwrap(), Some(ping(1)));
+        assert_eq!(a.recv().unwrap(), Some(ping(2)));
+    }
+
+    #[test]
+    fn dropping_an_end_is_clean_eof_for_the_peer() {
+        let (a, mut b) = LoopbackTransport::pair();
+        drop(a);
+        assert_eq!(b.recv().unwrap(), None);
+        assert!(b.send(&ping(9)).is_err());
+    }
+
+    /// A frame larger than the pipe capacity streams through chunk by
+    /// chunk while the peer reads concurrently — writes block on the
+    /// bounded buffer instead of failing.
+    #[test]
+    fn bounded_pipe_streams_oversized_frames() {
+        let (mut a, mut b) = LoopbackTransport::pair_with_capacity(16);
+        let big = Frame::Error {
+            message: "x".repeat(1000),
+        };
+        let want = big.clone();
+        let t = std::thread::spawn(move || {
+            a.send(&big).unwrap();
+            a
+        });
+        assert_eq!(b.recv().unwrap(), Some(want));
+        t.join().unwrap();
+    }
+
+    /// The writer genuinely blocks while the pipe is full (the
+    /// backpressure edge), resuming only once the reader drains.
+    #[test]
+    fn full_pipe_blocks_the_writer_until_drained() {
+        let (mut a, mut b) = LoopbackTransport::pair_with_capacity(8);
+        let sent = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&sent);
+        let t = std::thread::spawn(move || {
+            a.send(&Frame::Error {
+                message: "y".repeat(64),
+            })
+            .unwrap();
+            flag.store(true, Ordering::SeqCst);
+            a
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(!sent.load(Ordering::SeqCst), "writer must stall on a full pipe");
+        assert!(b.recv().unwrap().is_some());
+        t.join().unwrap();
+        assert!(sent.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn tcp_transport_roundtrips_over_localhost() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut t = TcpTransport::from_stream(stream);
+            while let Some(frame) = t.recv().unwrap() {
+                t.send(&frame).unwrap(); // echo
+            }
+        });
+        let mut c = TcpTransport::connect(addr).unwrap();
+        for clip in 0..4 {
+            c.send(&ping(clip)).unwrap();
+            assert_eq!(c.recv().unwrap(), Some(ping(clip)));
+        }
+        drop(c);
+        server.join().unwrap();
+    }
+}

@@ -1,0 +1,889 @@
+//! Versioned binary wire codec for the distributed shard protocol
+//! (DESIGN.md §Distributed).
+//!
+//! Every message on a shard link is one [`Frame`], encoded as
+//!
+//! ```text
+//! ┌───────┬─────────┬──────┬─────────┬───────────────┬─────────┐
+//! │ magic │ version │ kind │ payload │    payload    │ checksum│
+//! │ SPDR  │   u16   │  u8  │ len u32 │  (len bytes)  │   u32   │
+//! └───────┴─────────┴──────┴─────────┴───────────────┴─────────┘
+//! ```
+//!
+//! — length-prefixed framing (all integers little-endian) with an
+//! FNV-1a checksum over the payload, so a receiver can resynchronize
+//! detectably instead of misinterpreting a corrupt stream. Decoding is
+//! total: truncated buffers, bad magic, version skew, oversized length
+//! prefixes, checksum mismatches and malformed payloads all come back
+//! as [`Error::Protocol`] values — never a panic, never an
+//! out-of-bounds allocation (the length prefix is validated against
+//! [`MAX_PAYLOAD`] *before* any buffer is sized from it).
+//!
+//! The payload grammar round-trips the simulator's own types —
+//! [`SpikePlane`] (bit-packed, 8 cells per byte: planes are binary by
+//! contract), [`GroupSpan`], [`StepTelemetry`] and Vmem [`Mat`] banks
+//! — through [`Frame::to_bytes`] / [`Frame::from_bytes`], property
+//! tested in `prop_frame_roundtrip`.
+
+use std::io::{Read, Write};
+
+use crate::error::{Error, Result};
+use crate::snn::network::{GroupSpan, StepTelemetry};
+use crate::snn::spikes::SpikePlane;
+use crate::snn::tensor::Mat;
+
+/// Frame magic, the first four bytes of every frame.
+pub const MAGIC: [u8; 4] = *b"SPDR";
+
+/// Wire-protocol version carried in every frame header; receivers
+/// reject frames from any other version.
+pub const VERSION: u16 = 1;
+
+/// Hard cap on the payload length prefix (64 MiB) — anything larger is
+/// rejected before allocation, bounding what a corrupt or adversarial
+/// peer can make a receiver reserve.
+pub const MAX_PAYLOAD: u32 = 64 << 20;
+
+/// Frame header bytes ahead of the payload (magic + version + kind +
+/// payload length).
+const HEADER_LEN: usize = 11;
+
+/// Who is speaking on a shard link.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// The engine driving clips through the shard chain.
+    Coordinator,
+    /// A shard host owning one layer-group span.
+    Shard,
+}
+
+/// One protocol message (DESIGN.md §Distributed has the session
+/// grammar: `Hello → LoadGroup → (SpikeFrame* Drain)*`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Frame {
+    /// Session opener, echoed by the shard: version negotiation is the
+    /// frame header; `name` identifies the workload/host for logs.
+    Hello {
+        /// Speaker role.
+        role: Role,
+        /// Workload (coordinator) or host (shard) name, for logs.
+        name: String,
+    },
+    /// Assign a layer group: the full stateful-layer group plan plus
+    /// which slot this shard serves. The shard resolves its
+    /// [`GroupSpan`], pins that span's Vmem banks locally
+    /// (layer-stationary placement — weights never cross the wire) and
+    /// echoes the frame with `span` filled in as the acknowledgement.
+    LoadGroup {
+        /// Index of the group this shard owns.
+        shard: u32,
+        /// Contiguous stateful-layer group ranges, the whole plan.
+        groups: Vec<(u32, u32)>,
+        /// Resolved span — `None` in the request, `Some` in the echo.
+        span: Option<GroupSpan>,
+    },
+    /// One timestep of spikes for `clip`, sequence-numbered so the
+    /// receiver can enforce (and the sender's reorder buffer restore)
+    /// timestep order. The shard replies with the output plane its
+    /// layer group emits, under the same `(clip, seq)`.
+    SpikeFrame {
+        /// Clip id (monotonic per session).
+        clip: u64,
+        /// Timestep index within the clip.
+        seq: u32,
+        /// The binary spike plane (bit-packed on the wire).
+        plane: SpikePlane,
+    },
+    /// Shard → coordinator at clip end (the reply to [`Frame::Drain`]):
+    /// the group's per-timestep telemetry fragments and its final Vmem
+    /// banks for the clip.
+    Telemetry {
+        /// Clip id these results belong to.
+        clip: u64,
+        /// One telemetry fragment per timestep served.
+        steps: Vec<StepTelemetry>,
+        /// The span's Vmem banks after the clip's last timestep.
+        vmems: Vec<Mat>,
+    },
+    /// Coordinator → shard: the clip is complete — flush telemetry +
+    /// Vmems back and reset the banks for the next clip.
+    Drain {
+        /// Clip id to drain.
+        clip: u64,
+    },
+    /// A peer reporting failure; the session is over.
+    Error {
+        /// Human-readable failure description.
+        message: String,
+    },
+}
+
+/// FNV-1a 32-bit checksum (zero-dependency; collision resistance is
+/// not a goal — this detects truncation and bit corruption, the
+/// transports below it provide integrity).
+pub fn checksum(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// Encode / decode primitives
+// ---------------------------------------------------------------------------
+
+/// Little-endian payload writer.
+struct Wr {
+    buf: Vec<u8>,
+}
+
+impl Wr {
+    fn new() -> Self {
+        Wr { buf: Vec::new() }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn i32(&mut self, v: i32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    fn plane(&mut self, p: &SpikePlane) {
+        let (c, h, w) = p.shape();
+        self.u32(c as u32);
+        self.u32(h as u32);
+        self.u32(w as u32);
+        // bit-packed, LSB-first within each byte; planes are binary by
+        // contract (any nonzero cell normalizes to a set bit)
+        let mut byte = 0u8;
+        for (i, &v) in p.as_slice().iter().enumerate() {
+            if v != 0 {
+                byte |= 1 << (i % 8);
+            }
+            if i % 8 == 7 {
+                self.buf.push(byte);
+                byte = 0;
+            }
+        }
+        if p.len() % 8 != 0 {
+            self.buf.push(byte);
+        }
+    }
+
+    fn mat(&mut self, m: &Mat) {
+        self.u32(m.rows as u32);
+        self.u32(m.cols as u32);
+        for &v in m.as_slice() {
+            self.i32(v);
+        }
+    }
+
+    fn telemetry(&mut self, t: &StepTelemetry) {
+        self.u32(t.layer_input_spikes.len() as u32);
+        for &v in &t.layer_input_spikes {
+            self.u64(v);
+        }
+        self.u32(t.layer_input_cells.len() as u32);
+        for &v in &t.layer_input_cells {
+            self.u64(v);
+        }
+    }
+
+    fn span(&mut self, s: &GroupSpan) {
+        self.u32(s.layers.0 as u32);
+        self.u32(s.layers.1 as u32);
+        self.u32(s.stateful.0 as u32);
+        self.u32(s.stateful.1 as u32);
+    }
+}
+
+/// Little-endian payload reader over a borrowed buffer; every accessor
+/// fails with a protocol error instead of panicking.
+struct Rd<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Rd { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| Error::protocol("truncated payload"))?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn i32(&mut self) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// A length prefix that must still fit in the remaining buffer when
+    /// multiplied by `elem_bytes` — rejects absurd counts before any
+    /// allocation is sized from them.
+    fn len_prefix(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        let remaining = self.buf.len() - self.pos;
+        match n.checked_mul(elem_bytes.max(1)) {
+            Some(bytes) if bytes <= remaining => Ok(n),
+            _ => Err(Error::protocol(format!(
+                "length prefix {n} exceeds remaining payload ({remaining} bytes)"
+            ))),
+        }
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.len_prefix(1)?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| Error::protocol("string field is not valid UTF-8"))
+    }
+
+    fn plane(&mut self) -> Result<SpikePlane> {
+        let c = self.u32()? as u64;
+        let h = self.u32()? as u64;
+        let w = self.u32()? as u64;
+        // cap the unpacked size at MAX_PAYLOAD too, so a crafted shape
+        // cannot amplify a small payload into a huge allocation
+        let cells = c
+            .checked_mul(h)
+            .and_then(|v| v.checked_mul(w))
+            .filter(|&v| v <= MAX_PAYLOAD as u64)
+            .ok_or_else(|| Error::protocol("oversized spike plane"))?
+            as usize;
+        let packed = self.take(cells.div_ceil(8))?;
+        let mut data = vec![0u8; cells];
+        for (i, cell) in data.iter_mut().enumerate() {
+            *cell = (packed[i / 8] >> (i % 8)) & 1;
+        }
+        SpikePlane::from_vec(c as usize, h as usize, w as usize, data)
+            .map_err(|e| Error::protocol(format!("bad spike plane: {e}")))
+    }
+
+    fn mat(&mut self) -> Result<Mat> {
+        let rows = self.u32()? as u64;
+        let cols = self.u32()? as u64;
+        // like len_prefix: the claimed element data must actually be
+        // present in the remaining payload before anything is sized
+        // from the count
+        let remaining = (self.buf.len() - self.pos) as u64;
+        let cells = rows
+            .checked_mul(cols)
+            .filter(|&v| v.checked_mul(4).is_some_and(|bytes| bytes <= remaining))
+            .ok_or_else(|| Error::protocol("oversized matrix"))?
+            as usize;
+        let mut data = Vec::with_capacity(cells);
+        for _ in 0..cells {
+            data.push(self.i32()?);
+        }
+        Mat::from_vec(rows as usize, cols as usize, data)
+            .map_err(|e| Error::protocol(format!("bad matrix: {e}")))
+    }
+
+    fn telemetry(&mut self) -> Result<StepTelemetry> {
+        let ns = self.len_prefix(8)?;
+        let mut layer_input_spikes = Vec::with_capacity(ns);
+        for _ in 0..ns {
+            layer_input_spikes.push(self.u64()?);
+        }
+        let nc = self.len_prefix(8)?;
+        let mut layer_input_cells = Vec::with_capacity(nc);
+        for _ in 0..nc {
+            layer_input_cells.push(self.u64()?);
+        }
+        Ok(StepTelemetry {
+            layer_input_spikes,
+            layer_input_cells,
+        })
+    }
+
+    fn span(&mut self) -> Result<GroupSpan> {
+        Ok(GroupSpan {
+            layers: (self.u32()? as usize, self.u32()? as usize),
+            stateful: (self.u32()? as usize, self.u32()? as usize),
+        })
+    }
+
+    /// Decoding must consume the payload exactly — trailing bytes mean
+    /// a malformed (or differently-versioned) frame.
+    fn finish(self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(Error::protocol(format!(
+                "{} trailing bytes after payload",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Frame codec
+// ---------------------------------------------------------------------------
+
+impl Frame {
+    /// Wire kind tag of this frame.
+    fn kind(&self) -> u8 {
+        match self {
+            Frame::Hello { .. } => 1,
+            Frame::LoadGroup { .. } => 2,
+            Frame::SpikeFrame { .. } => 3,
+            Frame::Telemetry { .. } => 4,
+            Frame::Drain { .. } => 5,
+            Frame::Error { .. } => 6,
+        }
+    }
+
+    fn encode_payload(&self) -> Vec<u8> {
+        let mut w = Wr::new();
+        match self {
+            Frame::Hello { role, name } => {
+                w.u8(match role {
+                    Role::Coordinator => 0,
+                    Role::Shard => 1,
+                });
+                w.str(name);
+            }
+            Frame::LoadGroup { shard, groups, span } => {
+                w.u32(*shard);
+                w.u32(groups.len() as u32);
+                for &(a, b) in groups {
+                    w.u32(a);
+                    w.u32(b);
+                }
+                match span {
+                    None => w.u8(0),
+                    Some(s) => {
+                        w.u8(1);
+                        w.span(s);
+                    }
+                }
+            }
+            Frame::SpikeFrame { clip, seq, plane } => {
+                w.u64(*clip);
+                w.u32(*seq);
+                w.plane(plane);
+            }
+            Frame::Telemetry { clip, steps, vmems } => {
+                w.u64(*clip);
+                w.u32(steps.len() as u32);
+                for t in steps {
+                    w.telemetry(t);
+                }
+                w.u32(vmems.len() as u32);
+                for m in vmems {
+                    w.mat(m);
+                }
+            }
+            Frame::Drain { clip } => w.u64(*clip),
+            Frame::Error { message } => w.str(message),
+        }
+        w.buf
+    }
+
+    fn decode_payload(kind: u8, payload: &[u8]) -> Result<Frame> {
+        let mut r = Rd::new(payload);
+        let frame = match kind {
+            1 => Frame::Hello {
+                role: match r.u8()? {
+                    0 => Role::Coordinator,
+                    1 => Role::Shard,
+                    other => {
+                        return Err(Error::protocol(format!("unknown role {other}")));
+                    }
+                },
+                name: r.str()?,
+            },
+            2 => {
+                let shard = r.u32()?;
+                let n = r.len_prefix(8)?;
+                let mut groups = Vec::with_capacity(n);
+                for _ in 0..n {
+                    groups.push((r.u32()?, r.u32()?));
+                }
+                let span = match r.u8()? {
+                    0 => None,
+                    1 => Some(r.span()?),
+                    other => {
+                        return Err(Error::protocol(format!("bad span flag {other}")));
+                    }
+                };
+                Frame::LoadGroup {
+                    shard,
+                    groups,
+                    span,
+                }
+            }
+            3 => Frame::SpikeFrame {
+                clip: r.u64()?,
+                seq: r.u32()?,
+                plane: r.plane()?,
+            },
+            4 => {
+                let clip = r.u64()?;
+                let n = r.len_prefix(8)?;
+                let mut steps = Vec::with_capacity(n);
+                for _ in 0..n {
+                    steps.push(r.telemetry()?);
+                }
+                let nm = r.len_prefix(8)?;
+                let mut vmems = Vec::with_capacity(nm);
+                for _ in 0..nm {
+                    vmems.push(r.mat()?);
+                }
+                Frame::Telemetry { clip, steps, vmems }
+            }
+            5 => Frame::Drain { clip: r.u64()? },
+            6 => Frame::Error { message: r.str()? },
+            other => {
+                return Err(Error::protocol(format!("unknown frame kind {other}")));
+            }
+        };
+        r.finish()?;
+        Ok(frame)
+    }
+
+    /// Encode the frame into one contiguous wire buffer (header +
+    /// payload + checksum).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let payload = self.encode_payload();
+        let mut buf = Vec::with_capacity(HEADER_LEN + payload.len() + 4);
+        buf.extend_from_slice(&MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.push(self.kind());
+        buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&payload);
+        buf.extend_from_slice(&checksum(&payload).to_le_bytes());
+        buf
+    }
+
+    /// Decode one frame from the front of `buf`; returns the frame and
+    /// the bytes consumed. Every malformation — truncation (of header,
+    /// payload or checksum), bad magic, version skew, an oversized
+    /// length prefix, a checksum mismatch, an unknown kind, or a
+    /// malformed payload — is an [`Error::Protocol`]; decoding never
+    /// panics.
+    pub fn from_bytes(buf: &[u8]) -> Result<(Frame, usize)> {
+        if buf.len() < HEADER_LEN {
+            return Err(Error::protocol(format!(
+                "truncated frame header: {} of {HEADER_LEN} bytes",
+                buf.len()
+            )));
+        }
+        let len = parse_header(buf[..HEADER_LEN].try_into().unwrap())?;
+        let total = HEADER_LEN + len + 4;
+        if buf.len() < total {
+            return Err(Error::protocol(format!(
+                "truncated frame: {} of {total} bytes",
+                buf.len()
+            )));
+        }
+        let payload = &buf[HEADER_LEN..HEADER_LEN + len];
+        let want = u32::from_le_bytes(buf[HEADER_LEN + len..total].try_into().unwrap());
+        if checksum(payload) != want {
+            return Err(Error::protocol("frame checksum mismatch"));
+        }
+        let frame = Frame::decode_payload(buf[6], payload)?;
+        Ok((frame, total))
+    }
+
+    /// Read one frame from a byte stream. Returns `Ok(None)` on a
+    /// clean end-of-stream (the peer closed between frames); EOF
+    /// *inside* a frame is a protocol error.
+    pub fn read_from<R: Read>(r: &mut R) -> Result<Option<Frame>> {
+        let mut header = [0u8; HEADER_LEN];
+        // Peek the first byte separately to distinguish a clean close
+        // from a mid-frame truncation.
+        loop {
+            match r.read(&mut header[..1]) {
+                Ok(0) => return Ok(None),
+                Ok(_) => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(Error::Io(e)),
+            }
+        }
+        read_exact(r, &mut header[1..])?;
+        let len = parse_header(&header)?;
+        let mut rest = vec![0u8; len + 4];
+        read_exact(r, &mut rest)?;
+        let payload = &rest[..len];
+        let want = u32::from_le_bytes(rest[len..].try_into().unwrap());
+        if checksum(payload) != want {
+            return Err(Error::protocol("frame checksum mismatch"));
+        }
+        Ok(Some(Frame::decode_payload(header[6], payload)?))
+    }
+
+    /// Write the frame to a byte stream (one contiguous write, then
+    /// flush).
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
+        w.write_all(&self.to_bytes())?;
+        w.flush()?;
+        Ok(())
+    }
+}
+
+/// Validate a frame header and return the payload length.
+fn parse_header(header: &[u8; HEADER_LEN]) -> Result<usize> {
+    if header[..4] != MAGIC {
+        return Err(Error::protocol(format!(
+            "bad frame magic {:02x?}",
+            &header[..4]
+        )));
+    }
+    let version = u16::from_le_bytes(header[4..6].try_into().unwrap());
+    if version != VERSION {
+        return Err(Error::protocol(format!(
+            "unsupported protocol version {version} (host speaks {VERSION})"
+        )));
+    }
+    let len = u32::from_le_bytes(header[7..11].try_into().unwrap());
+    if len > MAX_PAYLOAD {
+        return Err(Error::protocol(format!(
+            "oversized frame: {len}-byte payload exceeds the {MAX_PAYLOAD}-byte cap"
+        )));
+    }
+    Ok(len as usize)
+}
+
+/// `Read::read_exact` with mid-frame EOF mapped to a protocol error.
+fn read_exact<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<()> {
+    r.read_exact(buf).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            Error::protocol("connection closed mid-frame")
+        } else {
+            Error::Io(e)
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{check, Gen};
+
+    fn sample_frames() -> Vec<Frame> {
+        let mut plane = SpikePlane::zeros(2, 3, 5);
+        plane.set(0, 0, 0, 1);
+        plane.set(1, 2, 4, 1);
+        plane.set(0, 1, 3, 1);
+        let mut vmem = Mat::zeros(2, 3);
+        vmem.set(0, 1, -7);
+        vmem.set(1, 2, 123);
+        vec![
+            Frame::Hello {
+                role: Role::Coordinator,
+                name: "flow".into(),
+            },
+            Frame::Hello {
+                role: Role::Shard,
+                name: String::new(),
+            },
+            Frame::LoadGroup {
+                shard: 1,
+                groups: vec![(0, 2), (2, 5)],
+                span: None,
+            },
+            Frame::LoadGroup {
+                shard: 0,
+                groups: vec![(0, 1)],
+                span: Some(GroupSpan {
+                    layers: (0, 3),
+                    stateful: (0, 2),
+                }),
+            },
+            Frame::SpikeFrame {
+                clip: 7,
+                seq: 3,
+                plane,
+            },
+            Frame::Telemetry {
+                clip: 7,
+                steps: vec![
+                    StepTelemetry {
+                        layer_input_spikes: vec![4, 0, 9],
+                        layer_input_cells: vec![64, 64, 16],
+                    },
+                    StepTelemetry::default(),
+                ],
+                vmems: vec![vmem, Mat::zeros(1, 4)],
+            },
+            Frame::Drain { clip: 7 },
+            Frame::Error {
+                message: "boom".into(),
+            },
+        ]
+    }
+
+    #[test]
+    fn every_variant_roundtrips() {
+        for frame in sample_frames() {
+            let bytes = frame.to_bytes();
+            let (back, used) = Frame::from_bytes(&bytes).unwrap();
+            assert_eq!(back, frame);
+            assert_eq!(used, bytes.len());
+        }
+    }
+
+    #[test]
+    fn concatenated_frames_decode_in_sequence() {
+        let frames = sample_frames();
+        let mut stream = Vec::new();
+        for f in &frames {
+            stream.extend_from_slice(&f.to_bytes());
+        }
+        let mut at = 0;
+        for f in &frames {
+            let (back, used) = Frame::from_bytes(&stream[at..]).unwrap();
+            assert_eq!(&back, f);
+            at += used;
+        }
+        assert_eq!(at, stream.len());
+    }
+
+    #[test]
+    fn stream_reader_matches_buffer_decoder() {
+        let frames = sample_frames();
+        let mut stream = Vec::new();
+        for f in &frames {
+            f.write_to(&mut stream).unwrap();
+        }
+        let mut r = &stream[..];
+        for f in &frames {
+            assert_eq!(Frame::read_from(&mut r).unwrap().as_ref(), Some(f));
+        }
+        // clean end-of-stream
+        assert!(Frame::read_from(&mut r).unwrap().is_none());
+    }
+
+    fn rand_plane(g: &mut Gen) -> SpikePlane {
+        let (c, h, w) = (1 + g.index(3), 1 + g.index(6), 1 + g.index(6));
+        let mut p = SpikePlane::zeros(c, h, w);
+        for i in 0..p.len() {
+            if g.chance(0.3) {
+                p.as_mut_slice()[i] = 1;
+            }
+        }
+        p
+    }
+
+    fn rand_telemetry(g: &mut Gen) -> StepTelemetry {
+        StepTelemetry {
+            layer_input_spikes: g.vec_of(0, 4, |g| g.u64()),
+            layer_input_cells: g.vec_of(0, 4, |g| g.u64()),
+        }
+    }
+
+    fn rand_mat(g: &mut Gen) -> Mat {
+        let (rows, cols) = (1 + g.index(5), 1 + g.index(5));
+        let mut m = Mat::zeros(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                m.set(r, c, g.i32_in(i32::MIN..=i32::MAX));
+            }
+        }
+        m
+    }
+
+    /// Satellite: random planes, spans, telemetry and Vmem banks
+    /// survive the codec bit-exactly.
+    #[test]
+    fn prop_frame_roundtrip() {
+        check("frame_roundtrip", 60, |g| {
+            let frame = match g.index(6) {
+                0 => Frame::Hello {
+                    role: *g.choose(&[Role::Coordinator, Role::Shard]),
+                    name: "shard-α ".repeat(g.index(4)),
+                },
+                1 => Frame::LoadGroup {
+                    shard: g.u64_in(0..=u32::MAX as u64) as u32,
+                    groups: g.vec_of(0, 5, |g| {
+                        (g.u64_in(0..=99) as u32, g.u64_in(0..=99) as u32)
+                    }),
+                    span: g.chance(0.5).then(|| GroupSpan {
+                        layers: (g.index(9), g.index(9)),
+                        stateful: (g.index(9), g.index(9)),
+                    }),
+                },
+                2 => Frame::SpikeFrame {
+                    clip: g.u64(),
+                    seq: g.u64_in(0..=u32::MAX as u64) as u32,
+                    plane: rand_plane(g),
+                },
+                3 => Frame::Telemetry {
+                    clip: g.u64(),
+                    steps: g.vec_of(0, 3, rand_telemetry),
+                    vmems: g.vec_of(0, 3, rand_mat),
+                },
+                4 => Frame::Drain { clip: g.u64() },
+                _ => Frame::Error {
+                    message: "e".repeat(g.index(40)),
+                },
+            };
+            let bytes = frame.to_bytes();
+            matches!(Frame::from_bytes(&bytes), Ok((back, used))
+                if back == frame && used == bytes.len())
+        });
+    }
+
+    /// Satellite: adversarial decodes — every truncation point, bad
+    /// magic, version skew, oversized length, flipped payload bits and
+    /// unknown kinds must all come back as `Error` values, never
+    /// panics.
+    #[test]
+    fn adversarial_decodes_error_cleanly() {
+        let frame = Frame::SpikeFrame {
+            clip: 3,
+            seq: 1,
+            plane: SpikePlane::zeros(2, 4, 4),
+        };
+        let good = frame.to_bytes();
+
+        // truncation at every possible length
+        for n in 0..good.len() {
+            assert!(Frame::from_bytes(&good[..n]).is_err(), "prefix {n}");
+        }
+
+        // bad magic
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(matches!(Frame::from_bytes(&bad), Err(Error::Protocol(m))
+            if m.contains("magic")));
+
+        // version skew
+        let mut bad = good.clone();
+        bad[4] = 99;
+        assert!(matches!(Frame::from_bytes(&bad), Err(Error::Protocol(m))
+            if m.contains("version")));
+
+        // oversized length prefix must be rejected before allocation
+        let mut bad = good.clone();
+        bad[7..11].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(Frame::from_bytes(&bad), Err(Error::Protocol(m))
+            if m.contains("oversized")));
+
+        // corrupt payload: the checksum catches it
+        let mut bad = good.clone();
+        bad[HEADER_LEN] ^= 0xff;
+        assert!(matches!(Frame::from_bytes(&bad), Err(Error::Protocol(m))
+            if m.contains("checksum")));
+
+        // corrupt checksum itself
+        let mut bad = good.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0xff;
+        assert!(matches!(Frame::from_bytes(&bad), Err(Error::Protocol(m))
+            if m.contains("checksum")));
+
+        // unknown kind with a valid checksum
+        let mut bad = good.clone();
+        bad[6] = 42;
+        assert!(matches!(Frame::from_bytes(&bad), Err(Error::Protocol(m))
+            if m.contains("kind")));
+
+        // trailing garbage inside a correctly-checksummed payload
+        let mut w = Frame::Drain { clip: 1 }.encode_payload();
+        w.push(0xEE);
+        let mut evil = Vec::new();
+        evil.extend_from_slice(&MAGIC);
+        evil.extend_from_slice(&VERSION.to_le_bytes());
+        evil.push(5);
+        evil.extend_from_slice(&(w.len() as u32).to_le_bytes());
+        evil.extend_from_slice(&w);
+        evil.extend_from_slice(&checksum(&w).to_le_bytes());
+        assert!(matches!(Frame::from_bytes(&evil), Err(Error::Protocol(m))
+            if m.contains("trailing")));
+
+        // matrix dims whose element data cannot be present are
+        // rejected before any allocation is sized from the count
+        let mut w = Wr::new();
+        w.u64(9); // clip
+        w.u32(0); // no steps
+        w.u32(1); // one matrix…
+        w.u32(4096);
+        w.u32(4096); // …claiming 16M cells with no bytes behind them
+        let mut evil = Vec::new();
+        evil.extend_from_slice(&MAGIC);
+        evil.extend_from_slice(&VERSION.to_le_bytes());
+        evil.push(4);
+        evil.extend_from_slice(&(w.buf.len() as u32).to_le_bytes());
+        evil.extend_from_slice(&w.buf);
+        evil.extend_from_slice(&checksum(&w.buf).to_le_bytes());
+        assert!(matches!(Frame::from_bytes(&evil), Err(Error::Protocol(m))
+            if m.contains("oversized matrix")));
+
+        // absurd inner length prefix (vec count) caps before allocating
+        let mut w = Wr::new();
+        w.u64(9); // clip
+        w.u32(u32::MAX); // steps count: would be 32 GiB of telemetry
+        let mut evil = Vec::new();
+        evil.extend_from_slice(&MAGIC);
+        evil.extend_from_slice(&VERSION.to_le_bytes());
+        evil.push(4);
+        evil.extend_from_slice(&(w.buf.len() as u32).to_le_bytes());
+        evil.extend_from_slice(&w.buf);
+        evil.extend_from_slice(&checksum(&w.buf).to_le_bytes());
+        assert!(matches!(Frame::from_bytes(&evil), Err(Error::Protocol(m))
+            if m.contains("length prefix")));
+
+        // the pristine frame still decodes (the cases above were real)
+        assert!(Frame::from_bytes(&good).is_ok());
+    }
+
+    #[test]
+    fn mid_stream_eof_is_a_protocol_error_not_a_clean_close() {
+        let bytes = Frame::Drain { clip: 5 }.to_bytes();
+        let mut r = &bytes[..bytes.len() - 2];
+        assert!(matches!(
+            Frame::read_from(&mut r),
+            Err(Error::Protocol(m)) if m.contains("mid-frame")
+        ));
+    }
+
+    #[test]
+    fn plane_bit_packing_is_compact() {
+        let frame = Frame::SpikeFrame {
+            clip: 0,
+            seq: 0,
+            plane: SpikePlane::zeros(2, 16, 16),
+        };
+        // 512 cells pack into 64 bytes (+ shape/ids/framing), far under
+        // the 512 bytes a raw u8 encoding would need.
+        assert!(frame.to_bytes().len() < 2 * 16 * 16 / 8 + 64);
+    }
+}

@@ -172,6 +172,35 @@ impl Network {
         Ok(spans)
     }
 
+    /// Allocate zeroed Vmem banks for one layer-group span — the
+    /// shard-local slice of [`Network::init_state`] a remote
+    /// [`ShardHost`](crate::net::shard::ShardHost) keeps resident
+    /// (layer-stationary placement: weights and state stay pinned to
+    /// the compute site; only spike frames cross the wire).
+    pub fn span_state(&self, span: &GroupSpan) -> Result<Vec<Mat>> {
+        let (lo, hi) = span.layers;
+        if lo >= hi || hi > self.layers.len() {
+            return Err(Error::config(format!(
+                "layer span {lo}..{hi} is invalid for a {}-layer network",
+                self.layers.len()
+            )));
+        }
+        let mut vmems = Vec::with_capacity(span.banks());
+        for l in self.layers[lo..hi].iter().filter(|l| l.has_state()) {
+            let (m, k) = l.vmem_shape()?;
+            vmems.push(Mat::zeros(m, k));
+        }
+        if vmems.len() != span.banks() {
+            return Err(Error::config(format!(
+                "span {:?} covers {} stateful layers but claims {} banks",
+                span.layers,
+                vmems.len(),
+                span.banks()
+            )));
+        }
+        Ok(vmems)
+    }
+
     /// Run one timestep; returns the output accumulator view and
     /// telemetry. `frame` must match the first layer's input shape.
     pub fn step(
@@ -874,6 +903,32 @@ mod tests {
                 assert_eq!(a.as_slice(), b.as_slice());
             }
         }
+    }
+
+    #[test]
+    fn span_state_matches_init_state_slices() {
+        let net = tiny_net(1);
+        let spans = net.group_spans(&[(0, 1), (1, 2)]).unwrap();
+        let full = net.init_state().unwrap();
+        let mut si = 0;
+        for span in &spans {
+            let banks = net.span_state(span).unwrap();
+            assert_eq!(banks.len(), span.banks());
+            for bank in &banks {
+                assert_eq!(
+                    (bank.rows, bank.cols),
+                    (full.vmems[si].rows, full.vmems[si].cols)
+                );
+                si += 1;
+            }
+        }
+        assert_eq!(si, full.vmems.len());
+        // invalid spans are rejected
+        let bad = GroupSpan {
+            layers: (0, 9),
+            stateful: (0, 1),
+        };
+        assert!(net.span_state(&bad).is_err());
     }
 
     #[test]

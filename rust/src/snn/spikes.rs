@@ -27,14 +27,37 @@ impl SpikePlane {
 }
 
 /// Streaming sparsity statistics across timesteps / layers (Fig. 5).
-#[derive(Debug, Clone, Default)]
+///
+/// Fully streaming, O(1) memory: the min/max band is folded in as
+/// observations arrive, so the struct stays constant-size on
+/// arbitrarily long serving streams (it used to keep one `f64` per
+/// observation, which grew without bound on the request path).
+#[derive(Debug, Clone)]
 pub struct SparsityStats {
     /// Total cells observed.
     pub cells: u64,
     /// Total spikes observed.
     pub spikes: u64,
-    /// Per-observation sparsities (for min/max bands).
-    samples: Vec<f64>,
+    /// Observations folded in so far.
+    observations: u64,
+    /// Running minimum per-observation sparsity (densest moment).
+    min: f64,
+    /// Running maximum per-observation sparsity.
+    max: f64,
+}
+
+impl Default for SparsityStats {
+    fn default() -> Self {
+        SparsityStats {
+            cells: 0,
+            spikes: 0,
+            observations: 0,
+            // fold identities, matching the previous Vec-fold behavior
+            // on an empty record set
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
 }
 
 impl SparsityStats {
@@ -53,7 +76,10 @@ impl SparsityStats {
         self.spikes += spikes;
         self.cells += cells;
         if cells > 0 {
-            self.samples.push(1.0 - spikes as f64 / cells as f64);
+            let s = 1.0 - spikes as f64 / cells as f64;
+            self.min = self.min.min(s);
+            self.max = self.max.max(s);
+            self.observations += 1;
         }
     }
 
@@ -67,17 +93,17 @@ impl SparsityStats {
 
     /// Minimum per-observation sparsity (densest moment).
     pub fn min_sparsity(&self) -> f64 {
-        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+        self.min
     }
 
     /// Maximum per-observation sparsity.
     pub fn max_sparsity(&self) -> f64 {
-        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+        self.max
     }
 
     /// Number of observations recorded.
     pub fn observations(&self) -> usize {
-        self.samples.len()
+        self.observations as usize
     }
 }
 
@@ -110,5 +136,22 @@ mod tests {
         let s = SparsityStats::new();
         assert_eq!(s.mean_sparsity(), 1.0);
         assert_eq!(s.observations(), 0);
+    }
+
+    /// The stats stay O(1): a long stream folds into the same bands a
+    /// sample vector would have produced, with no per-observation
+    /// growth (zero-cell records are ignored, as before).
+    #[test]
+    fn long_stream_keeps_exact_bands() {
+        let mut s = SparsityStats::new();
+        s.record_counts(0, 0); // no cells: not an observation
+        for i in 0..100_000u64 {
+            // sparsity cycles through {0.90, 0.80, 0.70, 0.60}
+            s.record_counts(10 + 10 * (i % 4), 100);
+        }
+        assert_eq!(s.observations(), 100_000);
+        assert!((s.min_sparsity() - 0.60).abs() < 1e-12);
+        assert!((s.max_sparsity() - 0.90).abs() < 1e-12);
+        assert!((s.mean_sparsity() - 0.75).abs() < 1e-12);
     }
 }
