@@ -1,21 +1,34 @@
-//! Distributed shard serving, end to end (DESIGN.md §Distributed).
+//! Distributed shard serving, end to end — now with blank-shard
+//! provisioning and a kill-a-replica failover demo (DESIGN.md
+//! §Distributed).
 //!
 //! ```text
-//! # self-hosted loopback constellation (no sockets):
+//! # self-hosted loopback constellation (blank shards, weight-pushed,
+//! # 2 replicas per hop, one replica killed mid-stream):
 //! cargo run --release --example distributed
 //!
-//! # against real shard processes (the CI two-process smoke):
+//! # against real shard processes (the CI two-process smoke; the
+//! # shards start blank — the coordinator provisions them):
 //! cargo run --release -- shard --listen 127.0.0.1:7401 --sessions 1 &
 //! cargo run --release -- shard --listen 127.0.0.1:7402 --sessions 1 &
 //! cargo run --release --example distributed -- --connect 127.0.0.1:7401,127.0.0.1:7402
+//!
+//! # replicated: consecutive addresses group into hops of --replicas
+//! # links; --kill-replica K severs replica K of every hop mid-stream
+//! # (the CI three-process failover smoke):
+//! cargo run --release --example distributed -- \
+//!     --connect 127.0.0.1:7403,127.0.0.1:7404 --replicas 2 --kill-replica 0
 //! ```
 //!
 //! Either way the example acts as the coordinator: it builds the
-//! pipeline-demo workload, runs the same clips through the sequential
-//! reference executor and the distributed engine, **asserts the
-//! outputs and Vmems are bit-identical** (a non-zero exit means the
-//! wire path diverged — this is the CI smoke's oracle), and prints the
-//! shard topology and per-hop wire metrics.
+//! pipeline-demo workload, provisions every shard replica over the
+//! wire (the shards need no local artifact), runs the same clips
+//! through the sequential reference executor and the distributed
+//! engine — killing a replica halfway when the demo is replicated —
+//! and **asserts the outputs and Vmems stay bit-identical** (a
+//! non-zero exit means the wire path, or the failover replay, diverged
+//! — this is the CI smokes' oracle), then prints the shard topology,
+//! per-hop wire metrics and failovers absorbed.
 
 use std::time::{Duration, Instant};
 
@@ -60,13 +73,18 @@ fn connect_retry(addr: &str) -> spidr::Result<TcpTransport> {
 
 fn print_hops(engine: &DistributedEngine) {
     let net = engine.network();
-    for sm in engine.stage_metrics() {
+    for (sm, (alive, total)) in engine
+        .stage_metrics()
+        .iter()
+        .zip(engine.replica_status())
+    {
         let layers: Vec<String> = net.layers[sm.layers.0..sm.layers.1]
             .iter()
             .map(|l| l.describe())
             .collect();
         println!(
-            "  shard {}: [{}] {} frames, wire busy {:?}, stall in/out {:?}/{:?}",
+            "  shard {} ({alive}/{total} replicas alive): [{}] {} frames, \
+             wire busy {:?}, stall in/out {:?}/{:?}",
             sm.stage,
             layers.join(" → "),
             sm.steps,
@@ -77,12 +95,20 @@ fn print_hops(engine: &DistributedEngine) {
     }
 }
 
+fn flag_value(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
 fn main() -> spidr::Result<()> {
     let args: Vec<String> = std::env::args().collect();
-    let connect = args
-        .iter()
-        .position(|a| a == "--connect")
-        .and_then(|i| args.get(i + 1).cloned());
+    let connect = flag_value(&args, "--connect");
+    let replicas: usize = flag_value(&args, "--replicas")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1);
+    let kill_replica: Option<usize> =
+        flag_value(&args, "--kill-replica").and_then(|v| v.parse().ok());
 
     let net = demo_pipeline_network(TIMESTEPS)?;
     let clips: Vec<Vec<SpikePlane>> = (0..4).map(|i| random_clip(&net, 40 + i)).collect();
@@ -95,27 +121,72 @@ fn main() -> spidr::Result<()> {
     }
 
     let mut engine = match &connect {
-        // Real shard processes over TCP: one link per address, in
-        // layer-group order.
+        // Real shard processes over TCP: consecutive addresses group
+        // into hops of `replicas` links, in layer-group order. The
+        // shards may start blank — the engine pushes the workload.
         Some(addrs) => {
-            let mut links: Vec<Box<dyn Transport>> = Vec::new();
-            for addr in addrs.split(',') {
-                links.push(Box::new(connect_retry(addr)?));
+            let links: Vec<&str> = addrs.split(',').collect();
+            if replicas == 0 || links.len() % replicas != 0 {
+                return Err(spidr::Error::config(format!(
+                    "{} addresses do not group into hops of {replicas} replicas",
+                    links.len()
+                )));
             }
-            println!("coordinator: chaining {} TCP shard(s): {addrs}", links.len());
-            DistributedEngine::connect(net.clone(), links, 2)?
+            let mut hops: Vec<Vec<Box<dyn Transport>>> = Vec::new();
+            for hop_addrs in links.chunks(replicas) {
+                let mut hop: Vec<Box<dyn Transport>> = Vec::new();
+                for addr in hop_addrs {
+                    hop.push(Box::new(connect_retry(addr)?));
+                }
+                hops.push(hop);
+            }
+            println!(
+                "coordinator: chaining {} TCP hop(s) x {replicas} replica(s), \
+                 provisioning over the wire: {addrs}",
+                hops.len()
+            );
+            DistributedEngine::connect_replicated(net.clone(), hops, 2)?
         }
-        // Self-hosted loopback constellation: the same protocol,
-        // windowing and reassembly with no sockets.
+        // Self-hosted loopback constellation: blank shard threads,
+        // weight-pushed, replicated — the same protocol, windowing,
+        // reassembly and failover with no sockets.
         None => {
-            println!("coordinator: self-hosting a 3-shard loopback constellation");
-            DistributedEngine::loopback(net.clone(), &DistributedConfig::with_shards(3))?
+            let reps = if replicas > 1 { replicas } else { 2 };
+            println!(
+                "coordinator: self-hosting a 3-shard x {reps}-replica loopback \
+                 constellation (blank shards, weight-pushed)"
+            );
+            DistributedEngine::loopback(
+                net.clone(),
+                &DistributedConfig::replicated(3, reps),
+            )?
         }
     };
     println!("layer-group placement: {:?}", engine.groups());
 
+    // Kill a replica halfway through the stream: after an even number
+    // of clips the least-loaded tie-break picks replica 0 next, so
+    // severing it (or the requested index) guarantees the next clip
+    // runs the failover path. Loopback demos always kill; TCP mode
+    // kills only when --kill-replica is given (the failover smoke).
+    let kill_at = clips.len() / 2;
+    let kill = match (&connect, kill_replica) {
+        (_, Some(r)) => Some(r),
+        (None, None) => Some(0),
+        (Some(_), None) => None,
+    };
+    let replicated = engine.replica_status().iter().all(|&(_, total)| total > 1);
+    // Only a replicated constellation can absorb a kill.
+    let kill = if replicated { kill } else { None };
+
     let t0 = Instant::now();
     for (i, clip) in clips.iter().enumerate() {
+        if let Some(r) = kill.filter(|_| i == kill_at) {
+            println!("killing replica {r} of every hop mid-stream...");
+            for hop in 0..engine.groups().len() {
+                engine.sever_replica(hop, r)?;
+            }
+        }
         let got = engine.infer(clip)?;
         assert_eq!(
             got, want[i],
@@ -130,11 +201,18 @@ fn main() -> spidr::Result<()> {
     for (a, b) in state.vmems.iter().zip(engine.last_vmems()) {
         assert_eq!(a.as_slice(), b.as_slice(), "reassembled Vmems diverged");
     }
+    if kill.is_some() {
+        assert!(
+            engine.failovers() > 0,
+            "a replica was killed but no failover was absorbed"
+        );
+    }
 
     println!(
         "{} clips × {TIMESTEPS} steps over the wire in {wall:?} — outputs, Vmems and \
-         telemetry bit-identical to the reference executor: ok",
+         telemetry bit-identical to the reference executor across {} failover(s): ok",
         clips.len(),
+        engine.failovers(),
     );
     print_hops(&engine);
     Ok(())

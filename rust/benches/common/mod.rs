@@ -65,19 +65,28 @@ pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
 /// `SPIDR_BENCH_DIR` when set, falling back to the compile-time
 /// manifest root (right for `cargo bench` run in the checkout that
 /// built it; set the env var when running a relocated binary).
+///
+/// Non-finite values are a hard error, not a silent substitution:
+/// `Infinity`/`NaN` are not JSON, so one bad sample would corrupt the
+/// whole `BENCH_*.json` artifact for every downstream consumer (this
+/// is how the `SparsityStats` ±inf empty-band bug broke the Fig. 5
+/// series). A bench that computes a non-finite number has a bug — fail
+/// loudly at the source instead of laundering it into a fake `0`.
 pub fn emit(series: &str, x: f64, y: f64) {
+    assert!(
+        x.is_finite() && y.is_finite(),
+        "bench series '{series}' produced a non-finite sample (x={x}, y={y}); \
+         refusing to corrupt BENCH_*.json — fix the series upstream"
+    );
     println!("DATA {series} {x:.6} {y:.6}");
     let bench = CURRENT_BENCH.lock().unwrap().clone();
     if let Some(bench) = bench {
-        let finite = |v: f64| if v.is_finite() { v } else { 0.0 };
         let unix = SystemTime::now()
             .duration_since(UNIX_EPOCH)
             .map(|d| d.as_secs())
             .unwrap_or(0);
         let line = format!(
-            "{{\"bench\":\"{bench}\",\"series\":\"{series}\",\"x\":{},\"y\":{},\"unix\":{unix}}}\n",
-            finite(x),
-            finite(y),
+            "{{\"bench\":\"{bench}\",\"series\":\"{series}\",\"x\":{x},\"y\":{y},\"unix\":{unix}}}\n",
         );
         let dir = std::env::var("SPIDR_BENCH_DIR")
             .unwrap_or_else(|_| env!("CARGO_MANIFEST_DIR").to_string());

@@ -15,10 +15,16 @@
 //! * `distributed_overhead`     — TCP / local latency ratio vs shard
 //!   count (how much the wire costs on a workload this small; deeper
 //!   groups amortize it).
+//! * `clip_latency_failover_us` — the recovery clip of a 2-shard ×
+//!   2-replica constellation after one replica is severed mid-stream
+//!   (pays the group re-push + frame replay).
+//! * `clip_latency_degraded_us` — steady-state clip latency on the
+//!   surviving replica after the failover.
 //!
 //! Outputs are asserted bit-identical to the reference on every
-//! topology — this bench doubles as an end-to-end equivalence smoke
-//! over both transports.
+//! topology — including across the replica kill — so this bench
+//! doubles as an end-to-end equivalence smoke over both transports
+//! and the failover path.
 
 mod common;
 
@@ -91,4 +97,34 @@ fn main() {
         common::emit("clip_latency_tcp_us", shards as f64, tcp_us);
         common::emit("distributed_overhead", shards as f64, tcp_us / local_us);
     }
+
+    // Failover (ISSUE 5): a replicated constellation absorbs a
+    // mid-stream replica kill with zero lost clips — the recovery clip
+    // pays the re-push + replay, later clips run degraded on the
+    // survivor. Output stays bit-identical throughout (the oracle).
+    let cfg = DistributedConfig::replicated(2, 2);
+    let mut replicated =
+        DistributedEngine::loopback(net.clone(), &cfg).expect("replicated constellation");
+    let got = replicated.infer(&clip).expect("replicated clip");
+    assert_eq!(got, want, "replicated output diverged at 2x2");
+    // After one clip the least-loaded pick is replica 1 — sever it on
+    // every hop so the next clip must run the failover path.
+    for hop in 0..replicated.groups().len() {
+        replicated.sever_replica(hop, 1).expect("sever replica");
+    }
+    let (got, secs) = common::timed(|| replicated.infer(&clip).expect("failover clip"));
+    assert_eq!(got, want, "failover output diverged at 2x2");
+    assert_eq!(
+        replicated.failovers(),
+        replicated.groups().len() as u64,
+        "every hop must have absorbed exactly one failover"
+    );
+    let failover_us = secs * 1e6;
+    let degraded_us = best_latency_us(&mut replicated, &clip);
+    println!(
+        "2x2 failover: recovery clip {failover_us:.0} us (re-push + replay), \
+         degraded steady state {degraded_us:.0} us/clip"
+    );
+    common::emit("clip_latency_failover_us", 2.0, failover_us);
+    common::emit("clip_latency_degraded_us", 2.0, degraded_us);
 }

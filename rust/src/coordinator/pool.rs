@@ -367,6 +367,21 @@ impl SharedQueue {
                 Some((idle, min_workers)) => {
                     let (next_st, timeout) = self.work.wait_timeout(st, idle).unwrap();
                     st = next_st;
+                    // Retire-vs-dispatch race audit (ISSUE 5): a job can
+                    // never be dispatched into the inbox of a worker
+                    // that concurrently retires, because both sides run
+                    // under this one mutex and each re-validates under
+                    // it. `dispatch` checks `retired[i]` before every
+                    // placement, so a retired inbox never receives a
+                    // job; and retirement requires **every** inbox —
+                    // this worker's included — to be empty, so a job
+                    // placed before the wait timed out blocks the
+                    // retire (the all-empty check below fails) and the
+                    // worker loops around to pop it instead. A retired
+                    // slot is therefore provably empty, which is what
+                    // lets `start_worker` reuse it unconditionally.
+                    // `pool_survives_grow_shrink_churn_under_load`
+                    // hammers this edge.
                     if timeout.timed_out()
                         && !st.closed
                         && st.alive > min_workers
@@ -879,6 +894,82 @@ mod tests {
         // nothing was lost across the resize
         let served: u64 = run.workers.iter().map(|w| w.clips).sum();
         assert_eq!(served, 7);
+    }
+
+    /// Satellite (ISSUE 5): grow/shrink churn under load. An
+    /// aggressive shrink timeout (1 ms) against a bursty, stuttering
+    /// job stream forces the pool through many grow and retire cycles
+    /// — the dispatch-scan-vs-retire window — while clips keep
+    /// flowing. The retire invariant (a retiring worker's inbox is
+    /// provably empty, see `SharedQueue::next`) means no clip can ever
+    /// be lost in a retired inbox or served twice off a reused slot:
+    /// every sequence number must come back exactly once, in order.
+    #[test]
+    fn pool_survives_grow_shrink_churn_under_load() {
+        const TOTAL: u64 = 200;
+        let cfg = PoolConfig {
+            inbox_depth: 1,
+            steal: StealPolicy::Steal,
+            sizing: Some(PoolSizing {
+                min_workers: 1,
+                max_workers: 4,
+                shrink_idle: Duration::from_millis(1),
+            }),
+            ..PoolConfig::default()
+        };
+
+        /// Every 7th clip is slow, so inboxes back up (grow pressure)
+        /// and then drain while the producer stutters (shrink
+        /// pressure).
+        struct ChurnEngine;
+        impl Engine for ChurnEngine {
+            type Output = u64;
+            fn infer(&mut self, clip: &[SpikePlane]) -> Result<u64> {
+                let n: u64 = clip.iter().map(|p| p.count_spikes()).sum();
+                if n % 7 == 0 {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Ok(n)
+            }
+        }
+
+        // Rendezvous channel + stuttering producer: bursts of 8 jobs
+        // back-to-back (forcing growth past one worker × depth 1),
+        // then a pause well past shrink_idle (forcing retirement).
+        let (tx, rx) = sync_channel::<ClipJob>(0);
+        let producer = std::thread::spawn(move || {
+            for seq in 0..TOTAL {
+                if tx.send(job(seq, (seq as usize * 3 + 1) % 23)).is_err() {
+                    return;
+                }
+                if seq % 8 == 7 {
+                    std::thread::sleep(Duration::from_millis(6));
+                }
+            }
+        });
+
+        let run = run_pool(&cfg, rx, &|_| Ok(ChurnEngine)).unwrap();
+        producer.join().unwrap();
+
+        // No clip lost, duplicated, or reordered across any resize.
+        assert_eq!(run.clips.len(), TOTAL as usize);
+        for (i, c) in run.clips.iter().enumerate() {
+            assert_eq!(c.seq, i as u64, "clip {i} lost or reordered under churn");
+        }
+        let served: u64 = run.workers.iter().map(|w| w.clips).sum();
+        assert_eq!(served, TOTAL, "every clip served exactly once");
+        // The churn actually happened: the pool both grew past min and
+        // retired workers along the way.
+        assert!(
+            run.workers.len() > 1,
+            "stream never grew the pool: {:?}",
+            run.workers
+        );
+        assert!(
+            run.workers.iter().any(|w| w.retired),
+            "stream never shrank the pool: {:?}",
+            run.workers
+        );
     }
 
     /// Without a sizing policy the pool is exactly as static as

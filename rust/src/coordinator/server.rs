@@ -461,6 +461,7 @@ mod tests {
         cfg.distributed = Some(DistributedConfig {
             shards: 2,
             window: 1,
+            ..Default::default()
         });
         let dserver = InferenceServer::new(cfg);
         let mut dist =

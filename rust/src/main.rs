@@ -16,7 +16,10 @@
 //!                [--timesteps N] [--sessions N]
 //!                  host layer-group shards for a distributed
 //!                  coordinator (DESIGN.md §Distributed); serves
-//!                  sessions forever, or exactly N with --sessions
+//!                  sessions forever, or exactly N with --sessions.
+//!                  Without --workload the shard starts blank and is
+//!                  provisioned over the wire by the coordinator's
+//!                  weight push
 //! ```
 
 use std::collections::HashMap;
@@ -116,40 +119,50 @@ fn cmd_map(flags: &HashMap<String, String>) -> Result<()> {
 }
 
 /// Host layer-group shards: listen for coordinator sessions and serve
-/// each through a [`ShardHost`] over TCP. The workload is materialized
-/// locally by name (layer-stationary placement — weights never cross
-/// the wire); the coordinator's `LoadGroup` frame assigns which layer
-/// group this process owns.
+/// each through a [`ShardHost`] over TCP. By default the host starts
+/// **blank** — no local artifact; the coordinator's first `LoadGroup`
+/// pushes the serialized workload over the wire and assigns which
+/// layer group this process owns (weights cross once, then stay
+/// pinned). `--workload pipeline-demo|serving-demo` materializes a
+/// demo workload locally instead (the pre-push behavior).
 fn cmd_shard(flags: &HashMap<String, String>) -> Result<()> {
     let listen = flags
         .get("listen")
         .cloned()
         .unwrap_or_else(|| "127.0.0.1:7400".into());
-    let workload = flags
-        .get("workload")
-        .cloned()
-        .unwrap_or_else(|| "pipeline-demo".into());
     let timesteps: usize = flag(flags, "timesteps", 12);
     let sessions: u64 = flag(flags, "sessions", 0); // 0 = serve forever
-    let net = match workload.as_str() {
-        "pipeline-demo" => demo_pipeline_network(timesteps)?,
-        "serving-demo" => demo_serving_network(timesteps)?,
-        other => {
+    let net = match flags.get("workload").map(|s| s.as_str()) {
+        None | Some("") => None, // blank: provisioned by the coordinator
+        Some("pipeline-demo") => Some(demo_pipeline_network(timesteps)?),
+        Some("serving-demo") => Some(demo_serving_network(timesteps)?),
+        Some(other) => {
             return Err(Error::config(format!(
-                "unknown shard workload '{other}' (pipeline-demo|serving-demo)"
+                "unknown shard workload '{other}' (pipeline-demo|serving-demo, \
+                 or omit --workload to be provisioned over the wire)"
             )));
         }
     };
     let listener = std::net::TcpListener::bind(&listen)?;
-    eprintln!(
-        "spidr-shard: hosting '{workload}' ({timesteps} steps) on {}",
-        listener.local_addr()?
-    );
+    match &net {
+        Some(n) => eprintln!(
+            "spidr-shard: hosting '{}' ({timesteps} steps) on {}",
+            n.name,
+            listener.local_addr()?
+        ),
+        None => eprintln!(
+            "spidr-shard: blank host on {} (waiting for a coordinator weight push)",
+            listener.local_addr()?
+        ),
+    }
     let mut served = 0u64;
     loop {
         let (stream, peer) = listener.accept()?;
         let mut link = TcpTransport::from_stream(stream);
-        let mut host = ShardHost::new(net.clone());
+        let mut host = match &net {
+            Some(n) => ShardHost::new(n.clone()),
+            None => ShardHost::blank("blank-shard"),
+        };
         match host.serve(&mut link) {
             Ok(report) => eprintln!(
                 "spidr-shard: session from {peer} done ({} clips, {} frames, span {:?})",

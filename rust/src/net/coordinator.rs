@@ -1,18 +1,19 @@
 //! The distributed coordinator: chain shard hosts into one serving
 //! engine (DESIGN.md §Distributed).
 //!
-//! [`DistributedEngine`] owns one [`Transport`] link per layer group
-//! and relays spike frames along the shard chain, one hop thread per
-//! link:
+//! [`DistributedEngine`] owns one or more [`Transport`] replica links
+//! per layer group and relays spike frames along the shard chain, one
+//! hop thread per group:
 //!
 //! ```text
-//! frames ─► hop 0 ═link═ shard 0      hop g feeds its shard over the
-//!             │                       wire (≤ `window` frames in
-//!             ▼ bounded channel       flight), reorders replies by
-//!           hop 1 ═link═ shard 1      seq, and hands each output
-//!             │                       plane to hop g+1 — so shard g
-//!             ▼                       steps timestep `t` while shard
-//!            ...                      g−1 steps `t+1`, the pipeline
+//! frames ─► hop 0 ═link═ shard 0a │ 0b  hop g feeds one replica of
+//!             │                        its group over the wire (≤
+//!             ▼ bounded channel        `window` frames in flight),
+//!           hop 1 ═link═ shard 1a │ 1b reorders replies by seq, and
+//!             │                        hands each output plane to
+//!             ▼                        hop g+1 — so shard g steps
+//!            ...                       timestep `t` while shard g−1
+//!                                      steps `t+1`, the pipeline
 //! ```
 //!
 //! The discipline is `coordinator/pipeline.rs` lifted across address
@@ -24,9 +25,27 @@
 //! shard runs the same `Network::step_group` core, so the engine is
 //! **bit-identical** to `ReferenceEngine`
 //! (`prop_distributed_bit_identical_to_reference`).
+//!
+//! **Provisioning**: at session start the coordinator pushes the
+//! serialized workload ([`crate::net::wire::encode_network`]) to every
+//! replica inside its first `LoadGroup`, so shards can start blank
+//! (`spidr shard --listen` with no `--workload`) — weights cross the
+//! wire once and stay pinned.
+//!
+//! **Failover**: with `DistributedConfig::replicas > 1`, each hop fans
+//! clips across its replicas with the pool's least-loaded discipline.
+//! When the active replica's transport or protocol fails mid-clip, the
+//! hop re-pushes the group to a surviving replica (a weightless
+//! `LoadGroup`, which resets its banks) and **replays** the clip's
+//! frames from its per-clip log; replies whose `seq` is below the
+//! already-forwarded watermark are regenerated bit-identically (the
+//! executor is deterministic) and dropped, so downstream hops see each
+//! output plane exactly once. Only a hop with **zero survivors**
+//! degrades to the old fail-fast behavior and poisons the engine.
 
 use std::collections::BTreeMap;
 use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -37,7 +56,7 @@ use crate::coordinator::server::Engine;
 use crate::error::{Error, Result};
 use crate::net::shard::{ShardHost, ShardReport};
 use crate::net::transport::{LoopbackTransport, Transport};
-use crate::net::wire::{Frame, Role};
+use crate::net::wire::{encode_network, Frame, Role, MAX_PAYLOAD};
 use crate::snn::network::{GroupSpan, Network, StepTelemetry};
 use crate::snn::spikes::SpikePlane;
 use crate::snn::tensor::Mat;
@@ -54,6 +73,11 @@ pub struct DistributedConfig {
     /// flight toward one shard before its hop blocks on the reply
     /// stream (the handshaking FIFO depth of the wire).
     pub window: usize,
+    /// Replica links per shard hop (≥ 1). With more than one, a hop
+    /// fans clips across its replicas least-loaded-first and fails
+    /// over — re-push + replay — when the active replica dies; the
+    /// engine only fails once a hop has zero survivors.
+    pub replicas: usize,
 }
 
 impl Default for DistributedConfig {
@@ -61,15 +85,27 @@ impl Default for DistributedConfig {
         DistributedConfig {
             shards: 2,
             window: 2,
+            replicas: 1,
         }
     }
 }
 
 impl DistributedConfig {
-    /// A constellation of `shards` shards with the default window.
+    /// A constellation of `shards` shards with the default window and
+    /// no replication.
     pub fn with_shards(shards: usize) -> Self {
         DistributedConfig {
             shards,
+            ..DistributedConfig::default()
+        }
+    }
+
+    /// A fault-tolerant constellation: `shards` hops with `replicas`
+    /// links each.
+    pub fn replicated(shards: usize, replicas: usize) -> Self {
+        DistributedConfig {
+            shards,
+            replicas,
             ..DistributedConfig::default()
         }
     }
@@ -102,6 +138,28 @@ fn is_hop_teardown(e: &Error) -> bool {
     matches!(e, Error::Runtime(m) if m.contains("hop channel closed early"))
 }
 
+/// One replica link of a hop, with its failover state and the
+/// clips-served counter the least-loaded pick balances on.
+struct Replica {
+    link: Box<dyn Transport>,
+    /// False once a transport/protocol failure was observed on this
+    /// link; dead replicas are never picked again.
+    alive: bool,
+    /// Clips this replica served (the least-loaded dispatch key, the
+    /// pool's discipline applied to replica links).
+    clips: u64,
+}
+
+/// How one relay attempt on a replica failed.
+enum HopFailure {
+    /// The active replica's link or shard failed — mark it dead and
+    /// fail over to a survivor.
+    Replica(Error),
+    /// A neighbouring hop tore the in-process channel down (or the
+    /// run is otherwise unrecoverable); no replica can fix this.
+    Fatal(Error),
+}
+
 /// What one hop thread hands back when its clip share completes.
 struct HopOutcome {
     /// The shard's telemetry fragments, one per timestep.
@@ -112,36 +170,71 @@ struct HopOutcome {
     finished_at: std::time::Duration,
 }
 
+/// Least-loaded alive replica (ties break toward the lowest index).
+fn pick_replica(replicas: &[Replica]) -> Option<usize> {
+    replicas
+        .iter()
+        .enumerate()
+        .filter(|(_, r)| r.alive)
+        .min_by_key(|(i, r)| (r.clips, *i))
+        .map(|(i, _)| i)
+}
+
+/// Send one spike frame to the shard.
+fn send_frame(
+    link: &mut dyn Transport,
+    clip_id: u64,
+    seq: usize,
+    plane: &SpikePlane,
+    sm: &mut StageMetrics,
+) -> std::result::Result<(), HopFailure> {
+    let send0 = Instant::now();
+    link.send(&Frame::SpikeFrame {
+        clip: clip_id,
+        seq: seq as u32,
+        plane: plane.clone(),
+    })
+    .map_err(HopFailure::Replica)?;
+    sm.busy += send0.elapsed();
+    Ok(())
+}
+
 /// Receive one reply from the shard and forward any now-in-order
 /// output planes downstream (the reorder-buffer discipline applied to
-/// reply frames).
+/// reply frames). Replies whose `seq` is below the already-forwarded
+/// watermark are failover-replay regenerations — bit-identical by
+/// determinism — and are dropped so downstream sees each plane once.
 fn pump_reply(
     link: &mut dyn Transport,
     hop: usize,
     clip_id: u64,
     reorder: &mut BTreeMap<u32, SpikePlane>,
     next_fwd: &mut u32,
-    tx: &Option<SyncSender<SpikePlane>>,
+    tx: Option<&SyncSender<SpikePlane>>,
     sm: &mut StageMetrics,
-) -> Result<()> {
+) -> std::result::Result<(), HopFailure> {
     let wait0 = Instant::now();
-    let reply = link.recv()?;
+    let reply = link.recv().map_err(HopFailure::Replica)?;
     sm.busy += wait0.elapsed();
     match reply {
         Some(Frame::SpikeFrame { clip, seq, plane }) if clip == clip_id => {
-            reorder.insert(seq, plane);
+            if seq >= *next_fwd {
+                reorder.insert(seq, plane);
+            }
         }
         Some(Frame::SpikeFrame { clip, .. }) => {
-            return Err(Error::protocol(format!(
+            return Err(HopFailure::Replica(Error::protocol(format!(
                 "hop {hop}: reply for clip {clip} while clip {clip_id} is in flight"
-            )));
+            ))));
         }
-        Some(Frame::Error { message }) => return Err(Error::Protocol(message)),
+        Some(Frame::Error { message }) => {
+            return Err(HopFailure::Replica(Error::Protocol(message)));
+        }
         other => {
-            return Err(Error::protocol(format!(
+            return Err(HopFailure::Replica(Error::protocol(format!(
                 "hop {hop}: expected a spike-frame reply, got {}",
                 frame_name(&other)
-            )));
+            ))));
         }
     }
     while let Some(plane) = reorder.remove(next_fwd) {
@@ -149,20 +242,177 @@ fn pump_reply(
         if let Some(tx) = tx {
             let send0 = Instant::now();
             tx.send(plane)
-                .map_err(|_| hop_torn_down(hop, "downstream"))?;
+                .map_err(|_| HopFailure::Fatal(hop_torn_down(hop, "downstream")))?;
             sm.stall_out += send0.elapsed();
         }
     }
     Ok(())
 }
 
-/// Body of one hop thread: relay this clip's frames to one shard,
-/// keeping at most `window` frames in flight, and hand ordered output
-/// planes to the next hop.
+/// One relay attempt of a clip on one replica: optionally re-push the
+/// group (failover entry — resets the replica's banks and seq
+/// expectation), replay the `relayed` frames already consumed by
+/// earlier attempts, then relay live frames, drain, and return the
+/// shard's telemetry + Vmems.
+///
+/// The replay source is the caller's own clip slice for the first hop
+/// (its frames are resident for the clip's lifetime — no copies) and
+/// the `sent` log for upstream-fed hops. `log` keeps that log; it is
+/// off for single-replica hops (failover is unreachable there — a
+/// dead replica means zero survivors), which keeps the old zero-copy
+/// relay on that path.
 #[allow(clippy::too_many_arguments)]
-fn hop_loop(
+fn serve_on_replica(
     link: &mut dyn Transport,
     span: &GroupSpan,
+    wire_groups: &[(u32, u32)],
+    hop: usize,
+    frames: &[SpikePlane],
+    clip_id: u64,
+    window: usize,
+    rx: Option<&Receiver<SpikePlane>>,
+    tx: Option<&SyncSender<SpikePlane>>,
+    log: bool,
+    sent: &mut Vec<SpikePlane>,
+    relayed: &mut usize,
+    next_fwd: &mut u32,
+    sm: &mut StageMetrics,
+    epoch: Instant,
+    reprovision: bool,
+) -> std::result::Result<(Vec<StepTelemetry>, Vec<Mat>), HopFailure> {
+    let t_total = frames.len();
+    if reprovision {
+        // Weightless re-push: the survivor was provisioned at session
+        // start, so only the group assignment travels; the shard
+        // resets its banks/telemetry/seq for the replay.
+        link.send(&Frame::LoadGroup {
+            shard: hop as u32,
+            groups: wire_groups.to_vec(),
+            span: None,
+            workload: None,
+        })
+        .map_err(HopFailure::Replica)?;
+        match link.recv().map_err(HopFailure::Replica)? {
+            Some(Frame::LoadGroup { span: Some(s), .. }) if s == *span => {}
+            Some(Frame::Error { message }) => {
+                return Err(HopFailure::Replica(Error::Protocol(message)));
+            }
+            other => {
+                return Err(HopFailure::Replica(Error::protocol(format!(
+                    "hop {hop}: failover re-push expected a load-group ack, got {}",
+                    frame_name(&other)
+                ))));
+            }
+        }
+    }
+    let mut reorder: BTreeMap<u32, SpikePlane> = BTreeMap::new();
+    let mut inflight = 0usize;
+    // Replay the frames earlier attempts already consumed (no-op on
+    // the first attempt). The first hop replays straight from the
+    // caller's clip slice; upstream hops replay their log. `steps` is
+    // not re-counted: replays are recovery traffic, not new timesteps.
+    let replay: &[SpikePlane] = match rx {
+        None => &frames[..*relayed],
+        Some(_) => &sent[..*relayed],
+    };
+    for (t, plane) in replay.iter().enumerate() {
+        if inflight == window {
+            pump_reply(link, hop, clip_id, &mut reorder, next_fwd, tx, sm)?;
+            inflight -= 1;
+        }
+        send_frame(link, clip_id, t, plane, sm)?;
+        inflight += 1;
+    }
+    // Live frames: pull from upstream (or the clip source), log, send.
+    let mut t = *relayed;
+    while t < t_total {
+        let mut owned: Option<SpikePlane> = None;
+        if let Some(rx) = rx {
+            let wait0 = Instant::now();
+            let p = rx
+                .recv()
+                .map_err(|_| HopFailure::Fatal(hop_torn_down(hop, "upstream")))?;
+            sm.stall_in += wait0.elapsed();
+            owned = Some(p);
+        }
+        if t == 0 {
+            sm.fill = epoch.elapsed();
+        }
+        // Commit the plane to the replay source *before* anything can
+        // fail: a pump/send error below must never drop a plane
+        // already consumed from the upstream channel — the failover
+        // retry could not regenerate it and would wedge on a short
+        // channel. (First-hop planes live in `frames`; only the
+        // cursor moves.)
+        if log {
+            if let Some(p) = owned.take() {
+                sent.push(p);
+            }
+        }
+        *relayed = t + 1;
+        if inflight == window {
+            pump_reply(link, hop, clip_id, &mut reorder, next_fwd, tx, sm)?;
+            inflight -= 1;
+        }
+        let plane: &SpikePlane = if rx.is_none() {
+            &frames[t]
+        } else if log {
+            &sent[t]
+        } else {
+            // single-replica upstream hop: no retry is possible, so
+            // the plane is relayed without ever touching a log
+            owned.as_ref().expect("upstream plane is resident")
+        };
+        send_frame(link, clip_id, t, plane, sm)?;
+        sm.steps += 1;
+        inflight += 1;
+        t += 1;
+    }
+    while inflight > 0 {
+        pump_reply(link, hop, clip_id, &mut reorder, next_fwd, tx, sm)?;
+        inflight -= 1;
+    }
+    link.send(&Frame::Drain { clip: clip_id })
+        .map_err(HopFailure::Replica)?;
+    let wait0 = Instant::now();
+    let reply = link.recv().map_err(HopFailure::Replica)?;
+    sm.busy += wait0.elapsed();
+    let (telemetry, vmems) = match reply {
+        Some(Frame::Telemetry { clip, steps, vmems }) if clip == clip_id => (steps, vmems),
+        Some(Frame::Telemetry { clip, .. }) => {
+            return Err(HopFailure::Replica(Error::protocol(format!(
+                "hop {hop}: drained clip {clip} while clip {clip_id} is in flight"
+            ))));
+        }
+        Some(Frame::Error { message }) => {
+            return Err(HopFailure::Replica(Error::Protocol(message)));
+        }
+        other => {
+            return Err(HopFailure::Replica(Error::protocol(format!(
+                "hop {hop}: expected drained telemetry, got {}",
+                frame_name(&other)
+            ))));
+        }
+    };
+    if telemetry.len() != t_total {
+        return Err(HopFailure::Replica(Error::protocol(format!(
+            "hop {hop}: shard drained {} timesteps for a {t_total}-frame clip",
+            telemetry.len()
+        ))));
+    }
+    Ok((telemetry, vmems))
+}
+
+/// Body of one hop thread: relay this clip's frames to the hop's
+/// least-loaded replica, failing over — re-push + replay — on replica
+/// death until the clip completes or no survivor remains. Each
+/// absorbed failover bumps the shared engine counter immediately, so
+/// the count survives even when the clip ultimately errors.
+#[allow(clippy::too_many_arguments)]
+fn relay_clip(
+    replicas: &mut [Replica],
+    span: &GroupSpan,
+    wire_groups: &[(u32, u32)],
     hop: usize,
     frames: &[SpikePlane],
     clip_id: u64,
@@ -170,75 +420,70 @@ fn hop_loop(
     rx: Option<Receiver<SpikePlane>>,
     tx: Option<SyncSender<SpikePlane>>,
     epoch: Instant,
+    failovers: &AtomicU64,
 ) -> Result<HopOutcome> {
     let mut sm = StageMetrics::new(hop, span.layers);
-    let t_total = frames.len();
-    let mut reorder: BTreeMap<u32, SpikePlane> = BTreeMap::new();
+    // Per-clip replay state + forwarded watermark: the clip/seq
+    // identity that lets a survivor resume exactly where the dead
+    // replica left. The first hop replays from the caller's clip
+    // slice (only the `relayed` cursor moves); upstream hops keep the
+    // `sent` log. Single-replica hops skip the log entirely — no
+    // survivor could replay it.
+    let log = replicas.len() > 1 && rx.is_some();
+    let mut sent: Vec<SpikePlane> = Vec::new();
+    let mut relayed = 0usize;
     let mut next_fwd: u32 = 0;
-    let mut inflight = 0usize;
-    for (t, clip_frame) in frames.iter().enumerate() {
-        let owned;
-        let plane = match &rx {
-            None => clip_frame,
-            Some(rx) => {
-                let wait0 = Instant::now();
-                owned = rx.recv().map_err(|_| hop_torn_down(hop, "upstream"))?;
-                sm.stall_in += wait0.elapsed();
-                &owned
-            }
+    let mut attempt = 0usize;
+    loop {
+        let Some(ri) = pick_replica(replicas) else {
+            return Err(Error::Runtime(format!(
+                "distributed hop {hop}: zero surviving replicas"
+            )));
         };
-        if t == 0 {
-            sm.fill = epoch.elapsed();
+        let reprovision = attempt > 0;
+        attempt += 1;
+        match serve_on_replica(
+            &mut *replicas[ri].link,
+            span,
+            wire_groups,
+            hop,
+            frames,
+            clip_id,
+            window,
+            rx.as_ref(),
+            tx.as_ref(),
+            log,
+            &mut sent,
+            &mut relayed,
+            &mut next_fwd,
+            &mut sm,
+            epoch,
+            reprovision,
+        ) {
+            Ok((telemetry, vmems)) => {
+                replicas[ri].clips += 1;
+                return Ok(HopOutcome {
+                    telemetry,
+                    vmems,
+                    metrics: sm,
+                    finished_at: epoch.elapsed(),
+                });
+            }
+            Err(HopFailure::Fatal(e)) => return Err(e),
+            Err(HopFailure::Replica(e)) => {
+                replicas[ri].alive = false;
+                if !replicas.iter().any(|r| r.alive) {
+                    // Zero survivors: degrade to fail-fast with the
+                    // last replica's primary error.
+                    return Err(e);
+                }
+                // A survivor remains: count the absorbed failover
+                // (immediately — it must survive a later clip error)
+                // and loop around to re-push + replay.
+                failovers.fetch_add(1, Ordering::Relaxed);
+            }
         }
-        if inflight == window {
-            pump_reply(link, hop, clip_id, &mut reorder, &mut next_fwd, &tx, &mut sm)?;
-            inflight -= 1;
-        }
-        let send0 = Instant::now();
-        link.send(&Frame::SpikeFrame {
-            clip: clip_id,
-            seq: t as u32,
-            plane: plane.clone(),
-        })?;
-        sm.busy += send0.elapsed();
-        sm.steps += 1;
-        inflight += 1;
     }
-    while inflight > 0 {
-        pump_reply(link, hop, clip_id, &mut reorder, &mut next_fwd, &tx, &mut sm)?;
-        inflight -= 1;
-    }
-    link.send(&Frame::Drain { clip: clip_id })?;
-    let wait0 = Instant::now();
-    let reply = link.recv()?;
-    sm.busy += wait0.elapsed();
-    let (telemetry, vmems) = match reply {
-        Some(Frame::Telemetry { clip, steps, vmems }) if clip == clip_id => (steps, vmems),
-        Some(Frame::Telemetry { clip, .. }) => {
-            return Err(Error::protocol(format!(
-                "hop {hop}: drained clip {clip} while clip {clip_id} is in flight"
-            )));
-        }
-        Some(Frame::Error { message }) => return Err(Error::Protocol(message)),
-        other => {
-            return Err(Error::protocol(format!(
-                "hop {hop}: expected drained telemetry, got {}",
-                frame_name(&other)
-            )));
-        }
-    };
-    if telemetry.len() != t_total {
-        return Err(Error::protocol(format!(
-            "hop {hop}: shard drained {} timesteps for a {t_total}-frame clip",
-            telemetry.len()
-        )));
-    }
-    Ok(HopOutcome {
-        telemetry,
-        vmems,
-        metrics: sm,
-        finished_at: epoch.elapsed(),
-    })
 }
 
 /// The distributed serving engine: layer groups execute on shard
@@ -246,24 +491,33 @@ fn hop_loop(
 /// links, bit-identical in output and telemetry to `ReferenceEngine`.
 ///
 /// Built either against already-connected links
-/// ([`DistributedEngine::connect`] — the real multi-process topology,
-/// see the `spidr shard` CLI mode) or as a self-hosted in-process
-/// constellation over loopback pipes
+/// ([`DistributedEngine::connect`] /
+/// [`DistributedEngine::connect_replicated`] — the real multi-process
+/// topology, see the `spidr shard` CLI mode) or as a self-hosted
+/// in-process constellation over loopback pipes
 /// ([`DistributedEngine::loopback`] — what
 /// `ServerConfig::distributed` / `PoolConfig::distributed` select via
-/// `FunctionalEngine::from_config`).
+/// `FunctionalEngine::from_config`). Either way the coordinator
+/// **provisions every replica over the wire** at session start
+/// (weight push), so shard hosts can start blank.
 ///
-/// After a transport or shard error the engine is poisoned (remote
-/// Vmem state and sequence counters are no longer trustworthy) and
-/// every later `infer` fails; build a fresh engine to recover.
+/// With replicated hops, a replica's transport or protocol failure is
+/// absorbed: the hop re-pushes the group to a survivor and replays the
+/// in-flight clip from its log ([`DistributedEngine::failovers`]
+/// counts these). Only when a hop has zero survivors — or on a
+/// non-replica failure — is the engine poisoned (remote Vmem state and
+/// sequence counters are no longer trustworthy) and every later
+/// `infer` fails; build a fresh engine to recover.
 pub struct DistributedEngine {
     network: Network,
     groups: Vec<(usize, usize)>,
+    wire_groups: Vec<(u32, u32)>,
     spans: Vec<GroupSpan>,
-    links: Vec<Box<dyn Transport>>,
+    hops: Vec<Vec<Replica>>,
     window: usize,
     next_clip: u64,
     poisoned: bool,
+    failovers: u64,
     stages: Vec<StageMetrics>,
     last_telemetry: Vec<StepTelemetry>,
     last_vmems: Vec<Mat>,
@@ -278,74 +532,121 @@ impl fmt::Debug for DistributedEngine {
             .field("network", &self.network.name)
             .field("groups", &self.groups)
             .field("window", &self.window)
+            .field("replicas", &self.hops.iter().map(|h| h.len()).collect::<Vec<_>>())
             .field("next_clip", &self.next_clip)
             .field("poisoned", &self.poisoned)
+            .field("failovers", &self.failovers)
             .field("self_hosted_shards", &self.hosts.len())
             .finish()
     }
 }
 
 impl DistributedEngine {
-    /// Chain already-connected shard links into an engine: plan one
-    /// layer group per link, then handshake (`Hello`) and place
-    /// (`LoadGroup`) each shard, validating that every shard resolved
-    /// the span the coordinator planned.
+    /// Chain already-connected shard links into an engine, one replica
+    /// per hop (see [`DistributedEngine::connect_replicated`]).
     pub fn connect(
         network: Network,
-        mut links: Vec<Box<dyn Transport>>,
+        links: Vec<Box<dyn Transport>>,
         window: usize,
     ) -> Result<Self> {
-        if links.is_empty() {
-            return Err(Error::config("distributed engine needs at least one shard link"));
+        Self::connect_replicated(network, links.into_iter().map(|l| vec![l]).collect(), window)
+    }
+
+    /// Chain already-connected shard links into an engine with
+    /// `hops[g]` holding group `g`'s replica links: plan one layer
+    /// group per hop, then handshake (`Hello`) and provision
+    /// (`LoadGroup` carrying the serialized workload — the weight
+    /// push) every replica, validating that each resolved the span the
+    /// coordinator planned. Shards may be blank or pre-loaded; the
+    /// push makes both serve identical weights.
+    pub fn connect_replicated(
+        network: Network,
+        hops: Vec<Vec<Box<dyn Transport>>>,
+        window: usize,
+    ) -> Result<Self> {
+        if hops.is_empty() {
+            return Err(Error::config("distributed engine needs at least one shard hop"));
         }
-        let groups = plan_layer_groups(&network, links.len());
-        if groups.len() != links.len() {
+        if hops.iter().any(|h| h.is_empty()) {
+            return Err(Error::config(
+                "every distributed hop needs at least one replica link",
+            ));
+        }
+        let groups = plan_layer_groups(&network, hops.len());
+        if groups.len() != hops.len() {
             return Err(Error::config(format!(
-                "{} shard links but the network shards into at most {} layer groups",
-                links.len(),
+                "{} shard hops but the network shards into at most {} layer groups",
+                hops.len(),
                 groups.len()
             )));
         }
         let spans = network.group_spans(&groups)?;
         let wire_groups: Vec<(u32, u32)> =
             groups.iter().map(|&(a, b)| (a as u32, b as u32)).collect();
-        for (i, link) in links.iter_mut().enumerate() {
-            link.send(&Frame::Hello {
-                role: Role::Coordinator,
-                name: network.name.clone(),
-            })?;
-            match link.recv()? {
-                Some(Frame::Hello { role: Role::Shard, .. }) => {}
-                Some(Frame::Error { message }) => return Err(Error::Protocol(message)),
-                other => {
-                    return Err(Error::protocol(format!(
-                        "shard {i}: expected a hello, got {}",
-                        frame_name(&other)
-                    )));
-                }
-            }
-            link.send(&Frame::LoadGroup {
-                shard: i as u32,
-                groups: wire_groups.clone(),
-                span: None,
-            })?;
-            match link.recv()? {
-                Some(Frame::LoadGroup { span: Some(span), .. }) => {
-                    if span != spans[i] {
+        let workload = encode_network(&network);
+        // Surface oversized workloads here, with the real reason —
+        // otherwise the push dies shard-side as an opaque
+        // "length prefix exceeds the cap" protocol error. The envelope
+        // is the rest of the LoadGroup payload around the bundle:
+        // shard + groups count + span/workload flags + workload length
+        // prefix (14 bytes) plus 8 bytes per group range.
+        let envelope = 14 + 8 * wire_groups.len() as u64;
+        if workload.len() as u64 + envelope > MAX_PAYLOAD as u64 {
+            return Err(Error::config(format!(
+                "serialized workload is {} bytes — too large for the \
+                 {MAX_PAYLOAD}-byte frame cap, cannot provision shards over the wire",
+                workload.len()
+            )));
+        }
+        let mut replica_hops: Vec<Vec<Replica>> = Vec::with_capacity(hops.len());
+        for (i, links) in hops.into_iter().enumerate() {
+            let mut reps = Vec::with_capacity(links.len());
+            for (ri, mut link) in links.into_iter().enumerate() {
+                link.send(&Frame::Hello {
+                    role: Role::Coordinator,
+                    name: network.name.clone(),
+                })?;
+                match link.recv()? {
+                    Some(Frame::Hello { role: Role::Shard, .. }) => {}
+                    Some(Frame::Error { message }) => return Err(Error::Protocol(message)),
+                    other => {
                         return Err(Error::protocol(format!(
-                            "shard {i} resolved span {span:?}, coordinator planned {:?}",
-                            spans[i]
+                            "shard {i} replica {ri}: expected a hello, got {}",
+                            frame_name(&other)
                         )));
                     }
                 }
-                Some(Frame::Error { message }) => return Err(Error::Protocol(message)),
-                other => {
-                    return Err(Error::protocol(format!(
-                        "shard {i}: expected a load-group ack, got {}",
-                        frame_name(&other)
-                    )));
+                link.send(&Frame::LoadGroup {
+                    shard: i as u32,
+                    groups: wire_groups.clone(),
+                    span: None,
+                    workload: Some(workload.clone()),
+                })?;
+                match link.recv()? {
+                    Some(Frame::LoadGroup { span: Some(span), .. }) => {
+                        if span != spans[i] {
+                            return Err(Error::protocol(format!(
+                                "shard {i} replica {ri} resolved span {span:?}, \
+                                 coordinator planned {:?}",
+                                spans[i]
+                            )));
+                        }
+                    }
+                    Some(Frame::Error { message }) => return Err(Error::Protocol(message)),
+                    other => {
+                        return Err(Error::protocol(format!(
+                            "shard {i} replica {ri}: expected a load-group ack, got {}",
+                            frame_name(&other)
+                        )));
+                    }
                 }
+                reps.push(Replica {
+                    link,
+                    alive: true,
+                    clips: 0,
+                });
             }
+            replica_hops.push(reps);
         }
         let stages = spans
             .iter()
@@ -355,11 +656,13 @@ impl DistributedEngine {
         Ok(DistributedEngine {
             network,
             groups,
+            wire_groups,
             spans,
-            links,
+            hops: replica_hops,
             window: window.max(1),
             next_clip: 0,
             poisoned: false,
+            failovers: 0,
             stages,
             last_telemetry: Vec::new(),
             last_vmems: Vec::new(),
@@ -367,29 +670,36 @@ impl DistributedEngine {
         })
     }
 
-    /// Self-host a constellation: spawn one [`ShardHost`] thread per
-    /// layer group, paired to the engine over [`LoopbackTransport`]
-    /// byte pipes — the whole distributed path (codec, windowing,
-    /// reorder, drain) with no sockets, deterministic enough for
-    /// tests. The shard threads exit when the engine (and with it the
-    /// pipes) drops.
+    /// Self-host a constellation: spawn `shards × replicas` **blank**
+    /// [`ShardHost`] threads, paired to the engine over
+    /// [`LoopbackTransport`] byte pipes, then provision them all over
+    /// the wire — the whole distributed path (codec, weight push,
+    /// windowing, reorder, drain, failover) with no sockets,
+    /// deterministic enough for tests. The shard threads exit when the
+    /// engine (and with it the pipes) drops.
     pub fn loopback(network: Network, cfg: &DistributedConfig) -> Result<Self> {
         let groups = plan_layer_groups(&network, cfg.shards.max(1));
         if groups.is_empty() {
             return Err(Error::config("network has no stateful layers to shard"));
         }
-        let mut links: Vec<Box<dyn Transport>> = Vec::with_capacity(groups.len());
-        let mut hosts = Vec::with_capacity(groups.len());
+        let replicas = cfg.replicas.max(1);
+        let mut hops: Vec<Vec<Box<dyn Transport>>> = Vec::with_capacity(groups.len());
+        let mut hosts = Vec::with_capacity(groups.len() * replicas);
         for i in 0..groups.len() {
-            let (coord_end, mut shard_end) = LoopbackTransport::pair();
-            let net = network.clone();
-            let handle = std::thread::Builder::new()
-                .name(format!("spidr-shard-{i}"))
-                .spawn(move || ShardHost::new(net).serve(&mut shard_end))?;
-            links.push(Box::new(coord_end));
-            hosts.push(handle);
+            let mut links: Vec<Box<dyn Transport>> = Vec::with_capacity(replicas);
+            for r in 0..replicas {
+                let (coord_end, mut shard_end) = LoopbackTransport::pair();
+                let handle = std::thread::Builder::new()
+                    .name(format!("spidr-shard-{i}-{r}"))
+                    .spawn(move || {
+                        ShardHost::blank(format!("shard-{i}.{r}")).serve(&mut shard_end)
+                    })?;
+                links.push(Box::new(coord_end));
+                hosts.push(handle);
+            }
+            hops.push(links);
         }
-        let mut engine = Self::connect(network, links, cfg.window)?;
+        let mut engine = Self::connect_replicated(network, hops, cfg.window)?;
         engine.hosts = hosts;
         Ok(engine)
     }
@@ -409,6 +719,43 @@ impl DistributedEngine {
     /// `stall_in`/`stall_out` are inter-hop channel waits).
     pub fn stage_metrics(&self) -> &[StageMetrics] {
         &self.stages
+    }
+
+    /// Replica failovers absorbed so far across all hops (each one is
+    /// a re-push + replay that kept the run alive).
+    pub fn failovers(&self) -> u64 {
+        self.failovers
+    }
+
+    /// `(alive, total)` replica counts per hop — how degraded the
+    /// constellation is.
+    pub fn replica_status(&self) -> Vec<(usize, usize)> {
+        self.hops
+            .iter()
+            .map(|h| (h.iter().filter(|r| r.alive).count(), h.len()))
+            .collect()
+    }
+
+    /// Fault injection for tests, demos and the failover bench: sever
+    /// one replica's link by swapping in a transport whose peer is
+    /// already closed — the next use fails exactly like a crashed
+    /// shard process or a dropped connection. The engine does *not*
+    /// learn about the kill here; it discovers the failure through the
+    /// protocol and fails over, which is the behavior under test.
+    /// (The old link drops, so a live shard behind it sees a clean
+    /// EOF and ends its session.)
+    pub fn sever_replica(&mut self, hop: usize, replica: usize) -> Result<()> {
+        let r = self
+            .hops
+            .get_mut(hop)
+            .and_then(|h| h.get_mut(replica))
+            .ok_or_else(|| {
+                Error::config(format!("no replica {replica} on hop {hop} to sever"))
+            })?;
+        let (dead, gone) = LoopbackTransport::pair();
+        drop(gone);
+        r.link = Box::new(dead);
+        Ok(())
     }
 
     /// The last served clip's merged per-timestep telemetry, in layer
@@ -450,22 +797,30 @@ impl DistributedEngine {
         let clip_id = self.next_clip;
         self.next_clip += 1;
         let window = self.window;
-        let hops = self.links.len();
+        let hop_count = self.hops.len();
+        let wire_groups = &self.wire_groups;
         let epoch = Instant::now();
+        let failovers = AtomicU64::new(0);
         let results: Vec<Result<HopOutcome>> = std::thread::scope(|scope| {
-            let mut handles = Vec::with_capacity(hops);
+            let mut handles = Vec::with_capacity(hop_count);
             let mut prev_rx: Option<Receiver<SpikePlane>> = None;
-            for (gi, (link, span)) in self.links.iter_mut().zip(self.spans.iter()).enumerate() {
+            for (gi, (replicas, span)) in
+                self.hops.iter_mut().zip(self.spans.iter()).enumerate()
+            {
                 let rx = prev_rx.take();
-                let tx = if gi + 1 < hops {
+                let tx = if gi + 1 < hop_count {
                     let (tx, next_rx) = sync_channel(window);
                     prev_rx = Some(next_rx);
                     Some(tx)
                 } else {
                     None
                 };
+                let failovers = &failovers;
                 handles.push(scope.spawn(move || {
-                    hop_loop(&mut **link, span, gi, clip, clip_id, window, rx, tx, epoch)
+                    relay_clip(
+                        replicas, span, wire_groups, gi, clip, clip_id, window, rx, tx,
+                        epoch, failovers,
+                    )
                 }));
             }
             handles
@@ -474,11 +829,14 @@ impl DistributedEngine {
                 .collect()
         });
         let wall = epoch.elapsed();
+        // Absorbed failovers count even when the clip ultimately
+        // errors below — a replica demonstrably died either way.
+        self.failovers += failovers.into_inner();
 
         // Prefer a hop's own failure over the secondary channel-teardown
         // errors its neighbours observe.
         let mut teardown: Option<Error> = None;
-        let mut outcomes = Vec::with_capacity(hops);
+        let mut outcomes = Vec::with_capacity(hop_count);
         for r in results {
             match r {
                 Ok(o) => outcomes.push(o),
@@ -572,6 +930,7 @@ mod tests {
         // hop counters accumulated over both clips
         assert!(e.stage_metrics().iter().all(|s| s.steps == 12));
         assert_eq!(e.last_telemetry().len(), 6);
+        assert_eq!(e.failovers(), 0);
     }
 
     #[test]
@@ -595,6 +954,13 @@ mod tests {
     }
 
     #[test]
+    fn empty_replica_set_is_rejected() {
+        let net = demo_serving_network(4).unwrap();
+        let hops: Vec<Vec<Box<dyn Transport>>> = vec![vec![], vec![]];
+        assert!(DistributedEngine::connect_replicated(net, hops, 2).is_err());
+    }
+
+    #[test]
     fn bad_frame_shape_is_rejected_without_poisoning() {
         let net = demo_serving_network(4).unwrap();
         let mut e = DistributedEngine::loopback(net, &DistributedConfig::with_shards(2)).unwrap();
@@ -606,9 +972,157 @@ mod tests {
         assert!(e.infer(&ok).is_ok());
     }
 
+    /// Tentpole acceptance: killing a replica mid-stream loses zero
+    /// clips — the hop re-pushes the group to the survivor, replays,
+    /// and the outputs (Vmems + telemetry) stay bit-identical to the
+    /// reference across the failover.
+    #[test]
+    fn replica_killed_between_clips_fails_over_bit_identically() {
+        let net = demo_serving_network(6).unwrap();
+        let clip = demo_clip(11, 6, 2, 16, 16);
+        let mut reference = ReferenceEngine::new(net.clone()).unwrap();
+        let want = reference.infer(&clip).unwrap();
+        let ref_tel = {
+            let mut state = net.init_state().unwrap();
+            net.run(&clip, &mut state).unwrap()
+        };
+
+        let mut e =
+            DistributedEngine::loopback(net, &DistributedConfig::replicated(2, 2)).unwrap();
+        assert_eq!(e.infer(&clip).unwrap(), want);
+        assert_eq!(e.failovers(), 0);
+
+        // Clip 0 went to replica 0 of each hop (least-loaded tie →
+        // lowest index), so clip 1 will pick replica 1 — sever exactly
+        // that target on every hop to force the failover path.
+        for hop in 0..e.groups().len() {
+            e.sever_replica(hop, 1).unwrap();
+        }
+        let got = e.infer(&clip).unwrap();
+        assert_eq!(got, want, "failover clip diverged from the reference");
+        assert_eq!(e.last_telemetry(), &ref_tel[..], "telemetry diverged");
+        assert_eq!(e.failovers(), e.groups().len() as u64);
+        for (alive, total) in e.replica_status() {
+            assert_eq!((alive, total), (1, 2));
+        }
+
+        // degraded but alive: later clips keep serving on the survivor
+        assert_eq!(e.infer(&clip).unwrap(), want);
+    }
+
+    /// A transport that delivers the first `good_sends` sends /
+    /// `good_recvs` recvs and then fails that operation forever — a
+    /// shard that dies mid-clip with frames already relayed and
+    /// replies already forwarded, the hardest replay case (the
+    /// survivor must regenerate planes the coordinator already
+    /// forwarded downstream, and the hop must drop those duplicates).
+    struct FailAfter {
+        inner: LoopbackTransport,
+        good_sends: usize,
+        good_recvs: usize,
+    }
+
+    impl Transport for FailAfter {
+        fn send(&mut self, frame: &Frame) -> Result<()> {
+            if self.good_sends == 0 {
+                return Err(Error::Runtime("injected mid-clip link failure".into()));
+            }
+            self.good_sends -= 1;
+            self.inner.send(frame)
+        }
+
+        fn recv(&mut self) -> Result<Option<Frame>> {
+            if self.good_recvs == 0 {
+                return Err(Error::Runtime("injected mid-clip reply failure".into()));
+            }
+            self.good_recvs -= 1;
+            self.inner.recv()
+        }
+    }
+
+    /// Tentpole acceptance: replicas that die *mid-clip* — after
+    /// relaying some frames and forwarding some replies — are replaced
+    /// by survivors that replay from the per-clip state, and the final
+    /// output is still bit-identical to the reference. Hop 0's primary
+    /// dies on a *send* (replay resumes from the caller's clip slice);
+    /// hop 1's primary dies on a *reply recv with the window full*,
+    /// right after consuming a plane from the upstream channel — the
+    /// consumed plane must already sit in the replay log or the
+    /// survivor would wedge waiting for a frame upstream can never
+    /// resend.
+    #[test]
+    fn replica_dying_mid_clip_replays_on_survivor() {
+        let net = demo_pipeline_network(8).unwrap();
+        let clip = demo_clip(23, 8, 2, 24, 24);
+        let mut reference = ReferenceEngine::new(net.clone()).unwrap();
+        let want = reference.infer(&clip).unwrap();
+
+        // Two hops × two replicas, all blank + weight-pushed; each
+        // hop's primary is flaky, each standby healthy.
+        let mut hops: Vec<Vec<Box<dyn Transport>>> = Vec::new();
+        let mut hosts = Vec::new();
+        for hop in 0..2 {
+            let mut links: Vec<Box<dyn Transport>> = Vec::new();
+            for r in 0..2 {
+                let (coord_end, mut shard_end) = LoopbackTransport::pair();
+                hosts.push(std::thread::spawn(move || {
+                    let _ = ShardHost::blank("t").serve(&mut shard_end);
+                }));
+                links.push(match (hop, r) {
+                    // Hello + LoadGroup + 4 spike frames succeed, the
+                    // 5th frame *send* fails mid-clip.
+                    (0, 0) => Box::new(FailAfter {
+                        inner: coord_end,
+                        good_sends: 2 + 4,
+                        good_recvs: usize::MAX,
+                    }),
+                    // Hello ack + LoadGroup ack + 1 reply succeed, the
+                    // next reply *recv* fails — with window 2 that
+                    // lands mid-clip, immediately after a plane was
+                    // pulled off the inter-hop channel.
+                    (1, 0) => Box::new(FailAfter {
+                        inner: coord_end,
+                        good_sends: usize::MAX,
+                        good_recvs: 2 + 1,
+                    }),
+                    _ => Box::new(coord_end) as Box<dyn Transport>,
+                });
+            }
+            hops.push(links);
+        }
+        let mut e = DistributedEngine::connect_replicated(net, hops, 2).unwrap();
+        let got = e.infer(&clip).unwrap();
+        assert_eq!(got, want, "mid-clip failover diverged from the reference");
+        assert_eq!(e.failovers(), 2);
+        assert_eq!(e.replica_status()[0], (1, 2));
+        assert_eq!(e.replica_status()[1], (1, 2));
+        drop(e);
+        for h in hosts {
+            h.join().unwrap();
+        }
+    }
+
+    /// The zero-survivor rule: when every replica of a hop is dead the
+    /// engine degrades to the old fail-fast behavior — the clip fails
+    /// and the engine poisons.
+    #[test]
+    fn zero_survivors_fail_fast_and_poison() {
+        let net = demo_serving_network(4).unwrap();
+        let clip = demo_clip(5, 4, 2, 16, 16);
+        let mut e =
+            DistributedEngine::loopback(net, &DistributedConfig::replicated(2, 2)).unwrap();
+        assert!(e.infer(&clip).is_ok());
+        e.sever_replica(0, 0).unwrap();
+        e.sever_replica(0, 1).unwrap();
+        assert!(e.infer(&clip).is_err(), "no survivor on hop 0 must fail");
+        // poisoned: even though hop 1 is healthy, state is gone
+        assert!(e.infer(&clip).is_err(), "a poisoned engine must stay failed");
+    }
+
     /// The real multi-process shape, in-process: two shard hosts behind
     /// TCP sockets on localhost, chained by the coordinator — output
-    /// and Vmems bit-identical to the reference executor.
+    /// and Vmems bit-identical to the reference executor. The hosts
+    /// are **blank**: provisioning happens over the TCP link.
     #[test]
     fn tcp_constellation_matches_reference() {
         let net = demo_pipeline_network(5).unwrap();
@@ -621,11 +1135,10 @@ mod tests {
         for _ in 0..2 {
             let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
             let addr = listener.local_addr().unwrap();
-            let shard_net = net.clone();
             hosts.push(std::thread::spawn(move || {
                 let (stream, _) = listener.accept().unwrap();
                 let mut link = TcpTransport::from_stream(stream);
-                ShardHost::new(shard_net).serve(&mut link)
+                ShardHost::blank("tcp-blank").serve(&mut link)
             }));
             links.push(Box::new(TcpTransport::connect(addr).unwrap()));
         }
@@ -688,10 +1201,12 @@ mod tests {
             .unwrap()
     }
 
-    /// Acceptance: over random networks, shard counts and windows, the
-    /// loopback constellation's Vmems *and* telemetry are bit-identical
-    /// to `Network::run` — and the scheduler's cycle-level path agrees,
-    /// so all three executors stay pinned to one functional core.
+    /// Acceptance: over random networks, shard counts, windows and
+    /// replica counts, the loopback constellation's Vmems *and*
+    /// telemetry are bit-identical to `Network::run` — including
+    /// across a mid-stream replica kill when replication is on — and
+    /// the scheduler's cycle-level path agrees, so all executors stay
+    /// pinned to one functional core.
     #[test]
     fn prop_distributed_bit_identical_to_reference() {
         check("distributed_bit_identical", 10, |g| {
@@ -714,15 +1229,39 @@ mod tests {
             let cfg = DistributedConfig {
                 shards: 1 + g.index(stateful + 2), // may exceed the layer count
                 window: 1 + g.index(3),
+                replicas: 1 + g.index(2),
             };
 
             // sequential reference
             let mut ref_state = net.init_state().unwrap();
             let ref_tel = net.run(&frames, &mut ref_state).unwrap();
 
-            // distributed constellation
+            // distributed constellation (blank shards, weight-pushed)
             let mut e = DistributedEngine::loopback(net.clone(), &cfg).unwrap();
             e.infer(&frames).unwrap();
+            let first_ok = e.last_telemetry() == &ref_tel[..]
+                && ref_state
+                    .vmems
+                    .iter()
+                    .zip(e.last_vmems())
+                    .all(|(a, b)| a.as_slice() == b.as_slice());
+
+            // with replication: kill a random replica and serve the
+            // clip again — still bit-identical, zero clips lost
+            let failover_ok = if cfg.replicas > 1 {
+                let hop = g.index(e.groups().len());
+                let replica = g.index(cfg.replicas);
+                e.sever_replica(hop, replica).unwrap();
+                e.infer(&frames).unwrap();
+                e.last_telemetry() == &ref_tel[..]
+                    && ref_state
+                        .vmems
+                        .iter()
+                        .zip(e.last_vmems())
+                        .all(|(a, b)| a.as_slice() == b.as_slice())
+            } else {
+                true
+            };
 
             // cycle-level scheduler path as a cross-check
             let sched =
@@ -730,12 +1269,8 @@ mod tests {
             let mut sim_state = net.init_state().unwrap();
             sched.run_network_clip(&net, &frames, &mut sim_state).unwrap();
 
-            e.last_telemetry() == &ref_tel[..]
-                && ref_state
-                    .vmems
-                    .iter()
-                    .zip(e.last_vmems())
-                    .all(|(a, b)| a.as_slice() == b.as_slice())
+            first_ok
+                && failover_ok
                 && ref_state
                     .vmems
                     .iter()

@@ -11,7 +11,9 @@
 //!
 //! * [`wire`] — the frame codec (`Hello`, `LoadGroup`, `SpikeFrame`,
 //!   `Telemetry`, `Drain`, `Error`), length-prefixed + checksummed,
-//!   total on decode.
+//!   total on decode; `LoadGroup` can carry a serialized workload
+//!   ([`wire::encode_network`]) so the coordinator provisions blank
+//!   shards over the wire (weight push).
 //! * [`transport`] — the [`Transport`](transport::Transport) narrow
 //!   waist: TCP for real topologies, bounded in-process byte pipes
 //!   (loopback) for deterministic sockets-free tests.
@@ -22,7 +24,9 @@
 //!   [`DistributedEngine`](coordinator::DistributedEngine), the local
 //!   half: chains shards, windows frames over each link, reassembles
 //!   telemetry/Vmems; a serving `Engine`, bit-identical to the
-//!   reference executor.
+//!   reference executor. With `DistributedConfig::replicas > 1` each
+//!   hop holds N replica links and fails over — re-push + replay —
+//!   when one dies, failing fast only at zero survivors.
 
 pub mod coordinator;
 pub mod shard;
@@ -32,4 +36,4 @@ pub mod wire;
 pub use coordinator::{DistributedConfig, DistributedEngine};
 pub use shard::{ShardHost, ShardReport};
 pub use transport::{LoopbackTransport, TcpTransport, Transport};
-pub use wire::{Frame, Role};
+pub use wire::{decode_network, encode_network, Frame, Role};

@@ -3,12 +3,20 @@
 //!
 //! A [`ShardHost`] is the remote half of the distributed engine: it
 //! holds the whole network's weights locally (layer-stationary
-//! placement — weights never cross the wire), is assigned one
-//! contiguous layer group by a `LoadGroup` frame, and then services
-//! `SpikeFrame`s one timestep at a time through the same
-//! [`Network::step_group`] core every in-process executor uses — so
-//! distributed execution is bit-identical to the reference by
-//! construction.
+//! placement — after provisioning, weights never cross the wire
+//! again), is assigned one contiguous layer group by a `LoadGroup`
+//! frame, and then services `SpikeFrame`s one timestep at a time
+//! through the same [`Network::step_group`] core every in-process
+//! executor uses — so distributed execution is bit-identical to the
+//! reference by construction.
+//!
+//! A host can start **blank** ([`ShardHost::blank`], the
+//! `spidr shard --listen` default): it owns no workload until the
+//! coordinator's first `LoadGroup` pushes one over the wire
+//! ([`crate::net::wire::encode_network`]), after which the installed
+//! network stays resident across every later `LoadGroup` in the
+//! session (failover re-pushes re-assign the span without resending
+//! weights).
 //!
 //! Backpressure follows `coordinator/pipeline.rs`: the host serves
 //! strictly one frame per reply, so the number of frames in flight
@@ -34,7 +42,7 @@ pub struct ShardReport {
 
 /// A shard host serving one layer-group span of a network.
 pub struct ShardHost {
-    network: Network,
+    network: Option<Network>,
     name: String,
     span: Option<GroupSpan>,
     vmems: Vec<Mat>,
@@ -48,8 +56,23 @@ impl ShardHost {
     pub fn new(network: Network) -> Self {
         let name = format!("{}-shard", network.name);
         ShardHost {
-            network,
+            network: Some(network),
             name,
+            span: None,
+            vmems: Vec::new(),
+            telemetry: Vec::new(),
+            clip: None,
+        }
+    }
+
+    /// A host with no local workload: the coordinator must provision
+    /// it over the wire with a weight-carrying `LoadGroup` before any
+    /// spike frame is accepted (`spidr shard --listen` with no
+    /// `--workload` starts here).
+    pub fn blank(name: impl Into<String>) -> Self {
+        ShardHost {
+            network: None,
+            name: name.into(),
             span: None,
             vmems: Vec::new(),
             telemetry: Vec::new(),
@@ -60,6 +83,12 @@ impl ShardHost {
     /// The span this host was assigned, once loaded.
     pub fn span(&self) -> Option<&GroupSpan> {
         self.span.as_ref()
+    }
+
+    /// The workload this host serves — `None` until a blank host is
+    /// provisioned by a weight-carrying `LoadGroup`.
+    pub fn network(&self) -> Option<&Network> {
+        self.network.as_ref()
     }
 
     /// Serve one session: handle frames until the peer closes the link
@@ -96,19 +125,40 @@ impl ShardHost {
             Frame::Hello { role: Role::Shard, .. } => {
                 Err(Error::protocol("shard greeted by another shard"))
             }
-            Frame::LoadGroup { shard, groups, .. } => {
+            Frame::LoadGroup {
+                shard,
+                groups,
+                workload,
+                ..
+            } => {
+                // Weight push: install the serialized workload before
+                // resolving the span. The installed network persists
+                // for the rest of the session, so failover re-pushes
+                // (workload = None) re-assign and reset without
+                // resending weights.
+                if let Some(bytes) = workload {
+                    let net = crate::net::wire::decode_network(&bytes)?;
+                    self.name = format!("{}-shard", net.name);
+                    self.network = Some(net);
+                }
+                let network = self.network.as_ref().ok_or_else(|| {
+                    Error::protocol(
+                        "blank shard has no workload; the coordinator must push \
+                         one in its first LoadGroup",
+                    )
+                })?;
                 let plan: Vec<(usize, usize)> = groups
                     .iter()
                     .map(|&(a, b)| (a as usize, b as usize))
                     .collect();
-                let spans = self.network.group_spans(&plan)?;
+                let spans = network.group_spans(&plan)?;
                 let span = *spans.get(shard as usize).ok_or_else(|| {
                     Error::protocol(format!(
                         "shard index {shard} out of range for a {}-group plan",
                         spans.len()
                     ))
                 })?;
-                self.vmems = self.network.span_state(&span)?;
+                self.vmems = network.span_state(&span)?;
                 self.telemetry.clear();
                 self.clip = None;
                 self.span = Some(span);
@@ -116,12 +166,17 @@ impl ShardHost {
                     shard,
                     groups,
                     span: Some(span),
+                    workload: None,
                 }))
             }
             Frame::SpikeFrame { clip, seq, plane } => {
                 let span = self
                     .span
                     .ok_or_else(|| Error::protocol("spike frame before a group was loaded"))?;
+                let network = self
+                    .network
+                    .as_ref()
+                    .ok_or_else(|| Error::protocol("spike frame on an unprovisioned shard"))?;
                 match self.clip {
                     None => self.clip = Some(clip),
                     Some(current) if current != clip => {
@@ -137,7 +192,7 @@ impl ShardHost {
                         self.telemetry.len()
                     )));
                 }
-                let (out, tele) = self.network.step_group(&span, &plane, &mut self.vmems)?;
+                let (out, tele) = network.step_group(&span, &plane, &mut self.vmems)?;
                 self.telemetry.push(tele);
                 report.frames += 1;
                 Ok(Some(Frame::SpikeFrame {
@@ -231,6 +286,7 @@ mod tests {
             shard: 0,
             groups: groups.clone(),
             span: None,
+            workload: None,
         })
         .unwrap();
         let spans = net.group_spans(&[(0, 1), (1, 2)]).unwrap();
@@ -279,6 +335,105 @@ mod tests {
         assert_eq!((report.clips, report.frames), (2, 6));
     }
 
+    /// Tentpole acceptance: a blank host (no local workload) is fully
+    /// provisioned by a weight-carrying `LoadGroup` and then serves
+    /// frames bit-identically to local `step_group` on the pushed
+    /// network; a later weightless `LoadGroup` (the failover re-push)
+    /// keeps working against the installed network.
+    #[test]
+    fn blank_host_is_provisioned_by_weight_push() {
+        use crate::net::wire::encode_network;
+
+        let net = demo_serving_network(4).unwrap();
+        let (mut link, mut shard_end) = LoopbackTransport::pair();
+        let host = std::thread::spawn(move || {
+            let mut h = ShardHost::blank("blank");
+            let r = h.serve(&mut shard_end);
+            (r, h.network().map(|n| n.name.clone()))
+        });
+
+        let groups = vec![(0u32, 2u32)];
+        link.send(&Frame::LoadGroup {
+            shard: 0,
+            groups: groups.clone(),
+            span: None,
+            workload: Some(encode_network(&net)),
+        })
+        .unwrap();
+        match link.recv().unwrap() {
+            Some(Frame::LoadGroup { span: Some(s), workload, .. }) => {
+                assert_eq!(s, net.full_span());
+                assert!(workload.is_none(), "the ack must not echo weights back");
+            }
+            other => panic!("want LoadGroup ack, got {other:?}"),
+        }
+
+        let mut vmems = net.span_state(&net.full_span()).unwrap();
+        for seq in 0..3u32 {
+            let frame = rand_frame(500 + seq as u64);
+            link.send(&Frame::SpikeFrame {
+                clip: 0,
+                seq,
+                plane: frame.clone(),
+            })
+            .unwrap();
+            let (want, _) = net
+                .step_group(&net.full_span(), &frame, &mut vmems)
+                .unwrap();
+            match link.recv().unwrap() {
+                Some(Frame::SpikeFrame { plane, .. }) => {
+                    assert_eq!(plane, want, "provisioned shard diverged at seq {seq}");
+                }
+                other => panic!("want SpikeFrame reply, got {other:?}"),
+            }
+        }
+        link.send(&Frame::Drain { clip: 0 }).unwrap();
+        match link.recv().unwrap() {
+            Some(Frame::Telemetry { vmems: got, .. }) => assert_eq!(got, vmems),
+            other => panic!("want Telemetry reply, got {other:?}"),
+        }
+
+        // failover-style re-push: no weights, the installed network
+        // is retained and the banks reset
+        link.send(&Frame::LoadGroup {
+            shard: 0,
+            groups,
+            span: None,
+            workload: None,
+        })
+        .unwrap();
+        assert!(matches!(
+            link.recv().unwrap(),
+            Some(Frame::LoadGroup { span: Some(_), .. })
+        ));
+
+        drop(link);
+        let (report, name) = host.join().unwrap();
+        assert_eq!(report.unwrap().clips, 1);
+        assert_eq!(name.as_deref(), Some("serving-demo"));
+    }
+
+    /// A blank host must reject group assignment (and therefore every
+    /// later frame) until a workload is pushed.
+    #[test]
+    fn blank_host_rejects_load_without_workload() {
+        let (mut link, mut shard_end) = LoopbackTransport::pair();
+        let host =
+            std::thread::spawn(move || ShardHost::blank("blank").serve(&mut shard_end));
+        link.send(&Frame::LoadGroup {
+            shard: 0,
+            groups: vec![(0, 2)],
+            span: None,
+            workload: None,
+        })
+        .unwrap();
+        assert!(matches!(
+            link.recv().unwrap(),
+            Some(Frame::Error { message }) if message.contains("no workload")
+        ));
+        assert!(host.join().unwrap().is_err());
+    }
+
     #[test]
     fn frames_before_load_group_fail_the_session() {
         let (mut link, host) = spawn_host();
@@ -303,6 +458,7 @@ mod tests {
             shard: 0,
             groups: vec![(0, 2)],
             span: None,
+            workload: None,
         })
         .unwrap();
         assert!(matches!(

@@ -21,14 +21,18 @@
 //!
 //! The payload grammar round-trips the simulator's own types —
 //! [`SpikePlane`] (bit-packed, 8 cells per byte: planes are binary by
-//! contract), [`GroupSpan`], [`StepTelemetry`] and Vmem [`Mat`] banks
-//! — through [`Frame::to_bytes`] / [`Frame::from_bytes`], property
-//! tested in `prop_frame_roundtrip`.
+//! contract), [`GroupSpan`], [`StepTelemetry`], Vmem [`Mat`] banks and
+//! whole [`Network`] workloads ([`encode_network`] /
+//! [`decode_network`], the `LoadGroup` weight-push payload) — through
+//! [`Frame::to_bytes`] / [`Frame::from_bytes`], property tested in
+//! `prop_frame_roundtrip` and `prop_network_roundtrips_bit_exactly`.
 
 use std::io::{Read, Write};
 
 use crate::error::{Error, Result};
-use crate::snn::network::{GroupSpan, StepTelemetry};
+use crate::quant::Precision;
+use crate::snn::layer::{Layer, LayerKind, NeuronConfig, ResetMode};
+use crate::snn::network::{GroupSpan, Network, StepTelemetry};
 use crate::snn::spikes::SpikePlane;
 use crate::snn::tensor::Mat;
 
@@ -36,8 +40,10 @@ use crate::snn::tensor::Mat;
 pub const MAGIC: [u8; 4] = *b"SPDR";
 
 /// Wire-protocol version carried in every frame header; receivers
-/// reject frames from any other version.
-pub const VERSION: u16 = 1;
+/// reject frames from any other version. Version 2 added the
+/// [`Frame::LoadGroup`] `workload` field (over-the-wire weight push,
+/// so shards can start blank).
+pub const VERSION: u16 = 2;
 
 /// Hard cap on the payload length prefix (64 MiB) — anything larger is
 /// rejected before allocation, bounding what a corrupt or adversarial
@@ -58,7 +64,9 @@ pub enum Role {
 }
 
 /// One protocol message (DESIGN.md §Distributed has the session
-/// grammar: `Hello → LoadGroup → (SpikeFrame* Drain)*`).
+/// grammar: `Hello → LoadGroup[+workload] → (LoadGroup | SpikeFrame*
+/// Drain)*` — the first `LoadGroup` may push the serialized workload,
+/// later ones re-assign/reset for failover replay).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Frame {
     /// Session opener, echoed by the shard: version negotiation is the
@@ -72,8 +80,17 @@ pub enum Frame {
     /// Assign a layer group: the full stateful-layer group plan plus
     /// which slot this shard serves. The shard resolves its
     /// [`GroupSpan`], pins that span's Vmem banks locally
-    /// (layer-stationary placement — weights never cross the wire) and
-    /// echoes the frame with `span` filled in as the acknowledgement.
+    /// (layer-stationary placement) and echoes the frame with `span`
+    /// filled in as the acknowledgement.
+    ///
+    /// With `workload` set, the frame additionally *provisions* the
+    /// shard: the bytes are a serialized weight bundle
+    /// ([`encode_network`] — layer topology, quantized weight
+    /// matrices, precision and neuron config, checksummed like every
+    /// frame) that the shard installs before resolving the span, so a
+    /// blank `spidr shard --listen` needs no local artifact. Weights
+    /// cross the wire once at session start and stay pinned after
+    /// that; the echo never carries them back.
     LoadGroup {
         /// Index of the group this shard owns.
         shard: u32,
@@ -81,6 +98,11 @@ pub enum Frame {
         groups: Vec<(u32, u32)>,
         /// Resolved span — `None` in the request, `Some` in the echo.
         span: Option<GroupSpan>,
+        /// Serialized workload ([`encode_network`]) to install before
+        /// resolving the span — `Some` when the coordinator pushes
+        /// weights (blank-shard provisioning), `None` on re-pushes
+        /// (failover replay resets) and in the echo.
+        workload: Option<Vec<u8>>,
     },
     /// One timestep of spikes for `clip`, sequence-numbered so the
     /// receiver can enforce (and the sender's reorder buffer restore)
@@ -157,6 +179,10 @@ impl Wr {
     }
 
     fn i32(&mut self, v: i32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
@@ -251,6 +277,10 @@ impl<'a> Rd<'a> {
 
     fn i32(&mut self) -> Result<i32> {
         Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
     /// A length prefix that must still fit in the remaining buffer when
@@ -379,7 +409,12 @@ impl Frame {
                 });
                 w.str(name);
             }
-            Frame::LoadGroup { shard, groups, span } => {
+            Frame::LoadGroup {
+                shard,
+                groups,
+                span,
+                workload,
+            } => {
                 w.u32(*shard);
                 w.u32(groups.len() as u32);
                 for &(a, b) in groups {
@@ -391,6 +426,14 @@ impl Frame {
                     Some(s) => {
                         w.u8(1);
                         w.span(s);
+                    }
+                }
+                match workload {
+                    None => w.u8(0),
+                    Some(bytes) => {
+                        w.u8(1);
+                        w.u32(bytes.len() as u32);
+                        w.buf.extend_from_slice(bytes);
                     }
                 }
             }
@@ -443,10 +486,21 @@ impl Frame {
                         return Err(Error::protocol(format!("bad span flag {other}")));
                     }
                 };
+                let workload = match r.u8()? {
+                    0 => None,
+                    1 => {
+                        let n = r.len_prefix(1)?;
+                        Some(r.take(n)?.to_vec())
+                    }
+                    other => {
+                        return Err(Error::protocol(format!("bad workload flag {other}")));
+                    }
+                };
                 Frame::LoadGroup {
                     shard,
                     groups,
                     span,
+                    workload,
                 }
             }
             3 => Frame::SpikeFrame {
@@ -558,6 +612,233 @@ impl Frame {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Workload codec — the LoadGroup weight-push payload
+// ---------------------------------------------------------------------------
+
+/// Hard cap on the layer count of a pushed workload (the `.swb`
+/// loader's plausibility bound, applied to the wire too).
+const MAX_WORKLOAD_LAYERS: usize = 1024;
+
+/// Sane cap on kernel/stride/pad geometry of a pushed layer —
+/// generous for any Table-II shape, tight enough that a crafted
+/// geometry cannot blow up downstream output-shape arithmetic.
+const MAX_GEOMETRY: u64 = 512;
+
+/// Serialize a whole workload — layer topology, quantized weight
+/// matrices, neuron configuration, precision, timesteps — into the
+/// byte payload a [`Frame::LoadGroup`] pushes to a blank shard.
+/// Deterministic and bit-exact: [`decode_network`] rebuilds a network
+/// whose executors (the shard's `Network::step_group` included)
+/// produce bit-identical Vmems and telemetry to the original.
+pub fn encode_network(net: &Network) -> Vec<u8> {
+    let mut w = Wr::new();
+    w.str(&net.name);
+    w.u8(net.precision.weight_bits() as u8);
+    w.u32(net.timesteps as u32);
+    let (c, h, ww) = net
+        .layers
+        .first()
+        .map(|l| l.in_shape)
+        .unwrap_or((0, 0, 0));
+    w.u32(c as u32);
+    w.u32(h as u32);
+    w.u32(ww as u32);
+    w.u32(net.layers.len() as u32);
+    for l in &net.layers {
+        match l.kind {
+            LayerKind::Conv => {
+                w.u8(0);
+                w.u32(l.out_shape.0 as u32);
+                w.u32(l.kh as u32);
+                w.u32(l.kw as u32);
+                w.u32(l.stride as u32);
+                w.u32(l.pad as u32);
+                encode_layer_params(&mut w, l);
+            }
+            LayerKind::Fc => {
+                w.u8(1);
+                w.u32(l.out_shape.0 as u32);
+                encode_layer_params(&mut w, l);
+            }
+            LayerKind::Pool => {
+                w.u8(2);
+                w.u32(l.kh as u32);
+                w.u32(l.stride as u32);
+            }
+        }
+    }
+    w.buf
+}
+
+/// Shared tail of a stateful layer's encoding: neuron config,
+/// accumulate flag, quantization scale, weights.
+fn encode_layer_params(w: &mut Wr, l: &Layer) {
+    w.i32(l.neuron.theta);
+    w.i32(l.neuron.leak);
+    w.u8(u8::from(l.neuron.leaky));
+    w.u8(match l.neuron.reset {
+        ResetMode::Hard => 0,
+        ResetMode::Soft => 1,
+    });
+    w.u8(u8::from(l.accumulate));
+    w.f64(l.weight_scale);
+    // stateful layers always carry weights; a zero matrix is the
+    // (unreachable) total fallback
+    match &l.weights {
+        Some(m) => w.mat(m),
+        None => w.mat(&Mat::zeros(0, 0)),
+    }
+}
+
+/// Decode the tail of a stateful layer (see [`encode_layer_params`]).
+fn decode_layer_params(r: &mut Rd) -> Result<(NeuronConfig, bool, f64, Mat)> {
+    let theta = r.i32()?;
+    let leak = r.i32()?;
+    let leaky = match r.u8()? {
+        0 => false,
+        1 => true,
+        other => return Err(Error::protocol(format!("bad leaky flag {other}"))),
+    };
+    let reset = match r.u8()? {
+        0 => ResetMode::Hard,
+        1 => ResetMode::Soft,
+        other => return Err(Error::protocol(format!("bad reset mode {other}"))),
+    };
+    let accumulate = match r.u8()? {
+        0 => false,
+        1 => true,
+        other => return Err(Error::protocol(format!("bad accumulate flag {other}"))),
+    };
+    let scale = r.f64()?;
+    let weights = r.mat()?;
+    Ok((
+        NeuronConfig {
+            theta,
+            leak,
+            leaky,
+            reset,
+        },
+        accumulate,
+        scale,
+        weights,
+    ))
+}
+
+/// Rebuild a workload pushed by [`encode_network`]. Decoding is total,
+/// like the frame codec: truncation, malformed flags, implausible
+/// geometry (kernel/stride/pad beyond [`MAX_GEOMETRY`], output planes
+/// beyond [`MAX_PAYLOAD`] cells), weight matrices that don't match
+/// the flowing shape, and trailing bytes all return
+/// [`Error::Protocol`] — never a panic, never an unbounded allocation
+/// (weight data is validated against the remaining payload before any
+/// buffer is sized from it).
+pub fn decode_network(bytes: &[u8]) -> Result<Network> {
+    let mut r = Rd::new(bytes);
+    let name = r.str()?;
+    let precision = Precision::from_weight_bits(r.u8()? as u32)
+        .map_err(|e| Error::protocol(format!("bad workload precision: {e}")))?;
+    let timesteps = r.u32()? as usize;
+    let (c, h, w) = (r.u32()? as u64, r.u32()? as u64, r.u32()? as u64);
+    c.checked_mul(h)
+        .and_then(|v| v.checked_mul(w))
+        .filter(|&v| v >= 1 && v <= MAX_PAYLOAD as u64)
+        .ok_or_else(|| Error::protocol("implausible workload input shape"))?;
+    let n = r.u32()? as usize;
+    if n == 0 || n > MAX_WORKLOAD_LAYERS {
+        return Err(Error::protocol(format!(
+            "implausible workload layer count {n}"
+        )));
+    }
+    let mut shape = (c as usize, h as usize, w as usize);
+    let mut layers = Vec::with_capacity(n.min(64));
+    for i in 0..n {
+        let bad = |m: String| Error::protocol(format!("workload layer {i}: {m}"));
+        let layer = match r.u8()? {
+            0 => {
+                let out_ch = r.u32()? as u64;
+                let kh = r.u32()? as u64;
+                let kw = r.u32()? as u64;
+                let stride = r.u32()? as u64;
+                let pad = r.u32()? as u64;
+                if !(1..=MAX_GEOMETRY).contains(&kh)
+                    || !(1..=MAX_GEOMETRY).contains(&kw)
+                    || !(1..=MAX_GEOMETRY).contains(&stride)
+                    || pad > MAX_GEOMETRY
+                {
+                    return Err(bad(format!(
+                        "implausible conv geometry {kh}x{kw}/s{stride}/p{pad}"
+                    )));
+                }
+                let (_, ih, iw) = shape;
+                let span_h = (ih as u64) + 2 * pad;
+                let span_w = (iw as u64) + 2 * pad;
+                if span_h < kh || span_w < kw {
+                    return Err(bad(format!(
+                        "kernel {kh}x{kw} exceeds padded input {span_h}x{span_w}"
+                    )));
+                }
+                let ho = (span_h - kh) / stride + 1;
+                let wo = (span_w - kw) / stride + 1;
+                out_ch
+                    .checked_mul(ho)
+                    .and_then(|v| v.checked_mul(wo))
+                    .filter(|&v| v >= 1 && v <= MAX_PAYLOAD as u64)
+                    .ok_or_else(|| bad("implausible conv output plane".into()))?;
+                let (neuron, accumulate, scale, weights) = decode_layer_params(&mut r)?;
+                Layer::conv(
+                    shape,
+                    out_ch as usize,
+                    kh as usize,
+                    kw as usize,
+                    stride as usize,
+                    pad as usize,
+                    weights,
+                    neuron,
+                    accumulate,
+                )
+                .map_err(|e| bad(e.to_string()))?
+                .with_scale(scale)
+            }
+            1 => {
+                let out = r.u32()? as usize;
+                if out == 0 || out as u64 > MAX_PAYLOAD as u64 {
+                    return Err(bad(format!("implausible fc width {out}")));
+                }
+                let (neuron, accumulate, scale, weights) = decode_layer_params(&mut r)?;
+                Layer::fc(shape, out, weights, neuron, accumulate)
+                    .map_err(|e| bad(e.to_string()))?
+                    .with_scale(scale)
+            }
+            2 => {
+                let size = r.u32()? as u64;
+                let stride = r.u32()? as u64;
+                if !(1..=MAX_GEOMETRY).contains(&size)
+                    || !(1..=MAX_GEOMETRY).contains(&stride)
+                {
+                    return Err(bad(format!("implausible pool geometry {size}/{stride}")));
+                }
+                Layer::pool(shape, size as usize, stride as usize)
+            }
+            other => return Err(bad(format!("unknown layer kind {other}"))),
+        };
+        shape = layer.out_shape;
+        layers.push(layer);
+    }
+    r.finish()?;
+    if !layers.last().is_some_and(|l| l.accumulate) {
+        return Err(Error::protocol(
+            "workload must end in an accumulate output layer",
+        ));
+    }
+    Ok(Network {
+        name,
+        layers,
+        precision,
+        timesteps,
+    })
+}
+
 /// Validate a frame header and return the payload length.
 fn parse_header(header: &[u8; HEADER_LEN]) -> Result<usize> {
     if header[..4] != MAGIC {
@@ -618,6 +899,7 @@ mod tests {
                 shard: 1,
                 groups: vec![(0, 2), (2, 5)],
                 span: None,
+                workload: None,
             },
             Frame::LoadGroup {
                 shard: 0,
@@ -626,6 +908,13 @@ mod tests {
                     layers: (0, 3),
                     stateful: (0, 2),
                 }),
+                workload: None,
+            },
+            Frame::LoadGroup {
+                shard: 2,
+                groups: vec![(0, 3)],
+                span: None,
+                workload: Some(vec![0xde, 0xad, 0xbe, 0xef, 0x00]),
             },
             Frame::SpikeFrame {
                 clip: 7,
@@ -739,6 +1028,9 @@ mod tests {
                         layers: (g.index(9), g.index(9)),
                         stateful: (g.index(9), g.index(9)),
                     }),
+                    workload: g
+                        .chance(0.5)
+                        .then(|| g.vec_of(0, 64, |g| g.u64_in(0..=255) as u8)),
                 },
                 2 => Frame::SpikeFrame {
                     clip: g.u64(),
@@ -863,6 +1155,252 @@ mod tests {
 
         // the pristine frame still decodes (the cases above were real)
         assert!(Frame::from_bytes(&good).is_ok());
+    }
+
+    /// Satellite: adversarial decodes of the weight-push `LoadGroup` —
+    /// truncation at every prefix, checksum flips, a bad workload flag
+    /// and an oversized inner workload length must all come back as
+    /// `Error::Protocol`, never a panic or an unbounded allocation.
+    #[test]
+    fn adversarial_load_group_decodes_error_cleanly() {
+        let frame = Frame::LoadGroup {
+            shard: 1,
+            groups: vec![(0, 2), (2, 4)],
+            span: None,
+            workload: Some(vec![7u8; 96]),
+        };
+        let good = frame.to_bytes();
+
+        // truncation at every possible length
+        for n in 0..good.len() {
+            assert!(Frame::from_bytes(&good[..n]).is_err(), "prefix {n}");
+        }
+
+        // flipped payload bits: the checksum catches every position
+        for i in HEADER_LEN..good.len() - 4 {
+            let mut bad = good.clone();
+            bad[i] ^= 0x10;
+            assert!(matches!(Frame::from_bytes(&bad), Err(Error::Protocol(m))
+                if m.contains("checksum")));
+        }
+
+        // bad workload flag, behind a valid checksum
+        let mut w = Wr::new();
+        w.u32(0); // shard
+        w.u32(0); // no groups
+        w.u8(0); // no span
+        w.u8(9); // bad workload flag
+        let reframe = |payload: &[u8]| {
+            let mut evil = Vec::new();
+            evil.extend_from_slice(&MAGIC);
+            evil.extend_from_slice(&VERSION.to_le_bytes());
+            evil.push(2); // LoadGroup
+            evil.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+            evil.extend_from_slice(payload);
+            evil.extend_from_slice(&checksum(payload).to_le_bytes());
+            evil
+        };
+        assert!(matches!(
+            Frame::from_bytes(&reframe(&w.buf)),
+            Err(Error::Protocol(m)) if m.contains("workload flag")
+        ));
+
+        // inner workload length prefix far beyond the actual payload:
+        // rejected before any buffer is sized from it
+        let mut w = Wr::new();
+        w.u32(0);
+        w.u32(0);
+        w.u8(0);
+        w.u8(1); // workload present…
+        w.u32(u32::MAX); // …claiming 4 GiB of bytes that are not there
+        assert!(matches!(
+            Frame::from_bytes(&reframe(&w.buf)),
+            Err(Error::Protocol(m)) if m.contains("length prefix")
+        ));
+
+        // the pristine frame still decodes
+        let (back, _) = Frame::from_bytes(&good).unwrap();
+        assert_eq!(back, frame);
+    }
+
+    /// Build a small random-but-valid network for workload codec tests
+    /// (conv, optional pool, accumulate fc — the builder invariants).
+    fn rand_network(g: &mut Gen) -> Network {
+        let in_ch = 1 + g.index(2);
+        let h = 4 + g.index(5);
+        let w = 4 + g.index(5);
+        let precision = *g.choose(&[
+            Precision::W4V7,
+            Precision::W6V11,
+            Precision::W8V15,
+        ]);
+        let mut b = crate::snn::network::NetworkBuilder::new(
+            "wire-prop",
+            precision,
+            1 + g.index(8),
+            (in_ch, h, w),
+        );
+        let hidden = 1 + g.index(2);
+        for _ in 0..hidden {
+            let (c, _, _) = b.shape();
+            let out_ch = 1 + g.index(4);
+            let mut m = Mat::zeros(c * 9, out_ch);
+            for r in 0..c * 9 {
+                for k in 0..out_ch {
+                    m.set(r, k, g.i32_in(-7..=7));
+                }
+            }
+            let neuron = NeuronConfig {
+                theta: 1 + g.i32_in(0..=5),
+                leak: g.i32_in(0..=2),
+                leaky: g.chance(0.5),
+                reset: if g.chance(0.5) {
+                    ResetMode::Soft
+                } else {
+                    ResetMode::Hard
+                },
+            };
+            b = b.conv3x3(out_ch, m, neuron, false).unwrap();
+        }
+        if g.chance(0.5) {
+            b = b.pool(2, 2);
+        }
+        let (c, hh, ww) = b.shape();
+        let out = 1 + g.index(4);
+        let mut m = Mat::zeros(c * hh * ww, out);
+        for r in 0..c * hh * ww {
+            for k in 0..out {
+                m.set(r, k, g.i32_in(-7..=7));
+            }
+        }
+        b.fc(out, m, NeuronConfig::default(), true)
+            .unwrap()
+            .build()
+            .unwrap()
+    }
+
+    /// Tentpole: the workload codec round-trips whole networks —
+    /// topology, geometry, neuron config, precision and every weight
+    /// bit — and the rebuilt network *executes* identically (spot
+    /// check via one reference step).
+    #[test]
+    fn prop_network_roundtrips_bit_exactly() {
+        check("network_roundtrip", 30, |g| {
+            let net = rand_network(g);
+            let back = decode_network(&encode_network(&net)).unwrap();
+            if back.name != net.name
+                || back.precision != net.precision
+                || back.timesteps != net.timesteps
+                || back.layers.len() != net.layers.len()
+            {
+                return false;
+            }
+            for (a, b) in net.layers.iter().zip(&back.layers) {
+                let same = a.kind == b.kind
+                    && a.in_shape == b.in_shape
+                    && a.out_shape == b.out_shape
+                    && a.neuron == b.neuron
+                    && a.accumulate == b.accumulate
+                    && (a.kh, a.kw, a.stride, a.pad) == (b.kh, b.kw, b.stride, b.pad)
+                    && a.weight_scale == b.weight_scale
+                    && match (&a.weights, &b.weights) {
+                        (None, None) => true,
+                        (Some(x), Some(y)) => x.as_slice() == y.as_slice(),
+                        _ => false,
+                    };
+                if !same {
+                    return false;
+                }
+            }
+            // the decoded network steps bit-identically
+            let (c, h, w) = net.layers[0].in_shape;
+            let mut frame = SpikePlane::zeros(c, h, w);
+            for i in 0..frame.len() {
+                if g.chance(0.3) {
+                    frame.as_mut_slice()[i] = 1;
+                }
+            }
+            let mut s1 = net.init_state().unwrap();
+            let mut s2 = back.init_state().unwrap();
+            net.step(&frame, &mut s1).unwrap();
+            back.step(&frame, &mut s2).unwrap();
+            s1.vmems
+                .iter()
+                .zip(&s2.vmems)
+                .all(|(a, b)| a.as_slice() == b.as_slice())
+        });
+    }
+
+    /// Satellite: the workload decoder is total — truncation at every
+    /// prefix, implausible geometry, mismatched weights and trailing
+    /// bytes are all `Error::Protocol`, never a panic.
+    #[test]
+    fn adversarial_workload_decodes_error_cleanly() {
+        let net = crate::snn::network::demo_serving_network(4).unwrap();
+        let good = encode_network(&net);
+        assert!(decode_network(&good).is_ok());
+
+        // truncation at every possible length
+        for n in 0..good.len() {
+            assert!(
+                matches!(decode_network(&good[..n]), Err(Error::Protocol(_))),
+                "workload prefix {n} must fail as a protocol error"
+            );
+        }
+
+        // trailing garbage
+        let mut bad = good.clone();
+        bad.push(0xAA);
+        assert!(matches!(decode_network(&bad), Err(Error::Protocol(m))
+            if m.contains("trailing")));
+
+        // unsupported precision
+        let mut w = Wr::new();
+        w.str("x");
+        w.u8(5); // not 4/6/8
+        assert!(matches!(decode_network(&w.buf), Err(Error::Protocol(m))
+            if m.contains("precision")));
+
+        // implausible layer count
+        let mut w = Wr::new();
+        w.str("x");
+        w.u8(4);
+        w.u32(1); // timesteps
+        w.u32(1);
+        w.u32(4);
+        w.u32(4); // input 1x4x4
+        w.u32(u32::MAX); // 4 billion layers
+        assert!(matches!(decode_network(&w.buf), Err(Error::Protocol(m))
+            if m.contains("layer count")));
+
+        // a conv kernel larger than the padded input
+        let mut w = Wr::new();
+        w.str("x");
+        w.u8(4);
+        w.u32(1);
+        w.u32(1);
+        w.u32(4);
+        w.u32(4);
+        w.u32(1); // one layer
+        w.u8(0); // conv
+        w.u32(1); // out_ch
+        w.u32(100);
+        w.u32(100); // 100x100 kernel on a 4x4 input
+        w.u32(1); // stride
+        w.u32(0); // pad
+        assert!(matches!(decode_network(&w.buf), Err(Error::Protocol(m))
+            if m.contains("exceeds the padded input") || m.contains("exceeds padded input")));
+
+        // a spiking (non-accumulate) final layer violates the network
+        // contract
+        let mut spiking = net.clone();
+        for l in &mut spiking.layers {
+            l.accumulate = false;
+        }
+        assert!(matches!(
+            decode_network(&encode_network(&spiking)),
+            Err(Error::Protocol(m)) if m.contains("accumulate")
+        ));
     }
 
     #[test]

@@ -86,17 +86,31 @@ impl Precision {
 
 /// Two's-complement wrap of an i32 to `bits` bits (arithmetic
 /// shift-up/shift-down pair — exactly the adder chain's sign behavior).
+///
+/// Width-safe across the whole `i32` register: `bits` is clamped to
+/// `1..=32` (at 32 the wrap is the identity; a zero width has no
+/// signed range and is treated as 1 bit rather than shifting by 32,
+/// which would panic in debug builds).
 #[inline(always)]
 pub fn wrap_to_bits(x: i32, bits: u32) -> i32 {
-    let shift = 32 - bits;
+    let shift = 32 - bits.clamp(1, 32);
     (x << shift) >> shift
 }
 
 /// Saturating clamp to a signed `bits`-bit range (optional macro mode).
+///
+/// Width-safe: the old `(1 << (bits - 1)) - 1` overflowed in debug
+/// builds at `bits = 32` (shift by 31 makes `i32::MIN`, then `- 1`
+/// wraps) and underflowed at `bits = 0` (shift by `u32::MAX`). The
+/// bounds are now derived by shifting *down* from `i32::MAX`, which is
+/// exact for every width: `bits = 32` clamps to the full i32 range
+/// (identity) and `bits` is clamped to `1..=32` like [`wrap_to_bits`]
+/// (a 1-bit signed range is `[-1, 0]`).
 #[inline(always)]
 pub fn saturate_to_bits(x: i32, bits: u32) -> i32 {
-    let hi = (1 << (bits - 1)) - 1;
-    let lo = -(1 << (bits - 1));
+    let bits = bits.clamp(1, 32);
+    let hi = i32::MAX >> (32 - bits);
+    let lo = -hi - 1;
     x.clamp(lo, hi)
 }
 
@@ -177,9 +191,11 @@ mod tests {
 
     #[test]
     fn wrap_matches_modular_arithmetic() {
-        check("wrap_mod", 500, |g| {
-            let bits = *g.choose(&[7u32, 11, 15]);
-            let x = g.i32_in(-(1 << 30)..=1 << 30);
+        // Sweeps every register width 1..=32, not just the Vmem
+        // operating points — the codec must be total over widths.
+        check("wrap_mod", 1000, |g| {
+            let bits = 1 + g.index(32) as u32;
+            let x = g.i32_in(i32::MIN..=i32::MAX);
             let m = 1i64 << bits;
             let expected =
                 ((x as i64 + m / 2).rem_euclid(m) - m / 2) as i32;
@@ -208,6 +224,40 @@ mod tests {
         assert_eq!(saturate_to_bits(1000, 7), 63);
         assert_eq!(saturate_to_bits(-1000, 7), -64);
         assert_eq!(saturate_to_bits(5, 7), 5);
+    }
+
+    /// Regression: the old `(1 << (bits - 1)) - 1` clamp overflowed in
+    /// debug builds at `bits = 32` and shifted by `u32::MAX` at
+    /// `bits = 0`; both widths must now be total.
+    #[test]
+    fn saturate_and_wrap_are_total_at_the_width_edges() {
+        // 32 bits: the full register — both ops are the identity.
+        for x in [i32::MIN, -1, 0, 1, i32::MAX] {
+            assert_eq!(saturate_to_bits(x, 32), x);
+            assert_eq!(wrap_to_bits(x, 32), x);
+        }
+        // 1 bit: the signed range is [-1, 0].
+        assert_eq!(saturate_to_bits(7, 1), 0);
+        assert_eq!(saturate_to_bits(-7, 1), -1);
+        assert_eq!(wrap_to_bits(2, 1), 0);
+        assert_eq!(wrap_to_bits(1, 1), -1);
+        // 0 bits has no signed range; clamped to 1 bit, never a panic.
+        assert_eq!(saturate_to_bits(7, 0), 0);
+        assert_eq!(saturate_to_bits(-7, 0), -1);
+        assert_eq!(wrap_to_bits(3, 0), wrap_to_bits(3, 1));
+    }
+
+    /// Saturation across every width 1..=32 matches the i64-domain
+    /// clamp to `[-2^(bits-1), 2^(bits-1) - 1]`.
+    #[test]
+    fn prop_saturate_matches_i64_clamp_all_widths() {
+        check("saturate_widths", 1000, |g| {
+            let bits = 1 + g.index(32) as u32;
+            let x = g.i32_in(i32::MIN..=i32::MAX);
+            let hi = (1i64 << (bits - 1)) - 1;
+            let lo = -(1i64 << (bits - 1));
+            saturate_to_bits(x, bits) as i64 == (x as i64).clamp(lo, hi)
+        });
     }
 
     #[test]

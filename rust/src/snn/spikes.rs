@@ -92,12 +92,29 @@ impl SparsityStats {
     }
 
     /// Minimum per-observation sparsity (densest moment).
+    ///
+    /// With zero observations the running minimum is the fold identity
+    /// `+inf`, which is not a sparsity and not even valid JSON once a
+    /// bench emits it (`Infinity` corrupts `BENCH_*.json`); an empty
+    /// band collapses to [`SparsityStats::mean_sparsity`] instead, so
+    /// min/mean/max always agree on an empty stream and every band
+    /// value is finite in [0, 1].
     pub fn min_sparsity(&self) -> f64 {
+        if self.observations == 0 {
+            return self.mean_sparsity();
+        }
         self.min
     }
 
     /// Maximum per-observation sparsity.
+    ///
+    /// Like [`SparsityStats::min_sparsity`], an empty band (zero
+    /// observations — the fold identity would be `−inf`) collapses to
+    /// the mean-sparsity fallback so the value stays finite.
     pub fn max_sparsity(&self) -> f64 {
+        if self.observations == 0 {
+            return self.mean_sparsity();
+        }
         self.max
     }
 
@@ -136,6 +153,30 @@ mod tests {
         let s = SparsityStats::new();
         assert_eq!(s.mean_sparsity(), 1.0);
         assert_eq!(s.observations(), 0);
+    }
+
+    /// Regression (ISSUE 5 headline bugfix): an empty stream used to
+    /// report `min = +inf` / `max = −inf` — the raw fold identities —
+    /// which serialized as `Infinity` and silently corrupted the
+    /// Fig. 5 `BENCH_*.json` artifact. Empty bands must be finite,
+    /// collapse to the mean, and format as strict JSON numbers.
+    #[test]
+    fn empty_stream_bands_are_finite_and_json_valid() {
+        let mut s = SparsityStats::new();
+        s.record_counts(0, 0); // zero cells: not an observation
+        assert_eq!(s.observations(), 0);
+        for v in [s.min_sparsity(), s.mean_sparsity(), s.max_sparsity()] {
+            assert!(v.is_finite(), "empty-stream band {v} must be finite");
+            assert_eq!(v, 1.0, "empty bands collapse to the mean fallback");
+            // `Infinity`/`NaN` are not JSON; a finite f64's `{}` format
+            // is — exactly what benches/common::emit writes per line.
+            let line = format!("{{\"y\":{v}}}");
+            assert!(!line.contains("inf") && !line.contains("NaN"), "{line}");
+        }
+        // once a real observation lands, the bands are live again
+        s.record_counts(25, 100);
+        assert_eq!(s.min_sparsity(), 0.75);
+        assert_eq!(s.max_sparsity(), 0.75);
     }
 
     /// The stats stay O(1): a long stream folds into the same bands a
