@@ -101,7 +101,7 @@ fn main() -> spidr::Result<()> {
     };
     let server = InferenceServer::new(cfg);
     let requests: Vec<Vec<Event>> = (0..12).map(|i| burst(900 + i)).collect();
-    let mut engine = FunctionalEngine::from_config(net, cfg.pipeline, cfg.distributed)?;
+    let mut engine = FunctionalEngine::from_config(net, cfg.pipeline, cfg.distributed, cfg.batch)?;
     let (responses, mut metrics) = server.serve(requests, &mut engine)?;
     metrics.stages = engine.stage_metrics().to_vec();
     println!(

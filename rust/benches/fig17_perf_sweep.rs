@@ -6,9 +6,16 @@
 
 mod common;
 
+use std::time::Instant;
+
 use spidr::energy::calibration::measure;
 use spidr::energy::model::Corner;
 use spidr::quant::{Precision, ALL_PRECISIONS};
+use spidr::sim::config::SimConfig;
+use spidr::sim::core::{LaneBank, SpidrCore};
+use spidr::snn::layer::{Layer, NeuronConfig};
+use spidr::snn::spikes::{LaneFrame, SpikePlane};
+use spidr::snn::tensor::Mat;
 
 fn main() {
     common::header("Fig. 17", "GOPS & TOPS/W vs sparsity x precision (50 MHz / 0.9 V)");
@@ -45,4 +52,38 @@ fn main() {
 
     let hi4 = measure(Precision::W4V7, Corner::HIGH, 0.95);
     println!("peak: {:.2} GOPS @150 MHz/1 V, 4-bit, 95 % (paper: 73.59)", hi4.gops);
+
+    // Batched bit-plane variant of the sweep (DESIGN.md §Perf): the
+    // modelled GOPS above is per-clip silicon throughput; this row is
+    // host wall-clock of the 64-lane batched datapath across the same
+    // sparsity axis — one union address stream and one CIM-row sweep
+    // per batch, so clips/s grows as the union stream thins out.
+    const LANES: usize = 64;
+    let layer = Layer::conv(
+        (8, 16, 16),
+        24,
+        3,
+        3,
+        1,
+        1,
+        Mat::zeros(72, 24),
+        NeuronConfig { theta: 16, leak: 2, leaky: true, ..Default::default() },
+        false,
+    )
+    .unwrap();
+    let core = SpidrCore::new(SimConfig::default());
+    println!("\n{:>10} | {:>14}", "sparsity", "batched clip/s");
+    for (si, &s) in sparsities.iter().enumerate() {
+        let clips: Vec<Vec<SpikePlane>> = (0..LANES)
+            .map(|b| common::random_clip(8, 16, 16, 4, 1.0 - s, 0x1700 + (si * LANES + b) as u64))
+            .collect();
+        let refs: Vec<&[SpikePlane]> = clips.iter().map(|c| c.as_slice()).collect();
+        let t0 = Instant::now();
+        let frames = LaneFrame::pack_clips(&refs).unwrap();
+        let mut bank = LaneBank::zeros(16 * 16, 24, LANES);
+        core.run_layer_lanes(&layer, &frames, &mut bank).unwrap();
+        let clips_s = LANES as f64 / t0.elapsed().as_secs_f64();
+        println!("{:>9.0}% | {:>14.1}", s * 100.0, clips_s);
+        common::emit("fig17_batched_clips_per_s", s, clips_s);
+    }
 }

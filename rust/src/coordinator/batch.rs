@@ -1,0 +1,366 @@
+//! Batch-parallel serving engine over the lane-major bit-plane
+//! datapath (DESIGN.md §Perf).
+//!
+//! [`BatchedEngine`] packs up to [`MAX_LANES`] clips into the `u64`
+//! bit-lanes of a [`LaneFrame`] stream and runs every stateful layer
+//! through [`SpidrCore::run_layer_lanes`]: one im2col walk, one union
+//! address stream, and one contiguous CIM-row sweep per batch instead
+//! of per clip. Zero-skipping becomes "skip cells whose lane word is
+//! 0", so host dispatch overhead is amortized across the batch while
+//! lane `b`'s Vmems, output spikes, and telemetry stay **bit-exact**
+//! against a per-clip [`ReferenceEngine`] run of clip `b`
+//! (`prop_batched_bit_identical_per_lane`).
+//!
+//! The serving tier selects it like its siblings: set
+//! [`ServerConfig::batch`](super::server::ServerConfig) /
+//! [`PoolConfig::batch`](super::pool::PoolConfig) and
+//! [`FunctionalEngine::from_config`](super::pipeline::FunctionalEngine)
+//! builds one; the single-engine server and the pool workers then
+//! drain their inboxes through [`Engine::infer_batch`] in batches of
+//! up to [`BatchConfig::capacity`] clips.
+
+use crate::error::{Error, Result};
+use crate::sim::config::SimConfig;
+use crate::sim::{LaneBank, SpidrCore};
+use crate::snn::layer::LayerKind;
+use crate::snn::network::{pool_step_lanes, Network, StepTelemetry};
+use crate::snn::spikes::{LaneFrame, SpikePlane, MAX_LANES};
+
+use super::server::Engine;
+
+/// Configuration of the batched bit-plane engine, sibling of
+/// `PipelineConfig`/`DistributedConfig` (carried as an `Option` by
+/// `ServerConfig` and `PoolConfig` to select the engine).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchConfig {
+    /// Desired clips per batch; clamped to `1..=`[`MAX_LANES`] (the
+    /// `u64` lane-word width) by [`BatchConfig::capacity`].
+    pub max_lanes: usize,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig {
+            max_lanes: MAX_LANES,
+        }
+    }
+}
+
+impl BatchConfig {
+    /// A batch of up to `max_lanes` clips.
+    pub fn with_lanes(max_lanes: usize) -> Self {
+        BatchConfig { max_lanes }
+    }
+
+    /// Effective clips per batch: `max_lanes` clamped to the lane-word
+    /// width (`1..=`[`MAX_LANES`]).
+    pub fn capacity(&self) -> usize {
+        self.max_lanes.clamp(1, MAX_LANES)
+    }
+}
+
+/// The batch-parallel functional serving engine: up to [`MAX_LANES`]
+/// clips per inference call, packed into bit-plane lanes and swept
+/// through the CIM rows once per batch. Per-clip results are
+/// bit-identical to [`ReferenceEngine`](super::server::ReferenceEngine)
+/// lane by lane; per-lane [`StepTelemetry`] for the most recent batch
+/// is kept on the engine.
+#[derive(Debug, Clone)]
+pub struct BatchedEngine {
+    network: Network,
+    core: SpidrCore,
+    cfg: BatchConfig,
+    /// Per-lane, per-timestep telemetry of the most recent batch.
+    telemetry: Vec<Vec<StepTelemetry>>,
+}
+
+impl BatchedEngine {
+    /// Build an engine around a workload. Validates up front that
+    /// every stateful layer's fan-in is mappable onto the core
+    /// (`select_mode`), so serving never fails mid-batch on a layer
+    /// the chip could not host.
+    pub fn new(network: Network, cfg: BatchConfig) -> Result<Self> {
+        if network.layers.is_empty() {
+            return Err(Error::config("empty network"));
+        }
+        let core = SpidrCore::new(SimConfig {
+            precision: network.precision,
+            ..SimConfig::default()
+        });
+        for layer in network.stateful_layers() {
+            core.select_mode(layer.fan_in())?;
+        }
+        Ok(BatchedEngine {
+            network,
+            core,
+            cfg,
+            telemetry: Vec::new(),
+        })
+    }
+
+    /// The workload this engine serves.
+    pub fn network(&self) -> &Network {
+        &self.network
+    }
+
+    /// Effective clips per batch (the serving tier's drain limit).
+    pub fn capacity(&self) -> usize {
+        self.cfg.capacity()
+    }
+
+    /// Per-lane telemetry of the most recent batch: entry `b` holds
+    /// clip `b`'s per-timestep [`StepTelemetry`], bit-identical to
+    /// what [`Network::run`] reports for that clip alone.
+    pub fn telemetry(&self) -> &[Vec<StepTelemetry>] {
+        &self.telemetry
+    }
+
+    /// Run one batch of clips (clip `b` → bit-lane `b`); output `b` is
+    /// clip `b`'s final accumulator bank, bit-identical to a per-clip
+    /// run. All clips must share the network's input shape and one
+    /// timestep count; at most [`Self::capacity`] clips per call
+    /// ([`Engine::infer_batch`] chunks larger batches).
+    pub fn infer_lanes(&mut self, clips: &[&[SpikePlane]]) -> Result<Vec<Vec<i32>>> {
+        if clips.len() > self.cfg.capacity() {
+            return Err(Error::config(format!(
+                "batch of {} clips exceeds the configured lane capacity {}",
+                clips.len(),
+                self.cfg.capacity()
+            )));
+        }
+        let mut frames = LaneFrame::pack_clips(clips)?;
+        let lanes = clips.len();
+        let timesteps = frames.len();
+        self.telemetry = vec![vec![StepTelemetry::default(); timesteps]; lanes];
+        if timesteps == 0 {
+            // An empty clip leaves every Vmem bank zeroed, exactly as
+            // the reference engine's reset-then-no-steps path does.
+            let (m, k) = self.network.out_shape()?;
+            return Ok(vec![vec![0; m * k]; lanes]);
+        }
+        let mut last_bank: Option<LaneBank> = None;
+        for layer in &self.network.layers {
+            match layer.kind {
+                LayerKind::Pool => {
+                    frames = frames.iter().map(|f| pool_step_lanes(layer, f)).collect();
+                }
+                LayerKind::Conv | LayerKind::Fc => {
+                    for (t, f) in frames.iter().enumerate() {
+                        let cells = f.plane().len() as u64;
+                        for (b, spikes) in f.lane_counts().into_iter().enumerate() {
+                            self.telemetry[b][t].layer_input_spikes.push(spikes);
+                            self.telemetry[b][t].layer_input_cells.push(cells);
+                        }
+                    }
+                    let (m, k) = layer.vmem_shape()?;
+                    let mut bank = LaneBank::zeros(m, k, lanes);
+                    let (out, _) = self.core.run_layer_lanes(layer, &frames, &mut bank)?;
+                    frames = out;
+                    last_bank = Some(bank);
+                }
+            }
+        }
+        let bank = last_bank.ok_or_else(|| Error::config("network has no stateful layers"))?;
+        Ok((0..lanes)
+            .map(|b| bank.lane_mat(b).as_slice().to_vec())
+            .collect())
+    }
+}
+
+impl Engine for BatchedEngine {
+    type Output = Vec<i32>;
+
+    fn infer(&mut self, clip: &[SpikePlane]) -> Result<Vec<i32>> {
+        Ok(self
+            .infer_lanes(&[clip])?
+            .pop()
+            .expect("one clip in, one output out"))
+    }
+
+    fn max_batch(&self) -> usize {
+        self.cfg.capacity()
+    }
+
+    fn infer_batch(&mut self, clips: &[&[SpikePlane]]) -> Result<Vec<Vec<i32>>> {
+        let mut out = Vec::with_capacity(clips.len());
+        for chunk in clips.chunks(self.cfg.capacity()) {
+            out.extend(self.infer_lanes(chunk)?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::ReferenceEngine;
+    use crate::prop::{check, Gen};
+    use crate::quant::Precision;
+    use crate::snn::layer::{NeuronConfig, ResetMode};
+    use crate::snn::network::NetworkBuilder;
+    use crate::snn::tensor::Mat;
+
+    fn rand_mat(g: &mut Gen, rows: usize, cols: usize) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                m.set(r, c, g.i32_in(-7..=7));
+            }
+        }
+        m
+    }
+
+    /// A random spiking network: 1–3 hidden conv layers (random
+    /// channels, thresholds, leaks, reset modes), an optional pool,
+    /// and an accumulate FC readout — the same family the pipeline
+    /// equivalence property uses.
+    fn random_network(g: &mut Gen) -> Network {
+        let in_ch = 1 + g.index(2);
+        let h = 4 + 2 * g.index(3);
+        let w = 4 + 2 * g.index(3);
+        let hidden = 1 + g.index(3);
+        let pool_after = g.index(hidden + 1); // == hidden means "none"
+        let mut b = NetworkBuilder::new("prop-batch", Precision::W4V7, 3, (in_ch, h, w));
+        for i in 0..hidden {
+            let (c, _, _) = b.shape();
+            let out_ch = 2 + g.index(5);
+            let neuron = NeuronConfig {
+                theta: 1 + g.i32_in(0..=6),
+                leak: g.i32_in(0..=2),
+                leaky: g.chance(0.5),
+                reset: if g.chance(0.5) {
+                    ResetMode::Soft
+                } else {
+                    ResetMode::Hard
+                },
+            };
+            let wm = rand_mat(g, c * 9, out_ch);
+            b = b.conv3x3(out_ch, wm, neuron, false).unwrap();
+            if i == pool_after {
+                b = b.pool(2, 2);
+            }
+        }
+        let (c, hh, ww) = b.shape();
+        let out = 2 + g.index(3);
+        let wm = rand_mat(g, c * hh * ww, out);
+        b.fc(out, wm, NeuronConfig::default(), true)
+            .unwrap()
+            .build()
+            .unwrap()
+    }
+
+    /// One random clip; with probability 0.15 it is entirely silent,
+    /// exercising the all-zero-lane edge of the union stream.
+    fn random_clip(g: &mut Gen, net: &Network, t: usize) -> Vec<SpikePlane> {
+        let (c, h, w) = net.layers[0].in_shape;
+        let density = if g.chance(0.15) {
+            0.0
+        } else {
+            0.1 + g.f64() * 0.4
+        };
+        (0..t)
+            .map(|_| {
+                let mut p = SpikePlane::zeros(c, h, w);
+                for i in 0..p.len() {
+                    if g.chance(density) {
+                        p.as_mut_slice()[i] = 1;
+                    }
+                }
+                p
+            })
+            .collect()
+    }
+
+    /// Satellite: every lane of the batched engine — outputs *and*
+    /// per-step telemetry — is bit-identical to a per-clip
+    /// [`ReferenceEngine`] / [`Network::run`] of that lane's clip,
+    /// across random networks, batch sizes `1..=64`, densities
+    /// (all-zero lanes included), and timestep counts. Saturate-mode
+    /// equivalence is pinned at the layer level by
+    /// `prop_batched_layer_matches_per_clip` (the reference executor
+    /// is wrap-only).
+    #[test]
+    fn prop_batched_bit_identical_per_lane() {
+        check("batched_bit_identical_per_lane", 8, |g| {
+            let net = random_network(g);
+            let t = 1 + g.index(3);
+            let lanes = 1 + g.index(MAX_LANES);
+            let clips: Vec<Vec<SpikePlane>> =
+                (0..lanes).map(|_| random_clip(g, &net, t)).collect();
+            let refs: Vec<&[SpikePlane]> = clips.iter().map(|c| c.as_slice()).collect();
+
+            let mut batched = BatchedEngine::new(net.clone(), BatchConfig::default()).unwrap();
+            let outs = batched.infer_lanes(&refs).unwrap();
+            assert_eq!(outs.len(), lanes);
+
+            let mut reference = ReferenceEngine::new(net.clone()).unwrap();
+            for (b, clip) in clips.iter().enumerate() {
+                let want = reference.infer(clip).unwrap();
+                if outs[b] != want {
+                    return false;
+                }
+                let mut state = net.init_state().unwrap();
+                let tel = net.run(clip, &mut state).unwrap();
+                if batched.telemetry()[b] != tel {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+
+    /// Degenerate batch of one: `infer` on the batched engine equals
+    /// the reference engine clip for clip.
+    #[test]
+    fn batch_of_one_matches_reference_infer() {
+        let mut g = Gen::new(7);
+        let net = random_network(&mut g);
+        let clip = random_clip(&mut g, &net, 4);
+        let mut batched = BatchedEngine::new(net.clone(), BatchConfig::with_lanes(1)).unwrap();
+        let mut reference = ReferenceEngine::new(net).unwrap();
+        assert_eq!(batched.capacity(), 1);
+        assert_eq!(
+            batched.infer(&clip).unwrap(),
+            reference.infer(&clip).unwrap()
+        );
+    }
+
+    /// `infer_batch` chunks a stream larger than the lane capacity and
+    /// still matches the reference per clip; `infer_lanes` itself
+    /// rejects over-capacity batches.
+    #[test]
+    fn infer_batch_chunks_beyond_capacity() {
+        let mut g = Gen::new(21);
+        let net = random_network(&mut g);
+        let clips: Vec<Vec<SpikePlane>> =
+            (0..7).map(|_| random_clip(&mut g, &net, 3)).collect();
+        let refs: Vec<&[SpikePlane]> = clips.iter().map(|c| c.as_slice()).collect();
+
+        let mut batched = BatchedEngine::new(net.clone(), BatchConfig::with_lanes(3)).unwrap();
+        assert!(batched.infer_lanes(&refs).is_err(), "7 clips > capacity 3");
+        let outs = batched.infer_batch(&refs).unwrap();
+
+        let mut reference = ReferenceEngine::new(net).unwrap();
+        for (b, clip) in clips.iter().enumerate() {
+            assert_eq!(outs[b], reference.infer(clip).unwrap(), "clip {b}");
+        }
+    }
+
+    #[test]
+    fn capacity_clamps_to_the_lane_word() {
+        assert_eq!(BatchConfig::with_lanes(0).capacity(), 1);
+        assert_eq!(BatchConfig::with_lanes(200).capacity(), MAX_LANES);
+        assert_eq!(BatchConfig::default().capacity(), MAX_LANES);
+    }
+
+    /// An unmappable fan-in is rejected at construction, not mid-batch.
+    #[test]
+    fn unmappable_fan_in_rejected_at_build() {
+        let net = NetworkBuilder::new("too-wide", Precision::W4V7, 2, (3, 20, 20))
+            .fc(2, Mat::zeros(1200, 2), NeuronConfig::default(), true)
+            .unwrap()
+            .build()
+            .unwrap();
+        assert!(BatchedEngine::new(net, BatchConfig::default()).is_err());
+    }
+}

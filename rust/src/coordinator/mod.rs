@@ -13,17 +13,20 @@
 //!                           inboxes      (1 core each)
 //! ```
 //!
-//! Inside a worker, a clip runs on one of four engines: the
+//! Inside a worker, a clip runs on one of five engines: the
 //! sequential functional reference, the cycle-level simulator, the
 //! timestep-staged layer-group pipeline ([`pipeline`], DESIGN.md
 //! §Pipeline) — stage `g` steps timestep `t` while stage `g−1` steps
-//! `t+1`, bounded spike-frame channels handshaking between them — or
-//! the distributed shard engine (`crate::net`, DESIGN.md
-//! §Distributed), the same staging chained across processes/hosts
-//! over a binary wire protocol. Under `PoolConfig::sizing`, the pool
-//! itself grows and shrinks with the load between a min/max worker
-//! count.
+//! `t+1`, bounded spike-frame channels handshaking between them — the
+//! distributed shard engine (`crate::net`, DESIGN.md §Distributed),
+//! the same staging chained across processes/hosts over a binary wire
+//! protocol — or the batch-parallel bit-plane engine ([`batch`],
+//! DESIGN.md §Perf), which packs up to 64 queued clips into `u64`
+//! spike lanes and sweeps the CIM rows once per batch. Under
+//! `PoolConfig::sizing`, the pool itself grows and shrinks with the
+//! load between a min/max worker count.
 
+pub mod batch;
 pub mod compiler;
 pub mod mapper;
 pub mod metrics;
@@ -32,6 +35,7 @@ pub mod pool;
 pub mod scheduler;
 pub mod server;
 
+pub use batch::{BatchConfig, BatchedEngine};
 pub use compiler::{ClipReport, CompiledNetwork, NetworkCompiler};
 pub use mapper::{LayerMapping, Mapper};
 pub use metrics::{Metrics, StageMetrics, WorkerMetrics};

@@ -40,6 +40,7 @@ use crate::snn::network::{GroupSpan, Network, NetworkState, StepTelemetry};
 use crate::snn::spikes::SpikePlane;
 use crate::snn::tensor::Mat;
 
+use super::batch::{BatchConfig, BatchedEngine};
 use super::metrics::StageMetrics;
 use super::scheduler::plan_layer_groups;
 use super::server::{Engine, ReferenceEngine};
@@ -358,9 +359,11 @@ impl Engine for PipelinedEngine {
 /// reference stepping by default, the staged pipeline when
 /// `ServerConfig::pipeline` / `PoolConfig::pipeline` is set, the
 /// distributed loopback constellation when
-/// `ServerConfig::distributed` / `PoolConfig::distributed` is set.
-/// Every variant emits the final accumulator bank, so outputs are
-/// bit-comparable across selections (and across pool workers).
+/// `ServerConfig::distributed` / `PoolConfig::distributed` is set,
+/// the batch-parallel bit-plane engine when `ServerConfig::batch` /
+/// `PoolConfig::batch` is set. Every variant emits the final
+/// accumulator bank, so outputs are bit-comparable across selections
+/// (and across pool workers).
 #[derive(Debug)]
 pub enum FunctionalEngine {
     /// Sequential whole-network stepping (`Network::step`).
@@ -370,41 +373,48 @@ pub enum FunctionalEngine {
     /// Layer groups on self-hosted shard threads behind the wire
     /// protocol (`net`, DESIGN.md §Distributed).
     Distributed(DistributedEngine),
+    /// Batch-parallel bit-plane lanes: up to 64 clips swept through
+    /// the CIM rows at once ([`super::batch`], DESIGN.md §Perf).
+    Batched(BatchedEngine),
 }
 
 impl FunctionalEngine {
-    /// Build the engine a config selects (`None`/`None` → reference).
-    /// Selecting both the pipeline and the distributed engine at once
-    /// is a configuration error — they are alternative executors over
-    /// the same layer-group plan.
+    /// Build the engine a config selects (all `None` → reference).
+    /// The staged, distributed, and batched executors are alternative
+    /// datapaths over the same workload, so selecting more than one at
+    /// once is a configuration error.
     pub fn from_config(
         network: Network,
         pipeline: Option<PipelineConfig>,
         distributed: Option<DistributedConfig>,
+        batch: Option<BatchConfig>,
     ) -> Result<Self> {
-        Ok(match (pipeline, distributed) {
-            (Some(_), Some(_)) => {
-                return Err(Error::config(
-                    "select either the pipelined or the distributed engine, not both",
-                ));
-            }
-            (None, None) => FunctionalEngine::Reference(ReferenceEngine::new(network)?),
-            (Some(cfg), None) => {
-                FunctionalEngine::Pipelined(PipelinedEngine::new(network, cfg)?)
-            }
-            (None, Some(cfg)) => {
-                FunctionalEngine::Distributed(DistributedEngine::loopback(network, &cfg)?)
-            }
+        let picked =
+            pipeline.is_some() as usize + distributed.is_some() as usize + batch.is_some() as usize;
+        if picked > 1 {
+            return Err(Error::config(
+                "select at most one of the pipelined, distributed, or batched engines",
+            ));
+        }
+        Ok(if let Some(cfg) = pipeline {
+            FunctionalEngine::Pipelined(PipelinedEngine::new(network, cfg)?)
+        } else if let Some(cfg) = distributed {
+            FunctionalEngine::Distributed(DistributedEngine::loopback(network, &cfg)?)
+        } else if let Some(cfg) = batch {
+            FunctionalEngine::Batched(BatchedEngine::new(network, cfg)?)
+        } else {
+            FunctionalEngine::Reference(ReferenceEngine::new(network)?)
         })
     }
 
-    /// Accumulated per-stage counters (empty for the reference
-    /// variant) — attach to `Metrics::stages` after serving.
+    /// Accumulated per-stage counters (empty for the reference and
+    /// batched variants) — attach to `Metrics::stages` after serving.
     pub fn stage_metrics(&self) -> &[StageMetrics] {
         match self {
             FunctionalEngine::Reference(_) => &[],
             FunctionalEngine::Pipelined(e) => e.stage_metrics(),
             FunctionalEngine::Distributed(e) => e.stage_metrics(),
+            FunctionalEngine::Batched(_) => &[],
         }
     }
 }
@@ -417,6 +427,21 @@ impl Engine for FunctionalEngine {
             FunctionalEngine::Reference(e) => e.infer(clip),
             FunctionalEngine::Pipelined(e) => e.infer(clip),
             FunctionalEngine::Distributed(e) => e.infer(clip),
+            FunctionalEngine::Batched(e) => e.infer(clip),
+        }
+    }
+
+    fn max_batch(&self) -> usize {
+        match self {
+            FunctionalEngine::Batched(e) => e.max_batch(),
+            _ => 1,
+        }
+    }
+
+    fn infer_batch(&mut self, clips: &[&[SpikePlane]]) -> Result<Vec<Vec<i32>>> {
+        match self {
+            FunctionalEngine::Batched(e) => e.infer_batch(clips),
+            _ => clips.iter().map(|c| self.infer(c)).collect(),
         }
     }
 }
@@ -640,14 +665,16 @@ mod tests {
     fn from_config_selects_the_engine() {
         let net = demo_net();
         let clip = demo_clip(33, 4);
-        let mut r = FunctionalEngine::from_config(net.clone(), None, None).unwrap();
+        let mut r = FunctionalEngine::from_config(net.clone(), None, None, None).unwrap();
         assert!(matches!(&r, FunctionalEngine::Reference(_)));
         assert!(r.stage_metrics().is_empty());
+        assert_eq!(r.max_batch(), 1);
         let want = r.infer(&clip).unwrap();
 
         let mut p = FunctionalEngine::from_config(
             net.clone(),
             Some(PipelineConfig::with_stages(2)),
+            None,
             None,
         )
         .unwrap();
@@ -659,17 +686,38 @@ mod tests {
             net.clone(),
             None,
             Some(DistributedConfig::with_shards(2)),
+            None,
         )
         .unwrap();
         assert!(matches!(&d, FunctionalEngine::Distributed(_)));
         assert_eq!(d.infer(&clip).unwrap(), want);
         assert_eq!(d.stage_metrics().len(), 2);
 
-        // the two staged executors are alternatives, not composable
+        let mut b = FunctionalEngine::from_config(
+            net.clone(),
+            None,
+            None,
+            Some(BatchConfig::default()),
+        )
+        .unwrap();
+        assert!(matches!(&b, FunctionalEngine::Batched(_)));
+        assert_eq!(b.infer(&clip).unwrap(), want);
+        assert_eq!(b.max_batch(), 64);
+        assert!(b.stage_metrics().is_empty());
+
+        // the alternative executors are not composable
+        assert!(FunctionalEngine::from_config(
+            net.clone(),
+            Some(PipelineConfig::default()),
+            Some(DistributedConfig::default()),
+            None,
+        )
+        .is_err());
         assert!(FunctionalEngine::from_config(
             net,
             Some(PipelineConfig::default()),
-            Some(DistributedConfig::default()),
+            None,
+            Some(BatchConfig::default()),
         )
         .is_err());
     }

@@ -31,6 +31,7 @@ use crate::error::{Error, Result};
 use crate::net::coordinator::DistributedConfig;
 use crate::snn::spikes::SpikePlane;
 
+use super::batch::BatchConfig;
 use super::metrics::WorkerMetrics;
 use super::pipeline::PipelineConfig;
 use super::server::Engine;
@@ -102,6 +103,12 @@ pub struct PoolConfig {
     /// its own loopback shard constellation (`net`, DESIGN.md
     /// §Distributed). Mutually exclusive with `pipeline`.
     pub distributed: Option<DistributedConfig>,
+    /// Select the batched bit-plane engine (`Some`) when worker
+    /// engines are built from this config — each worker then drains
+    /// its own inbox behind every fetched job and sweeps the batch
+    /// through the CIM rows once ([`super::batch`], DESIGN.md §Perf).
+    /// Mutually exclusive with `pipeline` and `distributed`.
+    pub batch: Option<BatchConfig>,
     /// Dynamic sizing between a min/max worker count (`None` keeps the
     /// fixed `workers` count).
     pub sizing: Option<PoolSizing>,
@@ -115,6 +122,7 @@ impl Default for PoolConfig {
             steal: StealPolicy::Steal,
             pipeline: None,
             distributed: None,
+            batch: None,
             sizing: None,
         }
     }
@@ -402,6 +410,30 @@ impl SharedQueue {
         }
     }
 
+    /// Drain up to `limit` more jobs off worker `me`'s own inbox
+    /// without blocking — the batched engines' gather step: the jobs
+    /// ride in the same lane batch as the one just fetched by
+    /// [`SharedQueue::next`]. Frees inbox slots, so the dispatcher is
+    /// woken.
+    fn drain_own(&self, me: usize, limit: usize) -> Vec<ClipJob> {
+        if limit == 0 {
+            return Vec::new();
+        }
+        let mut st = self.state.lock().unwrap();
+        let mut jobs = Vec::new();
+        while jobs.len() < limit {
+            match st.inboxes[me].pop_front() {
+                Some(job) => jobs.push(job),
+                None => break,
+            }
+        }
+        drop(st);
+        if !jobs.is_empty() {
+            self.space.notify_all();
+        }
+        jobs
+    }
+
     /// Mark the job stream exhausted and wake every waiting worker.
     fn close(&self) {
         let mut st = self.state.lock().unwrap();
@@ -480,7 +512,7 @@ where
             return wm;
         }
     };
-    loop {
+    'serve: loop {
         let wait0 = Instant::now();
         let (job, stolen) = match queue.next(me, steal, shrink) {
             Fetched::Job(job, stolen) => (job, stolen),
@@ -502,21 +534,42 @@ where
         if stolen {
             wm.stolen += 1;
         }
+        // A batch-capable engine drains its own inbox behind the
+        // fetched job (up to one lane batch), so the queued backlog is
+        // swept through the CIM rows in one call; per-clip engines
+        // (`max_batch` == 1) skip the drain and take the old path.
+        let cap = engine.max_batch().max(1);
+        let mut jobs = vec![job];
+        if cap > 1 {
+            jobs.extend(queue.drain_own(me, cap - 1));
+        }
+        let clips: Vec<&[SpikePlane]> = jobs.iter().map(|j| j.frames.as_slice()).collect();
         let busy0 = Instant::now();
-        let outcome = engine.infer(&job.frames);
+        let outcome = engine.infer_batch(&clips);
         wm.busy += busy0.elapsed();
         match outcome {
-            Ok(output) => {
-                wm.clips += 1;
-                let done = CompletedClip {
-                    seq: job.seq,
-                    output,
-                    latency: job.t0.elapsed(),
-                    frames: job.frames.len() as u64,
-                    worker: me,
-                };
-                if results.send(Ok(done)).is_err() {
+            Ok(outputs) => {
+                if outputs.len() != jobs.len() {
+                    queue.abort();
+                    let _ = results.send(Err(Error::Runtime(format!(
+                        "engine returned {} outputs for a {}-clip batch",
+                        outputs.len(),
+                        jobs.len()
+                    ))));
                     break;
+                }
+                for (job, output) in jobs.into_iter().zip(outputs) {
+                    wm.clips += 1;
+                    let done = CompletedClip {
+                        seq: job.seq,
+                        output,
+                        latency: job.t0.elapsed(),
+                        frames: job.frames.len() as u64,
+                        worker: me,
+                    };
+                    if results.send(Ok(done)).is_err() {
+                        break 'serve;
+                    }
                 }
             }
             Err(e) => {
@@ -969,6 +1022,82 @@ mod tests {
             run.workers.iter().any(|w| w.retired),
             "stream never shrank the pool: {:?}",
             run.workers
+        );
+    }
+
+    /// Satellite: a batch-capable engine drains its own inbox behind
+    /// every fetched job. With the single worker gated shut while the
+    /// dispatcher fills its inbox, the backlog must come back in at
+    /// least one multi-clip batch — every clip exactly once, in order,
+    /// never more than `max_batch` per call.
+    #[test]
+    fn batched_engine_drains_inbox_in_batches() {
+        let cfg = PoolConfig {
+            workers: 1,
+            inbox_depth: 4,
+            steal: StealPolicy::Steal,
+            ..PoolConfig::default()
+        };
+
+        struct BatchProbe {
+            gate: Arc<AtomicBool>,
+            sizes: Arc<Mutex<Vec<usize>>>,
+        }
+        impl Engine for BatchProbe {
+            type Output = u64;
+            fn infer(&mut self, clip: &[SpikePlane]) -> Result<u64> {
+                Ok(clip.iter().map(|p| p.count_spikes()).sum())
+            }
+            fn max_batch(&self) -> usize {
+                8
+            }
+            fn infer_batch(&mut self, clips: &[&[SpikePlane]]) -> Result<Vec<u64>> {
+                while !self.gate.load(Ordering::SeqCst) {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                self.sizes.lock().unwrap().push(clips.len());
+                clips.iter().map(|c| self.infer(c)).collect()
+            }
+        }
+
+        let gate = Arc::new(AtomicBool::new(false));
+        let sizes = Arc::new(Mutex::new(Vec::new()));
+        // Rendezvous channel: send 6 jobs while the engine is gated —
+        // the first blocks the worker mid-batch, the rest pile into
+        // its inbox — then open the gate.
+        let (tx, rx) = sync_channel::<ClipJob>(0);
+        let producer = {
+            let gate = Arc::clone(&gate);
+            std::thread::spawn(move || {
+                for seq in 0..6 {
+                    tx.send(job(seq, (seq as usize * 5 + 2) % 23)).unwrap();
+                }
+                gate.store(true, Ordering::SeqCst);
+            })
+        };
+
+        let gate_f = Arc::clone(&gate);
+        let sizes_f = Arc::clone(&sizes);
+        let run = run_pool(&cfg, rx, &move |_| {
+            Ok(BatchProbe {
+                gate: Arc::clone(&gate_f),
+                sizes: Arc::clone(&sizes_f),
+            })
+        })
+        .unwrap();
+        producer.join().unwrap();
+
+        assert_eq!(run.clips.len(), 6);
+        for (i, c) in run.clips.iter().enumerate() {
+            assert_eq!(c.seq, i as u64);
+            assert_eq!(c.output, ((i as u64 * 5 + 2) % 23).min(64));
+        }
+        let sizes = sizes.lock().unwrap();
+        assert_eq!(sizes.iter().sum::<usize>(), 6);
+        assert!(sizes.iter().all(|&s| s <= 8), "{sizes:?}");
+        assert!(
+            sizes.iter().any(|&s| s >= 2),
+            "gated backlog never batched: {sizes:?}"
         );
     }
 

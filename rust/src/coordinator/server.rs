@@ -23,6 +23,7 @@ use crate::net::coordinator::DistributedConfig;
 use crate::snn::network::{Network, NetworkState};
 use crate::snn::spikes::SpikePlane;
 
+use super::batch::BatchConfig;
 use super::metrics::Metrics;
 use super::pipeline::PipelineConfig;
 use super::pool::{run_pool, ClipJob, PoolConfig};
@@ -49,6 +50,13 @@ pub struct ServerConfig {
     /// DESIGN.md §Distributed) — when engines are built from this
     /// config. Mutually exclusive with `pipeline`.
     pub distributed: Option<DistributedConfig>,
+    /// Select the batched bit-plane engine (`Some`) — up to 64 clips
+    /// packed into `u64` spike lanes and swept through the CIM rows
+    /// once per batch ([`super::batch`], DESIGN.md §Perf) — when
+    /// engines are built from this config. The serve loops then drain
+    /// their queues in batches of up to [`BatchConfig::capacity`]
+    /// clips. Mutually exclusive with `pipeline` and `distributed`.
+    pub batch: Option<BatchConfig>,
 }
 
 impl Default for ServerConfig {
@@ -61,6 +69,7 @@ impl Default for ServerConfig {
             queue_depth: 2,
             pipeline: None,
             distributed: None,
+            batch: None,
         }
     }
 }
@@ -72,6 +81,21 @@ pub trait Engine {
 
     /// Run one clip (frames indexed by timestep).
     fn infer(&mut self, clip: &[SpikePlane]) -> Result<Self::Output>;
+
+    /// Largest clip batch [`Engine::infer_batch`] can exploit in one
+    /// call. The serve loops drain up to this many queued clips per
+    /// dispatch; `1` (the default) keeps the per-clip path.
+    fn max_batch(&self) -> usize {
+        1
+    }
+
+    /// Run a batch of clips, one output per clip in order. The default
+    /// loops [`Engine::infer`]; batch-capable engines (the lane-major
+    /// [`super::batch::BatchedEngine`]) override it to amortize
+    /// dispatch across the batch.
+    fn infer_batch(&mut self, clips: &[&[SpikePlane]]) -> Result<Vec<Self::Output>> {
+        clips.iter().map(|c| self.infer(c)).collect()
+    }
 }
 
 /// A completed request.
@@ -123,15 +147,38 @@ impl InferenceServer {
 
         let mut responses = Vec::new();
         let mut metrics = Metrics::new();
-        for job in rx.iter() {
-            let output = engine.infer(&job.frames)?;
-            let latency = job.t0.elapsed();
-            metrics.record_clip(latency, job.frames.len() as u64);
-            responses.push(Response {
-                id: job.seq,
-                output,
-                latency,
-            });
+        // Batch-capable engines (`max_batch` > 1) drain whatever the
+        // ingest stage has already binned — up to one lane word's
+        // worth of clips — and amortize dispatch across the batch; a
+        // per-clip engine degenerates to the old one-at-a-time loop.
+        let cap = engine.max_batch().max(1);
+        let mut jobs: Vec<ClipJob> = Vec::with_capacity(cap);
+        while let Ok(first) = rx.recv() {
+            jobs.push(first);
+            while jobs.len() < cap {
+                match rx.try_recv() {
+                    Ok(job) => jobs.push(job),
+                    Err(_) => break,
+                }
+            }
+            let clips: Vec<&[SpikePlane]> = jobs.iter().map(|j| j.frames.as_slice()).collect();
+            let outputs = engine.infer_batch(&clips)?;
+            if outputs.len() != jobs.len() {
+                return Err(Error::Runtime(format!(
+                    "engine returned {} outputs for a {}-clip batch",
+                    outputs.len(),
+                    jobs.len()
+                )));
+            }
+            for (job, output) in jobs.drain(..).zip(outputs) {
+                let latency = job.t0.elapsed();
+                metrics.record_clip(latency, job.frames.len() as u64);
+                responses.push(Response {
+                    id: job.seq,
+                    output,
+                    latency,
+                });
+            }
         }
         ingest
             .join()
@@ -412,7 +459,7 @@ mod tests {
         });
         let pserver = InferenceServer::new(cfg);
         let mut piped =
-            FunctionalEngine::from_config(net.clone(), pserver.cfg.pipeline, None).unwrap();
+            FunctionalEngine::from_config(net.clone(), pserver.cfg.pipeline, None, None).unwrap();
         let (got, mut metrics) = pserver.serve(reqs.clone(), &mut piped).unwrap();
         metrics.stages = piped.stage_metrics().to_vec();
         assert_eq!(want.len(), got.len());
@@ -430,7 +477,7 @@ mod tests {
         };
         let (pooled, _) = pserver
             .serve_pool(reqs, &pool, |_| {
-                FunctionalEngine::from_config(net.clone(), pool.pipeline, None)
+                FunctionalEngine::from_config(net.clone(), pool.pipeline, None, None)
             })
             .unwrap();
         for (a, b) in want.iter().zip(&pooled) {
@@ -465,7 +512,7 @@ mod tests {
         });
         let dserver = InferenceServer::new(cfg);
         let mut dist =
-            FunctionalEngine::from_config(net.clone(), None, dserver.cfg.distributed).unwrap();
+            FunctionalEngine::from_config(net.clone(), None, dserver.cfg.distributed, None).unwrap();
         let (got, mut metrics) = dserver.serve(reqs.clone(), &mut dist).unwrap();
         metrics.stages = dist.stage_metrics().to_vec();
         assert_eq!(want.len(), got.len());
@@ -483,7 +530,56 @@ mod tests {
         };
         let (pooled, _) = dserver
             .serve_pool(reqs, &pool, |_| {
-                FunctionalEngine::from_config(net.clone(), None, pool.distributed)
+                FunctionalEngine::from_config(net.clone(), None, pool.distributed, None)
+            })
+            .unwrap();
+        for (a, b) in want.iter().zip(&pooled) {
+            assert_eq!(a.output, b.output, "pooled request {} diverged", a.id);
+        }
+    }
+
+    /// The fifth engine on the tier: selecting the batched bit-plane
+    /// engine via `ServerConfig::batch` / `PoolConfig::batch` yields
+    /// bit-identical responses to the sequential reference on both
+    /// serve paths — the single-engine loop drains the ingest queue
+    /// into lane batches, and each pool worker drains its own inbox
+    /// (DESIGN.md §Perf).
+    #[test]
+    fn batched_engine_selected_by_config_is_bit_identical() {
+        use super::super::pipeline::FunctionalEngine;
+
+        let net = tiny_network();
+        let reqs: Vec<Vec<Event>> = (0..9).map(|i| burst(5 + i * 7)).collect();
+
+        // baseline: reference engine on the single-engine path
+        let server = InferenceServer::new(small_cfg());
+        let mut single = ReferenceEngine::new(net.clone()).unwrap();
+        let (want, _) = server.serve(reqs.clone(), &mut single).unwrap();
+
+        // batched engine selected via ServerConfig
+        let mut cfg = small_cfg();
+        cfg.batch = Some(BatchConfig::with_lanes(4));
+        let bserver = InferenceServer::new(cfg);
+        let mut batched =
+            FunctionalEngine::from_config(net.clone(), None, None, bserver.cfg.batch).unwrap();
+        assert_eq!(batched.max_batch(), 4);
+        let (got, metrics) = bserver.serve(reqs.clone(), &mut batched).unwrap();
+        assert_eq!(want.len(), got.len());
+        for (a, b) in want.iter().zip(&got) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.output, b.output, "request {} diverged", a.id);
+        }
+        assert_eq!(metrics.clips, 9);
+
+        // batched engines selected via PoolConfig: each worker drains
+        // its inbox into lane batches of its own
+        let pool = PoolConfig {
+            batch: cfg.batch,
+            ..PoolConfig::with_workers(2)
+        };
+        let (pooled, _) = bserver
+            .serve_pool(reqs, &pool, |_| {
+                FunctionalEngine::from_config(net.clone(), None, None, pool.batch)
             })
             .unwrap();
         for (a, b) in want.iter().zip(&pooled) {

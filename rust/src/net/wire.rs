@@ -20,8 +20,10 @@
 //! [`MAX_PAYLOAD`] *before* any buffer is sized from it).
 //!
 //! The payload grammar round-trips the simulator's own types —
-//! [`SpikePlane`] (bit-packed, 8 cells per byte: planes are binary by
-//! contract), [`GroupSpan`], [`StepTelemetry`], Vmem [`Mat`] banks and
+//! [`SpikePlane`] (bit-packed through the shared
+//! [`bitpack`](crate::snn::bitpack) layout, 8 cells per byte: planes
+//! are binary by contract), [`GroupSpan`], [`StepTelemetry`], Vmem
+//! [`Mat`] banks and
 //! whole [`Network`] workloads ([`encode_network`] /
 //! [`decode_network`], the `LoadGroup` weight-push payload) — through
 //! [`Frame::to_bytes`] / [`Frame::from_bytes`], property tested in
@@ -31,6 +33,7 @@ use std::io::{Read, Write};
 
 use crate::error::{Error, Result};
 use crate::quant::Precision;
+use crate::snn::bitpack;
 use crate::snn::layer::{Layer, LayerKind, NeuronConfig, ResetMode};
 use crate::snn::network::{GroupSpan, Network, StepTelemetry};
 use crate::snn::spikes::SpikePlane;
@@ -196,21 +199,9 @@ impl Wr {
         self.u32(c as u32);
         self.u32(h as u32);
         self.u32(w as u32);
-        // bit-packed, LSB-first within each byte; planes are binary by
-        // contract (any nonzero cell normalizes to a set bit)
-        let mut byte = 0u8;
-        for (i, &v) in p.as_slice().iter().enumerate() {
-            if v != 0 {
-                byte |= 1 << (i % 8);
-            }
-            if i % 8 == 7 {
-                self.buf.push(byte);
-                byte = 0;
-            }
-        }
-        if p.len() % 8 != 0 {
-            self.buf.push(byte);
-        }
+        // the shared LSB-first layout (snn::bitpack) — one definition
+        // for the wire codec and the lane-major batch tensor
+        self.buf.extend_from_slice(&bitpack::pack_bytes(p.as_slice()));
     }
 
     fn mat(&mut self, m: &Mat) {
@@ -317,10 +308,7 @@ impl<'a> Rd<'a> {
             .ok_or_else(|| Error::protocol("oversized spike plane"))?
             as usize;
         let packed = self.take(cells.div_ceil(8))?;
-        let mut data = vec![0u8; cells];
-        for (i, cell) in data.iter_mut().enumerate() {
-            *cell = (packed[i / 8] >> (i % 8)) & 1;
-        }
+        let data = bitpack::unpack_bytes(packed, cells);
         SpikePlane::from_vec(c as usize, h as usize, w as usize, data)
             .map_err(|e| Error::protocol(format!("bad spike plane: {e}")))
     }

@@ -169,6 +169,84 @@ impl ComputeMacro {
     }
 }
 
+/// The batched compute macro: the same weight slice as a
+/// [`ComputeMacro`], but `lanes` independent Vmem columns per tile
+/// entry — one per clip in the bit-plane batch. [`LaneMacro::op_row`]
+/// sweeps the CIM row once per *union* address and accumulates into
+/// every lane whose bit is set in the address's lane word, so lane `b`
+/// sees exactly the `op_row` sequence a per-clip macro would have run
+/// for clip `b` alone (DESIGN.md §Perf; bit-exact for any overflow
+/// policy, wrap or saturate).
+#[derive(Debug, Clone)]
+pub struct LaneMacro {
+    /// Weight slice `(fan_in_slice ≤ 128, neurons ≤ 48/B_w)`.
+    weights: Mat,
+    /// Partial Vmems: `IFSPAD_COLS` entries × `lanes` × `neurons`,
+    /// `(x, b, k)` row-major — each lane's column is contiguous.
+    vmem: Vec<i32>,
+    /// Logical neurons mapped on the columns.
+    pub neurons: usize,
+    /// Bit-lanes (clips) accumulated in parallel.
+    pub lanes: usize,
+    /// Vmem bit width.
+    pub vmem_bits: u32,
+    /// Overflow policy.
+    pub overflow: Overflow,
+}
+
+impl LaneMacro {
+    /// Create a batched macro holding a weight slice for `lanes` clips.
+    pub fn new(weights: Mat, lanes: usize, vmem_bits: u32, overflow: Overflow) -> Self {
+        assert!(weights.rows <= IFSPAD_ROWS, "weight slice too tall");
+        assert!(weights.cols <= MACRO_COLS, "too many neurons per macro");
+        assert!(
+            lanes >= 1 && lanes <= crate::snn::spikes::MAX_LANES,
+            "lanes out of range"
+        );
+        let neurons = weights.cols;
+        LaneMacro {
+            weights,
+            vmem: vec![0; IFSPAD_COLS * lanes * neurons],
+            neurons,
+            lanes,
+            vmem_bits,
+            overflow,
+        }
+    }
+
+    /// Reset all partial Vmems (start of a tile/timestep).
+    pub fn reset_vmems(&mut self) {
+        self.vmem.fill(0);
+    }
+
+    /// One union-stream accumulation: add weight row `y` into tile
+    /// entry `x` of every lane set in `word`. The inner loop is the
+    /// same contiguous `v[k] += w[k]` sweep as
+    /// [`ComputeMacro::op_row`], run once per set lane.
+    #[inline]
+    pub fn op_row(&mut self, y: usize, x: usize, word: u64) {
+        debug_assert!(y < self.weights.rows && x < IFSPAD_COLS);
+        let w = self.weights.row(y);
+        let (bits, overflow) = (self.vmem_bits, self.overflow);
+        let base = x * self.lanes;
+        let mut m = word;
+        while m != 0 {
+            let b = m.trailing_zeros() as usize;
+            m &= m - 1;
+            let v = &mut self.vmem[(base + b) * self.neurons..(base + b + 1) * self.neurons];
+            for (vk, &wk) in v.iter_mut().zip(w) {
+                *vk = overflow.apply(*vk + wk, bits);
+            }
+        }
+    }
+
+    /// Read entry `x`'s partial Vmems for all lanes (`lanes × neurons`,
+    /// lane-major — lane `b`'s slice is `[b*neurons .. (b+1)*neurons]`).
+    pub fn entry(&self, x: usize) -> &[i32] {
+        &self.vmem[x * self.lanes * self.neurons..(x + 1) * self.lanes * self.neurons]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -255,5 +333,58 @@ mod tests {
         cm.op(0, 0, Parity::Even);
         cm.reset_vmems();
         assert_eq!(cm.vmem_entry(0), &[0, 0]);
+    }
+
+    #[test]
+    fn lane_op_row_matches_per_clip_op_row() {
+        for overflow in [Overflow::Wrap, Overflow::Saturate] {
+            let mut w = Mat::zeros(3, 5);
+            for r in 0..3 {
+                for k in 0..5 {
+                    w.set(r, k, 40 * (r as i32 + 1) - 7 * k as i32);
+                }
+            }
+            let lanes = 5usize;
+            let mut lm = LaneMacro::new(w.clone(), lanes, 7, overflow);
+            let mut per_clip: Vec<ComputeMacro> = (0..lanes)
+                .map(|_| ComputeMacro::new(w.clone(), 7, overflow, true))
+                .collect();
+            // a union stream whose words select different lane subsets,
+            // repeated to exercise wrap/saturate
+            let stream: &[(usize, usize, u64)] = &[
+                (0, 0, 0b10101),
+                (1, 0, 0b00111),
+                (0, 0, 0b11111),
+                (2, 3, 0b01000),
+                (1, 0, 0b10001),
+            ];
+            for &(y, x, word) in stream {
+                lm.op_row(y, x, word);
+                for (b, cm) in per_clip.iter_mut().enumerate() {
+                    if word >> b & 1 != 0 {
+                        cm.op_row(y, x);
+                    }
+                }
+            }
+            for x in [0usize, 3] {
+                let entry = lm.entry(x);
+                for (b, cm) in per_clip.iter().enumerate() {
+                    assert_eq!(
+                        &entry[b * 5..(b + 1) * 5],
+                        cm.vmem_entry(x),
+                        "{overflow:?} lane {b} entry {x}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lane_zero_word_is_inert() {
+        let mut lm = LaneMacro::new(Mat::from_vec(1, 2, vec![3, 4]).unwrap(), 2, 7, Overflow::Wrap);
+        lm.op_row(0, 0, 0);
+        assert!(lm.entry(0).iter().all(|&v| v == 0));
+        lm.op_row(0, 0, 0b10);
+        assert_eq!(lm.entry(0), &[0, 0, 3, 4]);
     }
 }

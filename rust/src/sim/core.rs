@@ -30,10 +30,10 @@
 
 use crate::error::{Error, Result};
 use crate::snn::layer::Layer;
-use crate::snn::spikes::SpikePlane;
+use crate::snn::spikes::{LaneFrame, LanePlane, SpikePlane, MAX_LANES};
 use crate::snn::tensor::Mat;
 
-use super::compute_macro::ComputeMacro;
+use super::compute_macro::{ComputeMacro, LaneMacro};
 use super::compute_unit::split_fan_in;
 use super::config::{OperatingMode, SimConfig, IFSPAD_COLS, NEURON_PASS_CYCLES};
 use super::neuron_macro::NeuronMacro;
@@ -41,7 +41,7 @@ use super::pipeline::{
     pipeline_makespan, synchronous_makespan, worst_case_makespan, PipelineTimeline,
 };
 use super::stats::RunStats;
-use super::stream::StreamCache;
+use super::stream::{LaneStreamCache, StreamCache};
 
 /// Per-layer execution report.
 #[derive(Debug, Clone)]
@@ -66,6 +66,73 @@ pub struct SpidrCore {
     pub cfg: SimConfig,
 }
 
+/// A batched Vmem bank: the layer state of up to [`MAX_LANES`] clips,
+/// `(M, lanes, K)` row-major — lane `b`'s bank is the `(M, K)` matrix
+/// [`LaneBank::lane_mat`] extracts. The batched executor's counterpart
+/// of the per-clip `Mat` state [`SpidrCore::run_layer`] updates.
+#[derive(Debug, Clone)]
+pub struct LaneBank {
+    rows: usize,
+    cols: usize,
+    lanes: usize,
+    data: Vec<i32>,
+}
+
+impl LaneBank {
+    /// Zeroed bank for `lanes` clips of an `(rows, cols)` layer state.
+    pub fn zeros(rows: usize, cols: usize, lanes: usize) -> Self {
+        assert!(lanes >= 1 && lanes <= MAX_LANES, "lanes out of range");
+        LaneBank {
+            rows,
+            cols,
+            lanes,
+            data: vec![0; rows * lanes * cols],
+        }
+    }
+
+    /// Vmem rows (output pixels `M`).
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Vmem columns (output channels `K`).
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Clips held.
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Read lane `b`'s Vmem at `(m, k)`.
+    #[inline(always)]
+    pub fn get(&self, m: usize, b: usize, k: usize) -> i32 {
+        debug_assert!(m < self.rows && b < self.lanes && k < self.cols);
+        self.data[(m * self.lanes + b) * self.cols + k]
+    }
+
+    /// Write lane `b`'s Vmem at `(m, k)`.
+    #[inline(always)]
+    pub fn set(&mut self, m: usize, b: usize, k: usize, v: i32) {
+        debug_assert!(m < self.rows && b < self.lanes && k < self.cols);
+        self.data[(m * self.lanes + b) * self.cols + k] = v;
+    }
+
+    /// Extract lane `b`'s full `(M, K)` Vmem bank — bit-comparable to
+    /// the per-clip state `run_layer` would have produced for clip `b`.
+    pub fn lane_mat(&self, b: usize) -> Mat {
+        debug_assert!(b < self.lanes);
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            for k in 0..self.cols {
+                m.set(r, k, self.get(r, b, k));
+            }
+        }
+        m
+    }
+}
+
 /// Everything one channel group's pipeline produces over a layer run.
 /// Built on a worker thread; merged deterministically (group order) by
 /// `run_layer`.
@@ -86,6 +153,22 @@ struct ChainOutcome {
     spikes: Vec<(u32, u32, u32)>,
     /// Fig.-13 example timeline (first tile of group 0 only).
     timeline: Option<PipelineTimeline>,
+}
+
+/// One channel group's results from the batched (lane-major) executor.
+struct LaneChainOutcome {
+    /// Channel-group bounds `[ks, ke)`.
+    ks: usize,
+    ke: usize,
+    /// Per-tile sequential union-sweep makespans.
+    per_tile: Vec<u64>,
+    /// Energy + op counters (cycle fields left zero, reduced by the
+    /// caller like the per-clip path).
+    run: RunStats,
+    /// Updated Vmems, `(m_total, lanes, ke-ks)` row-major.
+    state: Vec<i32>,
+    /// Output spikes as `(timestep, local channel, pixel, lane word)`.
+    spikes: Vec<(u32, u32, u32, u64)>,
 }
 
 impl SpidrCore {
@@ -297,6 +380,319 @@ impl SpidrCore {
     ) -> Result<(SpikePlane, LayerStats)> {
         let (mut out, stats) = self.run_layer(layer, std::slice::from_ref(frame), state)?;
         Ok((out.pop().expect("one timestep in, one plane out"), stats))
+    }
+
+    /// Execute one stateful layer over all timesteps for a whole batch
+    /// of clips packed into bit-plane lanes (DESIGN.md §Perf).
+    ///
+    /// * `inputs` — one [`LaneFrame`] per timestep (all with the same
+    ///   lane count and shape; see [`LaneFrame::pack_clips`]).
+    /// * `state` — the batched Vmem bank, updated in place.
+    ///
+    /// The loader + address extraction run **once per batch**: the
+    /// union address stream visits a cell iff *any* lane spikes there,
+    /// and [`LaneMacro::op_row`] fans each union address out to the
+    /// lanes whose bit is set. Because union extraction preserves the
+    /// per-clip detector order and every merge/neuron stage is
+    /// elementwise, lane `b`'s Vmems and output spikes are bit-exact
+    /// against a per-clip [`Self::run_layer`] of clip `b` for any
+    /// overflow policy — see `prop_batched_layer_matches_per_clip`.
+    ///
+    /// This is a host-throughput datapath: the functional result is
+    /// exact per lane, while cycle/energy totals use a sequential
+    /// union-sweep model (makespan = sync = worst-case), not the
+    /// per-clip dual-port interleave. Cycle-accurate numbers still
+    /// come from the per-clip path.
+    pub fn run_layer_lanes(
+        &self,
+        layer: &Layer,
+        inputs: &[LaneFrame],
+        state: &mut LaneBank,
+    ) -> Result<(Vec<LaneFrame>, LayerStats)> {
+        let weights = layer
+            .weights
+            .as_ref()
+            .ok_or_else(|| Error::mapping("pool layers are not mapped to the core"))?;
+        let fan_in = layer.fan_in();
+        let mode = self.select_mode(fan_in)?;
+        let (m_total, k_total) = layer.vmem_shape()?;
+        let timesteps = inputs.len();
+        if timesteps == 0 {
+            return Err(Error::config("no timesteps"));
+        }
+        let lanes = inputs[0].lanes();
+        for (t, f) in inputs.iter().enumerate() {
+            if f.lanes() != lanes || f.shape() != inputs[0].shape() {
+                return Err(Error::shape(format!(
+                    "lane frame {t} ({} lanes, {:?}) != frame 0 ({lanes} lanes, {:?})",
+                    f.lanes(),
+                    f.shape(),
+                    inputs[0].shape()
+                )));
+            }
+        }
+        if state.rows() != m_total || state.cols() != k_total || state.lanes() != lanes {
+            return Err(Error::shape(format!(
+                "lane state {}x{}x{} != expected {m_total}x{lanes}x{k_total}",
+                state.rows(),
+                state.lanes(),
+                state.cols()
+            )));
+        }
+
+        let npr = self.cfg.precision.neurons_per_row();
+        let groups: Vec<(usize, usize)> = (0..k_total)
+            .step_by(npr)
+            .map(|lo| (lo, (lo + npr).min(k_total)))
+            .collect();
+        let pipelines = mode.pipelines();
+        let passes = groups.len().div_ceil(pipelines);
+        let tiles = m_total.div_ceil(IFSPAD_COLS);
+        let chain = mode.cus_per_pipeline();
+        let slices = split_fan_in(fan_in, chain);
+
+        let (ko, ho, wo) = layer.out_shape;
+        let mut out_planes: Vec<LanePlane> =
+            (0..timesteps).map(|_| LanePlane::zeros(ko, ho, wo)).collect();
+
+        let mut run = RunStats::default();
+        for inp in inputs {
+            run.spikes += inp.count_spikes();
+            run.cells += (inp.plane().len() * lanes) as u64;
+        }
+        run.dense_synops = layer.dense_synops() * timesteps as u64 * lanes as u64;
+
+        // The batched amortization point: one union stream for every
+        // channel group, built from one im2col walk per (tile, slice,
+        // timestep) for the *whole batch*.
+        let cache = LaneStreamCache::build(layer, inputs, &slices, tiles, m_total);
+
+        let outcomes: Vec<LaneChainOutcome> = if groups.len() == 1 {
+            vec![self.run_chain_lanes(
+                layer, weights, state, &cache, &slices, groups[0], m_total, tiles, lanes,
+            )]
+        } else {
+            let state_ref: &LaneBank = state;
+            let cache_ref = &cache;
+            let slices_ref = &slices[..];
+            let groups_ref = &groups[..];
+            let workers = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .min(groups.len());
+            let chunk = groups.len().div_ceil(workers);
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..workers)
+                    .map(|wi| {
+                        let lo = (wi * chunk).min(groups_ref.len());
+                        let hi = ((wi + 1) * chunk).min(groups_ref.len());
+                        scope.spawn(move || {
+                            groups_ref[lo..hi]
+                                .iter()
+                                .map(|&grp| {
+                                    self.run_chain_lanes(
+                                        layer, weights, state_ref, cache_ref, slices_ref,
+                                        grp, m_total, tiles, lanes,
+                                    )
+                                })
+                                .collect::<Vec<_>>()
+                        })
+                    })
+                    .collect();
+                let mut all = Vec::with_capacity(groups_ref.len());
+                for h in handles {
+                    all.extend(h.join().expect("lane-chain thread panicked"));
+                }
+                all
+            })
+        };
+
+        for oc in &outcomes {
+            run.energy.add(&oc.run.energy);
+            run.macro_ops += oc.run.macro_ops;
+            run.synops += oc.run.synops;
+            run.parity_switches += oc.run.parity_switches;
+        }
+        // Timing: same pass×tile reduction as the per-clip path, with
+        // a single (sequential-sweep) makespan per tile.
+        for pass in 0..passes {
+            for tile in 0..tiles {
+                let mut mk = 0u64;
+                for pi in 0..pipelines {
+                    let g = pass * pipelines + pi;
+                    if g >= groups.len() {
+                        break;
+                    }
+                    mk = mk.max(outcomes[g].per_tile[tile]);
+                }
+                run.cycles += mk;
+                run.sync_cycles += mk;
+                run.worst_case_cycles += mk;
+            }
+        }
+        for oc in outcomes {
+            let neurons = oc.ke - oc.ks;
+            for m in 0..m_total {
+                for b in 0..lanes {
+                    for c in 0..neurons {
+                        state.set(m, b, oc.ks + c, oc.state[(m * lanes + b) * neurons + c]);
+                    }
+                }
+            }
+            for &(t, c, m, word) in &oc.spikes {
+                let m = m as usize;
+                out_planes[t as usize].set(oc.ks + c as usize, m / wo, m % wo, word);
+            }
+        }
+
+        let outputs = out_planes
+            .into_iter()
+            .map(|p| LaneFrame::from_plane(p, lanes))
+            .collect();
+        Ok((
+            outputs,
+            LayerStats {
+                run,
+                mode,
+                passes,
+                tiles,
+                example_timeline: None,
+            },
+        ))
+    }
+
+    /// Run one channel group of the batched executor: replay the union
+    /// address stream through a [`LaneMacro`] per fan-in slice, merge
+    /// partials elementwise, and drive a `lanes × neurons` neuron
+    /// macro (elementwise, therefore per-lane exact).
+    #[allow(clippy::too_many_arguments)]
+    fn run_chain_lanes(
+        &self,
+        layer: &Layer,
+        weights: &Mat,
+        state: &LaneBank,
+        cache: &LaneStreamCache,
+        slices: &[(usize, usize)],
+        (ks, ke): (usize, usize),
+        m_total: usize,
+        tiles: usize,
+        lanes: usize,
+    ) -> LaneChainOutcome {
+        let e = &self.cfg.energy;
+        let wb = self.cfg.precision.weight_bits();
+        let bits = self.cfg.precision.vmem_bits();
+        let overflow = self.cfg.overflow;
+        let timesteps = cache.timesteps();
+        let neurons = ke - ks;
+        let chain_len = slices.len();
+        let stride = lanes * neurons;
+
+        let mut cms: Vec<LaneMacro> = slices
+            .iter()
+            .map(|&(lo, hi)| {
+                LaneMacro::new(weights.submatrix(lo, hi, ks, ke), lanes, bits, overflow)
+            })
+            .collect();
+        // One NU spanning all lanes: `pass` is elementwise over
+        // entries × (lanes·neurons), so lane b's elements follow the
+        // exact per-clip neuron ordering contract.
+        let mut nm =
+            NeuronMacro::new(stride, bits, overflow, layer.neuron, layer.accumulate);
+
+        let mut run = RunStats::default();
+        let mut per_tile = Vec::with_capacity(tiles);
+        let mut out_state = vec![0i32; m_total * stride];
+        let mut spikes: Vec<(u32, u32, u32, u64)> = Vec::new();
+        let mut partial = vec![0i32; IFSPAD_COLS * stride];
+        let mut full = vec![0i32; IFSPAD_COLS * stride];
+
+        for tile in 0..tiles {
+            let pixel_base = tile * IFSPAD_COLS;
+            let pixels = IFSPAD_COLS.min(m_total - pixel_base);
+            let transfer = self.cfg.transfer_cycles_per_row * 2 * pixels as u64;
+            let mut tile_cycles = 0u64;
+
+            for p in 0..pixels {
+                for b in 0..lanes {
+                    for (c, kk) in (ks..ke).enumerate() {
+                        full[(p * lanes + b) * neurons + c] =
+                            state.get(pixel_base + p, b, kk);
+                    }
+                }
+            }
+            nm.load_vmems(&full);
+
+            for t in 0..timesteps {
+                partial[..pixels * stride].fill(0);
+                for (i, cm) in cms.iter_mut().enumerate() {
+                    let s = cache.get(tile, i, t);
+                    // sequential union sweep: one row op per union
+                    // address, plus the tile reset stage
+                    tile_cycles += s.addrs().len() as u64 + self.cfg.tile_reset_cycles;
+                    // silicon-equivalent counters: each lane's
+                    // accumulation is an even+odd macro-op pair, same
+                    // as the per-clip path summed over the batch
+                    run.macro_ops += 2 * s.lane_ops;
+                    run.synops += s.lane_ops * neurons as u64;
+                    run.energy.compute_macro += 2.0 * s.lane_ops as f64 * e.macro_op(wb);
+                    run.energy.s2a += s.addrs().len() as f64 * e.e_detect_row;
+                    run.energy.input_loader += s.load.spad_writes as f64 * e.e_il_write;
+                    run.energy.ifmem += s.load.ifmem_reads as f64 * e.e_ifmem_read;
+                    cm.reset_vmems();
+                    for a in s.addrs() {
+                        cm.op_row(a.y as usize, a.x as usize, a.word);
+                    }
+                    for p in 0..pixels {
+                        let src = cm.entry(p);
+                        let dst = &mut partial[p * stride..(p + 1) * stride];
+                        for (d, &sv) in dst.iter_mut().zip(src) {
+                            *d = overflow.apply(*d + sv, bits);
+                        }
+                    }
+                }
+                tile_cycles += transfer + NEURON_PASS_CYCLES;
+                run.energy.data_movement +=
+                    chain_len as f64 * 2.0 * pixels as f64 * e.e_transfer_row;
+                run.energy.neuron_units +=
+                    lanes as f64 * NEURON_PASS_CYCLES as f64 * e.e_neuron_cycle;
+                run.energy.control += NEURON_PASS_CYCLES as f64 * e.e_ctrl_cycle;
+                let out = nm.pass(&partial[..pixels * stride], pixels);
+                if !layer.accumulate {
+                    for p in 0..pixels {
+                        for c in 0..neurons {
+                            let mut word = 0u64;
+                            for b in 0..lanes {
+                                if out.spikes[(p * lanes + b) * neurons + c] != 0 {
+                                    word |= 1 << b;
+                                }
+                            }
+                            if word != 0 {
+                                spikes.push((
+                                    t as u32,
+                                    c as u32,
+                                    (pixel_base + p) as u32,
+                                    word,
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            let v = nm.vmems();
+            out_state[pixel_base * stride..(pixel_base + pixels) * stride]
+                .copy_from_slice(&v[..pixels * stride]);
+            run.energy.control += tile_cycles as f64 * e.e_ctrl_cycle;
+            per_tile.push(tile_cycles);
+        }
+
+        LaneChainOutcome {
+            ks,
+            ke,
+            per_tile,
+            run,
+            state: out_state,
+            spikes,
+        }
     }
 
     /// Run one channel group's pipeline over every tile and timestep,
@@ -707,6 +1103,89 @@ mod tests {
         assert_eq!(a.run.macro_ops, b.run.macro_ops);
         assert_eq!(a.run.parity_switches, b.run.parity_switches);
         assert!((a.run.energy.total() - b.run.energy.total()).abs() < 1e-6);
+    }
+
+    /// Tentpole invariant at the layer level: every lane of the
+    /// batched executor — Vmems *and* output spikes — must be
+    /// bit-identical to a per-clip `run_layer` of that clip, under
+    /// wrap AND saturate, across random densities and batch sizes.
+    #[test]
+    fn prop_batched_layer_matches_per_clip() {
+        use crate::quant::Overflow;
+        use crate::snn::spikes::LaneFrame;
+        check("batched_layer_equiv", 12, |g| {
+            let out_ch = if g.chance(0.3) { 40 } else { 4 }; // multi-group sometimes
+            let layer = conv_layer(2, out_ch, 5, 5);
+            let overflow = if g.chance(0.5) {
+                Overflow::Wrap
+            } else {
+                Overflow::Saturate
+            };
+            let cfg = SimConfig {
+                overflow,
+                ..SimConfig::default()
+            };
+            let core = SpidrCore::new(cfg);
+            let lanes = 1 + g.index(8);
+            let clips: Vec<Vec<SpikePlane>> = (0..lanes)
+                .map(|_| {
+                    // include the all-zero-lane (fully skipped) case
+                    let density = if g.chance(0.2) { 0.0 } else { g.f64() * 0.5 };
+                    random_frames(2, 5, 5, 3, density, g.u64())
+                })
+                .collect();
+            let refs: Vec<&[SpikePlane]> = clips.iter().map(|c| c.as_slice()).collect();
+            let frames = LaneFrame::pack_clips(&refs).unwrap();
+
+            let mut bank = LaneBank::zeros(25, out_ch, lanes);
+            let (lane_out, _) = core.run_layer_lanes(&layer, &frames, &mut bank).unwrap();
+
+            (0..lanes).all(|b| {
+                let mut state = Mat::zeros(25, out_ch);
+                let (out, _) = core.run_layer(&layer, &clips[b], &mut state).unwrap();
+                bank.lane_mat(b).as_slice() == state.as_slice()
+                    && out
+                        .iter()
+                        .zip(&lane_out)
+                        .all(|(o, lf)| lf.lane(b).as_slice() == o.as_slice())
+            })
+        });
+    }
+
+    #[test]
+    fn batched_degenerate_single_lane_matches() {
+        // batch = 1: the lane datapath degenerates to the per-clip one
+        let layer = conv_layer(2, 4, 6, 6);
+        let frames = random_frames(2, 6, 6, 3, 0.3, 99);
+        let core = SpidrCore::new(SimConfig::default());
+        let mut state = Mat::zeros(36, 4);
+        let (out, _) = core.run_layer(&layer, &frames, &mut state).unwrap();
+        let lane_frames =
+            crate::snn::spikes::LaneFrame::pack_clips(&[frames.as_slice()]).unwrap();
+        let mut bank = LaneBank::zeros(36, 4, 1);
+        let (lane_out, stats) = core.run_layer_lanes(&layer, &lane_frames, &mut bank).unwrap();
+        assert_eq!(bank.lane_mat(0).as_slice(), state.as_slice());
+        for (o, lf) in out.iter().zip(&lane_out) {
+            assert_eq!(lf.lane(0).as_slice(), o.as_slice());
+        }
+        assert!(stats.run.cycles > 0);
+        assert!(stats.run.macro_ops > 0);
+    }
+
+    #[test]
+    fn batched_all_zero_batch_is_inert_and_cheap() {
+        let layer = conv_layer(2, 4, 6, 6);
+        let zeros: Vec<SpikePlane> = (0..3).map(|_| SpikePlane::zeros(2, 6, 6)).collect();
+        let core = SpidrCore::new(SimConfig::default());
+        let lane_frames =
+            crate::snn::spikes::LaneFrame::pack_clips(&[&zeros[..], &zeros[..]]).unwrap();
+        let mut bank = LaneBank::zeros(36, 4, 2);
+        let (out, stats) = core.run_layer_lanes(&layer, &lane_frames, &mut bank).unwrap();
+        // every cell skipped: no macro ops, no spikes, zero state
+        assert_eq!(stats.run.macro_ops, 0);
+        assert_eq!(stats.run.synops, 0);
+        assert!(bank.lane_mat(0).as_slice().iter().all(|&v| v == 0));
+        assert!(out.iter().all(|f| f.count_spikes() == 0));
     }
 
     #[test]

@@ -91,6 +91,70 @@ impl IfSpad {
     }
 }
 
+/// The batched-datapath scratchpad: the same 128×16 geometry as
+/// [`IfSpad`], but each cell holds a full `u64` lane word (bit `b` =
+/// clip `b`'s spike) instead of one bit. The union address stream is
+/// extracted from it in one sweep — a cell participates if *any* lane
+/// is set (DESIGN.md §Perf).
+#[derive(Debug, Clone)]
+pub struct LaneSpad {
+    words: Vec<u64>,
+    /// Rows that carry valid data for the current tile.
+    pub valid_rows: usize,
+    /// Columns that carry valid data (output pixels in the tile).
+    pub valid_cols: usize,
+}
+
+impl Default for LaneSpad {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LaneSpad {
+    /// Empty scratchpad.
+    pub fn new() -> Self {
+        LaneSpad {
+            words: vec![0; IFSPAD_ROWS * IFSPAD_COLS],
+            valid_rows: 0,
+            valid_cols: 0,
+        }
+    }
+
+    /// Clear all cells and set the valid region (new tile).
+    pub fn clear(&mut self, valid_rows: usize, valid_cols: usize) {
+        debug_assert!(valid_rows <= IFSPAD_ROWS && valid_cols <= IFSPAD_COLS);
+        self.words.fill(0);
+        self.valid_rows = valid_rows;
+        self.valid_cols = valid_cols;
+    }
+
+    /// Read one lane word (detector port).
+    #[inline(always)]
+    pub fn word(&self, y: usize, x: usize) -> u64 {
+        debug_assert!(y < IFSPAD_ROWS && x < IFSPAD_COLS);
+        self.words[y * IFSPAD_COLS + x]
+    }
+
+    /// Write one lane word (loader port).
+    #[inline(always)]
+    pub fn set_word(&mut self, y: usize, x: usize, w: u64) {
+        debug_assert!(y < IFSPAD_ROWS && x < IFSPAD_COLS);
+        self.words[y * IFSPAD_COLS + x] = w;
+    }
+
+    /// Total spikes stored across all lanes (valid region only).
+    pub fn count_spikes(&self) -> u64 {
+        let mut total = 0u64;
+        for y in 0..self.valid_rows {
+            for x in 0..self.valid_cols {
+                total += self.word(y, x).count_ones() as u64;
+            }
+        }
+        total
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -126,5 +190,21 @@ mod tests {
         assert_eq!(s.count_spikes(), 0);
         assert_eq!(s.valid_rows, 10);
         assert_eq!(s.valid_cols, 8);
+    }
+
+    #[test]
+    fn lane_spad_words_and_counts() {
+        let mut s = LaneSpad::new();
+        s.clear(4, 8);
+        s.set_word(1, 2, 0b1011);
+        s.set_word(3, 0, 1 << 63);
+        assert_eq!(s.word(1, 2), 0b1011);
+        assert_eq!(s.count_spikes(), 4);
+        // cells outside the valid region are ignored by the count
+        s.set_word(3, 10, u64::MAX);
+        assert_eq!(s.count_spikes(), 4);
+        s.clear(2, 2);
+        assert_eq!(s.count_spikes(), 0);
+        assert_eq!(s.word(1, 2), 0);
     }
 }

@@ -8,9 +8,9 @@
 //! rows land — modeled by the per-row ready schedule this module emits.
 
 use crate::snn::layer::{Layer, LayerKind};
-use crate::snn::spikes::SpikePlane;
+use crate::snn::spikes::{LaneFrame, SpikePlane};
 
-use super::ifspad::IfSpad;
+use super::ifspad::{IfSpad, LaneSpad};
 
 /// Per-tile loader output: IFspad contents plus the write schedule.
 #[derive(Debug, Clone)]
@@ -120,6 +120,72 @@ pub fn load_tile(
     }
 }
 
+/// Fill a [`LaneSpad`] for one conv/FC tile of a whole batch: the
+/// lane-major mirror of [`load_tile`]. The same im2col walk runs once,
+/// but each IFspad cell receives the input cell's full `u64` lane word,
+/// so lane `b` of the scratchpad equals `load_tile` of clip `b`
+/// (DESIGN.md §Perf). No per-row ready schedule is emitted — the
+/// batched path models a sequential union sweep, not the dual-port
+/// cycle interleave.
+pub fn load_tile_lanes(
+    layer: &Layer,
+    input: &LaneFrame,
+    pixel_base: usize,
+    pixels: usize,
+    fan_lo: usize,
+    fan_hi: usize,
+    spad: &mut LaneSpad,
+) {
+    debug_assert!(pixels <= super::config::IFSPAD_COLS);
+    let rows = fan_hi - fan_lo;
+    spad.clear(rows, pixels);
+
+    let plane = input.plane();
+    let (_, _, wo) = layer.out_shape;
+
+    match layer.kind {
+        LayerKind::Conv => {
+            let kh = layer.kh;
+            let kw = layer.kw;
+            let stride = layer.stride as isize;
+            let pad = layer.pad as isize;
+            let (ih, iw) = (plane.h as isize, plane.w as isize);
+            for (r, f) in (fan_lo..fan_hi).enumerate() {
+                let c = f / (kh * kw);
+                let rem = f % (kh * kw);
+                let dy = (rem / kw) as isize;
+                let dx = (rem % kw) as isize;
+                let mut oy = (pixel_base / wo) as isize;
+                let mut ox = (pixel_base % wo) as isize;
+                for p in 0..pixels {
+                    let iy = oy * stride + dy - pad;
+                    let ix = ox * stride + dx - pad;
+                    if iy >= 0 && ix >= 0 && iy < ih && ix < iw {
+                        let word = plane.get(c, iy as usize, ix as usize);
+                        if word != 0 {
+                            spad.set_word(r, p, word);
+                        }
+                    }
+                    ox += 1;
+                    if ox == wo as isize {
+                        ox = 0;
+                        oy += 1;
+                    }
+                }
+            }
+        }
+        LayerKind::Fc => {
+            let flat = plane.as_slice();
+            for (r, f) in (fan_lo..fan_hi).enumerate() {
+                if flat[f] != 0 {
+                    spad.set_word(r, 0, flat[f]);
+                }
+            }
+        }
+        LayerKind::Pool => panic!("pool layers are not mapped to compute units"),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -204,5 +270,39 @@ mod tests {
         let mut spad = IfSpad::new();
         let t = load_tile(&layer, &input, 0, 16, 0, 9, &mut spad);
         assert_eq!(t.row_ready, (1..=9).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn lane_load_matches_per_clip_load() {
+        let layer = conv_layer();
+        let mut rng = crate::prop::SplitMix64::new(0xBA7C);
+        let clips: Vec<SpikePlane> = (0..5)
+            .map(|_| {
+                let mut p = SpikePlane::zeros(1, 4, 4);
+                for cell in p.as_mut_slice() {
+                    if rng.chance(0.4) {
+                        *cell = 1;
+                    }
+                }
+                p
+            })
+            .collect();
+        let refs: Vec<&SpikePlane> = clips.iter().collect();
+        let frame = LaneFrame::pack(&refs).unwrap();
+        let mut lanes = LaneSpad::new();
+        load_tile_lanes(&layer, &frame, 0, 16, 0, 9, &mut lanes);
+        for (b, clip) in clips.iter().enumerate() {
+            let mut spad = IfSpad::new();
+            load_tile(&layer, clip, 0, 16, 0, 9, &mut spad);
+            for y in 0..9 {
+                for x in 0..16 {
+                    assert_eq!(
+                        (lanes.word(y, x) >> b) & 1 != 0,
+                        spad.read(y, x),
+                        "lane {b} cell ({y},{x})"
+                    );
+                }
+            }
+        }
     }
 }

@@ -30,12 +30,13 @@ pub mod s2a;
 pub mod stats;
 pub mod stream;
 
-pub use compute_macro::ComputeMacro;
+pub use compute_macro::{ComputeMacro, LaneMacro};
 pub use compute_unit::{ComputeUnit, TileCuStats};
 pub use config::{OperatingMode, SimConfig, IFSPAD_COLS, IFSPAD_ROWS, NUM_CU, NUM_NU};
-pub use core::{LayerStats, SpidrCore};
-pub use ifspad::IfSpad;
+pub use core::{LaneBank, LayerStats, SpidrCore};
+pub use ifspad::{IfSpad, LaneSpad};
 pub use neuron_macro::NeuronMacro;
 pub use pipeline::{pipeline_makespan, synchronous_makespan, PipelineTimeline};
+pub use s2a::LaneAddr;
 pub use stats::RunStats;
-pub use stream::{StreamCache, TileStream};
+pub use stream::{LaneStreamCache, LaneTileStream, StreamCache, TileStream};

@@ -13,7 +13,7 @@
 use std::collections::VecDeque;
 
 use super::compute_macro::{ComputeMacro, Parity};
-use super::ifspad::IfSpad;
+use super::ifspad::{IfSpad, LaneSpad};
 
 /// S2A policy knobs (a view of the relevant `SimConfig` fields).
 #[derive(Debug, Clone, Copy)]
@@ -250,6 +250,44 @@ pub fn extract_addresses(spad: &IfSpad) -> Vec<(u8, u8)> {
     out
 }
 
+/// One entry of a batched union address stream: an IFspad cell that
+/// has *any* lane spiking, plus its full lane word. The batched
+/// datapath's zero-skipping gate — cells with word 0 never appear
+/// (DESIGN.md §Perf).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LaneAddr {
+    /// IFspad row (weight row of the compute macro).
+    pub y: u8,
+    /// IFspad column (output pixel within the tile).
+    pub x: u8,
+    /// Lane word: bit `b` set iff clip `b` spikes at this cell.
+    pub word: u64,
+}
+
+/// Extract the batched union address stream from a [`LaneSpad`] in the
+/// same sorted `(y, x)` order as [`extract_addresses`]: rows top-down,
+/// columns lowest-X-first. Restricting the stream to the entries whose
+/// word has bit `b` set therefore yields exactly the address sequence
+/// `extract_addresses` would emit for clip `b` alone — the per-lane
+/// bit-exactness invariant the batched replay relies on (DESIGN.md
+/// §Perf).
+pub fn extract_lane_addresses(spad: &LaneSpad) -> Vec<LaneAddr> {
+    let mut out = Vec::new();
+    for y in 0..spad.valid_rows {
+        for x in 0..spad.valid_cols {
+            let word = spad.word(y, x);
+            if word != 0 {
+                out.push(LaneAddr {
+                    y: y as u8,
+                    x: x as u8,
+                    word,
+                });
+            }
+        }
+    }
+    out
+}
+
 #[inline(always)]
 fn mask_cols(valid_cols: usize) -> u16 {
     if valid_cols >= 16 {
@@ -412,6 +450,45 @@ mod tests {
         let mut s = spad_with(&[(1, 2)], 4, 4);
         s.write(1, 9, true); // beyond valid_cols
         assert_eq!(extract_addresses(&s), vec![(1, 2)]);
+    }
+
+    #[test]
+    fn lane_addresses_restrict_to_per_lane_detector_order() {
+        // The invariant run_chain_lanes relies on: filtering the union
+        // stream by one lane's bit reproduces extract_addresses of
+        // that lane's own spad, in the same order.
+        let mut rng = crate::prop::SplitMix64::new(0x5A2A);
+        let (rows, cols) = (12, 16);
+        let lanes = 7;
+        let mut spads: Vec<IfSpad> = Vec::new();
+        let mut lane_spad = LaneSpad::new();
+        lane_spad.clear(rows, cols);
+        for b in 0..lanes {
+            let mut s = IfSpad::new();
+            s.clear(rows, cols);
+            for y in 0..rows {
+                for x in 0..cols {
+                    if rng.chance(0.2) {
+                        s.write(y, x, true);
+                        lane_spad.set_word(y, x, lane_spad.word(y, x) | 1 << b);
+                    }
+                }
+            }
+            spads.push(s);
+        }
+        let union = extract_lane_addresses(&lane_spad);
+        assert_eq!(
+            union.iter().map(|a| a.word.count_ones() as u64).sum::<u64>(),
+            lane_spad.count_spikes()
+        );
+        for (b, s) in spads.iter().enumerate() {
+            let restricted: Vec<(u8, u8)> = union
+                .iter()
+                .filter(|a| a.word >> b & 1 != 0)
+                .map(|a| (a.y, a.x))
+                .collect();
+            assert_eq!(restricted, extract_addresses(s), "lane {b}");
+        }
     }
 
     #[test]

@@ -25,13 +25,16 @@
 //! (see `prop_stream_replay_bit_identical` below and DESIGN.md §Perf).
 
 use crate::snn::layer::Layer;
-use crate::snn::spikes::SpikePlane;
+use crate::snn::spikes::{LaneFrame, SpikePlane};
 
 use super::compute_macro::ComputeMacro;
 use super::config::{SimConfig, IFSPAD_COLS};
-use super::ifspad::IfSpad;
-use super::input_loader::load_tile;
-use super::s2a::{extract_addresses, run_tile, run_tile_dense, S2aOptions, TileCuStats};
+use super::ifspad::{IfSpad, LaneSpad};
+use super::input_loader::{load_tile, load_tile_lanes};
+use super::s2a::{
+    extract_addresses, extract_lane_addresses, run_tile, run_tile_dense, LaneAddr, S2aOptions,
+    TileCuStats,
+};
 
 /// Loader statistics kept per stream (the `row_ready` schedule is
 /// consumed during the build and not retained — it would dominate the
@@ -199,6 +202,142 @@ fn build_tile_range(
     out
 }
 
+/// One precomputed *batched* tile execution: the union address stream
+/// of up to 64 clips plus aggregate counters. The whole point of the
+/// batched datapath (DESIGN.md §Perf): the im2col walk and the address
+/// extraction run **once per batch** instead of once per clip.
+#[derive(Debug, Clone)]
+pub struct LaneTileStream {
+    /// Union spike addresses with lane words, sorted `(y, x)` — the
+    /// same order [`extract_addresses`] yields per clip.
+    addrs: Vec<LaneAddr>,
+    /// Total per-lane accumulations this stream triggers (Σ popcounts
+    /// of the address words) — the batched synop counter.
+    pub lane_ops: u64,
+    /// Loader statistics (one batched load, counted once).
+    pub load: LoadStats,
+}
+
+impl LaneTileStream {
+    /// The union address list in sorted `(y, x)` order.
+    pub fn addrs(&self) -> &[LaneAddr] {
+        &self.addrs
+    }
+}
+
+/// All of a layer's batched tile streams, indexed by
+/// `(tile, slice, timestep)` — the lane-major mirror of
+/// [`StreamCache`].
+#[derive(Debug, Clone)]
+pub struct LaneStreamCache {
+    streams: Vec<LaneTileStream>,
+    slices: usize,
+    timesteps: usize,
+}
+
+impl LaneStreamCache {
+    /// Build every batched stream for a layer run (same tiling
+    /// contract as [`StreamCache::build`]; fans out over host threads
+    /// when there is enough work).
+    pub fn build(
+        layer: &Layer,
+        inputs: &[LaneFrame],
+        slices: &[(usize, usize)],
+        tiles: usize,
+        m_total: usize,
+    ) -> LaneStreamCache {
+        let timesteps = inputs.len();
+        let entries = tiles * slices.len() * timesteps;
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(tiles);
+        let streams = if workers <= 1 || entries < 64 {
+            build_lane_tile_range(layer, inputs, slices, 0, tiles, m_total)
+        } else {
+            let chunk = tiles.div_ceil(workers);
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..workers)
+                    .map(|wi| {
+                        let lo = (wi * chunk).min(tiles);
+                        let hi = ((wi + 1) * chunk).min(tiles);
+                        scope.spawn(move || {
+                            build_lane_tile_range(layer, inputs, slices, lo, hi, m_total)
+                        })
+                    })
+                    .collect();
+                let mut all = Vec::with_capacity(entries);
+                for h in handles {
+                    all.extend(h.join().expect("lane-stream-build thread panicked"));
+                }
+                all
+            })
+        };
+        debug_assert_eq!(streams.len(), entries);
+        LaneStreamCache {
+            streams,
+            slices: slices.len(),
+            timesteps,
+        }
+    }
+
+    /// The stream for `(tile, slice, timestep)`.
+    #[inline]
+    pub fn get(&self, tile: usize, slice: usize, t: usize) -> &LaneTileStream {
+        debug_assert!(slice < self.slices && t < self.timesteps);
+        &self.streams[(tile * self.slices + slice) * self.timesteps + t]
+    }
+
+    /// Timesteps covered per `(tile, slice)` pair.
+    pub fn timesteps(&self) -> usize {
+        self.timesteps
+    }
+
+    /// Total cached streams (diagnostics).
+    pub fn len(&self) -> usize {
+        self.streams.len()
+    }
+
+    /// True when the cache holds no streams.
+    pub fn is_empty(&self) -> bool {
+        self.streams.is_empty()
+    }
+}
+
+/// Build the batched streams of tiles `tile_lo..tile_hi`, in
+/// `(tile, slice, timestep)` index order.
+fn build_lane_tile_range(
+    layer: &Layer,
+    inputs: &[LaneFrame],
+    slices: &[(usize, usize)],
+    tile_lo: usize,
+    tile_hi: usize,
+    m_total: usize,
+) -> Vec<LaneTileStream> {
+    let mut spad = LaneSpad::new();
+    let mut out = Vec::with_capacity((tile_hi - tile_lo) * slices.len() * inputs.len());
+    for tile in tile_lo..tile_hi {
+        let pixel_base = tile * IFSPAD_COLS;
+        let pixels = IFSPAD_COLS.min(m_total - pixel_base);
+        for &(lo, hi) in slices {
+            for input in inputs {
+                load_tile_lanes(layer, input, pixel_base, pixels, lo, hi, &mut spad);
+                let addrs = extract_lane_addresses(&spad);
+                let lane_ops: u64 = addrs.iter().map(|a| a.word.count_ones() as u64).sum();
+                out.push(LaneTileStream {
+                    addrs,
+                    lane_ops,
+                    load: LoadStats {
+                        ifmem_reads: (hi - lo) as u64,
+                        spad_writes: (hi - lo) as u64,
+                    },
+                });
+            }
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -324,6 +463,58 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Per-lane restriction of the batched cache must reproduce the
+    /// per-clip cache's address stream exactly, tile by tile.
+    #[test]
+    fn prop_lane_cache_restricts_to_per_clip_streams() {
+        check("lane_cache_restrict", 25, |g| {
+            let (layer, _) = rand_layer_and_input(g);
+            let (in_ch, h, w) = layer.in_shape;
+            let lanes = 1 + g.index(8);
+            let clips: Vec<Vec<SpikePlane>> = (0..lanes)
+                .map(|_| {
+                    let density = g.f64() * 0.6;
+                    (0..2)
+                        .map(|_| {
+                            let mut p = SpikePlane::zeros(in_ch, h, w);
+                            for i in 0..p.len() {
+                                if g.chance(density) {
+                                    p.as_mut_slice()[i] = 1;
+                                }
+                            }
+                            p
+                        })
+                        .collect()
+                })
+                .collect();
+            let refs: Vec<&[SpikePlane]> = clips.iter().map(|c| c.as_slice()).collect();
+            let frames = LaneFrame::pack_clips(&refs).unwrap();
+            let fan = layer.fan_in();
+            let (m_total, _) = layer.vmem_shape().unwrap();
+            let tiles = m_total.div_ceil(IFSPAD_COLS);
+            let cfg = SimConfig::default();
+            let lane_cache =
+                LaneStreamCache::build(&layer, &frames, &[(0, fan)], tiles, m_total);
+            (0..lanes).all(|b| {
+                let clip = &clips[b];
+                let cache =
+                    StreamCache::build(&layer, clip, &[(0, fan)], tiles, m_total, &cfg);
+                (0..tiles).all(|tile| {
+                    (0..2).all(|t| {
+                        let restricted: Vec<(u8, u8)> = lane_cache
+                            .get(tile, 0, t)
+                            .addrs()
+                            .iter()
+                            .filter(|a| a.word >> b & 1 != 0)
+                            .map(|a| (a.y, a.x))
+                            .collect();
+                        restricted == cache.get(tile, 0, t).addrs()
+                    })
+                })
+            })
+        });
     }
 
     #[test]

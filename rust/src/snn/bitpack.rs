@@ -1,0 +1,121 @@
+//! The single bit-layout definition for binary spike cells.
+//!
+//! Two subsystems pack spike planes into bits: the wire codec
+//! (`net/wire.rs`, 8 cells per byte on a shard link) and the lane-major
+//! batch tensor ([`LaneFrame`](crate::snn::spikes::LaneFrame), 64 clips
+//! per `u64` word). Both must agree on one layout — **LSB-first**: cell
+//! `i` maps to bit `i % width` of word `i / width`, and any nonzero
+//! cell normalizes to a set bit (planes are binary by contract). This
+//! module is that layout's only definition; round-trip property tests
+//! below pin it.
+
+/// Pack binary cells into bytes, 8 cells per byte, LSB-first. Any
+/// nonzero cell becomes a set bit. The last byte is zero-padded when
+/// `cells.len()` is not a multiple of 8.
+pub fn pack_bytes(cells: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(cells.len().div_ceil(8));
+    let mut byte = 0u8;
+    for (i, &v) in cells.iter().enumerate() {
+        if v != 0 {
+            byte |= 1 << (i % 8);
+        }
+        if i % 8 == 7 {
+            out.push(byte);
+            byte = 0;
+        }
+    }
+    if cells.len() % 8 != 0 {
+        out.push(byte);
+    }
+    out
+}
+
+/// Unpack `cells` bits from an LSB-first packed buffer back into one
+/// byte per cell (0 or 1). `packed` must hold at least
+/// `cells.div_ceil(8)` bytes.
+pub fn unpack_bytes(packed: &[u8], cells: usize) -> Vec<u8> {
+    debug_assert!(packed.len() >= cells.div_ceil(8));
+    let mut out = vec![0u8; cells];
+    for (i, cell) in out.iter_mut().enumerate() {
+        *cell = (packed[i / 8] >> (i % 8)) & 1;
+    }
+    out
+}
+
+/// Count nonzero cells through the packed representation: fold 64
+/// cells at a time into a `u64` and popcount it — the hot-path
+/// replacement for the byte-at-a-time sum (§Perf), equivalence-tested
+/// below.
+pub fn count_set(cells: &[u8]) -> u64 {
+    let mut total = 0u64;
+    for chunk in cells.chunks(64) {
+        let mut word = 0u64;
+        for (b, &v) in chunk.iter().enumerate() {
+            word |= ((v != 0) as u64) << b;
+        }
+        total += word.count_ones() as u64;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::check;
+
+    #[test]
+    fn pack_is_lsb_first() {
+        // cell 0 -> bit 0, cell 9 -> byte 1 bit 1
+        let mut cells = vec![0u8; 10];
+        cells[0] = 1;
+        cells[9] = 1;
+        assert_eq!(pack_bytes(&cells), vec![0b0000_0001, 0b0000_0010]);
+    }
+
+    #[test]
+    fn nonzero_cells_normalize_to_set_bits() {
+        assert_eq!(pack_bytes(&[0, 3, 0, 255]), vec![0b0000_1010]);
+    }
+
+    #[test]
+    fn empty_and_exact_multiples() {
+        assert!(pack_bytes(&[]).is_empty());
+        assert_eq!(pack_bytes(&[1; 8]).len(), 1);
+        assert_eq!(pack_bytes(&[1; 9]).len(), 2);
+    }
+
+    #[test]
+    fn prop_pack_unpack_roundtrip() {
+        check("bitpack_roundtrip", 50, |g| {
+            let n = g.index(300);
+            let cells: Vec<u8> = (0..n).map(|_| g.chance(0.3) as u8).collect();
+            unpack_bytes(&pack_bytes(&cells), n) == cells
+        });
+    }
+
+    #[test]
+    fn prop_unpack_pack_roundtrip() {
+        // packed -> cells -> packed is identity when the pad bits are
+        // clear (the only buffers pack_bytes ever produces)
+        check("bitpack_repack", 50, |g| {
+            let n = g.index(300);
+            let cells: Vec<u8> = (0..n).map(|_| g.chance(0.5) as u8).collect();
+            let packed = pack_bytes(&cells);
+            pack_bytes(&unpack_bytes(&packed, n)) == packed
+        });
+    }
+
+    /// Satellite (ISSUE 6): the popcount path must agree with the
+    /// byte-wise sum for any cell buffer, including non-0/1 values.
+    #[test]
+    fn prop_count_set_equals_bytewise() {
+        check("bitpack_popcount_equiv", 50, |g| {
+            let n = g.index(500);
+            let cells: Vec<u8> = (0..n)
+                .map(|_| if g.chance(0.4) { 1 + g.index(255) as u8 } else { 0 })
+                .collect();
+            let bytewise: u64 = cells.iter().map(|&b| (b != 0) as u64).sum();
+            count_set(&cells) == bytewise
+        });
+    }
+}

@@ -1,6 +1,7 @@
 //! SNN data structures: spike tensors, layer specs, Table-II networks,
 //! and the `.swb` weight-bundle loader shared with the Python AOT path.
 
+pub mod bitpack;
 pub mod layer;
 pub mod network;
 pub mod spikes;
@@ -9,6 +10,6 @@ pub mod tensor;
 
 pub use layer::{Layer, LayerKind, NeuronConfig, ResetMode};
 pub use network::{Network, NetworkBuilder};
-pub use spikes::{SpikePlane, SparsityStats};
+pub use spikes::{LaneFrame, LanePlane, SparsityStats, SpikePlane, MAX_LANES};
 pub use swb::WeightBundle;
 pub use tensor::Tensor3;

@@ -15,7 +15,7 @@
 use crate::error::{Error, Result};
 use crate::quant::{wrap_to_bits, Precision};
 use crate::snn::layer::{Layer, LayerKind, NeuronConfig, ResetMode};
-use crate::snn::spikes::SpikePlane;
+use crate::snn::spikes::{LaneFrame, LanePlane, SpikePlane};
 use crate::snn::swb::WeightBundle;
 use crate::snn::tensor::Mat;
 
@@ -434,6 +434,35 @@ pub fn pool_step(layer: &Layer, spikes_in: &SpikePlane) -> SpikePlane {
         }
     }
     out
+}
+
+/// Apply a maxpool layer to a lane frame: the lane-major mirror of
+/// [`pool_step`]. Each `u64` word ORs the window's words, so lane `b`
+/// of the result equals `pool_step` of lane `b` — 64 clips pooled in
+/// one sweep (DESIGN.md §Perf).
+pub fn pool_step_lanes(layer: &Layer, frame: &LaneFrame) -> LaneFrame {
+    let input = frame.plane();
+    let (c, _, _) = layer.in_shape;
+    let (_, ho, wo) = layer.out_shape;
+    let mut out = LanePlane::zeros(c, ho, wo);
+    for ch in 0..c {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let mut word = 0u64;
+                for dy in 0..layer.kh {
+                    for dx in 0..layer.kw {
+                        let iy = oy * layer.stride + dy;
+                        let ix = ox * layer.stride + dx;
+                        if iy < input.h && ix < input.w {
+                            word |= input.get(ch, iy, ix);
+                        }
+                    }
+                }
+                out.set(ch, oy, ox, word);
+            }
+        }
+    }
+    LaneFrame::from_plane(out, frame.lanes())
 }
 
 // ---------------------------------------------------------------------------
@@ -953,6 +982,31 @@ mod tests {
         assert_eq!(net.out_shape().unwrap(), (1, 4));
         // every layer maps onto the simulated core (Mode 2 cap)
         assert!(net.stateful_layers().all(|l| l.fan_in() <= 1152));
+    }
+
+    #[test]
+    fn prop_pool_step_lanes_matches_per_lane_pool() {
+        check("pool_lanes", 30, |g| {
+            let layer = Layer::pool((2, 6, 6), 2, 2);
+            let lanes = 1 + g.index(crate::snn::spikes::MAX_LANES);
+            let planes: Vec<SpikePlane> = (0..lanes)
+                .map(|_| {
+                    let density = g.f64() * 0.5;
+                    let mut p = SpikePlane::zeros(2, 6, 6);
+                    for cell in p.as_mut_slice() {
+                        if g.chance(density) {
+                            *cell = 1;
+                        }
+                    }
+                    p
+                })
+                .collect();
+            let refs: Vec<&SpikePlane> = planes.iter().collect();
+            let frame = LaneFrame::pack(&refs).unwrap();
+            let pooled = pool_step_lanes(&layer, &frame);
+            pooled.lanes() == lanes
+                && (0..lanes).all(|b| pooled.lane(b) == pool_step(&layer, &planes[b]))
+        });
     }
 
     #[test]

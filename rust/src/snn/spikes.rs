@@ -1,5 +1,8 @@
-//! Binary spike planes and sparsity statistics.
+//! Binary spike planes, lane-major bit-plane batches, and sparsity
+//! statistics.
 
+use crate::error::{Error, Result};
+use crate::snn::bitpack;
 use crate::snn::tensor::Tensor3;
 
 /// A binary spike plane `(C, H, W)` — one timestep of one layer's input
@@ -7,9 +10,11 @@ use crate::snn::tensor::Tensor3;
 pub type SpikePlane = Tensor3<u8>;
 
 impl SpikePlane {
-    /// Count of set spikes.
+    /// Count of set spikes, via the packed-representation popcount
+    /// ([`bitpack::count_set`] — equivalence-tested against the
+    /// byte-wise sum it replaced).
     pub fn count_spikes(&self) -> u64 {
-        self.as_slice().iter().map(|&b| b as u64).sum()
+        bitpack::count_set(self.as_slice())
     }
 
     /// Spike density in [0, 1].
@@ -21,6 +26,172 @@ impl SpikePlane {
     }
 
     /// Sparsity in [0, 1] (1 − density) — the paper's x-axis everywhere.
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.density()
+    }
+}
+
+/// A lane-major bit-plane tensor `(C, H, W)`: one `u64` word per cell,
+/// bit `b` = clip `b`'s spike at that cell. The batched datapath's
+/// frame layout (DESIGN.md §Perf): zero-skipping over a whole batch is
+/// "skip cells whose word is 0", and per-lane activity is a popcount.
+pub type LanePlane = Tensor3<u64>;
+
+/// Maximum clips (bit-lanes) one [`LaneFrame`] can carry — the width
+/// of the `u64` lane word.
+pub const MAX_LANES: usize = 64;
+
+/// One timestep of up to [`MAX_LANES`] clips, packed lane-major: a
+/// [`LanePlane`] plus the number of occupied lanes. Built from per-clip
+/// [`SpikePlane`]s via [`LaneFrame::pack`] / [`LaneFrame::pack_clips`];
+/// individual lanes unpack back out via [`LaneFrame::lane`]
+/// (round-trip property-tested below).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LaneFrame {
+    plane: LanePlane,
+    lanes: usize,
+}
+
+impl LaneFrame {
+    /// Pack one plane per clip (all the same shape, at most
+    /// [`MAX_LANES`] of them) into a lane frame; plane `b` lands in
+    /// bit-lane `b`. Any nonzero cell normalizes to a set bit, the
+    /// same contract as [`bitpack`].
+    pub fn pack(planes: &[&SpikePlane]) -> Result<LaneFrame> {
+        if planes.is_empty() || planes.len() > MAX_LANES {
+            return Err(Error::config(format!(
+                "lane frame needs 1..={MAX_LANES} planes, got {}",
+                planes.len()
+            )));
+        }
+        let (c, h, w) = planes[0].shape();
+        let mut plane = LanePlane::zeros(c, h, w);
+        for (b, p) in planes.iter().enumerate() {
+            if p.shape() != (c, h, w) {
+                return Err(Error::shape(format!(
+                    "lane {b} plane shape {:?} != lane 0 shape {:?}",
+                    p.shape(),
+                    (c, h, w)
+                )));
+            }
+            for (cell, &v) in plane.as_mut_slice().iter_mut().zip(p.as_slice()) {
+                if v != 0 {
+                    *cell |= 1 << b;
+                }
+            }
+        }
+        Ok(LaneFrame {
+            plane,
+            lanes: planes.len(),
+        })
+    }
+
+    /// Pack a batch of whole clips (clip `b` → bit-lane `b`) into one
+    /// lane frame per timestep. Every clip must have the same number
+    /// of timesteps and the same frame shape.
+    pub fn pack_clips(clips: &[&[SpikePlane]]) -> Result<Vec<LaneFrame>> {
+        if clips.is_empty() || clips.len() > MAX_LANES {
+            return Err(Error::config(format!(
+                "lane batch needs 1..={MAX_LANES} clips, got {}",
+                clips.len()
+            )));
+        }
+        let timesteps = clips[0].len();
+        for (b, clip) in clips.iter().enumerate() {
+            if clip.len() != timesteps {
+                return Err(Error::config(format!(
+                    "clip {b} has {} timesteps, clip 0 has {timesteps}",
+                    clip.len()
+                )));
+            }
+        }
+        (0..timesteps)
+            .map(|t| {
+                let planes: Vec<&SpikePlane> = clips.iter().map(|clip| &clip[t]).collect();
+                LaneFrame::pack(&planes)
+            })
+            .collect()
+    }
+
+    /// Wrap an already lane-major plane (internal constructor for the
+    /// sim datapath's outputs; `pack` is the validated public entry).
+    pub(crate) fn from_plane(plane: LanePlane, lanes: usize) -> LaneFrame {
+        debug_assert!(lanes >= 1 && lanes <= MAX_LANES);
+        LaneFrame { plane, lanes }
+    }
+
+    /// Occupied bit-lanes (the batch size).
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// The underlying lane-major plane.
+    pub fn plane(&self) -> &LanePlane {
+        &self.plane
+    }
+
+    /// Shape tuple `(c, h, w)` of every lane.
+    pub fn shape(&self) -> (usize, usize, usize) {
+        self.plane.shape()
+    }
+
+    /// Unpack one lane back into a per-clip spike plane.
+    pub fn lane(&self, b: usize) -> SpikePlane {
+        debug_assert!(b < self.lanes);
+        let (c, h, w) = self.plane.shape();
+        let mut out = SpikePlane::zeros(c, h, w);
+        for (cell, &word) in out.as_mut_slice().iter_mut().zip(self.plane.as_slice()) {
+            *cell = ((word >> b) & 1) as u8;
+        }
+        out
+    }
+
+    /// The union plane: a cell is set iff *any* lane spikes there —
+    /// the batched zero-skipping gate (a cell with word 0 is skipped
+    /// for the whole batch).
+    pub fn union(&self) -> SpikePlane {
+        let (c, h, w) = self.plane.shape();
+        let mut out = SpikePlane::zeros(c, h, w);
+        for (cell, &word) in out.as_mut_slice().iter_mut().zip(self.plane.as_slice()) {
+            *cell = (word != 0) as u8;
+        }
+        out
+    }
+
+    /// Total spikes across all lanes (one popcount per cell).
+    pub fn count_spikes(&self) -> u64 {
+        self.plane
+            .as_slice()
+            .iter()
+            .map(|w| w.count_ones() as u64)
+            .sum()
+    }
+
+    /// Per-lane spike counts — lane `b`'s entry equals
+    /// `self.lane(b).count_spikes()` without unpacking.
+    pub fn lane_counts(&self) -> Vec<u64> {
+        let mut counts = vec![0u64; self.lanes];
+        for &word in self.plane.as_slice() {
+            let mut m = word;
+            while m != 0 {
+                let b = m.trailing_zeros() as usize;
+                m &= m - 1;
+                counts[b] += 1;
+            }
+        }
+        counts
+    }
+
+    /// Mean spike density over all lanes in [0, 1].
+    pub fn density(&self) -> f64 {
+        let cells = self.plane.len() * self.lanes;
+        if cells == 0 {
+            return 0.0;
+        }
+        self.count_spikes() as f64 / cells as f64
+    }
+
+    /// Mean sparsity over all lanes (1 − density).
     pub fn sparsity(&self) -> f64 {
         1.0 - self.density()
     }
@@ -66,7 +237,8 @@ impl SparsityStats {
         Self::default()
     }
 
-    /// Record one spike plane.
+    /// Record one spike plane (counted through the popcount path —
+    /// see [`SpikePlane::count_spikes`]).
     pub fn record(&mut self, plane: &SpikePlane) {
         self.record_counts(plane.count_spikes(), plane.len() as u64);
     }
@@ -127,6 +299,7 @@ impl SparsityStats {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prop::check;
 
     #[test]
     fn density_and_sparsity() {
@@ -135,6 +308,23 @@ mod tests {
         assert_eq!(p.count_spikes(), 1);
         assert!((p.density() - 0.25).abs() < 1e-12);
         assert!((p.sparsity() - 0.75).abs() < 1e-12);
+    }
+
+    /// Satellite (ISSUE 6): the popcount `count_spikes` must equal the
+    /// byte-wise sum it replaced, for any plane contents.
+    #[test]
+    fn prop_count_spikes_popcount_equals_bytewise() {
+        check("count_spikes_popcount_equiv", 40, |g| {
+            let (c, h, w) = (1 + g.index(3), 1 + g.index(9), 1 + g.index(9));
+            let mut p = SpikePlane::zeros(c, h, w);
+            for cell in p.as_mut_slice() {
+                if g.chance(0.35) {
+                    *cell = 1;
+                }
+            }
+            let bytewise: u64 = p.as_slice().iter().map(|&b| b as u64).sum();
+            p.count_spikes() == bytewise
+        });
     }
 
     #[test]
@@ -194,5 +384,90 @@ mod tests {
         assert!((s.min_sparsity() - 0.60).abs() < 1e-12);
         assert!((s.max_sparsity() - 0.90).abs() < 1e-12);
         assert!((s.mean_sparsity() - 0.75).abs() < 1e-12);
+    }
+
+    // -- LaneFrame ---------------------------------------------------
+
+    fn random_plane(g: &mut crate::prop::Gen, c: usize, h: usize, w: usize) -> SpikePlane {
+        let density = g.f64() * 0.6;
+        let mut p = SpikePlane::zeros(c, h, w);
+        for cell in p.as_mut_slice() {
+            if g.chance(density) {
+                *cell = 1;
+            }
+        }
+        p
+    }
+
+    #[test]
+    fn prop_lane_pack_unpack_roundtrip() {
+        check("lane_pack_roundtrip", 30, |g| {
+            let (c, h, w) = (1 + g.index(3), 1 + g.index(6), 1 + g.index(6));
+            let lanes = 1 + g.index(MAX_LANES);
+            let planes: Vec<SpikePlane> =
+                (0..lanes).map(|_| random_plane(g, c, h, w)).collect();
+            let refs: Vec<&SpikePlane> = planes.iter().collect();
+            let frame = LaneFrame::pack(&refs).unwrap();
+            frame.lanes() == lanes
+                && (0..lanes).all(|b| frame.lane(b) == planes[b])
+        });
+    }
+
+    #[test]
+    fn prop_lane_counts_and_union_agree_with_lanes() {
+        check("lane_counts_union", 30, |g| {
+            let (c, h, w) = (1 + g.index(2), 1 + g.index(6), 1 + g.index(6));
+            let lanes = 1 + g.index(MAX_LANES);
+            let planes: Vec<SpikePlane> =
+                (0..lanes).map(|_| random_plane(g, c, h, w)).collect();
+            let refs: Vec<&SpikePlane> = planes.iter().collect();
+            let frame = LaneFrame::pack(&refs).unwrap();
+            let counts = frame.lane_counts();
+            let per_lane_ok =
+                (0..lanes).all(|b| counts[b] == planes[b].count_spikes());
+            let total_ok =
+                frame.count_spikes() == counts.iter().sum::<u64>();
+            let union = frame.union();
+            let union_ok = (0..union.len()).all(|i| {
+                let any = planes.iter().any(|p| p.as_slice()[i] != 0);
+                (union.as_slice()[i] != 0) == any
+            });
+            per_lane_ok && total_ok && union_ok
+        });
+    }
+
+    #[test]
+    fn pack_validates_shapes_and_counts() {
+        let a = SpikePlane::zeros(1, 2, 2);
+        let b = SpikePlane::zeros(1, 3, 2);
+        assert!(LaneFrame::pack(&[]).is_err());
+        assert!(LaneFrame::pack(&[&a, &b]).is_err());
+        let many: Vec<&SpikePlane> = (0..MAX_LANES + 1).map(|_| &a).collect();
+        assert!(LaneFrame::pack(&many).is_err());
+        assert!(LaneFrame::pack(&[&a, &a]).is_ok());
+    }
+
+    #[test]
+    fn pack_clips_validates_timesteps() {
+        let clip_a = vec![SpikePlane::zeros(1, 2, 2); 3];
+        let clip_b = vec![SpikePlane::zeros(1, 2, 2); 2];
+        assert!(LaneFrame::pack_clips(&[&clip_a, &clip_b]).is_err());
+        let frames = LaneFrame::pack_clips(&[&clip_a, &clip_a]).unwrap();
+        assert_eq!(frames.len(), 3);
+        assert_eq!(frames[0].lanes(), 2);
+    }
+
+    #[test]
+    fn all_zero_lane_contributes_nothing() {
+        // a fully silent clip packs to clear bits: zero count, absent
+        // from the union (the batched path skips it entirely)
+        let mut live = SpikePlane::zeros(1, 2, 2);
+        live.set(0, 1, 1, 1);
+        let silent = SpikePlane::zeros(1, 2, 2);
+        let frame = LaneFrame::pack(&[&silent, &live]).unwrap();
+        assert_eq!(frame.lane_counts(), vec![0, 1]);
+        assert_eq!(frame.lane(0), silent);
+        assert_eq!(frame.union().count_spikes(), 1);
+        assert!((frame.density() - 1.0 / 8.0).abs() < 1e-12);
     }
 }
