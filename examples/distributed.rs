@@ -18,6 +18,12 @@
 //! # (the CI three-process failover smoke):
 //! cargo run --release --example distributed -- \
 //!     --connect 127.0.0.1:7403,127.0.0.1:7404 --replicas 2 --kill-replica 0
+//!
+//! # lane-batched: after the scalar clips, pack N clips into one v3
+//! # lane batch per hop and check the wire-frame amortization (the CI
+//! # lane-batch smoke; loopback runs this by default with N=64):
+//! cargo run --release --example distributed -- \
+//!     --connect 127.0.0.1:7405,127.0.0.1:7406 --batch 64
 //! ```
 //!
 //! Either way the example acts as the coordinator: it builds the
@@ -36,7 +42,7 @@ use spidr::coordinator::{Engine, ReferenceEngine};
 use spidr::net::{DistributedConfig, DistributedEngine, TcpTransport, Transport};
 use spidr::prop::SplitMix64;
 use spidr::snn::network::{demo_pipeline_network, Network};
-use spidr::snn::spikes::SpikePlane;
+use spidr::snn::spikes::{SpikePlane, MAX_LANES};
 
 const TIMESTEPS: usize = 12;
 
@@ -109,6 +115,13 @@ fn main() -> spidr::Result<()> {
         .unwrap_or(1);
     let kill_replica: Option<usize> =
         flag_value(&args, "--kill-replica").and_then(|v| v.parse().ok());
+    // Lane-batch phase size: loopback demos always exercise the
+    // batched datapath; TCP mode only when --batch is given (the CI
+    // lane-batch smoke), so the older scalar smokes stay byte-for-byte
+    // the v2 grammar on the wire.
+    let batch: usize = flag_value(&args, "--batch")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if connect.is_some() { 0 } else { 64 });
 
     let net = demo_pipeline_network(TIMESTEPS)?;
     let clips: Vec<Vec<SpikePlane>> = (0..4).map(|i| random_clip(&net, 40 + i)).collect();
@@ -214,6 +227,61 @@ fn main() -> spidr::Result<()> {
         clips.len(),
         engine.failovers(),
     );
+
+    // Lane-batch phase: pack up to 64 clips into one v3 lane batch per
+    // hop and check both the per-lane outputs (against the reference)
+    // and the wire-frame amortization counters.
+    if batch > 0 {
+        // One lane batch's worth of clips; on a v2-pinned
+        // constellation (max_batch = 1) they all serve through the
+        // scalar fallback instead.
+        let lanes = batch.min(MAX_LANES);
+        let bclips: Vec<Vec<SpikePlane>> = (0..lanes)
+            .map(|i| random_clip(&net, 400 + i as u64))
+            .collect();
+        let mut bwant = Vec::new();
+        for clip in &bclips {
+            bwant.push(reference.infer(clip)?);
+        }
+        let refs: Vec<&[SpikePlane]> = bclips.iter().map(|c| c.as_slice()).collect();
+        let (s0, l0) = engine.wire_frames();
+        let t1 = Instant::now();
+        let got = engine.infer_batch(&refs)?;
+        let bwall = t1.elapsed();
+        assert_eq!(
+            got, bwant,
+            "batched distributed outputs diverged from the reference"
+        );
+        let (s1, l1) = engine.wire_frames();
+        let hops = engine.groups().len() as u64;
+        if engine.lane_batching() {
+            assert_eq!(s1, s0, "a lane-batched run sent scalar spike frames");
+            assert_eq!(
+                l1 - l0,
+                (TIMESTEPS as u64 + 2) * hops,
+                "lane-frame count off: one batch is open + T frames + drain per hop"
+            );
+            // What the same clips would have cost as scalar sessions.
+            let scalar_cost = (TIMESTEPS as u64 + 1) * hops * lanes as u64;
+            println!(
+                "lane batch: {lanes} clips × {TIMESTEPS} steps in {bwall:?}, \
+                 {} lane frames vs {scalar_cost} scalar frames \
+                 ({:.1}x wire amortization): ok",
+                l1 - l0,
+                scalar_cost as f64 / (l1 - l0) as f64,
+            );
+        } else {
+            // A v2 replica pins the constellation to the scalar
+            // grammar; the batched request must still serve correctly.
+            assert_eq!(l1, l0, "a v2 constellation sent lane frames");
+            assert!(s1 > s0, "scalar fallback sent no frames");
+            println!(
+                "lane batch: constellation negotiated v{} — {lanes} clips served \
+                 by scalar fallback, bit-identical: ok",
+                engine.negotiated_version(),
+            );
+        }
+    }
     print_hops(&engine);
     Ok(())
 }

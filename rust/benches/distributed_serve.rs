@@ -20,6 +20,13 @@
 //!   (pays the group re-push + frame replay).
 //! * `clip_latency_degraded_us` — steady-state clip latency on the
 //!   surviving replica after the failover.
+//! * `distributed_batched_clips_per_s` — throughput of one 64-clip v3
+//!   lane batch through a 2-shard loopback constellation (64 clips ÷
+//!   batch wall time).
+//! * `wire_amortization_ratio` — scalar wire frames ÷ lane wire frames
+//!   for the same 64 clips on the same constellation (how much of the
+//!   per-frame wire cost the lane batch amortizes; 64·(T+1)/(T+2) ≈
+//!   59x at T=12).
 //!
 //! Outputs are asserted bit-identical to the reference on every
 //! topology — including across the replica kill — so this bench
@@ -127,4 +134,39 @@ fn main() {
     );
     common::emit("clip_latency_failover_us", 2.0, failover_us);
     common::emit("clip_latency_degraded_us", 2.0, degraded_us);
+
+    // Lane batching (ISSUE 7): 64 clips as one v3 lane batch per hop,
+    // then the same 64 clips as scalar sessions on the same
+    // constellation — the wire-frame counters give the amortization
+    // ratio, and the reference outputs gate both paths.
+    let cfg = DistributedConfig::with_shards(2);
+    let mut batched =
+        DistributedEngine::loopback(net.clone(), &cfg).expect("batched constellation");
+    assert_eq!(batched.max_batch(), 64, "loopback shards must negotiate v3");
+    let clips: Vec<Vec<SpikePlane>> = (0..64u64)
+        .map(|i| common::random_clip(2, 24, 24, TIMESTEPS, 0.2, 100 + i))
+        .collect();
+    let mut want_batch = Vec::new();
+    for c in &clips {
+        want_batch.push(local.infer(c).expect("reference clip"));
+    }
+    let refs: Vec<&[SpikePlane]> = clips.iter().map(|c| c.as_slice()).collect();
+    let (got, secs) = common::timed(|| batched.infer_batch(&refs).expect("lane batch"));
+    assert_eq!(got, want_batch, "batched outputs diverged from the reference");
+    let (scalar0, lane) = batched.wire_frames();
+    assert_eq!(scalar0, 0, "a lane-batched run sent scalar spike frames");
+    for (i, c) in clips.iter().enumerate() {
+        let got = batched.infer(c).expect("scalar clip");
+        assert_eq!(got, want_batch[i], "scalar output diverged on clip {i}");
+    }
+    let (scalar, lane1) = batched.wire_frames();
+    assert_eq!(lane1, lane, "a scalar run sent lane frames");
+    let clips_per_s = 64.0 / secs;
+    let ratio = scalar as f64 / lane as f64;
+    println!(
+        "64-clip lane batch over 2 shards: {clips_per_s:.0} clips/s, \
+         {lane} lane frames vs {scalar} scalar frames ({ratio:.1}x amortization)"
+    );
+    common::emit("distributed_batched_clips_per_s", 64.0, clips_per_s);
+    common::emit("wire_amortization_ratio", 64.0, ratio);
 }

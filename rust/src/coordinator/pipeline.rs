@@ -434,6 +434,9 @@ impl Engine for FunctionalEngine {
     fn max_batch(&self) -> usize {
         match self {
             FunctionalEngine::Batched(e) => e.max_batch(),
+            // 64 on a fully v3 constellation, 1 when a v2 replica
+            // pins the negotiated dialect to scalar frames.
+            FunctionalEngine::Distributed(e) => e.max_batch(),
             _ => 1,
         }
     }
@@ -441,6 +444,7 @@ impl Engine for FunctionalEngine {
     fn infer_batch(&mut self, clips: &[&[SpikePlane]]) -> Result<Vec<Vec<i32>>> {
         match self {
             FunctionalEngine::Batched(e) => e.infer_batch(clips),
+            FunctionalEngine::Distributed(e) => e.infer_batch(clips),
             _ => clips.iter().map(|c| self.infer(c)).collect(),
         }
     }
@@ -692,6 +696,8 @@ mod tests {
         assert!(matches!(&d, FunctionalEngine::Distributed(_)));
         assert_eq!(d.infer(&clip).unwrap(), want);
         assert_eq!(d.stage_metrics().len(), 2);
+        // loopback shards all speak v3, so lane batching is on
+        assert_eq!(d.max_batch(), 64);
 
         let mut b = FunctionalEngine::from_config(
             net.clone(),

@@ -13,13 +13,15 @@
 //! spidr map      [--task gesture|flow] [--wb 4] [--artifacts DIR]
 //!                  show the layer-by-layer core mapping
 //! spidr shard    [--listen HOST:PORT] [--workload pipeline-demo|serving-demo]
-//!                [--timesteps N] [--sessions N]
+//!                [--timesteps N] [--sessions N] [--protocol 2|3]
 //!                  host layer-group shards for a distributed
 //!                  coordinator (DESIGN.md §Distributed); serves
 //!                  sessions forever, or exactly N with --sessions.
 //!                  Without --workload the shard starts blank and is
 //!                  provisioned over the wire by the coordinator's
-//!                  weight push
+//!                  weight push. --protocol 2 pins the host to the
+//!                  scalar-only v2 grammar (lane batches rejected),
+//!                  which forces a v3 coordinator into scalar fallback
 //! ```
 
 use std::collections::HashMap;
@@ -31,6 +33,7 @@ use spidr::dvs::gesture::{make_gesture, GestureConfig, NUM_GESTURE_CLASSES};
 use spidr::energy::calibration::measure;
 use spidr::energy::model::Corner;
 use spidr::error::{Error, Result};
+use spidr::net::wire::{MIN_VERSION, VERSION};
 use spidr::net::{ShardHost, TcpTransport};
 use spidr::quant::Precision;
 use spidr::runtime::{ArtifactStore, GoldenModel};
@@ -132,6 +135,12 @@ fn cmd_shard(flags: &HashMap<String, String>) -> Result<()> {
         .unwrap_or_else(|| "127.0.0.1:7400".into());
     let timesteps: usize = flag(flags, "timesteps", 12);
     let sessions: u64 = flag(flags, "sessions", 0); // 0 = serve forever
+    let protocol: u16 = flag(flags, "protocol", VERSION);
+    if !(MIN_VERSION..=VERSION).contains(&protocol) {
+        return Err(Error::config(format!(
+            "unsupported --protocol {protocol} (supported: {MIN_VERSION}..={VERSION})"
+        )));
+    }
     let net = match flags.get("workload").map(|s| s.as_str()) {
         None | Some("") => None, // blank: provisioned by the coordinator
         Some("pipeline-demo") => Some(demo_pipeline_network(timesteps)?),
@@ -151,7 +160,7 @@ fn cmd_shard(flags: &HashMap<String, String>) -> Result<()> {
             listener.local_addr()?
         ),
         None => eprintln!(
-            "spidr-shard: blank host on {} (waiting for a coordinator weight push)",
+            "spidr-shard: blank v{protocol} host on {} (waiting for a coordinator weight push)",
             listener.local_addr()?
         ),
     }
@@ -162,7 +171,8 @@ fn cmd_shard(flags: &HashMap<String, String>) -> Result<()> {
         let mut host = match &net {
             Some(n) => ShardHost::new(n.clone()),
             None => ShardHost::blank("blank-shard"),
-        };
+        }
+        .with_protocol(protocol);
         match host.serve(&mut link) {
             Ok(report) => eprintln!(
                 "spidr-shard: session from {peer} done ({} clips, {} frames, span {:?})",
@@ -302,7 +312,7 @@ fn main() -> ExitCode {
                 "usage: spidr <chip|map|gesture|flow|shard> [--wb 4|6|8] \
                  [--sparsity S] [--corner low|high] [--task T] \
                  [--clips N] [--artifacts DIR] [--listen HOST:PORT] \
-                 [--workload W] [--timesteps N] [--sessions N]"
+                 [--workload W] [--timesteps N] [--sessions N] [--protocol 2|3]"
             );
             return ExitCode::from(2);
         }

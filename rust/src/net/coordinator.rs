@@ -56,9 +56,11 @@ use crate::coordinator::server::Engine;
 use crate::error::{Error, Result};
 use crate::net::shard::{ShardHost, ShardReport};
 use crate::net::transport::{LoopbackTransport, Transport};
-use crate::net::wire::{encode_network, Frame, Role, MAX_PAYLOAD};
+use crate::net::wire::{
+    encode_network, Frame, LaneReport, Role, LANE_VERSION, MAX_PAYLOAD, VERSION,
+};
 use crate::snn::network::{GroupSpan, Network, StepTelemetry};
-use crate::snn::spikes::SpikePlane;
+use crate::snn::spikes::{LaneFrame, SpikePlane, MAX_LANES};
 use crate::snn::tensor::Mat;
 
 /// Configuration of the distributed shard engine, sibling of
@@ -122,6 +124,9 @@ fn frame_name(f: &Option<Frame>) -> &'static str {
         Some(Frame::Telemetry { .. }) => "Telemetry",
         Some(Frame::Drain { .. }) => "Drain",
         Some(Frame::Error { .. }) => "Error",
+        Some(Frame::LaneBatchOpen { .. }) => "LaneBatchOpen",
+        Some(Frame::LaneFrame { .. }) => "LaneFrame",
+        Some(Frame::LaneTelemetry { .. }) => "LaneTelemetry",
     }
 }
 
@@ -146,8 +151,13 @@ struct Replica {
     /// link; dead replicas are never picked again.
     alive: bool,
     /// Clips this replica served (the least-loaded dispatch key, the
-    /// pool's discipline applied to replica links).
+    /// pool's discipline applied to replica links; every lane of a
+    /// batch counts).
     clips: u64,
+    /// Protocol dialect the replica's `Hello` ack was stamped with,
+    /// capped at this build's [`VERSION`] — the negotiation input for
+    /// [`DistributedEngine::negotiated_version`].
+    version: u16,
 }
 
 /// How one relay attempt on a replica failed.
@@ -166,6 +176,15 @@ struct HopOutcome {
     telemetry: Vec<StepTelemetry>,
     /// The shard's Vmem banks after the clip.
     vmems: Vec<Mat>,
+    metrics: StageMetrics,
+    finished_at: std::time::Duration,
+}
+
+/// What one hop thread hands back when its lane-batch share completes.
+struct LaneHopOutcome {
+    /// One drain report per lane: this span's telemetry fragments and
+    /// Vmem banks for that lane's clip.
+    reports: Vec<LaneReport>,
     metrics: StageMetrics,
     finished_at: std::time::Duration,
 }
@@ -486,6 +505,320 @@ fn relay_clip(
     }
 }
 
+/// Send one lane frame — one timestep of the whole batch, `lanes` bits
+/// per cell on the wire.
+fn send_lane_frame(
+    link: &mut dyn Transport,
+    batch_id: u64,
+    seq: usize,
+    frame: &LaneFrame,
+    sm: &mut StageMetrics,
+) -> std::result::Result<(), HopFailure> {
+    let send0 = Instant::now();
+    link.send(&Frame::LaneFrame {
+        batch: batch_id,
+        seq: seq as u32,
+        frame: frame.clone(),
+    })
+    .map_err(HopFailure::Replica)?;
+    sm.busy += send0.elapsed();
+    Ok(())
+}
+
+/// [`pump_reply`] for lane batches: receive one lane-frame reply,
+/// reorder by seq, forward in-order frames downstream. The watermark
+/// discipline is per *batch* — a dropped duplicate drops that seq's
+/// reply for **every lane at once**, which is exactly the per-lane
+/// drop (all 64 lanes regenerate bit-identically together).
+#[allow(clippy::too_many_arguments)]
+fn pump_lane_reply(
+    link: &mut dyn Transport,
+    hop: usize,
+    batch_id: u64,
+    lanes: usize,
+    reorder: &mut BTreeMap<u32, LaneFrame>,
+    next_fwd: &mut u32,
+    tx: Option<&SyncSender<LaneFrame>>,
+    sm: &mut StageMetrics,
+) -> std::result::Result<(), HopFailure> {
+    let wait0 = Instant::now();
+    let reply = link.recv().map_err(HopFailure::Replica)?;
+    sm.busy += wait0.elapsed();
+    match reply {
+        Some(Frame::LaneFrame { batch, seq, frame }) if batch == batch_id => {
+            if frame.lanes() != lanes {
+                return Err(HopFailure::Replica(Error::protocol(format!(
+                    "hop {hop}: reply carries {} lanes for a {lanes}-lane batch",
+                    frame.lanes()
+                ))));
+            }
+            if seq >= *next_fwd {
+                reorder.insert(seq, frame);
+            }
+        }
+        Some(Frame::LaneFrame { batch, .. }) => {
+            return Err(HopFailure::Replica(Error::protocol(format!(
+                "hop {hop}: reply for batch {batch} while batch {batch_id} is in flight"
+            ))));
+        }
+        Some(Frame::Error { message }) => {
+            return Err(HopFailure::Replica(Error::Protocol(message)));
+        }
+        other => {
+            return Err(HopFailure::Replica(Error::protocol(format!(
+                "hop {hop}: expected a lane-frame reply, got {}",
+                frame_name(&other)
+            ))));
+        }
+    }
+    while let Some(frame) = reorder.remove(next_fwd) {
+        *next_fwd += 1;
+        if let Some(tx) = tx {
+            let send0 = Instant::now();
+            tx.send(frame)
+                .map_err(|_| HopFailure::Fatal(hop_torn_down(hop, "downstream")))?;
+            sm.stall_out += send0.elapsed();
+        }
+    }
+    Ok(())
+}
+
+/// One relay attempt of a lane batch on one replica:
+/// [`serve_on_replica`] lifted to lane frames. Every attempt opens the
+/// batch (`LaneBatchOpen` + ack) because a failover's weightless
+/// `LoadGroup` re-push also clears the shard's lane session; the
+/// replay then re-sends the `relayed` lane frames earlier attempts
+/// consumed, regenerating all lanes bit-identically, and the batch
+/// watermark drops duplicate replies for every lane at once.
+#[allow(clippy::too_many_arguments)]
+fn serve_batch_on_replica(
+    link: &mut dyn Transport,
+    span: &GroupSpan,
+    wire_groups: &[(u32, u32)],
+    hop: usize,
+    frames: &[LaneFrame],
+    batch_id: u64,
+    clip_ids: &[u64],
+    window: usize,
+    rx: Option<&Receiver<LaneFrame>>,
+    tx: Option<&SyncSender<LaneFrame>>,
+    log: bool,
+    sent: &mut Vec<LaneFrame>,
+    relayed: &mut usize,
+    next_fwd: &mut u32,
+    sm: &mut StageMetrics,
+    epoch: Instant,
+    reprovision: bool,
+) -> std::result::Result<Vec<LaneReport>, HopFailure> {
+    let t_total = frames.len();
+    let lanes = clip_ids.len();
+    if reprovision {
+        link.send(&Frame::LoadGroup {
+            shard: hop as u32,
+            groups: wire_groups.to_vec(),
+            span: None,
+            workload: None,
+        })
+        .map_err(HopFailure::Replica)?;
+        match link.recv().map_err(HopFailure::Replica)? {
+            Some(Frame::LoadGroup { span: Some(s), .. }) if s == *span => {}
+            Some(Frame::Error { message }) => {
+                return Err(HopFailure::Replica(Error::Protocol(message)));
+            }
+            other => {
+                return Err(HopFailure::Replica(Error::protocol(format!(
+                    "hop {hop}: failover re-push expected a load-group ack, got {}",
+                    frame_name(&other)
+                ))));
+            }
+        }
+    }
+    link.send(&Frame::LaneBatchOpen {
+        batch: batch_id,
+        clips: clip_ids.to_vec(),
+    })
+    .map_err(HopFailure::Replica)?;
+    match link.recv().map_err(HopFailure::Replica)? {
+        Some(Frame::LaneBatchOpen { batch, clips })
+            if batch == batch_id && clips == clip_ids =>
+        {
+        }
+        Some(Frame::Error { message }) => {
+            return Err(HopFailure::Replica(Error::Protocol(message)));
+        }
+        other => {
+            return Err(HopFailure::Replica(Error::protocol(format!(
+                "hop {hop}: expected a lane-batch-open ack, got {}",
+                frame_name(&other)
+            ))));
+        }
+    }
+    let mut reorder: BTreeMap<u32, LaneFrame> = BTreeMap::new();
+    let mut inflight = 0usize;
+    let replay: &[LaneFrame] = match rx {
+        None => &frames[..*relayed],
+        Some(_) => &sent[..*relayed],
+    };
+    for (t, frame) in replay.iter().enumerate() {
+        if inflight == window {
+            pump_lane_reply(link, hop, batch_id, lanes, &mut reorder, next_fwd, tx, sm)?;
+            inflight -= 1;
+        }
+        send_lane_frame(link, batch_id, t, frame, sm)?;
+        inflight += 1;
+    }
+    let mut t = *relayed;
+    while t < t_total {
+        let mut owned: Option<LaneFrame> = None;
+        if let Some(rx) = rx {
+            let wait0 = Instant::now();
+            let f = rx
+                .recv()
+                .map_err(|_| HopFailure::Fatal(hop_torn_down(hop, "upstream")))?;
+            sm.stall_in += wait0.elapsed();
+            owned = Some(f);
+        }
+        if t == 0 {
+            sm.fill = epoch.elapsed();
+        }
+        // Same commit-before-fallible-ops rule as the scalar path: a
+        // plane pulled off the upstream channel must reach the replay
+        // log before any send/pump can fail.
+        if log {
+            if let Some(f) = owned.take() {
+                sent.push(f);
+            }
+        }
+        *relayed = t + 1;
+        if inflight == window {
+            pump_lane_reply(link, hop, batch_id, lanes, &mut reorder, next_fwd, tx, sm)?;
+            inflight -= 1;
+        }
+        let frame: &LaneFrame = if rx.is_none() {
+            &frames[t]
+        } else if log {
+            &sent[t]
+        } else {
+            owned.as_ref().expect("upstream lane frame is resident")
+        };
+        send_lane_frame(link, batch_id, t, frame, sm)?;
+        sm.steps += 1;
+        inflight += 1;
+        t += 1;
+    }
+    while inflight > 0 {
+        pump_lane_reply(link, hop, batch_id, lanes, &mut reorder, next_fwd, tx, sm)?;
+        inflight -= 1;
+    }
+    link.send(&Frame::Drain { clip: batch_id })
+        .map_err(HopFailure::Replica)?;
+    let wait0 = Instant::now();
+    let reply = link.recv().map_err(HopFailure::Replica)?;
+    sm.busy += wait0.elapsed();
+    let reports = match reply {
+        Some(Frame::LaneTelemetry { batch, lanes: reports }) if batch == batch_id => reports,
+        Some(Frame::LaneTelemetry { batch, .. }) => {
+            return Err(HopFailure::Replica(Error::protocol(format!(
+                "hop {hop}: drained batch {batch} while batch {batch_id} is in flight"
+            ))));
+        }
+        Some(Frame::Error { message }) => {
+            return Err(HopFailure::Replica(Error::Protocol(message)));
+        }
+        other => {
+            return Err(HopFailure::Replica(Error::protocol(format!(
+                "hop {hop}: expected drained lane telemetry, got {}",
+                frame_name(&other)
+            ))));
+        }
+    };
+    if reports.len() != lanes {
+        return Err(HopFailure::Replica(Error::protocol(format!(
+            "hop {hop}: shard drained {} lanes for a {lanes}-lane batch",
+            reports.len()
+        ))));
+    }
+    if let Some(r) = reports.iter().find(|r| r.steps.len() != t_total) {
+        return Err(HopFailure::Replica(Error::protocol(format!(
+            "hop {hop}: shard drained {} timesteps for a {t_total}-frame batch",
+            r.steps.len()
+        ))));
+    }
+    Ok(reports)
+}
+
+/// Body of one hop thread serving a lane batch: [`relay_clip`] with
+/// whole batches as the replay unit — on replica death the survivor is
+/// re-pushed, the batch re-opened, and the already-consumed lane
+/// frames replayed, so every lane regenerates bit-identically.
+#[allow(clippy::too_many_arguments)]
+fn relay_lane_batch(
+    replicas: &mut [Replica],
+    span: &GroupSpan,
+    wire_groups: &[(u32, u32)],
+    hop: usize,
+    frames: &[LaneFrame],
+    batch_id: u64,
+    clip_ids: &[u64],
+    window: usize,
+    rx: Option<Receiver<LaneFrame>>,
+    tx: Option<SyncSender<LaneFrame>>,
+    epoch: Instant,
+    failovers: &AtomicU64,
+) -> Result<LaneHopOutcome> {
+    let mut sm = StageMetrics::new(hop, span.layers);
+    let log = replicas.len() > 1 && rx.is_some();
+    let mut sent: Vec<LaneFrame> = Vec::new();
+    let mut relayed = 0usize;
+    let mut next_fwd: u32 = 0;
+    let mut attempt = 0usize;
+    loop {
+        let Some(ri) = pick_replica(replicas) else {
+            return Err(Error::Runtime(format!(
+                "distributed hop {hop}: zero surviving replicas"
+            )));
+        };
+        let reprovision = attempt > 0;
+        attempt += 1;
+        match serve_batch_on_replica(
+            &mut *replicas[ri].link,
+            span,
+            wire_groups,
+            hop,
+            frames,
+            batch_id,
+            clip_ids,
+            window,
+            rx.as_ref(),
+            tx.as_ref(),
+            log,
+            &mut sent,
+            &mut relayed,
+            &mut next_fwd,
+            &mut sm,
+            epoch,
+            reprovision,
+        ) {
+            Ok(reports) => {
+                replicas[ri].clips += clip_ids.len() as u64;
+                return Ok(LaneHopOutcome {
+                    reports,
+                    metrics: sm,
+                    finished_at: epoch.elapsed(),
+                });
+            }
+            Err(HopFailure::Fatal(e)) => return Err(e),
+            Err(HopFailure::Replica(e)) => {
+                replicas[ri].alive = false;
+                if !replicas.iter().any(|r| r.alive) {
+                    return Err(e);
+                }
+                failovers.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
 /// The distributed serving engine: layer groups execute on shard
 /// hosts in other threads/processes/hosts, chained over [`Transport`]
 /// links, bit-identical in output and telemetry to `ReferenceEngine`.
@@ -521,6 +854,10 @@ pub struct DistributedEngine {
     stages: Vec<StageMetrics>,
     last_telemetry: Vec<StepTelemetry>,
     last_vmems: Vec<Mat>,
+    last_lane_telemetry: Vec<Vec<StepTelemetry>>,
+    last_lane_vmems: Vec<Vec<Mat>>,
+    scalar_frames: u64,
+    lane_frames: u64,
     /// Self-hosted loopback shard threads (empty for `connect`); they
     /// exit when the links drop at engine drop.
     hosts: Vec<JoinHandle<Result<ShardReport>>>,
@@ -606,16 +943,19 @@ impl DistributedEngine {
                     role: Role::Coordinator,
                     name: network.name.clone(),
                 })?;
-                match link.recv()? {
-                    Some(Frame::Hello { role: Role::Shard, .. }) => {}
-                    Some(Frame::Error { message }) => return Err(Error::Protocol(message)),
+                // Version negotiation: the shard stamps its Hello ack
+                // at the highest dialect it speaks; the constellation's
+                // minimum decides whether lane batching is available.
+                let version = match link.recv_versioned()? {
+                    Some((Frame::Hello { role: Role::Shard, .. }, ver)) => ver.min(VERSION),
+                    Some((Frame::Error { message }, _)) => return Err(Error::Protocol(message)),
                     other => {
                         return Err(Error::protocol(format!(
                             "shard {i} replica {ri}: expected a hello, got {}",
-                            frame_name(&other)
+                            frame_name(&other.map(|(f, _)| f))
                         )));
                     }
-                }
+                };
                 link.send(&Frame::LoadGroup {
                     shard: i as u32,
                     groups: wire_groups.clone(),
@@ -644,6 +984,7 @@ impl DistributedEngine {
                     link,
                     alive: true,
                     clips: 0,
+                    version,
                 });
             }
             replica_hops.push(reps);
@@ -666,6 +1007,10 @@ impl DistributedEngine {
             stages,
             last_telemetry: Vec::new(),
             last_vmems: Vec::new(),
+            last_lane_telemetry: Vec::new(),
+            last_lane_vmems: Vec::new(),
+            scalar_frames: 0,
+            lane_frames: 0,
             hosts: Vec::new(),
         })
     }
@@ -771,6 +1116,209 @@ impl DistributedEngine {
         &self.last_vmems
     }
 
+    /// The protocol dialect the whole constellation can speak: the
+    /// minimum of every replica's `Hello` version (capped at this
+    /// build's [`VERSION`]). Lane batching needs all of them —
+    /// failover may move any batch to any replica of a hop.
+    pub fn negotiated_version(&self) -> u16 {
+        self.hops
+            .iter()
+            .flatten()
+            .map(|r| r.version)
+            .min()
+            .unwrap_or(VERSION)
+    }
+
+    /// True when every replica speaks at least [`LANE_VERSION`], so
+    /// [`DistributedEngine::infer_lanes`] is available; otherwise
+    /// `infer_batch` falls back to scalar spike frames.
+    pub fn lane_batching(&self) -> bool {
+        self.negotiated_version() >= LANE_VERSION
+    }
+
+    /// `(scalar, lane)` spike-carrying serving frames sent so far
+    /// (spike/lane frames plus their drains; handshake, provisioning
+    /// and failover replays excluded). The bench's
+    /// `wire_amortization_ratio` is `scalar / lane` at equal clip
+    /// counts.
+    pub fn wire_frames(&self) -> (u64, u64) {
+        (self.scalar_frames, self.lane_frames)
+    }
+
+    /// The last served lane batch's per-lane merged telemetry: entry
+    /// `b` holds lane `b`'s per-timestep fragments reassembled across
+    /// hops — bit-identical to what [`Network::run`] reports for that
+    /// lane's clip alone.
+    pub fn last_lane_telemetry(&self) -> &[Vec<StepTelemetry>] {
+        &self.last_lane_telemetry
+    }
+
+    /// The last served lane batch's per-lane final Vmem banks, in
+    /// stateful-layer order — entry `b` is bit-comparable to
+    /// `NetworkState::vmems` after running lane `b`'s clip alone.
+    pub fn last_lane_vmems(&self) -> &[Vec<Mat>] {
+        &self.last_lane_vmems
+    }
+
+    /// Run one lane batch (clip `b` → bit-lane `b`) through the shard
+    /// chain: one `LaneBatchOpen` + one lane frame per timestep per
+    /// hop instead of per clip, amortizing protocol overhead across up
+    /// to [`MAX_LANES`] clips. Output `b` is lane `b`'s final
+    /// accumulator bank, bit-identical to a per-clip run
+    /// (`prop_distributed_batched_bit_identical_per_lane`); per-lane
+    /// telemetry and Vmems land in [`Self::last_lane_telemetry`] /
+    /// [`Self::last_lane_vmems`]. Requires a fully v3 constellation
+    /// ([`Self::lane_batching`]) — on mixed constellations use
+    /// `infer_batch`, which falls back to scalar frames.
+    pub fn infer_lanes(&mut self, clips: &[&[SpikePlane]]) -> Result<Vec<Vec<i32>>> {
+        if self.poisoned {
+            return Err(Error::Runtime(
+                "distributed engine is poisoned by an earlier error; rebuild it".into(),
+            ));
+        }
+        if !self.lane_batching() {
+            return Err(Error::config(format!(
+                "lane batching requires protocol v{LANE_VERSION} on every replica; \
+                 this constellation negotiated v{}",
+                self.negotiated_version()
+            )));
+        }
+        if clips.is_empty() || clips.len() > MAX_LANES {
+            return Err(Error::config(format!(
+                "lane batch needs 1..={MAX_LANES} clips, got {}",
+                clips.len()
+            )));
+        }
+        let (c0, h0, w0) = self
+            .network
+            .layers
+            .first()
+            .ok_or_else(|| Error::config("empty network"))?
+            .in_shape;
+        for clip in clips {
+            for f in *clip {
+                if f.shape() != (c0, h0, w0) {
+                    return Err(Error::shape(format!(
+                        "frame shape {:?} != network input {:?}",
+                        f.shape(),
+                        (c0, h0, w0)
+                    )));
+                }
+            }
+        }
+        let frames = LaneFrame::pack_clips(clips)?;
+        let lanes = clips.len();
+        let t_total = frames.len();
+        let batch_id = self.next_clip;
+        let clip_ids: Vec<u64> = (0..lanes as u64).map(|i| batch_id + i).collect();
+        self.next_clip += lanes as u64;
+        let window = self.window;
+        let hop_count = self.hops.len();
+        let wire_groups = &self.wire_groups;
+        let epoch = Instant::now();
+        let failovers = AtomicU64::new(0);
+        let frames_ref = &frames;
+        let clip_ids_ref = &clip_ids;
+        let results: Vec<Result<LaneHopOutcome>> = std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(hop_count);
+            let mut prev_rx: Option<Receiver<LaneFrame>> = None;
+            for (gi, (replicas, span)) in
+                self.hops.iter_mut().zip(self.spans.iter()).enumerate()
+            {
+                let rx = prev_rx.take();
+                let tx = if gi + 1 < hop_count {
+                    let (tx, next_rx) = sync_channel(window);
+                    prev_rx = Some(next_rx);
+                    Some(tx)
+                } else {
+                    None
+                };
+                let failovers = &failovers;
+                handles.push(scope.spawn(move || {
+                    relay_lane_batch(
+                        replicas,
+                        span,
+                        wire_groups,
+                        gi,
+                        frames_ref,
+                        batch_id,
+                        clip_ids_ref,
+                        window,
+                        rx,
+                        tx,
+                        epoch,
+                        failovers,
+                    )
+                }));
+            }
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("distributed lane hop panicked"))
+                .collect()
+        });
+        let wall = epoch.elapsed();
+        self.failovers += failovers.into_inner();
+
+        let mut teardown: Option<Error> = None;
+        let mut outcomes = Vec::with_capacity(hop_count);
+        for r in results {
+            match r {
+                Ok(o) => outcomes.push(o),
+                Err(e) if is_hop_teardown(&e) => {
+                    if teardown.is_none() {
+                        teardown = Some(e);
+                    }
+                }
+                Err(e) => {
+                    self.poisoned = true;
+                    return Err(e);
+                }
+            }
+        }
+        if let Some(e) = teardown {
+            self.poisoned = true;
+            return Err(e);
+        }
+
+        // Demux per lane, merging hop fragments in layer order — the
+        // scalar merge applied once per lane.
+        let mut lane_tel: Vec<Vec<StepTelemetry>> =
+            vec![vec![StepTelemetry::default(); t_total]; lanes];
+        let mut lane_vmems: Vec<Vec<Mat>> = vec![Vec::new(); lanes];
+        for (o, acc) in outcomes.into_iter().zip(&mut self.stages) {
+            for (b, report) in o.reports.into_iter().enumerate() {
+                for (t, frag) in report.steps.into_iter().enumerate() {
+                    lane_tel[b][t]
+                        .layer_input_spikes
+                        .extend(frag.layer_input_spikes);
+                    lane_tel[b][t]
+                        .layer_input_cells
+                        .extend(frag.layer_input_cells);
+                }
+                lane_vmems[b].extend(report.vmems);
+            }
+            let mut sm = o.metrics;
+            sm.drain = wall.saturating_sub(o.finished_at);
+            acc.absorb(&sm);
+        }
+        // Serving frames this batch put on the wire: open + one lane
+        // frame per timestep + drain, per hop (replays excluded — they
+        // are recovery traffic).
+        self.lane_frames += (t_total as u64 + 2) * hop_count as u64;
+        let outputs = lane_vmems
+            .iter()
+            .map(|banks| {
+                banks
+                    .last()
+                    .map(|m| m.as_slice().to_vec())
+                    .unwrap_or_default()
+            })
+            .collect();
+        self.last_lane_telemetry = lane_tel;
+        self.last_lane_vmems = lane_vmems;
+        Ok(outputs)
+    }
+
     /// Drive one clip through the shard chain, filling
     /// `last_telemetry` / `last_vmems` and absorbing hop metrics.
     fn run_clip(&mut self, clip: &[SpikePlane]) -> Result<()> {
@@ -871,6 +1419,9 @@ impl DistributedEngine {
         }
         self.last_telemetry = merged;
         self.last_vmems = vmems;
+        // Serving frames this clip put on the wire: one spike frame
+        // per timestep + drain, per hop (replays excluded).
+        self.scalar_frames += (clip.len() as u64 + 1) * hop_count as u64;
         Ok(())
     }
 }
@@ -885,6 +1436,39 @@ impl Engine for DistributedEngine {
             .last()
             .map(|m| m.as_slice().to_vec())
             .unwrap_or_default())
+    }
+
+    fn max_batch(&self) -> usize {
+        if self.lane_batching() {
+            MAX_LANES
+        } else {
+            1
+        }
+    }
+
+    /// Greedy lane packing: consecutive clips with equal timestep
+    /// counts coalesce into lane batches of up to [`MAX_LANES`];
+    /// singleton runs — and every clip on a constellation with a v2
+    /// replica ([`DistributedEngine::max_batch`] is 1 there) — fall
+    /// back to the scalar spike-frame path. Either way each clip's
+    /// result is bit-identical to `infer` serving it alone.
+    fn infer_batch(&mut self, clips: &[&[SpikePlane]]) -> Result<Vec<Vec<i32>>> {
+        let mut out = Vec::with_capacity(clips.len());
+        let mut i = 0;
+        while i < clips.len() {
+            let t = clips[i].len();
+            let mut j = i + 1;
+            while j < clips.len() && j - i < self.max_batch() && clips[j].len() == t {
+                j += 1;
+            }
+            if j - i == 1 {
+                out.push(self.infer(clips[i])?);
+            } else {
+                out.extend(self.infer_lanes(&clips[i..j])?);
+            }
+            i = j;
+        }
+        Ok(out)
     }
 }
 
@@ -1023,20 +1607,20 @@ mod tests {
     }
 
     impl Transport for FailAfter {
-        fn send(&mut self, frame: &Frame) -> Result<()> {
+        fn send_versioned(&mut self, frame: &Frame, version: u16) -> Result<()> {
             if self.good_sends == 0 {
                 return Err(Error::Runtime("injected mid-clip link failure".into()));
             }
             self.good_sends -= 1;
-            self.inner.send(frame)
+            self.inner.send_versioned(frame, version)
         }
 
-        fn recv(&mut self) -> Result<Option<Frame>> {
+        fn recv_versioned(&mut self) -> Result<Option<(Frame, u16)>> {
             if self.good_recvs == 0 {
                 return Err(Error::Runtime("injected mid-clip reply failure".into()));
             }
             self.good_recvs -= 1;
-            self.inner.recv()
+            self.inner.recv_versioned()
         }
     }
 
@@ -1277,5 +1861,259 @@ mod tests {
                     .zip(&sim_state.vmems)
                     .all(|(a, b)| a.as_slice() == b.as_slice())
         });
+    }
+
+    /// Satellite (ISSUE 7): every lane of a batched distributed run —
+    /// outputs, per-lane telemetry, and per-lane Vmems — is
+    /// bit-identical to `Network::run` of that lane's clip alone,
+    /// across random networks, lane counts `1..=64`, shard counts,
+    /// windows, and replica counts.
+    #[test]
+    fn prop_distributed_batched_bit_identical_per_lane() {
+        check("distributed_batched_per_lane", 6, |g| {
+            let net = random_network(g);
+            let t = 1 + g.index(3);
+            let lanes = 1 + g.index(MAX_LANES);
+            let (c, h, w) = net.layers[0].in_shape;
+            let clips: Vec<Vec<SpikePlane>> = (0..lanes)
+                .map(|_| {
+                    let density = if g.chance(0.1) { 0.0 } else { 0.1 + g.f64() * 0.4 };
+                    (0..t)
+                        .map(|_| {
+                            let mut p = SpikePlane::zeros(c, h, w);
+                            for i in 0..p.len() {
+                                if g.chance(density) {
+                                    p.as_mut_slice()[i] = 1;
+                                }
+                            }
+                            p
+                        })
+                        .collect()
+                })
+                .collect();
+            let refs: Vec<&[SpikePlane]> = clips.iter().map(|c| c.as_slice()).collect();
+            let stateful = net.stateful_layers().count();
+            let cfg = DistributedConfig {
+                shards: 1 + g.index(stateful + 1),
+                window: 1 + g.index(3),
+                replicas: 1 + g.index(2),
+            };
+            let mut e = DistributedEngine::loopback(net.clone(), &cfg).unwrap();
+            assert!(e.lane_batching(), "loopback hosts speak v3");
+            let outs = e.infer_lanes(&refs).unwrap();
+            assert_eq!(outs.len(), lanes);
+            for (b, clip) in clips.iter().enumerate() {
+                let mut state = net.init_state().unwrap();
+                let tel = net.run(clip, &mut state).unwrap();
+                let want: Vec<i32> = state.vmems.last().unwrap().as_slice().to_vec();
+                if outs[b] != want {
+                    return false;
+                }
+                if e.last_lane_telemetry()[b] != tel {
+                    return false;
+                }
+                if !state
+                    .vmems
+                    .iter()
+                    .zip(&e.last_lane_vmems()[b])
+                    .all(|(a, b)| a.as_slice() == b.as_slice())
+                {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+
+    /// Tentpole acceptance: a full 64-lane batch served across a
+    /// replica kill between batches — the hop re-pushes the group,
+    /// re-opens the batch, and all 64 lanes come back bit-identical.
+    #[test]
+    fn replica_killed_between_lane_batches_fails_over_bit_identically() {
+        let net = demo_serving_network(6).unwrap();
+        let clips: Vec<Vec<SpikePlane>> = (0..MAX_LANES)
+            .map(|b| demo_clip(100 + b as u64, 4, 2, 16, 16))
+            .collect();
+        let refs: Vec<&[SpikePlane]> = clips.iter().map(|c| c.as_slice()).collect();
+        let mut reference = ReferenceEngine::new(net.clone()).unwrap();
+        let wants: Vec<Vec<i32>> = clips.iter().map(|c| reference.infer(c).unwrap()).collect();
+
+        let mut e =
+            DistributedEngine::loopback(net, &DistributedConfig::replicated(2, 2)).unwrap();
+        assert_eq!(e.infer_lanes(&refs).unwrap(), wants);
+        assert_eq!(e.failovers(), 0);
+
+        // Batch 0 went to replica 0 of each hop (least-loaded tie →
+        // lowest index), so the next batch picks replica 1 — sever
+        // exactly that target on every hop.
+        for hop in 0..e.groups().len() {
+            e.sever_replica(hop, 1).unwrap();
+        }
+        let got = e.infer_lanes(&refs).unwrap();
+        assert_eq!(got, wants, "failover batch diverged from the reference");
+        assert_eq!(e.failovers(), e.groups().len() as u64);
+        for (alive, total) in e.replica_status() {
+            assert_eq!((alive, total), (1, 2));
+        }
+        // degraded but alive: the survivor keeps serving batches
+        assert_eq!(e.infer_lanes(&refs).unwrap(), wants);
+    }
+
+    /// Tentpole acceptance: replicas that die *mid-batch* — hop 0's on
+    /// a lane-frame send with frames already relayed, hop 1's on a
+    /// reply recv right after consuming a lane frame from the upstream
+    /// channel — are replaced by survivors that replay the whole batch
+    /// from the per-batch log; every lane regenerates bit-identically
+    /// and replayed replies below the per-batch watermark are dropped,
+    /// so outputs, telemetry, and Vmems still match the reference per
+    /// lane.
+    #[test]
+    fn replica_dying_mid_lane_batch_replays_on_survivor() {
+        let net = demo_pipeline_network(8).unwrap();
+        let lanes = 5usize;
+        let clips: Vec<Vec<SpikePlane>> = (0..lanes)
+            .map(|b| demo_clip(40 + b as u64, 8, 2, 24, 24))
+            .collect();
+        let refs: Vec<&[SpikePlane]> = clips.iter().map(|c| c.as_slice()).collect();
+        let mut reference = ReferenceEngine::new(net.clone()).unwrap();
+        let wants: Vec<Vec<i32>> = clips.iter().map(|c| reference.infer(c).unwrap()).collect();
+
+        let mut hops: Vec<Vec<Box<dyn Transport>>> = Vec::new();
+        let mut hosts = Vec::new();
+        for hop in 0..2 {
+            let mut links: Vec<Box<dyn Transport>> = Vec::new();
+            for r in 0..2 {
+                let (coord_end, mut shard_end) = LoopbackTransport::pair();
+                hosts.push(std::thread::spawn(move || {
+                    let _ = ShardHost::blank("t").serve(&mut shard_end);
+                }));
+                links.push(match (hop, r) {
+                    // Hello + LoadGroup + LaneBatchOpen + 4 lane frames
+                    // succeed, the 5th lane-frame *send* fails mid-batch.
+                    (0, 0) => Box::new(FailAfter {
+                        inner: coord_end,
+                        good_sends: 2 + 1 + 4,
+                        good_recvs: usize::MAX,
+                    }),
+                    // Hello ack + LoadGroup ack + open ack + 1 reply
+                    // succeed, the next reply *recv* fails — with
+                    // window 2 that lands mid-batch, right after a lane
+                    // frame was pulled off the inter-hop channel.
+                    (1, 0) => Box::new(FailAfter {
+                        inner: coord_end,
+                        good_sends: usize::MAX,
+                        good_recvs: 2 + 1 + 1,
+                    }),
+                    _ => Box::new(coord_end) as Box<dyn Transport>,
+                });
+            }
+            hops.push(links);
+        }
+        let mut e = DistributedEngine::connect_replicated(net.clone(), hops, 2).unwrap();
+        assert!(e.lane_batching());
+        let got = e.infer_lanes(&refs).unwrap();
+        assert_eq!(got, wants, "mid-batch failover diverged from the reference");
+        assert_eq!(e.failovers(), 2);
+        assert_eq!(e.replica_status()[0], (1, 2));
+        assert_eq!(e.replica_status()[1], (1, 2));
+        for (b, clip) in clips.iter().enumerate() {
+            let mut state = net.init_state().unwrap();
+            let tel = net.run(clip, &mut state).unwrap();
+            assert_eq!(e.last_lane_telemetry()[b], tel, "lane {b} telemetry diverged");
+            assert!(
+                state
+                    .vmems
+                    .iter()
+                    .zip(&e.last_lane_vmems()[b])
+                    .all(|(a, v)| a.as_slice() == v.as_slice()),
+                "lane {b} Vmems diverged"
+            );
+        }
+        drop(e);
+        for h in hosts {
+            h.join().unwrap();
+        }
+    }
+
+    /// Satellite (version negotiation): one v2 replica anywhere in the
+    /// constellation pins the negotiated dialect to v2 — `infer_lanes`
+    /// rejects with a typed error (no grammar desync, the engine stays
+    /// serviceable) and `infer_batch` falls back to scalar spike
+    /// frames, bit-identical per clip.
+    #[test]
+    fn v2_shard_negotiates_scalar_fallback() {
+        let net = demo_serving_network(4).unwrap();
+        let mut hops: Vec<Vec<Box<dyn Transport>>> = Vec::new();
+        let mut hosts = Vec::new();
+        for hop in 0..2u16 {
+            let (coord_end, mut shard_end) = LoopbackTransport::pair();
+            let protocol = if hop == 1 { 2 } else { 3 };
+            hosts.push(std::thread::spawn(move || {
+                let _ = ShardHost::blank("nego")
+                    .with_protocol(protocol)
+                    .serve(&mut shard_end);
+            }));
+            hops.push(vec![Box::new(coord_end) as Box<dyn Transport>]);
+        }
+        let mut e = DistributedEngine::connect_replicated(net.clone(), hops, 2).unwrap();
+        assert_eq!(e.negotiated_version(), 2);
+        assert!(!e.lane_batching());
+        assert_eq!(e.max_batch(), 1);
+
+        let clips: Vec<Vec<SpikePlane>> =
+            (0..3).map(|b| demo_clip(60 + b, 4, 2, 16, 16)).collect();
+        let refs: Vec<&[SpikePlane]> = clips.iter().map(|c| c.as_slice()).collect();
+
+        // batching explicitly required → typed error, engine healthy
+        let err = e.infer_lanes(&refs).unwrap_err();
+        assert!(
+            err.to_string().contains("lane batching requires protocol v"),
+            "want a typed negotiation error, got: {err}"
+        );
+
+        // infer_batch falls back to scalar frames, bit-identical
+        let outs = e.infer_batch(&refs).unwrap();
+        let mut reference = ReferenceEngine::new(net).unwrap();
+        for (b, clip) in clips.iter().enumerate() {
+            assert_eq!(outs[b], reference.infer(clip).unwrap(), "clip {b}");
+        }
+        let (scalar, lane) = e.wire_frames();
+        assert_eq!(lane, 0, "no lane frame may reach a v2 constellation");
+        assert_eq!(scalar, 3 * (4 + 1) * 2);
+        drop(e);
+        for h in hosts {
+            h.join().unwrap();
+        }
+    }
+
+    /// The amortization contract the bench reports: one 64-clip batch
+    /// costs `T + 2` serving frames per hop where 64 scalar clips cost
+    /// `64 × (T + 1)` — and `infer_batch` coalesces equal-length clips
+    /// into exactly that batch, bit-identical to serving each scalar.
+    #[test]
+    fn lane_batching_amortizes_wire_frames() {
+        let net = demo_serving_network(4).unwrap();
+        let clips: Vec<Vec<SpikePlane>> = (0..MAX_LANES)
+            .map(|b| demo_clip(b as u64, 4, 2, 16, 16))
+            .collect();
+        let refs: Vec<&[SpikePlane]> = clips.iter().map(|c| c.as_slice()).collect();
+        let mut e =
+            DistributedEngine::loopback(net, &DistributedConfig::with_shards(2)).unwrap();
+        assert_eq!(e.max_batch(), MAX_LANES);
+
+        let batched = e.infer_batch(&refs).unwrap();
+        let (s0, l0) = e.wire_frames();
+        assert_eq!(s0, 0, "a full batch must not fall back to scalar frames");
+        assert_eq!(l0, (4 + 2) * 2);
+
+        for (b, clip) in refs.iter().enumerate() {
+            assert_eq!(e.infer(clip).unwrap(), batched[b], "lane {b} != scalar run");
+        }
+        let (s1, l1) = e.wire_frames();
+        assert_eq!((s1, l1), ((4 + 1) * 2 * MAX_LANES as u64, l0));
+        assert!(
+            s1 / l1 >= 40,
+            "wire amortization collapsed: {s1} scalar / {l1} lane frames"
+        );
     }
 }

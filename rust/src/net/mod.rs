@@ -10,8 +10,10 @@
 //! timestep — travel over a versioned, checksummed binary protocol.
 //!
 //! * [`wire`] — the frame codec (`Hello`, `LoadGroup`, `SpikeFrame`,
-//!   `Telemetry`, `Drain`, `Error`), length-prefixed + checksummed,
-//!   total on decode; `LoadGroup` can carry a serialized workload
+//!   `Telemetry`, `Drain`, `Error`, plus the v3 lane-batch messages
+//!   `LaneBatchOpen`/`LaneFrame`/`LaneTelemetry` — up to 64 clips per
+//!   checksummed frame), length-prefixed + checksummed, total on
+//!   decode; `LoadGroup` can carry a serialized workload
 //!   ([`wire::encode_network`]) so the coordinator provisions blank
 //!   shards over the wire (weight push).
 //! * [`transport`] — the [`Transport`](transport::Transport) narrow
@@ -36,4 +38,4 @@ pub mod wire;
 pub use coordinator::{DistributedConfig, DistributedEngine};
 pub use shard::{ShardHost, ShardReport};
 pub use transport::{LoopbackTransport, TcpTransport, Transport};
-pub use wire::{decode_network, encode_network, Frame, Role};
+pub use wire::{decode_network, encode_network, Frame, LaneReport, Role};

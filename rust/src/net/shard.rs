@@ -24,20 +24,50 @@
 //! the transport buffer — a saturated shard stalls its producer
 //! through the link, exactly as a full handshaking FIFO stalls the
 //! upstream compute unit on silicon; frames are never dropped.
+//!
+//! Protocol v3 adds **lane sessions** (DESIGN.md §Distributed): a
+//! `LaneBatchOpen` provisions one [`LaneBank`] per stateful span layer
+//! and every following `LaneFrame` steps the whole batch — up to 64
+//! clips packed into `u64` bit-lanes — through
+//! [`SpidrCore::run_layer_lanes`] in one sweep. The bank round-trips
+//! all functional state between frames, so per-timestep lane stepping
+//! is bit-identical per lane to per-clip [`Network::step_group`]
+//! (`lane_session_matches_per_lane_step_group`). A host built with
+//! [`ShardHost::with_protocol`]`(2)` speaks the scalar-only v2 dialect
+//! and rejects lane traffic instead of desyncing — the coordinator's
+//! `Hello` version negotiation reads that and falls back to scalar
+//! frames.
 
 use crate::error::{Error, Result};
 use crate::net::transport::Transport;
-use crate::net::wire::{Frame, Role};
-use crate::snn::network::{GroupSpan, Network, StepTelemetry};
+use crate::net::wire::{Frame, LaneReport, Role, MIN_VERSION, VERSION};
+use crate::sim::config::SimConfig;
+use crate::sim::{LaneBank, SpidrCore};
+use crate::snn::layer::LayerKind;
+use crate::snn::network::{pool_step_lanes, GroupSpan, Network, StepTelemetry};
+use crate::snn::spikes::LaneFrame;
 use crate::snn::tensor::Mat;
 
 /// What one shard session served, for logs and smoke assertions.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct ShardReport {
-    /// Clips drained.
+    /// Clips drained (each lane of a drained batch counts as one clip).
     pub clips: u64,
-    /// Spike frames stepped.
+    /// Spike frames stepped (scalar and lane frames alike).
     pub frames: u64,
+    /// Lane batches drained (v3 sessions only).
+    pub batches: u64,
+}
+
+/// One open lane batch: the per-span-layer Vmem lane banks and the
+/// per-lane telemetry accumulated between `LaneBatchOpen` and `Drain`.
+struct LaneSession {
+    batch: u64,
+    lanes: usize,
+    core: SpidrCore,
+    banks: Vec<LaneBank>,
+    telemetry: Vec<Vec<StepTelemetry>>,
+    seq: u32,
 }
 
 /// A shard host serving one layer-group span of a network.
@@ -48,6 +78,8 @@ pub struct ShardHost {
     vmems: Vec<Mat>,
     telemetry: Vec<StepTelemetry>,
     clip: Option<u64>,
+    lane: Option<LaneSession>,
+    protocol: u16,
 }
 
 impl ShardHost {
@@ -62,6 +94,8 @@ impl ShardHost {
             vmems: Vec::new(),
             telemetry: Vec::new(),
             clip: None,
+            lane: None,
+            protocol: VERSION,
         }
     }
 
@@ -77,7 +111,25 @@ impl ShardHost {
             vmems: Vec::new(),
             telemetry: Vec::new(),
             clip: None,
+            lane: None,
+            protocol: VERSION,
         }
+    }
+
+    /// Pin the host to an older protocol dialect (clamped to the
+    /// supported `MIN_VERSION..=VERSION` range). The `Hello` ack is
+    /// stamped at this version — the capability signal the
+    /// coordinator's negotiation reads — and any frame stamped above it
+    /// is rejected, so a v2 host never half-decodes lane traffic
+    /// (`spidr shard --protocol 2`).
+    pub fn with_protocol(mut self, version: u16) -> Self {
+        self.protocol = version.clamp(MIN_VERSION, VERSION);
+        self
+    }
+
+    /// The protocol dialect this host speaks.
+    pub fn protocol(&self) -> u16 {
+        self.protocol
     }
 
     /// The span this host was assigned, once loaded.
@@ -98,11 +150,25 @@ impl ShardHost {
     pub fn serve<T: Transport>(&mut self, link: &mut T) -> Result<ShardReport> {
         let mut report = ShardReport::default();
         loop {
-            let frame = match link.recv()? {
+            let (frame, ver) = match link.recv_versioned()? {
                 Some(f) => f,
                 None => return Ok(report),
             };
-            match self.handle(frame, &mut report) {
+            let outcome = if ver > self.protocol {
+                Err(Error::protocol(format!(
+                    "version skew: peer sent a v{ver} frame to a host speaking v{}",
+                    self.protocol
+                )))
+            } else {
+                self.handle(frame, &mut report)
+            };
+            match outcome {
+                // The Hello ack is stamped at the host's own dialect —
+                // the capability signal version negotiation reads;
+                // every other reply travels at its kind's wire version.
+                Ok(Some(reply @ Frame::Hello { .. })) => {
+                    link.send_versioned(&reply, self.protocol)?
+                }
                 Ok(Some(reply)) => link.send(&reply)?,
                 Ok(None) => {}
                 Err(e) => {
@@ -161,6 +227,7 @@ impl ShardHost {
                 self.vmems = network.span_state(&span)?;
                 self.telemetry.clear();
                 self.clip = None;
+                self.lane = None;
                 self.span = Some(span);
                 Ok(Some(Frame::LoadGroup {
                     shard,
@@ -170,6 +237,12 @@ impl ShardHost {
                 }))
             }
             Frame::SpikeFrame { clip, seq, plane } => {
+                if let Some(lane) = &self.lane {
+                    return Err(Error::protocol(format!(
+                        "scalar spike frame while lane batch {} is in flight",
+                        lane.batch
+                    )));
+                }
                 let span = self
                     .span
                     .ok_or_else(|| Error::protocol("spike frame before a group was loaded"))?;
@@ -205,6 +278,26 @@ impl ShardHost {
                 if self.span.is_none() {
                     return Err(Error::protocol("drain before a group was loaded"));
                 }
+                // An open lane session drains as a batch: one LaneReport
+                // per lane, then the session ends (its banks die with
+                // it — the next batch opens fresh zeroed banks).
+                if let Some(lane) = self.lane.take() {
+                    if lane.batch != clip {
+                        return Err(Error::protocol(format!(
+                            "drain for batch {clip} while batch {} is in flight",
+                            lane.batch
+                        )));
+                    }
+                    let lanes: Vec<LaneReport> = (0..lane.lanes)
+                        .map(|b| LaneReport {
+                            steps: lane.telemetry[b].clone(),
+                            vmems: lane.banks.iter().map(|bank| bank.lane_mat(b)).collect(),
+                        })
+                        .collect();
+                    report.clips += lane.lanes as u64;
+                    report.batches += 1;
+                    return Ok(Some(Frame::LaneTelemetry { batch: clip, lanes }));
+                }
                 if let Some(current) = self.clip {
                     if current != clip {
                         return Err(Error::protocol(format!(
@@ -225,9 +318,131 @@ impl ShardHost {
                 report.clips += 1;
                 Ok(Some(reply))
             }
+            Frame::LaneBatchOpen { batch, clips } => {
+                let span = self
+                    .span
+                    .ok_or_else(|| Error::protocol("lane batch before a group was loaded"))?;
+                let network = self.network.as_ref().ok_or_else(|| {
+                    Error::protocol("lane batch on an unprovisioned shard")
+                })?;
+                if let Some(current) = self.clip {
+                    return Err(Error::protocol(format!(
+                        "lane batch {batch} while scalar clip {current} is in flight"
+                    )));
+                }
+                if let Some(lane) = &self.lane {
+                    return Err(Error::protocol(format!(
+                        "lane batch {batch} while batch {} is in flight",
+                        lane.batch
+                    )));
+                }
+                let lanes = clips.len();
+                // The core validates every span layer's fan-in at open
+                // time, so a batch never fails mid-frame on a layer the
+                // chip could not host.
+                let core = SpidrCore::new(SimConfig {
+                    precision: network.precision,
+                    ..SimConfig::default()
+                });
+                let (lo, hi) = span.layers;
+                let mut banks = Vec::new();
+                for layer in &network.layers[lo..hi] {
+                    if layer.has_state() {
+                        core.select_mode(layer.fan_in())?;
+                        let (m, k) = layer.vmem_shape()?;
+                        banks.push(LaneBank::zeros(m, k, lanes));
+                    }
+                }
+                self.lane = Some(LaneSession {
+                    batch,
+                    lanes,
+                    core,
+                    banks,
+                    telemetry: vec![Vec::new(); lanes],
+                    seq: 0,
+                });
+                Ok(Some(Frame::LaneBatchOpen { batch, clips }))
+            }
+            Frame::LaneFrame { batch, seq, frame } => {
+                let span = self
+                    .span
+                    .ok_or_else(|| Error::protocol("lane frame before a group was loaded"))?;
+                let network = self.network.as_ref().ok_or_else(|| {
+                    Error::protocol("lane frame on an unprovisioned shard")
+                })?;
+                let lane = self.lane.as_mut().ok_or_else(|| {
+                    Error::protocol(format!("lane frame for batch {batch} before LaneBatchOpen"))
+                })?;
+                if batch != lane.batch {
+                    return Err(Error::protocol(format!(
+                        "lane frame for batch {batch} while batch {} is in flight",
+                        lane.batch
+                    )));
+                }
+                if seq != lane.seq {
+                    return Err(Error::protocol(format!(
+                        "out-of-order lane frame: seq {seq}, expected {}",
+                        lane.seq
+                    )));
+                }
+                if frame.lanes() != lane.lanes {
+                    return Err(Error::protocol(format!(
+                        "lane frame carries {} lanes, batch {} opened with {}",
+                        frame.lanes(),
+                        lane.batch,
+                        lane.lanes
+                    )));
+                }
+                let (lo, hi) = span.layers;
+                let in_shape = network.layers[lo].in_shape;
+                if frame.shape() != in_shape {
+                    return Err(Error::shape(format!(
+                        "lane frame shape {:?} != layer {lo} input {:?}",
+                        frame.shape(),
+                        in_shape
+                    )));
+                }
+                for tele in &mut lane.telemetry {
+                    tele.push(StepTelemetry::default());
+                }
+                let mut f = frame;
+                let mut si = 0;
+                for layer in &network.layers[lo..hi] {
+                    match layer.kind {
+                        LayerKind::Pool => f = pool_step_lanes(layer, &f),
+                        LayerKind::Conv | LayerKind::Fc => {
+                            let cells = f.plane().len() as u64;
+                            for (b, spikes) in f.lane_counts().into_iter().enumerate() {
+                                let step = lane.telemetry[b]
+                                    .last_mut()
+                                    .expect("pushed one step above");
+                                step.layer_input_spikes.push(spikes);
+                                step.layer_input_cells.push(cells);
+                            }
+                            let (mut out, _) = lane.core.run_layer_lanes(
+                                layer,
+                                std::slice::from_ref(&f),
+                                &mut lane.banks[si],
+                            )?;
+                            f = out.pop().expect("one timestep in, one frame out");
+                            si += 1;
+                        }
+                    }
+                }
+                lane.seq += 1;
+                report.frames += 1;
+                Ok(Some(Frame::LaneFrame {
+                    batch,
+                    seq,
+                    frame: f,
+                }))
+            }
             Frame::Error { message } => Err(Error::Protocol(message)),
             Frame::Telemetry { .. } => {
                 Err(Error::protocol("unexpected telemetry frame on a shard"))
+            }
+            Frame::LaneTelemetry { .. } => {
+                Err(Error::protocol("unexpected lane telemetry frame on a shard"))
             }
         }
     }
@@ -474,6 +689,185 @@ mod tests {
         assert!(matches!(
             link.recv().unwrap(),
             Some(Frame::Error { message }) if message.contains("out-of-order")
+        ));
+        assert!(host.join().unwrap().is_err());
+    }
+
+    /// Tentpole: a v3 lane session — `LaneBatchOpen`, lane frames, and
+    /// a batch `Drain` — is bit-identical **per lane** to driving each
+    /// clip through scalar `step_group` calls: output spikes every
+    /// timestep, per-step telemetry, and drained Vmems all match, and
+    /// the whole batch costs one frame per timestep on the wire.
+    #[test]
+    fn lane_session_matches_per_lane_step_group() {
+        let net = demo_serving_network(4).unwrap();
+        let (mut link, host) = spawn_host();
+        let span = net.group_spans(&[(0, 2)]).unwrap()[0];
+        let (lanes, timesteps, batch) = (5usize, 3usize, 77u64);
+
+        link.send(&Frame::LoadGroup {
+            shard: 0,
+            groups: vec![(0, 2)],
+            span: None,
+            workload: None,
+        })
+        .unwrap();
+        assert!(matches!(
+            link.recv().unwrap(),
+            Some(Frame::LoadGroup { span: Some(_), .. })
+        ));
+
+        let clips: Vec<u64> = (0..lanes as u64).collect();
+        link.send(&Frame::LaneBatchOpen {
+            batch,
+            clips: clips.clone(),
+        })
+        .unwrap();
+        match link.recv().unwrap() {
+            Some(Frame::LaneBatchOpen { batch: b, clips: c }) => {
+                assert_eq!((b, c), (batch, clips));
+            }
+            other => panic!("want LaneBatchOpen ack, got {other:?}"),
+        }
+
+        // oracle: one scalar state per lane, stepped clip by clip
+        let mut vmems: Vec<Vec<Mat>> =
+            (0..lanes).map(|_| net.span_state(&span).unwrap()).collect();
+        let mut steps: Vec<Vec<StepTelemetry>> = vec![Vec::new(); lanes];
+        for seq in 0..timesteps as u32 {
+            let planes: Vec<SpikePlane> = (0..lanes)
+                .map(|b| rand_frame(1000 * (b as u64 + 1) + seq as u64))
+                .collect();
+            let refs: Vec<&SpikePlane> = planes.iter().collect();
+            link.send(&Frame::LaneFrame {
+                batch,
+                seq,
+                frame: LaneFrame::pack(&refs).unwrap(),
+            })
+            .unwrap();
+            let out = match link.recv().unwrap() {
+                Some(Frame::LaneFrame { batch: b, seq: s, frame }) => {
+                    assert_eq!((b, s), (batch, seq));
+                    frame
+                }
+                other => panic!("want LaneFrame reply, got {other:?}"),
+            };
+            assert_eq!(out.lanes(), lanes);
+            for b in 0..lanes {
+                let (want, tele) = net
+                    .step_group(&span, &planes[b], &mut vmems[b])
+                    .unwrap();
+                assert_eq!(out.lane(b), want, "lane {b} diverged at seq {seq}");
+                steps[b].push(tele);
+            }
+        }
+
+        link.send(&Frame::Drain { clip: batch }).unwrap();
+        match link.recv().unwrap() {
+            Some(Frame::LaneTelemetry { batch: b, lanes: reports }) => {
+                assert_eq!(b, batch);
+                assert_eq!(reports.len(), lanes);
+                for (b, report) in reports.iter().enumerate() {
+                    assert_eq!(report.steps, steps[b], "lane {b} telemetry diverged");
+                    assert_eq!(report.vmems, vmems[b], "lane {b} Vmems diverged");
+                }
+            }
+            other => panic!("want LaneTelemetry reply, got {other:?}"),
+        }
+
+        drop(link);
+        let report = host.join().unwrap().unwrap();
+        assert_eq!(
+            (report.clips, report.frames, report.batches),
+            (lanes as u64, timesteps as u64, 1)
+        );
+    }
+
+    /// Satellite (version negotiation): a host pinned to the v2 dialect
+    /// advertises v2 in its `Hello` ack and rejects v3 lane traffic
+    /// with a version-skew protocol error instead of desyncing; a
+    /// scalar frame mid-lane-batch on a v3 host is likewise typed.
+    #[test]
+    fn v2_host_rejects_lane_frames() {
+        let (mut link, mut shard_end) = LoopbackTransport::pair();
+        let host = std::thread::spawn(move || {
+            ShardHost::new(demo_serving_network(4).unwrap())
+                .with_protocol(2)
+                .serve(&mut shard_end)
+        });
+
+        link.send(&Frame::Hello {
+            role: Role::Coordinator,
+            name: "test".into(),
+        })
+        .unwrap();
+        match link.recv_versioned().unwrap() {
+            Some((Frame::Hello { role: Role::Shard, .. }, ver)) => {
+                assert_eq!(ver, MIN_VERSION, "v2 host must advertise v2");
+            }
+            other => panic!("want Hello ack, got {other:?}"),
+        }
+
+        link.send(&Frame::LoadGroup {
+            shard: 0,
+            groups: vec![(0, 2)],
+            span: None,
+            workload: None,
+        })
+        .unwrap();
+        assert!(matches!(
+            link.recv().unwrap(),
+            Some(Frame::LoadGroup { span: Some(_), .. })
+        ));
+
+        // a lane frame is stamped v3 by its kind — the v2 host must
+        // reject it before touching the session state
+        link.send(&Frame::LaneBatchOpen {
+            batch: 0,
+            clips: vec![0, 1],
+        })
+        .unwrap();
+        assert!(matches!(
+            link.recv().unwrap(),
+            Some(Frame::Error { message }) if message.contains("version skew")
+        ));
+        assert!(host.join().unwrap().is_err());
+    }
+
+    /// Scalar and lane sessions must not interleave: a scalar spike
+    /// frame inside an open lane batch is a typed protocol error.
+    #[test]
+    fn scalar_frame_inside_lane_batch_is_rejected() {
+        let (mut link, host) = spawn_host();
+        link.send(&Frame::LoadGroup {
+            shard: 0,
+            groups: vec![(0, 2)],
+            span: None,
+            workload: None,
+        })
+        .unwrap();
+        assert!(matches!(
+            link.recv().unwrap(),
+            Some(Frame::LoadGroup { span: Some(_), .. })
+        ));
+        link.send(&Frame::LaneBatchOpen {
+            batch: 3,
+            clips: vec![0, 1, 2],
+        })
+        .unwrap();
+        assert!(matches!(
+            link.recv().unwrap(),
+            Some(Frame::LaneBatchOpen { .. })
+        ));
+        link.send(&Frame::SpikeFrame {
+            clip: 9,
+            seq: 0,
+            plane: rand_frame(4),
+        })
+        .unwrap();
+        assert!(matches!(
+            link.recv().unwrap(),
+            Some(Frame::Error { message }) if message.contains("lane batch 3")
         ));
         assert!(host.join().unwrap().is_err());
     }

@@ -27,13 +27,36 @@ use crate::net::wire::Frame;
 /// the wire analogue of a full handshaking FIFO stalling its
 /// producer); `recv` blocks for the next frame and returns `Ok(None)`
 /// when the peer closed the link cleanly between frames.
+///
+/// The versioned pair is the negotiation surface (wire v3): `send`
+/// stamps each frame at its kind's own dialect
+/// ([`Frame::wire_version`] — v2 for the scalar grammar, v3 for lane
+/// messages), and `recv_versioned` surfaces the header version a frame
+/// arrived under, which is how a coordinator learns whether its peer
+/// can take lane batches (the shard's `Hello` reply is stamped at the
+/// highest version the shard speaks).
 pub trait Transport: Send {
-    /// Deliver one frame, blocking on link backpressure.
-    fn send(&mut self, frame: &Frame) -> Result<()>;
+    /// Deliver one frame stamped with an explicit header version,
+    /// blocking on link backpressure.
+    fn send_versioned(&mut self, frame: &Frame, version: u16) -> Result<()>;
+
+    /// Receive the next frame plus the header version it arrived
+    /// under; `Ok(None)` means the peer closed the link cleanly at a
+    /// frame boundary.
+    fn recv_versioned(&mut self) -> Result<Option<(Frame, u16)>>;
+
+    /// Deliver one frame, stamped at the kind's own
+    /// [`Frame::wire_version`] (so scalar traffic stays v2 on the wire
+    /// and v2 peers interoperate by construction).
+    fn send(&mut self, frame: &Frame) -> Result<()> {
+        self.send_versioned(frame, frame.wire_version())
+    }
 
     /// Receive the next frame; `Ok(None)` means the peer closed the
     /// link cleanly at a frame boundary.
-    fn recv(&mut self) -> Result<Option<Frame>>;
+    fn recv(&mut self) -> Result<Option<Frame>> {
+        Ok(self.recv_versioned()?.map(|(frame, _)| frame))
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -61,12 +84,12 @@ impl TcpTransport {
 }
 
 impl Transport for TcpTransport {
-    fn send(&mut self, frame: &Frame) -> Result<()> {
-        frame.write_to(&mut self.stream)
+    fn send_versioned(&mut self, frame: &Frame, version: u16) -> Result<()> {
+        frame.write_to_versioned(&mut self.stream, version)
     }
 
-    fn recv(&mut self) -> Result<Option<Frame>> {
-        Frame::read_from(&mut self.stream)
+    fn recv_versioned(&mut self) -> Result<Option<(Frame, u16)>> {
+        Frame::read_versioned_from(&mut self.stream)
     }
 }
 
@@ -229,12 +252,12 @@ impl LoopbackTransport {
 }
 
 impl Transport for LoopbackTransport {
-    fn send(&mut self, frame: &Frame) -> Result<()> {
-        frame.write_to(&mut self.tx)
+    fn send_versioned(&mut self, frame: &Frame, version: u16) -> Result<()> {
+        frame.write_to_versioned(&mut self.tx, version)
     }
 
-    fn recv(&mut self) -> Result<Option<Frame>> {
-        Frame::read_from(&mut self.rx)
+    fn recv_versioned(&mut self) -> Result<Option<(Frame, u16)>> {
+        Frame::read_versioned_from(&mut self.rx)
     }
 }
 
@@ -256,6 +279,20 @@ mod tests {
         b.send(&ping(2)).unwrap();
         assert_eq!(b.recv().unwrap(), Some(ping(1)));
         assert_eq!(a.recv().unwrap(), Some(ping(2)));
+    }
+
+    /// The default `send` stamps each kind at its own dialect, and the
+    /// receiver sees exactly that stamp — the negotiation surface
+    /// (ISSUE 7).
+    #[test]
+    fn frames_carry_their_wire_version_end_to_end() {
+        use crate::net::wire::{MIN_VERSION, VERSION};
+        let (mut a, mut b) = LoopbackTransport::pair();
+        a.send(&ping(1)).unwrap();
+        assert_eq!(b.recv_versioned().unwrap(), Some((ping(1), MIN_VERSION)));
+        // an explicit stamp (the Hello negotiation path) also survives
+        a.send_versioned(&ping(2), VERSION).unwrap();
+        assert_eq!(b.recv_versioned().unwrap(), Some((ping(2), VERSION)));
     }
 
     #[test]

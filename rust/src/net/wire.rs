@@ -22,12 +22,25 @@
 //! The payload grammar round-trips the simulator's own types —
 //! [`SpikePlane`] (bit-packed through the shared
 //! [`bitpack`](crate::snn::bitpack) layout, 8 cells per byte: planes
-//! are binary by contract), [`GroupSpan`], [`StepTelemetry`], Vmem
+//! are binary by contract), lane-major [`LaneFrame`]s (v3: `lanes`
+//! bits per cell, up to 64 clips in one checksummed frame),
+//! [`GroupSpan`], [`StepTelemetry`], Vmem
 //! [`Mat`] banks and
 //! whole [`Network`] workloads ([`encode_network`] /
 //! [`decode_network`], the `LoadGroup` weight-push payload) — through
 //! [`Frame::to_bytes`] / [`Frame::from_bytes`], property tested in
 //! `prop_frame_roundtrip` and `prop_network_roundtrips_bit_exactly`.
+//!
+//! **Version negotiation.** Receivers accept header versions
+//! [`MIN_VERSION`]`..=`[`VERSION`] and every frame kind knows the
+//! lowest dialect it exists in ([`Frame::wire_version`]): senders
+//! stamp each frame at that version, so the v2 grammar stays
+//! byte-identical on the wire and a v2 peer never sees a v3 header
+//! unless lane traffic — which it cannot service — is addressed to it.
+//! A v3-only kind under a v2 header is rejected as version skew; a
+//! host's `Hello` is stamped at the highest version it speaks, which
+//! is how the coordinator learns whether a shard can take lane
+//! batches.
 
 use std::io::{Read, Write};
 
@@ -36,17 +49,30 @@ use crate::quant::Precision;
 use crate::snn::bitpack;
 use crate::snn::layer::{Layer, LayerKind, NeuronConfig, ResetMode};
 use crate::snn::network::{GroupSpan, Network, StepTelemetry};
-use crate::snn::spikes::SpikePlane;
+use crate::snn::spikes::{LaneFrame, LanePlane, SpikePlane, MAX_LANES};
 use crate::snn::tensor::Mat;
 
 /// Frame magic, the first four bytes of every frame.
 pub const MAGIC: [u8; 4] = *b"SPDR";
 
-/// Wire-protocol version carried in every frame header; receivers
-/// reject frames from any other version. Version 2 added the
-/// [`Frame::LoadGroup`] `workload` field (over-the-wire weight push,
-/// so shards can start blank).
-pub const VERSION: u16 = 2;
+/// Highest wire-protocol version this build speaks; receivers accept
+/// [`MIN_VERSION`]`..=VERSION` in the frame header. Version 2 added
+/// the [`Frame::LoadGroup`] `workload` field (over-the-wire weight
+/// push, so shards can start blank); version 3 added the lane-batch
+/// messages ([`Frame::LaneBatchOpen`] / [`Frame::LaneFrame`] /
+/// [`Frame::LaneTelemetry`] — up to 64 clips per frame).
+pub const VERSION: u16 = 3;
+
+/// Lowest wire-protocol version this build still decodes. The v2
+/// grammar (every pre-lane frame kind) is encoded byte-identically by
+/// this build, stamped at v2 ([`Frame::wire_version`]), so v2 peers
+/// interoperate for scalar traffic.
+pub const MIN_VERSION: u16 = 2;
+
+/// The version that introduced lane batching — a peer whose `Hello`
+/// header carries at least this version can service
+/// [`Frame::LaneBatchOpen`] / [`Frame::LaneFrame`] streams.
+pub const LANE_VERSION: u16 = 3;
 
 /// Hard cap on the payload length prefix (64 MiB) — anything larger is
 /// rejected before allocation, bounding what a corrupt or adversarial
@@ -68,8 +94,9 @@ pub enum Role {
 
 /// One protocol message (DESIGN.md §Distributed has the session
 /// grammar: `Hello → LoadGroup[+workload] → (LoadGroup | SpikeFrame*
-/// Drain)*` — the first `LoadGroup` may push the serialized workload,
-/// later ones re-assign/reset for failover replay).
+/// Drain | LaneBatchOpen LaneFrame* Drain)*` — the first `LoadGroup`
+/// may push the serialized workload, later ones re-assign/reset for
+/// failover replay; the lane-batch production is protocol v3).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Frame {
     /// Session opener, echoed by the shard: version negotiation is the
@@ -141,6 +168,53 @@ pub enum Frame {
         /// Human-readable failure description.
         message: String,
     },
+    /// v3: open a lane batch — up to [`MAX_LANES`] clips ride one
+    /// [`Frame::LaneFrame`] stream, clip `clips[b]` in bit-lane `b`.
+    /// The shard allocates per-span lane Vmem banks sized to
+    /// `clips.len()` lanes and echoes the frame as the
+    /// acknowledgement. A lane batch and a scalar clip are mutually
+    /// exclusive on a link until drained.
+    LaneBatchOpen {
+        /// Batch id (the first lane's clip id; monotonic per session).
+        batch: u64,
+        /// Per-lane clip ids, one per occupied bit-lane (1..=64).
+        clips: Vec<u64>,
+    },
+    /// v3: one timestep of spikes for a whole lane batch — the
+    /// lane-major plane bit-packs `frame.lanes()` bits per cell, so 64
+    /// clips' spikes cross the wire in one checksummed frame. The
+    /// shard replies with the output lane frame its layer group emits,
+    /// under the same `(batch, seq)`.
+    LaneFrame {
+        /// Batch id this timestep belongs to.
+        batch: u64,
+        /// Timestep index within the batch.
+        seq: u32,
+        /// The lane-major spike plane (`lanes` bits per cell on the
+        /// wire).
+        frame: LaneFrame,
+    },
+    /// v3: shard → coordinator at lane-batch end (the reply to
+    /// [`Frame::Drain`] with the batch id): per-lane telemetry and
+    /// final Vmem banks, demuxed lane-by-lane at the coordinator.
+    LaneTelemetry {
+        /// Batch id these results belong to.
+        batch: u64,
+        /// One report per lane, in lane order.
+        lanes: Vec<LaneReport>,
+    },
+}
+
+/// One lane's drain report inside [`Frame::LaneTelemetry`]: exactly
+/// what a scalar [`Frame::Telemetry`] would have carried had the
+/// lane's clip been served alone — the per-lane bit-identity contract.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct LaneReport {
+    /// One telemetry fragment per timestep served, for this lane.
+    pub steps: Vec<StepTelemetry>,
+    /// The span's Vmem banks after the batch's last timestep, for this
+    /// lane.
+    pub vmems: Vec<Mat>,
 }
 
 /// FNV-1a 32-bit checksum (zero-dependency; collision resistance is
@@ -202,6 +276,18 @@ impl Wr {
         // the shared LSB-first layout (snn::bitpack) — one definition
         // for the wire codec and the lane-major batch tensor
         self.buf.extend_from_slice(&bitpack::pack_bytes(p.as_slice()));
+    }
+
+    fn lane_plane(&mut self, f: &LaneFrame) {
+        let (c, h, w) = f.shape();
+        self.u8(f.lanes() as u8);
+        self.u32(c as u32);
+        self.u32(h as u32);
+        self.u32(w as u32);
+        // the shared LSB-first lane bitstream: `lanes` bits per cell,
+        // so a 64-clip batch costs one u64 per cell — not 64 planes
+        self.buf
+            .extend_from_slice(&bitpack::pack_words(f.plane().as_slice(), f.lanes()));
     }
 
     fn mat(&mut self, m: &Mat) {
@@ -313,6 +399,44 @@ impl<'a> Rd<'a> {
             .map_err(|e| Error::protocol(format!("bad spike plane: {e}")))
     }
 
+    /// The v3 lane-count byte, validated before anything is sized from
+    /// it: 0 lanes and more than [`MAX_LANES`] are both malformed.
+    fn lane_count(&mut self) -> Result<usize> {
+        let lanes = self.u8()? as usize;
+        if lanes == 0 || lanes > MAX_LANES {
+            return Err(Error::protocol(format!(
+                "lane count {lanes} outside 1..={MAX_LANES}"
+            )));
+        }
+        Ok(lanes)
+    }
+
+    fn lane_plane(&mut self) -> Result<LaneFrame> {
+        let lanes = self.lane_count()?;
+        let c = self.u32()? as u64;
+        let h = self.u32()? as u64;
+        let w = self.u32()? as u64;
+        // cap the unpacked size before allocation: a lane plane costs
+        // 8 bytes per cell in memory, so bound cells*8 by MAX_PAYLOAD —
+        // a crafted shape cannot amplify a small payload into a huge
+        // allocation
+        let cells = c
+            .checked_mul(h)
+            .and_then(|v| v.checked_mul(w))
+            .filter(|&v| v.checked_mul(8).is_some_and(|b| b <= MAX_PAYLOAD as u64))
+            .ok_or_else(|| Error::protocol("oversized lane plane"))?
+            as usize;
+        let packed = self.take((cells * lanes).div_ceil(8))?;
+        let data = bitpack::unpack_words(packed, cells, lanes);
+        let plane = LanePlane::from_vec(c as usize, h as usize, w as usize, data)
+            .map_err(|e| Error::protocol(format!("bad lane plane: {e}")))?;
+        // unpack_words masks to `lanes` bits, so the stray-bit check
+        // cannot fire here — but the constructor stays the validated
+        // entry for any future decode path
+        LaneFrame::from_plane_checked(plane, lanes)
+            .map_err(|e| Error::protocol(format!("bad lane plane: {e}")))
+    }
+
     fn mat(&mut self) -> Result<Mat> {
         let rows = self.u32()? as u64;
         let cols = self.u32()? as u64;
@@ -384,6 +508,25 @@ impl Frame {
             Frame::Telemetry { .. } => 4,
             Frame::Drain { .. } => 5,
             Frame::Error { .. } => 6,
+            Frame::LaneBatchOpen { .. } => 7,
+            Frame::LaneFrame { .. } => 8,
+            Frame::LaneTelemetry { .. } => 9,
+        }
+    }
+
+    /// The lowest header version this frame's kind is defined at: lane
+    /// messages are v3, everything else decodes at v2. Senders stamp
+    /// each frame at this version ([`Frame::to_bytes`]), so the v2
+    /// grammar stays byte-identical on the wire and a v2 peer only
+    /// ever receives headers it can parse — unless lane traffic, which
+    /// it cannot service, is addressed to it (a typed rejection, not a
+    /// desync).
+    pub fn wire_version(&self) -> u16 {
+        match self {
+            Frame::LaneBatchOpen { .. } | Frame::LaneFrame { .. } | Frame::LaneTelemetry { .. } => {
+                LANE_VERSION
+            }
+            _ => MIN_VERSION,
         }
     }
 
@@ -443,11 +586,42 @@ impl Frame {
             }
             Frame::Drain { clip } => w.u64(*clip),
             Frame::Error { message } => w.str(message),
+            Frame::LaneBatchOpen { batch, clips } => {
+                w.u64(*batch);
+                w.u8(clips.len() as u8);
+                for &c in clips {
+                    w.u64(c);
+                }
+            }
+            Frame::LaneFrame { batch, seq, frame } => {
+                w.u64(*batch);
+                w.u32(*seq);
+                w.lane_plane(frame);
+            }
+            Frame::LaneTelemetry { batch, lanes } => {
+                w.u64(*batch);
+                w.u8(lanes.len() as u8);
+                for lane in lanes {
+                    w.u32(lane.steps.len() as u32);
+                    for t in &lane.steps {
+                        w.telemetry(t);
+                    }
+                    w.u32(lane.vmems.len() as u32);
+                    for m in &lane.vmems {
+                        w.mat(m);
+                    }
+                }
+            }
         }
         w.buf
     }
 
-    fn decode_payload(kind: u8, payload: &[u8]) -> Result<Frame> {
+    fn decode_payload(kind: u8, version: u16, payload: &[u8]) -> Result<Frame> {
+        if (7..=9).contains(&kind) && version < LANE_VERSION {
+            return Err(Error::protocol(format!(
+                "version skew: lane frame kind {kind} under a v{version} header"
+            )));
+        }
         let mut r = Rd::new(payload);
         let frame = match kind {
             1 => Frame::Hello {
@@ -512,6 +686,39 @@ impl Frame {
             }
             5 => Frame::Drain { clip: r.u64()? },
             6 => Frame::Error { message: r.str()? },
+            7 => {
+                let batch = r.u64()?;
+                let lanes = r.lane_count()?;
+                let mut clips = Vec::with_capacity(lanes);
+                for _ in 0..lanes {
+                    clips.push(r.u64()?);
+                }
+                Frame::LaneBatchOpen { batch, clips }
+            }
+            8 => Frame::LaneFrame {
+                batch: r.u64()?,
+                seq: r.u32()?,
+                frame: r.lane_plane()?,
+            },
+            9 => {
+                let batch = r.u64()?;
+                let n = r.lane_count()?;
+                let mut lanes = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let ns = r.len_prefix(8)?;
+                    let mut steps = Vec::with_capacity(ns);
+                    for _ in 0..ns {
+                        steps.push(r.telemetry()?);
+                    }
+                    let nm = r.len_prefix(8)?;
+                    let mut vmems = Vec::with_capacity(nm);
+                    for _ in 0..nm {
+                        vmems.push(r.mat()?);
+                    }
+                    lanes.push(LaneReport { steps, vmems });
+                }
+                Frame::LaneTelemetry { batch, lanes }
+            }
             other => {
                 return Err(Error::protocol(format!("unknown frame kind {other}")));
             }
@@ -521,12 +728,20 @@ impl Frame {
     }
 
     /// Encode the frame into one contiguous wire buffer (header +
-    /// payload + checksum).
+    /// payload + checksum), stamped at the kind's own
+    /// [`Frame::wire_version`].
     pub fn to_bytes(&self) -> Vec<u8> {
+        self.to_bytes_versioned(self.wire_version())
+    }
+
+    /// Encode the frame stamped with an explicit header `version` —
+    /// the negotiation escape hatch (a host's `Hello` is stamped at
+    /// the highest version it speaks, not the kind's minimum).
+    pub fn to_bytes_versioned(&self, version: u16) -> Vec<u8> {
         let payload = self.encode_payload();
         let mut buf = Vec::with_capacity(HEADER_LEN + payload.len() + 4);
         buf.extend_from_slice(&MAGIC);
-        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.extend_from_slice(&version.to_le_bytes());
         buf.push(self.kind());
         buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
         buf.extend_from_slice(&payload);
@@ -541,13 +756,21 @@ impl Frame {
     /// malformed payload — is an [`Error::Protocol`]; decoding never
     /// panics.
     pub fn from_bytes(buf: &[u8]) -> Result<(Frame, usize)> {
+        let (frame, _, used) = Frame::from_bytes_versioned(buf)?;
+        Ok((frame, used))
+    }
+
+    /// [`Frame::from_bytes`] that also surfaces the header version the
+    /// frame arrived under (within [`MIN_VERSION`]`..=`[`VERSION`]) —
+    /// how a receiver learns which dialect its peer speaks.
+    pub fn from_bytes_versioned(buf: &[u8]) -> Result<(Frame, u16, usize)> {
         if buf.len() < HEADER_LEN {
             return Err(Error::protocol(format!(
                 "truncated frame header: {} of {HEADER_LEN} bytes",
                 buf.len()
             )));
         }
-        let len = parse_header(buf[..HEADER_LEN].try_into().unwrap())?;
+        let (version, len) = parse_header(buf[..HEADER_LEN].try_into().unwrap())?;
         let total = HEADER_LEN + len + 4;
         if buf.len() < total {
             return Err(Error::protocol(format!(
@@ -560,14 +783,20 @@ impl Frame {
         if checksum(payload) != want {
             return Err(Error::protocol("frame checksum mismatch"));
         }
-        let frame = Frame::decode_payload(buf[6], payload)?;
-        Ok((frame, total))
+        let frame = Frame::decode_payload(buf[6], version, payload)?;
+        Ok((frame, version, total))
     }
 
     /// Read one frame from a byte stream. Returns `Ok(None)` on a
     /// clean end-of-stream (the peer closed between frames); EOF
     /// *inside* a frame is a protocol error.
     pub fn read_from<R: Read>(r: &mut R) -> Result<Option<Frame>> {
+        Ok(Frame::read_versioned_from(r)?.map(|(f, _)| f))
+    }
+
+    /// [`Frame::read_from`] that also surfaces the header version the
+    /// frame arrived under.
+    pub fn read_versioned_from<R: Read>(r: &mut R) -> Result<Option<(Frame, u16)>> {
         let mut header = [0u8; HEADER_LEN];
         // Peek the first byte separately to distinguish a clean close
         // from a mid-frame truncation.
@@ -580,7 +809,7 @@ impl Frame {
             }
         }
         read_exact(r, &mut header[1..])?;
-        let len = parse_header(&header)?;
+        let (version, len) = parse_header(&header)?;
         let mut rest = vec![0u8; len + 4];
         read_exact(r, &mut rest)?;
         let payload = &rest[..len];
@@ -588,13 +817,21 @@ impl Frame {
         if checksum(payload) != want {
             return Err(Error::protocol("frame checksum mismatch"));
         }
-        Ok(Some(Frame::decode_payload(header[6], payload)?))
+        Ok(Some((
+            Frame::decode_payload(header[6], version, payload)?,
+            version,
+        )))
     }
 
     /// Write the frame to a byte stream (one contiguous write, then
-    /// flush).
+    /// flush), stamped at the kind's own [`Frame::wire_version`].
     pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
-        w.write_all(&self.to_bytes())?;
+        self.write_to_versioned(w, self.wire_version())
+    }
+
+    /// [`Frame::write_to`] with an explicit header version stamp.
+    pub fn write_to_versioned<W: Write>(&self, w: &mut W, version: u16) -> Result<()> {
+        w.write_all(&self.to_bytes_versioned(version))?;
         w.flush()?;
         Ok(())
     }
@@ -827,8 +1064,10 @@ pub fn decode_network(bytes: &[u8]) -> Result<Network> {
     })
 }
 
-/// Validate a frame header and return the payload length.
-fn parse_header(header: &[u8; HEADER_LEN]) -> Result<usize> {
+/// Validate a frame header and return the header version and payload
+/// length. Versions outside [`MIN_VERSION`]`..=`[`VERSION`] are
+/// rejected here, before any payload is read.
+fn parse_header(header: &[u8; HEADER_LEN]) -> Result<(u16, usize)> {
     if header[..4] != MAGIC {
         return Err(Error::protocol(format!(
             "bad frame magic {:02x?}",
@@ -836,9 +1075,9 @@ fn parse_header(header: &[u8; HEADER_LEN]) -> Result<usize> {
         )));
     }
     let version = u16::from_le_bytes(header[4..6].try_into().unwrap());
-    if version != VERSION {
+    if !(MIN_VERSION..=VERSION).contains(&version) {
         return Err(Error::protocol(format!(
-            "unsupported protocol version {version} (host speaks {VERSION})"
+            "unsupported protocol version {version} (host speaks {MIN_VERSION}..={VERSION})"
         )));
     }
     let len = u32::from_le_bytes(header[7..11].try_into().unwrap());
@@ -847,7 +1086,7 @@ fn parse_header(header: &[u8; HEADER_LEN]) -> Result<usize> {
             "oversized frame: {len}-byte payload exceeds the {MAX_PAYLOAD}-byte cap"
         )));
     }
-    Ok(len as usize)
+    Ok((version, len as usize))
 }
 
 /// `Read::read_exact` with mid-frame EOF mapped to a protocol error.
@@ -924,7 +1163,42 @@ mod tests {
             Frame::Error {
                 message: "boom".into(),
             },
+            Frame::LaneBatchOpen {
+                batch: 64,
+                clips: (64..64 + 5).collect(),
+            },
+            Frame::LaneFrame {
+                batch: 64,
+                seq: 2,
+                frame: sample_lane_frame(5),
+            },
+            Frame::LaneTelemetry {
+                batch: 64,
+                lanes: vec![
+                    LaneReport {
+                        steps: vec![StepTelemetry {
+                            layer_input_spikes: vec![3, 1],
+                            layer_input_cells: vec![48, 48],
+                        }],
+                        vmems: vec![Mat::zeros(2, 2)],
+                    },
+                    LaneReport::default(),
+                ],
+            },
         ]
+    }
+
+    fn sample_lane_frame(lanes: usize) -> LaneFrame {
+        let planes: Vec<SpikePlane> = (0..lanes)
+            .map(|b| {
+                let mut p = SpikePlane::zeros(2, 3, 4);
+                p.set(0, b % 3, b % 4, 1);
+                p.set(1, (b + 1) % 3, (2 * b) % 4, 1);
+                p
+            })
+            .collect();
+        let refs: Vec<&SpikePlane> = planes.iter().collect();
+        LaneFrame::pack(&refs).unwrap()
     }
 
     #[test]
@@ -997,12 +1271,40 @@ mod tests {
         m
     }
 
-    /// Satellite: random planes, spans, telemetry and Vmem banks
-    /// survive the codec bit-exactly.
+    /// Random lane frame: one shape shared by 1..=64 lanes, each lane
+    /// an independent sparse plane.
+    fn rand_lane_frame(g: &mut Gen) -> LaneFrame {
+        let lanes = 1 + g.index(MAX_LANES);
+        let (c, h, w) = (1 + g.index(3), 1 + g.index(5), 1 + g.index(5));
+        let planes: Vec<SpikePlane> = (0..lanes)
+            .map(|_| {
+                let mut p = SpikePlane::zeros(c, h, w);
+                for i in 0..p.len() {
+                    if g.chance(0.3) {
+                        p.as_mut_slice()[i] = 1;
+                    }
+                }
+                p
+            })
+            .collect();
+        let refs: Vec<&SpikePlane> = planes.iter().collect();
+        LaneFrame::pack(&refs).unwrap()
+    }
+
+    fn rand_lane_report(g: &mut Gen) -> LaneReport {
+        LaneReport {
+            steps: g.vec_of(0, 3, rand_telemetry),
+            vmems: g.vec_of(0, 3, rand_mat),
+        }
+    }
+
+    /// Satellite: random planes, lane frames, spans, telemetry and
+    /// Vmem banks survive the codec bit-exactly (ISSUE 7 extended the
+    /// sweep over the v3 lane variants).
     #[test]
     fn prop_frame_roundtrip() {
         check("frame_roundtrip", 60, |g| {
-            let frame = match g.index(6) {
+            let frame = match g.index(9) {
                 0 => Frame::Hello {
                     role: *g.choose(&[Role::Coordinator, Role::Shard]),
                     name: "shard-α ".repeat(g.index(4)),
@@ -1031,11 +1333,33 @@ mod tests {
                     vmems: g.vec_of(0, 3, rand_mat),
                 },
                 4 => Frame::Drain { clip: g.u64() },
-                _ => Frame::Error {
+                5 => Frame::Error {
                     message: "e".repeat(g.index(40)),
+                },
+                6 => {
+                    let lanes = 1 + g.index(MAX_LANES);
+                    Frame::LaneBatchOpen {
+                        batch: g.u64(),
+                        clips: (0..lanes).map(|_| g.u64()).collect(),
+                    }
+                }
+                7 => Frame::LaneFrame {
+                    batch: g.u64(),
+                    seq: g.u64_in(0..=u32::MAX as u64) as u32,
+                    frame: rand_lane_frame(g),
+                },
+                _ => Frame::LaneTelemetry {
+                    batch: g.u64(),
+                    lanes: g.vec_of(1, 4, rand_lane_report),
                 },
             };
             let bytes = frame.to_bytes();
+            // the stamp is the kind's own dialect: v3 only for lane
+            // kinds, so v2 peers keep parsing scalar traffic
+            let stamped = u16::from_le_bytes([bytes[4], bytes[5]]);
+            if stamped != frame.wire_version() {
+                return false;
+            }
             matches!(Frame::from_bytes(&bytes), Ok((back, used))
                 if back == frame && used == bytes.len())
         });
@@ -1209,6 +1533,184 @@ mod tests {
         // the pristine frame still decodes
         let (back, _) = Frame::from_bytes(&good).unwrap();
         assert_eq!(back, frame);
+    }
+
+    /// Satellite (ISSUE 7): adversarial decodes of the v3 lane
+    /// messages — truncation at every prefix, lane counts 0 and >64,
+    /// inner-length overflow before allocation, corrupted checksums,
+    /// trailing bytes and v2↔v3 version skew must all come back as
+    /// `Error::Protocol`, never a panic.
+    #[test]
+    fn adversarial_lane_decodes_error_cleanly() {
+        let frame = Frame::LaneFrame {
+            batch: 9,
+            seq: 2,
+            frame: sample_lane_frame(11),
+        };
+        let good = frame.to_bytes();
+        // lane kinds are stamped v3 by construction
+        assert_eq!(u16::from_le_bytes([good[4], good[5]]), LANE_VERSION);
+
+        // truncation at every possible length
+        for n in 0..good.len() {
+            assert!(Frame::from_bytes(&good[..n]).is_err(), "prefix {n}");
+        }
+
+        // v2↔v3 skew: the identical payload under a v2 header is a
+        // typed version-skew rejection (the checksum only covers the
+        // payload, so nothing else is wrong with the frame)
+        let mut bad = good.clone();
+        bad[4..6].copy_from_slice(&2u16.to_le_bytes());
+        assert!(matches!(Frame::from_bytes(&bad), Err(Error::Protocol(m))
+            if m.contains("version skew")));
+
+        // a future version is rejected at the header, before payload
+        let mut bad = good.clone();
+        bad[4..6].copy_from_slice(&(VERSION + 1).to_le_bytes());
+        assert!(matches!(Frame::from_bytes(&bad), Err(Error::Protocol(m))
+            if m.contains("unsupported protocol version")));
+
+        // corrupted checksum
+        let mut bad = good.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0xff;
+        assert!(matches!(Frame::from_bytes(&bad), Err(Error::Protocol(m))
+            if m.contains("checksum")));
+
+        // flipped payload bits: the checksum catches every position
+        for i in HEADER_LEN..good.len() - 4 {
+            let mut bad = good.clone();
+            bad[i] ^= 0x10;
+            assert!(matches!(Frame::from_bytes(&bad), Err(Error::Protocol(m))
+                if m.contains("checksum")));
+        }
+
+        let reframe = |kind: u8, payload: &[u8]| {
+            let mut evil = Vec::new();
+            evil.extend_from_slice(&MAGIC);
+            evil.extend_from_slice(&LANE_VERSION.to_le_bytes());
+            evil.push(kind);
+            evil.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+            evil.extend_from_slice(payload);
+            evil.extend_from_slice(&checksum(payload).to_le_bytes());
+            evil
+        };
+
+        // lane count 0 — in an open and in a lane frame
+        for kind in [7u8, 8u8] {
+            let mut w = Wr::new();
+            w.u64(9); // batch
+            if kind == 8 {
+                w.u32(0); // seq
+            }
+            w.u8(0); // zero lanes
+            assert!(matches!(
+                Frame::from_bytes(&reframe(kind, &w.buf)),
+                Err(Error::Protocol(m)) if m.contains("lane count")
+            ));
+        }
+
+        // lane count 65 (> MAX_LANES), again for both kinds
+        for kind in [7u8, 8u8] {
+            let mut w = Wr::new();
+            w.u64(9);
+            if kind == 8 {
+                w.u32(0);
+            }
+            w.u8(65);
+            assert!(matches!(
+                Frame::from_bytes(&reframe(kind, &w.buf)),
+                Err(Error::Protocol(m)) if m.contains("lane count")
+            ));
+        }
+
+        // inner-length overflow before allocation: a lane plane whose
+        // claimed shape would dwarf the payload is rejected before any
+        // buffer is sized from it
+        let mut w = Wr::new();
+        w.u64(9); // batch
+        w.u32(0); // seq
+        w.u8(64); // max lanes…
+        w.u32(u32::MAX);
+        w.u32(u32::MAX);
+        w.u32(u32::MAX); // …on an absurd shape with no bytes behind it
+        assert!(matches!(
+            Frame::from_bytes(&reframe(8, &w.buf)),
+            Err(Error::Protocol(m)) if m.contains("oversized lane plane")
+        ));
+
+        // a plausible shape whose packed bits are simply missing
+        let mut w = Wr::new();
+        w.u64(9);
+        w.u32(0);
+        w.u8(64);
+        w.u32(2);
+        w.u32(16);
+        w.u32(16); // 512 cells x 64 lanes = 4 KiB of bits, absent
+        assert!(matches!(
+            Frame::from_bytes(&reframe(8, &w.buf)),
+            Err(Error::Protocol(m)) if m.contains("truncated payload")
+        ));
+
+        // lane telemetry claiming absurd step counts caps before
+        // allocating
+        let mut w = Wr::new();
+        w.u64(9); // batch
+        w.u8(1); // one lane
+        w.u32(u32::MAX); // steps count: 32 GiB of telemetry
+        assert!(matches!(
+            Frame::from_bytes(&reframe(9, &w.buf)),
+            Err(Error::Protocol(m)) if m.contains("length prefix")
+        ));
+
+        // trailing bytes after a correctly-checksummed lane payload
+        let mut w = Frame::LaneBatchOpen {
+            batch: 9,
+            clips: vec![9, 10],
+        }
+        .encode_payload();
+        w.push(0xEE);
+        assert!(matches!(
+            Frame::from_bytes(&reframe(7, &w)),
+            Err(Error::Protocol(m)) if m.contains("trailing")
+        ));
+
+        // the pristine frame still decodes (the cases above were real)
+        let (back, ver, _) = Frame::from_bytes_versioned(&good).unwrap();
+        assert_eq!(back, frame);
+        assert_eq!(ver, LANE_VERSION);
+    }
+
+    /// The v2 grammar survives unchanged: scalar frames stamp v2,
+    /// decode under v2 headers, and surface the negotiated version —
+    /// and a lane plane's bit payload is `lanes` bits per cell, not 64.
+    #[test]
+    fn v2_scalar_frames_still_decode_and_lane_packing_is_compact() {
+        let drain = Frame::Drain { clip: 1 };
+        let bytes = drain.to_bytes();
+        assert_eq!(u16::from_le_bytes([bytes[4], bytes[5]]), MIN_VERSION);
+        let (back, ver, used) = Frame::from_bytes_versioned(&bytes).unwrap();
+        assert_eq!((back, ver, used), (drain.clone(), MIN_VERSION, bytes.len()));
+        // the same scalar frame under a v3 stamp also decodes (a v3
+        // peer may legitimately stamp high)
+        let v3 = drain.to_bytes_versioned(VERSION);
+        let (back, ver, _) = Frame::from_bytes_versioned(&v3).unwrap();
+        assert_eq!((back, ver), (drain, VERSION));
+
+        // wire cost: an 11-lane frame over 2x3x4 cells packs 24*11
+        // bits = 33 bytes (+ shape/ids/framing), far below 11 scalar
+        // frames
+        let lane = Frame::LaneFrame {
+            batch: 0,
+            seq: 0,
+            frame: sample_lane_frame(11),
+        };
+        let scalar = Frame::SpikeFrame {
+            clip: 0,
+            seq: 0,
+            plane: SpikePlane::zeros(2, 3, 4),
+        };
+        assert!(lane.to_bytes().len() < 11 * scalar.to_bytes().len());
     }
 
     /// Build a small random-but-valid network for workload codec tests

@@ -42,6 +42,63 @@ pub fn unpack_bytes(packed: &[u8], cells: usize) -> Vec<u8> {
     out
 }
 
+/// Pack lane words into a contiguous LSB-first bitstream, `lanes` bits
+/// per word: cell `i` occupies bits `i*lanes .. (i+1)*lanes` of the
+/// stream, low lane first. Bits at or above `lanes` are masked off
+/// (lane words are `lanes`-bit by contract). This is the wire layout
+/// for a lane frame (`net/wire.rs` v3): at `lanes = 64` a cell costs
+/// exactly one `u64`, at `lanes = 1` the stream degenerates to
+/// [`pack_bytes`] of the single lane.
+pub fn pack_words(words: &[u64], lanes: usize) -> Vec<u8> {
+    assert!((1..=64).contains(&lanes), "lane width {lanes} outside 1..=64");
+    let total_bits = words.len() * lanes;
+    let mut out = vec![0u8; total_bits.div_ceil(8)];
+    let mask = lane_mask(lanes);
+    for (i, &w) in words.iter().enumerate() {
+        let bit = i * lanes;
+        let (byte, off) = (bit / 8, bit % 8);
+        let last = (bit + lanes - 1) / 8;
+        // off <= 7 and lanes <= 64, so the shifted value spans at most
+        // 71 bits — a u128 holds it with room to spare
+        let mut chunk = ((w & mask) as u128) << off;
+        for slot in out[byte..=last].iter_mut() {
+            *slot |= (chunk & 0xff) as u8;
+            chunk >>= 8;
+        }
+    }
+    out
+}
+
+/// Unpack `cells` lane words of `lanes` bits each from an LSB-first
+/// bitstream produced by [`pack_words`]. `packed` must hold at least
+/// `(cells * lanes).div_ceil(8)` bytes; bits above `lanes` in each
+/// output word are always clear.
+pub fn unpack_words(packed: &[u8], cells: usize, lanes: usize) -> Vec<u64> {
+    assert!((1..=64).contains(&lanes), "lane width {lanes} outside 1..=64");
+    debug_assert!(packed.len() >= (cells * lanes).div_ceil(8));
+    let mask = lane_mask(lanes);
+    let mut out = vec![0u64; cells];
+    for (i, w) in out.iter_mut().enumerate() {
+        let bit = i * lanes;
+        let (byte, off) = (bit / 8, bit % 8);
+        let last = (bit + lanes - 1) / 8;
+        let mut chunk: u128 = 0;
+        for (j, &b) in packed[byte..=last].iter().enumerate() {
+            chunk |= (b as u128) << (8 * j);
+        }
+        *w = ((chunk >> off) as u64) & mask;
+    }
+    out
+}
+
+fn lane_mask(lanes: usize) -> u64 {
+    if lanes == 64 {
+        u64::MAX
+    } else {
+        (1u64 << lanes) - 1
+    }
+}
+
 /// Count nonzero cells through the packed representation: fold 64
 /// cells at a time into a `u64` and popcount it — the hot-path
 /// replacement for the byte-at-a-time sum (§Perf), equivalence-tested
@@ -102,6 +159,47 @@ mod tests {
             let cells: Vec<u8> = (0..n).map(|_| g.chance(0.5) as u8).collect();
             let packed = pack_bytes(&cells);
             pack_bytes(&unpack_bytes(&packed, n)) == packed
+        });
+    }
+
+    /// Satellite (ISSUE 7): the lane bitstream must round-trip for
+    /// every lane width, including the dense 64-lane case and widths
+    /// that straddle byte boundaries.
+    #[test]
+    fn prop_pack_unpack_words_roundtrip() {
+        check("bitpack_words_roundtrip", 50, |g| {
+            let lanes = 1 + g.index(64);
+            let n = g.index(200);
+            let mask = super::lane_mask(lanes);
+            let words: Vec<u64> = (0..n).map(|_| g.u64() & mask).collect();
+            let packed = pack_words(&words, lanes);
+            packed.len() == (n * lanes).div_ceil(8) && unpack_words(&packed, n, lanes) == words
+        });
+    }
+
+    /// Bits at or above the lane width never survive the wire: they are
+    /// masked on pack, so a round trip normalizes them away.
+    #[test]
+    fn prop_pack_words_masks_stray_high_bits() {
+        check("bitpack_words_mask", 50, |g| {
+            let lanes = 1 + g.index(63); // leave headroom for stray bits
+            let n = 1 + g.index(100);
+            let words: Vec<u64> = (0..n).map(|_| g.u64()).collect();
+            let mask = super::lane_mask(lanes);
+            let want: Vec<u64> = words.iter().map(|&w| w & mask).collect();
+            unpack_words(&pack_words(&words, lanes), n, lanes) == want
+        });
+    }
+
+    /// At one lane the word stream is exactly the byte stream: the two
+    /// codecs share a single LSB-first layout.
+    #[test]
+    fn prop_one_lane_matches_byte_packing() {
+        check("bitpack_words_vs_bytes", 50, |g| {
+            let n = g.index(300);
+            let cells: Vec<u8> = (0..n).map(|_| g.chance(0.3) as u8).collect();
+            let words: Vec<u64> = cells.iter().map(|&c| c as u64).collect();
+            pack_words(&words, 1) == pack_bytes(&cells)
         });
     }
 

@@ -120,6 +120,28 @@ impl LaneFrame {
         LaneFrame { plane, lanes }
     }
 
+    /// Validated lane-major constructor for deserialization paths (the
+    /// wire codec's v3 lane frames): the lane count must be in
+    /// `1..=MAX_LANES` and no cell may carry a spike bit at or above it
+    /// — a corrupted frame must not smuggle spikes into lanes that were
+    /// never opened.
+    pub fn from_plane_checked(plane: LanePlane, lanes: usize) -> Result<LaneFrame> {
+        if lanes == 0 || lanes > MAX_LANES {
+            return Err(Error::config(format!(
+                "lane count {lanes} outside 1..={MAX_LANES}"
+            )));
+        }
+        if lanes < MAX_LANES {
+            let stray = !((1u64 << lanes) - 1);
+            if plane.as_slice().iter().any(|&w| w & stray != 0) {
+                return Err(Error::config(format!(
+                    "lane plane carries spike bits at or above lane {lanes}"
+                )));
+            }
+        }
+        Ok(LaneFrame { plane, lanes })
+    }
+
     /// Occupied bit-lanes (the batch size).
     pub fn lanes(&self) -> usize {
         self.lanes
