@@ -24,6 +24,17 @@
 //! # lane-batch smoke; loopback runs this by default with N=64):
 //! cargo run --release --example distributed -- \
 //!     --connect 127.0.0.1:7405,127.0.0.1:7406 --batch 64
+//!
+//! # congestion-adaptive windows: a deliberately skewed loopback
+//! # constellation (one throttled, high-latency hop) served with the
+//! # fixed default window, then with stall-driven retuning — asserts
+//! # the retuned schedule wins >=1.2x, bit-identical (the CI
+//! # auto-tune smoke):
+//! cargo run --release --example distributed -- --autotune
+//!
+//! # deadline-bounded lane-batch assembly on the streaming server
+//! # (DESIGN.md §Planner), with per-hop stage metrics surfaced:
+//! cargo run --release --example distributed -- --deadline-us 2000
 //! ```
 //!
 //! Either way the example acts as the coordinator: it builds the
@@ -38,10 +49,13 @@
 
 use std::time::{Duration, Instant};
 
-use spidr::coordinator::{Engine, ReferenceEngine};
-use spidr::net::{DistributedConfig, DistributedEngine, TcpTransport, Transport};
+use spidr::coordinator::{
+    Engine, FunctionalEngine, InferenceServer, ReferenceEngine, ServerConfig,
+};
+use spidr::dvs::event::{Event, Polarity};
+use spidr::net::{DistributedConfig, DistributedEngine, LinkSpec, TcpTransport, Transport};
 use spidr::prop::SplitMix64;
-use spidr::snn::network::{demo_pipeline_network, Network};
+use spidr::snn::network::{demo_pipeline_network, demo_serving_network, Network};
 use spidr::snn::spikes::{SpikePlane, MAX_LANES};
 
 const TIMESTEPS: usize = 12;
@@ -107,8 +121,154 @@ fn flag_value(args: &[String], name: &str) -> Option<String> {
         .and_then(|i| args.get(i + 1).cloned())
 }
 
+/// `--autotune` mode: a deliberately skewed loopback constellation —
+/// the middle hop crosses a throttled, high-latency link while the
+/// outer hops stay in-process — served first with the fixed default
+/// window, then after stall-driven window retuning
+/// (`DistributedEngine::retune_windows`, DESIGN.md §Planner). Asserts
+/// the retuned schedule beats the fixed one by >=1.2x on lane-batch
+/// wall time with bit-identical outputs (the CI auto-tune smoke's
+/// oracle).
+fn run_autotune() -> spidr::Result<()> {
+    const LANES: usize = 8;
+    const REPS: usize = 3;
+    let net = demo_pipeline_network(TIMESTEPS)?;
+    let links = [
+        LinkSpec::loopback(),
+        LinkSpec::new(64 << 20, 1_500),
+        LinkSpec::loopback(),
+    ];
+    let cfg = DistributedConfig {
+        shards: 3,
+        window: 2,
+        replicas: 1,
+    };
+
+    let clips: Vec<Vec<SpikePlane>> = (0..LANES)
+        .map(|i| random_clip(&net, 4000 + i as u64))
+        .collect();
+    let refs: Vec<&[SpikePlane]> = clips.iter().map(|c| c.as_slice()).collect();
+    let mut reference = ReferenceEngine::new(net.clone())?;
+    let want: Vec<Vec<i32>> = clips
+        .iter()
+        .map(|c| reference.infer(c))
+        .collect::<spidr::Result<_>>()?;
+
+    let best_batch_us = |engine: &mut DistributedEngine| -> spidr::Result<f64> {
+        let mut best = f64::INFINITY;
+        for _ in 0..REPS {
+            let t0 = Instant::now();
+            let got = engine.infer_batch(&refs)?;
+            best = best.min(t0.elapsed().as_secs_f64() * 1e6);
+            assert_eq!(got, want, "skewed-constellation outputs diverged");
+        }
+        Ok(best)
+    };
+
+    let mut fixed = DistributedEngine::loopback_throttled(net.clone(), &cfg, &links)?;
+    println!(
+        "skewed constellation (64 MB/s, 1.5 ms middle hop), fixed windows {:?}...",
+        fixed.windows()
+    );
+    let base = best_batch_us(&mut fixed)?;
+
+    let mut tuned = DistributedEngine::loopback_throttled(net.clone(), &cfg, &links)?;
+    for round in 0..8 {
+        let got = tuned.infer_batch(&refs)?;
+        assert_eq!(got, want, "outputs diverged during retune round {round}");
+        if !tuned.retune_windows(1, 16) {
+            break;
+        }
+    }
+    println!("stall-driven retune settled on windows {:?}", tuned.windows());
+    let auto = best_batch_us(&mut tuned)?;
+
+    let speedup = base / auto;
+    println!(
+        "{LANES}-lane batches x {TIMESTEPS} steps: fixed {base:.0} us vs \
+         autotuned {auto:.0} us ({speedup:.2}x)"
+    );
+    assert!(
+        speedup >= 1.2,
+        "window autotuning must win >=1.2x on the skewed constellation, got {speedup:.2}x"
+    );
+    println!("autotune: outputs bit-identical under both schedules: ok");
+    Ok(())
+}
+
+/// One synthetic DVS burst over the serving-demo clip window.
+fn event_burst(seed: u64) -> Vec<Event> {
+    let mut rng = SplitMix64::new(seed);
+    (0..180)
+        .map(|_| Event {
+            y: rng.below(16) as u16,
+            x: rng.below(16) as u16,
+            polarity: if rng.chance(0.5) {
+                Polarity::On
+            } else {
+                Polarity::Off
+            },
+            t_us: rng.below(TIMESTEPS as u64 * 1000) as u32,
+        })
+        .collect()
+}
+
+/// `--deadline-us` mode: the streaming server over a self-hosted
+/// distributed engine with deadline-bounded lane-batch assembly — the
+/// drain loop holds a filling batch up to the deadline for same-length
+/// stragglers (DESIGN.md §Planner) — and the per-hop stage counters
+/// surfaced in [`spidr::coordinator::Metrics`].
+fn run_deadline_demo(deadline_us: u32) -> spidr::Result<()> {
+    let net = demo_serving_network(TIMESTEPS)?;
+    let cfg = ServerConfig {
+        height: 16,
+        width: 16,
+        timesteps: TIMESTEPS,
+        bin_us: 1000,
+        queue_depth: 8,
+        distributed: Some(DistributedConfig::with_shards(2)),
+        deadline_us,
+        ..Default::default()
+    };
+    let requests: Vec<Vec<Event>> = (0..24).map(|i| event_burst(700 + i)).collect();
+    let mut engine = FunctionalEngine::from_config(net, cfg.pipeline, cfg.distributed, cfg.batch)?;
+    let server = InferenceServer::new(cfg);
+    let (responses, metrics) = server.serve(requests, &mut engine)?;
+    assert!(
+        responses.windows(2).all(|w| w[0].id < w[1].id),
+        "deadline assembly must preserve arrival order"
+    );
+    assert!(
+        !metrics.stages.is_empty(),
+        "distributed hop metrics must surface in Metrics::stages"
+    );
+    println!(
+        "deadline serve: {} clips under a {deadline_us} us assembly deadline, \
+         p50 {} us, wall {:?}",
+        responses.len(),
+        metrics.percentile_us(50.0),
+        metrics.wall
+    );
+    for sm in &metrics.stages {
+        println!(
+            "  hop {}: {} frames, occupancy {:.0}%, {} stall samples",
+            sm.stage,
+            sm.steps,
+            sm.occupancy() * 100.0,
+            sm.stall_samples
+        );
+    }
+    Ok(())
+}
+
 fn main() -> spidr::Result<()> {
     let args: Vec<String> = std::env::args().collect();
+    if args.iter().any(|a| a == "--autotune") {
+        return run_autotune();
+    }
+    if let Some(deadline_us) = flag_value(&args, "--deadline-us").and_then(|v| v.parse().ok()) {
+        return run_deadline_demo(deadline_us);
+    }
     let connect = flag_value(&args, "--connect");
     let replicas: usize = flag_value(&args, "--replicas")
         .and_then(|v| v.parse().ok())

@@ -27,16 +27,28 @@
 //!   for the same 64 clips on the same constellation (how much of the
 //!   per-frame wire cost the lane batch amortizes; 64·(T+1)/(T+2) ≈
 //!   59x at T=12).
+//! * `planner_modeled_us` / `planner_measured_us` — the deployment
+//!   planner's makespan model (DESIGN.md §Planner, calibrated from a
+//!   reference clip + a 1-shard loopback clip) against measured clip
+//!   latency per topology: x = 2 (2-shard plain), 3 (3-shard plain),
+//!   4 (3-shard skewed: one 64 MB/s, 1.5 ms link). Asserted to agree
+//!   within 30% on every topology.
+//! * `window_autotune_speedup` — lane-batch wall-time ratio of the
+//!   fixed default window schedule over the stall-driven retuned one
+//!   on the skewed constellation (asserted ≥ 1.2x, bit-identical).
 //!
 //! Outputs are asserted bit-identical to the reference on every
-//! topology — including across the replica kill — so this bench
-//! doubles as an end-to-end equivalence smoke over both transports
-//! and the failover path.
+//! topology — including across the replica kill and under every window
+//! schedule — so this bench doubles as an end-to-end equivalence smoke
+//! over both transports, the failover path, and the retuner.
 
 mod common;
 
 use spidr::coordinator::{Engine, ReferenceEngine};
-use spidr::net::{DistributedConfig, DistributedEngine, ShardHost, TcpTransport, Transport};
+use spidr::net::plan::modeled_clip_us;
+use spidr::net::{
+    CostModel, DistributedConfig, DistributedEngine, LinkSpec, ShardHost, TcpTransport, Transport,
+};
 use spidr::snn::network::demo_pipeline_network;
 use spidr::snn::spikes::SpikePlane;
 
@@ -53,6 +65,23 @@ fn best_latency_us<E: Engine>(engine: &mut E, clip: &[SpikePlane]) -> f64 {
     best
 }
 
+/// Emit one planner model-vs-measurement pair and gate the 30%
+/// agreement band the plan is only trustworthy inside.
+fn check_model(x: f64, modeled_us: f64, measured_us: f64) {
+    println!(
+        "planner model @ x={x}: modeled {modeled_us:.0} us vs measured {measured_us:.0} us \
+         ({:+.0}%)",
+        (modeled_us / measured_us - 1.0) * 100.0
+    );
+    common::emit("planner_modeled_us", x, modeled_us);
+    common::emit("planner_measured_us", x, measured_us);
+    assert!(
+        (modeled_us / measured_us - 1.0).abs() <= 0.30,
+        "planner model off by more than 30% at x={x}: modeled {modeled_us:.0} us, \
+         measured {measured_us:.0} us"
+    );
+}
+
 fn main() {
     common::header(
         "distributed",
@@ -67,6 +96,20 @@ fn main() {
     println!("local reference: {local_us:.0} us/clip ({TIMESTEPS} steps, 5 stateful layers)");
     common::emit("clip_latency_local_us", 1.0, local_us);
 
+    // Calibrate the planner's two cost knobs on this machine: the
+    // reference clip pins per-synop compute; a 1-shard plain loopback
+    // clip pins per-frame wire overhead (DESIGN.md §Planner).
+    let mut calib = DistributedEngine::loopback(net.clone(), &DistributedConfig::with_shards(1))
+        .expect("calibration constellation");
+    let got = calib.infer(&clip).expect("calibration clip");
+    assert_eq!(got, want, "calibration output diverged");
+    let calib_us = best_latency_us(&mut calib, &clip);
+    let cost = CostModel::calibrate(&net, local_us, calib_us);
+    println!(
+        "calibrated cost model: {:.2e} us/synop, {:.1} us/frame overhead",
+        cost.per_synop_us, cost.per_frame_overhead_us
+    );
+
     for shards in [2usize, 3] {
         // Loopback: the whole wire path, no sockets.
         let cfg = DistributedConfig::with_shards(shards);
@@ -76,6 +119,19 @@ fn main() {
         assert_eq!(got, want, "loopback output diverged at {shards} shards");
         let loopback_us = best_latency_us(&mut loopback, &clip);
         common::emit("clip_latency_loopback_us", shards as f64, loopback_us);
+
+        // Planner model vs measurement on the plain topology: loopback
+        // links, the engine's own groups and uniform default windows.
+        let plain_links = vec![LinkSpec::loopback(); shards];
+        let modeled = modeled_clip_us(
+            &net,
+            loopback.groups(),
+            &plain_links,
+            loopback.windows(),
+            &cost,
+        )
+        .expect("modeled makespan");
+        check_model(shards as f64, modeled, loopback_us);
 
         // TCP: the same shard hosts behind real localhost sockets.
         let mut links: Vec<Box<dyn Transport>> = Vec::new();
@@ -169,4 +225,69 @@ fn main() {
     );
     common::emit("distributed_batched_clips_per_s", 64.0, clips_per_s);
     common::emit("wire_amortization_ratio", 64.0, ratio);
+
+    // Planner vs measurement on a skewed wire topology, then the
+    // stall-driven retuner (DESIGN.md §Planner): the middle hop of a
+    // 3-shard constellation crosses a throttled 64 MB/s, 1.5 ms link,
+    // so the uniform default window leaves most of that hop's
+    // bandwidth-delay product unfilled.
+    let skew_links = [
+        LinkSpec::loopback(),
+        LinkSpec::new(64 << 20, 1_500),
+        LinkSpec::loopback(),
+    ];
+    let cfg = DistributedConfig::with_shards(3);
+    let mut skewed = DistributedEngine::loopback_throttled(net.clone(), &cfg, &skew_links)
+        .expect("skewed constellation");
+    let got = skewed.infer(&clip).expect("skewed clip");
+    assert_eq!(got, want, "skewed output diverged");
+    let skewed_us = best_latency_us(&mut skewed, &clip);
+    let modeled = modeled_clip_us(&net, skewed.groups(), &skew_links, skewed.windows(), &cost)
+        .expect("skewed modeled makespan");
+    check_model(4.0, modeled, skewed_us);
+
+    // Fixed default windows vs stall-driven retuning on lane batches
+    // over the same skewed constellation: the congestion-adaptive
+    // acceptance gate.
+    const LANES: u64 = 8;
+    let bclips: Vec<Vec<SpikePlane>> = (0..LANES)
+        .map(|i| common::random_clip(2, 24, 24, TIMESTEPS, 0.2, 500 + i))
+        .collect();
+    let mut bwant = Vec::new();
+    for c in &bclips {
+        bwant.push(local.infer(c).expect("reference clip"));
+    }
+    let brefs: Vec<&[SpikePlane]> = bclips.iter().map(|c| c.as_slice()).collect();
+    let batch_best = |engine: &mut DistributedEngine| -> f64 {
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            let (got, secs) = common::timed(|| engine.infer_batch(&brefs).expect("lane batch"));
+            assert_eq!(got, bwant, "skewed lane-batch outputs diverged");
+            best = best.min(secs * 1e6);
+        }
+        best
+    };
+    let fixed_us = batch_best(&mut skewed);
+    let mut tuned = DistributedEngine::loopback_throttled(net.clone(), &cfg, &skew_links)
+        .expect("retuned constellation");
+    for _ in 0..8 {
+        let got = tuned.infer_batch(&brefs).expect("retune batch");
+        assert_eq!(got, bwant, "outputs diverged during retuning");
+        if !tuned.retune_windows(1, 16) {
+            break;
+        }
+    }
+    let tuned_us = batch_best(&mut tuned);
+    let speedup = fixed_us / tuned_us;
+    println!(
+        "skewed 3-shard constellation: fixed windows {:?} {fixed_us:.0} us/batch vs \
+         retuned {:?} {tuned_us:.0} us/batch ({speedup:.2}x)",
+        skewed.windows(),
+        tuned.windows(),
+    );
+    common::emit("window_autotune_speedup", LANES as f64, speedup);
+    assert!(
+        speedup >= 1.2,
+        "stall-driven window retuning must beat the fixed default by >=1.2x, got {speedup:.2}x"
+    );
 }

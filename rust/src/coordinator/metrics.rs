@@ -34,6 +34,13 @@ pub struct StageMetrics {
     /// Wall time between this stage finishing its last timestep and
     /// the whole pipeline completing (the drain tail behind it).
     pub drain: Duration,
+    /// How many stall timings were actually taken: channel operations
+    /// that would have blocked, and therefore paid an `Instant::now()`
+    /// pair. Fast-path operations (the channel was ready) take no
+    /// timestamp at all, so `stall_samples` staying low under load is
+    /// the proof the per-frame timer overhead is gone
+    /// (`timed_stall_sampling_skips_the_fast_path`).
+    pub stall_samples: u64,
 }
 
 impl StageMetrics {
@@ -65,6 +72,7 @@ impl StageMetrics {
         self.stall_out += other.stall_out;
         self.fill += other.fill;
         self.drain += other.drain;
+        self.stall_samples += other.stall_samples;
     }
 }
 
@@ -256,6 +264,7 @@ mod tests {
         s0.busy = Duration::from_millis(30);
         s0.stall_in = Duration::from_millis(5);
         s0.stall_out = Duration::from_millis(5);
+        s0.stall_samples = 3;
         assert!((s0.occupancy() - 0.75).abs() < 1e-9);
         assert_eq!(StageMetrics::new(1, (2, 3)).occupancy(), 0.0);
 
@@ -266,6 +275,7 @@ mod tests {
         assert_eq!(acc.steps, 8);
         assert_eq!(acc.busy, Duration::from_millis(60));
         assert_eq!(acc.stall_in, Duration::from_millis(10));
+        assert_eq!(acc.stall_samples, 6);
 
         let mut m = Metrics::new();
         m.stages = vec![s0, StageMetrics::new(1, (2, 3))];

@@ -353,6 +353,10 @@ impl Engine for PipelinedEngine {
             .map(|m| m.as_slice().to_vec())
             .unwrap_or_default())
     }
+
+    fn stage_metrics(&self) -> Vec<StageMetrics> {
+        PipelinedEngine::stage_metrics(self).to_vec()
+    }
 }
 
 /// The functional engine a server/pool config selects: sequential
@@ -408,7 +412,8 @@ impl FunctionalEngine {
     }
 
     /// Accumulated per-stage counters (empty for the reference and
-    /// batched variants) — attach to `Metrics::stages` after serving.
+    /// batched variants) — `serve`/`serve_pool` attach these to
+    /// `Metrics::stages` automatically via [`Engine::stage_metrics`].
     pub fn stage_metrics(&self) -> &[StageMetrics] {
         match self {
             FunctionalEngine::Reference(_) => &[],
@@ -447,6 +452,10 @@ impl Engine for FunctionalEngine {
             FunctionalEngine::Distributed(e) => e.infer_batch(clips),
             _ => clips.iter().map(|c| self.infer(c)).collect(),
         }
+    }
+
+    fn stage_metrics(&self) -> Vec<StageMetrics> {
+        FunctionalEngine::stage_metrics(self).to_vec()
     }
 }
 

@@ -32,7 +32,7 @@ use crate::net::coordinator::DistributedConfig;
 use crate::snn::spikes::SpikePlane;
 
 use super::batch::BatchConfig;
-use super::metrics::WorkerMetrics;
+use super::metrics::{StageMetrics, WorkerMetrics};
 use super::pipeline::PipelineConfig;
 use super::server::Engine;
 
@@ -112,6 +112,13 @@ pub struct PoolConfig {
     /// Dynamic sizing between a min/max worker count (`None` keeps the
     /// fixed `workers` count).
     pub sizing: Option<PoolSizing>,
+    /// Deadline-bounded batch assembly (DESIGN.md §Planner): a
+    /// batch-capable worker that fetched a clip holds its filling
+    /// batch up to this long, gathering only same-length stragglers
+    /// from its inbox (`SharedQueue::drain_own_matching`), before
+    /// dispatching. `0` keeps the legacy non-blocking drain that
+    /// batches whatever is already queued regardless of clip length.
+    pub deadline_us: u32,
 }
 
 impl Default for PoolConfig {
@@ -124,6 +131,7 @@ impl Default for PoolConfig {
             distributed: None,
             batch: None,
             sizing: None,
+            deadline_us: 0,
         }
     }
 }
@@ -188,6 +196,13 @@ pub struct PoolRun<O> {
     /// id can be revived by a later grow, so `worker` ids may repeat
     /// across entries; `inbox_high_water` is tracked per slot.
     pub workers: Vec<WorkerMetrics>,
+    /// Per-stage counters aggregated across every worker's engine
+    /// (indexed by stage, each worker's stage *i* absorbed into entry
+    /// *i*). Empty when worker engines expose no stages (satellite:
+    /// [`InferenceServer::serve_pool`](super::server::InferenceServer::serve_pool)
+    /// surfaces these in
+    /// [`Metrics::stages`](super::metrics::Metrics::stages)).
+    pub stages: Vec<StageMetrics>,
 }
 
 /// Everything a worker sends to the emission stage.
@@ -434,6 +449,54 @@ impl SharedQueue {
         jobs
     }
 
+    /// Deadline-bounded gather (DESIGN.md §Planner): pull up to
+    /// `limit` more jobs whose clip length matches `timesteps` off
+    /// worker `me`'s own inbox, waiting up to `hold` for stragglers
+    /// while the batch is unfilled. Mismatched clips are left queued
+    /// (they anchor a later batch), so one engine call never mixes
+    /// clip lengths. Every removal frees an inbox slot and wakes the
+    /// dispatcher — crucial here, since the whole point of the hold is
+    /// to let more arrivals join the batch.
+    fn drain_own_matching(
+        &self,
+        me: usize,
+        timesteps: usize,
+        limit: usize,
+        hold: Duration,
+    ) -> Vec<ClipJob> {
+        if limit == 0 {
+            return Vec::new();
+        }
+        let hold_until = Instant::now() + hold;
+        let mut st = self.state.lock().unwrap();
+        let mut jobs = Vec::new();
+        loop {
+            let before = jobs.len();
+            let mut i = 0;
+            while jobs.len() < limit && i < st.inboxes[me].len() {
+                if st.inboxes[me][i].frames.len() == timesteps {
+                    let job = st.inboxes[me].remove(i).expect("index in range");
+                    jobs.push(job);
+                } else {
+                    i += 1;
+                }
+            }
+            if jobs.len() > before {
+                self.space.notify_all();
+            }
+            if jobs.len() >= limit || st.closed || st.aborted {
+                return jobs;
+            }
+            let now = Instant::now();
+            let left = match hold_until.checked_duration_since(now) {
+                Some(left) if !left.is_zero() => left,
+                _ => return jobs,
+            };
+            let (next_st, _timeout) = self.work.wait_timeout(st, left).unwrap();
+            st = next_st;
+        }
+    }
+
     /// Mark the job stream exhausted and wake every waiting worker.
     fn close(&self) {
         let mut st = self.state.lock().unwrap();
@@ -466,7 +529,11 @@ impl SharedQueue {
 
 /// Body of one worker thread: build the engine, serve jobs until the
 /// queue closes (or the worker retires under dynamic sizing), and
-/// account busy/idle/steal counters.
+/// account busy/idle/steal counters. Returns the worker counters plus
+/// whatever per-stage counters the engine accumulated
+/// ([`Engine::stage_metrics`]), so the pool can aggregate hop/stage
+/// telemetry across workers. A non-zero `hold` switches the batch
+/// gather to deadline-bounded, length-matched assembly.
 fn worker_loop<E, F>(
     me: usize,
     queue: &SharedQueue,
@@ -474,7 +541,8 @@ fn worker_loop<E, F>(
     results: Sender<WorkerResult<E::Output>>,
     steal: StealPolicy,
     shrink: Option<(Duration, usize)>,
-) -> WorkerMetrics
+    hold: Duration,
+) -> (WorkerMetrics, Vec<StageMetrics>)
 where
     E: Engine,
     F: Fn(usize) -> Result<E>,
@@ -509,7 +577,7 @@ where
             let _ = results.send(Err(e));
             guard.armed = false;
             wm.inbox_high_water = queue.worker_exit(me);
-            return wm;
+            return (wm, Vec::new());
         }
     };
     'serve: loop {
@@ -527,7 +595,7 @@ where
                 wm.retired = true;
                 wm.inbox_high_water = high_water;
                 guard.armed = false;
-                return wm;
+                return (wm, engine.stage_metrics());
             }
         };
         wm.idle += wait0.elapsed();
@@ -541,7 +609,12 @@ where
         let cap = engine.max_batch().max(1);
         let mut jobs = vec![job];
         if cap > 1 {
-            jobs.extend(queue.drain_own(me, cap - 1));
+            if hold.is_zero() {
+                jobs.extend(queue.drain_own(me, cap - 1));
+            } else {
+                let timesteps = jobs[0].frames.len();
+                jobs.extend(queue.drain_own_matching(me, timesteps, cap - 1, hold));
+            }
         }
         let clips: Vec<&[SpikePlane]> = jobs.iter().map(|j| j.frames.as_slice()).collect();
         let busy0 = Instant::now();
@@ -581,7 +654,7 @@ where
     }
     guard.armed = false;
     wm.inbox_high_water = queue.worker_exit(me);
-    wm
+    (wm, engine.stage_metrics())
 }
 
 /// Drain a stream of [`ClipJob`]s through a pool of engine workers.
@@ -619,6 +692,7 @@ where
 {
     let depth = cfg.inbox_depth.max(1);
     let steal = cfg.steal;
+    let hold = Duration::from_micros(u64::from(cfg.deadline_us));
     // Fixed pools start all workers up front and never grow or shrink
     // (a grow limit of 0 disables growth; no shrink timeout).
     let (initial, grow_limit, shrink) = match cfg.sizing {
@@ -639,7 +713,7 @@ where
             let queue = &queue;
             let rtx = rtx.clone();
             handles.push(scope.spawn(move || {
-                worker_loop::<E, F>(wi, queue, factory, rtx, steal, shrink)
+                worker_loop::<E, F>(wi, queue, factory, rtx, steal, shrink, hold)
             }));
         }
 
@@ -692,7 +766,7 @@ where
                         let queue = &queue;
                         let rtx = rtx.clone();
                         handles.push(scope.spawn(move || {
-                            worker_loop::<E, F>(wi, queue, factory, rtx, steal, shrink)
+                            worker_loop::<E, F>(wi, queue, factory, rtx, steal, shrink, hold)
                         }));
                     }
                 }
@@ -704,14 +778,26 @@ where
         drop(rtx);
 
         let mut wm = Vec::with_capacity(handles.len());
+        let mut stages: Vec<StageMetrics> = Vec::new();
         for h in handles {
-            wm.push(h.join().expect("pool worker panicked"));
+            let (w, ws) = h.join().expect("pool worker panicked");
+            wm.push(w);
+            for (i, s) in ws.into_iter().enumerate() {
+                if stages.len() <= i {
+                    stages.push(StageMetrics::new(i, s.layers));
+                }
+                stages[i].absorb(&s);
+            }
         }
         let (clips, first_err) = emission.join().expect("emission stage panicked");
         if let Some(e) = first_err {
             return Err(e);
         }
-        Ok(PoolRun { clips, workers: wm })
+        Ok(PoolRun {
+            clips,
+            workers: wm,
+            stages,
+        })
     })
 }
 
@@ -1099,6 +1185,94 @@ mod tests {
             sizes.iter().any(|&s| s >= 2),
             "gated backlog never batched: {sizes:?}"
         );
+    }
+
+    /// Satellite (d), pool twin of the server's deadline assembly:
+    /// with `deadline_us` set, a batch-capable worker holds its
+    /// filling batch for same-length stragglers and never mixes clip
+    /// lengths in one engine call; mismatched clips anchor later
+    /// batches and nothing is lost or reordered. Also exercises the
+    /// stage-counter surfacing satellite: the worker engine's
+    /// [`Engine::stage_metrics`] aggregate into [`PoolRun::stages`].
+    #[test]
+    fn pool_deadline_assembles_length_matched_batches() {
+        let cfg = PoolConfig {
+            workers: 1,
+            inbox_depth: 8,
+            steal: StealPolicy::Steal,
+            deadline_us: 20_000,
+            ..PoolConfig::default()
+        };
+
+        struct LenProbe {
+            batches: Arc<Mutex<Vec<Vec<usize>>>>,
+            steps: u64,
+        }
+        impl Engine for LenProbe {
+            type Output = u64;
+            fn infer(&mut self, clip: &[SpikePlane]) -> Result<u64> {
+                Ok(clip.iter().map(|p| p.count_spikes()).sum())
+            }
+            fn max_batch(&self) -> usize {
+                8
+            }
+            fn infer_batch(&mut self, clips: &[&[SpikePlane]]) -> Result<Vec<u64>> {
+                let lens: Vec<usize> = clips.iter().map(|c| c.len()).collect();
+                self.steps += lens.iter().map(|&l| l as u64).sum::<u64>();
+                self.batches.lock().unwrap().push(lens);
+                clips.iter().map(|c| self.infer(c)).collect()
+            }
+            fn stage_metrics(&self) -> Vec<StageMetrics> {
+                let mut s = StageMetrics::new(0, (0, 1));
+                s.steps = self.steps;
+                vec![s]
+            }
+        }
+
+        fn tjob(seq: u64, timesteps: usize) -> ClipJob {
+            ClipJob {
+                seq,
+                t0: Instant::now(),
+                frames: vec![SpikePlane::zeros(1, 4, 4); timesteps],
+            }
+        }
+
+        // Rendezvous channel: mixed 1- and 2-frame clips, interleaved.
+        let (tx, rx) = sync_channel::<ClipJob>(0);
+        let producer = std::thread::spawn(move || {
+            for (seq, t) in [1usize, 2, 1, 2, 1, 1].into_iter().enumerate() {
+                tx.send(tjob(seq as u64, t)).unwrap();
+            }
+        });
+
+        let batches = Arc::new(Mutex::new(Vec::new()));
+        let batches_f = Arc::clone(&batches);
+        let run = run_pool(&cfg, rx, &move |_| {
+            Ok(LenProbe {
+                batches: Arc::clone(&batches_f),
+                steps: 0,
+            })
+        })
+        .unwrap();
+        producer.join().unwrap();
+
+        assert_eq!(run.clips.len(), 6);
+        assert!(run.clips.windows(2).all(|w| w[0].seq < w[1].seq));
+        let batches = batches.lock().unwrap();
+        for b in batches.iter() {
+            assert!(
+                b.windows(2).all(|w| w[0] == w[1]),
+                "mixed-length batch {b:?}"
+            );
+        }
+        assert_eq!(batches.iter().map(|b| b.len()).sum::<usize>(), 6);
+        // the hold actually assembled multi-clip batches out of
+        // same-length stragglers that trickled in behind the anchor
+        assert!(batches.iter().any(|b| b.len() >= 2), "{batches:?}");
+        // worker stage counters surfaced and aggregated: steps counts
+        // every frame served (4 one-frame + 2 two-frame clips)
+        assert_eq!(run.stages.len(), 1);
+        assert_eq!(run.stages[0].steps, 8);
     }
 
     /// Without a sizing policy the pool is exactly as static as

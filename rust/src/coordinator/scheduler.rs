@@ -338,6 +338,19 @@ pub fn plan_layer_groups(network: &Network, groups: usize) -> Vec<(usize, usize)
     balanced_partition(&costs, groups)
 }
 
+/// Per-group dense-synaptic-op cost of a stateful-layer partition (as
+/// produced by [`plan_layer_groups`]): the compute-demand vector the
+/// deployment planner (`net::plan`, DESIGN.md §Planner) scales by its
+/// calibrated per-synop cost to estimate each hop's per-timestep
+/// service time.
+pub fn plan_layer_group_costs(network: &Network, groups: &[(usize, usize)]) -> Vec<u64> {
+    let costs: Vec<u64> = network.stateful_layers().map(|l| l.dense_synops()).collect();
+    groups
+        .iter()
+        .map(|&(a, b)| costs[a.min(costs.len())..b.min(costs.len())].iter().sum())
+        .collect()
+}
+
 /// Contiguous, cost-balanced partition of `costs` into at most `n`
 /// **non-empty** groups — the shared core of
 /// [`MultiCoreScheduler::partition_channels`] (unit costs) and

@@ -13,7 +13,8 @@
 //! load-balanced worker pool ([`super::pool`]) while preserving
 //! response order (DESIGN.md §Serve).
 
-use std::sync::mpsc::{sync_channel, Receiver};
+use std::collections::VecDeque;
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, TryRecvError};
 use std::time::{Duration, Instant};
 
 use crate::dvs::binning::bin_events;
@@ -24,7 +25,7 @@ use crate::snn::network::{Network, NetworkState};
 use crate::snn::spikes::SpikePlane;
 
 use super::batch::BatchConfig;
-use super::metrics::Metrics;
+use super::metrics::{Metrics, StageMetrics};
 use super::pipeline::PipelineConfig;
 use super::pool::{run_pool, ClipJob, PoolConfig};
 
@@ -57,6 +58,14 @@ pub struct ServerConfig {
     /// their queues in batches of up to [`BatchConfig::capacity`]
     /// clips. Mutually exclusive with `pipeline` and `distributed`.
     pub batch: Option<BatchConfig>,
+    /// Deadline-bounded lane-batch assembly (DESIGN.md §Planner): when
+    /// a batch-capable engine's batch is still filling and the ingest
+    /// queue runs dry, hold the batch up to this many microseconds for
+    /// stragglers with the **same timestep count** before dispatching.
+    /// `0` (the default) keeps the legacy greedy behavior — dispatch
+    /// the moment the queue is empty. Arrival order of responses is
+    /// preserved either way.
+    pub deadline_us: u32,
 }
 
 impl Default for ServerConfig {
@@ -70,6 +79,7 @@ impl Default for ServerConfig {
             pipeline: None,
             distributed: None,
             batch: None,
+            deadline_us: 0,
         }
     }
 }
@@ -95,6 +105,15 @@ pub trait Engine {
     /// dispatch across the batch.
     fn infer_batch(&mut self, clips: &[&[SpikePlane]]) -> Result<Vec<Self::Output>> {
         clips.iter().map(|c| self.infer(c)).collect()
+    }
+
+    /// Per-stage counters accumulated so far, for staged engines (the
+    /// timestep-pipelined and distributed backends); flat engines keep
+    /// the empty default. The serve paths attach this to
+    /// [`Metrics::stages`] after draining, so per-hop stall splits
+    /// surface without reaching into the engine.
+    fn stage_metrics(&self) -> Vec<StageMetrics> {
+        Vec::new()
     }
 }
 
@@ -147,20 +166,16 @@ impl InferenceServer {
 
         let mut responses = Vec::new();
         let mut metrics = Metrics::new();
-        // Batch-capable engines (`max_batch` > 1) drain whatever the
-        // ingest stage has already binned — up to one lane word's
-        // worth of clips — and amortize dispatch across the batch; a
-        // per-clip engine degenerates to the old one-at-a-time loop.
+        // Batch-capable engines (`max_batch` > 1) assemble lane
+        // batches of equal-length clips from the ingest queue —
+        // holding a filling batch up to `deadline_us` for stragglers —
+        // and amortize dispatch across the batch; a per-clip engine
+        // degenerates to the old one-at-a-time loop.
         let cap = engine.max_batch().max(1);
-        let mut jobs: Vec<ClipJob> = Vec::with_capacity(cap);
-        while let Ok(first) = rx.recv() {
-            jobs.push(first);
-            while jobs.len() < cap {
-                match rx.try_recv() {
-                    Ok(job) => jobs.push(job),
-                    Err(_) => break,
-                }
-            }
+        let deadline = Duration::from_micros(u64::from(cfg.deadline_us));
+        let mut pending: VecDeque<ClipJob> = VecDeque::new();
+        let mut closed = false;
+        while let Some(jobs) = assemble_batch(&rx, &mut pending, cap, deadline, &mut closed) {
             let clips: Vec<&[SpikePlane]> = jobs.iter().map(|j| j.frames.as_slice()).collect();
             let outputs = engine.infer_batch(&clips)?;
             if outputs.len() != jobs.len() {
@@ -170,7 +185,7 @@ impl InferenceServer {
                     jobs.len()
                 )));
             }
-            for (job, output) in jobs.drain(..).zip(outputs) {
+            for (job, output) in jobs.into_iter().zip(outputs) {
                 let latency = job.t0.elapsed();
                 metrics.record_clip(latency, job.frames.len() as u64);
                 responses.push(Response {
@@ -183,7 +198,11 @@ impl InferenceServer {
         ingest
             .join()
             .map_err(|_| Error::Runtime("ingest thread panicked".into()))?;
+        // Length bucketing can dispatch deferred clips out of arrival
+        // order; the emission step restores it.
+        responses.sort_by_key(|r| r.id);
         metrics.wall = wall0.elapsed();
+        metrics.stages = engine.stage_metrics();
         Ok((responses, metrics))
     }
 
@@ -234,10 +253,77 @@ impl InferenceServer {
                 });
             }
             metrics.workers = run.workers;
+            metrics.stages = run.stages;
             metrics.wall = wall0.elapsed();
             Ok((responses, metrics))
         })
     }
+}
+
+/// Pull the next lane batch off the ingest channel: seed it with the
+/// oldest deferred clip (or block for the next arrival), then gather
+/// clips with the **same timestep count** — deferring mismatches to
+/// `pending` — until the batch fills, the stream ends, or the assembly
+/// deadline expires. A zero deadline keeps the greedy discipline:
+/// dispatch the moment the queue runs dry. Returns `None` once the
+/// stream is closed and nothing is deferred. (DESIGN.md §Planner,
+/// deadline-bounded assembly; the pool twin is
+/// `SharedQueue::drain_own_matching`.)
+fn assemble_batch(
+    rx: &Receiver<ClipJob>,
+    pending: &mut VecDeque<ClipJob>,
+    cap: usize,
+    deadline: Duration,
+    closed: &mut bool,
+) -> Option<Vec<ClipJob>> {
+    let first = match pending.pop_front() {
+        Some(job) => job,
+        None => {
+            if *closed {
+                return None;
+            }
+            match rx.recv() {
+                Ok(job) => job,
+                Err(_) => {
+                    *closed = true;
+                    return None;
+                }
+            }
+        }
+    };
+    let timesteps = first.frames.len();
+    let hold_until = Instant::now() + deadline;
+    let mut jobs = Vec::with_capacity(cap);
+    jobs.push(first);
+    // Deferred clips of a matching length join first, oldest first.
+    let mut i = 0;
+    while i < pending.len() && jobs.len() < cap {
+        if pending[i].frames.len() == timesteps {
+            jobs.push(pending.remove(i).expect("index in range"));
+        } else {
+            i += 1;
+        }
+    }
+    while jobs.len() < cap && !*closed {
+        match rx.try_recv() {
+            Ok(job) if job.frames.len() == timesteps => jobs.push(job),
+            Ok(job) => pending.push_back(job),
+            Err(TryRecvError::Disconnected) => *closed = true,
+            Err(TryRecvError::Empty) => {
+                let now = Instant::now();
+                if deadline.is_zero() || now >= hold_until {
+                    break;
+                }
+                match rx.recv_timeout(hold_until - now) {
+                    Ok(job) if job.frames.len() == timesteps => jobs.push(job),
+                    Ok(job) => pending.push_back(job),
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => *closed = true,
+                }
+            }
+        }
+    }
+    Some(jobs)
 }
 
 /// Bin one request into a sequenced clip job — the shared ingest step
@@ -460,8 +546,8 @@ mod tests {
         let pserver = InferenceServer::new(cfg);
         let mut piped =
             FunctionalEngine::from_config(net.clone(), pserver.cfg.pipeline, None, None).unwrap();
-        let (got, mut metrics) = pserver.serve(reqs.clone(), &mut piped).unwrap();
-        metrics.stages = piped.stage_metrics().to_vec();
+        // serve attaches the engine's stage counters automatically
+        let (got, metrics) = pserver.serve(reqs.clone(), &mut piped).unwrap();
         assert_eq!(want.len(), got.len());
         for (a, b) in want.iter().zip(&got) {
             assert_eq!(a.id, b.id);
@@ -513,14 +599,19 @@ mod tests {
         let dserver = InferenceServer::new(cfg);
         let mut dist =
             FunctionalEngine::from_config(net.clone(), None, dserver.cfg.distributed, None).unwrap();
-        let (got, mut metrics) = dserver.serve(reqs.clone(), &mut dist).unwrap();
-        metrics.stages = dist.stage_metrics().to_vec();
+        // Satellite (ISSUE 8): serve surfaces the distributed per-hop
+        // counters in `Metrics::stages` without manual plumbing.
+        let (got, metrics) = dserver.serve(reqs.clone(), &mut dist).unwrap();
         assert_eq!(want.len(), got.len());
         for (a, b) in want.iter().zip(&got) {
             assert_eq!(a.id, b.id);
             assert_eq!(a.output, b.output, "request {} diverged", a.id);
         }
         assert_eq!(metrics.stages.len(), 2);
+        assert!(
+            metrics.stages.iter().all(|s| s.steps > 0),
+            "per-hop counters must reflect the served clips"
+        );
 
         // distributed engines selected via PoolConfig: each pool
         // worker runs its own shard constellation
@@ -600,5 +691,137 @@ mod tests {
         assert!(server
             .serve_pool(vec![burst(3); 4], &PoolConfig::with_workers(2), |_| Ok(Bad))
             .is_err());
+    }
+
+    /// A synthetic clip job for driving `assemble_batch` directly.
+    fn job(seq: u64, timesteps: usize) -> ClipJob {
+        ClipJob {
+            seq,
+            t0: Instant::now(),
+            frames: vec![SpikePlane::zeros(1, 2, 2); timesteps],
+        }
+    }
+
+    /// Satellite (ISSUE 8): a trickle stream — arrivals slower than
+    /// the deadline — never holds a filling batch past the deadline.
+    /// The straggler lands 80 ms out; a 15 ms hold must dispatch the
+    /// lone clip long before that.
+    #[test]
+    fn deadline_assembly_dispatches_trickle_arrivals_within_the_deadline() {
+        let (tx, rx) = sync_channel::<ClipJob>(8);
+        let mut pending = VecDeque::new();
+        let mut closed = false;
+        let t0 = Instant::now();
+        let producer = std::thread::spawn(move || {
+            tx.send(job(0, 4)).unwrap();
+            std::thread::sleep(Duration::from_millis(80));
+            tx.send(job(1, 4)).unwrap();
+        });
+        let hold = Duration::from_millis(15);
+        let batch = assemble_batch(&rx, &mut pending, 64, hold, &mut closed).unwrap();
+        assert_eq!(batch.len(), 1, "the hold must expire, not wait for the straggler");
+        assert_eq!(batch[0].seq, 0);
+        assert!(
+            t0.elapsed() < Duration::from_millis(60),
+            "dispatch must beat the 80 ms straggler: {:?}",
+            t0.elapsed()
+        );
+        let batch = assemble_batch(&rx, &mut pending, 64, hold, &mut closed).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].seq, 1);
+        producer.join().unwrap();
+        assert!(
+            assemble_batch(&rx, &mut pending, 64, hold, &mut closed).is_none(),
+            "a closed empty stream ends the loop"
+        );
+    }
+
+    /// Satellite (ISSUE 8): length bucketing packs an interleaved
+    /// mixed-length queue into single-length batches at least as
+    /// tightly as sorting the whole queue by length and cutting
+    /// cap-sized batches would (the offline upper bound on occupancy).
+    #[test]
+    fn deadline_assembly_packs_mixed_lengths_at_least_as_well_as_sorted_greedy() {
+        let lens = [4usize, 6, 4, 6, 4, 6, 4, 6, 4, 6];
+        let cap = 4usize;
+        let (tx, rx) = sync_channel::<ClipJob>(lens.len());
+        for (i, &t) in lens.iter().enumerate() {
+            tx.send(job(i as u64, t)).unwrap();
+        }
+        drop(tx);
+
+        let mut by_len = std::collections::BTreeMap::new();
+        for &t in &lens {
+            *by_len.entry(t).or_insert(0usize) += 1;
+        }
+        let sorted_greedy_batches: usize = by_len.values().map(|n| n.div_ceil(cap)).sum();
+
+        let mut pending = VecDeque::new();
+        let mut closed = false;
+        let mut batches = Vec::new();
+        let mut seqs = Vec::new();
+        while let Some(b) = assemble_batch(&rx, &mut pending, cap, Duration::ZERO, &mut closed) {
+            assert!(
+                b.iter().all(|j| j.frames.len() == b[0].frames.len()),
+                "every assembled batch is single-length"
+            );
+            assert!(b.len() <= cap);
+            seqs.extend(b.iter().map(|j| j.seq));
+            batches.push(b.len());
+        }
+        assert_eq!(batches.iter().sum::<usize>(), lens.len(), "no clip lost");
+        seqs.sort_unstable();
+        assert_eq!(seqs, (0..lens.len() as u64).collect::<Vec<_>>());
+        assert!(
+            batches.len() <= sorted_greedy_batches,
+            "{} batches vs sorted greedy's {}",
+            batches.len(),
+            sorted_greedy_batches
+        );
+    }
+
+    /// Satellite (ISSUE 8): with a deadline configured, the serve path
+    /// still returns responses in arrival order and serves every clip
+    /// exactly once through batched dispatch.
+    #[test]
+    fn deadline_serve_preserves_arrival_order() {
+        struct Probe {
+            sizes: Vec<usize>,
+        }
+        impl Engine for Probe {
+            type Output = u64;
+            fn infer(&mut self, clip: &[SpikePlane]) -> Result<u64> {
+                Ok(clip.iter().map(|p| p.count_spikes()).sum())
+            }
+            fn max_batch(&self) -> usize {
+                8
+            }
+            fn infer_batch(&mut self, clips: &[&[SpikePlane]]) -> Result<Vec<u64>> {
+                self.sizes.push(clips.len());
+                clips.iter().map(|c| self.infer(c)).collect()
+            }
+        }
+        let mut cfg = small_cfg();
+        cfg.deadline_us = 5_000;
+        let server = InferenceServer::new(cfg);
+        let reqs: Vec<Vec<Event>> = (0..10).map(|i| burst(3 + i * 7)).collect();
+        let mut reference = CountEngine;
+        let (want, _) = InferenceServer::new(small_cfg())
+            .serve(reqs.clone(), &mut reference)
+            .unwrap();
+        let mut probe = Probe { sizes: Vec::new() };
+        let (resp, metrics) = server.serve(reqs, &mut probe).unwrap();
+        assert_eq!(resp.len(), 10);
+        for (i, r) in resp.iter().enumerate() {
+            assert_eq!(r.id, i as u64, "responses must come back in arrival order");
+            assert_eq!(r.output, want[i].output);
+        }
+        assert_eq!(metrics.clips, 10);
+        assert_eq!(probe.sizes.iter().sum::<usize>(), 10);
+        assert!(
+            probe.sizes.iter().any(|&s| s > 1),
+            "the deadline hold must have assembled at least one real batch: {:?}",
+            probe.sizes
+        );
     }
 }

@@ -22,6 +22,13 @@
 //!                  weight push. --protocol 2 pins the host to the
 //!                  scalar-only v2 grammar (lane batches rejected),
 //!                  which forces a v3 coordinator into scalar fallback
+//! spidr plan     [--workload pipeline-demo|serving-demo] [--timesteps N]
+//!                [--links MBxUS,MBxUS,...]
+//!                  print the topology-aware deployment plan (DESIGN.md
+//!                  §Planner) for a demo workload over candidate shard
+//!                  sites, one per --links entry: serialization
+//!                  bandwidth in MB/s `x` one-way latency in µs
+//!                  (default: three loopback sites)
 //! ```
 
 use std::collections::HashMap;
@@ -34,7 +41,7 @@ use spidr::energy::calibration::measure;
 use spidr::energy::model::Corner;
 use spidr::error::{Error, Result};
 use spidr::net::wire::{MIN_VERSION, VERSION};
-use spidr::net::{ShardHost, TcpTransport};
+use spidr::net::{plan_deployment, LinkSpec, PlannerConfig, ShardHost, TcpTransport};
 use spidr::quant::Precision;
 use spidr::runtime::{ArtifactStore, GoldenModel};
 use spidr::sim::SimConfig;
@@ -189,6 +196,78 @@ fn cmd_shard(flags: &HashMap<String, String>) -> Result<()> {
     }
 }
 
+/// Print the topology-aware deployment plan (DESIGN.md §Planner) for a
+/// demo workload over a set of candidate shard sites: layer-group
+/// placement, replica spread, per-hop protocol windows, and the modeled
+/// clip makespan the choice minimizes.
+fn cmd_plan(flags: &HashMap<String, String>) -> Result<()> {
+    let timesteps: usize = flag(flags, "timesteps", 12);
+    let net = match flags.get("workload").map(|s| s.as_str()) {
+        Some("pipeline-demo") => demo_pipeline_network(timesteps)?,
+        None | Some("") | Some("serving-demo") => demo_serving_network(timesteps)?,
+        Some(other) => {
+            return Err(Error::config(format!(
+                "unknown plan workload '{other}' (pipeline-demo|serving-demo)"
+            )));
+        }
+    };
+    let sites: Vec<LinkSpec> = match flags.get("links").filter(|s| !s.is_empty()) {
+        None => vec![LinkSpec::loopback(); 3],
+        Some(spec) => spec
+            .split(',')
+            .map(|entry| {
+                let parse = |s: &str| {
+                    s.trim().parse::<u64>().map_err(|_| {
+                        Error::config(format!(
+                            "bad link '{entry}' (want MB/s `x` µs, e.g. 100x1500)"
+                        ))
+                    })
+                };
+                let (bw, lat) = entry.split_once('x').ok_or_else(|| {
+                    Error::config(format!(
+                        "bad link '{entry}' (want MB/s `x` µs, e.g. 100x1500)"
+                    ))
+                })?;
+                Ok(LinkSpec::new(parse(bw)?.max(1) << 20, parse(lat)?))
+            })
+            .collect::<Result<Vec<LinkSpec>>>()?,
+    };
+    let plan = plan_deployment(&net, &sites, &PlannerConfig::default())?;
+    println!(
+        "deployment plan for '{}' ({timesteps} steps) over {} candidate sites:",
+        net.name,
+        sites.len()
+    );
+    for (h, hop) in plan.hops.iter().enumerate() {
+        let spec = sites[hop.site];
+        println!(
+            "  hop {h}: layers {}..{} -> site {} ({} MB/s, {} us) \
+             window {} replicas {} | compute {:.1} us, frames {}B in / {}B out, \
+             serv {:.1} us, rtt {:.1} us, steady {:.1} us",
+            hop.group.0,
+            hop.group.1,
+            hop.site,
+            spec.bandwidth_bytes_per_s >> 20,
+            spec.latency_us,
+            hop.window,
+            hop.replicas,
+            hop.compute_us,
+            hop.in_bytes,
+            hop.out_bytes,
+            hop.serv_us,
+            hop.rtt_us,
+            hop.steady_us,
+        );
+    }
+    println!(
+        "  modeled clip makespan: {:.1} us ({} groups over {} sites)",
+        plan.modeled_clip_us,
+        plan.groups.len(),
+        sites.len()
+    );
+    Ok(())
+}
+
 fn cmd_gesture(flags: &HashMap<String, String>) -> Result<()> {
     let wb: u32 = flag(flags, "wb", 4);
     let clips: usize = flag(flags, "clips", 6);
@@ -307,12 +386,14 @@ fn main() -> ExitCode {
         "gesture" => cmd_gesture(&flags),
         "flow" => cmd_flow(&flags),
         "shard" => cmd_shard(&flags),
+        "plan" => cmd_plan(&flags),
         _ => {
             eprintln!(
-                "usage: spidr <chip|map|gesture|flow|shard> [--wb 4|6|8] \
+                "usage: spidr <chip|map|gesture|flow|shard|plan> [--wb 4|6|8] \
                  [--sparsity S] [--corner low|high] [--task T] \
                  [--clips N] [--artifacts DIR] [--listen HOST:PORT] \
-                 [--workload W] [--timesteps N] [--sessions N] [--protocol 2|3]"
+                 [--workload W] [--timesteps N] [--sessions N] [--protocol 2|3] \
+                 [--links MBxUS,...]"
             );
             return ExitCode::from(2);
         }

@@ -42,11 +42,22 @@
 //! executor is deterministic) and dropped, so downstream hops see each
 //! output plane exactly once. Only a hop with **zero survivors**
 //! degrades to the old fail-fast behavior and poisons the engine.
+//!
+//! **Windows**: each hop has its own protocol window — how many frames
+//! may be in flight on its link before the hop blocks on replies.
+//! `DistributedConfig::window` seeds a uniform schedule;
+//! [`DistributedEngine::set_windows`] pins an explicit per-hop one and
+//! [`DistributedEngine::retune_windows`] closes the loop at runtime,
+//! widening the wire-bound hop and narrowing idle ones from the
+//! hops' own stall counters (DESIGN.md §Planner). Windows bound
+//! in-flight frames, never what is computed, so outputs stay
+//! bit-identical under any schedule
+//! (`prop_window_schedule_invariant`).
 
 use std::collections::BTreeMap;
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError, TrySendError};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -54,6 +65,7 @@ use crate::coordinator::metrics::StageMetrics;
 use crate::coordinator::scheduler::plan_layer_groups;
 use crate::coordinator::server::Engine;
 use crate::error::{Error, Result};
+use crate::net::plan::LinkSpec;
 use crate::net::shard::{ShardHost, ShardReport};
 use crate::net::transport::{LoopbackTransport, Transport};
 use crate::net::wire::{
@@ -73,7 +85,10 @@ pub struct DistributedConfig {
     pub shards: usize,
     /// Per-link protocol window: how many spike frames may be in
     /// flight toward one shard before its hop blocks on the reply
-    /// stream (the handshaking FIFO depth of the wire).
+    /// stream (the handshaking FIFO depth of the wire). This seeds a
+    /// **uniform** per-hop schedule; `DistributedEngine::set_windows`
+    /// and `DistributedEngine::retune_windows` respecialize individual
+    /// hops at runtime.
     pub window: usize,
     /// Replica links per shard hop (≥ 1). With more than one, a hop
     /// fans clips across its replicas least-loaded-first and fails
@@ -199,6 +214,48 @@ fn pick_replica(replicas: &[Replica]) -> Option<usize> {
         .map(|(i, _)| i)
 }
 
+/// Receive from an inter-hop channel, sampling the stall timer only on
+/// the blocking path: a `try_recv` probe first — when the frame is
+/// already there (the fast path under load) **no timestamp is taken**
+/// — then, only if the channel was empty, a blocking `recv` bracketed
+/// by one `Instant::now()` pair that lands in `stall_in` and bumps
+/// `stall_samples`. `Err(())` is upstream teardown.
+fn timed_recv<T>(rx: &Receiver<T>, sm: &mut StageMetrics) -> std::result::Result<T, ()> {
+    match rx.try_recv() {
+        Ok(v) => Ok(v),
+        Err(TryRecvError::Disconnected) => Err(()),
+        Err(TryRecvError::Empty) => {
+            let wait0 = Instant::now();
+            let got = rx.recv();
+            sm.stall_in += wait0.elapsed();
+            sm.stall_samples += 1;
+            got.map_err(|_| ())
+        }
+    }
+}
+
+/// [`timed_recv`]'s send twin: `try_send` first (fast path, no
+/// timestamp), and only a full downstream channel pays the
+/// `Instant::now()` pair — into `stall_out`, counted in
+/// `stall_samples`. `Err(())` is downstream teardown.
+fn timed_send<T>(
+    tx: &SyncSender<T>,
+    value: T,
+    sm: &mut StageMetrics,
+) -> std::result::Result<(), ()> {
+    match tx.try_send(value) {
+        Ok(()) => Ok(()),
+        Err(TrySendError::Disconnected(_)) => Err(()),
+        Err(TrySendError::Full(value)) => {
+            let send0 = Instant::now();
+            let sent = tx.send(value);
+            sm.stall_out += send0.elapsed();
+            sm.stall_samples += 1;
+            sent.map_err(|_| ())
+        }
+    }
+}
+
 /// Send one spike frame to the shard.
 fn send_frame(
     link: &mut dyn Transport,
@@ -259,10 +316,8 @@ fn pump_reply(
     while let Some(plane) = reorder.remove(next_fwd) {
         *next_fwd += 1;
         if let Some(tx) = tx {
-            let send0 = Instant::now();
-            tx.send(plane)
-                .map_err(|_| HopFailure::Fatal(hop_torn_down(hop, "downstream")))?;
-            sm.stall_out += send0.elapsed();
+            timed_send(tx, plane, sm)
+                .map_err(|()| HopFailure::Fatal(hop_torn_down(hop, "downstream")))?;
         }
     }
     Ok(())
@@ -347,11 +402,8 @@ fn serve_on_replica(
     while t < t_total {
         let mut owned: Option<SpikePlane> = None;
         if let Some(rx) = rx {
-            let wait0 = Instant::now();
-            let p = rx
-                .recv()
-                .map_err(|_| HopFailure::Fatal(hop_torn_down(hop, "upstream")))?;
-            sm.stall_in += wait0.elapsed();
+            let p = timed_recv(rx, sm)
+                .map_err(|()| HopFailure::Fatal(hop_torn_down(hop, "upstream")))?;
             owned = Some(p);
         }
         if t == 0 {
@@ -574,10 +626,8 @@ fn pump_lane_reply(
     while let Some(frame) = reorder.remove(next_fwd) {
         *next_fwd += 1;
         if let Some(tx) = tx {
-            let send0 = Instant::now();
-            tx.send(frame)
-                .map_err(|_| HopFailure::Fatal(hop_torn_down(hop, "downstream")))?;
-            sm.stall_out += send0.elapsed();
+            timed_send(tx, frame, sm)
+                .map_err(|()| HopFailure::Fatal(hop_torn_down(hop, "downstream")))?;
         }
     }
     Ok(())
@@ -671,11 +721,8 @@ fn serve_batch_on_replica(
     while t < t_total {
         let mut owned: Option<LaneFrame> = None;
         if let Some(rx) = rx {
-            let wait0 = Instant::now();
-            let f = rx
-                .recv()
-                .map_err(|_| HopFailure::Fatal(hop_torn_down(hop, "upstream")))?;
-            sm.stall_in += wait0.elapsed();
+            let f = timed_recv(rx, sm)
+                .map_err(|()| HopFailure::Fatal(hop_torn_down(hop, "upstream")))?;
             owned = Some(f);
         }
         if t == 0 {
@@ -847,11 +894,18 @@ pub struct DistributedEngine {
     wire_groups: Vec<(u32, u32)>,
     spans: Vec<GroupSpan>,
     hops: Vec<Vec<Replica>>,
-    window: usize,
+    /// Per-hop protocol windows (index = hop). Seeded uniform from the
+    /// connect-time `window`, respecialized by `set_windows` /
+    /// `retune_windows`; read per clip/batch, so a retune between runs
+    /// is structurally safe.
+    windows: Vec<usize>,
     next_clip: u64,
     poisoned: bool,
     failovers: u64,
     stages: Vec<StageMetrics>,
+    /// Snapshot of `stages` at the last `retune_windows` call — the
+    /// retuner reacts to the *delta* since then, not lifetime totals.
+    retune_mark: Vec<StageMetrics>,
     last_telemetry: Vec<StepTelemetry>,
     last_vmems: Vec<Mat>,
     last_lane_telemetry: Vec<Vec<StepTelemetry>>,
@@ -868,7 +922,7 @@ impl fmt::Debug for DistributedEngine {
         f.debug_struct("DistributedEngine")
             .field("network", &self.network.name)
             .field("groups", &self.groups)
-            .field("window", &self.window)
+            .field("windows", &self.windows)
             .field("replicas", &self.hops.iter().map(|h| h.len()).collect::<Vec<_>>())
             .field("next_clip", &self.next_clip)
             .field("poisoned", &self.poisoned)
@@ -989,22 +1043,25 @@ impl DistributedEngine {
             }
             replica_hops.push(reps);
         }
-        let stages = spans
+        let stages: Vec<StageMetrics> = spans
             .iter()
             .enumerate()
             .map(|(i, s)| StageMetrics::new(i, s.layers))
             .collect();
+        let retune_mark = stages.clone();
+        let windows = vec![window.max(1); replica_hops.len()];
         Ok(DistributedEngine {
             network,
             groups,
             wire_groups,
             spans,
             hops: replica_hops,
-            window: window.max(1),
+            windows,
             next_clip: 0,
             poisoned: false,
             failovers: 0,
             stages,
+            retune_mark,
             last_telemetry: Vec::new(),
             last_vmems: Vec::new(),
             last_lane_telemetry: Vec::new(),
@@ -1049,6 +1106,53 @@ impl DistributedEngine {
         Ok(engine)
     }
 
+    /// [`DistributedEngine::loopback`] over **throttled** pipes: hop
+    /// `i`'s replica links all model `links[i]` — a finite bandwidth
+    /// and a propagation latency
+    /// ([`LoopbackTransport::pair_throttled`]) — so a deliberately
+    /// skewed constellation can be built in-process. This is the
+    /// retuner's test rig and the planner's calibration target: the
+    /// modeled wire terms of [`crate::net::plan`] correspond to real
+    /// waits here. Needs one [`LinkSpec`] per planned layer group.
+    pub fn loopback_throttled(
+        network: Network,
+        cfg: &DistributedConfig,
+        links: &[LinkSpec],
+    ) -> Result<Self> {
+        let groups = plan_layer_groups(&network, cfg.shards.max(1));
+        if groups.is_empty() {
+            return Err(Error::config("network has no stateful layers to shard"));
+        }
+        if links.len() != groups.len() {
+            return Err(Error::config(format!(
+                "{} link specs for a constellation of {} shard hops",
+                links.len(),
+                groups.len()
+            )));
+        }
+        let replicas = cfg.replicas.max(1);
+        let mut hops: Vec<Vec<Box<dyn Transport>>> = Vec::with_capacity(groups.len());
+        let mut hosts = Vec::with_capacity(groups.len() * replicas);
+        for (i, spec) in links.iter().enumerate() {
+            let mut reps: Vec<Box<dyn Transport>> = Vec::with_capacity(replicas);
+            for r in 0..replicas {
+                let (coord_end, mut shard_end) =
+                    LoopbackTransport::pair_throttled(spec.bandwidth_bytes_per_s, spec.latency());
+                let handle = std::thread::Builder::new()
+                    .name(format!("spidr-shard-{i}-{r}"))
+                    .spawn(move || {
+                        ShardHost::blank(format!("shard-{i}.{r}")).serve(&mut shard_end)
+                    })?;
+                reps.push(Box::new(coord_end));
+                hosts.push(handle);
+            }
+            hops.push(reps);
+        }
+        let mut engine = Self::connect_replicated(network, hops, cfg.window)?;
+        engine.hosts = hosts;
+        Ok(engine)
+    }
+
     /// The workload this engine serves.
     pub fn network(&self) -> &Network {
         &self.network
@@ -1064,6 +1168,86 @@ impl DistributedEngine {
     /// `stall_in`/`stall_out` are inter-hop channel waits).
     pub fn stage_metrics(&self) -> &[StageMetrics] {
         &self.stages
+    }
+
+    /// The per-hop protocol window schedule currently in force
+    /// (index = hop).
+    pub fn windows(&self) -> &[usize] {
+        &self.windows
+    }
+
+    /// Pin an explicit per-hop window schedule: one entry per hop,
+    /// each ≥ 1 (a planner's
+    /// [`DeploymentPlan::windows`](crate::net::plan::DeploymentPlan::windows),
+    /// say). Takes effect at the next clip/batch — windows are read
+    /// per run and inter-hop channels are created per run, so retuning
+    /// between runs is structurally safe, and windows bound in-flight
+    /// frames without touching what is computed, so outputs stay
+    /// bit-identical under any schedule
+    /// (`prop_window_schedule_invariant`).
+    pub fn set_windows(&mut self, windows: &[usize]) -> Result<()> {
+        if windows.len() != self.hops.len() {
+            return Err(Error::config(format!(
+                "{} windows for a constellation of {} hops",
+                windows.len(),
+                self.hops.len()
+            )));
+        }
+        if windows.contains(&0) {
+            return Err(Error::config("protocol windows must be ≥ 1"));
+        }
+        self.windows = windows.to_vec();
+        Ok(())
+    }
+
+    /// Stall-driven window retune (DESIGN.md §Planner): look at each
+    /// hop's counters accumulated **since the previous retune**, rank
+    /// hops by per-step wire wait (`busy` here is link round trips —
+    /// remote compute plus codec plus propagation — while
+    /// `stall_in`/`stall_out` are inter-hop channel waits; a starved
+    /// or backpressured hop is some *other* hop's problem and scores
+    /// low), then double the window of every hop within 2× of the
+    /// bottleneck, clamped to `max`, and halve hops below a quarter of
+    /// it, clamped to `min`. Returns `true` while the schedule moved —
+    /// serve a clip or batch between calls and loop until it returns
+    /// `false` (the bottleneck's window doubles per round, so
+    /// convergence is O(log `max`) rounds). Retunes never change what
+    /// is computed, only how much is in flight, so outputs stay
+    /// bit-identical across them.
+    pub fn retune_windows(&mut self, min: usize, max: usize) -> bool {
+        let min = min.max(1);
+        let max = max.max(min);
+        let mut rates = Vec::with_capacity(self.stages.len());
+        for (s, prev) in self.stages.iter().zip(&self.retune_mark) {
+            let steps = s.steps.saturating_sub(prev.steps);
+            let wait = s.busy.saturating_sub(prev.busy);
+            rates.push(if steps == 0 {
+                0.0
+            } else {
+                wait.as_secs_f64() / steps as f64
+            });
+        }
+        self.retune_mark = self.stages.clone();
+        let peak = rates.iter().copied().fold(0.0f64, f64::max);
+        if peak <= 0.0 {
+            return false;
+        }
+        let mut moved = false;
+        for (i, &rate) in rates.iter().enumerate() {
+            let w = self.windows[i].clamp(min, max);
+            let next = if rate >= peak * 0.5 {
+                (w * 2).min(max)
+            } else if rate < peak * 0.25 {
+                (w / 2).max(min)
+            } else {
+                w
+            };
+            if next != self.windows[i] {
+                self.windows[i] = next;
+                moved = true;
+            }
+        }
+        moved
     }
 
     /// Replica failovers absorbed so far across all hops (each one is
@@ -1212,7 +1396,7 @@ impl DistributedEngine {
         let batch_id = self.next_clip;
         let clip_ids: Vec<u64> = (0..lanes as u64).map(|i| batch_id + i).collect();
         self.next_clip += lanes as u64;
-        let window = self.window;
+        let windows = self.windows.clone();
         let hop_count = self.hops.len();
         let wire_groups = &self.wire_groups;
         let epoch = Instant::now();
@@ -1226,13 +1410,17 @@ impl DistributedEngine {
                 self.hops.iter_mut().zip(self.spans.iter()).enumerate()
             {
                 let rx = prev_rx.take();
+                // The inter-hop channel's depth follows the consuming
+                // hop's window: a wide downstream window needs that
+                // much lookahead buffered ahead of it.
                 let tx = if gi + 1 < hop_count {
-                    let (tx, next_rx) = sync_channel(window);
+                    let (tx, next_rx) = sync_channel(windows[gi + 1]);
                     prev_rx = Some(next_rx);
                     Some(tx)
                 } else {
                     None
                 };
+                let window = windows[gi];
                 let failovers = &failovers;
                 handles.push(scope.spawn(move || {
                     relay_lane_batch(
@@ -1344,7 +1532,7 @@ impl DistributedEngine {
         }
         let clip_id = self.next_clip;
         self.next_clip += 1;
-        let window = self.window;
+        let windows = self.windows.clone();
         let hop_count = self.hops.len();
         let wire_groups = &self.wire_groups;
         let epoch = Instant::now();
@@ -1356,13 +1544,15 @@ impl DistributedEngine {
                 self.hops.iter_mut().zip(self.spans.iter()).enumerate()
             {
                 let rx = prev_rx.take();
+                // Channel depth follows the consuming hop's window.
                 let tx = if gi + 1 < hop_count {
-                    let (tx, next_rx) = sync_channel(window);
+                    let (tx, next_rx) = sync_channel(windows[gi + 1]);
                     prev_rx = Some(next_rx);
                     Some(tx)
                 } else {
                     None
                 };
+                let window = windows[gi];
                 let failovers = &failovers;
                 handles.push(scope.spawn(move || {
                     relay_clip(
@@ -1469,6 +1659,12 @@ impl Engine for DistributedEngine {
             i = j;
         }
         Ok(out)
+    }
+
+    /// Per-hop wire/stall counters, so `serve`/`serve_pool` surface
+    /// distributed hop telemetry in `Metrics::stages` automatically.
+    fn stage_metrics(&self) -> Vec<StageMetrics> {
+        self.stages.clone()
     }
 }
 
@@ -2114,6 +2310,219 @@ mod tests {
         assert!(
             s1 / l1 >= 40,
             "wire amortization collapsed: {s1} scalar / {l1} lane frames"
+        );
+    }
+
+    #[test]
+    fn window_schedules_are_validated() {
+        let net = demo_serving_network(4).unwrap();
+        let mut e =
+            DistributedEngine::loopback(net, &DistributedConfig::with_shards(2)).unwrap();
+        assert_eq!(e.windows(), &[2, 2], "the config seeds a uniform schedule");
+        assert!(e.set_windows(&[1]).is_err(), "wrong arity must be rejected");
+        assert!(e.set_windows(&[0, 3]).is_err(), "a zero window must be rejected");
+        e.set_windows(&[1, 4]).unwrap();
+        assert_eq!(e.windows(), &[1, 4]);
+        // the throttled constructor needs one link spec per hop
+        assert!(DistributedEngine::loopback_throttled(
+            demo_serving_network(4).unwrap(),
+            &DistributedConfig::with_shards(2),
+            &[LinkSpec::loopback()],
+        )
+        .is_err());
+    }
+
+    /// Satellite (ISSUE 8): stall timers are sampled only on the
+    /// blocking path. A channel operation that completes on the
+    /// `try_*` probe — the steady-state case under load — takes no
+    /// `Instant::now()` pair and bumps no counter; only an operation
+    /// that actually waited is timed and counted.
+    #[test]
+    fn timed_stall_sampling_skips_the_fast_path() {
+        use std::time::Duration;
+
+        let mut sm = StageMetrics::new(0, (0, 1));
+        let (tx, rx) = sync_channel::<u32>(1);
+        timed_send(&tx, 7, &mut sm).unwrap();
+        assert_eq!(timed_recv(&rx, &mut sm).unwrap(), 7);
+        assert_eq!(sm.stall_samples, 0, "ready channel ops must not be timed");
+        assert_eq!(sm.stall_in, Duration::ZERO);
+        assert_eq!(sm.stall_out, Duration::ZERO);
+
+        // Blocking send: the capacity-1 buffer is already full, a
+        // helper drains it after a delay — the send must wait, and
+        // exactly that wait gets sampled.
+        let (tx2, rx2) = sync_channel::<u32>(1);
+        timed_send(&tx2, 1, &mut sm).unwrap();
+        assert_eq!(sm.stall_samples, 0);
+        let drainer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            (rx2.recv().unwrap(), rx2.recv().unwrap())
+        });
+        timed_send(&tx2, 2, &mut sm).unwrap();
+        assert_eq!(sm.stall_samples, 1, "a blocked send is one sample");
+        assert!(sm.stall_out >= Duration::from_millis(5), "the wait was timed");
+        assert_eq!(drainer.join().unwrap(), (1, 2));
+
+        // Blocking recv: nothing queued until a helper sends.
+        let (tx3, rx3) = sync_channel::<u32>(1);
+        let sender = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            tx3.send(9).unwrap();
+        });
+        assert_eq!(timed_recv(&rx3, &mut sm).unwrap(), 9);
+        sender.join().unwrap();
+        assert_eq!(sm.stall_samples, 2, "a blocked recv is one sample");
+        assert!(sm.stall_in >= Duration::from_millis(5));
+
+        // Teardown surfaces as Err on either path.
+        let (tx4, rx4) = sync_channel::<u32>(1);
+        drop(tx4);
+        assert!(timed_recv(&rx4, &mut sm).is_err());
+        let (tx5, rx5) = sync_channel::<u32>(1);
+        drop(rx5);
+        assert!(timed_send(&tx5, 0, &mut sm).is_err());
+
+        // End to end: a served clip's samples are bounded by blocking
+        // events (at most one per channel op), never by frame count
+        // alone.
+        let net = demo_serving_network(6).unwrap();
+        let clip = demo_clip(17, 6, 2, 16, 16);
+        let mut e =
+            DistributedEngine::loopback(net, &DistributedConfig::with_shards(2)).unwrap();
+        e.infer(&clip).unwrap();
+        for s in e.stage_metrics() {
+            assert!(
+                s.stall_samples <= 2 * s.steps,
+                "hop {} took {} stall samples over {} steps",
+                s.stage,
+                s.stall_samples,
+                s.steps
+            );
+        }
+    }
+
+    /// Tentpole acceptance (ISSUE 8): outputs, telemetry, and Vmems
+    /// stay bit-identical to the reference under **any** per-hop
+    /// window schedule — the window=1 degenerate included — and across
+    /// mid-session `set_windows`, stall-driven `retune_windows`, a
+    /// retune applied right before a replica failover, and lane
+    /// batches under yet another schedule. Windows bound in-flight
+    /// frames; they never touch what is computed.
+    #[test]
+    fn prop_window_schedule_invariant() {
+        check("window_schedule_invariant", 8, |g| {
+            let net = random_network(g);
+            let t = 1 + g.index(4);
+            let (c, h, w) = net.layers[0].in_shape;
+            let density = 0.1 + g.f64() * 0.4;
+            let frames: Vec<SpikePlane> = (0..t)
+                .map(|_| {
+                    let mut p = SpikePlane::zeros(c, h, w);
+                    for i in 0..p.len() {
+                        if g.chance(density) {
+                            p.as_mut_slice()[i] = 1;
+                        }
+                    }
+                    p
+                })
+                .collect();
+            let stateful = net.stateful_layers().count();
+            let cfg = DistributedConfig {
+                shards: 1 + g.index(stateful + 1),
+                window: 1 + g.index(3),
+                replicas: 1 + g.index(2),
+            };
+
+            let mut ref_state = net.init_state().unwrap();
+            let ref_tel = net.run(&frames, &mut ref_state).unwrap();
+
+            let mut e = DistributedEngine::loopback(net.clone(), &cfg).unwrap();
+            let hops = e.groups().len();
+            for round in 0..3 {
+                let schedule: Vec<usize> = (0..hops).map(|_| 1 + g.index(4)).collect();
+                e.set_windows(&schedule).unwrap();
+                if round == 1 {
+                    // a stall-driven retune mid-session
+                    e.retune_windows(1, 8);
+                }
+                if round == 2 && cfg.replicas > 1 {
+                    // retune-then-failover: the survivor serves under
+                    // whatever schedule is pinned
+                    e.sever_replica(g.index(hops), g.index(cfg.replicas)).unwrap();
+                }
+                e.infer(&frames).unwrap();
+                let ok = e.last_telemetry() == &ref_tel[..]
+                    && ref_state
+                        .vmems
+                        .iter()
+                        .zip(e.last_vmems())
+                        .all(|(a, b)| a.as_slice() == b.as_slice());
+                if !ok {
+                    return false;
+                }
+            }
+            // lane batches obey the schedule invariance too
+            let schedule: Vec<usize> = (0..hops).map(|_| 1 + g.index(4)).collect();
+            e.set_windows(&schedule).unwrap();
+            let outs = e.infer_lanes(&[&frames, &frames]).unwrap();
+            let want: Vec<i32> = ref_state.vmems.last().unwrap().as_slice().to_vec();
+            outs.iter().all(|o| *o == want)
+                && (0..2).all(|b| e.last_lane_telemetry()[b] == ref_tel)
+        });
+    }
+
+    /// Tentpole acceptance (ISSUE 8): on a deliberately skewed
+    /// constellation — one hop behind a high-latency link — the
+    /// retuner widens exactly the wire-bound hop's window, narrows the
+    /// idle ones, converges in O(log max) rounds, and the retuned
+    /// engine keeps serving bit-identically.
+    #[test]
+    fn retune_widens_the_congested_hop_and_narrows_idle_ones() {
+        let net = demo_serving_network(6).unwrap();
+        let clip = demo_clip(31, 6, 2, 16, 16);
+        let mut reference = ReferenceEngine::new(net.clone()).unwrap();
+        let want = reference.infer(&clip).unwrap();
+
+        // hop 1 sits behind 2 ms of propagation latency; hop 0 is free
+        let links = [LinkSpec::loopback(), LinkSpec::new(1 << 30, 2_000)];
+        let mut e = DistributedEngine::loopback_throttled(
+            net,
+            &DistributedConfig {
+                shards: 2,
+                window: 2,
+                replicas: 1,
+            },
+            &links,
+        )
+        .unwrap();
+        assert_eq!(e.windows(), &[2, 2]);
+        assert!(!e.retune_windows(1, 16), "no traffic yet — nothing to retune");
+
+        assert_eq!(e.infer(&clip).unwrap(), want);
+        assert!(e.retune_windows(1, 16), "a skewed constellation must retune");
+        assert!(
+            e.windows()[1] > 2,
+            "the latency-bound hop must widen: {:?}",
+            e.windows()
+        );
+        assert!(
+            e.windows()[0] <= 2,
+            "the free hop must not widen: {:?}",
+            e.windows()
+        );
+
+        // serve-retune rounds converge to a stable schedule
+        for _ in 0..8 {
+            assert_eq!(e.infer(&clip).unwrap(), want);
+            if !e.retune_windows(1, 16) {
+                break;
+            }
+        }
+        assert_eq!(
+            e.infer(&clip).unwrap(),
+            want,
+            "retuned serving must stay bit-identical"
         );
     }
 }

@@ -18,7 +18,14 @@
 //!   shards over the wire (weight push).
 //! * [`transport`] — the [`Transport`](transport::Transport) narrow
 //!   waist: TCP for real topologies, bounded in-process byte pipes
-//!   (loopback) for deterministic sockets-free tests.
+//!   (loopback) for deterministic sockets-free tests; the throttled
+//!   pair models a finite link (bandwidth + latency) as a delay line.
+//! * [`plan`] — the topology-aware deployment planner: per-link
+//!   [`LinkSpec`](plan::LinkSpec)s plus per-group compute costs feed a
+//!   wire-extended fill/drain makespan model that places layer groups,
+//!   spreads replicas, and opens per-hop protocol windows to the
+//!   bandwidth-delay product (DESIGN.md §Planner); the runtime closes
+//!   the loop with `DistributedEngine::retune_windows`.
 //! * [`shard`] — [`ShardHost`](shard::ShardHost), the remote half:
 //!   owns one layer-group span, services frames through
 //!   `Network::step_group`.
@@ -31,11 +38,13 @@
 //!   when one dies, failing fast only at zero survivors.
 
 pub mod coordinator;
+pub mod plan;
 pub mod shard;
 pub mod transport;
 pub mod wire;
 
 pub use coordinator::{DistributedConfig, DistributedEngine};
+pub use plan::{plan_deployment, CostModel, DeploymentPlan, LinkSpec, PlannerConfig};
 pub use shard::{ShardHost, ShardReport};
 pub use transport::{LoopbackTransport, TcpTransport, Transport};
 pub use wire::{decode_network, encode_network, Frame, LaneReport, Role};

@@ -1,0 +1,559 @@
+//! Topology-aware deployment planning for the distributed tier
+//! (DESIGN.md §Planner).
+//!
+//! The distributed engine chains layer-group shards behind per-hop
+//! protocol windows, but until now placement assumed uniform links and
+//! every hop got the same static window. This module adds the missing
+//! model: each candidate shard endpoint carries a [`LinkSpec`]
+//! (bandwidth + latency — the constant-bandwidth link model), each
+//! layer group carries a compute demand from
+//! `plan_layer_group_costs`, and [`plan_deployment`] searches group
+//! counts, placements, replica spread, and per-hop windows to minimize
+//! the **modeled clip makespan**:
+//!
+//! ```text
+//! serv_h   = max(compute_h, tx_in_h, tx_out_h) + overhead
+//! rtt_h    = tx_in_h + tx_out_h + 2·latency_h + compute_h + overhead
+//! t_h(W)   = max(serv_h, rtt_h / W_h)          (steady-state interval)
+//! T_clip   ≈ Σ_h rtt_h  +  (T − 1) · max_h t_h(W_h)
+//! ```
+//!
+//! which extends DESIGN.md §Pipeline's fill/drain model
+//! (`T_clip ≈ (G−1)·t_stage + T·t_stage`) with wire terms: at zero
+//! wire cost `rtt_h = serv_h = t_stage` and the two formulas coincide.
+//! The planned window `W_h = ⌈rtt_h / serv_h⌉` (clamped) is the
+//! bandwidth-delay product in frames — exactly enough in-flight frames
+//! to hide the round trip without inflating memory.
+//!
+//! Frame sizes are **measured, not estimated**: a zero frame is
+//! stepped through the group spans and each hop's request/reply
+//! `Frame::SpikeFrame` is encoded through the real codec (spike planes
+//! are bit-packed, so size depends only on shape). Compute and
+//! per-frame overhead come from a [`CostModel`], calibrated from two
+//! cheap measurements ([`CostModel::calibrate`]).
+//!
+//! The plan is advice, not magic: the runtime closes the loop with
+//! `DistributedEngine::retune_windows`, which reads the measured
+//! per-hop `StageMetrics` stall split and widens/narrows windows
+//! within bounds (the simulate-vs-measured bench in
+//! `benches/distributed_serve.rs` keeps the model honest).
+
+use std::time::Duration;
+
+use crate::coordinator::scheduler::{plan_layer_group_costs, plan_layer_groups};
+use crate::error::{Error, Result};
+use crate::net::wire::Frame;
+use crate::snn::network::Network;
+use crate::snn::spikes::SpikePlane;
+
+/// Modeled properties of one coordinator→shard link: the
+/// constant-bandwidth model (serialization at `bandwidth_bytes_per_s`,
+/// propagation of `latency_us` each way). The same numbers drive the
+/// loopback delay-line throttle
+/// (`LoopbackTransport::pair_throttled`), so a modeled topology can be
+/// *instantiated* and measured against its own prediction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinkSpec {
+    /// Serialization rate in bytes per second (shared by both
+    /// directions; each direction has the full rate).
+    pub bandwidth_bytes_per_s: u64,
+    /// One-way propagation delay in microseconds.
+    pub latency_us: u64,
+}
+
+impl LinkSpec {
+    /// A link with the given bandwidth and one-way latency.
+    pub const fn new(bandwidth_bytes_per_s: u64, latency_us: u64) -> Self {
+        LinkSpec {
+            bandwidth_bytes_per_s,
+            latency_us,
+        }
+    }
+
+    /// An effectively free in-process link: memory-bus bandwidth, no
+    /// propagation delay. Modeling a plain loopback constellation with
+    /// these reduces the makespan formula to the §Pipeline model.
+    pub const fn loopback() -> Self {
+        LinkSpec::new(8 << 30, 0)
+    }
+
+    /// One-way propagation delay as a [`Duration`].
+    pub fn latency(&self) -> Duration {
+        Duration::from_micros(self.latency_us)
+    }
+
+    /// Microseconds to serialize `bytes` onto this link.
+    pub fn tx_us(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.bandwidth_bytes_per_s.max(1) as f64 * 1e6
+    }
+}
+
+/// Calibrated scalar costs the planner multiplies its structural
+/// knowledge (synop counts, frame bytes) by. Two knobs only, both
+/// recoverable from cheap measurements — everything else in the model
+/// is measured or specified exactly.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostModel {
+    /// Microseconds per dense-equivalent synaptic op of the functional
+    /// executor on this machine.
+    pub per_synop_us: f64,
+    /// Fixed per-frame, per-hop overhead in microseconds: codec,
+    /// scheduling, and channel hand-off — everything a wire frame
+    /// costs beyond bandwidth and compute.
+    pub per_frame_overhead_us: f64,
+}
+
+impl CostModel {
+    /// A rough machine-independent prior for planning before any
+    /// measurement: ~1 GHz of effective synop throughput and a few
+    /// microseconds of per-frame overhead.
+    pub fn uncalibrated() -> Self {
+        CostModel {
+            per_synop_us: 1e-3,
+            per_frame_overhead_us: 5.0,
+        }
+    }
+
+    /// Calibrate from two measurements on the target machine:
+    /// `reference_clip_us` (one clip through the sequential reference
+    /// executor — pins `per_synop_us`) and `loopback_clip_us` (the same
+    /// clip through a **1-shard plain loopback** constellation, whose
+    /// modeled makespan is `T·(compute + overhead)` — the difference
+    /// pins `per_frame_overhead_us`).
+    pub fn calibrate(network: &Network, reference_clip_us: f64, loopback_clip_us: f64) -> Self {
+        let t = network.timesteps.max(1) as f64;
+        let synops = network.dense_synops_per_timestep().max(1) as f64;
+        let compute_per_step = reference_clip_us / t;
+        let overhead = (loopback_clip_us / t - compute_per_step).max(0.05);
+        CostModel {
+            per_synop_us: (compute_per_step / synops).max(1e-9),
+            per_frame_overhead_us: overhead,
+        }
+    }
+}
+
+/// One hop of a [`DeploymentPlan`]: which site hosts which layer
+/// group, how many replicas back it, the planned protocol window, and
+/// the modeled cost terms behind those choices.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HopPlan {
+    /// Index into the candidate-site slice passed to
+    /// [`plan_deployment`].
+    pub site: usize,
+    /// Replicas provisioned for this hop (≥ 1; leftover sites are
+    /// spent on the makespan-critical hops, which have the least
+    /// headroom to mask a failover replay).
+    pub replicas: usize,
+    /// Planned protocol window: the bandwidth-delay product in frames,
+    /// clamped to the planner's bounds.
+    pub window: usize,
+    /// Stateful-layer range `[a, b)` of the group this hop serves.
+    pub group: (usize, usize),
+    /// Modeled per-timestep compute on this hop, microseconds.
+    pub compute_us: f64,
+    /// Encoded request `SpikeFrame` size toward this hop, bytes.
+    pub in_bytes: u64,
+    /// Encoded reply `SpikeFrame` size from this hop, bytes.
+    pub out_bytes: u64,
+    /// Modeled steady-state service time per frame, microseconds.
+    pub serv_us: f64,
+    /// Modeled per-frame round trip, microseconds.
+    pub rtt_us: f64,
+    /// Modeled steady-state inter-frame interval under the planned
+    /// window: `max(serv, rtt / window)`, microseconds.
+    pub steady_us: f64,
+}
+
+/// What [`plan_deployment`] decides: the layer-group partition, one
+/// [`HopPlan`] per hop, and the modeled clip makespan those choices
+/// achieve.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeploymentPlan {
+    /// Contiguous stateful-layer groups, one per hop (the
+    /// `plan_layer_groups` partition at the chosen group count).
+    pub groups: Vec<(usize, usize)>,
+    /// Per-hop placement, replicas, window, and modeled cost terms.
+    pub hops: Vec<HopPlan>,
+    /// Modeled end-to-end clip makespan, microseconds.
+    pub modeled_clip_us: f64,
+}
+
+impl DeploymentPlan {
+    /// The per-hop window schedule (hand to
+    /// `DistributedEngine::set_windows`).
+    pub fn windows(&self) -> Vec<usize> {
+        self.hops.iter().map(|h| h.window).collect()
+    }
+
+    /// The [`LinkSpec`] each hop was planned onto, in hop order.
+    pub fn links(&self, sites: &[LinkSpec]) -> Vec<LinkSpec> {
+        self.hops.iter().map(|h| sites[h.site]).collect()
+    }
+}
+
+/// Planner knobs: window bounds and the cost model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlannerConfig {
+    /// Inclusive `(min, max)` bounds on planned (and retuned) per-hop
+    /// windows. The max also bounds in-flight frame memory per hop.
+    pub window_bounds: (usize, usize),
+    /// Calibrated scalar costs ([`CostModel::calibrate`]).
+    pub cost: CostModel,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        PlannerConfig {
+            window_bounds: (1, 32),
+            cost: CostModel::uncalibrated(),
+        }
+    }
+}
+
+/// Clamp a planned or retuned window into `bounds`.
+pub fn clamp_window(window: usize, bounds: (usize, usize)) -> usize {
+    window.clamp(bounds.0.max(1), bounds.1.max(bounds.0).max(1))
+}
+
+/// The bandwidth-delay window for a hop: just enough in-flight frames
+/// that waiting on the round trip never gates throughput
+/// (`rtt / W ≤ serv`), clamped into `bounds`.
+pub fn planned_window(rtt_us: f64, serv_us: f64, bounds: (usize, usize)) -> usize {
+    let need = (rtt_us / serv_us.max(1e-9)).ceil() as usize;
+    clamp_window(need.max(1), bounds)
+}
+
+/// Measured request/reply `SpikeFrame` sizes per hop for a group
+/// partition: a zero frame is stepped through the spans (spike planes
+/// are bit-packed, so encoded size depends only on shape) and each
+/// boundary's frame is encoded through the real codec. Returns one
+/// `(request_bytes, reply_bytes)` pair per hop.
+pub fn hop_frame_bytes(network: &Network, groups: &[(usize, usize)]) -> Result<Vec<(u64, u64)>> {
+    let spans = network.group_spans(groups)?;
+    let (c0, h0, w0) = network
+        .layers
+        .first()
+        .ok_or_else(|| Error::config("empty network"))?
+        .in_shape;
+    let mut state = network.init_state()?;
+    let mut plane = SpikePlane::zeros(c0, h0, w0);
+    let mut sizes = Vec::with_capacity(spans.len());
+    let mut si = 0usize;
+    for span in &spans {
+        let banks = span.banks();
+        let in_bytes = frame_bytes(&plane);
+        let (out, _) = network.step_group(span, &plane, &mut state.vmems[si..si + banks])?;
+        sizes.push((in_bytes, frame_bytes(&out)));
+        plane = out;
+        si += banks;
+    }
+    Ok(sizes)
+}
+
+fn frame_bytes(plane: &SpikePlane) -> u64 {
+    let (c, h, w) = plane.shape();
+    Frame::SpikeFrame {
+        clip: 0,
+        seq: 0,
+        plane: SpikePlane::zeros(c, h, w),
+    }
+    .to_bytes()
+    .len() as u64
+}
+
+/// Modeled cost terms of one hop on one link.
+fn hop_terms(
+    compute_us: f64,
+    bytes: (u64, u64),
+    link: &LinkSpec,
+    cost: &CostModel,
+) -> (f64, f64) {
+    let tx_in = link.tx_us(bytes.0);
+    let tx_out = link.tx_us(bytes.1);
+    let ovh = cost.per_frame_overhead_us;
+    let serv = compute_us.max(tx_in).max(tx_out) + ovh;
+    let rtt = tx_in + tx_out + 2.0 * link.latency_us as f64 + compute_us + ovh;
+    (serv, rtt)
+}
+
+/// Modeled end-to-end clip makespan (microseconds) of an
+/// **instantiated** topology: `groups` layer groups on hops with the
+/// given `links` and per-hop `windows`. This is the formula the
+/// simulate-vs-measured bench holds against real runs; see the module
+/// docs for its derivation.
+pub fn modeled_clip_us(
+    network: &Network,
+    groups: &[(usize, usize)],
+    links: &[LinkSpec],
+    windows: &[usize],
+    cost: &CostModel,
+) -> Result<f64> {
+    if groups.len() != links.len() || groups.len() != windows.len() {
+        return Err(Error::config(format!(
+            "{} groups, {} links, {} windows: the topology vectors must align",
+            groups.len(),
+            links.len(),
+            windows.len()
+        )));
+    }
+    let demands = plan_layer_group_costs(network, groups);
+    let bytes = hop_frame_bytes(network, groups)?;
+    let t = network.timesteps.max(1) as f64;
+    let mut fill = 0.0f64;
+    let mut t_step = 0.0f64;
+    for h in 0..groups.len() {
+        let compute = demands[h] as f64 * cost.per_synop_us;
+        let (serv, rtt) = hop_terms(compute, bytes[h], &links[h], cost);
+        fill += rtt;
+        t_step = t_step.max(serv.max(rtt / windows[h].max(1) as f64));
+    }
+    Ok(fill + (t - 1.0) * t_step)
+}
+
+/// Choose a deployment for `network` over `sites` (one candidate shard
+/// endpoint per [`LinkSpec`]): the group count `G ∈ 1..=min(|sites|,
+/// stateful layers)`, a placement of the `plan_layer_groups` partition
+/// onto `G` of the sites, per-hop bandwidth-delay windows, and a
+/// replica spread of the leftover sites — minimizing the modeled clip
+/// makespan.
+///
+/// Placement is greedy-bottleneck: hops are considered in descending
+/// compute demand and each takes the free site minimizing its
+/// steady-state interval (ties toward lower round trip) — heavy groups
+/// get fast links, and a slow link ends up with the lightest group and
+/// a wide window rather than gating the whole chain.
+pub fn plan_deployment(
+    network: &Network,
+    sites: &[LinkSpec],
+    cfg: &PlannerConfig,
+) -> Result<DeploymentPlan> {
+    if sites.is_empty() {
+        return Err(Error::config("no candidate sites to plan onto"));
+    }
+    let stateful = network.stateful_layers().count();
+    if stateful == 0 {
+        return Err(Error::config("network has no stateful layers to place"));
+    }
+    let t = network.timesteps.max(1) as f64;
+    let mut best: Option<DeploymentPlan> = None;
+    for g in 1..=stateful.min(sites.len()) {
+        let groups = plan_layer_groups(network, g);
+        let demands = plan_layer_group_costs(network, &groups);
+        let bytes = hop_frame_bytes(network, &groups)?;
+
+        // Greedy-bottleneck assignment: heaviest hop first, each onto
+        // the free site with the smallest achievable steady interval.
+        let mut order: Vec<usize> = (0..groups.len()).collect();
+        order.sort_by(|&a, &b| demands[b].cmp(&demands[a]).then(a.cmp(&b)));
+        let mut taken = vec![false; sites.len()];
+        let mut hops: Vec<Option<HopPlan>> = vec![None; groups.len()];
+        for &h in &order {
+            let compute = demands[h] as f64 * cfg.cost.per_synop_us;
+            let mut pick: Option<(usize, f64, f64, f64)> = None;
+            for (s, spec) in sites.iter().enumerate() {
+                if taken[s] {
+                    continue;
+                }
+                let (serv, rtt) = hop_terms(compute, bytes[h], spec, &cfg.cost);
+                let w = planned_window(rtt, serv, cfg.window_bounds);
+                let steady = serv.max(rtt / w as f64);
+                let better = match &pick {
+                    None => true,
+                    Some(&(_, ps, prtt, _)) => {
+                        steady < ps - 1e-12 || ((steady - ps).abs() <= 1e-12 && rtt < prtt)
+                    }
+                };
+                if better {
+                    pick = Some((s, steady, rtt, serv));
+                }
+            }
+            let (site, steady, rtt, serv) =
+                pick.expect("g <= sites.len(), so a free site always remains");
+            taken[site] = true;
+            hops[h] = Some(HopPlan {
+                site,
+                replicas: 1,
+                window: planned_window(rtt, serv, cfg.window_bounds),
+                group: groups[h],
+                compute_us: compute,
+                in_bytes: bytes[h].0,
+                out_bytes: bytes[h].1,
+                serv_us: serv,
+                rtt_us: rtt,
+                steady_us: steady,
+            });
+        }
+        let mut hops: Vec<HopPlan> = hops.into_iter().map(|h| h.unwrap()).collect();
+
+        // Spend leftover sites as replicas on the makespan-critical
+        // hops (highest steady interval first): those have the least
+        // slack to absorb a failover re-push + replay.
+        let spare = sites.len() - groups.len();
+        if spare > 0 {
+            let mut crit: Vec<usize> = (0..hops.len()).collect();
+            crit.sort_by(|&a, &b| {
+                hops[b]
+                    .steady_us
+                    .partial_cmp(&hops[a].steady_us)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            });
+            for i in 0..spare {
+                hops[crit[i % crit.len()]].replicas += 1;
+            }
+        }
+
+        let fill: f64 = hops.iter().map(|h| h.rtt_us).sum();
+        let t_step = hops.iter().map(|h| h.steady_us).fold(0.0f64, f64::max);
+        let modeled = fill + (t - 1.0) * t_step;
+        let improves = match &best {
+            None => true,
+            Some(b) => modeled < b.modeled_clip_us - 1e-9,
+        };
+        if improves {
+            best = Some(DeploymentPlan {
+                groups,
+                hops,
+                modeled_clip_us: modeled,
+            });
+        }
+    }
+    Ok(best.expect("at least one group count was evaluated"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::network::demo_pipeline_network;
+
+    fn net() -> Network {
+        demo_pipeline_network(12).unwrap()
+    }
+
+    #[test]
+    fn frame_bytes_follow_the_group_boundaries() {
+        let n = net();
+        let groups = plan_layer_groups(&n, 3);
+        let bytes = hop_frame_bytes(&n, &groups).unwrap();
+        assert_eq!(bytes.len(), groups.len());
+        // chained hops: each reply shape is the next request shape
+        for w in bytes.windows(2) {
+            assert_eq!(w[0].1, w[1].0);
+        }
+        // bit-packed planes: all sizes are modest but non-zero
+        assert!(bytes.iter().all(|&(i, o)| i > 0 && o > 0));
+    }
+
+    #[test]
+    fn calibration_recovers_the_two_knobs() {
+        let n = net();
+        let t = n.timesteps as f64;
+        let synops = n.dense_synops_per_timestep() as f64;
+        // reference: 1 us/step/synop-unit; loopback adds 3 us/frame
+        let m = CostModel::calibrate(&n, t * synops * 1e-3, t * (synops * 1e-3 + 3.0));
+        assert!((m.per_synop_us - 1e-3).abs() < 1e-9);
+        assert!((m.per_frame_overhead_us - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn planned_window_is_the_bandwidth_delay_product() {
+        assert_eq!(planned_window(100.0, 100.0, (1, 32)), 1);
+        assert_eq!(planned_window(1000.0, 100.0, (1, 32)), 10);
+        assert_eq!(planned_window(1001.0, 100.0, (1, 32)), 11);
+        assert_eq!(planned_window(1e6, 1.0, (1, 32)), 32); // clamped
+        assert_eq!(planned_window(0.0, 100.0, (2, 32)), 2); // floor
+    }
+
+    #[test]
+    fn free_links_reduce_to_the_pipeline_model() {
+        let n = net();
+        let cost = CostModel {
+            per_synop_us: 1e-3,
+            per_frame_overhead_us: 0.0,
+        };
+        let groups = plan_layer_groups(&n, 2);
+        let demands = plan_layer_group_costs(&n, &groups);
+        let links = vec![LinkSpec::loopback(); 2];
+        let modeled = modeled_clip_us(&n, &groups, &links, &[1, 1], &cost).unwrap();
+        let c: Vec<f64> = demands.iter().map(|&d| d as f64 * 1e-3).collect();
+        let want = c.iter().sum::<f64>() + (n.timesteps as f64 - 1.0) * c[0].max(c[1]);
+        // only the (negligible) tx terms separate the two formulas
+        assert!(
+            (modeled - want).abs() / want < 1e-3,
+            "modeled {modeled} vs pipeline-model {want}"
+        );
+    }
+
+    #[test]
+    fn planner_gives_the_slow_site_the_lightest_group_and_a_wide_window() {
+        let n = net();
+        let sites = [
+            LinkSpec::loopback(),
+            LinkSpec::new(64 << 20, 2_000), // the slow, distant site
+            LinkSpec::loopback(),
+        ];
+        let cfg = PlannerConfig::default();
+        let plan = plan_deployment(&n, &sites, &cfg).unwrap();
+        assert_eq!(plan.hops.len(), plan.groups.len());
+        assert!(plan.modeled_clip_us > 0.0);
+        if let Some(slow) = plan.hops.iter().find(|h| h.site == 1) {
+            // the slow link's window must open far enough to hide its
+            // round trip; free links need almost nothing
+            let fast_max = plan
+                .hops
+                .iter()
+                .filter(|h| h.site != 1)
+                .map(|h| h.window)
+                .max()
+                .unwrap();
+            assert!(
+                slow.window > fast_max,
+                "slow hop window {} vs fast max {fast_max}",
+                slow.window
+            );
+            // and it hosts no more compute than any other hop
+            assert!(plan
+                .hops
+                .iter()
+                .all(|h| h.site == 1 || h.compute_us >= slow.compute_us - 1e-9));
+        }
+    }
+
+    #[test]
+    fn spare_sites_become_replicas_on_the_critical_hop() {
+        let n = net();
+        let stateful = n.stateful_layers().count();
+        // more sites than stateful layers: the plan must spend the
+        // spares as replicas, keeping every count >= 1
+        let sites = vec![LinkSpec::loopback(); stateful + 2];
+        let plan = plan_deployment(&n, &sites, &PlannerConfig::default()).unwrap();
+        let total: usize = plan.hops.iter().map(|h| h.replicas).sum();
+        assert_eq!(total, plan.hops.len() + 2);
+        assert!(plan.hops.iter().all(|h| h.replicas >= 1));
+        // the extra replicas sit on the highest modeled steady interval
+        let crit = plan
+            .hops
+            .iter()
+            .max_by(|a, b| a.steady_us.partial_cmp(&b.steady_us).unwrap())
+            .unwrap();
+        assert!(crit.replicas >= 2);
+    }
+
+    #[test]
+    fn single_site_collapses_to_one_hop() {
+        let n = net();
+        let plan = plan_deployment(&n, &[LinkSpec::loopback()], &PlannerConfig::default()).unwrap();
+        assert_eq!(plan.groups.len(), 1);
+        assert_eq!(plan.hops[0].replicas, 1);
+        assert_eq!(plan.windows(), vec![plan.hops[0].window]);
+    }
+
+    #[test]
+    fn topology_vectors_must_align() {
+        let n = net();
+        let groups = plan_layer_groups(&n, 2);
+        let cost = CostModel::uncalibrated();
+        assert!(modeled_clip_us(&n, &groups, &[LinkSpec::loopback()], &[2, 2], &cost).is_err());
+        assert!(plan_deployment(&n, &[], &PlannerConfig::default()).is_err());
+    }
+}

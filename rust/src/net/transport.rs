@@ -17,6 +17,7 @@ use std::collections::VecDeque;
 use std::io::{self, Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::error::Result;
 use crate::net::wire::Frame;
@@ -102,12 +103,90 @@ impl Transport for TcpTransport {
 /// as socket runs).
 pub const DEFAULT_PIPE_CAPACITY: usize = 256 * 1024;
 
+/// Delay-line model of a finite link (DESIGN.md §Planner): bytes
+/// **serialize** onto the wire at `bandwidth_bytes_per_s` (the
+/// serialization frontier `busy_until` advances by `bytes/bandwidth`
+/// per chunk, so back-to-back writes queue behind each other) and then
+/// **propagate** for `latency` before the reader may consume them.
+/// Because each chunk's delivery time is stamped at *write* time,
+/// propagation delays overlap across in-flight frames — exactly why a
+/// larger protocol window hides a long round trip, and what a naive
+/// sleep-per-frame throttle would fail to model.
+struct ThrottleState {
+    bandwidth_bytes_per_s: u64,
+    latency: Duration,
+    /// Time origin shared by both stamps below.
+    origin: Instant,
+    /// Serialization frontier: when the wire finishes transmitting
+    /// everything written so far (relative to `origin`).
+    busy_until: Duration,
+    /// Per-chunk `(len, ready_at)` delivery stamps, in write order
+    /// (`ready_at` is monotone, relative to `origin`). Lengths sum to
+    /// `data.len()` of the owning pipe.
+    chunks: VecDeque<(usize, Duration)>,
+}
+
+impl ThrottleState {
+    fn new(bandwidth_bytes_per_s: u64, latency: Duration) -> Self {
+        ThrottleState {
+            bandwidth_bytes_per_s: bandwidth_bytes_per_s.max(1),
+            latency,
+            origin: Instant::now(),
+            busy_until: Duration::ZERO,
+            chunks: VecDeque::new(),
+        }
+    }
+
+    /// Stamp `len` freshly written bytes with their delivery time.
+    fn stamp(&mut self, len: usize) {
+        let now = self.origin.elapsed();
+        let tx = Duration::from_secs_f64(len as f64 / self.bandwidth_bytes_per_s as f64);
+        self.busy_until = self.busy_until.max(now) + tx;
+        let ready_at = self.busy_until + self.latency;
+        self.chunks.push_back((len, ready_at));
+    }
+
+    /// How many queued bytes have already arrived, plus (when none
+    /// have) how long until the head chunk lands.
+    fn arrived(&self) -> (usize, Option<Duration>) {
+        let now = self.origin.elapsed();
+        let mut ready = 0;
+        for &(len, at) in &self.chunks {
+            if at <= now {
+                ready += len;
+            } else if ready == 0 {
+                return (0, Some(at - now));
+            } else {
+                break;
+            }
+        }
+        (ready, None)
+    }
+
+    /// Account `n` bytes consumed by the reader.
+    fn consume(&mut self, mut n: usize) {
+        while n > 0 {
+            let (len, at) = self.chunks[0];
+            if len <= n {
+                n -= len;
+                self.chunks.pop_front();
+            } else {
+                self.chunks[0] = (len - n, at);
+                n = 0;
+            }
+        }
+    }
+}
+
 /// One bounded unidirectional byte queue.
 struct PipeState {
     data: VecDeque<u8>,
     capacity: usize,
     write_closed: bool,
     read_closed: bool,
+    /// `Some` puts a modeled finite link on this direction; `None`
+    /// (every pre-existing pipe) adds no overhead to the data path.
+    throttle: Option<ThrottleState>,
 }
 
 struct Pipe {
@@ -118,13 +197,14 @@ struct Pipe {
     writable: Condvar,
 }
 
-fn byte_pipe(capacity: usize) -> (PipeWriter, PipeReader) {
+fn byte_pipe_inner(capacity: usize, throttle: Option<ThrottleState>) -> (PipeWriter, PipeReader) {
     let pipe = Arc::new(Pipe {
         state: Mutex::new(PipeState {
             data: VecDeque::new(),
             capacity: capacity.max(1),
             write_closed: false,
             read_closed: false,
+            throttle,
         }),
         readable: Condvar::new(),
         writable: Condvar::new(),
@@ -135,6 +215,10 @@ fn byte_pipe(capacity: usize) -> (PipeWriter, PipeReader) {
         },
         PipeReader { pipe },
     )
+}
+
+fn byte_pipe(capacity: usize) -> (PipeWriter, PipeReader) {
+    byte_pipe_inner(capacity, None)
 }
 
 /// Write half of a bounded in-process byte pipe. A full pipe blocks
@@ -161,6 +245,9 @@ impl Write for PipeWriter {
             if free > 0 {
                 let n = free.min(buf.len());
                 st.data.extend(&buf[..n]);
+                if let Some(t) = &mut st.throttle {
+                    t.stamp(n);
+                }
                 self.pipe.readable.notify_all();
                 return Ok(n);
             }
@@ -197,17 +284,51 @@ impl Read for PipeReader {
         let mut st = self.pipe.state.lock().unwrap();
         loop {
             if !st.data.is_empty() {
-                let n = buf.len().min(st.data.len());
-                for (dst, b) in buf.iter_mut().zip(st.data.drain(..n)) {
-                    *dst = b;
+                // On a throttled pipe only bytes whose modeled delivery
+                // time has passed are visible; queued-but-in-flight
+                // bytes keep the reader waiting out the residual delay.
+                let (visible, eta) = match &st.throttle {
+                    None => (st.data.len(), None),
+                    Some(t) => {
+                        let (ready, eta) = t.arrived();
+                        // Every byte is stamped under the same lock
+                        // that queued it, so `ready == 0` without an
+                        // ETA cannot happen while data is queued; fall
+                        // back to full visibility rather than spin.
+                        if ready == 0 && eta.is_none() {
+                            (st.data.len(), None)
+                        } else {
+                            (ready, eta)
+                        }
+                    }
+                };
+                if visible > 0 {
+                    let n = buf.len().min(visible);
+                    for (dst, b) in buf.iter_mut().zip(st.data.drain(..n)) {
+                        *dst = b;
+                    }
+                    if let Some(t) = &mut st.throttle {
+                        t.consume(n);
+                    }
+                    self.pipe.writable.notify_all();
+                    return Ok(n);
                 }
-                self.pipe.writable.notify_all();
-                return Ok(n);
+                if let Some(wait) = eta {
+                    let (guard, _) = self
+                        .pipe
+                        .readable
+                        .wait_timeout(st, wait)
+                        .unwrap();
+                    st = guard;
+                    continue;
+                }
             }
-            if st.write_closed {
+            if st.data.is_empty() && st.write_closed {
                 return Ok(0);
             }
-            st = self.pipe.readable.wait(st).unwrap();
+            if st.data.is_empty() {
+                st = self.pipe.readable.wait(st).unwrap();
+            }
         }
     }
 }
@@ -244,6 +365,29 @@ impl LoopbackTransport {
     pub fn pair_with_capacity(capacity: usize) -> (Self, Self) {
         let (a_tx, b_rx) = byte_pipe(capacity);
         let (b_tx, a_rx) = byte_pipe(capacity);
+        (
+            LoopbackTransport { tx: a_tx, rx: a_rx },
+            LoopbackTransport { tx: b_tx, rx: b_rx },
+        )
+    }
+
+    /// A connected pair over a **modeled finite link**: both directions
+    /// serialize at `bandwidth_bytes_per_s` and each byte arrives
+    /// `latency` after it finishes serializing (a delay line, not a
+    /// sleep per frame — in-flight frames overlap their propagation
+    /// delays, so protocol windows hide the round trip exactly as they
+    /// would on a real long link). This is how the skewed-constellation
+    /// auto-tune bench and CI smoke build their deliberately slow hop
+    /// without sockets (DESIGN.md §Planner).
+    pub fn pair_throttled(bandwidth_bytes_per_s: u64, latency: Duration) -> (Self, Self) {
+        let (a_tx, b_rx) = byte_pipe_inner(
+            DEFAULT_PIPE_CAPACITY,
+            Some(ThrottleState::new(bandwidth_bytes_per_s, latency)),
+        );
+        let (b_tx, a_rx) = byte_pipe_inner(
+            DEFAULT_PIPE_CAPACITY,
+            Some(ThrottleState::new(bandwidth_bytes_per_s, latency)),
+        );
         (
             LoopbackTransport { tx: a_tx, rx: a_rx },
             LoopbackTransport { tx: b_tx, rx: b_rx },
@@ -341,6 +485,79 @@ mod tests {
         assert!(b.recv().unwrap().is_some());
         t.join().unwrap();
         assert!(sent.load(Ordering::SeqCst));
+    }
+
+    /// A throttled pair delivers no earlier than the modeled
+    /// serialization + propagation delay.
+    #[test]
+    fn throttled_pipe_delays_delivery_by_the_link_latency() {
+        let latency = Duration::from_millis(40);
+        let (mut a, mut b) = LoopbackTransport::pair_throttled(100 << 20, latency);
+        let t0 = Instant::now();
+        a.send(&ping(1)).unwrap();
+        assert_eq!(b.recv().unwrap(), Some(ping(1)));
+        assert!(
+            t0.elapsed() >= latency,
+            "frame arrived in {:?}, before the modeled {latency:?} latency",
+            t0.elapsed()
+        );
+    }
+
+    /// The delay line is not a sleep per frame: N frames written
+    /// back-to-back overlap their propagation delays, so the batch
+    /// drains in roughly one latency, not N of them. This is the
+    /// property that makes protocol windows worth widening over a long
+    /// link (DESIGN.md §Planner).
+    #[test]
+    fn throttled_pipe_overlaps_latency_across_inflight_frames() {
+        let latency = Duration::from_millis(60);
+        let (mut a, mut b) = LoopbackTransport::pair_throttled(100 << 20, latency);
+        let t0 = Instant::now();
+        for clip in 0..4 {
+            a.send(&ping(clip)).unwrap();
+        }
+        for clip in 0..4 {
+            assert_eq!(b.recv().unwrap(), Some(ping(clip)));
+        }
+        let wall = t0.elapsed();
+        assert!(wall >= latency, "4 frames in {wall:?}: beat the link latency");
+        assert!(
+            wall < 3 * latency,
+            "4 overlapped frames took {wall:?} (≥ 3×{latency:?}): \
+             the throttle serialized propagation delays"
+        );
+    }
+
+    /// Serialization is modeled too: a large frame over a thin pipe is
+    /// paced by bytes/bandwidth, well past the (zero) latency.
+    #[test]
+    fn throttled_pipe_paces_bytes_at_the_link_bandwidth() {
+        // ~1KB payload over 20 KB/s ≈ 50ms of serialization.
+        let (mut a, mut b) = LoopbackTransport::pair_throttled(20_000, Duration::ZERO);
+        let big = Frame::Error {
+            message: "z".repeat(1000),
+        };
+        let want = big.clone();
+        let t0 = Instant::now();
+        a.send(&big).unwrap();
+        assert_eq!(b.recv().unwrap(), Some(want));
+        assert!(
+            t0.elapsed() >= Duration::from_millis(40),
+            "1KB over a 20KB/s link arrived in {:?}",
+            t0.elapsed()
+        );
+    }
+
+    /// Dropping a throttled end is still a clean EOF once the bytes in
+    /// flight have landed.
+    #[test]
+    fn throttled_pipe_drains_then_eofs_after_hangup() {
+        let (mut a, mut b) =
+            LoopbackTransport::pair_throttled(100 << 20, Duration::from_millis(10));
+        a.send(&ping(5)).unwrap();
+        drop(a);
+        assert_eq!(b.recv().unwrap(), Some(ping(5)));
+        assert_eq!(b.recv().unwrap(), None);
     }
 
     #[test]
