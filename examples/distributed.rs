@@ -35,6 +35,13 @@
 //! # deadline-bounded lane-batch assembly on the streaming server
 //! # (DESIGN.md §Planner), with per-hop stage metrics surfaced:
 //! cargo run --release --example distributed -- --deadline-us 2000
+//!
+//! # observability: export one Chrome-trace JSON joining coordinator
+//! # and shard spans per clip (open it in Perfetto), plus a Prometheus
+//! # metrics snapshot with the clip-latency histogram (DESIGN.md
+//! # §Observability):
+//! cargo run --release --example distributed -- \
+//!     --replicas 2 --trace trace.json --metrics metrics.prom
 //! ```
 //!
 //! Either way the example acts as the coordinator: it builds the
@@ -54,6 +61,7 @@ use spidr::coordinator::{
 };
 use spidr::dvs::event::{Event, Polarity};
 use spidr::net::{DistributedConfig, DistributedEngine, LinkSpec, TcpTransport, Transport};
+use spidr::obs::{hub, trace, tracer};
 use spidr::prop::SplitMix64;
 use spidr::snn::network::{demo_pipeline_network, demo_serving_network, Network};
 use spidr::snn::spikes::{SpikePlane, MAX_LANES};
@@ -270,6 +278,27 @@ fn main() -> spidr::Result<()> {
         return run_deadline_demo(deadline_us);
     }
     let connect = flag_value(&args, "--connect");
+    let trace_out = flag_value(&args, "--trace");
+    let metrics_out = flag_value(&args, "--metrics");
+    let metrics_server = match flag_value(&args, "--metrics-listen") {
+        Some(addr) => {
+            let server = spidr::obs::MetricsServer::spawn(&addr, hub())?;
+            println!(
+                "metrics: live Prometheus endpoint on {} \
+                 (scrape with `spidr metrics --connect ...`)",
+                server.local_addr()
+            );
+            Some(server)
+        }
+        None => None,
+    };
+    if trace_out.is_some() {
+        // Enable before the engine is built: connect-time trace sync
+        // (the shard clock-offset estimate) only runs under an enabled
+        // tracer (DESIGN.md §Observability).
+        tracer().enable(1);
+        tracer().set_process_label("coordinator");
+    }
     let replicas: usize = flag_value(&args, "--replicas")
         .and_then(|v| v.parse().ok())
         .unwrap_or(1);
@@ -360,7 +389,16 @@ fn main() -> spidr::Result<()> {
                 engine.sever_replica(hop, r)?;
             }
         }
-        let got = engine.infer(clip)?;
+        // One trace per clip: the root "clip" span on this thread and
+        // the shard-side spans pulled back over the sideband all carry
+        // this id, so Perfetto shows the clip end to end.
+        let _bind = trace::bind(tracer().mint());
+        let c0 = Instant::now();
+        let got = {
+            let _span = trace::span("clip");
+            engine.infer(clip)?
+        };
+        hub().observe_us("spidr_clip_latency_us", c0.elapsed().as_micros() as u64);
         assert_eq!(
             got, want[i],
             "distributed output diverged from the reference on clip {i}"
@@ -405,9 +443,14 @@ fn main() -> spidr::Result<()> {
         }
         let refs: Vec<&[SpikePlane]> = bclips.iter().map(|c| c.as_slice()).collect();
         let (s0, l0) = engine.wire_frames();
+        let _bind = trace::bind(tracer().mint());
         let t1 = Instant::now();
-        let got = engine.infer_batch(&refs)?;
+        let got = {
+            let _span = trace::span("lane_batch");
+            engine.infer_batch(&refs)?
+        };
         let bwall = t1.elapsed();
+        hub().observe_us("spidr_batch_latency_us", bwall.as_micros() as u64);
         assert_eq!(
             got, bwant,
             "batched distributed outputs diverged from the reference"
@@ -443,5 +486,43 @@ fn main() -> spidr::Result<()> {
         }
     }
     print_hops(&engine);
+
+    // Observability exports: one Perfetto-loadable trace joining the
+    // coordinator "clip" spans, hop spans, failover instants, and the
+    // re-based shard spans pulled over the sideband; plus the
+    // Prometheus metrics snapshot with the clip-latency histogram.
+    if let Some(path) = &trace_out {
+        std::fs::write(path, tracer().to_chrome_json())?;
+        println!(
+            "trace: {} events → {path} (load in https://ui.perfetto.dev)",
+            tracer().snapshot_events().len()
+        );
+    }
+    if let Some(path) = &metrics_out {
+        std::fs::write(path, hub().render_prometheus())?;
+        println!("metrics: Prometheus snapshot → {path}");
+    }
+    if trace_out.is_some() || metrics_out.is_some() {
+        let snap = hub().snapshot();
+        if let Some(h) = snap.hists.get("spidr_clip_latency_us") {
+            println!(
+                "clip latency over {} clips: p50 {} us, p99 {} us (log-bucketed, ±1/16)",
+                h.count(),
+                h.percentile(50.0),
+                h.percentile(99.0),
+            );
+        }
+    }
+    if let Some(mut server) = metrics_server {
+        // Hold the scrape endpoint open briefly so a `spidr metrics`
+        // client (the CI smoke, or a curious operator) can pull the
+        // finished-run snapshot before the process exits.
+        let linger: u64 = flag_value(&args, "--linger-ms")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(3000);
+        println!("metrics: endpoint open for {linger} ms more...");
+        std::thread::sleep(Duration::from_millis(linger));
+        server.stop();
+    }
     Ok(())
 }

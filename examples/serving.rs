@@ -3,6 +3,12 @@
 //!
 //! ```text
 //! cargo run --release --example serving
+//!
+//! # observability: export a Chrome-trace JSON of the request path
+//! # (ingest → dispatch → worker infer → clip roots; open it in
+//! # Perfetto) and hold a live Prometheus scrape endpoint open:
+//! cargo run --release --example serving -- \
+//!     --trace serving.json --metrics-listen 127.0.0.1:9464
 //! ```
 //!
 //! Demonstrates the L3 request path end to end (DESIGN.md §Serve):
@@ -16,6 +22,7 @@ use spidr::coordinator::{
     ServerConfig,
 };
 use spidr::dvs::event::{Event, Polarity};
+use spidr::obs::{hub, tracer, MetricsServer};
 use spidr::prop::SplitMix64;
 use spidr::sim::SimConfig;
 use spidr::snn::network::demo_serving_network;
@@ -33,7 +40,31 @@ fn burst(seed: u64) -> Vec<Event> {
         .collect()
 }
 
+fn flag_value(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
 fn main() -> spidr::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let trace_out = flag_value(&args, "--trace");
+    if trace_out.is_some() {
+        tracer().enable(1);
+        tracer().set_process_label("serving");
+    }
+    let metrics_server = match flag_value(&args, "--metrics-listen") {
+        Some(addr) => {
+            let server = MetricsServer::spawn(&addr, hub())?;
+            println!(
+                "metrics: live Prometheus endpoint on {} \
+                 (scrape with `spidr metrics --connect ...`)",
+                server.local_addr()
+            );
+            Some(server)
+        }
+        None => None,
+    };
     let net = demo_serving_network(10)?;
     let server = InferenceServer::new(ServerConfig {
         height: 16,
@@ -98,5 +129,37 @@ fn main() -> spidr::Result<()> {
         first.run.synops,
         first.run.total_energy_pj(spidr::energy::model::Corner::LOW) / 1e3,
     );
+
+    // Observability exports (DESIGN.md §Observability): the request
+    // path above ran with per-clip trace ids minted at ingest, so the
+    // Chrome-trace JSON shows ingest → dispatch → worker infer spans
+    // per clip; the hub holds the ingest→emit latency histograms the
+    // scrape endpoint serves.
+    if let Some(path) = &trace_out {
+        std::fs::write(path, tracer().to_chrome_json())?;
+        println!(
+            "trace: {} events → {path} (load in https://ui.perfetto.dev)",
+            tracer().snapshot_events().len()
+        );
+    }
+    if let Some(mut server) = metrics_server {
+        let snap = hub().snapshot();
+        if let Some(h) = snap.hists.get("spidr_clip_latency_us") {
+            println!(
+                "ingest→emit latency over {} clips: p50 {} us, p99 {} us",
+                h.count(),
+                h.percentile(50.0),
+                h.percentile(99.0),
+            );
+        }
+        // Hold the endpoint open briefly so `spidr metrics` can pull
+        // the finished-run snapshot before the process exits.
+        let linger: u64 = flag_value(&args, "--linger-ms")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(3000);
+        println!("metrics: endpoint open for {linger} ms more...");
+        std::thread::sleep(std::time::Duration::from_millis(linger));
+        server.stop();
+    }
     Ok(())
 }

@@ -1,0 +1,145 @@
+//! Observability overhead bench: what does tracing cost the serve
+//! fast path? (DESIGN.md §Observability — "observability must never
+//! tax the fast path it observes".)
+//!
+//! Four interleaved variants run the same clips through the same
+//! engine, min-of-N timed:
+//!
+//! * `baseline`  — bare `engine.infer` loop, no instrumentation calls.
+//! * `disabled`  — the serve-shaped instrumentation (mint + bind +
+//!   clip/dispatch/infer spans + an instant per clip) with the tracer
+//!   **disabled**: the production default. Must also take zero
+//!   timestamps (asserted via the `Tracer::stamps` audit counter).
+//! * `sampled`   — tracer enabled at 1-in-16 sampling.
+//! * `full`      — tracer enabled, every trace sampled (info only).
+//!
+//! Series (`DATA` lines + JSONL rows appended to `BENCH_obs.json`):
+//!
+//! * `tracing_overhead_ratio` — variant / baseline wall time at
+//!   x = 0 (disabled), 1 (sampled 1/16), 2 (full). The acceptance
+//!   gates: disabled ≤ 1.02, sampled ≤ 1.05.
+//! * `obs_baseline_clips_per_s` — baseline throughput, for context.
+//! * `hist_record_ns` — per-sample cost of the log-bucketed latency
+//!   histogram (one array increment; no gate).
+
+mod common;
+
+use spidr::coordinator::{Engine, ReferenceEngine};
+use spidr::obs::trace;
+use spidr::obs::{tracer, LatencyHistogram};
+use spidr::snn::network::demo_pipeline_network;
+use spidr::snn::spikes::SpikePlane;
+
+const TIMESTEPS: usize = 12;
+const CLIPS: usize = 48;
+const REPS: usize = 9;
+
+/// The uninstrumented fast path: raw compute only.
+fn run_baseline(engine: &mut ReferenceEngine, clips: &[Vec<SpikePlane>]) {
+    for clip in clips {
+        engine.infer(clip).unwrap();
+    }
+}
+
+/// The serve-shaped instrumentation around the same compute: one trace
+/// minted and bound per clip, the span set the serving tier opens
+/// (root clip, dispatch, infer) plus an emit instant.
+fn run_instrumented(engine: &mut ReferenceEngine, clips: &[Vec<SpikePlane>]) {
+    let tr = tracer();
+    for clip in clips {
+        let _bind = trace::bind(tr.mint());
+        let _clip = trace::span("clip");
+        {
+            let _dispatch = trace::span("dispatch");
+        }
+        let _infer = trace::span("infer");
+        engine.infer(clip).unwrap();
+        trace::instant("emit");
+    }
+}
+
+fn main() {
+    common::header(
+        "obs",
+        "tracing overhead: disabled / sampled / full vs uninstrumented",
+    );
+    let net = demo_pipeline_network(TIMESTEPS).expect("demo workload");
+    let (c, h, w) = net.layers[0].in_shape;
+    let clips: Vec<Vec<SpikePlane>> = (0..CLIPS)
+        .map(|i| common::random_clip(c, h, w, TIMESTEPS, 0.2, 9_000 + i as u64))
+        .collect();
+    let mut engine = ReferenceEngine::new(net).expect("engine");
+
+    // Warm-up: touch every code path once before timing.
+    run_baseline(&mut engine, &clips[..2.min(CLIPS)]);
+
+    let tr = tracer();
+    // Variant index 0 = baseline, 1 = disabled, 2 = sampled 1/16,
+    // 3 = full. Interleaved so clock/thermal drift hits all four
+    // equally; min-of-REPS discards the noise.
+    let mut best = [f64::INFINITY; 4];
+    let mut disabled_stamps = 0u64;
+    for _ in 0..REPS {
+        for variant in 0..4 {
+            match variant {
+                0 | 1 => tr.disable(),
+                2 => tr.enable(16),
+                _ => tr.enable(1),
+            }
+            let stamps0 = tr.stamps();
+            let (_, secs) = common::timed(|| match variant {
+                0 => run_baseline(&mut engine, &clips),
+                _ => run_instrumented(&mut engine, &clips),
+            });
+            if variant == 1 {
+                disabled_stamps += tr.stamps() - stamps0;
+            }
+            best[variant] = best[variant].min(secs);
+            tr.disable();
+            tr.reset();
+        }
+    }
+    assert_eq!(
+        disabled_stamps, 0,
+        "the disabled tracer took timestamps on the fast path"
+    );
+
+    let names = ["baseline", "disabled", "sampled 1/16", "full"];
+    for (variant, secs) in best.iter().enumerate() {
+        println!(
+            "{:>12}: {CLIPS} clips x {TIMESTEPS} steps in {secs:.4}s (best of {REPS})",
+            names[variant]
+        );
+    }
+    common::emit("obs_baseline_clips_per_s", 1.0, CLIPS as f64 / best[0]);
+
+    let disabled_ratio = best[1] / best[0];
+    let sampled_ratio = best[2] / best[0];
+    let full_ratio = best[3] / best[0];
+    common::emit("tracing_overhead_ratio", 0.0, disabled_ratio);
+    common::emit("tracing_overhead_ratio", 1.0, sampled_ratio);
+    common::emit("tracing_overhead_ratio", 2.0, full_ratio);
+    assert!(
+        disabled_ratio <= 1.02,
+        "disabled tracing must cost <=2% of the fast path, got {disabled_ratio:.4}x"
+    );
+    assert!(
+        sampled_ratio <= 1.05,
+        "1/16-sampled tracing must cost <=5% of the fast path, got {sampled_ratio:.4}x"
+    );
+
+    // The histogram side of the registry: one log-bucket increment
+    // per sample, O(1) memory no matter the stream length.
+    let mut hist = LatencyHistogram::new();
+    const SAMPLES: u64 = 1 << 20;
+    let (_, secs) = common::timed(|| {
+        let mut rng = spidr::prop::SplitMix64::new(7);
+        for _ in 0..SAMPLES {
+            hist.record(rng.below(1_000_000));
+        }
+    });
+    assert_eq!(hist.count(), SAMPLES);
+    let ns = secs * 1e9 / SAMPLES as f64;
+    println!("histogram record: {ns:.1} ns/sample over {SAMPLES} samples");
+    common::emit("hist_record_ns", 1.0, ns);
+}

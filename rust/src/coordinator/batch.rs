@@ -121,6 +121,9 @@ impl BatchedEngine {
     /// timestep count; at most [`Self::capacity`] clips per call
     /// ([`Engine::infer_batch`] chunks larger batches).
     pub fn infer_lanes(&mut self, clips: &[&[SpikePlane]]) -> Result<Vec<Vec<i32>>> {
+        // One CIM sweep per batch; attributes to the serving tier's
+        // bound trace (the batch anchor clip). Inert unless sampled.
+        let _tspan = crate::obs::trace::span("lane_batch");
         if clips.len() > self.cfg.capacity() {
             return Err(Error::config(format!(
                 "batch of {} clips exceeds the configured lane capacity {}",

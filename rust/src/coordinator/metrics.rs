@@ -1,8 +1,20 @@
 //! Lightweight latency/throughput metrics for the streaming server,
 //! the sharded serving pool, and the timestep-staged layer-group
 //! pipeline.
+//!
+//! Per-clip latencies are held in a fixed-memory log-bucketed
+//! histogram ([`LatencyHistogram`], DESIGN.md §Observability) — the
+//! old unbounded `Vec<u64>` buffer, whose `percentile_us` cloned and
+//! sorted every sample on every query, could not survive a
+//! sensor-scale stream. The public API (`mean_latency_us`,
+//! `percentile_us`, `record_clip`) is unchanged; percentiles are
+//! exact below 4096 µs and within the histogram's 1/16 bucket error
+//! bound above it.
 
 use std::time::Duration;
+
+use crate::obs::hist::LatencyHistogram;
+use crate::obs::metrics::MetricsHub;
 
 /// Per-stage counters from pipelined clip execution
 /// (`coordinator::pipeline`, DESIGN.md §Pipeline): how a stage's wall
@@ -21,8 +33,12 @@ pub struct StageMetrics {
     pub steps: u64,
     /// Wall time inside `Network::step_group`.
     pub busy: Duration,
-    /// Wall time blocked on the upstream channel (the starvation
-    /// counter; includes the initial fill wait).
+    /// Wall time blocked on the upstream channel — **steady-state**
+    /// starvation only. The wait for a clip's first frame to reach
+    /// this stage is the pipeline filling, not the upstream starving
+    /// it, and is accounted in [`StageMetrics::fill`] instead (it
+    /// used to land here, which made deep pipelines under-report
+    /// [`StageMetrics::occupancy`]).
     pub stall_in: Duration,
     /// Wall time blocked on a full downstream channel (the
     /// backpressure counter — a full FIFO stalls its producer, never
@@ -98,6 +114,10 @@ pub struct WorkerMetrics {
     /// Dynamic sizing retired this worker over a drained queue
     /// (`PoolConfig::sizing`; always `false` for fixed pools).
     pub retired: bool,
+    /// Replica failovers absorbed by this worker's engine (non-zero
+    /// only when the worker drives a distributed constellation; see
+    /// `Engine::failovers`).
+    pub failovers: u64,
 }
 
 impl WorkerMetrics {
@@ -123,7 +143,8 @@ impl WorkerMetrics {
 /// Online metrics aggregator.
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
-    latencies_us: Vec<u64>,
+    /// Fixed-memory per-clip latency distribution (µs).
+    latencies: LatencyHistogram,
     /// Clips processed.
     pub clips: u64,
     /// Frames processed.
@@ -143,6 +164,12 @@ pub struct Metrics {
     /// accumulated [`StageMetrics`] were attached after serving; see
     /// `PipelinedEngine::stage_metrics`).
     pub stages: Vec<StageMetrics>,
+    /// Replica failovers absorbed by the serving engine (previously
+    /// only visible on `DistributedEngine::failovers`; surfaced here
+    /// so the serve paths report them uniformly — pool workers report
+    /// theirs through [`WorkerMetrics::failovers`] instead, summed by
+    /// [`Metrics::total_failovers`]).
+    pub failovers: u64,
 }
 
 impl Metrics {
@@ -151,31 +178,33 @@ impl Metrics {
         Self::default()
     }
 
-    /// Record one completed clip.
+    /// Record one completed clip. O(1): one histogram increment, no
+    /// per-sample allocation.
     pub fn record_clip(&mut self, latency: Duration, frames: u64) {
-        self.latencies_us.push(latency.as_micros() as u64);
+        self.latencies.record(latency.as_micros() as u64);
         self.clips += 1;
         self.frames += frames;
         self.busy += latency;
     }
 
-    /// Mean latency in microseconds.
+    /// Mean latency in microseconds (exact — the histogram tracks the
+    /// sample sum outside its buckets).
     pub fn mean_latency_us(&self) -> f64 {
-        if self.latencies_us.is_empty() {
-            return 0.0;
-        }
-        self.latencies_us.iter().sum::<u64>() as f64 / self.latencies_us.len() as f64
+        self.latencies.mean()
     }
 
-    /// Latency percentile (0–100) in microseconds.
+    /// Latency percentile (0–100) in microseconds. O(buckets) per
+    /// query instead of the old clone-and-sort; exact below 4096 µs,
+    /// within the 1/16 bucket error bound above
+    /// ([`LatencyHistogram::percentile`]).
     pub fn percentile_us(&self, p: f64) -> u64 {
-        if self.latencies_us.is_empty() {
-            return 0;
-        }
-        let mut v = self.latencies_us.clone();
-        v.sort_unstable();
-        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
-        v[idx.min(v.len() - 1)]
+        self.latencies.percentile(p)
+    }
+
+    /// The per-clip latency distribution itself, for rolling up into
+    /// a [`MetricsHub`] histogram series or inspecting bucket counts.
+    pub fn latency_histogram(&self) -> &LatencyHistogram {
+        &self.latencies
     }
 
     /// Throughput in clips/second — over the wall-clock span when the
@@ -206,6 +235,50 @@ impl Metrics {
     /// Total clips that changed workers via stealing.
     pub fn total_stolen(&self) -> u64 {
         self.workers.iter().map(|w| w.stolen).sum()
+    }
+
+    /// Workers dynamic sizing retired before the stream closed.
+    pub fn total_retired(&self) -> u64 {
+        self.workers.iter().filter(|w| w.retired).count() as u64
+    }
+
+    /// Replica failovers absorbed across the serve: the engine's own
+    /// plus every pool worker's.
+    pub fn total_failovers(&self) -> u64 {
+        self.failovers + self.workers.iter().map(|w| w.failovers).sum::<u64>()
+    }
+
+    /// Publish this run's counters and gauges into a live
+    /// [`MetricsHub`] under the `spidr_*` series names (DESIGN.md
+    /// §Observability). Counters accumulate across runs; gauges are
+    /// overwritten. The per-clip latency histogram is **not** merged
+    /// here — the serve paths feed `spidr_clip_latency_us` live as
+    /// clips emit, so a publish at drain time would double-count.
+    pub fn publish(&self, hub: &MetricsHub) {
+        hub.counter_add("spidr_clips_total", self.clips);
+        hub.counter_add("spidr_frames_total", self.frames);
+        hub.counter_add("spidr_failovers_total", self.total_failovers());
+        hub.counter_add("spidr_clips_stolen_total", self.total_stolen());
+        hub.counter_add("spidr_workers_retired_total", self.total_retired());
+        hub.gauge_set("spidr_wall_seconds", self.wall.as_secs_f64());
+        hub.gauge_set("spidr_busy_seconds", self.busy.as_secs_f64());
+        if !self.workers.is_empty() {
+            hub.gauge_set("spidr_pool_utilization", self.pool_utilization());
+        }
+        for s in &self.stages {
+            hub.counter_add(
+                &format!("spidr_stage_steps_total{{stage=\"{}\"}}", s.stage),
+                s.steps,
+            );
+            hub.gauge_set(
+                &format!("spidr_stage_occupancy{{stage=\"{}\"}}", s.stage),
+                s.occupancy(),
+            );
+            hub.counter_add(
+                &format!("spidr_stage_stall_samples_total{{stage=\"{}\"}}", s.stage),
+                s.stall_samples,
+            );
+        }
     }
 
     /// Mean busy fraction across pipeline stages (0 without stage
@@ -280,6 +353,58 @@ mod tests {
         let mut m = Metrics::new();
         m.stages = vec![s0, StageMetrics::new(1, (2, 3))];
         assert!((m.pipeline_occupancy() - 0.375).abs() < 1e-9);
+    }
+
+    /// Satellite (histogram swap): the latency store stays O(1) no
+    /// matter how many clips are recorded, and percentiles on a long
+    /// stream stay within the documented bucket bound.
+    #[test]
+    fn long_stream_percentiles_stay_bounded() {
+        let mut m = Metrics::new();
+        for i in 0..100_000u64 {
+            // latencies 0..100_000 us, exact region and log region both
+            m.record_clip(Duration::from_micros(i), 1);
+        }
+        assert_eq!(m.clips, 100_000);
+        // p50 rank = round(0.5 * 99_999) = 50_000; value 50_000 us is
+        // in the log region: within 1/16 below the exact answer.
+        let p50 = m.percentile_us(50.0);
+        assert!(p50 <= 50_000 && 50_000 <= p50 + p50 / 16, "p50 = {p50}");
+        let p0 = m.percentile_us(0.0);
+        assert_eq!(p0, 0);
+        assert!((m.mean_latency_us() - 49_999.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn failovers_surface_and_sum() {
+        let mut m = Metrics::new();
+        m.failovers = 2;
+        let mut w = WorkerMetrics::new(0);
+        w.failovers = 3;
+        m.workers = vec![w, WorkerMetrics::new(1)];
+        assert_eq!(m.total_failovers(), 5);
+        assert_eq!(m.total_retired(), 0);
+    }
+
+    #[test]
+    fn publish_feeds_hub_series() {
+        let hub = MetricsHub::new();
+        let mut m = Metrics::new();
+        m.record_clip(Duration::from_micros(150), 10);
+        m.failovers = 1;
+        let mut s = StageMetrics::new(2, (0, 1));
+        s.steps = 40;
+        s.busy = Duration::from_millis(10);
+        m.stages = vec![s];
+        m.publish(&hub);
+        let snap = hub.snapshot();
+        assert_eq!(snap.counter("spidr_clips_total"), 1);
+        assert_eq!(snap.counter("spidr_frames_total"), 10);
+        assert_eq!(snap.counter("spidr_failovers_total"), 1);
+        assert_eq!(snap.counter("spidr_stage_steps_total{stage=\"2\"}"), 40);
+        // publishing again accumulates counters
+        m.publish(&hub);
+        assert_eq!(hub.snapshot().counter("spidr_clips_total"), 2);
     }
 
     #[test]

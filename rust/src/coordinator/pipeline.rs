@@ -119,18 +119,29 @@ fn stage_loop(
     let mut sm = StageMetrics::new(stage, span.layers);
     let mut telemetry = Vec::with_capacity(frames.len());
     for (t, clip_frame) in frames.iter().enumerate() {
-        let wait0 = Instant::now();
         let owned;
         let frame = match &rx {
             None => clip_frame,
             Some(rx) => {
-                owned = rx
-                    .recv()
-                    .map_err(|_| channel_torn_down(stage, "upstream"))?;
+                if t == 0 {
+                    // The wait for a clip's first frame is the
+                    // pipeline fill front, not upstream starvation:
+                    // `fill` (set from the epoch below) already covers
+                    // it, so the stall timer stays off and `stall_in`
+                    // measures steady state only.
+                    owned = rx
+                        .recv()
+                        .map_err(|_| channel_torn_down(stage, "upstream"))?;
+                } else {
+                    let wait0 = Instant::now();
+                    owned = rx
+                        .recv()
+                        .map_err(|_| channel_torn_down(stage, "upstream"))?;
+                    sm.stall_in += wait0.elapsed();
+                }
                 &owned
             }
         };
-        sm.stall_in += wait0.elapsed();
         if t == 0 {
             sm.fill = epoch.elapsed();
         }
@@ -211,6 +222,9 @@ pub fn run_pipeline_clip(
         rest = tail;
     }
 
+    // Stage threads are fresh each clip: re-bind the caller's trace
+    // on each so stage spans attribute to the clip being served.
+    let clip_trace = crate::obs::trace::current();
     let epoch = Instant::now();
     let outcomes: Vec<Result<StageOutcome>> = std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(stages);
@@ -225,6 +239,8 @@ pub fn run_pipeline_clip(
                 None
             };
             handles.push(scope.spawn(move || {
+                let _tbind = crate::obs::trace::bind(clip_trace);
+                let _tspan = crate::obs::trace::span("stage");
                 stage_loop(network, span, vmems, frames, rx, tx, gi, epoch)
             }));
         }
@@ -457,6 +473,13 @@ impl Engine for FunctionalEngine {
     fn stage_metrics(&self) -> Vec<StageMetrics> {
         FunctionalEngine::stage_metrics(self).to_vec()
     }
+
+    fn failovers(&self) -> u64 {
+        match self {
+            FunctionalEngine::Distributed(e) => e.failovers(),
+            _ => 0,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -592,6 +615,54 @@ mod tests {
         for (a, b) in ref_state.vmems.iter().zip(&state.vmems) {
             assert_eq!(a.as_slice(), b.as_slice());
         }
+    }
+
+    /// Regression: the wait for a clip's first frame is the fill
+    /// front and must land in `fill`, not `stall_in` — it used to hit
+    /// both, so a deep pipeline's downstream stages read as starved
+    /// (low `occupancy`) during a perfectly normal fill.
+    #[test]
+    fn fill_front_is_not_accounted_as_starvation() {
+        let net = demo_net();
+        let frames = demo_clip(13, 4);
+        let mut state = net.init_state().unwrap();
+        let spans = net.group_spans(&[(0, 2)]).unwrap();
+
+        // Producer holds the first frame back, then releases the
+        // whole clip at once: every wait after the first is ~zero.
+        let delay = Duration::from_millis(40);
+        let (tx, rx) = sync_channel::<SpikePlane>(frames.len());
+        let producer = std::thread::spawn({
+            let frames = frames.clone();
+            move || {
+                std::thread::sleep(delay);
+                for f in frames {
+                    tx.send(f).unwrap();
+                }
+            }
+        });
+        let epoch = Instant::now();
+        let out = stage_loop(
+            &net,
+            &spans[0],
+            &mut state.vmems,
+            &frames,
+            Some(rx),
+            None,
+            1,
+            epoch,
+        )
+        .unwrap();
+        producer.join().unwrap();
+
+        let sm = out.metrics;
+        assert_eq!(sm.steps, frames.len() as u64);
+        assert!(sm.fill >= delay, "fill front missing: {:?}", sm.fill);
+        assert!(
+            sm.stall_in < delay / 2,
+            "fill front leaked into stall_in: {:?}",
+            sm.stall_in
+        );
     }
 
     #[test]

@@ -29,6 +29,7 @@ use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 use crate::net::coordinator::DistributedConfig;
+use crate::obs::trace::{self, TraceId};
 use crate::snn::spikes::SpikePlane;
 
 use super::batch::BatchConfig;
@@ -167,6 +168,10 @@ pub struct ClipJob {
     pub seq: u64,
     /// Ingestion start (end-to-end latency reference).
     pub t0: Instant,
+    /// Trace identity minted at ingest ([`TraceId::NONE`] when the
+    /// clip was built outside the serve paths); every tier the clip
+    /// crosses attributes its spans to this id (`obs::trace`).
+    pub trace: TraceId,
     /// Binned spike frames, one per timestep.
     pub frames: Vec<SpikePlane>,
 }
@@ -594,6 +599,7 @@ where
                 wm.idle += wait0.elapsed();
                 wm.retired = true;
                 wm.inbox_high_water = high_water;
+                wm.failovers = engine.failovers();
                 guard.armed = false;
                 return (wm, engine.stage_metrics());
             }
@@ -617,9 +623,26 @@ where
             }
         }
         let clips: Vec<&[SpikePlane]> = jobs.iter().map(|j| j.frames.as_slice()).collect();
+        // Engine-internal instrumentation (pipeline stages, hops)
+        // attributes to the batch anchor's trace; the per-clip `infer`
+        // spans below cover every batch member. A disabled tracer
+        // takes no timestamp here (`should_sample` is one relaxed
+        // load).
+        let _tscope = trace::bind(jobs[0].trace);
+        let tr = trace::tracer();
+        let infer0 = jobs
+            .iter()
+            .any(|j| tr.should_sample(j.trace))
+            .then(|| tr.now_us());
         let busy0 = Instant::now();
         let outcome = engine.infer_batch(&clips);
         wm.busy += busy0.elapsed();
+        if let Some(s0) = infer0 {
+            let end = tr.now_us();
+            for j in &jobs {
+                tr.record_span(j.trace, "infer", s0, end);
+            }
+        }
         match outcome {
             Ok(outputs) => {
                 if outputs.len() != jobs.len() {
@@ -633,10 +656,12 @@ where
                 }
                 for (job, output) in jobs.into_iter().zip(outputs) {
                     wm.clips += 1;
+                    let latency = job.t0.elapsed();
+                    super::server::observe_clip_done(job.trace, latency);
                     let done = CompletedClip {
                         seq: job.seq,
                         output,
-                        latency: job.t0.elapsed(),
+                        latency,
                         frames: job.frames.len() as u64,
                         worker: me,
                     };
@@ -654,6 +679,7 @@ where
     }
     guard.armed = false;
     wm.inbox_high_water = queue.worker_exit(me);
+    wm.failovers = engine.failovers();
     (wm, engine.stage_metrics())
 }
 
@@ -756,6 +782,9 @@ where
         // full pool at `max_workers` blocks.
         'dispatch: for job in jobs.iter() {
             let mut job = job;
+            // Covers placement, including any grow and the blocked
+            // wait on a saturated pool (inert unless sampled).
+            let _dspan = trace::tracer().span(job.trace, "dispatch");
             loop {
                 match queue.dispatch(depth, job, grow_limit) {
                     Dispatch::Placed => continue 'dispatch,
@@ -842,6 +871,7 @@ mod tests {
         ClipJob {
             seq,
             t0: Instant::now(),
+            trace: TraceId::NONE,
             frames: vec![p],
         }
     }
@@ -1233,6 +1263,7 @@ mod tests {
             ClipJob {
                 seq,
                 t0: Instant::now(),
+                trace: TraceId::NONE,
                 frames: vec![SpikePlane::zeros(1, 4, 4); timesteps],
             }
         }

@@ -21,6 +21,8 @@ use crate::dvs::binning::bin_events;
 use crate::dvs::event::Event;
 use crate::error::{Error, Result};
 use crate::net::coordinator::DistributedConfig;
+use crate::obs::metrics::hub;
+use crate::obs::trace::{self, TraceId};
 use crate::snn::network::{Network, NetworkState};
 use crate::snn::spikes::SpikePlane;
 
@@ -115,6 +117,16 @@ pub trait Engine {
     fn stage_metrics(&self) -> Vec<StageMetrics> {
         Vec::new()
     }
+
+    /// Completed failovers so far — clips re-homed onto a surviving
+    /// replica after a replica death (the distributed backend); flat
+    /// engines keep the 0 default. The serve paths surface this in
+    /// [`Metrics::failovers`] (per-worker in
+    /// [`super::metrics::WorkerMetrics::failovers`]), so recovery
+    /// activity is visible without reaching into the engine.
+    fn failovers(&self) -> u64 {
+        0
+    }
 }
 
 /// A completed request.
@@ -177,7 +189,22 @@ impl InferenceServer {
         let mut closed = false;
         while let Some(jobs) = assemble_batch(&rx, &mut pending, cap, deadline, &mut closed) {
             let clips: Vec<&[SpikePlane]> = jobs.iter().map(|j| j.frames.as_slice()).collect();
+            // Engine-internal spans attribute to the batch anchor's
+            // trace; per-clip `infer` spans cover every member (the
+            // same bracketing as the pool's worker loop).
+            let _tscope = trace::bind(jobs[0].trace);
+            let tr = trace::tracer();
+            let infer0 = jobs
+                .iter()
+                .any(|j| tr.should_sample(j.trace))
+                .then(|| tr.now_us());
             let outputs = engine.infer_batch(&clips)?;
+            if let Some(s0) = infer0 {
+                let end = tr.now_us();
+                for j in &jobs {
+                    tr.record_span(j.trace, "infer", s0, end);
+                }
+            }
             if outputs.len() != jobs.len() {
                 return Err(Error::Runtime(format!(
                     "engine returned {} outputs for a {}-clip batch",
@@ -187,6 +214,7 @@ impl InferenceServer {
             }
             for (job, output) in jobs.into_iter().zip(outputs) {
                 let latency = job.t0.elapsed();
+                observe_clip_done(job.trace, latency);
                 metrics.record_clip(latency, job.frames.len() as u64);
                 responses.push(Response {
                     id: job.seq,
@@ -203,6 +231,8 @@ impl InferenceServer {
         responses.sort_by_key(|r| r.id);
         metrics.wall = wall0.elapsed();
         metrics.stages = engine.stage_metrics();
+        metrics.failovers = engine.failovers();
+        metrics.publish(hub());
         Ok((responses, metrics))
     }
 
@@ -255,6 +285,7 @@ impl InferenceServer {
             metrics.workers = run.workers;
             metrics.stages = run.stages;
             metrics.wall = wall0.elapsed();
+            metrics.publish(hub());
             Ok((responses, metrics))
         })
     }
@@ -328,11 +359,36 @@ fn assemble_batch(
 
 /// Bin one request into a sequenced clip job — the shared ingest step
 /// of both serve paths. `t0` anchors end-to-end latency at ingestion
-/// start, so queue wait is part of every reported latency.
+/// start, so queue wait is part of every reported latency. The trace
+/// identity is minted here — ingest is the clip's first contact with
+/// the system — and rides in the job through every tier.
 fn bin_request(cfg: ServerConfig, seq: u64, events: &[Event]) -> ClipJob {
+    let tr = trace::tracer();
+    let clip_trace = tr.mint();
+    let _ingest = tr.span(clip_trace, "ingest");
     let t0 = Instant::now();
     let frames = bin_events(events, cfg.height, cfg.width, cfg.timesteps, cfg.bin_us);
-    ClipJob { seq, t0, frames }
+    ClipJob {
+        seq,
+        t0,
+        trace: clip_trace,
+        frames,
+    }
+}
+
+/// Emission-side observability shared by both serve paths (and the
+/// pool's worker loop): record the root `clip` span — endpoints
+/// reconstructed from the measured end-to-end latency, so ingest
+/// queue wait is inside it — and feed the live latency histogram the
+/// `spidr metrics` endpoint serves mid-run.
+pub(crate) fn observe_clip_done(clip_trace: TraceId, latency: Duration) {
+    let us = latency.as_micros() as u64;
+    let tr = trace::tracer();
+    if tr.should_sample(clip_trace) {
+        let end = tr.now_us();
+        tr.record_span(clip_trace, "clip", end.saturating_sub(us), end);
+    }
+    hub().observe_us("spidr_clip_latency_us", us);
 }
 
 /// Functional serving engine: the single-threaded reference executor
@@ -698,6 +754,7 @@ mod tests {
         ClipJob {
             seq,
             t0: Instant::now(),
+            trace: TraceId::NONE,
             frames: vec![SpikePlane::zeros(1, 2, 2); timesteps],
         }
     }

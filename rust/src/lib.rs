@@ -32,6 +32,10 @@
 //!   hosts behind a binary wire protocol, TCP and loopback transports,
 //!   the shard host and the distributed engine (DESIGN.md
 //!   §Distributed).
+//! * [`obs`] — end-to-end observability: cross-process clip tracing
+//!   (Chrome `trace_event` export), O(1) latency histograms, and the
+//!   live metrics registry + Prometheus scrape endpoint (DESIGN.md
+//!   §Observability).
 //! * [`runtime`] — PJRT client that loads and executes the AOT HLO
 //!   artifacts (the golden model; Python never runs at request time).
 
@@ -43,6 +47,7 @@ pub mod dvs;
 pub mod energy;
 pub mod error;
 pub mod net;
+pub mod obs;
 pub mod prop;
 pub mod quant;
 pub mod runtime;

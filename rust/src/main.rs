@@ -14,6 +14,7 @@
 //!                  show the layer-by-layer core mapping
 //! spidr shard    [--listen HOST:PORT] [--workload pipeline-demo|serving-demo]
 //!                [--timesteps N] [--sessions N] [--protocol 2|3]
+//!                [--trace FILE] [--metrics-listen HOST:PORT]
 //!                  host layer-group shards for a distributed
 //!                  coordinator (DESIGN.md §Distributed); serves
 //!                  sessions forever, or exactly N with --sessions.
@@ -21,7 +22,14 @@
 //!                  provisioned over the wire by the coordinator's
 //!                  weight push. --protocol 2 pins the host to the
 //!                  scalar-only v2 grammar (lane batches rejected),
-//!                  which forces a v3 coordinator into scalar fallback
+//!                  which forces a v3 coordinator into scalar fallback.
+//!                  --trace writes a Chrome-trace JSON of spans the
+//!                  coordinator did not pull after every session;
+//!                  --metrics-listen serves Prometheus text on a
+//!                  scrape socket (DESIGN.md §Observability)
+//! spidr metrics  [--connect HOST:PORT]
+//!                  scrape a live `--metrics-listen` endpoint (shard or
+//!                  example process) and print the Prometheus snapshot
 //! spidr plan     [--workload pipeline-demo|serving-demo] [--timesteps N]
 //!                [--links MBxUS,MBxUS,...]
 //!                  print the topology-aware deployment plan (DESIGN.md
@@ -42,6 +50,7 @@ use spidr::energy::model::Corner;
 use spidr::error::{Error, Result};
 use spidr::net::wire::{MIN_VERSION, VERSION};
 use spidr::net::{plan_deployment, LinkSpec, PlannerConfig, ShardHost, TcpTransport};
+use spidr::obs::{hub, scrape, tracer, MetricsServer};
 use spidr::quant::Precision;
 use spidr::runtime::{ArtifactStore, GoldenModel};
 use spidr::sim::SimConfig;
@@ -135,6 +144,14 @@ fn cmd_map(flags: &HashMap<String, String>) -> Result<()> {
 /// layer group this process owns (weights cross once, then stay
 /// pinned). `--workload pipeline-demo|serving-demo` materializes a
 /// demo workload locally instead (the pre-push behavior).
+///
+/// Observability hooks (DESIGN.md §Observability): `--trace FILE`
+/// rewrites FILE with a Chrome-trace JSON after every session,
+/// covering spans a coordinator did **not** pull over the sideband
+/// (a traced coordinator flushes them itself, so the two exports never
+/// double-count); `--metrics-listen HOST:PORT` serves the process-wide
+/// Prometheus snapshot — session/clip/frame counters — for
+/// `spidr metrics` or any Prometheus scraper.
 fn cmd_shard(flags: &HashMap<String, String>) -> Result<()> {
     let listen = flags
         .get("listen")
@@ -142,6 +159,8 @@ fn cmd_shard(flags: &HashMap<String, String>) -> Result<()> {
         .unwrap_or_else(|| "127.0.0.1:7400".into());
     let timesteps: usize = flag(flags, "timesteps", 12);
     let sessions: u64 = flag(flags, "sessions", 0); // 0 = serve forever
+    let trace_out = flags.get("trace").filter(|s| !s.is_empty()).cloned();
+    let metrics_listen = flags.get("metrics-listen").filter(|s| !s.is_empty());
     let protocol: u16 = flag(flags, "protocol", VERSION);
     if !(MIN_VERSION..=VERSION).contains(&protocol) {
         return Err(Error::config(format!(
@@ -158,6 +177,19 @@ fn cmd_shard(flags: &HashMap<String, String>) -> Result<()> {
                  or omit --workload to be provisioned over the wire)"
             )));
         }
+    };
+    if trace_out.is_some() {
+        let tr = tracer();
+        tr.enable(1);
+        tr.set_process_label("shard");
+    }
+    let _metrics_server = match metrics_listen {
+        Some(addr) => {
+            let server = MetricsServer::spawn(addr, hub())?;
+            eprintln!("spidr-shard: serving metrics on {}", server.local_addr());
+            Some(server)
+        }
+        None => None,
     };
     let listener = std::net::TcpListener::bind(&listen)?;
     match &net {
@@ -181,19 +213,48 @@ fn cmd_shard(flags: &HashMap<String, String>) -> Result<()> {
         }
         .with_protocol(protocol);
         match host.serve(&mut link) {
-            Ok(report) => eprintln!(
-                "spidr-shard: session from {peer} done ({} clips, {} frames, span {:?})",
-                report.clips,
-                report.frames,
-                host.span()
-            ),
+            Ok(report) => {
+                hub().counter_add("spidr_shard_sessions_total", 1);
+                hub().counter_add("spidr_shard_clips_total", report.clips);
+                hub().counter_add("spidr_shard_frames_total", report.frames);
+                hub().counter_add("spidr_shard_lane_batches_total", report.batches);
+                eprintln!(
+                    "spidr-shard: session from {peer} done ({} clips, {} frames, span {:?})",
+                    report.clips,
+                    report.frames,
+                    host.span()
+                );
+            }
             Err(e) => eprintln!("spidr-shard: session from {peer} failed: {e}"),
         }
         served += 1;
+        if let Some(path) = &trace_out {
+            // Spans a traced coordinator pulled over the sideband are
+            // gone from the host by now — only the leftovers land here,
+            // so a coordinator-side export never double-counts them.
+            let leftover = host.take_trace_spans();
+            if !leftover.is_empty() {
+                tracer().inject(&format!("session-{served}"), leftover, 0);
+            }
+            std::fs::write(path, tracer().to_chrome_json())?;
+        }
         if sessions > 0 && served >= sessions {
             return Ok(());
         }
     }
+}
+
+/// Scrape a live `--metrics-listen` endpoint and print the Prometheus
+/// text snapshot — counters, gauges, and the log-bucketed latency
+/// histograms (DESIGN.md §Observability).
+fn cmd_metrics(flags: &HashMap<String, String>) -> Result<()> {
+    let addr = flags
+        .get("connect")
+        .filter(|s| !s.is_empty())
+        .cloned()
+        .unwrap_or_else(|| "127.0.0.1:9464".into());
+    print!("{}", scrape(&addr)?);
+    Ok(())
 }
 
 /// Print the topology-aware deployment plan (DESIGN.md §Planner) for a
@@ -386,13 +447,15 @@ fn main() -> ExitCode {
         "gesture" => cmd_gesture(&flags),
         "flow" => cmd_flow(&flags),
         "shard" => cmd_shard(&flags),
+        "metrics" => cmd_metrics(&flags),
         "plan" => cmd_plan(&flags),
         _ => {
             eprintln!(
-                "usage: spidr <chip|map|gesture|flow|shard|plan> [--wb 4|6|8] \
+                "usage: spidr <chip|map|gesture|flow|shard|metrics|plan> [--wb 4|6|8] \
                  [--sparsity S] [--corner low|high] [--task T] \
                  [--clips N] [--artifacts DIR] [--listen HOST:PORT] \
                  [--workload W] [--timesteps N] [--sessions N] [--protocol 2|3] \
+                 [--trace FILE] [--metrics-listen HOST:PORT] [--connect HOST:PORT] \
                  [--links MBxUS,...]"
             );
             return ExitCode::from(2);

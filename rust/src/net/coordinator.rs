@@ -71,6 +71,7 @@ use crate::net::transport::{LoopbackTransport, Transport};
 use crate::net::wire::{
     encode_network, Frame, LaneReport, Role, LANE_VERSION, MAX_PAYLOAD, VERSION,
 };
+use crate::obs::trace::{self, TraceId};
 use crate::snn::network::{GroupSpan, Network, StepTelemetry};
 use crate::snn::spikes::{LaneFrame, SpikePlane, MAX_LANES};
 use crate::snn::tensor::Mat;
@@ -142,6 +143,10 @@ fn frame_name(f: &Option<Frame>) -> &'static str {
         Some(Frame::LaneBatchOpen { .. }) => "LaneBatchOpen",
         Some(Frame::LaneFrame { .. }) => "LaneFrame",
         Some(Frame::LaneTelemetry { .. }) => "LaneTelemetry",
+        Some(Frame::TraceSync { .. }) => "TraceSync",
+        Some(Frame::TraceCtx { .. }) => "TraceCtx",
+        Some(Frame::TraceFlush) => "TraceFlush",
+        Some(Frame::TraceSpans { .. }) => "TraceSpans",
     }
 }
 
@@ -173,6 +178,12 @@ struct Replica {
     /// capped at this build's [`VERSION`] — the negotiation input for
     /// [`DistributedEngine::negotiated_version`].
     version: u16,
+    /// Estimated shard-clock minus coordinator-clock offset in µs,
+    /// measured by a `TraceSync` ping at connect time (0 when tracing
+    /// was disabled or the replica is pre-v3). Feeds
+    /// [`Tracer::inject`](crate::obs::trace::Tracer::inject) so the
+    /// shard's flushed spans land on the coordinator timeline.
+    trace_offset_us: i64,
 }
 
 /// How one relay attempt on a replica failed.
@@ -353,6 +364,7 @@ fn serve_on_replica(
     sm: &mut StageMetrics,
     epoch: Instant,
     reprovision: bool,
+    trace_ctx: Option<u64>,
 ) -> std::result::Result<(Vec<StepTelemetry>, Vec<Mat>), HopFailure> {
     let t_total = frames.len();
     if reprovision {
@@ -379,6 +391,16 @@ fn serve_on_replica(
             }
         }
     }
+    // Trace sideband: bind this clip to its trace on the shard so its
+    // spans join the coordinator timeline. Fire-and-forget (no ack);
+    // re-sent on every failover attempt since a survivor never saw it.
+    if let Some(trace) = trace_ctx {
+        link.send(&Frame::TraceCtx {
+            trace,
+            clip: clip_id,
+        })
+        .map_err(HopFailure::Replica)?;
+    }
     let mut reorder: BTreeMap<u32, SpikePlane> = BTreeMap::new();
     let mut inflight = 0usize;
     // Replay the frames earlier attempts already consumed (no-op on
@@ -402,8 +424,15 @@ fn serve_on_replica(
     while t < t_total {
         let mut owned: Option<SpikePlane> = None;
         if let Some(rx) = rx {
-            let p = timed_recv(rx, sm)
-                .map_err(|()| HopFailure::Fatal(hop_torn_down(hop, "upstream")))?;
+            // The first-frame wait is the fill front (`fill`, below),
+            // not starvation — only steady-state pulls run the stall
+            // timer (same split as the local pipeline's stage loop).
+            let p = if t == 0 {
+                rx.recv().map_err(|_| ())
+            } else {
+                timed_recv(rx, sm)
+            }
+            .map_err(|()| HopFailure::Fatal(hop_torn_down(hop, "upstream")))?;
             owned = Some(p);
         }
         if t == 0 {
@@ -505,12 +534,19 @@ fn relay_clip(
     let mut relayed = 0usize;
     let mut next_fwd: u32 = 0;
     let mut attempt = 0usize;
+    // Sampled clips carry their trace id to v3 replicas (the hop
+    // thread runs under the clip's trace binding); unsampled clips
+    // put nothing trace-related on the wire.
+    let clip_trace = trace::current();
+    let sampled = trace::tracer().should_sample(clip_trace);
     loop {
         let Some(ri) = pick_replica(replicas) else {
             return Err(Error::Runtime(format!(
                 "distributed hop {hop}: zero surviving replicas"
             )));
         };
+        let trace_ctx =
+            (sampled && replicas[ri].version >= LANE_VERSION).then_some(clip_trace.0);
         let reprovision = attempt > 0;
         attempt += 1;
         match serve_on_replica(
@@ -530,6 +566,7 @@ fn relay_clip(
             &mut sm,
             epoch,
             reprovision,
+            trace_ctx,
         ) {
             Ok((telemetry, vmems)) => {
                 replicas[ri].clips += 1;
@@ -552,6 +589,7 @@ fn relay_clip(
                 // (immediately — it must survive a later clip error)
                 // and loop around to re-push + replay.
                 failovers.fetch_add(1, Ordering::Relaxed);
+                trace::instant("failover");
             }
         }
     }
@@ -659,6 +697,7 @@ fn serve_batch_on_replica(
     sm: &mut StageMetrics,
     epoch: Instant,
     reprovision: bool,
+    trace_ctx: Option<u64>,
 ) -> std::result::Result<Vec<LaneReport>, HopFailure> {
     let t_total = frames.len();
     let lanes = clip_ids.len();
@@ -682,6 +721,16 @@ fn serve_batch_on_replica(
                 ))));
             }
         }
+    }
+    // Trace sideband: the batch is anchored on its first lane's clip
+    // id (mirrors the shard's first-traced-lane anchor); re-sent per
+    // failover attempt.
+    if let Some(trace) = trace_ctx {
+        link.send(&Frame::TraceCtx {
+            trace,
+            clip: clip_ids[0],
+        })
+        .map_err(HopFailure::Replica)?;
     }
     link.send(&Frame::LaneBatchOpen {
         batch: batch_id,
@@ -721,8 +770,14 @@ fn serve_batch_on_replica(
     while t < t_total {
         let mut owned: Option<LaneFrame> = None;
         if let Some(rx) = rx {
-            let f = timed_recv(rx, sm)
-                .map_err(|()| HopFailure::Fatal(hop_torn_down(hop, "upstream")))?;
+            // Fill front, not starvation: first pull skips the stall
+            // timer (see the scalar hop loop).
+            let f = if t == 0 {
+                rx.recv().map_err(|_| ())
+            } else {
+                timed_recv(rx, sm)
+            }
+            .map_err(|()| HopFailure::Fatal(hop_torn_down(hop, "upstream")))?;
             owned = Some(f);
         }
         if t == 0 {
@@ -819,12 +874,16 @@ fn relay_lane_batch(
     let mut relayed = 0usize;
     let mut next_fwd: u32 = 0;
     let mut attempt = 0usize;
+    let batch_trace = trace::current();
+    let sampled = trace::tracer().should_sample(batch_trace);
     loop {
         let Some(ri) = pick_replica(replicas) else {
             return Err(Error::Runtime(format!(
                 "distributed hop {hop}: zero surviving replicas"
             )));
         };
+        let trace_ctx =
+            (sampled && replicas[ri].version >= LANE_VERSION).then_some(batch_trace.0);
         let reprovision = attempt > 0;
         attempt += 1;
         match serve_batch_on_replica(
@@ -845,6 +904,7 @@ fn relay_lane_batch(
             &mut sm,
             epoch,
             reprovision,
+            trace_ctx,
         ) {
             Ok(reports) => {
                 replicas[ri].clips += clip_ids.len() as u64;
@@ -861,6 +921,7 @@ fn relay_lane_batch(
                     return Err(e);
                 }
                 failovers.fetch_add(1, Ordering::Relaxed);
+                trace::instant("failover");
             }
         }
     }
@@ -1034,11 +1095,36 @@ impl DistributedEngine {
                         )));
                     }
                 }
+                // Trace sideband clock sync (only when tracing is on
+                // and the replica speaks v3): one ping/echo estimates
+                // the shard-clock offset under a symmetric-delay
+                // assumption, so flushed shard spans can be re-based
+                // onto the coordinator timeline.
+                let tr = trace::tracer();
+                let mut trace_offset_us = 0i64;
+                if tr.enabled() && version >= LANE_VERSION {
+                    let t0 = tr.now_us();
+                    link.send(&Frame::TraceSync { t0_us: t0, peer_us: 0 })?;
+                    match link.recv()? {
+                        Some(Frame::TraceSync { t0_us, peer_us }) if t0_us == t0 => {
+                            let t1 = tr.now_us();
+                            trace_offset_us = peer_us as i64 - ((t0 + t1) / 2) as i64;
+                        }
+                        Some(Frame::Error { message }) => return Err(Error::Protocol(message)),
+                        other => {
+                            return Err(Error::protocol(format!(
+                                "shard {i} replica {ri}: expected a trace-sync echo, got {}",
+                                frame_name(&other)
+                            )));
+                        }
+                    }
+                }
                 reps.push(Replica {
                     link,
                     alive: true,
                     clips: 0,
                     version,
+                    trace_offset_us,
                 });
             }
             replica_hops.push(reps);
@@ -1403,6 +1489,9 @@ impl DistributedEngine {
         let failovers = AtomicU64::new(0);
         let frames_ref = &frames;
         let clip_ids_ref = &clip_ids;
+        // The batch's trace travels to the scoped hop threads via an
+        // explicit re-bind (thread bindings don't inherit).
+        let batch_trace = trace::current();
         let results: Vec<Result<LaneHopOutcome>> = std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(hop_count);
             let mut prev_rx: Option<Receiver<LaneFrame>> = None;
@@ -1423,6 +1512,8 @@ impl DistributedEngine {
                 let window = windows[gi];
                 let failovers = &failovers;
                 handles.push(scope.spawn(move || {
+                    let _tbind = trace::bind(batch_trace);
+                    let _tspan = trace::span("hop");
                     relay_lane_batch(
                         replicas,
                         span,
@@ -1493,6 +1584,7 @@ impl DistributedEngine {
         // frame per timestep + drain, per hop (replays excluded — they
         // are recovery traffic).
         self.lane_frames += (t_total as u64 + 2) * hop_count as u64;
+        self.flush_remote_spans(batch_trace);
         let outputs = lane_vmems
             .iter()
             .map(|banks| {
@@ -1537,6 +1629,9 @@ impl DistributedEngine {
         let wire_groups = &self.wire_groups;
         let epoch = Instant::now();
         let failovers = AtomicU64::new(0);
+        // The clip's trace travels to the scoped hop threads via an
+        // explicit re-bind (thread bindings don't inherit).
+        let clip_trace = trace::current();
         let results: Vec<Result<HopOutcome>> = std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(hop_count);
             let mut prev_rx: Option<Receiver<SpikePlane>> = None;
@@ -1555,6 +1650,8 @@ impl DistributedEngine {
                 let window = windows[gi];
                 let failovers = &failovers;
                 handles.push(scope.spawn(move || {
+                    let _tbind = trace::bind(clip_trace);
+                    let _tspan = trace::span("hop");
                     relay_clip(
                         replicas, span, wire_groups, gi, clip, clip_id, window, rx, tx,
                         epoch, failovers,
@@ -1612,7 +1709,39 @@ impl DistributedEngine {
         // Serving frames this clip put on the wire: one spike frame
         // per timestep + drain, per hop (replays excluded).
         self.scalar_frames += (clip.len() as u64 + 1) * hop_count as u64;
+        self.flush_remote_spans(clip_trace);
         Ok(())
+    }
+
+    /// After a sampled clip/batch completes, pull every v3 replica's
+    /// buffered spans (`TraceFlush` → `TraceSpans`) and inject them
+    /// into the local tracer under a per-replica process label, shifted
+    /// by the connect-time clock-offset estimate. Best-effort: a
+    /// replica that fails here is left for the next clip's relay to
+    /// discover (the links are quiescent between runs, so the only
+    /// in-order reply is the flush's own). A no-op unless the given
+    /// trace is sampled — unsampled runs put nothing on the wire, so
+    /// there is nothing to pull.
+    fn flush_remote_spans(&mut self, trace: TraceId) {
+        let tr = trace::tracer();
+        if !tr.should_sample(trace) {
+            return;
+        }
+        for (hi, hop) in self.hops.iter_mut().enumerate() {
+            for (ri, rep) in hop.iter_mut().enumerate() {
+                if !rep.alive || rep.version < LANE_VERSION {
+                    continue;
+                }
+                if rep.link.send(&Frame::TraceFlush).is_err() {
+                    continue;
+                }
+                if let Ok(Some(Frame::TraceSpans { spans })) = rep.link.recv() {
+                    if !spans.is_empty() {
+                        tr.inject(&format!("shard-{hi}.{ri}"), spans, rep.trace_offset_us);
+                    }
+                }
+            }
+        }
     }
 }
 

@@ -25,6 +25,16 @@
 //! through the link, exactly as a full handshaking FIFO stalls the
 //! upstream compute unit on silicon; frames are never dropped.
 //!
+//! Protocol v3 also carries the **observability sideband** (DESIGN.md
+//! §Observability): a `TraceSync` ping/echo lets the coordinator
+//! estimate this host's clock offset, `TraceCtx` binds session clip
+//! ids to coordinator-minted trace ids, and while any binding is live
+//! the host records one bounded [`WireSpan`] per serviced frame
+//! (`shard_step` / `shard_lane_step`, timestamps in the host's own
+//! clock) into a session buffer that `TraceFlush` drains as a
+//! `TraceSpans` reply. With no bindings the data path takes **zero**
+//! timestamps — the sideband costs one map lookup per frame.
+//!
 //! Protocol v3 adds **lane sessions** (DESIGN.md §Distributed): a
 //! `LaneBatchOpen` provisions one [`LaneBank`] per stateful span layer
 //! and every following `LaneFrame` steps the whole batch — up to 64
@@ -38,9 +48,13 @@
 //! `Hello` version negotiation reads that and falls back to scalar
 //! frames.
 
+use std::collections::HashMap;
+use std::time::Instant;
+
 use crate::error::{Error, Result};
 use crate::net::transport::Transport;
 use crate::net::wire::{Frame, LaneReport, Role, MIN_VERSION, VERSION};
+use crate::obs::trace::WireSpan;
 use crate::sim::config::SimConfig;
 use crate::sim::{LaneBank, SpidrCore};
 use crate::snn::layer::LayerKind;
@@ -64,10 +78,28 @@ pub struct ShardReport {
 struct LaneSession {
     batch: u64,
     lanes: usize,
+    clips: Vec<u64>,
     core: SpidrCore,
     banks: Vec<LaneBank>,
     telemetry: Vec<Vec<StepTelemetry>>,
     seq: u32,
+}
+
+/// Cap on buffered [`WireSpan`]s per session — further spans are
+/// dropped, never allocated, so a flush-less coordinator cannot grow
+/// the host unboundedly.
+const TRACE_SPAN_CAP: usize = 8192;
+
+/// Cap on live `TraceCtx` clip→trace bindings (drained clips release
+/// theirs, so this only binds how much an errant peer can pin).
+const TRACE_CTX_CAP: usize = 1024;
+
+/// Microseconds since the host's own trace epoch. Any monotonic base
+/// works: `TraceSync` measures this clock's offset from the
+/// coordinator's, and [`Tracer::inject`](crate::obs::trace::Tracer::inject)
+/// re-bases the spans.
+fn us_since(epoch: Instant) -> u64 {
+    epoch.elapsed().as_micros() as u64
 }
 
 /// A shard host serving one layer-group span of a network.
@@ -80,6 +112,9 @@ pub struct ShardHost {
     clip: Option<u64>,
     lane: Option<LaneSession>,
     protocol: u16,
+    trace_epoch: Instant,
+    trace_clips: HashMap<u64, u64>,
+    trace_spans: Vec<WireSpan>,
 }
 
 impl ShardHost {
@@ -96,6 +131,9 @@ impl ShardHost {
             clip: None,
             lane: None,
             protocol: VERSION,
+            trace_epoch: Instant::now(),
+            trace_clips: HashMap::new(),
+            trace_spans: Vec::new(),
         }
     }
 
@@ -113,6 +151,9 @@ impl ShardHost {
             clip: None,
             lane: None,
             protocol: VERSION,
+            trace_epoch: Instant::now(),
+            trace_clips: HashMap::new(),
+            trace_spans: Vec::new(),
         }
     }
 
@@ -141,6 +182,16 @@ impl ShardHost {
     /// provisioned by a weight-carrying `LoadGroup`.
     pub fn network(&self) -> Option<&Network> {
         self.network.as_ref()
+    }
+
+    /// Drain the trace spans this host has buffered but not yet shipped
+    /// to a coordinator via `TraceFlush` — e.g. when the peer never
+    /// pulled them (a v2 coordinator, or one with tracing off). Start
+    /// times are microseconds since this host was created. `spidr shard
+    /// --trace` uses this to export a local session trace without
+    /// double-counting spans the coordinator already collected.
+    pub fn take_trace_spans(&mut self) -> Vec<WireSpan> {
+        std::mem::take(&mut self.trace_spans)
     }
 
     /// Serve one session: handle frames until the peer closes the link
@@ -265,9 +316,16 @@ impl ShardHost {
                         self.telemetry.len()
                     )));
                 }
+                // Trace sideband: with no binding for this clip the
+                // path takes zero timestamps — one map lookup only.
+                let traced = self.trace_clips.get(&clip).copied();
+                let t0 = traced.map(|_| us_since(self.trace_epoch));
                 let (out, tele) = network.step_group(&span, &plane, &mut self.vmems)?;
                 self.telemetry.push(tele);
                 report.frames += 1;
+                if let (Some(trace), Some(start_us)) = (traced, t0) {
+                    self.push_span(trace, "shard_step", start_us);
+                }
                 Ok(Some(Frame::SpikeFrame {
                     clip,
                     seq,
@@ -288,6 +346,9 @@ impl ShardHost {
                             lane.batch
                         )));
                     }
+                    for c in &lane.clips {
+                        self.trace_clips.remove(c);
+                    }
                     let lanes: Vec<LaneReport> = (0..lane.lanes)
                         .map(|b| LaneReport {
                             steps: lane.telemetry[b].clone(),
@@ -305,6 +366,7 @@ impl ShardHost {
                         )));
                     }
                 }
+                self.trace_clips.remove(&clip);
                 let reply = Frame::Telemetry {
                     clip,
                     steps: std::mem::take(&mut self.telemetry),
@@ -356,6 +418,7 @@ impl ShardHost {
                 self.lane = Some(LaneSession {
                     batch,
                     lanes,
+                    clips: clips.clone(),
                     core,
                     banks,
                     telemetry: vec![Vec::new(); lanes],
@@ -402,6 +465,16 @@ impl ShardHost {
                         in_shape
                     )));
                 }
+                // Trace sideband: a lane batch is anchored on its
+                // first traced lane (mirrors the coordinator's
+                // `lane_batch` anchor); untraced batches take zero
+                // timestamps.
+                let traced = lane
+                    .clips
+                    .iter()
+                    .find_map(|c| self.trace_clips.get(c))
+                    .copied();
+                let t0 = traced.map(|_| us_since(self.trace_epoch));
                 for tele in &mut lane.telemetry {
                     tele.push(StepTelemetry::default());
                 }
@@ -431,12 +504,36 @@ impl ShardHost {
                 }
                 lane.seq += 1;
                 report.frames += 1;
+                if let (Some(trace), Some(start_us)) = (traced, t0) {
+                    self.push_span(trace, "shard_lane_step", start_us);
+                }
                 Ok(Some(Frame::LaneFrame {
                     batch,
                     seq,
                     frame: f,
                 }))
             }
+            // Observability sideband (DESIGN.md §Observability) — all
+            // three are valid in any session state, even before a
+            // group is loaded.
+            Frame::TraceSync { t0_us, .. } => Ok(Some(Frame::TraceSync {
+                t0_us,
+                peer_us: us_since(self.trace_epoch),
+            })),
+            Frame::TraceCtx { trace, clip } => {
+                // re-binding an in-flight clip is allowed (failover
+                // replay re-sends the context); fresh bindings are
+                // capped so an errant peer cannot pin unbounded state
+                if self.trace_clips.len() < TRACE_CTX_CAP
+                    || self.trace_clips.contains_key(&clip)
+                {
+                    self.trace_clips.insert(clip, trace);
+                }
+                Ok(None)
+            }
+            Frame::TraceFlush => Ok(Some(Frame::TraceSpans {
+                spans: std::mem::take(&mut self.trace_spans),
+            })),
             Frame::Error { message } => Err(Error::Protocol(message)),
             Frame::Telemetry { .. } => {
                 Err(Error::protocol("unexpected telemetry frame on a shard"))
@@ -444,6 +541,25 @@ impl ShardHost {
             Frame::LaneTelemetry { .. } => {
                 Err(Error::protocol("unexpected lane telemetry frame on a shard"))
             }
+            Frame::TraceSpans { .. } => {
+                Err(Error::protocol("unexpected trace spans frame on a shard"))
+            }
+        }
+    }
+
+    /// Record one completed span into the bounded session buffer
+    /// (dropped past [`TRACE_SPAN_CAP`], never reallocated past it).
+    fn push_span(&mut self, trace: u64, name: &'static str, start_us: u64) {
+        if self.trace_spans.len() < TRACE_SPAN_CAP {
+            let end_us = us_since(self.trace_epoch);
+            self.trace_spans.push(WireSpan {
+                trace,
+                name: name.to_string(),
+                start_us,
+                dur_us: end_us.saturating_sub(start_us),
+                instant: false,
+                tid: 0,
+            });
         }
     }
 }
@@ -870,5 +986,85 @@ mod tests {
             Some(Frame::Error { message }) if message.contains("lane batch 3")
         ));
         assert!(host.join().unwrap().is_err());
+    }
+
+    /// Satellite (ISSUE 9): the trace sideband on a live session —
+    /// `TraceSync` echoes the request stamp with the host clock
+    /// filled, a `TraceCtx`-bound clip gets one `shard_step` span per
+    /// serviced frame (flushed by `TraceFlush`), and an unbound clip
+    /// records nothing, so a trace-less session buffers zero spans.
+    #[test]
+    fn trace_sideband_records_and_flushes_spans() {
+        let (mut link, host) = spawn_host();
+
+        // sync works even before a group is loaded
+        link.send(&Frame::TraceSync {
+            t0_us: 42,
+            peer_us: 0,
+        })
+        .unwrap();
+        match link.recv().unwrap() {
+            Some(Frame::TraceSync { t0_us, peer_us: _ }) => assert_eq!(t0_us, 42),
+            other => panic!("want TraceSync echo, got {other:?}"),
+        }
+
+        link.send(&Frame::LoadGroup {
+            shard: 0,
+            groups: vec![(0, 2)],
+            span: None,
+            workload: None,
+        })
+        .unwrap();
+        assert!(matches!(
+            link.recv().unwrap(),
+            Some(Frame::LoadGroup { span: Some(_), .. })
+        ));
+
+        // clip 5 is traced (ctx is fire-and-forget: no reply), clip 6 is not
+        link.send(&Frame::TraceCtx { trace: 99, clip: 5 }).unwrap();
+        for clip in [5u64, 6u64] {
+            for seq in 0..2u32 {
+                link.send(&Frame::SpikeFrame {
+                    clip,
+                    seq,
+                    plane: rand_frame(10 + seq as u64),
+                })
+                .unwrap();
+                assert!(matches!(
+                    link.recv().unwrap(),
+                    Some(Frame::SpikeFrame { .. })
+                ));
+            }
+            link.send(&Frame::Drain { clip }).unwrap();
+            assert!(matches!(
+                link.recv().unwrap(),
+                Some(Frame::Telemetry { .. })
+            ));
+        }
+
+        // first flush: exactly the two spans of the traced clip,
+        // attributed to its trace id, in arrival order
+        link.send(&Frame::TraceFlush).unwrap();
+        match link.recv().unwrap() {
+            Some(Frame::TraceSpans { spans }) => {
+                assert_eq!(spans.len(), 2, "one span per traced frame");
+                for s in &spans {
+                    assert_eq!(s.trace, 99);
+                    assert_eq!(s.name, "shard_step");
+                    assert!(!s.instant);
+                }
+            }
+            other => panic!("want TraceSpans reply, got {other:?}"),
+        }
+
+        // the flush drained the buffer
+        link.send(&Frame::TraceFlush).unwrap();
+        match link.recv().unwrap() {
+            Some(Frame::TraceSpans { spans }) => assert!(spans.is_empty()),
+            other => panic!("want empty TraceSpans, got {other:?}"),
+        }
+
+        drop(link);
+        host.join().unwrap().unwrap();
     }
 }

@@ -45,6 +45,7 @@
 use std::io::{Read, Write};
 
 use crate::error::{Error, Result};
+use crate::obs::trace::WireSpan;
 use crate::quant::Precision;
 use crate::snn::bitpack;
 use crate::snn::layer::{Layer, LayerKind, NeuronConfig, ResetMode};
@@ -60,7 +61,10 @@ pub const MAGIC: [u8; 4] = *b"SPDR";
 /// the [`Frame::LoadGroup`] `workload` field (over-the-wire weight
 /// push, so shards can start blank); version 3 added the lane-batch
 /// messages ([`Frame::LaneBatchOpen`] / [`Frame::LaneFrame`] /
-/// [`Frame::LaneTelemetry`] — up to 64 clips per frame).
+/// [`Frame::LaneTelemetry`] — up to 64 clips per frame) and the
+/// observability sideband ([`Frame::TraceSync`] / [`Frame::TraceCtx`]
+/// / [`Frame::TraceFlush`] / [`Frame::TraceSpans`], only ever sent
+/// when tracing is enabled).
 pub const VERSION: u16 = 3;
 
 /// Lowest wire-protocol version this build still decodes. The v2
@@ -202,6 +206,42 @@ pub enum Frame {
         batch: u64,
         /// One report per lane, in lane order.
         lanes: Vec<LaneReport>,
+    },
+    /// v3 (observability sideband): clock-sync ping/echo for
+    /// cross-process trace alignment. The coordinator sends its local
+    /// µs clock in `t0_us` with `peer_us` 0; the shard echoes the
+    /// frame with `peer_us` set to its own µs clock. Reading the echo
+    /// at local time `t1`, the coordinator estimates the shard-clock
+    /// offset as `peer_us − (t0_us + t1)/2` (symmetric-delay
+    /// assumption — good to one RTT/2, enough to join span timelines).
+    /// Sent only when tracing is enabled, never on the clip hot path.
+    TraceSync {
+        /// Requester's local µs clock at send, echoed back verbatim.
+        t0_us: u64,
+        /// Responder's local µs clock (0 in the request).
+        peer_us: u64,
+    },
+    /// v3 (observability sideband): bind a session clip id to a
+    /// coordinator-minted trace id, so the shard attributes its spans
+    /// for that clip to the coordinator's trace (one frame per lane
+    /// for a lane batch). Sent only when tracing is enabled.
+    TraceCtx {
+        /// Coordinator-minted trace id.
+        trace: u64,
+        /// Session clip id the trace covers.
+        clip: u64,
+    },
+    /// v3 (observability sideband): ask the shard to flush its
+    /// buffered spans; the reply is a [`Frame::TraceSpans`].
+    TraceFlush,
+    /// v3 (observability sideband): the shard's buffered spans since
+    /// the last flush, timestamps in the **shard's** clock —
+    /// [`Tracer::inject`](crate::obs::trace::Tracer::inject) shifts
+    /// them onto the coordinator timeline using the
+    /// [`Frame::TraceSync`] offset estimate.
+    TraceSpans {
+        /// Buffered spans, oldest first.
+        spans: Vec<WireSpan>,
     },
 }
 
@@ -511,21 +551,30 @@ impl Frame {
             Frame::LaneBatchOpen { .. } => 7,
             Frame::LaneFrame { .. } => 8,
             Frame::LaneTelemetry { .. } => 9,
+            Frame::TraceSync { .. } => 10,
+            Frame::TraceCtx { .. } => 11,
+            Frame::TraceFlush => 12,
+            Frame::TraceSpans { .. } => 13,
         }
     }
 
     /// The lowest header version this frame's kind is defined at: lane
-    /// messages are v3, everything else decodes at v2. Senders stamp
-    /// each frame at this version ([`Frame::to_bytes`]), so the v2
-    /// grammar stays byte-identical on the wire and a v2 peer only
-    /// ever receives headers it can parse — unless lane traffic, which
-    /// it cannot service, is addressed to it (a typed rejection, not a
-    /// desync).
+    /// messages and the observability sideband are v3, everything else
+    /// decodes at v2. Senders stamp each frame at this version
+    /// ([`Frame::to_bytes`]), so the v2 grammar stays byte-identical
+    /// on the wire and a v2 peer only ever receives headers it can
+    /// parse — unless lane traffic, which it cannot service, is
+    /// addressed to it (a typed rejection, not a desync). Trace frames
+    /// are additionally only ever *sent* to peers that negotiated v3.
     pub fn wire_version(&self) -> u16 {
         match self {
-            Frame::LaneBatchOpen { .. } | Frame::LaneFrame { .. } | Frame::LaneTelemetry { .. } => {
-                LANE_VERSION
-            }
+            Frame::LaneBatchOpen { .. }
+            | Frame::LaneFrame { .. }
+            | Frame::LaneTelemetry { .. }
+            | Frame::TraceSync { .. }
+            | Frame::TraceCtx { .. }
+            | Frame::TraceFlush
+            | Frame::TraceSpans { .. } => LANE_VERSION,
             _ => MIN_VERSION,
         }
     }
@@ -612,14 +661,34 @@ impl Frame {
                     }
                 }
             }
+            Frame::TraceSync { t0_us, peer_us } => {
+                w.u64(*t0_us);
+                w.u64(*peer_us);
+            }
+            Frame::TraceCtx { trace, clip } => {
+                w.u64(*trace);
+                w.u64(*clip);
+            }
+            Frame::TraceFlush => {}
+            Frame::TraceSpans { spans } => {
+                w.u32(spans.len() as u32);
+                for s in spans {
+                    w.u64(s.trace);
+                    w.str(&s.name);
+                    w.u64(s.start_us);
+                    w.u64(s.dur_us);
+                    w.u8(s.instant as u8);
+                    w.u64(s.tid);
+                }
+            }
         }
         w.buf
     }
 
     fn decode_payload(kind: u8, version: u16, payload: &[u8]) -> Result<Frame> {
-        if (7..=9).contains(&kind) && version < LANE_VERSION {
+        if (7..=13).contains(&kind) && version < LANE_VERSION {
             return Err(Error::protocol(format!(
-                "version skew: lane frame kind {kind} under a v{version} header"
+                "version skew: v{LANE_VERSION} frame kind {kind} under a v{version} header"
             )));
         }
         let mut r = Rd::new(payload);
@@ -718,6 +787,38 @@ impl Frame {
                     lanes.push(LaneReport { steps, vmems });
                 }
                 Frame::LaneTelemetry { batch, lanes }
+            }
+            10 => Frame::TraceSync {
+                t0_us: r.u64()?,
+                peer_us: r.u64()?,
+            },
+            11 => Frame::TraceCtx {
+                trace: r.u64()?,
+                clip: r.u64()?,
+            },
+            12 => Frame::TraceFlush,
+            13 => {
+                // u64 trace + (u32 len + name ≥ 0) + u64 start + u64
+                // dur + u8 instant + u64 tid — 37 bytes minimum each.
+                let n = r.len_prefix(37)?;
+                let mut spans = Vec::with_capacity(n);
+                for _ in 0..n {
+                    spans.push(WireSpan {
+                        trace: r.u64()?,
+                        name: r.str()?,
+                        start_us: r.u64()?,
+                        dur_us: r.u64()?,
+                        instant: match r.u8()? {
+                            0 => false,
+                            1 => true,
+                            other => {
+                                return Err(Error::protocol(format!("bad instant flag {other}")));
+                            }
+                        },
+                        tid: r.u64()?,
+                    });
+                }
+                Frame::TraceSpans { spans }
             }
             other => {
                 return Err(Error::protocol(format!("unknown frame kind {other}")));
@@ -1185,6 +1286,33 @@ mod tests {
                     LaneReport::default(),
                 ],
             },
+            Frame::TraceSync {
+                t0_us: 1_234_567,
+                peer_us: 0,
+            },
+            Frame::TraceCtx { trace: 9, clip: 64 },
+            Frame::TraceFlush,
+            Frame::TraceSpans {
+                spans: vec![
+                    WireSpan {
+                        trace: 9,
+                        name: "shard_step".into(),
+                        start_us: 100,
+                        dur_us: 40,
+                        instant: false,
+                        tid: 3,
+                    },
+                    WireSpan {
+                        trace: 9,
+                        name: String::new(),
+                        start_us: 150,
+                        dur_us: 0,
+                        instant: true,
+                        tid: 3,
+                    },
+                ],
+            },
+            Frame::TraceSpans { spans: Vec::new() },
         ]
     }
 
@@ -1298,13 +1426,25 @@ mod tests {
         }
     }
 
+    fn rand_wire_span(g: &mut Gen) -> WireSpan {
+        WireSpan {
+            trace: g.u64(),
+            name: "s".repeat(g.index(12)),
+            start_us: g.u64(),
+            dur_us: g.u64(),
+            instant: g.chance(0.3),
+            tid: g.u64(),
+        }
+    }
+
     /// Satellite: random planes, lane frames, spans, telemetry and
     /// Vmem banks survive the codec bit-exactly (ISSUE 7 extended the
-    /// sweep over the v3 lane variants).
+    /// sweep over the v3 lane variants, ISSUE 9 over the trace
+    /// sideband).
     #[test]
     fn prop_frame_roundtrip() {
         check("frame_roundtrip", 60, |g| {
-            let frame = match g.index(9) {
+            let frame = match g.index(12) {
                 0 => Frame::Hello {
                     role: *g.choose(&[Role::Coordinator, Role::Shard]),
                     name: "shard-α ".repeat(g.index(4)),
@@ -1348,9 +1488,20 @@ mod tests {
                     seq: g.u64_in(0..=u32::MAX as u64) as u32,
                     frame: rand_lane_frame(g),
                 },
-                _ => Frame::LaneTelemetry {
+                8 => Frame::LaneTelemetry {
                     batch: g.u64(),
                     lanes: g.vec_of(1, 4, rand_lane_report),
+                },
+                9 => Frame::TraceSync {
+                    t0_us: g.u64(),
+                    peer_us: g.u64(),
+                },
+                10 => Frame::TraceCtx {
+                    trace: g.u64(),
+                    clip: g.u64(),
+                },
+                _ => Frame::TraceSpans {
+                    spans: g.vec_of(0, 5, rand_wire_span),
                 },
             };
             let bytes = frame.to_bytes();
@@ -1679,6 +1830,94 @@ mod tests {
         let (back, ver, _) = Frame::from_bytes_versioned(&good).unwrap();
         assert_eq!(back, frame);
         assert_eq!(ver, LANE_VERSION);
+    }
+
+    /// Satellite (ISSUE 9): adversarial decodes of the trace sideband
+    /// — truncation at every prefix, v2↔v3 skew, a bad instant flag,
+    /// span counts far beyond the payload and trailing bytes must all
+    /// come back as `Error::Protocol`, never a panic.
+    #[test]
+    fn adversarial_trace_decodes_error_cleanly() {
+        let frame = Frame::TraceSpans {
+            spans: vec![WireSpan {
+                trace: 7,
+                name: "shard_step".into(),
+                start_us: 10,
+                dur_us: 5,
+                instant: false,
+                tid: 1,
+            }],
+        };
+        let good = frame.to_bytes();
+        // trace kinds are stamped v3 by construction
+        assert_eq!(u16::from_le_bytes([good[4], good[5]]), LANE_VERSION);
+
+        // truncation at every possible length
+        for n in 0..good.len() {
+            assert!(Frame::from_bytes(&good[..n]).is_err(), "prefix {n}");
+        }
+
+        // v2↔v3 skew: any trace kind under a v2 header is a typed
+        // version-skew rejection
+        for f in [
+            Frame::TraceSync {
+                t0_us: 1,
+                peer_us: 0,
+            },
+            Frame::TraceCtx { trace: 1, clip: 2 },
+            Frame::TraceFlush,
+            frame.clone(),
+        ] {
+            let mut bad = f.to_bytes();
+            bad[4..6].copy_from_slice(&2u16.to_le_bytes());
+            assert!(matches!(Frame::from_bytes(&bad), Err(Error::Protocol(m))
+                if m.contains("version skew")));
+        }
+
+        let reframe = |kind: u8, payload: &[u8]| {
+            let mut evil = Vec::new();
+            evil.extend_from_slice(&MAGIC);
+            evil.extend_from_slice(&LANE_VERSION.to_le_bytes());
+            evil.push(kind);
+            evil.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+            evil.extend_from_slice(payload);
+            evil.extend_from_slice(&checksum(payload).to_le_bytes());
+            evil
+        };
+
+        // bad instant flag, behind a valid checksum
+        let mut w = Wr::new();
+        w.u32(1); // one span
+        w.u64(7); // trace
+        w.str("x");
+        w.u64(10); // start
+        w.u64(5); // dur
+        w.u8(9); // bad instant flag
+        w.u64(1); // tid
+        assert!(matches!(
+            Frame::from_bytes(&reframe(13, &w.buf)),
+            Err(Error::Protocol(m)) if m.contains("instant flag")
+        ));
+
+        // span count far beyond the payload caps before allocating
+        let mut w = Wr::new();
+        w.u32(u32::MAX); // claims ~159 GiB of spans
+        assert!(matches!(
+            Frame::from_bytes(&reframe(13, &w.buf)),
+            Err(Error::Protocol(m)) if m.contains("length prefix")
+        ));
+
+        // trailing bytes after a correctly-checksummed trace payload
+        let mut w = Frame::TraceCtx { trace: 1, clip: 2 }.encode_payload();
+        w.push(0xEE);
+        assert!(matches!(
+            Frame::from_bytes(&reframe(11, &w)),
+            Err(Error::Protocol(m)) if m.contains("trailing")
+        ));
+
+        // the pristine frame still decodes (the cases above were real)
+        let (back, _) = Frame::from_bytes(&good).unwrap();
+        assert_eq!(back, frame);
     }
 
     /// The v2 grammar survives unchanged: scalar frames stamp v2,

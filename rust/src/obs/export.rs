@@ -1,0 +1,134 @@
+//! Live metrics export: a minimal TCP scrape endpoint serving the
+//! [`MetricsHub`](super::metrics::MetricsHub) as Prometheus text
+//! (DESIGN.md §Observability).
+//!
+//! The endpoint speaks just enough HTTP/1.0 for `curl`, a Prometheus
+//! scraper, or `spidr metrics --connect` to read it: any connection
+//! gets a `200 OK` with `Content-Type: text/plain; version=0.0.4`
+//! and the rendered snapshot, then the socket closes. It listens on
+//! the same TCP stack as the shard wire protocol
+//! ([`net::transport`](crate::net::transport)) but deliberately
+//! stays plain text rather than binary frames — scrape tooling is
+//! text-first.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::error::Result;
+
+use super::metrics::MetricsHub;
+
+/// A running metrics scrape endpoint (accept loop on its own thread).
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `listen` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// serve `hub` snapshots until dropped or [`MetricsServer::stop`].
+    pub fn spawn(listen: &str, hub: &'static MetricsHub) -> Result<MetricsServer> {
+        let listener = TcpListener::bind(listen)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = Arc::clone(&stop);
+        let handle = std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if stop_flag.load(Ordering::Relaxed) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                // One scrape per connection; errors only drop that
+                // scrape, never the endpoint.
+                let _ = serve_one(stream, hub);
+            }
+        });
+        Ok(MetricsServer {
+            addr,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    /// The bound address (for ephemeral ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the accept loop and join the server thread.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Unblock the accept with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Answer one scrape: drain the request head (bounded, with a read
+/// timeout so a stalled client cannot wedge the endpoint), then write
+/// the snapshot.
+fn serve_one(mut stream: TcpStream, hub: &MetricsHub) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(500)))?;
+    let mut head = [0u8; 1024];
+    // Best-effort: a bare TCP client may send nothing at all.
+    let _ = stream.read(&mut head);
+    let body = hub.render_prometheus();
+    let response = format!(
+        "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    stream.write_all(response.as_bytes())?;
+    stream.flush()
+}
+
+/// Scrape a metrics endpoint and return the Prometheus text body
+/// (the `spidr metrics` client).
+pub fn scrape(addr: &str) -> Result<String> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    stream.write_all(b"GET /metrics HTTP/1.0\r\nConnection: close\r\n\r\n")?;
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw)?;
+    // Strip the response head if present (a raw-text server may omit it).
+    match raw.split_once("\r\n\r\n") {
+        Some((_, body)) => Ok(body.to_string()),
+        None => Ok(raw),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::metrics::hub;
+
+    #[test]
+    fn scrape_round_trips_prometheus_text() {
+        hub().counter_add("spidr_export_test_total", 41);
+        let mut server = MetricsServer::spawn("127.0.0.1:0", hub()).unwrap();
+        let addr = server.local_addr().to_string();
+        let body = scrape(&addr).unwrap();
+        assert!(
+            body.contains("spidr_export_test_total"),
+            "scraped body missing series:\n{body}"
+        );
+        // A second scrape still works (one connection each).
+        hub().counter_add("spidr_export_test_total", 1);
+        let body2 = scrape(&addr).unwrap();
+        assert!(body2.contains("spidr_export_test_total"));
+        server.stop();
+    }
+}

@@ -1,0 +1,337 @@
+//! Log-bucketed latency histogram: O(1) memory, mergeable, bounded
+//! relative error (DESIGN.md §Observability).
+//!
+//! The serving tier used to buffer **every** per-clip latency in an
+//! unbounded `Vec<u64>` and clone+sort it on every percentile query —
+//! the measurement layer itself could not survive a sensor-scale
+//! stream. [`LatencyHistogram`] replaces that with a fixed array of
+//! bucket counters (HdrHistogram-style linear-within-octave layout):
+//!
+//! * values below [`LINEAR_MAX`] (4096 µs) get **one bucket each** —
+//!   sub-4 ms latencies, the regime every existing percentile test
+//!   pins, are reported *exactly*;
+//! * above that, each power-of-two octave is split into
+//!   [`SUB_BUCKETS`] (16) equal-width buckets, so a reported
+//!   percentile is the bucket's lower bound and the true value `v`
+//!   satisfies `bucket ≤ v ≤ bucket + bucket/16` — a relative error
+//!   of at most **1/16 (6.25 %)**, typically half that.
+//!
+//! Memory is a compile-time constant ([`BUCKET_COUNT`] `u64`
+//! counters ≈ 39 KiB) regardless of how many samples are recorded,
+//! and two histograms merge by element-wise addition — the property
+//! that lets per-worker and per-process histograms roll up into one
+//! fleet-wide view ([`MetricsHub`](super::metrics::MetricsHub)).
+
+/// Values below this (in µs) are counted exactly, one bucket per value.
+pub const LINEAR_MAX: u64 = 4096;
+
+/// Sub-buckets per power-of-two octave above [`LINEAR_MAX`].
+pub const SUB_BUCKETS: usize = 16;
+
+/// log2 of [`LINEAR_MAX`].
+const LINEAR_BITS: u32 = 12;
+
+/// Octaves above the linear region (covers values up to `u64::MAX`).
+const OCTAVES: usize = (64 - LINEAR_BITS as usize) + 1;
+
+/// Total bucket count (the histogram's fixed memory footprint).
+pub const BUCKET_COUNT: usize = LINEAR_MAX as usize + OCTAVES * SUB_BUCKETS;
+
+/// Fixed-memory, mergeable latency histogram over `u64` microsecond
+/// samples. See the module docs for the bucket layout and error bound.
+#[derive(Clone)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for LatencyHistogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LatencyHistogram")
+            .field("count", &self.count)
+            .field("sum", &self.sum)
+            .field("min", &self.min)
+            .field("max", &self.max)
+            .finish()
+    }
+}
+
+/// Bucket index for a value (monotone in `v`).
+fn bucket_of(v: u64) -> usize {
+    if v < LINEAR_MAX {
+        v as usize
+    } else {
+        let lz = 63 - v.leading_zeros(); // floor(log2 v) >= LINEAR_BITS
+        let octave = (lz - LINEAR_BITS) as usize;
+        let frac = ((v >> (lz - 4)) & 0xF) as usize; // top 4 bits below the leading one
+        LINEAR_MAX as usize + octave * SUB_BUCKETS + frac
+    }
+}
+
+/// Lower bound (the reported representative) of a bucket.
+fn value_of(bucket: usize) -> u64 {
+    if bucket < LINEAR_MAX as usize {
+        bucket as u64
+    } else {
+        let rel = bucket - LINEAR_MAX as usize;
+        let octave = (rel / SUB_BUCKETS) as u32;
+        let frac = (rel % SUB_BUCKETS) as u64;
+        // leading one at LINEAR_BITS + octave; 16 + frac is the 5-bit
+        // significand, shifted back into place.
+        (SUB_BUCKETS as u64 + frac) << (LINEAR_BITS + octave - 4)
+    }
+}
+
+impl LatencyHistogram {
+    /// An empty histogram (allocates the fixed bucket array once).
+    pub fn new() -> Self {
+        LatencyHistogram {
+            counts: vec![0; BUCKET_COUNT],
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    /// Record one sample (µs). O(1), no allocation.
+    pub fn record(&mut self, v: u64) {
+        self.counts[bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of all samples (µs; saturating).
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    /// Smallest recorded sample (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest recorded sample (exact, not bucketed).
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Exact arithmetic mean of the recorded samples (0 when empty) —
+    /// tracked outside the buckets, so the mean carries no bucket
+    /// error.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// The `p`-th percentile (0–100) of the recorded samples: the
+    /// bucket lower bound of the sample at rank
+    /// `round(p/100 · (count-1))` — the same rank the old
+    /// clone-and-sort implementation selected, so sub-[`LINEAR_MAX`]
+    /// values are bit-identical to it and larger values are within
+    /// the 1/16 bucket error bound. Returns 0 when empty.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let p = p.clamp(0.0, 100.0);
+        let rank = ((p / 100.0) * (self.count - 1) as f64).round() as u64;
+        let mut seen = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen > rank {
+                return value_of(b);
+            }
+        }
+        self.max
+    }
+
+    /// Merge another histogram into this one (element-wise; the
+    /// roll-up operation for per-worker / per-process views).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Cumulative count of samples ≤ `bound` — the Prometheus
+    /// `_bucket{le="..."}` primitive. Because bucketing is monotone,
+    /// this is exact whenever `bound` is a bucket boundary (all
+    /// powers of two are).
+    pub fn cumulative_le(&self, bound: u64) -> u64 {
+        let cut = if bound == u64::MAX {
+            BUCKET_COUNT
+        } else {
+            bucket_of(bound + 1)
+        };
+        self.counts[..cut.min(BUCKET_COUNT)].iter().sum()
+    }
+
+    /// Power-of-two `le` boundaries spanning the recorded range, for
+    /// Prometheus histogram rendering: `(le, cumulative_count)` pairs,
+    /// ending at the first boundary covering `max()`.
+    pub fn octave_buckets(&self) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        if self.count == 0 {
+            return out;
+        }
+        let mut le = 1u64;
+        loop {
+            out.push((le, self.cumulative_le(le)));
+            if le >= self.max || le >= (1u64 << 62) {
+                break;
+            }
+            le <<= 1;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+
+    #[test]
+    fn bucket_layout_is_monotone_and_self_consistent() {
+        // Every bucket's lower bound maps back to that bucket, and
+        // bucket indices are monotone over a sweep of magnitudes.
+        for b in 0..BUCKET_COUNT - SUB_BUCKETS {
+            let v = value_of(b);
+            assert_eq!(bucket_of(v), b, "value_of({b}) = {v} round-trips");
+        }
+        let mut last = 0usize;
+        let mut v = 0u64;
+        while v < 1 << 40 {
+            let b = bucket_of(v);
+            assert!(b >= last, "bucket_of not monotone at {v}");
+            last = b;
+            v = v * 2 + 1;
+        }
+    }
+
+    #[test]
+    fn exact_below_linear_max() {
+        let mut h = LatencyHistogram::new();
+        for v in [100u64, 300] {
+            h.record(v);
+        }
+        assert_eq!(h.percentile(0.0), 100);
+        assert_eq!(h.percentile(100.0), 300);
+        assert_eq!(h.percentile(50.0), 300); // rank round(0.5*1)=1
+        assert_eq!(h.mean(), 200.0);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.percentile(50.0), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.min(), 0);
+        assert!(h.octave_buckets().is_empty());
+    }
+
+    /// Property (satellite: histogram swap): percentiles match the
+    /// exact clone-and-sort reference bit-for-bit below `LINEAR_MAX`
+    /// and within the documented 1/16 bucket bound above it.
+    #[test]
+    fn prop_percentiles_within_bucket_error_of_sorted_reference() {
+        prop::check("hist_vs_sorted_reference", 60, |g| {
+            let n = g.u64_in(1..=200) as usize;
+            let big = g.u64_in(0..=1) == 1;
+            let mut vals: Vec<u64> = (0..n)
+                .map(|_| {
+                    if big {
+                        g.u64_in(0..=50_000_000)
+                    } else {
+                        g.u64_in(0..=4000)
+                    }
+                })
+                .collect();
+            let mut h = LatencyHistogram::new();
+            for &v in &vals {
+                h.record(v);
+            }
+            vals.sort_unstable();
+            for p in [0.0, 10.0, 50.0, 90.0, 99.0, 100.0] {
+                let rank = ((p / 100.0) * (n - 1) as f64).round() as usize;
+                let exact = vals[rank];
+                let got = h.percentile(p);
+                if exact < LINEAR_MAX {
+                    if got != exact {
+                        return false;
+                    }
+                } else if got > exact || exact > got + got / SUB_BUCKETS as u64 {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn merge_matches_recording_everything_into_one() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let mut both = LatencyHistogram::new();
+        for v in [5u64, 80, 4096, 100_000, 7] {
+            a.record(v);
+            both.record(v);
+        }
+        for v in [9u64, 5_000_000, 4095] {
+            b.record(v);
+            both.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), both.count());
+        assert_eq!(a.sum(), both.sum());
+        assert_eq!(a.max(), both.max());
+        for p in [0.0, 25.0, 50.0, 75.0, 100.0] {
+            assert_eq!(a.percentile(p), both.percentile(p));
+        }
+    }
+
+    #[test]
+    fn cumulative_le_counts_power_of_two_boundaries_exactly() {
+        let mut h = LatencyHistogram::new();
+        for v in [1u64, 2, 3, 4, 1000, 5000, 70_000] {
+            h.record(v);
+        }
+        assert_eq!(h.cumulative_le(1), 1);
+        assert_eq!(h.cumulative_le(2), 2);
+        assert_eq!(h.cumulative_le(4), 4);
+        assert_eq!(h.cumulative_le(1024), 5);
+        assert_eq!(h.cumulative_le(8192), 6);
+        assert_eq!(h.cumulative_le(u64::MAX), 7);
+        let buckets = h.octave_buckets();
+        assert_eq!(buckets.last().unwrap().1, 7, "{buckets:?}");
+    }
+}

@@ -1,0 +1,266 @@
+//! Live metrics registry: named counters, gauges and mergeable
+//! latency histograms with a thread-safe snapshot and Prometheus text
+//! rendering (DESIGN.md §Observability).
+//!
+//! [`MetricsHub`] is the bridge from the end-of-run structs
+//! (`coordinator::Metrics`, `StageMetrics`, `WorkerMetrics`) to a
+//! **mid-run** view: serving tiers feed it per clip as responses
+//! emit, and [`MetricsHub::snapshot`] can be read at any moment from
+//! any thread — the direct prerequisite for SLO-driven autoscaling
+//! (ROADMAP), and what the `spidr metrics` scrape endpoint
+//! ([`super::export`]) serves.
+//!
+//! Series names follow Prometheus conventions (`spidr_*_total` for
+//! counters, `_us`/`_seconds` units suffixes); a name may embed a
+//! label set verbatim, e.g. `spidr_stage_steps_total{stage="2"}`.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use super::hist::LatencyHistogram;
+
+/// Process-wide metrics registry. Cheap to feed (one uncontended
+/// mutex lock per update) and safe to snapshot mid-run.
+pub struct MetricsHub {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, LatencyHistogram>,
+}
+
+static HUB: MetricsHub = MetricsHub {
+    inner: Mutex::new(Inner {
+        counters: BTreeMap::new(),
+        gauges: BTreeMap::new(),
+        hists: BTreeMap::new(),
+    }),
+};
+
+/// The process-wide hub fed by the serving tiers.
+pub fn hub() -> &'static MetricsHub {
+    &HUB
+}
+
+impl MetricsHub {
+    /// A fresh, private hub (tests; the serving tiers use [`hub`]).
+    pub fn new() -> Self {
+        MetricsHub {
+            inner: Mutex::new(Inner::default()),
+        }
+    }
+
+    /// Add `v` to counter `name` (created at 0).
+    pub fn counter_add(&self, name: &str, v: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.counters.get_mut(name) {
+            Some(c) => *c += v,
+            None => {
+                inner.counters.insert(name.to_string(), v);
+            }
+        }
+    }
+
+    /// Set gauge `name` to `v`.
+    pub fn gauge_set(&self, name: &str, v: f64) {
+        self.inner
+            .lock()
+            .unwrap()
+            .gauges
+            .insert(name.to_string(), v);
+    }
+
+    /// Record one sample (µs) into histogram `name`.
+    pub fn observe_us(&self, name: &str, v: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.hists.get_mut(name) {
+            Some(h) => h.record(v),
+            None => {
+                let mut h = LatencyHistogram::new();
+                h.record(v);
+                inner.hists.insert(name.to_string(), h);
+            }
+        }
+    }
+
+    /// Merge a whole histogram into series `name` (the per-worker /
+    /// per-engine roll-up path).
+    pub fn merge_hist(&self, name: &str, h: &LatencyHistogram) {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.hists.get_mut(name) {
+            Some(existing) => existing.merge(h),
+            None => {
+                inner.hists.insert(name.to_string(), h.clone());
+            }
+        }
+    }
+
+    /// A consistent copy of every series, readable mid-run.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let inner = self.inner.lock().unwrap();
+        MetricsSnapshot {
+            counters: inner.counters.clone(),
+            gauges: inner.gauges.clone(),
+            hists: inner.hists.clone(),
+        }
+    }
+
+    /// Drop every series (tests / between runs).
+    pub fn clear(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.counters.clear();
+        inner.gauges.clear();
+        inner.hists.clear();
+    }
+
+    /// Render the current state as Prometheus text exposition format
+    /// (shorthand for `snapshot().render_prometheus()`).
+    pub fn render_prometheus(&self) -> String {
+        self.snapshot().render_prometheus()
+    }
+}
+
+impl Default for MetricsHub {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A point-in-time copy of the hub ([`MetricsHub::snapshot`]).
+#[derive(Clone)]
+pub struct MetricsSnapshot {
+    /// Monotonic counters by name.
+    pub counters: BTreeMap<String, u64>,
+    /// Gauges by name.
+    pub gauges: BTreeMap<String, f64>,
+    /// Latency histograms by name.
+    pub hists: BTreeMap<String, LatencyHistogram>,
+}
+
+/// The base series name: the part before any embedded `{label}` set.
+fn base_name(name: &str) -> &str {
+    name.split('{').next().unwrap_or(name)
+}
+
+impl MetricsSnapshot {
+    /// Counter value (0 when absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Histogram for `name`, if any samples were recorded.
+    pub fn histogram(&self, name: &str) -> Option<&LatencyHistogram> {
+        self.hists.get(name)
+    }
+
+    /// Render as Prometheus text exposition format (version 0.0.4):
+    /// `# TYPE` headers per base series, counter/gauge sample lines,
+    /// and for each histogram the cumulative `_bucket{le="..."}`
+    /// series over power-of-two boundaries plus `_sum`/`_count`
+    /// (DESIGN.md §Observability documents the line grammar).
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut typed: Option<String> = None;
+        let mut type_line = |out: &mut String, typed: &mut Option<String>, base: &str, t: &str| {
+            if typed.as_deref() != Some(base) {
+                out.push_str(&format!("# TYPE {base} {t}\n"));
+                *typed = Some(base.to_string());
+            }
+        };
+        for (name, v) in &self.counters {
+            type_line(&mut out, &mut typed, base_name(name), "counter");
+            out.push_str(&format!("{name} {v}\n"));
+        }
+        for (name, v) in &self.gauges {
+            type_line(&mut out, &mut typed, base_name(name), "gauge");
+            if v.is_finite() {
+                out.push_str(&format!("{name} {v}\n"));
+            } else {
+                out.push_str(&format!("{name} 0\n"));
+            }
+        }
+        for (name, h) in &self.hists {
+            let base = base_name(name);
+            type_line(&mut out, &mut typed, base, "histogram");
+            for (le, cum) in h.octave_buckets() {
+                out.push_str(&format!("{base}_bucket{{le=\"{le}\"}} {cum}\n"));
+            }
+            out.push_str(&format!("{base}_bucket{{le=\"+Inf\"}} {}\n", h.count()));
+            out.push_str(&format!("{base}_sum {}\n", h.sum()));
+            out.push_str(&format!("{base}_count {}\n", h.count()));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_histograms_round_trip_through_snapshot() {
+        let hub = MetricsHub::new();
+        hub.counter_add("spidr_clips_total", 3);
+        hub.counter_add("spidr_clips_total", 2);
+        hub.gauge_set("spidr_pool_utilization", 0.75);
+        for v in [100u64, 200, 300, 400] {
+            hub.observe_us("spidr_clip_latency_us", v);
+        }
+        let snap = hub.snapshot();
+        assert_eq!(snap.counter("spidr_clips_total"), 5);
+        assert_eq!(snap.gauges["spidr_pool_utilization"], 0.75);
+        let h = snap.histogram("spidr_clip_latency_us").unwrap();
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.percentile(100.0), 400);
+    }
+
+    #[test]
+    fn prometheus_rendering_is_well_formed() {
+        let hub = MetricsHub::new();
+        hub.counter_add("spidr_frames_total", 7);
+        hub.counter_add("spidr_stage_steps_total{stage=\"0\"}", 12);
+        hub.gauge_set("spidr_wall_seconds", 1.5);
+        hub.observe_us("spidr_clip_latency_us", 900);
+        hub.observe_us("spidr_clip_latency_us", 90_000);
+        let text = hub.render_prometheus();
+        assert!(text.contains("# TYPE spidr_frames_total counter\n"));
+        assert!(text.contains("spidr_frames_total 7\n"));
+        assert!(text.contains("spidr_stage_steps_total{stage=\"0\"} 12\n"));
+        assert!(text.contains("# TYPE spidr_clip_latency_us histogram\n"));
+        assert!(text.contains("spidr_clip_latency_us_bucket{le=\"+Inf\"} 2\n"));
+        assert!(text.contains("spidr_clip_latency_us_count 2\n"));
+        assert!(text.contains("spidr_clip_latency_us_sum 90900\n"));
+        // buckets are cumulative and monotone
+        let mut last = 0u64;
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("spidr_clip_latency_us_bucket{le=\"") {
+                let count: u64 = rest.split("} ").nth(1).unwrap().parse().unwrap();
+                assert!(count >= last, "non-monotone cumulative bucket: {line}");
+                last = count;
+            }
+        }
+        // every non-comment line is `name[{labels}] value`
+        for line in text.lines() {
+            if line.starts_with('#') || line.is_empty() {
+                continue;
+            }
+            let (name, value) = line.rsplit_once(' ').expect("sample line");
+            assert!(!name.is_empty());
+            assert!(value.parse::<f64>().is_ok(), "unparsable value: {line}");
+        }
+    }
+
+    #[test]
+    fn merge_hist_rolls_up() {
+        let hub = MetricsHub::new();
+        let mut h = LatencyHistogram::new();
+        h.record(10);
+        h.record(20);
+        hub.merge_hist("lat", &h);
+        hub.merge_hist("lat", &h);
+        assert_eq!(hub.snapshot().histogram("lat").unwrap().count(), 4);
+    }
+}

@@ -1,0 +1,36 @@
+//! End-to-end observability: cross-process clip tracing, O(1)
+//! latency histograms, and live metrics export (DESIGN.md
+//! §Observability).
+//!
+//! Zero-dependency, three layers:
+//!
+//! * [`trace`] — clip/batch-scoped [`TraceId`](trace::TraceId)s
+//!   minted at ingest and threaded through dispatch → pool worker /
+//!   pipeline stage → distributed hop → wire → drain → emit; spans
+//!   land in bounded per-thread ring buffers and export as Chrome
+//!   `trace_event` JSON (Perfetto-loadable), with shard-process
+//!   spans joined onto the coordinator timeline via wire propagation
+//!   and a session-start clock-offset estimate.
+//! * [`hist`] — log-bucketed, mergeable latency histograms with O(1)
+//!   memory and a documented 1/16 relative error bound; the storage
+//!   behind `Metrics::percentile_us`.
+//! * [`metrics`] + [`export`] — a process-wide named-series registry
+//!   ([`metrics::MetricsHub`]) readable mid-run, rendered as
+//!   Prometheus text and served by a TCP scrape endpoint
+//!   (`spidr metrics`, `--metrics-listen`).
+//!
+//! The discipline throughout: **observability must never tax the
+//! fast path it observes**. A disabled tracer takes zero timestamps
+//! (audited by [`trace::Tracer::stamps`], benched in
+//! `benches/obs_overhead.rs`), and the histograms cost one array
+//! increment per sample.
+
+pub mod export;
+pub mod hist;
+pub mod metrics;
+pub mod trace;
+
+pub use export::{scrape, MetricsServer};
+pub use hist::LatencyHistogram;
+pub use metrics::{hub, MetricsHub, MetricsSnapshot};
+pub use trace::{tracer, TraceId, Tracer, WireSpan};

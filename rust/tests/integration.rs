@@ -231,6 +231,130 @@ fn golden_model_matches_simulator_flow() {
     );
 }
 
+/// End-to-end trace constellation (DESIGN.md §Observability): a
+/// replicated loopback constellation served under tracing must yield
+/// ONE trace in which the coordinator's `clip` spans and the shard
+/// hosts' wire-flushed `shard_step` spans carry the same clip trace
+/// ids, a severed replica leaves a `failover` instant on the clip that
+/// absorbed it, and the Chrome export is well-formed. Also audits the
+/// disabled fast path across the whole distributed stack: a serve with
+/// tracing off takes zero timestamps.
+///
+/// Uses the process-global tracer, so all phases stay in this one
+/// sequential test; assertions filter by the trace ids minted here
+/// (other tests in this binary may mint and record their own).
+#[test]
+fn distributed_loopback_trace_joins_coordinator_and_shards() {
+    use spidr::net::{DistributedConfig, DistributedEngine};
+    use spidr::obs::trace::{self, SpanKind};
+    use spidr::snn::network::{demo_pipeline_network, Network};
+
+    const TIMESTEPS: usize = 6;
+    fn random_clip(net: &Network, seed: u64) -> Vec<SpikePlane> {
+        let (c, h, w) = net.layers[0].in_shape;
+        let mut rng = spidr::prop::SplitMix64::new(seed);
+        (0..TIMESTEPS)
+            .map(|_| {
+                let mut p = SpikePlane::zeros(c, h, w);
+                for i in 0..p.len() {
+                    if rng.chance(0.2) {
+                        p.as_mut_slice()[i] = 1;
+                    }
+                }
+                p
+            })
+            .collect()
+    }
+
+    let tr = trace::tracer();
+    let net = demo_pipeline_network(TIMESTEPS).unwrap();
+    let clips: Vec<Vec<SpikePlane>> = (0..4).map(|i| random_clip(&net, 90 + i)).collect();
+
+    // Phase 1 — tracing disabled: the full distributed path (connect,
+    // relay, drain) takes zero timestamps. No other test in this
+    // binary enables the tracer, so the audit counter is quiet.
+    tr.disable();
+    {
+        let mut engine =
+            DistributedEngine::loopback(net.clone(), &DistributedConfig::replicated(2, 2))
+                .unwrap();
+        let stamps0 = tr.stamps();
+        engine.infer(&clips[0]).unwrap();
+        assert_eq!(
+            tr.stamps() - stamps0,
+            0,
+            "a disabled tracer must take zero timestamps across the distributed serve"
+        );
+    }
+
+    // Phase 2 — tracing on: connect (trace-sync clock estimate), one
+    // trace per clip, replica 0 of every hop severed mid-stream.
+    tr.enable(1);
+    let mut engine =
+        DistributedEngine::loopback(net.clone(), &DistributedConfig::replicated(2, 2)).unwrap();
+    let kill_at = clips.len() / 2;
+    let mut minted = Vec::new();
+    for (i, clip) in clips.iter().enumerate() {
+        if i == kill_at {
+            for hop in 0..engine.groups().len() {
+                engine.sever_replica(hop, 0).unwrap();
+            }
+        }
+        let t = tr.mint();
+        minted.push(t);
+        let _bind = trace::bind(t);
+        let _span = trace::span("clip");
+        engine.infer(clip).unwrap();
+    }
+    assert!(engine.failovers() > 0, "the severed replica must fail over");
+
+    let events = tr.snapshot_events();
+    for &t in &minted {
+        let mine: Vec<_> = events.iter().filter(|e| e.trace == t.0).collect();
+        assert!(
+            mine.iter()
+                .any(|e| e.name.as_str() == "clip" && e.pid.is_none()),
+            "coordinator root span missing for trace {}",
+            t.0
+        );
+        assert!(
+            mine.iter()
+                .any(|e| e.name.as_str() == "hop" && e.pid.is_none()),
+            "coordinator hop span missing for trace {}",
+            t.0
+        );
+        assert!(
+            mine.iter().any(|e| {
+                e.name.as_str() == "shard_step"
+                    && e.pid.as_deref().is_some_and(|p| p.starts_with("shard-"))
+            }),
+            "shard-process spans missing for trace {} — wire propagation broke",
+            t.0
+        );
+    }
+    let failover_clip = minted[kill_at];
+    assert!(
+        events.iter().any(|e| {
+            e.trace == failover_clip.0
+                && e.name.as_str() == "failover"
+                && e.kind == SpanKind::Instant
+        }),
+        "the absorbed failover must leave an instant event on clip {}",
+        failover_clip.0
+    );
+
+    // The export is one well-formed Chrome trace naming both processes.
+    let json = tr.to_chrome_json();
+    assert!(json.starts_with("{\"traceEvents\":[") && json.ends_with("]}"));
+    assert!(json.contains("\"ph\":\"X\"") && json.contains("\"ph\":\"i\""));
+    assert!(
+        json.contains("\"name\":\"shard-"),
+        "export must name the shard processes"
+    );
+
+    tr.disable();
+}
+
 /// The gesture artifact actually classifies synthetic gestures above
 /// chance (end-to-end quality gate; exact accuracy lives in Fig. 16).
 #[test]
