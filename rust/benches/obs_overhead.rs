@@ -21,6 +21,12 @@
 //! * `obs_baseline_clips_per_s` — baseline throughput, for context.
 //! * `hist_record_ns` — per-sample cost of the log-bucketed latency
 //!   histogram (one array increment; no gate).
+//! * `facade_overhead_ratio` — `crate::sync` facade / raw `std::sync`
+//!   wall time for uncontended mutex traffic (x = 0) and bounded
+//!   channel traffic (x = 1). In a release build the facade is pure
+//!   re-exports (DESIGN.md §Correctness), so this pins the claim at
+//!   ≤1%: the model-checkability of the concurrency layer costs the
+//!   fast path nothing.
 
 mod common;
 
@@ -142,4 +148,67 @@ fn main() {
     let ns = secs * 1e9 / SAMPLES as f64;
     println!("histogram record: {ns:.1} ns/sample over {SAMPLES} samples");
     common::emit("hist_record_ns", 1.0, ns);
+
+    // The `crate::sync` facade vs raw `std::sync`: in this (release,
+    // non-model) build the facade is a pure re-export, and this series
+    // is the regression gate keeping it that way — a wrapper type
+    // sneaking into the facade would show up as a ratio well above 1.
+    const SYNC_OPS: usize = 1 << 20;
+    let mut best_sync = [f64::INFINITY; 4];
+    for _ in 0..REPS {
+        // Variant 0/1: raw-std vs facade mutex; 2/3: raw-std vs
+        // facade bounded channel. Interleaved like the tracer variants.
+        let (_, s) = common::timed(|| {
+            let m = std::sync::Mutex::new(0u64);
+            for _ in 0..SYNC_OPS {
+                *std::hint::black_box(&m).lock().unwrap() += 1;
+            }
+            assert_eq!(*m.lock().unwrap(), SYNC_OPS as u64);
+        });
+        best_sync[0] = best_sync[0].min(s);
+        let (_, s) = common::timed(|| {
+            let m = spidr::sync::Mutex::new(0u64);
+            for _ in 0..SYNC_OPS {
+                *std::hint::black_box(&m).lock().unwrap() += 1;
+            }
+            assert_eq!(*m.lock().unwrap(), SYNC_OPS as u64);
+        });
+        best_sync[1] = best_sync[1].min(s);
+        let (_, s) = common::timed(|| {
+            let (tx, rx) = std::sync::mpsc::sync_channel::<u64>(1);
+            let mut sum = 0u64;
+            for i in 0..SYNC_OPS as u64 {
+                std::hint::black_box(&tx).send(i).unwrap();
+                sum += rx.recv().unwrap();
+            }
+            assert!(sum > 0);
+        });
+        best_sync[2] = best_sync[2].min(s);
+        let (_, s) = common::timed(|| {
+            let (tx, rx) = spidr::sync::mpsc::sync_channel::<u64>(1);
+            let mut sum = 0u64;
+            for i in 0..SYNC_OPS as u64 {
+                std::hint::black_box(&tx).send(i).unwrap();
+                sum += rx.recv().unwrap();
+            }
+            assert!(sum > 0);
+        });
+        best_sync[3] = best_sync[3].min(s);
+    }
+    let mutex_ratio = best_sync[1] / best_sync[0];
+    let chan_ratio = best_sync[3] / best_sync[2];
+    println!(
+        "facade overhead: mutex {mutex_ratio:.4}x, channel {chan_ratio:.4}x \
+         over {SYNC_OPS} ops (best of {REPS})"
+    );
+    common::emit("facade_overhead_ratio", 0.0, mutex_ratio);
+    common::emit("facade_overhead_ratio", 1.0, chan_ratio);
+    assert!(
+        mutex_ratio <= 1.01,
+        "crate::sync mutex must cost <=1% over std, got {mutex_ratio:.4}x"
+    );
+    assert!(
+        chan_ratio <= 1.01,
+        "crate::sync channel must cost <=1% over std, got {chan_ratio:.4}x"
+    );
 }

@@ -1,0 +1,303 @@
+//! Model-checked `mpsc` channels: `channel` (unbounded) and
+//! `sync_channel` (bounded / rendezvous) with the `std::sync::mpsc`
+//! API surface the repo uses. Error types are re-exported from `std`
+//! (they are publicly constructible). Compiled only under
+//! `cfg(spidr_model)`.
+//!
+//! Send / recv / try-variants are scheduling points; buffered values
+//! live in a plain `VecDeque` whose occupancy mirrors the scheduler's
+//! abstract channel state. Outside a model execution the blocking
+//! operations degrade to non-blocking best-effort (model channels are
+//! only meaningful inside [`explore`](super::explore); the release
+//! facade re-exports real `std::sync::mpsc` instead).
+//!
+//! One deliberate approximation: a rendezvous (`sync_channel(0)`)
+//! send completes as soon as a blocked receiver is present, without
+//! additionally blocking the sender until the value is taken. The
+//! repo's protocols all use capacities ≥ 1.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex as StdMutex, PoisonError};
+use std::time::Duration;
+
+pub use std::sync::mpsc::{
+    RecvError, RecvTimeoutError, SendError, TryRecvError, TrySendError,
+};
+
+use super::rt::{self, Effect, Grant, ObjKind, Op};
+
+struct ChanInner<T> {
+    cell: rt::ObjCell,
+    cap: Option<usize>,
+    buf: StdMutex<VecDeque<T>>,
+}
+
+impl<T> ChanInner<T> {
+    fn obj(&self, cx: &rt::Ctx) -> rt::ObjId {
+        cx.rt.obj_id(
+            &self.cell,
+            ObjKind::Chan {
+                len: 0,
+                cap: self.cap,
+                senders: 1,
+                recv_alive: true,
+            },
+            cx.vtid,
+        )
+    }
+
+    fn push(&self, t: T) {
+        self.buf
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .push_back(t);
+    }
+
+    fn pop(&self) -> Option<T> {
+        self.buf
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .pop_front()
+    }
+}
+
+/// Create an unbounded model channel (`std::sync::mpsc::channel`).
+pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+    let inner = Arc::new(ChanInner {
+        cell: rt::ObjCell::new(),
+        cap: None,
+        buf: StdMutex::new(VecDeque::new()),
+    });
+    if let Some(cx) = rt::ctx() {
+        inner.obj(&cx); // register eagerly so handle counts start now
+    }
+    (
+        Sender {
+            ch: Arc::clone(&inner),
+        },
+        Receiver { ch: inner },
+    )
+}
+
+/// Create a bounded model channel (`std::sync::mpsc::sync_channel`).
+pub fn sync_channel<T>(cap: usize) -> (SyncSender<T>, Receiver<T>) {
+    let inner = Arc::new(ChanInner {
+        cell: rt::ObjCell::new(),
+        cap: Some(cap),
+        buf: StdMutex::new(VecDeque::new()),
+    });
+    if let Some(cx) = rt::ctx() {
+        inner.obj(&cx);
+    }
+    (
+        SyncSender {
+            ch: Arc::clone(&inner),
+        },
+        Receiver { ch: inner },
+    )
+}
+
+fn send_impl<T>(ch: &ChanInner<T>, t: T) -> Result<(), SendError<T>> {
+    match rt::ctx() {
+        Some(cx) if !std::thread::panicking() => {
+            let obj = ch.obj(&cx);
+            match cx.rt.op(cx.vtid, Op::Send { ch: obj }) {
+                Grant::SendOk => {
+                    ch.push(t);
+                    Ok(())
+                }
+                _ => Err(SendError(t)),
+            }
+        }
+        _ => {
+            ch.push(t);
+            Ok(())
+        }
+    }
+}
+
+fn clone_handle<T>(ch: &Arc<ChanInner<T>>) -> Arc<ChanInner<T>> {
+    if let Some(cx) = rt::ctx() {
+        let obj = ch.obj(&cx);
+        cx.rt
+            .effect_then_yield(cx.vtid, Effect::SenderClone(obj), "sender_clone");
+    }
+    Arc::clone(ch)
+}
+
+fn drop_sender<T>(ch: &ChanInner<T>) {
+    if let Some(cx) = rt::ctx() {
+        let obj = ch.obj(&cx);
+        cx.rt
+            .effect_then_yield(cx.vtid, Effect::SenderDrop(obj), "sender_drop");
+    }
+}
+
+/// Sending half of an unbounded channel.
+pub struct Sender<T> {
+    ch: Arc<ChanInner<T>>,
+}
+
+impl<T> Sender<T> {
+    /// Send a value; `Err` only if the receiver was dropped.
+    pub fn send(&self, t: T) -> Result<(), SendError<T>> {
+        send_impl(&self.ch, t)
+    }
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        Sender {
+            ch: clone_handle(&self.ch),
+        }
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        drop_sender(&self.ch);
+    }
+}
+
+/// Sending half of a bounded channel.
+pub struct SyncSender<T> {
+    ch: Arc<ChanInner<T>>,
+}
+
+impl<T> SyncSender<T> {
+    /// Send, blocking (a scheduling point) while the buffer is full.
+    pub fn send(&self, t: T) -> Result<(), SendError<T>> {
+        send_impl(&self.ch, t)
+    }
+
+    /// Non-blocking send; the scheduler decides the outcome from the
+    /// model channel state.
+    pub fn try_send(&self, t: T) -> Result<(), TrySendError<T>> {
+        match rt::ctx() {
+            Some(cx) if !std::thread::panicking() => {
+                let obj = self.ch.obj(&cx);
+                match cx.rt.op(cx.vtid, Op::TrySend { ch: obj }) {
+                    Grant::TrySendOk => {
+                        self.ch.push(t);
+                        Ok(())
+                    }
+                    Grant::TrySendFull => Err(TrySendError::Full(t)),
+                    _ => Err(TrySendError::Disconnected(t)),
+                }
+            }
+            _ => {
+                self.ch.push(t);
+                Ok(())
+            }
+        }
+    }
+}
+
+impl<T> Clone for SyncSender<T> {
+    fn clone(&self) -> Self {
+        SyncSender {
+            ch: clone_handle(&self.ch),
+        }
+    }
+}
+
+impl<T> Drop for SyncSender<T> {
+    fn drop(&mut self) {
+        drop_sender(&self.ch);
+    }
+}
+
+/// Receiving half of a model channel.
+pub struct Receiver<T> {
+    ch: Arc<ChanInner<T>>,
+}
+
+impl<T> Receiver<T> {
+    /// Receive, blocking (a scheduling point) while the buffer is
+    /// empty and senders remain.
+    pub fn recv(&self) -> Result<T, RecvError> {
+        match rt::ctx() {
+            Some(cx) if !std::thread::panicking() => {
+                let obj = self.ch.obj(&cx);
+                match cx.rt.op(cx.vtid, Op::Recv {
+                    ch: obj,
+                    timed: false,
+                }) {
+                    Grant::RecvData => Ok(self.ch.pop().expect("granted recv finds a value")),
+                    _ => Err(RecvError),
+                }
+            }
+            _ => self.ch.pop().ok_or(RecvError),
+        }
+    }
+
+    /// Like [`Receiver::recv`] but the scheduler may fire the timeout
+    /// at any point (the `Duration` value is ignored — model time is
+    /// schedule order, not wall time).
+    pub fn recv_timeout(&self, _dur: Duration) -> Result<T, RecvTimeoutError> {
+        match rt::ctx() {
+            Some(cx) if !std::thread::panicking() => {
+                let obj = self.ch.obj(&cx);
+                match cx.rt.op(cx.vtid, Op::Recv {
+                    ch: obj,
+                    timed: true,
+                }) {
+                    Grant::RecvData => Ok(self.ch.pop().expect("granted recv finds a value")),
+                    Grant::RecvTimedOut => Err(RecvTimeoutError::Timeout),
+                    _ => Err(RecvTimeoutError::Disconnected),
+                }
+            }
+            _ => self.ch.pop().ok_or(RecvTimeoutError::Disconnected),
+        }
+    }
+
+    /// Non-blocking receive; the scheduler decides the outcome.
+    pub fn try_recv(&self) -> Result<T, TryRecvError> {
+        match rt::ctx() {
+            Some(cx) if !std::thread::panicking() => {
+                let obj = self.ch.obj(&cx);
+                match cx.rt.op(cx.vtid, Op::TryRecv { ch: obj }) {
+                    Grant::TryRecvData => Ok(self.ch.pop().expect("granted recv finds a value")),
+                    Grant::TryRecvEmpty => Err(TryRecvError::Empty),
+                    _ => Err(TryRecvError::Disconnected),
+                }
+            }
+            _ => self.ch.pop().ok_or(TryRecvError::Disconnected),
+        }
+    }
+
+    /// Blocking iterator over received values, ending at disconnect.
+    pub fn iter(&self) -> Iter<'_, T> {
+        Iter { rx: self }
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        if let Some(cx) = rt::ctx() {
+            let obj = self.ch.obj(&cx);
+            cx.rt
+                .effect_then_yield(cx.vtid, Effect::ReceiverDrop(obj), "receiver_drop");
+        }
+    }
+}
+
+/// Iterator returned by [`Receiver::iter`].
+pub struct Iter<'a, T> {
+    rx: &'a Receiver<T>,
+}
+
+impl<T> Iterator for Iter<'_, T> {
+    type Item = T;
+    fn next(&mut self) -> Option<T> {
+        self.rx.recv().ok()
+    }
+}
+
+impl<'a, T> IntoIterator for &'a Receiver<T> {
+    type Item = T;
+    type IntoIter = Iter<'a, T>;
+    fn into_iter(self) -> Iter<'a, T> {
+        self.iter()
+    }
+}

@@ -1,0 +1,249 @@
+//! Deterministic concurrency model checking (`--cfg spidr_model`).
+//!
+//! A loom-style, zero-dependency bounded model checker for the crate's
+//! concurrency layer (DESIGN.md §Correctness). Code written against
+//! [`crate::sync`] compiles to plain `std` in release builds; under
+//! `RUSTFLAGS="--cfg spidr_model"` every lock / condvar wait / notify /
+//! channel send / recv / atomic op becomes a *scheduling point* routed
+//! through a cooperative scheduler ([`rt`]) that serializes the
+//! program's threads and explores interleavings exhaustively:
+//!
+//! * **DFS over scheduling decisions** — each scheduling point records
+//!   the candidate set and the index chosen; the explorer backtracks
+//!   over the deepest untried alternative and replays the prefix
+//!   deterministically.
+//! * **Preemption bound** — switching away from a thread that could
+//!   have kept running costs one unit of budget
+//!   ([`Config::preemption_bound`]); most real bugs need ≤2.
+//! * **State-hash pruning** — states whose per-object operation
+//!   histories match a visited state (Mazurkiewicz trace equivalence,
+//!   64-bit hash) are pruned.
+//! * **Failure detection** — deadlock (no enabled op and no timeout to
+//!   fire), lost wakeup (every live thread in an untimed condvar
+//!   wait), [`model_assert!`] violations, panics, and livelock (step
+//!   limit); every failure carries a schedule that [`replay`] reruns
+//!   to the same outcome.
+//!
+//! ```text
+//! RUSTFLAGS="--cfg spidr_model" cargo test --test model
+//! ```
+
+use std::collections::HashSet;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, OnceLock};
+
+pub mod chan;
+pub(crate) mod rt;
+pub mod shim;
+pub mod thread_shim;
+
+/// Exploration limits for [`explore`].
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Maximum number of *preemptions* (context switches away from a
+    /// thread that could have continued) per execution.
+    pub preemption_bound: usize,
+    /// Hard cap on the number of executions explored.
+    pub max_executions: u64,
+    /// Hard cap on scheduling points per execution (livelock guard).
+    pub max_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            preemption_bound: 2,
+            max_executions: 500_000,
+            max_steps: 20_000,
+        }
+    }
+}
+
+impl Config {
+    /// The default configuration (preemption bound 2).
+    pub fn new() -> Config {
+        Config::default()
+    }
+
+    /// Same configuration with a different preemption bound.
+    pub fn with_bound(mut self, bound: usize) -> Config {
+        self.preemption_bound = bound;
+        self
+    }
+}
+
+/// Why an execution failed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FailureKind {
+    /// Unfinished threads exist but no operation is enabled and no
+    /// timeout can fire.
+    Deadlock,
+    /// Deadlock where every live thread sits in an *untimed* condvar
+    /// wait: the classic missed-notify window.
+    LostWakeup,
+    /// A [`model_assert!`] fired (message inside).
+    Assertion(String),
+    /// User code panicked (message inside).
+    Panic(String),
+    /// The execution exceeded [`Config::max_steps`] scheduling points.
+    StepLimit,
+}
+
+impl std::fmt::Display for FailureKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FailureKind::Deadlock => write!(f, "deadlock"),
+            FailureKind::LostWakeup => write!(f, "lost wakeup"),
+            FailureKind::Assertion(m) => write!(f, "assertion failed: {m}"),
+            FailureKind::Panic(m) => write!(f, "panic: {m}"),
+            FailureKind::StepLimit => write!(f, "step limit exceeded (livelock?)"),
+        }
+    }
+}
+
+/// A failing execution: what went wrong plus the schedule to rerun it.
+#[derive(Clone, Debug)]
+pub struct Failure {
+    /// Failure class.
+    pub kind: FailureKind,
+    /// The scheduling choices of the failing execution; feed to
+    /// [`replay`] for a deterministic rerun.
+    pub schedule: Vec<usize>,
+    /// Human-readable decision trace (one line per scheduling point)
+    /// ending with the final per-thread states.
+    pub trace: String,
+}
+
+/// The result of an [`explore`] run.
+#[derive(Debug)]
+pub struct Report {
+    /// Executions started (including pruned ones).
+    pub executions: u64,
+    /// Executions cut short by state-hash pruning.
+    pub pruned: u64,
+    /// The first failure found, if any (exploration stops on it).
+    pub failure: Option<Failure>,
+}
+
+impl Report {
+    /// Panic with the full schedule trace if a failure was found.
+    ///
+    /// The panic message embeds the failure kind, the replayable
+    /// schedule, and the decision trace, so a CI log alone is enough
+    /// to pin a regression model.
+    pub fn assert_ok(&self) {
+        if let Some(f) = &self.failure {
+            panic!(
+                "model exploration failed after {} executions ({} pruned): {}\nschedule: {:?}\ntrace:\n{}",
+                self.executions, self.pruned, f.kind, f.schedule, f.trace
+            );
+        }
+    }
+}
+
+/// Silence the panic hook for model-internal unwinds: every abort
+/// tears threads down via sentinel panics, and user-code failures are
+/// reported through [`Failure`], not stderr spam (thousands of
+/// executions would otherwise print thousands of backtraces).
+fn install_hook() {
+    static HOOK: OnceLock<()> = OnceLock::new();
+    HOOK.get_or_init(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let sentinel = info.payload().is::<rt::Abort>()
+                || info.payload().is::<rt::ModelFailureMsg>()
+                || rt::ctx().is_some();
+            if !sentinel {
+                prev(info);
+            }
+        }));
+    });
+}
+
+/// Exhaustively explore the interleavings of `body` within `cfg`'s
+/// bounds. `body` runs once per execution as virtual thread 0 and may
+/// spawn more threads through `crate::sync::thread`; exploration stops
+/// at the first failure or when the bounded space is exhausted.
+pub fn explore<F: Fn()>(cfg: Config, body: F) -> Report {
+    install_hook();
+    let mut visited: HashSet<u64> = HashSet::new();
+    let mut prefix: Vec<usize> = Vec::new();
+    let mut executions = 0u64;
+    let mut pruned = 0u64;
+    loop {
+        let rt = Arc::new(rt::Rt::new(&cfg, prefix, std::mem::take(&mut visited), true));
+        let _ = catch_unwind(AssertUnwindSafe(|| rt::run_vthread(&rt, 0, &body)));
+        rt.wait_quiescent();
+        executions += 1;
+        let (trail, was_pruned, failure, vis) = rt.take_outcome();
+        visited = vis;
+        if was_pruned {
+            pruned += 1;
+        }
+        if failure.is_some() {
+            return Report {
+                executions,
+                pruned,
+                failure,
+            };
+        }
+        match rt::Rt::next_prefix(&trail, cfg.preemption_bound) {
+            Some(p) if executions < cfg.max_executions => prefix = p,
+            _ => {
+                return Report {
+                    executions,
+                    pruned,
+                    failure: None,
+                }
+            }
+        }
+    }
+}
+
+/// Re-run one pinned execution: follow `schedule` exactly (continuing
+/// with the default choice past its end) and return the failure it
+/// reproduces, if any. Deterministic: replaying the schedule out of a
+/// [`Failure`] yields the same [`FailureKind`].
+pub fn replay<F: FnOnce()>(cfg: Config, schedule: &[usize], body: F) -> Option<Failure> {
+    install_hook();
+    let rt = Arc::new(rt::Rt::new(&cfg, schedule.to_vec(), HashSet::new(), false));
+    let _ = catch_unwind(AssertUnwindSafe(|| rt::run_vthread(&rt, 0, body)));
+    rt.wait_quiescent();
+    let (_, _, failure, _) = rt.take_outcome();
+    failure
+}
+
+/// Assert an invariant inside a model body. On violation the current
+/// execution aborts and [`explore`] reports
+/// [`FailureKind::Assertion`] with the failing schedule. Outside a
+/// model run it degrades to a plain `assert!`.
+#[macro_export]
+macro_rules! model_assert {
+    ($cond:expr) => {
+        $crate::model_assert!($cond, "{}", stringify!($cond))
+    };
+    ($cond:expr, $($msg:tt)+) => {
+        if !$cond {
+            $crate::check::model_violation(format!($($msg)+));
+        }
+    };
+}
+
+/// Assert two expressions are equal inside a model body (see
+/// [`model_assert!`]).
+#[macro_export]
+macro_rules! model_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        $crate::model_assert!(a == b, "{:?} != {:?} ({} vs {})", a, b, stringify!($a), stringify!($b));
+    }};
+}
+
+/// Raise a model invariant violation (the expansion target of
+/// [`model_assert!`]; not meant to be called directly).
+pub fn model_violation(msg: String) -> ! {
+    if rt::ctx().is_some() {
+        std::panic::panic_any(rt::ModelFailureMsg(msg));
+    }
+    panic!("{msg}");
+}

@@ -1,0 +1,1014 @@
+//! The deterministic-interleaving runtime behind `cfg(spidr_model)`.
+//!
+//! Real OS threads are *serialized*: at every synchronization operation
+//! a virtual thread parks, registers the operation it wants to perform
+//! next ([`Op`]), and waits until the scheduler grants it the single
+//! `active` slot. The scheduler picks among *enabled* operations; each
+//! pick is one entry in the decision trail, and the explorer in
+//! `mod.rs` backtracks over that trail (DFS with a preemption bound
+//! and Mazurkiewicz-style state-hash pruning) to enumerate
+//! interleavings exhaustively at small bounds.
+//!
+//! Nothing here is compiled into release builds — `crate::sync`
+//! re-exports plain `std` primitives unless `--cfg spidr_model` is set.
+
+use std::cell::RefCell;
+use std::collections::HashSet;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar as StdCondvar, Mutex as StdMutex, MutexGuard as StdMutexGuard};
+use std::sync::PoisonError;
+
+use super::{Config, Failure, FailureKind};
+
+/// splitmix64 finalizer: the hash mixer for state fingerprints.
+pub(crate) fn mix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Index into the per-execution object table.
+pub(crate) type ObjId = usize;
+
+/// Why a thread is trying to (re-)acquire a mutex.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub(crate) enum AcquireWhy {
+    /// Plain `Mutex::lock`.
+    Lock,
+    /// Re-acquire after a condvar notification.
+    Notified,
+    /// Re-acquire after a condvar timed wait fired its timeout.
+    TimedOut,
+}
+
+/// The operation a parked virtual thread wants to perform next.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum Op {
+    /// Thread creation: the first scheduling point of a new vthread.
+    Start,
+    /// An always-enabled scheduling point (atomics, unlock, notify,
+    /// sleep, explicit yield). The tag and optional object feed the
+    /// trace and the state hash.
+    Yield(&'static str, Option<ObjId>),
+    /// Block until the mutex is free, then take it.
+    Acquire {
+        /// Target mutex.
+        m: ObjId,
+        /// What brought the thread here (trace + grant flavor).
+        why: AcquireWhy,
+    },
+    /// Non-blocking lock attempt (always enabled; outcome in grant).
+    TryLock {
+        /// Target mutex.
+        m: ObjId,
+    },
+    /// Atomically release `m` and wait on `cv`. Never enabled by
+    /// itself: a notify converts it to `Acquire{why: Notified}`, and
+    /// when `timed` the scheduler may fire the timeout instead.
+    CvWait {
+        /// Condvar waited on.
+        cv: ObjId,
+        /// Mutex released for the duration of the wait.
+        m: ObjId,
+        /// Whether this is `wait_timeout` (timeout may fire).
+        timed: bool,
+    },
+    /// Blocking channel send.
+    Send {
+        /// Target channel.
+        ch: ObjId,
+    },
+    /// Non-blocking channel send (always enabled; outcome in grant).
+    TrySend {
+        /// Target channel.
+        ch: ObjId,
+    },
+    /// Blocking channel receive.
+    Recv {
+        /// Target channel.
+        ch: ObjId,
+        /// Whether this is `recv_timeout` (timeout may fire).
+        timed: bool,
+    },
+    /// Non-blocking receive (always enabled; outcome in grant).
+    TryRecv {
+        /// Target channel.
+        ch: ObjId,
+    },
+    /// Block until vthread `tid` has finished.
+    Join {
+        /// Joined vthread.
+        tid: usize,
+    },
+}
+
+/// What the scheduler decided for a granted [`Op`].
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub(crate) enum Grant {
+    /// Proceed (start/yield/acquire/join).
+    Go,
+    /// Condvar wait woke via notify and re-acquired the mutex.
+    LockedNotified,
+    /// Condvar timed wait fired its timeout and re-acquired the mutex.
+    LockedTimedOut,
+    /// `try_lock` succeeded.
+    TryLockOk,
+    /// `try_lock` would block.
+    TryLockBusy,
+    /// Blocking send accepted (buffer slot or rendezvous).
+    SendOk,
+    /// Blocking send failed: receiver dropped.
+    SendDisconnected,
+    /// `try_send` accepted.
+    TrySendOk,
+    /// `try_send` would block (buffer full / no rendezvous reader).
+    TrySendFull,
+    /// `try_send` failed: receiver dropped.
+    TrySendDisconnected,
+    /// Receive got a value.
+    RecvData,
+    /// Receive failed: every sender dropped and the buffer is empty.
+    RecvDisconnected,
+    /// `recv_timeout` fired its timeout.
+    RecvTimedOut,
+    /// `try_recv` got a value.
+    TryRecvData,
+    /// `try_recv` found the buffer empty.
+    TryRecvEmpty,
+    /// `try_recv` failed: every sender dropped and the buffer is empty.
+    TryRecvDisconnected,
+}
+
+/// Immediate (non-blocking, but history-folded) state changes.
+pub(crate) enum Effect {
+    /// Release a mutex.
+    Unlock(ObjId),
+    /// Wake every waiter on a condvar.
+    NotifyAll(ObjId),
+    /// Wake the lowest-tid waiter (FIFO approximation; the repo only
+    /// uses `notify_all`, this exists for completeness).
+    NotifyOne(ObjId),
+    /// A sender handle was cloned.
+    SenderClone(ObjId),
+    /// A sender handle was dropped.
+    SenderDrop(ObjId),
+    /// The receiver was dropped.
+    ReceiverDrop(ObjId),
+}
+
+#[derive(Clone, Debug)]
+enum Status {
+    /// Parked at a scheduling point with a pending op.
+    Ready(Op),
+    /// Granted: currently running user code.
+    Active,
+    /// Body returned (or unwound); joinable.
+    Finished,
+}
+
+struct VThread {
+    status: Status,
+    grant: Option<Grant>,
+    /// Scheduling points taken so far (seeds object identities).
+    ops: u64,
+    name: String,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum ObjKind {
+    /// A mutex; `locked` is the model-level ownership bit.
+    Mutex {
+        /// Whether some vthread holds it.
+        locked: bool,
+    },
+    /// A condvar (waiters are tracked via thread statuses).
+    Condvar,
+    /// A channel endpoint pair.
+    Chan {
+        /// Values currently buffered.
+        len: usize,
+        /// `None` = unbounded, `Some(0)` = rendezvous.
+        cap: Option<usize>,
+        /// Live sender handles.
+        senders: usize,
+        /// Whether the receiver is still alive.
+        recv_alive: bool,
+    },
+    /// An atomic cell (value history folded at op time).
+    Atomic,
+}
+
+struct Obj {
+    kind: ObjKind,
+    /// Folded per-object operation history (Mazurkiewicz trace hash).
+    hist: u64,
+    /// Stable identity seed: mix(creator tid, creator op-count).
+    seed: u64,
+}
+
+/// One scheduler decision in the trail.
+struct Choice {
+    n: usize,
+    chosen: usize,
+    /// Whether option 0 was "keep running the previous thread"
+    /// (any other pick then costs one preemption).
+    has_la: bool,
+    preemptions_before: usize,
+    desc: String,
+}
+
+struct State {
+    threads: Vec<VThread>,
+    objects: Vec<Obj>,
+    active: Option<usize>,
+    last_active: Option<usize>,
+    trail: Vec<Choice>,
+    prefix: Vec<usize>,
+    cursor: usize,
+    preemptions: usize,
+    steps: usize,
+    visited: HashSet<u64>,
+    aborting: bool,
+    pruned: bool,
+    failure: Option<Failure>,
+    /// OS threads (incl. vthread 0) that have not run `thread_end`.
+    live_os: usize,
+}
+
+/// Monotone epoch distinguishing executions, so process-global
+/// `ObjCell`s (obs statics) re-register lazily per execution.
+static EPOCH: AtomicU64 = AtomicU64::new(1);
+
+/// Lazily-registered object identity, packed `epoch << 32 | id + 1`.
+/// `const`-constructible so `crate::sync` statics stay `const`.
+pub(crate) struct ObjCell(AtomicU64);
+
+impl ObjCell {
+    /// An unregistered cell.
+    pub(crate) const fn new() -> Self {
+        ObjCell(AtomicU64::new(0))
+    }
+}
+
+impl Default for ObjCell {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Silent unwind payload used to tear threads down on abort.
+pub(crate) struct Abort;
+
+/// `model_assert!` failure payload.
+pub(crate) struct ModelFailureMsg(pub String);
+
+/// Per-OS-thread binding to the runtime of the current execution.
+#[derive(Clone)]
+pub(crate) struct Ctx {
+    pub(crate) rt: Arc<Rt>,
+    pub(crate) vtid: usize,
+}
+
+thread_local! {
+    static CTX: RefCell<Option<Ctx>> = const { RefCell::new(None) };
+}
+
+/// The current model context, if this OS thread is a vthread.
+pub(crate) fn ctx() -> Option<Ctx> {
+    CTX.with(|c| c.borrow().clone())
+}
+
+/// The serialization runtime for one execution.
+pub(crate) struct Rt {
+    st: StdMutex<State>,
+    cv: StdCondvar,
+    epoch: u64,
+    bound: usize,
+    max_steps: usize,
+    prune: bool,
+}
+
+fn unpoison<T>(r: Result<T, PoisonError<T>>) -> T {
+    r.unwrap_or_else(PoisonError::into_inner)
+}
+
+impl Rt {
+    /// A fresh execution: replay `prefix`, reuse `visited` across
+    /// executions. `prune=false` disables state-hash pruning (replay).
+    pub(crate) fn new(cfg: &Config, prefix: Vec<usize>, visited: HashSet<u64>, prune: bool) -> Rt {
+        Rt {
+            st: StdMutex::new(State {
+                threads: vec![VThread {
+                    status: Status::Ready(Op::Start),
+                    grant: Some(Grant::Go),
+                    ops: 0,
+                    name: "main".to_string(),
+                }],
+                objects: Vec::new(),
+                active: Some(0),
+                last_active: None,
+                trail: Vec::new(),
+                prefix,
+                cursor: 0,
+                preemptions: 0,
+                steps: 0,
+                visited,
+                aborting: false,
+                pruned: false,
+                failure: None,
+                live_os: 1,
+            }),
+            cv: StdCondvar::new(),
+            epoch: EPOCH.fetch_add(1, Ordering::Relaxed),
+            bound: cfg.preemption_bound,
+            max_steps: cfg.max_steps,
+            prune,
+        }
+    }
+
+    fn lock(&self) -> StdMutexGuard<'_, State> {
+        unpoison(self.st.lock())
+    }
+
+    /// Register (or look up) the model object behind `cell`.
+    pub(crate) fn obj_id(&self, cell: &ObjCell, kind: ObjKind, vtid: usize) -> ObjId {
+        let mut st = self.lock();
+        self.obj_id_locked(&mut st, cell, kind, vtid)
+    }
+
+    fn obj_id_locked(&self, st: &mut State, cell: &ObjCell, kind: ObjKind, vtid: usize) -> ObjId {
+        let packed = cell.0.load(Ordering::Relaxed);
+        if packed >> 32 == self.epoch && packed & 0xffff_ffff != 0 {
+            return ((packed & 0xffff_ffff) - 1) as usize;
+        }
+        let id = st.objects.len();
+        let seed = mix64(((vtid as u64) << 32) ^ st.threads[vtid].ops ^ (id as u64).rotate_left(17));
+        st.objects.push(Obj { kind, hist: 0, seed });
+        cell.0
+            .store((self.epoch << 32) | (id as u64 + 1), Ordering::Relaxed);
+        id
+    }
+
+    /// Park at a scheduling point and wait for the grant.
+    /// Must not be called while unwinding (shims fall back instead).
+    pub(crate) fn op(&self, vtid: usize, op: Op) -> Grant {
+        let mut st = self.lock();
+        if st.aborting {
+            drop(st);
+            std::panic::panic_any(Abort);
+        }
+        st.threads[vtid].ops += 1;
+        st.threads[vtid].status = Status::Ready(op);
+        st.threads[vtid].grant = None;
+        if st.active == Some(vtid) {
+            st.last_active = Some(vtid);
+            st.active = None;
+            self.schedule(&mut st);
+        }
+        loop {
+            if st.aborting {
+                drop(st);
+                std::panic::panic_any(Abort);
+            }
+            if st.active == Some(vtid) {
+                break;
+            }
+            st = unpoison(self.cv.wait(st));
+        }
+        st.threads[vtid].status = Status::Active;
+        st.threads[vtid]
+            .grant
+            .take()
+            .expect("granted vthread must carry a grant")
+    }
+
+    /// Atomically release `m` and park waiting on `cv`: the unlock
+    /// effect and the wait registration happen with no scheduling
+    /// point in between (real condvar atomicity — a notify can never
+    /// slip into the release-to-park window).
+    pub(crate) fn cv_wait(&self, vtid: usize, cv: ObjId, m: ObjId, timed: bool) -> Grant {
+        {
+            let mut st = self.lock();
+            Self::apply_effect(&mut st, vtid, &Effect::Unlock(m));
+        }
+        self.op(vtid, Op::CvWait { cv, m, timed })
+    }
+
+    /// Apply an immediate effect, then take a yield scheduling point
+    /// (skipped while unwinding: best-effort state update only).
+    pub(crate) fn effect_then_yield(&self, vtid: usize, eff: Effect, tag: &'static str) {
+        let obj = {
+            let mut st = self.lock();
+            Self::apply_effect(&mut st, vtid, &eff)
+        };
+        if !std::thread::panicking() {
+            self.op(vtid, Op::Yield(tag, Some(obj)));
+        }
+    }
+
+    /// Fold an observed value (atomic results) into an object history.
+    pub(crate) fn fold_value(&self, obj: ObjId, v: u64) {
+        let mut st = self.lock();
+        st.objects[obj].hist = mix64(st.objects[obj].hist ^ v.rotate_left(7));
+    }
+
+    fn apply_effect(st: &mut State, vtid: usize, eff: &Effect) -> ObjId {
+        let (obj, tag) = match *eff {
+            Effect::Unlock(m) => {
+                if let ObjKind::Mutex { ref mut locked } = st.objects[m].kind {
+                    *locked = false;
+                }
+                (m, 1u64)
+            }
+            Effect::NotifyAll(cv) => {
+                Self::notify(st, cv, usize::MAX);
+                (cv, 2)
+            }
+            Effect::NotifyOne(cv) => {
+                Self::notify(st, cv, 1);
+                (cv, 3)
+            }
+            Effect::SenderClone(ch) => {
+                if let ObjKind::Chan {
+                    ref mut senders, ..
+                } = st.objects[ch].kind
+                {
+                    *senders += 1;
+                }
+                (ch, 4)
+            }
+            Effect::SenderDrop(ch) => {
+                if let ObjKind::Chan {
+                    ref mut senders, ..
+                } = st.objects[ch].kind
+                {
+                    *senders = senders.saturating_sub(1);
+                }
+                (ch, 5)
+            }
+            Effect::ReceiverDrop(ch) => {
+                if let ObjKind::Chan {
+                    ref mut recv_alive, ..
+                } = st.objects[ch].kind
+                {
+                    *recv_alive = false;
+                }
+                (ch, 6)
+            }
+        };
+        st.objects[obj].hist = mix64(st.objects[obj].hist ^ ((vtid as u64) << 40) ^ tag);
+        obj
+    }
+
+    /// Convert up to `max` waiters on `cv` into mutex re-acquirers.
+    fn notify(st: &mut State, cv: ObjId, max: usize) {
+        let mut woken = 0;
+        for t in st.threads.iter_mut() {
+            if woken >= max {
+                break;
+            }
+            if let Status::Ready(Op::CvWait { cv: c, m, .. }) = t.status {
+                if c == cv {
+                    t.status = Status::Ready(Op::Acquire {
+                        m,
+                        why: AcquireWhy::Notified,
+                    });
+                    woken += 1;
+                }
+            }
+        }
+    }
+
+    /// Register a new vthread (called from the spawner, which is
+    /// active); the OS thread attaches later via `thread_begin`.
+    pub(crate) fn register_thread(&self, name: String) -> usize {
+        let mut st = self.lock();
+        st.live_os += 1;
+        st.threads.push(VThread {
+            status: Status::Ready(Op::Start),
+            grant: None,
+            ops: 0,
+            name,
+        });
+        st.threads.len() - 1
+    }
+
+    fn thread_begin(&self, vtid: usize) {
+        let mut st = self.lock();
+        loop {
+            if st.aborting {
+                drop(st);
+                std::panic::panic_any(Abort);
+            }
+            if st.active == Some(vtid) {
+                break;
+            }
+            st = unpoison(self.cv.wait(st));
+        }
+        st.threads[vtid].status = Status::Active;
+        st.threads[vtid].grant = None;
+    }
+
+    fn thread_end(&self, vtid: usize, payload: Option<Box<dyn std::any::Any + Send>>) {
+        let mut st = self.lock();
+        st.live_os -= 1;
+        st.threads[vtid].status = Status::Finished;
+        if let Some(p) = payload {
+            if !st.aborting && !p.is::<Abort>() {
+                let kind = match p.downcast::<ModelFailureMsg>() {
+                    Ok(mf) => FailureKind::Assertion(mf.0),
+                    Err(p) => FailureKind::Panic(panic_message(&p)),
+                };
+                self.fail(&mut st, kind);
+            }
+        }
+        if st.active == Some(vtid) {
+            st.last_active = Some(vtid);
+            st.active = None;
+            if !st.aborting {
+                self.schedule(&mut st);
+            }
+        }
+        self.cv.notify_all();
+    }
+
+    /// Mark a registered vthread whose OS thread never started (spawn
+    /// failure) as finished so the execution can still complete.
+    pub(crate) fn thread_end_external(&self, vtid: usize) {
+        let mut st = self.lock();
+        st.live_os -= 1;
+        st.threads[vtid].status = Status::Finished;
+        self.cv.notify_all();
+    }
+
+    /// Classify a panic payload caught mid-body (scope teardown) and
+    /// abort the execution so parked threads unwind instead of
+    /// wedging an implicit join.
+    pub(crate) fn abort_with(&self, payload: Box<dyn std::any::Any + Send>) {
+        let mut st = self.lock();
+        if st.aborting {
+            return;
+        }
+        if payload.is::<Abort>() {
+            st.aborting = true;
+            self.cv.notify_all();
+            return;
+        }
+        let kind = match payload.downcast::<ModelFailureMsg>() {
+            Ok(mf) => FailureKind::Assertion(mf.0),
+            Err(p) => FailureKind::Panic(panic_message(&p)),
+        };
+        self.fail(&mut st, kind);
+    }
+
+    /// Block until every OS thread of this execution has detached.
+    pub(crate) fn wait_quiescent(&self) {
+        let mut st = self.lock();
+        while st.live_os > 0 {
+            st = unpoison(self.cv.wait(st));
+        }
+    }
+
+    /// Harvest (trail schedule, pruned?, failure, visited set).
+    pub(crate) fn take_outcome(&self) -> (Vec<(usize, usize, bool, usize)>, bool, Option<Failure>, HashSet<u64>) {
+        let mut st = self.lock();
+        let trail = st
+            .trail
+            .iter()
+            .map(|c| (c.n, c.chosen, c.has_la, c.preemptions_before))
+            .collect();
+        let visited = std::mem::take(&mut st.visited);
+        (trail, st.pruned, st.failure.take(), visited)
+    }
+
+    fn fail(&self, st: &mut State, kind: FailureKind) {
+        if st.failure.is_none() {
+            let schedule: Vec<usize> = st.trail.iter().map(|c| c.chosen).collect();
+            let mut trace: String = st
+                .trail
+                .iter()
+                .map(|c| c.desc.as_str())
+                .collect::<Vec<_>>()
+                .join("\n");
+            trace.push_str("\nfinal thread states:");
+            for (tid, t) in st.threads.iter().enumerate() {
+                trace.push_str(&format!("\n  t{tid}<{}> {:?}", t.name, t.status));
+            }
+            st.failure = Some(Failure {
+                kind,
+                schedule,
+                trace,
+            });
+        }
+        st.aborting = true;
+        self.cv.notify_all();
+    }
+
+    fn enabled(st: &State, op: &Op) -> bool {
+        match *op {
+            Op::Start | Op::Yield(..) | Op::TryLock { .. } | Op::TrySend { .. } | Op::TryRecv { .. } => true,
+            Op::Acquire { m, .. } => matches!(st.objects[m].kind, ObjKind::Mutex { locked: false }),
+            Op::CvWait { .. } => false,
+            Op::Send { ch } => match st.objects[ch].kind {
+                ObjKind::Chan {
+                    len,
+                    cap,
+                    recv_alive,
+                    ..
+                } => {
+                    if !recv_alive {
+                        return true; // grant = SendDisconnected
+                    }
+                    match cap {
+                        None => true,
+                        Some(0) => len == 0 && Self::recv_parked(st, ch),
+                        Some(c) => len < c,
+                    }
+                }
+                _ => false,
+            },
+            Op::Recv { ch, .. } => match st.objects[ch].kind {
+                ObjKind::Chan { len, senders, .. } => len > 0 || senders == 0,
+                _ => false,
+            },
+            Op::Join { tid } => matches!(st.threads[tid].status, Status::Finished),
+        }
+    }
+
+    fn recv_parked(st: &State, ch: ObjId) -> bool {
+        st.threads.iter().any(|t| {
+            matches!(t.status, Status::Ready(Op::Recv { ch: c, .. }) if c == ch)
+        })
+    }
+
+    /// Pick the next vthread to run. Called with the state locked and
+    /// `active == None`; loops because a fired condvar timeout leaves
+    /// its thread blocked on mutex re-acquisition.
+    fn schedule(&self, st: &mut State) {
+        loop {
+            if st.aborting {
+                self.cv.notify_all();
+                return;
+            }
+            st.steps += 1;
+            if st.steps > self.max_steps {
+                self.fail(st, FailureKind::StepLimit);
+                return;
+            }
+            // Candidates: enabled ops first (previous thread in front
+            // so option 0 never costs a preemption), then timeout
+            // firings of timed waiters, by tid.
+            let mut normal: Vec<usize> = Vec::new();
+            let mut fires: Vec<usize> = Vec::new();
+            for (tid, t) in st.threads.iter().enumerate() {
+                if let Status::Ready(op) = &t.status {
+                    if Self::enabled(st, op) {
+                        normal.push(tid);
+                    }
+                    if matches!(
+                        op,
+                        Op::CvWait { timed: true, .. } | Op::Recv { timed: true, .. }
+                    ) {
+                        fires.push(tid);
+                    }
+                }
+            }
+            let mut has_la = false;
+            if let Some(la) = st.last_active {
+                if let Some(pos) = normal.iter().position(|&t| t == la) {
+                    normal.remove(pos);
+                    normal.insert(0, la);
+                    has_la = true;
+                }
+            }
+            let n_normal = normal.len();
+            normal.extend(fires.iter().copied());
+            let cands = normal;
+            if cands.is_empty() {
+                if st.threads.iter().all(|t| matches!(t.status, Status::Finished)) {
+                    self.cv.notify_all();
+                    return;
+                }
+                let lost = st.threads.iter().all(|t| {
+                    matches!(
+                        t.status,
+                        Status::Finished | Status::Ready(Op::CvWait { timed: false, .. })
+                    )
+                });
+                self.fail(
+                    st,
+                    if lost {
+                        FailureKind::LostWakeup
+                    } else {
+                        FailureKind::Deadlock
+                    },
+                );
+                return;
+            }
+            let idx = if st.cursor < st.prefix.len() {
+                st.prefix[st.cursor].min(cands.len() - 1)
+            } else {
+                0
+            };
+            let cost = usize::from(has_la && idx > 0);
+            let preemptions_before = st.preemptions;
+            st.preemptions += cost;
+            let tid = cands[idx];
+            let fire = idx >= n_normal;
+            let desc = {
+                let t = &st.threads[tid];
+                let what = match (&t.status, fire) {
+                    (Status::Ready(op), false) => format!("{op:?}"),
+                    (Status::Ready(op), true) => format!("timeout-fire {op:?}"),
+                    _ => "?".to_string(),
+                };
+                format!(
+                    "[{:>3}] t{tid}<{}> {what} ({} of {} candidates)",
+                    st.trail.len(),
+                    t.name,
+                    idx + 1,
+                    cands.len()
+                )
+            };
+            st.trail.push(Choice {
+                n: cands.len(),
+                chosen: idx,
+                has_la,
+                preemptions_before,
+                desc,
+            });
+            st.cursor += 1;
+            if fire {
+                self.fire_timeout(st, tid);
+            } else {
+                self.apply_grant(st, tid);
+            }
+            if st.active.is_some() {
+                if self.prune && st.cursor > st.prefix.len() {
+                    let h = Self::state_hash(st);
+                    if !st.visited.insert(h) {
+                        st.pruned = true;
+                        st.aborting = true;
+                    }
+                }
+                self.cv.notify_all();
+                return;
+            }
+        }
+    }
+
+    fn fire_timeout(&self, st: &mut State, tid: usize) {
+        match st.threads[tid].status {
+            Status::Ready(Op::CvWait { m, .. }) => {
+                st.threads[tid].status = Status::Ready(Op::Acquire {
+                    m,
+                    why: AcquireWhy::TimedOut,
+                });
+                // Not granted yet: the thread still has to win the
+                // mutex back; the scheduler loop re-picks.
+            }
+            Status::Ready(Op::Recv { ch, .. }) => {
+                st.objects[ch].hist = mix64(st.objects[ch].hist ^ ((tid as u64) << 40) ^ 0x7e);
+                st.threads[tid].grant = Some(Grant::RecvTimedOut);
+                st.active = Some(tid);
+            }
+            _ => unreachable!("timeout fired for a non-timed op"),
+        }
+    }
+
+    fn apply_grant(&self, st: &mut State, tid: usize) {
+        let op = match &st.threads[tid].status {
+            Status::Ready(op) => *op,
+            _ => unreachable!("granting a non-ready thread"),
+        };
+        let (grant, touched) = match op {
+            Op::Start => (Grant::Go, None),
+            Op::Yield(_, obj) => (Grant::Go, obj),
+            Op::Join { .. } => (Grant::Go, None),
+            Op::Acquire { m, why } => {
+                if let ObjKind::Mutex { ref mut locked } = st.objects[m].kind {
+                    *locked = true;
+                }
+                let g = match why {
+                    AcquireWhy::Lock => Grant::Go,
+                    AcquireWhy::Notified => Grant::LockedNotified,
+                    AcquireWhy::TimedOut => Grant::LockedTimedOut,
+                };
+                (g, Some(m))
+            }
+            Op::TryLock { m } => {
+                if let ObjKind::Mutex { ref mut locked } = st.objects[m].kind {
+                    if *locked {
+                        (Grant::TryLockBusy, Some(m))
+                    } else {
+                        *locked = true;
+                        (Grant::TryLockOk, Some(m))
+                    }
+                } else {
+                    unreachable!("try_lock on a non-mutex")
+                }
+            }
+            Op::Send { ch } => {
+                if let ObjKind::Chan {
+                    ref mut len,
+                    recv_alive,
+                    ..
+                } = st.objects[ch].kind
+                {
+                    if recv_alive {
+                        *len += 1;
+                        (Grant::SendOk, Some(ch))
+                    } else {
+                        (Grant::SendDisconnected, Some(ch))
+                    }
+                } else {
+                    unreachable!("send on a non-channel")
+                }
+            }
+            Op::TrySend { ch } => {
+                let parked = Self::recv_parked(st, ch);
+                if let ObjKind::Chan {
+                    ref mut len,
+                    cap,
+                    recv_alive,
+                    ..
+                } = st.objects[ch].kind
+                {
+                    if !recv_alive {
+                        (Grant::TrySendDisconnected, Some(ch))
+                    } else {
+                        let room = match cap {
+                            None => true,
+                            Some(0) => *len == 0 && parked,
+                            Some(c) => *len < c,
+                        };
+                        if room {
+                            *len += 1;
+                            (Grant::TrySendOk, Some(ch))
+                        } else {
+                            (Grant::TrySendFull, Some(ch))
+                        }
+                    }
+                } else {
+                    unreachable!("try_send on a non-channel")
+                }
+            }
+            Op::Recv { ch, .. } => {
+                if let ObjKind::Chan { ref mut len, .. } = st.objects[ch].kind {
+                    if *len > 0 {
+                        *len -= 1;
+                        (Grant::RecvData, Some(ch))
+                    } else {
+                        (Grant::RecvDisconnected, Some(ch))
+                    }
+                } else {
+                    unreachable!("recv on a non-channel")
+                }
+            }
+            Op::TryRecv { ch } => {
+                if let ObjKind::Chan {
+                    ref mut len,
+                    senders,
+                    ..
+                } = st.objects[ch].kind
+                {
+                    if *len > 0 {
+                        *len -= 1;
+                        (Grant::TryRecvData, Some(ch))
+                    } else if senders == 0 {
+                        (Grant::TryRecvDisconnected, Some(ch))
+                    } else {
+                        (Grant::TryRecvEmpty, Some(ch))
+                    }
+                } else {
+                    unreachable!("try_recv on a non-channel")
+                }
+            }
+            Op::CvWait { .. } => unreachable!("cv wait is never directly enabled"),
+        };
+        if let Some(obj) = touched {
+            st.objects[obj].hist =
+                mix64(st.objects[obj].hist ^ ((tid as u64) << 40) ^ grant_tag(grant));
+        }
+        st.threads[tid].grant = Some(grant);
+        st.active = Some(tid);
+    }
+
+    /// Fingerprint of the current abstract state. Two interleavings
+    /// that produce identical per-object operation histories (i.e.
+    /// differ only in the order of operations on *different* objects —
+    /// Mazurkiewicz trace equivalence) collide on purpose and the
+    /// second is pruned. Sound up to 64-bit hash collisions; the
+    /// preemption budget already spent is folded in so a state first
+    /// seen with less remaining budget cannot mask a richer revisit.
+    fn state_hash(st: &State) -> u64 {
+        let mut h = mix64(st.preemptions as u64 ^ 0xa5a5);
+        for o in &st.objects {
+            let sub = match o.kind {
+                ObjKind::Mutex { locked } => u64::from(locked),
+                ObjKind::Condvar => 2,
+                ObjKind::Chan {
+                    len,
+                    senders,
+                    recv_alive,
+                    ..
+                } => 4 ^ ((len as u64) << 2) ^ ((senders as u64) << 20) ^ (u64::from(recv_alive) << 40),
+                ObjKind::Atomic => 8,
+            };
+            h ^= mix64(o.seed ^ o.hist ^ sub.rotate_left(13));
+        }
+        for (tid, t) in st.threads.iter().enumerate() {
+            let s = match &t.status {
+                Status::Ready(op) => mix64(0x11 ^ op_tag(op)),
+                Status::Active => 0x22,
+                Status::Finished => 0x33,
+            };
+            h ^= mix64(((tid as u64) << 48) ^ s);
+        }
+        h
+    }
+
+    /// Next DFS prefix: the deepest choice with an untried alternative
+    /// that fits the preemption bound, or `None` when the bounded
+    /// space is exhausted. Trail entries are `(n, chosen, has_la,
+    /// preemptions_before)` as returned by [`Rt::take_outcome`].
+    pub(crate) fn next_prefix(
+        trail: &[(usize, usize, bool, usize)],
+        bound: usize,
+    ) -> Option<Vec<usize>> {
+        for i in (0..trail.len()).rev() {
+            let (n, chosen, has_la, before) = trail[i];
+            let j = chosen + 1;
+            if j < n {
+                let cost = usize::from(has_la && j > 0);
+                if before + cost <= bound {
+                    let mut p: Vec<usize> = trail[..i].iter().map(|c| c.1).collect();
+                    p.push(j);
+                    return Some(p);
+                }
+            }
+        }
+        None
+    }
+}
+
+fn op_tag(op: &Op) -> u64 {
+    match op {
+        Op::Start => 1,
+        Op::Yield(..) => 2,
+        Op::Acquire { m, why } => 3 ^ ((*m as u64) << 8) ^ ((*why as u64) << 4),
+        Op::TryLock { m } => 4 ^ ((*m as u64) << 8),
+        Op::CvWait { cv, m, timed } => {
+            5 ^ ((*cv as u64) << 8) ^ ((*m as u64) << 24) ^ (u64::from(*timed) << 4)
+        }
+        Op::Send { ch } => 6 ^ ((*ch as u64) << 8),
+        Op::TrySend { ch } => 7 ^ ((*ch as u64) << 8),
+        Op::Recv { ch, timed } => 8 ^ ((*ch as u64) << 8) ^ (u64::from(*timed) << 4),
+        Op::TryRecv { ch } => 9 ^ ((*ch as u64) << 8),
+        Op::Join { tid } => 10 ^ ((*tid as u64) << 8),
+    }
+}
+
+fn grant_tag(g: Grant) -> u64 {
+    g as u64 + 0x40
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Run `f` as vthread `vtid` on the current OS thread: bind the TLS
+/// context, take the first grant, and detach on the way out. Unwinds
+/// with the silent [`Abort`] sentinel if the body panicked (the real
+/// payload is classified into the execution's failure first).
+pub(crate) fn run_vthread<T>(rt: &Arc<Rt>, vtid: usize, f: impl FnOnce() -> T) -> T {
+    CTX.with(|c| {
+        *c.borrow_mut() = Some(Ctx {
+            rt: Arc::clone(rt),
+            vtid,
+        })
+    });
+    let res = catch_unwind(AssertUnwindSafe(|| {
+        rt.thread_begin(vtid);
+        f()
+    }));
+    CTX.with(|c| *c.borrow_mut() = None);
+    match res {
+        Ok(v) => {
+            rt.thread_end(vtid, None);
+            v
+        }
+        Err(p) => {
+            rt.thread_end(vtid, Some(p));
+            resume_unwind(Box::new(Abort))
+        }
+    }
+}

@@ -1,0 +1,526 @@
+//! Model-checked drop-ins for `std::sync` primitives (`Mutex`,
+//! `Condvar`, atomics). Compiled only under `cfg(spidr_model)`;
+//! `crate::sync` re-exports these so production code is source- and
+//! release-binary-identical to plain `std`.
+//!
+//! Outside an [`explore`](super::explore) run (no model context on
+//! the current OS thread) every operation falls through to the real
+//! `std` primitive, so `cfg(spidr_model)` builds still execute
+//! non-model code correctly. While a model execution is *unwinding*
+//! (abort teardown) operations become non-blocking best-effort so
+//! drop guards can never wedge the scheduler.
+
+use std::sync::{Condvar as StdCondvar, LockResult, Mutex as StdMutex, MutexGuard as StdMutexGuard};
+use std::sync::PoisonError;
+use std::time::Duration;
+
+use super::rt::{self, AcquireWhy, Effect, Grant, ObjKind, Op};
+
+fn unpoison<T>(r: Result<T, PoisonError<T>>) -> T {
+    r.unwrap_or_else(PoisonError::into_inner)
+}
+
+/// A mutex whose acquire/release are scheduling points under the
+/// model; plain `std::sync::Mutex` semantics otherwise.
+pub struct Mutex<T: ?Sized> {
+    cell: rt::ObjCell,
+    inner: StdMutex<T>,
+}
+
+impl<T> Mutex<T> {
+    /// Create a new mutex (usable in `static` initializers).
+    pub const fn new(t: T) -> Mutex<T> {
+        Mutex {
+            cell: rt::ObjCell::new(),
+            inner: StdMutex::new(t),
+        }
+    }
+
+    /// Consume the mutex, returning the inner value.
+    pub fn into_inner(self) -> LockResult<T> {
+        Ok(unpoison(self.inner.into_inner()))
+    }
+}
+
+impl<T: ?Sized> Mutex<T> {
+    fn obj(&self, cx: &rt::Ctx) -> rt::ObjId {
+        cx.rt
+            .obj_id(&self.cell, ObjKind::Mutex { locked: false }, cx.vtid)
+    }
+
+    /// Acquire the lock, blocking the virtual thread. Never returns
+    /// `Err`: model executions tear down via unwinding, and poisoned
+    /// inner state from an aborted execution is deliberately ignored.
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        match rt::ctx() {
+            Some(cx) if !std::thread::panicking() => {
+                let m = self.obj(&cx);
+                cx.rt.op(cx.vtid, Op::Acquire {
+                    m,
+                    why: AcquireWhy::Lock,
+                });
+                Ok(MutexGuard {
+                    lock: self,
+                    inner: Some(unpoison(self.inner.lock())),
+                    modeled: true,
+                })
+            }
+            _ => Ok(MutexGuard {
+                lock: self,
+                inner: Some(unpoison(self.inner.lock())),
+                modeled: false,
+            }),
+        }
+    }
+
+    /// Attempt the lock without blocking (a scheduling point whose
+    /// outcome the scheduler decides from the model state).
+    pub fn try_lock(&self) -> Result<MutexGuard<'_, T>, std::sync::TryLockError<MutexGuard<'_, T>>> {
+        match rt::ctx() {
+            Some(cx) if !std::thread::panicking() => {
+                let m = self.obj(&cx);
+                match cx.rt.op(cx.vtid, Op::TryLock { m }) {
+                    Grant::TryLockOk => Ok(MutexGuard {
+                        lock: self,
+                        inner: Some(unpoison(self.inner.lock())),
+                        modeled: true,
+                    }),
+                    _ => Err(std::sync::TryLockError::WouldBlock),
+                }
+            }
+            _ => match self.inner.try_lock() {
+                Ok(g) => Ok(MutexGuard {
+                    lock: self,
+                    inner: Some(g),
+                    modeled: false,
+                }),
+                Err(_) => Err(std::sync::TryLockError::WouldBlock),
+            },
+        }
+    }
+
+    /// Mutable access without locking (requires `&mut self`).
+    pub fn get_mut(&mut self) -> LockResult<&mut T> {
+        Ok(unpoison(self.inner.get_mut()))
+    }
+}
+
+impl<T: Default> Default for Mutex<T> {
+    fn default() -> Self {
+        Mutex::new(T::default())
+    }
+}
+
+impl<T: ?Sized + std::fmt::Debug> std::fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Mutex").finish_non_exhaustive()
+    }
+}
+
+/// RAII guard for [`Mutex`]; releasing is a scheduling point.
+pub struct MutexGuard<'a, T: ?Sized> {
+    lock: &'a Mutex<T>,
+    inner: Option<StdMutexGuard<'a, T>>,
+    modeled: bool,
+}
+
+impl<T: ?Sized> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard holds the lock")
+    }
+}
+
+impl<T: ?Sized> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard holds the lock")
+    }
+}
+
+impl<T: ?Sized> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        // Release the OS-level lock first, then the model-level one.
+        self.inner.take();
+        if self.modeled {
+            if let Some(cx) = rt::ctx() {
+                let m = self.lock.obj(&cx);
+                cx.rt.effect_then_yield(cx.vtid, Effect::Unlock(m), "unlock");
+            }
+        }
+    }
+}
+
+/// Whether a [`Condvar::wait_timeout`] returned because of its
+/// timeout. Mirrors `std::sync::WaitTimeoutResult`, which cannot be
+/// constructed outside `std`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WaitTimeoutResult {
+    timed_out: bool,
+}
+
+impl WaitTimeoutResult {
+    /// `true` if the wait ended by timeout rather than a notify.
+    pub fn timed_out(&self) -> bool {
+        self.timed_out
+    }
+}
+
+/// A condition variable whose wait/notify are scheduling points under
+/// the model. A timed wait's timeout is modeled as a nondeterministic
+/// transition: the scheduler may fire it at any point, which is
+/// exactly how timeout-vs-notify races get explored.
+pub struct Condvar {
+    cell: rt::ObjCell,
+    inner: StdCondvar,
+}
+
+impl Condvar {
+    /// Create a new condvar (usable in `static` initializers).
+    pub const fn new() -> Condvar {
+        Condvar {
+            cell: rt::ObjCell::new(),
+            inner: StdCondvar::new(),
+        }
+    }
+
+    fn obj(&self, cx: &rt::Ctx) -> rt::ObjId {
+        cx.rt.obj_id(&self.cell, ObjKind::Condvar, cx.vtid)
+    }
+
+    fn wait_model<'a, T: ?Sized>(
+        &self,
+        cx: &rt::Ctx,
+        guard: MutexGuard<'a, T>,
+        timed: bool,
+    ) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+        let lock = guard.lock;
+        let cv = self.obj(cx);
+        let m = lock.obj(cx);
+        // Release the OS lock and defuse the guard so its Drop does
+        // not double-release at the model level: the release below is
+        // fused with the wait registration inside `cv_wait`.
+        let mut guard = guard;
+        guard.inner.take();
+        std::mem::forget(guard);
+        let grant = cx.rt.cv_wait(cx.vtid, cv, m, timed);
+        let timed_out = grant == Grant::LockedTimedOut;
+        (
+            MutexGuard {
+                lock,
+                inner: Some(unpoison(lock.inner.lock())),
+                modeled: true,
+            },
+            WaitTimeoutResult { timed_out },
+        )
+    }
+
+    /// Release the guard's mutex and wait for a notification.
+    pub fn wait<'a, T: ?Sized>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        match rt::ctx() {
+            Some(cx) if guard.modeled && !std::thread::panicking() => {
+                Ok(self.wait_model(&cx, guard, false).0)
+            }
+            Some(_) => Ok(guard), // unwinding: never block teardown
+            None => {
+                let lock = guard.lock;
+                let mut guard = guard;
+                let std_guard = guard.inner.take().expect("guard holds the lock");
+                std::mem::forget(guard);
+                let g = unpoison(self.inner.wait(std_guard));
+                Ok(MutexGuard {
+                    lock,
+                    inner: Some(g),
+                    modeled: false,
+                })
+            }
+        }
+    }
+
+    /// Like [`Condvar::wait`] but with a timeout the scheduler may
+    /// fire at any point (the `Duration` value itself is ignored —
+    /// model time is schedule order, not wall time).
+    pub fn wait_timeout<'a, T: ?Sized>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+        match rt::ctx() {
+            Some(cx) if guard.modeled && !std::thread::panicking() => {
+                Ok(self.wait_model(&cx, guard, true))
+            }
+            Some(_) => Ok((guard, WaitTimeoutResult { timed_out: true })),
+            None => {
+                let lock = guard.lock;
+                let mut guard = guard;
+                let std_guard = guard.inner.take().expect("guard holds the lock");
+                std::mem::forget(guard);
+                let (g, res) = unpoison(self.inner.wait_timeout(std_guard, dur));
+                Ok((
+                    MutexGuard {
+                        lock,
+                        inner: Some(g),
+                        modeled: false,
+                    },
+                    WaitTimeoutResult {
+                        timed_out: res.timed_out(),
+                    },
+                ))
+            }
+        }
+    }
+
+    /// Wake every waiter.
+    pub fn notify_all(&self) {
+        self.inner.notify_all();
+        if let Some(cx) = rt::ctx() {
+            let cv = self.obj(&cx);
+            cx.rt
+                .effect_then_yield(cx.vtid, Effect::NotifyAll(cv), "notify_all");
+        }
+    }
+
+    /// Wake one waiter (lowest virtual-thread id first — a FIFO
+    /// approximation; the repo's protocols only use `notify_all`).
+    pub fn notify_one(&self) {
+        self.inner.notify_one();
+        if let Some(cx) = rt::ctx() {
+            let cv = self.obj(&cx);
+            cx.rt
+                .effect_then_yield(cx.vtid, Effect::NotifyOne(cv), "notify_one");
+        }
+    }
+}
+
+impl Default for Condvar {
+    fn default() -> Self {
+        Condvar::new()
+    }
+}
+
+/// Model-checked atomics: every operation is sequentially consistent
+/// regardless of the requested `Ordering` (the model explores thread
+/// interleavings, not hardware memory-order weakenings) and is a
+/// scheduling point with the observed value folded into the state
+/// hash.
+pub mod atomic {
+    pub use std::sync::atomic::Ordering;
+
+    use super::super::rt::{self, ObjKind, Op};
+    use std::sync::atomic::Ordering::SeqCst;
+
+    macro_rules! point {
+        ($self:ident) => {
+            match rt::ctx() {
+                Some(cx) if !std::thread::panicking() => {
+                    let obj = cx.rt.obj_id(&$self.cell, ObjKind::Atomic, cx.vtid);
+                    cx.rt.op(cx.vtid, Op::Yield("atomic", Some(obj)));
+                    Some((cx, obj))
+                }
+                _ => None,
+            }
+        };
+    }
+
+    macro_rules! fold {
+        ($cx:expr, $v:expr) => {
+            if let Some((cx, obj)) = &$cx {
+                cx.rt.fold_value(*obj, $v as u64);
+            }
+        };
+    }
+
+    macro_rules! int_atomic {
+        ($(#[$doc:meta])* $name:ident, $std:ident, $prim:ty) => {
+            $(#[$doc])*
+            pub struct $name {
+                cell: rt::ObjCell,
+                inner: std::sync::atomic::$std,
+            }
+
+            impl $name {
+                /// Create a new atomic (usable in `static` initializers).
+                pub const fn new(v: $prim) -> Self {
+                    Self {
+                        cell: rt::ObjCell::new(),
+                        inner: std::sync::atomic::$std::new(v),
+                    }
+                }
+
+                /// Load the value (SeqCst under the model).
+                pub fn load(&self, _o: Ordering) -> $prim {
+                    let p = point!(self);
+                    let v = self.inner.load(SeqCst);
+                    fold!(p, v);
+                    v
+                }
+
+                /// Store a value (SeqCst under the model).
+                pub fn store(&self, v: $prim, _o: Ordering) {
+                    let p = point!(self);
+                    self.inner.store(v, SeqCst);
+                    fold!(p, v);
+                }
+
+                /// Swap in a value, returning the previous one.
+                pub fn swap(&self, v: $prim, _o: Ordering) -> $prim {
+                    let p = point!(self);
+                    let old = self.inner.swap(v, SeqCst);
+                    fold!(p, old);
+                    old
+                }
+
+                /// Add, returning the previous value.
+                pub fn fetch_add(&self, v: $prim, _o: Ordering) -> $prim {
+                    let p = point!(self);
+                    let old = self.inner.fetch_add(v, SeqCst);
+                    fold!(p, old);
+                    old
+                }
+
+                /// Subtract, returning the previous value.
+                pub fn fetch_sub(&self, v: $prim, _o: Ordering) -> $prim {
+                    let p = point!(self);
+                    let old = self.inner.fetch_sub(v, SeqCst);
+                    fold!(p, old);
+                    old
+                }
+
+                /// Bitwise-or, returning the previous value.
+                pub fn fetch_or(&self, v: $prim, _o: Ordering) -> $prim {
+                    let p = point!(self);
+                    let old = self.inner.fetch_or(v, SeqCst);
+                    fold!(p, old);
+                    old
+                }
+
+                /// Maximum, returning the previous value.
+                pub fn fetch_max(&self, v: $prim, _o: Ordering) -> $prim {
+                    let p = point!(self);
+                    let old = self.inner.fetch_max(v, SeqCst);
+                    fold!(p, old);
+                    old
+                }
+
+                /// Compare-and-exchange (both orderings collapse to SeqCst).
+                pub fn compare_exchange(
+                    &self,
+                    cur: $prim,
+                    new: $prim,
+                    _s: Ordering,
+                    _f: Ordering,
+                ) -> Result<$prim, $prim> {
+                    let p = point!(self);
+                    let r = self.inner.compare_exchange(cur, new, SeqCst, SeqCst);
+                    match r {
+                        Ok(v) | Err(v) => fold!(p, v),
+                    }
+                    r
+                }
+            }
+
+            impl Default for $name {
+                fn default() -> Self {
+                    Self::new(Default::default())
+                }
+            }
+
+            impl std::fmt::Debug for $name {
+                fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                    self.inner.fmt(f)
+                }
+            }
+        };
+    }
+
+    int_atomic!(
+        /// Model-checked `AtomicUsize`.
+        AtomicUsize,
+        AtomicUsize,
+        usize
+    );
+    int_atomic!(
+        /// Model-checked `AtomicU32`.
+        AtomicU32,
+        AtomicU32,
+        u32
+    );
+    int_atomic!(
+        /// Model-checked `AtomicU64`.
+        AtomicU64,
+        AtomicU64,
+        u64
+    );
+    int_atomic!(
+        /// Model-checked `AtomicI64`.
+        AtomicI64,
+        AtomicI64,
+        i64
+    );
+
+    /// Model-checked `AtomicBool`.
+    pub struct AtomicBool {
+        cell: rt::ObjCell,
+        inner: std::sync::atomic::AtomicBool,
+    }
+
+    impl AtomicBool {
+        /// Create a new atomic bool (usable in `static` initializers).
+        pub const fn new(v: bool) -> Self {
+            Self {
+                cell: rt::ObjCell::new(),
+                inner: std::sync::atomic::AtomicBool::new(v),
+            }
+        }
+
+        /// Load the value (SeqCst under the model).
+        pub fn load(&self, _o: Ordering) -> bool {
+            let p = point!(self);
+            let v = self.inner.load(SeqCst);
+            fold!(p, v);
+            v
+        }
+
+        /// Store a value (SeqCst under the model).
+        pub fn store(&self, v: bool, _o: Ordering) {
+            let p = point!(self);
+            self.inner.store(v, SeqCst);
+            fold!(p, v);
+        }
+
+        /// Swap in a value, returning the previous one.
+        pub fn swap(&self, v: bool, _o: Ordering) -> bool {
+            let p = point!(self);
+            let old = self.inner.swap(v, SeqCst);
+            fold!(p, old);
+            old
+        }
+
+        /// Compare-and-exchange (both orderings collapse to SeqCst).
+        pub fn compare_exchange(
+            &self,
+            cur: bool,
+            new: bool,
+            _s: Ordering,
+            _f: Ordering,
+        ) -> Result<bool, bool> {
+            let p = point!(self);
+            let r = self.inner.compare_exchange(cur, new, SeqCst, SeqCst);
+            match r {
+                Ok(v) | Err(v) => fold!(p, v),
+            }
+            r
+        }
+    }
+
+    impl Default for AtomicBool {
+        fn default() -> Self {
+            Self::new(false)
+        }
+    }
+
+    impl std::fmt::Debug for AtomicBool {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            self.inner.fmt(f)
+        }
+    }
+}

@@ -1,0 +1,226 @@
+//! Model-checked thread creation: `spawn`, `spawn_named`, and
+//! `thread::scope` that register every spawned thread as a virtual
+//! thread of the current execution. Compiled only under
+//! `cfg(spidr_model)`; outside a model run everything passes straight
+//! through to `std::thread`.
+//!
+//! Real OS threads still back every virtual thread (the scheduler
+//! serializes them, it does not re-implement stacks), so scoped
+//! borrows work exactly as with `std::thread::scope`. The one extra
+//! mechanism: a model scope performs *scheduler-aware* joins of its
+//! spawned virtual threads before the underlying `std` scope's
+//! implicit join, so the OS-level join can never block a thread the
+//! scheduler still considers runnable.
+
+use std::cell::RefCell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+use std::time::Duration;
+
+pub use std::thread::available_parallelism;
+
+use super::rt::{self, Op};
+
+/// Handle to a spawned (possibly model-registered) thread.
+pub struct JoinHandle<T> {
+    vtid: Option<usize>,
+    inner: std::thread::JoinHandle<T>,
+}
+
+impl<T> JoinHandle<T> {
+    /// Wait for the thread to finish (a scheduling point under the
+    /// model) and return its result.
+    pub fn join(self) -> std::thread::Result<T> {
+        if let Some(vtid) = self.vtid {
+            if let Some(cx) = rt::ctx() {
+                if !std::thread::panicking() {
+                    cx.rt.op(cx.vtid, Op::Join { tid: vtid });
+                }
+            }
+        }
+        self.inner.join()
+    }
+
+    /// Whether the thread has finished (non-blocking).
+    pub fn is_finished(&self) -> bool {
+        self.inner.is_finished()
+    }
+}
+
+/// Spawn a thread (`std::thread::spawn`), registering it with the
+/// current model execution when one is active.
+pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    match rt::ctx() {
+        None => JoinHandle {
+            vtid: None,
+            inner: std::thread::spawn(f),
+        },
+        Some(cx) => {
+            let vtid = cx.rt.register_thread("spawned".to_string());
+            let rt2 = Arc::clone(&cx.rt);
+            let inner = std::thread::spawn(move || rt::run_vthread(&rt2, vtid, f));
+            cx.rt.op(cx.vtid, Op::Yield("spawn", None));
+            JoinHandle {
+                vtid: Some(vtid),
+                inner,
+            }
+        }
+    }
+}
+
+/// Spawn a named thread (the facade's replacement for
+/// `std::thread::Builder::new().name(..).spawn(..)`).
+pub fn spawn_named<F, T>(name: &str, f: F) -> std::io::Result<JoinHandle<T>>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    match rt::ctx() {
+        None => Ok(JoinHandle {
+            vtid: None,
+            inner: std::thread::Builder::new().name(name.to_string()).spawn(f)?,
+        }),
+        Some(cx) => {
+            let vtid = cx.rt.register_thread(name.to_string());
+            let rt2 = Arc::clone(&cx.rt);
+            let spawned = std::thread::Builder::new()
+                .name(name.to_string())
+                .spawn(move || rt::run_vthread(&rt2, vtid, f));
+            match spawned {
+                Ok(inner) => {
+                    cx.rt.op(cx.vtid, Op::Yield("spawn", None));
+                    Ok(JoinHandle {
+                        vtid: Some(vtid),
+                        inner,
+                    })
+                }
+                Err(e) => {
+                    // The vthread was registered but will never run:
+                    // mark it finished so the execution can complete.
+                    cx.rt.thread_end_external(vtid);
+                    Err(e)
+                }
+            }
+        }
+    }
+}
+
+/// A scope for spawning borrowing threads (`std::thread::scope`).
+pub struct Scope<'scope, 'env: 'scope> {
+    std: &'scope std::thread::Scope<'scope, 'env>,
+    spawned: RefCell<Vec<usize>>,
+}
+
+/// Handle to a thread spawned inside a [`scope`].
+pub struct ScopedJoinHandle<'scope, T> {
+    vtid: Option<usize>,
+    inner: std::thread::ScopedJoinHandle<'scope, T>,
+}
+
+impl<T> ScopedJoinHandle<'_, T> {
+    /// Wait for the thread to finish (a scheduling point under the
+    /// model) and return its result.
+    pub fn join(self) -> std::thread::Result<T> {
+        if let Some(vtid) = self.vtid {
+            if let Some(cx) = rt::ctx() {
+                if !std::thread::panicking() {
+                    cx.rt.op(cx.vtid, Op::Join { tid: vtid });
+                }
+            }
+        }
+        self.inner.join()
+    }
+
+    /// Whether the thread has finished (non-blocking).
+    pub fn is_finished(&self) -> bool {
+        self.inner.is_finished()
+    }
+}
+
+impl<'scope, 'env> Scope<'scope, 'env> {
+    /// Spawn a borrowing thread inside this scope.
+    pub fn spawn<F, T>(&self, f: F) -> ScopedJoinHandle<'scope, T>
+    where
+        F: FnOnce() -> T + Send + 'scope,
+        T: Send + 'scope,
+    {
+        match rt::ctx() {
+            None => ScopedJoinHandle {
+                vtid: None,
+                inner: self.std.spawn(f),
+            },
+            Some(cx) => {
+                let vtid = cx.rt.register_thread("scoped".to_string());
+                let rt2 = Arc::clone(&cx.rt);
+                let inner = self.std.spawn(move || rt::run_vthread(&rt2, vtid, f));
+                self.spawned.borrow_mut().push(vtid);
+                cx.rt.op(cx.vtid, Op::Yield("spawn", None));
+                ScopedJoinHandle {
+                    vtid: Some(vtid),
+                    inner,
+                }
+            }
+        }
+    }
+}
+
+/// Create a scope for spawning borrowing threads
+/// (`std::thread::scope`). Under the model, the closure's panics are
+/// converted into an execution abort *before* the underlying scope
+/// joins its threads, so a failing model body can never deadlock the
+/// scheduler on an OS-level join.
+pub fn scope<'env, F, T>(f: F) -> T
+where
+    F: for<'scope> FnOnce(&Scope<'scope, 'env>) -> T,
+{
+    std::thread::scope(|s| {
+        let wrapper = Scope {
+            std: s,
+            spawned: RefCell::new(Vec::new()),
+        };
+        match catch_unwind(AssertUnwindSafe(|| f(&wrapper))) {
+            Ok(out) => {
+                if let Some(cx) = rt::ctx() {
+                    if !std::thread::panicking() {
+                        for vtid in wrapper.spawned.borrow().iter() {
+                            cx.rt.op(cx.vtid, Op::Join { tid: *vtid });
+                        }
+                    }
+                }
+                out
+            }
+            Err(p) => {
+                if let Some(cx) = rt::ctx() {
+                    cx.rt.abort_with(p);
+                    resume_unwind(Box::new(rt::Abort));
+                }
+                resume_unwind(p)
+            }
+        }
+    })
+}
+
+/// Sleep: a plain yield scheduling point under the model (model time
+/// is schedule order), a real sleep otherwise.
+pub fn sleep(dur: Duration) {
+    match rt::ctx() {
+        Some(cx) if !std::thread::panicking() => {
+            cx.rt.op(cx.vtid, Op::Yield("sleep", None));
+        }
+        _ => std::thread::sleep(dur),
+    }
+}
+
+/// Yield: a scheduling point under the model.
+pub fn yield_now() {
+    match rt::ctx() {
+        Some(cx) if !std::thread::panicking() => {
+            cx.rt.op(cx.vtid, Op::Yield("yield", None));
+        }
+        _ => std::thread::yield_now(),
+    }
+}

@@ -40,7 +40,10 @@ pub use compiler::{ClipReport, CompiledNetwork, NetworkCompiler};
 pub use mapper::{LayerMapping, Mapper};
 pub use metrics::{Metrics, StageMetrics, WorkerMetrics};
 pub use pipeline::{run_pipeline_clip, FunctionalEngine, PipelineConfig, PipelinedEngine};
-pub use pool::{run_pool, ClipJob, CompletedClip, PoolConfig, PoolRun, StealPolicy};
+pub use pool::{
+    run_pool, ClipJob, CompletedClip, Dispatch, Fetched, PoolConfig, PoolRun, SharedQueue,
+    StealPolicy,
+};
 pub use scheduler::{
     balanced_partition, plan_layer_groups, MultiCoreScheduler, MultiCoreStats, ScheduledEngine,
 };

@@ -31,7 +31,7 @@
 //! [`Network::run`] and to `MultiCoreScheduler::run_network_clip`
 //! (`prop_pipeline_bit_identical_to_reference`).
 
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use crate::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
@@ -133,7 +133,7 @@ fn stage_loop(
                         .recv()
                         .map_err(|_| channel_torn_down(stage, "upstream"))?;
                 } else {
-                    let wait0 = Instant::now();
+                    let wait0 = Instant::now(); // lint: wall-clock
                     owned = rx
                         .recv()
                         .map_err(|_| channel_torn_down(stage, "upstream"))?;
@@ -145,12 +145,12 @@ fn stage_loop(
         if t == 0 {
             sm.fill = epoch.elapsed();
         }
-        let busy0 = Instant::now();
+        let busy0 = Instant::now(); // lint: wall-clock
         let (out, tele) = network.step_group(span, frame, vmems)?;
         sm.busy += busy0.elapsed();
         telemetry.push(tele);
         if let Some(tx) = &tx {
-            let send0 = Instant::now();
+            let send0 = Instant::now(); // lint: wall-clock
             tx.send(out)
                 .map_err(|_| channel_torn_down(stage, "downstream"))?;
             sm.stall_out += send0.elapsed();
@@ -225,8 +225,8 @@ pub fn run_pipeline_clip(
     // Stage threads are fresh each clip: re-bind the caller's trace
     // on each so stage spans attribute to the clip being served.
     let clip_trace = crate::obs::trace::current();
-    let epoch = Instant::now();
-    let outcomes: Vec<Result<StageOutcome>> = std::thread::scope(|scope| {
+    let epoch = Instant::now(); // lint: wall-clock
+    let outcomes: Vec<Result<StageOutcome>> = crate::sync::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(stages);
         let mut prev_rx: Option<Receiver<SpikePlane>> = None;
         for (gi, (span, vmems)) in spans.iter().zip(slices).enumerate() {
@@ -632,7 +632,7 @@ mod tests {
         // whole clip at once: every wait after the first is ~zero.
         let delay = Duration::from_millis(40);
         let (tx, rx) = sync_channel::<SpikePlane>(frames.len());
-        let producer = std::thread::spawn({
+        let producer = crate::sync::thread::spawn({
             let frames = frames.clone();
             move || {
                 std::thread::sleep(delay);

@@ -22,9 +22,9 @@
 //!   worker drains the back of the most-loaded peer inbox, so one
 //!   slow clip cannot strand queued work behind it.
 
+use crate::sync::mpsc::{channel, Receiver, Sender};
+use crate::sync::{Condvar, Mutex};
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
@@ -214,7 +214,10 @@ pub struct PoolRun<O> {
 type WorkerResult<O> = std::result::Result<CompletedClip<O>, Error>;
 
 /// What the dispatcher got back for one job.
-enum Dispatch {
+///
+/// Public so `tests/model.rs` can drive the dispatch/retire protocol
+/// directly under the `--cfg spidr_model` checker.
+pub enum Dispatch {
     /// Placed on an inbox.
     Placed,
     /// Every active inbox is full and the pool may still grow: the
@@ -226,7 +229,10 @@ enum Dispatch {
 }
 
 /// What a worker's wait for work produced.
-enum Fetched {
+///
+/// Public so `tests/model.rs` can drive the dispatch/retire protocol
+/// directly under the `--cfg spidr_model` checker.
+pub enum Fetched {
     /// A job; the flag marks a steal.
     Job(ClipJob, bool),
     /// The pool closed and drained; exit normally.
@@ -260,7 +266,12 @@ struct PoolState {
     rr: usize,
 }
 
-struct SharedQueue {
+/// The pool's shared dispatch queue (see [`PoolState`]). Public —
+/// together with [`Dispatch`] and [`Fetched`] — so the bounded-inbox
+/// backpressure and dispatch-vs-retire protocols can be model-checked
+/// in `tests/model.rs`; `run_pool` remains the only production
+/// driver.
+pub struct SharedQueue {
     state: Mutex<PoolState>,
     /// Signaled when work is enqueued or the pool closes.
     work: Condvar,
@@ -269,7 +280,8 @@ struct SharedQueue {
 }
 
 impl SharedQueue {
-    fn new() -> Self {
+    /// An empty queue with no workers registered.
+    pub fn new() -> Self {
         SharedQueue {
             state: Mutex::new(PoolState {
                 inboxes: Vec::new(),
@@ -291,7 +303,7 @@ impl SharedQueue {
     /// by the retire invariant — so grow/shrink churn on a long stream
     /// keeps pool state proportional to `max_workers`, not to the
     /// number of resizes.
-    fn start_worker(&self) -> usize {
+    pub fn start_worker(&self) -> usize {
         let mut st = self.state.lock().unwrap();
         st.alive += 1;
         if let Some(slot) = st.retired.iter().position(|&r| r) {
@@ -311,7 +323,7 @@ impl SharedQueue {
     /// than `grow_limit` workers are alive, the job comes back as
     /// [`Dispatch::Grow`] instead — the queue-pressure signal dynamic
     /// sizing grows on.
-    fn dispatch(&self, depth: usize, job: ClipJob, grow_limit: usize) -> Dispatch {
+    pub fn dispatch(&self, depth: usize, job: ClipJob, grow_limit: usize) -> Dispatch {
         let mut st = self.state.lock().unwrap();
         loop {
             if st.alive == 0 || st.aborted {
@@ -358,7 +370,7 @@ impl SharedQueue {
     /// `(idle, min_workers)`, a worker whose wait times out while
     /// every inbox is drained and more than `min_workers` are alive
     /// retires instead of waiting on (dynamic sizing's shrink edge).
-    fn next(&self, me: usize, steal: StealPolicy, shrink: Option<(Duration, usize)>) -> Fetched {
+    pub fn next(&self, me: usize, steal: StealPolicy, shrink: Option<(Duration, usize)>) -> Fetched {
         let mut st = self.state.lock().unwrap();
         loop {
             if let Some(job) = st.inboxes[me].pop_front() {
@@ -472,7 +484,7 @@ impl SharedQueue {
         if limit == 0 {
             return Vec::new();
         }
-        let hold_until = Instant::now() + hold;
+        let hold_until = Instant::now() + hold; // lint: wall-clock
         let mut st = self.state.lock().unwrap();
         let mut jobs = Vec::new();
         loop {
@@ -492,7 +504,7 @@ impl SharedQueue {
             if jobs.len() >= limit || st.closed || st.aborted {
                 return jobs;
             }
-            let now = Instant::now();
+            let now = Instant::now(); // lint: wall-clock
             let left = match hold_until.checked_duration_since(now) {
                 Some(left) if !left.is_zero() => left,
                 _ => return jobs,
@@ -503,7 +515,7 @@ impl SharedQueue {
     }
 
     /// Mark the job stream exhausted and wake every waiting worker.
-    fn close(&self) {
+    pub fn close(&self) {
         let mut st = self.state.lock().unwrap();
         st.closed = true;
         drop(st);
@@ -512,7 +524,7 @@ impl SharedQueue {
 
     /// Flag an engine/factory failure: stop admitting jobs and wake a
     /// dispatcher blocked on a full pool so it can observe the flag.
-    fn abort(&self) {
+    pub fn abort(&self) {
         let mut st = self.state.lock().unwrap();
         st.aborted = true;
         drop(st);
@@ -520,7 +532,7 @@ impl SharedQueue {
     }
 
     /// Deregister an exiting worker; returns its inbox high-water mark.
-    fn worker_exit(&self, me: usize) -> usize {
+    pub fn worker_exit(&self, me: usize) -> usize {
         let mut st = self.state.lock().unwrap();
         st.alive -= 1;
         let hw = st.high_water[me];
@@ -586,7 +598,7 @@ where
         }
     };
     'serve: loop {
-        let wait0 = Instant::now();
+        let wait0 = Instant::now(); // lint: wall-clock
         let (job, stolen) = match queue.next(me, steal, shrink) {
             Fetched::Job(job, stolen) => (job, stolen),
             Fetched::Closed => {
@@ -634,7 +646,7 @@ where
             .iter()
             .any(|j| tr.should_sample(j.trace))
             .then(|| tr.now_us());
-        let busy0 = Instant::now();
+        let busy0 = Instant::now(); // lint: wall-clock
         let outcome = engine.infer_batch(&clips);
         wm.busy += busy0.elapsed();
         if let Some(s0) = infer0 {
@@ -732,7 +744,7 @@ where
     let queue = SharedQueue::new();
     let (rtx, rrx) = channel::<WorkerResult<E::Output>>();
 
-    std::thread::scope(|scope| {
+    crate::sync::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(initial);
         for _ in 0..initial {
             let wi = queue.start_worker();
@@ -833,9 +845,9 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-    use std::sync::mpsc::sync_channel;
-    use std::sync::Arc;
+    use crate::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    use crate::sync::mpsc::sync_channel;
+    use crate::sync::Arc;
 
     /// Deterministic engine: output = total spikes in the clip.
     struct CountEngine;
@@ -942,7 +954,7 @@ mod tests {
         let (tx, rx) = sync_channel::<ClipJob>(0);
         let producer = {
             let sent = Arc::clone(&sent);
-            std::thread::spawn(move || {
+            crate::sync::thread::spawn(move || {
                 for seq in 0..TOTAL {
                     if tx.send(job(seq, 4)).is_err() {
                         return;
@@ -955,7 +967,7 @@ mod tests {
             let gate = Arc::clone(&gate);
             let sent = Arc::clone(&sent);
             let sent_at_release = Arc::clone(&sent_at_release);
-            std::thread::spawn(move || {
+            crate::sync::thread::spawn(move || {
                 std::thread::sleep(Duration::from_millis(60));
                 sent_at_release.store(sent.load(Ordering::SeqCst), Ordering::SeqCst);
                 gate.store(true, Ordering::SeqCst);
@@ -1030,7 +1042,7 @@ mod tests {
         let (tx, rx) = sync_channel::<ClipJob>(0);
         let producer = {
             let gate = Arc::clone(&gate);
-            std::thread::spawn(move || {
+            crate::sync::thread::spawn(move || {
                 // Phase 1: a 6-job burst nobody can serve yet. At max
                 // capacity (3 workers × (1 inbox + 1 in-flight)) it
                 // fits exactly — but only after two growth steps.
@@ -1106,7 +1118,7 @@ mod tests {
         // back-to-back (forcing growth past one worker × depth 1),
         // then a pause well past shrink_idle (forcing retirement).
         let (tx, rx) = sync_channel::<ClipJob>(0);
-        let producer = std::thread::spawn(move || {
+        let producer = crate::sync::thread::spawn(move || {
             for seq in 0..TOTAL {
                 if tx.send(job(seq, (seq as usize * 3 + 1) % 23)).is_err() {
                     return;
@@ -1184,7 +1196,7 @@ mod tests {
         let (tx, rx) = sync_channel::<ClipJob>(0);
         let producer = {
             let gate = Arc::clone(&gate);
-            std::thread::spawn(move || {
+            crate::sync::thread::spawn(move || {
                 for seq in 0..6 {
                     tx.send(job(seq, (seq as usize * 5 + 2) % 23)).unwrap();
                 }
@@ -1270,7 +1282,7 @@ mod tests {
 
         // Rendezvous channel: mixed 1- and 2-frame clips, interleaved.
         let (tx, rx) = sync_channel::<ClipJob>(0);
-        let producer = std::thread::spawn(move || {
+        let producer = crate::sync::thread::spawn(move || {
             for (seq, t) in [1usize, 2, 1, 2, 1, 1].into_iter().enumerate() {
                 tx.send(tjob(seq as u64, t)).unwrap();
             }
@@ -1352,7 +1364,7 @@ mod tests {
 
     #[test]
     fn engine_error_propagates_and_fails_fast() {
-        use std::sync::atomic::{AtomicU64, Ordering as AOrd};
+        use crate::sync::atomic::{AtomicU64, Ordering as AOrd};
         // Every infer errors; count how many the pool attempted.
         static TRIED: AtomicU64 = AtomicU64::new(0);
         struct Bad;

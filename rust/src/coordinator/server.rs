@@ -13,8 +13,8 @@
 //! load-balanced worker pool ([`super::pool`]) while preserving
 //! response order (DESIGN.md §Serve).
 
+use crate::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, TryRecvError};
 use std::collections::VecDeque;
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, TryRecvError};
 use std::time::{Duration, Instant};
 
 use crate::dvs::binning::bin_events;
@@ -165,10 +165,10 @@ impl InferenceServer {
         engine: &mut E,
     ) -> Result<(Vec<Response<E::Output>>, Metrics)> {
         let cfg = self.cfg;
-        let wall0 = Instant::now();
+        let wall0 = Instant::now(); // lint: wall-clock
         let (tx, rx): (_, Receiver<ClipJob>) = sync_channel(cfg.queue_depth);
 
-        let ingest = std::thread::spawn(move || {
+        let ingest = crate::sync::thread::spawn(move || {
             for (seq, events) in requests.into_iter().enumerate() {
                 if tx.send(bin_request(cfg, seq as u64, &events)).is_err() {
                     return; // consumer dropped
@@ -257,8 +257,8 @@ impl InferenceServer {
         F: Fn(usize) -> Result<E> + Sync,
     {
         let cfg = self.cfg;
-        let wall0 = Instant::now();
-        std::thread::scope(|scope| {
+        let wall0 = Instant::now(); // lint: wall-clock
+        crate::sync::thread::scope(|scope| {
             let (jtx, jrx) = sync_channel::<ClipJob>(cfg.queue_depth);
             let ingest = scope.spawn(move || {
                 for (seq, events) in requests.into_iter().enumerate() {
@@ -323,7 +323,7 @@ fn assemble_batch(
         }
     };
     let timesteps = first.frames.len();
-    let hold_until = Instant::now() + deadline;
+    let hold_until = Instant::now() + deadline; // lint: wall-clock
     let mut jobs = Vec::with_capacity(cap);
     jobs.push(first);
     // Deferred clips of a matching length join first, oldest first.
@@ -341,7 +341,7 @@ fn assemble_batch(
             Ok(job) => pending.push_back(job),
             Err(TryRecvError::Disconnected) => *closed = true,
             Err(TryRecvError::Empty) => {
-                let now = Instant::now();
+                let now = Instant::now(); // lint: wall-clock
                 if deadline.is_zero() || now >= hold_until {
                     break;
                 }
@@ -366,7 +366,7 @@ fn bin_request(cfg: ServerConfig, seq: u64, events: &[Event]) -> ClipJob {
     let tr = trace::tracer();
     let clip_trace = tr.mint();
     let _ingest = tr.span(clip_trace, "ingest");
-    let t0 = Instant::now();
+    let t0 = Instant::now(); // lint: wall-clock
     let frames = bin_events(events, cfg.height, cfg.width, cfg.timesteps, cfg.bin_us);
     ClipJob {
         seq,
@@ -769,7 +769,7 @@ mod tests {
         let mut pending = VecDeque::new();
         let mut closed = false;
         let t0 = Instant::now();
-        let producer = std::thread::spawn(move || {
+        let producer = crate::sync::thread::spawn(move || {
             tx.send(job(0, 4)).unwrap();
             std::thread::sleep(Duration::from_millis(80));
             tx.send(job(1, 4)).unwrap();

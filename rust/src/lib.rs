@@ -38,14 +38,27 @@
 //!   §Observability).
 //! * [`runtime`] — PJRT client that loads and executes the AOT HLO
 //!   artifacts (the golden model; Python never runs at request time).
+//! * [`sync`] — the crate-wide synchronization facade: plain `std`
+//!   re-exports in release builds, the deterministic model checker's
+//!   shims under `--cfg spidr_model` (DESIGN.md §Correctness).
+//! * `check` (`--cfg spidr_model` only) — the loom-style bounded
+//!   model checker: DFS over scheduling decisions with a preemption
+//!   bound and state-hash pruning, driven by `tests/model.rs`.
+//! * [`lint`] — the repo-invariant source lint behind `spidr lint`
+//!   (facade discipline, timestamp audit, total decoding, bench emit
+//!   gate).
 
 #![warn(missing_docs)]
+#![forbid(unsafe_code)]
 
 pub mod baselines;
+#[cfg(spidr_model)]
+pub mod check;
 pub mod coordinator;
 pub mod dvs;
 pub mod energy;
 pub mod error;
+pub mod lint;
 pub mod net;
 pub mod obs;
 pub mod prop;
@@ -53,5 +66,6 @@ pub mod quant;
 pub mod runtime;
 pub mod sim;
 pub mod snn;
+pub mod sync;
 
 pub use error::{Error, Result};

@@ -1,0 +1,452 @@
+//! Repo-invariant source lint behind `spidr lint` (DESIGN.md
+//! §Correctness).
+//!
+//! The concurrency-correctness story of this crate rests on
+//! conventions no compiler checks: every synchronization primitive
+//! must come from the [`crate::sync`] facade (or the model checker
+//! cannot see it), wall-clock reads must stay out of protocol logic
+//! (or model executions diverge on timing), wire decoding must be
+//! total (or a malformed frame panics a shard host), and bench output
+//! must flow through one emitter (or the `BENCH_*.json` validity gate
+//! silently misses a series). This module makes those conventions
+//! machine-checked: a line-based scan of the repo tree, run by the
+//! `spidr lint` subcommand and gated in CI.
+//!
+//! Rules (see [`Rule`]):
+//!
+//! 1. **facade-only** — no `std::sync::{Mutex, Condvar, RwLock,
+//!    mpsc}`, `std::thread::spawn`, or `std::thread::Builder` in
+//!    `rust/src` outside the facade itself (`sync.rs`) and the model
+//!    checker (`check/`). `Arc`, `OnceLock`, `thread::scope`,
+//!    `thread::sleep`, and `available_parallelism` are deliberately
+//!    exempt: they carry no protocol state worth model-checking
+//!    (`sync.rs` docs).
+//! 2. **wall-clock** — no `Instant::now()` in `rust/src` outside
+//!    `obs/` unless the line carries a `// lint: wall-clock` audit
+//!    marker, which asserts the read only feeds telemetry (stall /
+//!    busy / latency accounting), never a protocol decision.
+//! 3. **total-decode** — no `.unwrap()` / `.expect(` in the non-test
+//!    portion of `net/wire.rs`: frame decoding must be total, every
+//!    malformation an `Error::Protocol` (use the `fixed` helper for
+//!    slice-to-array conversions).
+//! 4. **bench-emit** — no filesystem writes (`File::create`,
+//!    `OpenOptions`, `fs::write`) in `rust/benches/*.rs` outside
+//!    `common/`: every `BENCH_*.json` row goes through
+//!    `common::emit`, the single writer the validity gate audits.
+//!
+//! The scanner is deliberately dumb — per-line substring matches on
+//! comment-stripped source, with `#[cfg(test)]` ending rules 2 and 3
+//! for the remainder of a file (test modules sit at the bottom by
+//! repo convention). Dumb is a feature: the rules stay greppable,
+//! false negatives are bounded by convention, and the lint has no
+//! parser to disagree with `rustc`.
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// One repo invariant the lint enforces (see the module docs for the
+/// full rationale of each).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rule {
+    /// Rule 1: synchronization primitives only via [`crate::sync`].
+    FacadeOnly,
+    /// Rule 2: `Instant::now()` outside `obs/` needs an audit marker.
+    WallClock,
+    /// Rule 3: `net/wire.rs` decode paths never panic.
+    TotalDecode,
+    /// Rule 4: benches write files only through `common::emit`.
+    BenchEmit,
+}
+
+impl Rule {
+    /// Stable identifier printed in reports (and usable in greps).
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::FacadeOnly => "facade-only",
+            Rule::WallClock => "wall-clock",
+            Rule::TotalDecode => "total-decode",
+            Rule::BenchEmit => "bench-emit",
+        }
+    }
+
+    /// One-line fix hint shown next to each violation.
+    pub fn hint(self) -> &'static str {
+        match self {
+            Rule::FacadeOnly => "import from crate::sync so the model checker sees it",
+            Rule::WallClock => {
+                "move to obs/, or add `// lint: wall-clock` if this only feeds telemetry"
+            }
+            Rule::TotalDecode => "return Error::Protocol (see wire.rs `fixed`); decoding is total",
+            Rule::BenchEmit => "emit through benches/common::emit so the validity gate sees it",
+        }
+    }
+}
+
+/// One lint finding.
+#[derive(Debug)]
+pub struct Violation {
+    /// File the offending line is in (relative to the scanned root).
+    pub file: PathBuf,
+    /// 1-based line number.
+    pub line: usize,
+    /// Which invariant the line breaks.
+    pub rule: Rule,
+    /// The offending source line, trimmed.
+    pub excerpt: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}\n    fix: {}",
+            self.file.display(),
+            self.line,
+            self.rule.id(),
+            self.excerpt,
+            self.rule.hint()
+        )
+    }
+}
+
+/// How a file participates in the scan, derived from its repo path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FileKind {
+    /// `rust/src` outside the exemptions: rules 1 and 2.
+    Src,
+    /// `rust/src/obs/`: rule 1 only (wall-clock reads are its job).
+    Obs,
+    /// `rust/src/net/wire.rs`: rules 1, 2, and 3.
+    Wire,
+    /// `rust/benches/*.rs` outside `common/`: rule 4.
+    Bench,
+    /// `rust/src/sync.rs`, `rust/src/check/`, `rust/benches/common/`:
+    /// not scanned (they implement what the rules protect).
+    Exempt,
+}
+
+/// Classify `rel`, a path relative to the scanned repo root (with
+/// `/`-normalized separators).
+fn classify(rel: &str) -> FileKind {
+    if !rel.ends_with(".rs") {
+        return FileKind::Exempt;
+    }
+    if let Some(in_src) = rel.strip_prefix("rust/src/") {
+        return match in_src {
+            "sync.rs" => FileKind::Exempt,
+            // This file: it spells out the banned tokens in order to
+            // match them, which the substring scanner cannot tell from
+            // a use of them.
+            "lint.rs" => FileKind::Exempt,
+            "net/wire.rs" => FileKind::Wire,
+            _ if in_src.starts_with("check/") => FileKind::Exempt,
+            _ if in_src.starts_with("obs/") => FileKind::Obs,
+            _ => FileKind::Src,
+        };
+    }
+    if let Some(in_bench) = rel.strip_prefix("rust/benches/") {
+        return if in_bench.starts_with("common/") {
+            FileKind::Exempt
+        } else {
+            FileKind::Bench
+        };
+    }
+    FileKind::Exempt
+}
+
+/// The code portion of a line: everything before a `//` comment.
+/// Naive about `//` inside string literals — that only suppresses
+/// findings on such lines, and none of the banned tokens belong in
+/// strings anyway.
+fn code_of(line: &str) -> &str {
+    match line.find("//") {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+/// The audit marker that exempts a single line from rule 2.
+const WALL_CLOCK_MARKER: &str = "lint: wall-clock";
+
+/// Scan one file's source text. Pure over strings so the rules are
+/// unit-testable without a filesystem; `rel` is only recorded into
+/// findings.
+fn scan_source(rel: &Path, kind: FileKind, text: &str) -> Vec<Violation> {
+    let mut found = Vec::new();
+    if kind == FileKind::Exempt {
+        return found;
+    }
+    // Rules 2 and 3 stop at the first `#[cfg(test)]`: test modules sit
+    // at the bottom of a file by repo convention, and tests may panic
+    // on malformed input or time themselves freely. Rule 1 keeps going
+    // — tests exercise the same protocols and must stay modelable.
+    let mut in_tests = false;
+    for (i, line) in text.lines().enumerate() {
+        let code = code_of(line);
+        if code.contains("#[cfg(test)]") {
+            in_tests = true;
+        }
+        let mut hit = |rule: Rule| {
+            found.push(Violation {
+                file: rel.to_path_buf(),
+                line: i + 1,
+                rule,
+                excerpt: line.trim().to_string(),
+            });
+        };
+        match kind {
+            FileKind::Src | FileKind::Obs | FileKind::Wire => {
+                if code.contains("std::thread::spawn")
+                    || code.contains("std::thread::Builder")
+                    || code.contains("std::sync::mpsc")
+                    || (code.contains("std::sync::")
+                        && ["Mutex", "Condvar", "RwLock"]
+                            .iter()
+                            .any(|t| code.contains(t)))
+                {
+                    hit(Rule::FacadeOnly);
+                }
+                if kind != FileKind::Obs
+                    && !in_tests
+                    && code.contains("Instant::now()")
+                    && !line.contains(WALL_CLOCK_MARKER)
+                {
+                    hit(Rule::WallClock);
+                }
+                if kind == FileKind::Wire
+                    && !in_tests
+                    && (code.contains(".unwrap()") || code.contains(".expect("))
+                {
+                    hit(Rule::TotalDecode);
+                }
+            }
+            FileKind::Bench => {
+                if code.contains("File::create")
+                    || code.contains("OpenOptions")
+                    || code.contains("fs::write")
+                {
+                    hit(Rule::BenchEmit);
+                }
+            }
+            FileKind::Exempt => unreachable!(),
+        }
+    }
+    found
+}
+
+/// Recursively collect `.rs` files under `dir`, as paths relative to
+/// `root`. Missing directories are fine (a fixture tree may only
+/// carry the files its seeded violations need).
+fn collect(root: &Path, dir: &str, out: &mut Vec<PathBuf>) -> Result<()> {
+    let abs = root.join(dir);
+    if !abs.is_dir() {
+        return Ok(());
+    }
+    let mut stack = vec![abs];
+    while let Some(d) = stack.pop() {
+        for entry in fs::read_dir(&d)? {
+            let path = entry?.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                let rel = path
+                    .strip_prefix(root)
+                    .map_err(|_| Error::config("lint: walked outside the scanned root"))?;
+                out.push(rel.to_path_buf());
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The result of a full lint run.
+#[derive(Debug)]
+pub struct LintReport {
+    /// Files actually scanned (non-exempt).
+    pub files_scanned: usize,
+    /// Every violation found, in path order.
+    pub violations: Vec<Violation>,
+}
+
+/// Lint the repo tree rooted at `root` (the directory holding
+/// `rust/`). Scans `rust/src` and `rust/benches`; returns every
+/// violation in path order. An empty tree lints clean.
+pub fn lint_tree(root: &Path) -> Result<LintReport> {
+    let mut files = Vec::new();
+    collect(root, "rust/src", &mut files)?;
+    collect(root, "rust/benches", &mut files)?;
+    files.sort();
+    let mut report = LintReport {
+        files_scanned: 0,
+        violations: Vec::new(),
+    };
+    for rel in files {
+        let rel_str = rel
+            .to_str()
+            .map(|s| s.replace('\\', "/"))
+            .ok_or_else(|| Error::config("lint: non-UTF-8 source path"))?;
+        let kind = classify(&rel_str);
+        if kind == FileKind::Exempt {
+            continue;
+        }
+        report.files_scanned += 1;
+        let text = fs::read_to_string(root.join(&rel))?;
+        report.violations.extend(scan_source(&rel, kind, &text));
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(rel: &str, text: &str) -> Vec<Violation> {
+        scan_source(Path::new(rel), classify(rel), text)
+    }
+
+    fn rules(v: &[Violation]) -> Vec<Rule> {
+        v.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn classify_follows_repo_layout() {
+        assert_eq!(classify("rust/src/coordinator/pool.rs"), FileKind::Src);
+        assert_eq!(classify("rust/src/obs/trace.rs"), FileKind::Obs);
+        assert_eq!(classify("rust/src/net/wire.rs"), FileKind::Wire);
+        assert_eq!(classify("rust/src/sync.rs"), FileKind::Exempt);
+        assert_eq!(classify("rust/src/lint.rs"), FileKind::Exempt);
+        assert_eq!(classify("rust/src/check/rt.rs"), FileKind::Exempt);
+        assert_eq!(classify("rust/benches/hotpath.rs"), FileKind::Bench);
+        assert_eq!(classify("rust/benches/common/mod.rs"), FileKind::Exempt);
+        assert_eq!(classify("examples/quickstart.rs"), FileKind::Exempt);
+        assert_eq!(classify("rust/src/README.md"), FileKind::Exempt);
+    }
+
+    #[test]
+    fn facade_rule_catches_direct_std_sync() {
+        let v = scan(
+            "rust/src/a.rs",
+            "use std::sync::Mutex;\n\
+             use std::sync::{Arc, Condvar};\n\
+             use std::sync::mpsc::channel;\n\
+             let t = std::thread::spawn(|| ());\n\
+             let b = std::thread::Builder::new();\n",
+        );
+        assert_eq!(rules(&v), vec![Rule::FacadeOnly; 5]);
+    }
+
+    #[test]
+    fn facade_rule_allows_exempt_primitives() {
+        let v = scan(
+            "rust/src/a.rs",
+            "use std::sync::Arc;\n\
+             use std::sync::OnceLock;\n\
+             std::thread::scope(|s| ());\n\
+             std::thread::sleep(d);\n\
+             let n = std::thread::available_parallelism();\n\
+             use crate::sync::{Condvar, Mutex};\n\
+             // a comment naming std::sync::Mutex is fine\n",
+        );
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn facade_rule_applies_inside_sync_and_check_exemptions() {
+        assert!(scan("rust/src/sync.rs", "use std::sync::Mutex;\n").is_empty());
+        assert!(scan("rust/src/check/shim.rs", "use std::sync::Mutex;\n").is_empty());
+    }
+
+    #[test]
+    fn wall_clock_rule_needs_marker_outside_obs() {
+        let src = "let t0 = Instant::now();\n\
+                   let t1 = Instant::now(); // lint: wall-clock\n";
+        assert_eq!(rules(&scan("rust/src/a.rs", src)), vec![Rule::WallClock]);
+        assert!(scan("rust/src/obs/t.rs", src).is_empty());
+    }
+
+    #[test]
+    fn wall_clock_rule_stops_at_tests() {
+        let src = "fn f() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   let t0 = Instant::now();\n\
+                   }\n";
+        assert!(scan("rust/src/a.rs", src).is_empty());
+    }
+
+    #[test]
+    fn total_decode_rule_is_wire_only_and_skips_tests() {
+        let src = "let x = y.unwrap();\n\
+                   let z = w.expect(\"boom\");\n\
+                   #[cfg(test)]\n\
+                   mod tests { let a = b.unwrap(); }\n";
+        assert_eq!(
+            rules(&scan("rust/src/net/wire.rs", src)),
+            vec![Rule::TotalDecode, Rule::TotalDecode]
+        );
+        assert!(scan("rust/src/a.rs", src)
+            .iter()
+            .all(|f| f.rule != Rule::TotalDecode));
+    }
+
+    #[test]
+    fn bench_emit_rule_bans_stray_writers() {
+        let src = "let f = std::fs::File::create(\"BENCH_x.json\");\n\
+                   std::fs::write(\"out\", b\"\");\n\
+                   let r = std::fs::read_to_string(\"in\");\n";
+        assert_eq!(
+            rules(&scan("rust/benches/rogue.rs", src)),
+            vec![Rule::BenchEmit, Rule::BenchEmit]
+        );
+        assert!(scan("rust/benches/common/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn violation_reports_position_and_hint() {
+        let v = scan("rust/src/a.rs", "\n\nuse std::sync::Mutex;\n");
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].line, 3);
+        let s = v[0].to_string();
+        assert!(s.contains("rust/src/a.rs:3"), "{s}");
+        assert!(s.contains("facade-only"), "{s}");
+        assert!(s.contains("crate::sync"), "{s}");
+    }
+
+    #[test]
+    fn the_repo_tree_itself_lints_clean() {
+        // CARGO_MANIFEST_DIR is the repo root (the crate keeps its
+        // sources under `rust/`). This is the same invariant the CI
+        // lint gate enforces via the binary; having it here too means
+        // plain `cargo test` catches a violation before push.
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let report = lint_tree(root).unwrap();
+        assert!(
+            report.files_scanned > 20,
+            "scanned only {} files — layout drifted?",
+            report.files_scanned
+        );
+        let msgs: Vec<String> = report.violations.iter().map(|v| v.to_string()).collect();
+        assert!(msgs.is_empty(), "lint violations:\n{}", msgs.join("\n"));
+    }
+
+    #[test]
+    fn seeded_fixture_fails_the_lint() {
+        // The CI lint gate also runs the binary against this fixture
+        // tree and expects a nonzero exit; the library-level check
+        // pins the exact rule mix seeded there.
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/fixtures/lint-seeded");
+        let report = lint_tree(&root).unwrap();
+        let mut seen: Vec<&str> = report.violations.iter().map(|v| v.rule.id()).collect();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(
+            seen,
+            vec!["bench-emit", "facade-only", "total-decode", "wall-clock"],
+            "fixture must trip every rule: {:?}",
+            report.violations
+        );
+    }
+}

@@ -37,7 +37,14 @@
 //!                  sites, one per --links entry: serialization
 //!                  bandwidth in MB/s `x` one-way latency in µs
 //!                  (default: three loopback sites)
+//! spidr lint     [--root DIR]
+//!                  scan the repo tree (default: the working
+//!                  directory) for concurrency-correctness invariant
+//!                  violations (`spidr::lint`, DESIGN.md
+//!                  §Correctness); prints each finding with a fix
+//!                  hint and exits nonzero if any
 //! ```
+#![forbid(unsafe_code)]
 
 use std::collections::HashMap;
 use std::process::ExitCode;
@@ -437,6 +444,27 @@ fn cmd_flow(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+fn cmd_lint(flags: &HashMap<String, String>) -> Result<()> {
+    let root = flags.get("root").map(|s| s.as_str()).unwrap_or(".");
+    let report = spidr::lint::lint_tree(std::path::Path::new(root))?;
+    for v in &report.violations {
+        println!("{v}");
+    }
+    if report.violations.is_empty() {
+        println!(
+            "lint clean: {} files scanned (facade-only, wall-clock, total-decode, bench-emit)",
+            report.files_scanned
+        );
+        Ok(())
+    } else {
+        Err(Error::config(format!(
+            "lint: {} violation(s) across {} scanned files",
+            report.violations.len(),
+            report.files_scanned
+        )))
+    }
+}
+
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
@@ -449,14 +477,15 @@ fn main() -> ExitCode {
         "shard" => cmd_shard(&flags),
         "metrics" => cmd_metrics(&flags),
         "plan" => cmd_plan(&flags),
+        "lint" => cmd_lint(&flags),
         _ => {
             eprintln!(
-                "usage: spidr <chip|map|gesture|flow|shard|metrics|plan> [--wb 4|6|8] \
+                "usage: spidr <chip|map|gesture|flow|shard|metrics|plan|lint> [--wb 4|6|8] \
                  [--sparsity S] [--corner low|high] [--task T] \
                  [--clips N] [--artifacts DIR] [--listen HOST:PORT] \
                  [--workload W] [--timesteps N] [--sessions N] [--protocol 2|3] \
                  [--trace FILE] [--metrics-listen HOST:PORT] [--connect HOST:PORT] \
-                 [--links MBxUS,...]"
+                 [--links MBxUS,...] [--root DIR]"
             );
             return ExitCode::from(2);
         }

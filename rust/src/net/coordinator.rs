@@ -54,11 +54,11 @@
 //! bit-identical under any schedule
 //! (`prop_window_schedule_invariant`).
 
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError, TrySendError};
+use crate::sync::thread::JoinHandle;
 use std::collections::BTreeMap;
 use std::fmt;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError, TrySendError};
-use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::coordinator::metrics::StageMetrics;
@@ -236,7 +236,7 @@ fn timed_recv<T>(rx: &Receiver<T>, sm: &mut StageMetrics) -> std::result::Result
         Ok(v) => Ok(v),
         Err(TryRecvError::Disconnected) => Err(()),
         Err(TryRecvError::Empty) => {
-            let wait0 = Instant::now();
+            let wait0 = Instant::now(); // lint: wall-clock
             let got = rx.recv();
             sm.stall_in += wait0.elapsed();
             sm.stall_samples += 1;
@@ -258,7 +258,7 @@ fn timed_send<T>(
         Ok(()) => Ok(()),
         Err(TrySendError::Disconnected(_)) => Err(()),
         Err(TrySendError::Full(value)) => {
-            let send0 = Instant::now();
+            let send0 = Instant::now(); // lint: wall-clock
             let sent = tx.send(value);
             sm.stall_out += send0.elapsed();
             sm.stall_samples += 1;
@@ -275,7 +275,7 @@ fn send_frame(
     plane: &SpikePlane,
     sm: &mut StageMetrics,
 ) -> std::result::Result<(), HopFailure> {
-    let send0 = Instant::now();
+    let send0 = Instant::now(); // lint: wall-clock
     link.send(&Frame::SpikeFrame {
         clip: clip_id,
         seq: seq as u32,
@@ -283,6 +283,30 @@ fn send_frame(
     })
     .map_err(HopFailure::Replica)?;
     sm.busy += send0.elapsed();
+    Ok(())
+}
+
+/// The reorder-buffer watermark discipline, factored out of
+/// [`pump_reply`] / [`pump_lane_reply`] so `tests/model.rs` can
+/// model-check it without a transport: admit `item` at `seq` into the
+/// reorder buffer — a `seq` below the already-forwarded watermark is a
+/// failover-replay regeneration (bit-identical by determinism) and is
+/// dropped so downstream sees each frame once — then drain every
+/// now-in-order item through `forward`, advancing the watermark.
+pub fn admit_and_forward<T, E>(
+    reorder: &mut BTreeMap<u32, T>,
+    next_fwd: &mut u32,
+    seq: u32,
+    item: T,
+    mut forward: impl FnMut(T) -> std::result::Result<(), E>,
+) -> std::result::Result<(), E> {
+    if seq >= *next_fwd {
+        reorder.insert(seq, item);
+    }
+    while let Some(item) = reorder.remove(next_fwd) {
+        *next_fwd += 1;
+        forward(item)?;
+    }
     Ok(())
 }
 
@@ -300,15 +324,11 @@ fn pump_reply(
     tx: Option<&SyncSender<SpikePlane>>,
     sm: &mut StageMetrics,
 ) -> std::result::Result<(), HopFailure> {
-    let wait0 = Instant::now();
+    let wait0 = Instant::now(); // lint: wall-clock
     let reply = link.recv().map_err(HopFailure::Replica)?;
     sm.busy += wait0.elapsed();
-    match reply {
-        Some(Frame::SpikeFrame { clip, seq, plane }) if clip == clip_id => {
-            if seq >= *next_fwd {
-                reorder.insert(seq, plane);
-            }
-        }
+    let (seq, plane) = match reply {
+        Some(Frame::SpikeFrame { clip, seq, plane }) if clip == clip_id => (seq, plane),
         Some(Frame::SpikeFrame { clip, .. }) => {
             return Err(HopFailure::Replica(Error::protocol(format!(
                 "hop {hop}: reply for clip {clip} while clip {clip_id} is in flight"
@@ -323,15 +343,14 @@ fn pump_reply(
                 frame_name(&other)
             ))));
         }
-    }
-    while let Some(plane) = reorder.remove(next_fwd) {
-        *next_fwd += 1;
+    };
+    admit_and_forward(reorder, next_fwd, seq, plane, |plane| {
         if let Some(tx) = tx {
             timed_send(tx, plane, sm)
                 .map_err(|()| HopFailure::Fatal(hop_torn_down(hop, "downstream")))?;
         }
-    }
-    Ok(())
+        Ok(())
+    })
 }
 
 /// One relay attempt of a clip on one replica: optionally re-push the
@@ -474,7 +493,7 @@ fn serve_on_replica(
     }
     link.send(&Frame::Drain { clip: clip_id })
         .map_err(HopFailure::Replica)?;
-    let wait0 = Instant::now();
+    let wait0 = Instant::now(); // lint: wall-clock
     let reply = link.recv().map_err(HopFailure::Replica)?;
     sm.busy += wait0.elapsed();
     let (telemetry, vmems) = match reply {
@@ -604,7 +623,7 @@ fn send_lane_frame(
     frame: &LaneFrame,
     sm: &mut StageMetrics,
 ) -> std::result::Result<(), HopFailure> {
-    let send0 = Instant::now();
+    let send0 = Instant::now(); // lint: wall-clock
     link.send(&Frame::LaneFrame {
         batch: batch_id,
         seq: seq as u32,
@@ -631,10 +650,10 @@ fn pump_lane_reply(
     tx: Option<&SyncSender<LaneFrame>>,
     sm: &mut StageMetrics,
 ) -> std::result::Result<(), HopFailure> {
-    let wait0 = Instant::now();
+    let wait0 = Instant::now(); // lint: wall-clock
     let reply = link.recv().map_err(HopFailure::Replica)?;
     sm.busy += wait0.elapsed();
-    match reply {
+    let (seq, frame) = match reply {
         Some(Frame::LaneFrame { batch, seq, frame }) if batch == batch_id => {
             if frame.lanes() != lanes {
                 return Err(HopFailure::Replica(Error::protocol(format!(
@@ -642,9 +661,7 @@ fn pump_lane_reply(
                     frame.lanes()
                 ))));
             }
-            if seq >= *next_fwd {
-                reorder.insert(seq, frame);
-            }
+            (seq, frame)
         }
         Some(Frame::LaneFrame { batch, .. }) => {
             return Err(HopFailure::Replica(Error::protocol(format!(
@@ -660,15 +677,14 @@ fn pump_lane_reply(
                 frame_name(&other)
             ))));
         }
-    }
-    while let Some(frame) = reorder.remove(next_fwd) {
-        *next_fwd += 1;
+    };
+    admit_and_forward(reorder, next_fwd, seq, frame, |frame| {
         if let Some(tx) = tx {
             timed_send(tx, frame, sm)
                 .map_err(|()| HopFailure::Fatal(hop_torn_down(hop, "downstream")))?;
         }
-    }
-    Ok(())
+        Ok(())
+    })
 }
 
 /// One relay attempt of a lane batch on one replica:
@@ -814,7 +830,7 @@ fn serve_batch_on_replica(
     }
     link.send(&Frame::Drain { clip: batch_id })
         .map_err(HopFailure::Replica)?;
-    let wait0 = Instant::now();
+    let wait0 = Instant::now(); // lint: wall-clock
     let reply = link.recv().map_err(HopFailure::Replica)?;
     sm.busy += wait0.elapsed();
     let reports = match reply {
@@ -1177,9 +1193,8 @@ impl DistributedEngine {
             let mut links: Vec<Box<dyn Transport>> = Vec::with_capacity(replicas);
             for r in 0..replicas {
                 let (coord_end, mut shard_end) = LoopbackTransport::pair();
-                let handle = std::thread::Builder::new()
-                    .name(format!("spidr-shard-{i}-{r}"))
-                    .spawn(move || {
+                let handle =
+                    crate::sync::thread::spawn_named(&format!("spidr-shard-{i}-{r}"), move || {
                         ShardHost::blank(format!("shard-{i}.{r}")).serve(&mut shard_end)
                     })?;
                 links.push(Box::new(coord_end));
@@ -1224,9 +1239,8 @@ impl DistributedEngine {
             for r in 0..replicas {
                 let (coord_end, mut shard_end) =
                     LoopbackTransport::pair_throttled(spec.bandwidth_bytes_per_s, spec.latency());
-                let handle = std::thread::Builder::new()
-                    .name(format!("spidr-shard-{i}-{r}"))
-                    .spawn(move || {
+                let handle =
+                    crate::sync::thread::spawn_named(&format!("spidr-shard-{i}-{r}"), move || {
                         ShardHost::blank(format!("shard-{i}.{r}")).serve(&mut shard_end)
                     })?;
                 reps.push(Box::new(coord_end));
@@ -1485,14 +1499,14 @@ impl DistributedEngine {
         let windows = self.windows.clone();
         let hop_count = self.hops.len();
         let wire_groups = &self.wire_groups;
-        let epoch = Instant::now();
+        let epoch = Instant::now(); // lint: wall-clock
         let failovers = AtomicU64::new(0);
         let frames_ref = &frames;
         let clip_ids_ref = &clip_ids;
         // The batch's trace travels to the scoped hop threads via an
         // explicit re-bind (thread bindings don't inherit).
         let batch_trace = trace::current();
-        let results: Vec<Result<LaneHopOutcome>> = std::thread::scope(|scope| {
+        let results: Vec<Result<LaneHopOutcome>> = crate::sync::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(hop_count);
             let mut prev_rx: Option<Receiver<LaneFrame>> = None;
             for (gi, (replicas, span)) in
@@ -1627,12 +1641,12 @@ impl DistributedEngine {
         let windows = self.windows.clone();
         let hop_count = self.hops.len();
         let wire_groups = &self.wire_groups;
-        let epoch = Instant::now();
+        let epoch = Instant::now(); // lint: wall-clock
         let failovers = AtomicU64::new(0);
         // The clip's trace travels to the scoped hop threads via an
         // explicit re-bind (thread bindings don't inherit).
         let clip_trace = trace::current();
-        let results: Vec<Result<HopOutcome>> = std::thread::scope(|scope| {
+        let results: Vec<Result<HopOutcome>> = crate::sync::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(hop_count);
             let mut prev_rx: Option<Receiver<SpikePlane>> = None;
             for (gi, (replicas, span)) in
@@ -1974,7 +1988,7 @@ mod tests {
             let mut links: Vec<Box<dyn Transport>> = Vec::new();
             for r in 0..2 {
                 let (coord_end, mut shard_end) = LoopbackTransport::pair();
-                hosts.push(std::thread::spawn(move || {
+                hosts.push(crate::sync::thread::spawn(move || {
                     let _ = ShardHost::blank("t").serve(&mut shard_end);
                 }));
                 links.push(match (hop, r) {
@@ -2044,7 +2058,7 @@ mod tests {
         for _ in 0..2 {
             let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
             let addr = listener.local_addr().unwrap();
-            hosts.push(std::thread::spawn(move || {
+            hosts.push(crate::sync::thread::spawn(move || {
                 let (stream, _) = listener.accept().unwrap();
                 let mut link = TcpTransport::from_stream(stream);
                 ShardHost::blank("tcp-blank").serve(&mut link)
@@ -2309,7 +2323,7 @@ mod tests {
             let mut links: Vec<Box<dyn Transport>> = Vec::new();
             for r in 0..2 {
                 let (coord_end, mut shard_end) = LoopbackTransport::pair();
-                hosts.push(std::thread::spawn(move || {
+                hosts.push(crate::sync::thread::spawn(move || {
                     let _ = ShardHost::blank("t").serve(&mut shard_end);
                 }));
                 links.push(match (hop, r) {
@@ -2373,7 +2387,7 @@ mod tests {
         for hop in 0..2u16 {
             let (coord_end, mut shard_end) = LoopbackTransport::pair();
             let protocol = if hop == 1 { 2 } else { 3 };
-            hosts.push(std::thread::spawn(move || {
+            hosts.push(crate::sync::thread::spawn(move || {
                 let _ = ShardHost::blank("nego")
                     .with_protocol(protocol)
                     .serve(&mut shard_end);
@@ -2484,7 +2498,7 @@ mod tests {
         let (tx2, rx2) = sync_channel::<u32>(1);
         timed_send(&tx2, 1, &mut sm).unwrap();
         assert_eq!(sm.stall_samples, 0);
-        let drainer = std::thread::spawn(move || {
+        let drainer = crate::sync::thread::spawn(move || {
             std::thread::sleep(Duration::from_millis(20));
             (rx2.recv().unwrap(), rx2.recv().unwrap())
         });
@@ -2495,7 +2509,7 @@ mod tests {
 
         // Blocking recv: nothing queued until a helper sends.
         let (tx3, rx3) = sync_channel::<u32>(1);
-        let sender = std::thread::spawn(move || {
+        let sender = crate::sync::thread::spawn(move || {
             std::thread::sleep(Duration::from_millis(20));
             tx3.send(9).unwrap();
         });

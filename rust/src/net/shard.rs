@@ -131,7 +131,7 @@ impl ShardHost {
             clip: None,
             lane: None,
             protocol: VERSION,
-            trace_epoch: Instant::now(),
+            trace_epoch: Instant::now(), // lint: wall-clock
             trace_clips: HashMap::new(),
             trace_spans: Vec::new(),
         }
@@ -151,7 +151,7 @@ impl ShardHost {
             clip: None,
             lane: None,
             protocol: VERSION,
-            trace_epoch: Instant::now(),
+            trace_epoch: Instant::now(), // lint: wall-clock
             trace_clips: HashMap::new(),
             trace_spans: Vec::new(),
         }
@@ -587,10 +587,10 @@ mod tests {
     /// server thread handle.
     fn spawn_host() -> (
         LoopbackTransport,
-        std::thread::JoinHandle<Result<ShardReport>>,
+        crate::sync::thread::JoinHandle<Result<ShardReport>>,
     ) {
         let (coord, mut shard_end) = LoopbackTransport::pair();
-        let handle = std::thread::spawn(move || {
+        let handle = crate::sync::thread::spawn(move || {
             ShardHost::new(demo_serving_network(4).unwrap()).serve(&mut shard_end)
         });
         (coord, handle)
@@ -677,7 +677,7 @@ mod tests {
 
         let net = demo_serving_network(4).unwrap();
         let (mut link, mut shard_end) = LoopbackTransport::pair();
-        let host = std::thread::spawn(move || {
+        let host = crate::sync::thread::spawn(move || {
             let mut h = ShardHost::blank("blank");
             let r = h.serve(&mut shard_end);
             (r, h.network().map(|n| n.name.clone()))
@@ -750,7 +750,7 @@ mod tests {
     fn blank_host_rejects_load_without_workload() {
         let (mut link, mut shard_end) = LoopbackTransport::pair();
         let host =
-            std::thread::spawn(move || ShardHost::blank("blank").serve(&mut shard_end));
+            crate::sync::thread::spawn(move || ShardHost::blank("blank").serve(&mut shard_end));
         link.send(&Frame::LoadGroup {
             shard: 0,
             groups: vec![(0, 2)],
@@ -906,7 +906,7 @@ mod tests {
     #[test]
     fn v2_host_rejects_lane_frames() {
         let (mut link, mut shard_end) = LoopbackTransport::pair();
-        let host = std::thread::spawn(move || {
+        let host = crate::sync::thread::spawn(move || {
             ShardHost::new(demo_serving_network(4).unwrap())
                 .with_protocol(2)
                 .serve(&mut shard_end)

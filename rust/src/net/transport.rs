@@ -13,10 +13,10 @@
 //!   exact same codec, flow control (a full pipe blocks the writer,
 //!   like a full TCP send buffer) and EOF semantics.
 
+use crate::sync::{Arc, Condvar, Mutex};
 use std::collections::VecDeque;
 use std::io::{self, Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
-use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::error::Result;
@@ -131,7 +131,7 @@ impl ThrottleState {
         ThrottleState {
             bandwidth_bytes_per_s: bandwidth_bytes_per_s.max(1),
             latency,
-            origin: Instant::now(),
+            origin: Instant::now(), // lint: wall-clock
             busy_until: Duration::ZERO,
             chunks: VecDeque::new(),
         }
@@ -408,8 +408,8 @@ impl Transport for LoopbackTransport {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sync::atomic::{AtomicBool, Ordering};
     use std::net::TcpListener;
-    use std::sync::atomic::{AtomicBool, Ordering};
     use std::time::Duration;
 
     fn ping(clip: u64) -> Frame {
@@ -457,7 +457,7 @@ mod tests {
             message: "x".repeat(1000),
         };
         let want = big.clone();
-        let t = std::thread::spawn(move || {
+        let t = crate::sync::thread::spawn(move || {
             a.send(&big).unwrap();
             a
         });
@@ -472,7 +472,7 @@ mod tests {
         let (mut a, mut b) = LoopbackTransport::pair_with_capacity(8);
         let sent = Arc::new(AtomicBool::new(false));
         let flag = Arc::clone(&sent);
-        let t = std::thread::spawn(move || {
+        let t = crate::sync::thread::spawn(move || {
             a.send(&Frame::Error {
                 message: "y".repeat(64),
             })
@@ -564,7 +564,7 @@ mod tests {
     fn tcp_transport_roundtrips_over_localhost() {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
-        let server = std::thread::spawn(move || {
+        let server = crate::sync::thread::spawn(move || {
             let (stream, _) = listener.accept().unwrap();
             let mut t = TcpTransport::from_stream(stream);
             while let Some(frame) = t.recv().unwrap() {

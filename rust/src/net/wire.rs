@@ -357,6 +357,14 @@ impl Wr {
     }
 }
 
+/// A slice as a fixed-size array, failing with a protocol error —
+/// never a panic — on length mismatch. Every fixed-width read in the
+/// decode path goes through here (`spidr lint` rule 3).
+fn fixed<const N: usize>(s: &[u8]) -> Result<[u8; N]> {
+    s.try_into()
+        .map_err(|_| Error::protocol(format!("expected {N} bytes, got {}", s.len())))
+}
+
 /// Little-endian payload reader over a borrowed buffer; every accessor
 /// fails with a protocol error instead of panicking.
 struct Rd<'a> {
@@ -384,20 +392,27 @@ impl<'a> Rd<'a> {
         Ok(self.take(1)?[0])
     }
 
+    /// `take(N)` as a fixed array — the total form of
+    /// `slice.try_into().unwrap()` (`spidr lint` rule 3: decode paths
+    /// never panic, even if a bounds invariant is later broken).
+    fn arr<const N: usize>(&mut self) -> Result<[u8; N]> {
+        fixed(self.take(N)?)
+    }
+
     fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32::from_le_bytes(self.arr()?))
     }
 
     fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64::from_le_bytes(self.arr()?))
     }
 
     fn i32(&mut self) -> Result<i32> {
-        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(i32::from_le_bytes(self.arr()?))
     }
 
     fn f64(&mut self) -> Result<f64> {
-        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(f64::from_le_bytes(self.arr()?))
     }
 
     /// A length prefix that must still fit in the remaining buffer when
@@ -871,7 +886,7 @@ impl Frame {
                 buf.len()
             )));
         }
-        let (version, len) = parse_header(buf[..HEADER_LEN].try_into().unwrap())?;
+        let (version, len) = parse_header(&fixed(&buf[..HEADER_LEN])?)?;
         let total = HEADER_LEN + len + 4;
         if buf.len() < total {
             return Err(Error::protocol(format!(
@@ -880,7 +895,7 @@ impl Frame {
             )));
         }
         let payload = &buf[HEADER_LEN..HEADER_LEN + len];
-        let want = u32::from_le_bytes(buf[HEADER_LEN + len..total].try_into().unwrap());
+        let want = u32::from_le_bytes(fixed(&buf[HEADER_LEN + len..total])?);
         if checksum(payload) != want {
             return Err(Error::protocol("frame checksum mismatch"));
         }
@@ -914,7 +929,7 @@ impl Frame {
         let mut rest = vec![0u8; len + 4];
         read_exact(r, &mut rest)?;
         let payload = &rest[..len];
-        let want = u32::from_le_bytes(rest[len..].try_into().unwrap());
+        let want = u32::from_le_bytes(fixed(&rest[len..])?);
         if checksum(payload) != want {
             return Err(Error::protocol("frame checksum mismatch"));
         }
@@ -1175,13 +1190,13 @@ fn parse_header(header: &[u8; HEADER_LEN]) -> Result<(u16, usize)> {
             &header[..4]
         )));
     }
-    let version = u16::from_le_bytes(header[4..6].try_into().unwrap());
+    let version = u16::from_le_bytes([header[4], header[5]]);
     if !(MIN_VERSION..=VERSION).contains(&version) {
         return Err(Error::protocol(format!(
             "unsupported protocol version {version} (host speaks {MIN_VERSION}..={VERSION})"
         )));
     }
-    let len = u32::from_le_bytes(header[7..11].try_into().unwrap());
+    let len = u32::from_le_bytes([header[7], header[8], header[9], header[10]]);
     if len > MAX_PAYLOAD {
         return Err(Error::protocol(format!(
             "oversized frame: {len}-byte payload exceeds the {MAX_PAYLOAD}-byte cap"

@@ -11,10 +11,10 @@
 //! stays plain text rather than binary frames — scrape tooling is
 //! text-first.
 
+use crate::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::Arc;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
 use std::time::Duration;
 
 use crate::error::Result;
@@ -25,7 +25,7 @@ use super::metrics::MetricsHub;
 pub struct MetricsServer {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
-    handle: Option<std::thread::JoinHandle<()>>,
+    handle: Option<crate::sync::thread::JoinHandle<()>>,
 }
 
 impl MetricsServer {
@@ -36,7 +36,7 @@ impl MetricsServer {
         let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop_flag = Arc::clone(&stop);
-        let handle = std::thread::spawn(move || {
+        let handle = crate::sync::thread::spawn(move || {
             for conn in listener.incoming() {
                 if stop_flag.load(Ordering::Relaxed) {
                     break;

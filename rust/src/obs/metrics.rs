@@ -14,8 +14,8 @@
 //! counters, `_us`/`_seconds` units suffixes); a name may embed a
 //! label set verbatim, e.g. `spidr_stage_steps_total{stage="2"}`.
 
+use crate::sync::Mutex;
 use std::collections::BTreeMap;
-use std::sync::Mutex;
 
 use super::hist::LatencyHistogram;
 

@@ -25,9 +25,9 @@
 //! ([`Tracer::inject`]), so one file shows the coordinator and every
 //! shard on a single aligned timeline.
 
+use crate::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use crate::sync::{Arc, Mutex, OnceLock};
 use std::cell::{Cell, RefCell};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
 /// Default per-thread ring capacity (spans kept per thread).

@@ -1,0 +1,85 @@
+//! The crate-wide synchronization facade (DESIGN.md §Correctness).
+//!
+//! Every concurrency primitive the crate uses — mutexes, condvars,
+//! `mpsc` channels, atomics, and thread creation — is imported from
+//! here instead of `std::sync` / `std::thread` (enforced by
+//! `spidr lint` rule 1). In a normal build this module is *pure
+//! re-exports of `std`*: zero wrapper types, zero overhead (pinned by
+//! the `facade_overhead_ratio` series in `BENCH_obs.json`).
+//!
+//! Under `RUSTFLAGS="--cfg spidr_model"` the same names resolve to
+//! the deterministic model checker's shims ([`crate::check`]), which
+//! route every operation through a cooperative scheduler so
+//! `tests/model.rs` can exhaustively explore interleavings of the
+//! serving-stack protocols. The facade is what makes that possible
+//! without a single `#[cfg]` in protocol code.
+//!
+//! Intentionally *not* shimmed (always plain `std`): [`Arc`] and
+//! [`OnceLock`] (no scheduling decisions worth exploring), and
+//! `std::thread::scope` used by the data-parallel compute tiers
+//! (`sim`, `coordinator/scheduler.rs`) whose fork-join structure has
+//! no cross-thread protocol state.
+
+#[cfg(not(spidr_model))]
+pub use std::sync::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+
+#[cfg(spidr_model)]
+pub use crate::check::shim::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+
+pub use std::sync::{Arc, OnceLock};
+
+/// Multi-producer single-consumer channels (`std::sync::mpsc` or the
+/// model-checked equivalent).
+pub mod mpsc {
+    #[cfg(not(spidr_model))]
+    pub use std::sync::mpsc::{
+        channel, sync_channel, Receiver, RecvError, RecvTimeoutError, SendError, Sender,
+        SyncSender, TryRecvError, TrySendError,
+    };
+
+    #[cfg(spidr_model)]
+    pub use crate::check::chan::{
+        channel, sync_channel, Receiver, RecvError, RecvTimeoutError, SendError, Sender,
+        SyncSender, TryRecvError, TrySendError,
+    };
+}
+
+/// Atomic types (`std::sync::atomic` or the model-checked
+/// equivalent, which is sequentially consistent regardless of the
+/// requested ordering).
+pub mod atomic {
+    #[cfg(not(spidr_model))]
+    pub use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU32, AtomicU64, AtomicUsize};
+
+    #[cfg(spidr_model)]
+    pub use crate::check::shim::atomic::{AtomicBool, AtomicI64, AtomicU32, AtomicU64, AtomicUsize};
+
+    pub use std::sync::atomic::Ordering;
+}
+
+/// Thread creation (`std::thread` or the model-checked equivalent).
+pub mod thread {
+    #[cfg(not(spidr_model))]
+    pub use std::thread::{
+        available_parallelism, scope, sleep, spawn, yield_now, JoinHandle, Scope,
+        ScopedJoinHandle,
+    };
+
+    #[cfg(spidr_model)]
+    pub use crate::check::thread_shim::{
+        available_parallelism, scope, sleep, spawn, spawn_named, yield_now, JoinHandle, Scope,
+        ScopedJoinHandle,
+    };
+
+    /// Spawn a thread with a name (visible in panics, debuggers, and
+    /// trace exports). The facade-level replacement for
+    /// `std::thread::Builder::new().name(..).spawn(..)`.
+    #[cfg(not(spidr_model))]
+    pub fn spawn_named<F, T>(name: &str, f: F) -> std::io::Result<JoinHandle<T>>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        std::thread::Builder::new().name(name.to_string()).spawn(f)
+    }
+}

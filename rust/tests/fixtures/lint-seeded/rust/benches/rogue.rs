@@ -1,0 +1,6 @@
+//! Seeded `spidr lint` violation (rule 4: bench output goes through
+//! `common::emit`). Never compiled.
+
+fn seeded() {
+    let _ = std::fs::File::create("BENCH_rogue.json");
+}

@@ -1,0 +1,12 @@
+//! Seeded `spidr lint` violations (rules 1 and 2). This tree is the
+//! CI lint gate's negative control: `spidr lint --root` here must
+//! exit nonzero. Never compiled.
+
+use std::sync::mpsc::channel;
+use std::sync::{Condvar, Mutex};
+
+fn seeded() {
+    let _worker = std::thread::spawn(|| ());
+    let _named = std::thread::Builder::new();
+    let _t0 = std::time::Instant::now();
+}

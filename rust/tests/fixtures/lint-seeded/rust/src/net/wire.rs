@@ -1,0 +1,6 @@
+//! Seeded `spidr lint` violation (rule 3: decode paths are total).
+//! Never compiled.
+
+fn decode(buf: &[u8]) -> u32 {
+    u32::from_le_bytes(buf[..4].try_into().unwrap())
+}

@@ -1,0 +1,522 @@
+//! Deterministic model checking of the crate's concurrency protocols.
+//!
+//! Compiled (and meaningful) only under `RUSTFLAGS="--cfg spidr_model"`:
+//! the `crate::sync` facade then routes every lock / condvar / channel /
+//! atomic operation through the cooperative scheduler in `spidr::check`,
+//! and [`explore`] exhaustively interleaves the threads of each model
+//! within a preemption bound (DESIGN.md §Correctness).
+//!
+//! Two kinds of test live here:
+//!
+//! * **Protocol models** — the real serving-stack protocols (pool
+//!   dispatch/retire, bounded-inbox backpressure, pipeline channels,
+//!   reorder/failover watermark, loopback pipes, hop-window retune)
+//!   driven directly through their public APIs; each must survive
+//!   every explored interleaving and explore at least 1 000 of them.
+//! * **Seeded-bug self-tests** — deliberately broken protocols
+//!   (two-lock deadlock, lost wakeup, racy counter) that the checker
+//!   must catch within the default bound and then reproduce
+//!   deterministically from the reported schedule via [`replay`].
+//!
+//! ```text
+//! RUSTFLAGS="--cfg spidr_model" cargo test --test model
+//! ```
+#![cfg(spidr_model)]
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use spidr::check::{explore, model_violation, replay, Config, FailureKind, Report};
+use spidr::coordinator::{ClipJob, Dispatch, Fetched, SharedQueue, StealPolicy};
+use spidr::net::coordinator::admit_and_forward;
+use spidr::net::{Frame, LoopbackTransport, Transport};
+use spidr::obs::TraceId;
+use spidr::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use spidr::sync::{mpsc, thread, Arc, Condvar, Mutex};
+use spidr::{model_assert, model_assert_eq};
+
+/// Exploration config for the protocol models: preemption bound 3
+/// (one more than the default — the protocol models are small enough
+/// to afford it, and the extra bound multiplies the schedule space
+/// well past the 1 000-interleaving acceptance bar), capped at `max`
+/// executions so no single model dominates CI wall time. The seeded
+/// self-tests use the plain default instead: each bug class must be
+/// caught within bound 2.
+fn cfg(max: u64) -> Config {
+    let mut c = Config::new().with_bound(3);
+    c.max_executions = max;
+    c
+}
+
+/// A protocol model passed: no failure, and the sweep was not trivial
+/// (the acceptance bar is ≥1 000 interleavings per model; pruned
+/// executions count — they are distinct explored schedules whose
+/// continuation was proven equivalent to a visited state).
+fn assert_thorough(report: &Report, what: &str) {
+    report.assert_ok();
+    assert!(
+        report.executions >= 1_000,
+        "{what}: only {} interleavings explored ({} pruned) — model too small",
+        report.executions,
+        report.pruned,
+    );
+}
+
+/// A pool job with no payload (the protocols under test never look at
+/// the frames).
+fn job(seq: u64) -> ClipJob {
+    ClipJob {
+        seq,
+        t0: Instant::now(),
+        trace: TraceId::NONE,
+        frames: Vec::new(),
+    }
+}
+
+/// The worker half of the pool protocol, exactly as `run_pool` drives
+/// it: fetch until the queue closes (deregistering on the way out) or
+/// the worker retires (already deregistered by `next`).
+fn pool_worker(
+    q: Arc<SharedQueue>,
+    me: usize,
+    steal: StealPolicy,
+    shrink: Option<(Duration, usize)>,
+    got: Arc<AtomicUsize>,
+) -> impl FnOnce() + Send + 'static {
+    move || loop {
+        match q.next(me, steal, shrink) {
+            Fetched::Job(_, _) => {
+                got.fetch_add(1, Ordering::SeqCst);
+            }
+            Fetched::Closed => {
+                q.worker_exit(me);
+                break;
+            }
+            Fetched::Retired(_) => break,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Protocol models
+// ---------------------------------------------------------------------------
+
+/// Dispatch-vs-retire race (the audit pinned in `SharedQueue::next`):
+/// workers may retire at any wait timeout while the dispatcher is
+/// placing jobs; the retire invariant (a retiring worker's inbox is
+/// provably empty, dispatch re-validates `retired[i]` under the same
+/// mutex) must hold in every interleaving — no job may be stranded in
+/// a retired inbox. The dispatcher handles [`Dispatch::Grow`] exactly
+/// as dynamic sizing does: start a worker, re-dispatch.
+#[test]
+fn pool_dispatch_vs_retire_never_strands_a_job() {
+    let report = explore(cfg(20_000), || {
+        let q = Arc::new(SharedQueue::new());
+        let got = Arc::new(AtomicUsize::new(0));
+        let shrink = Some((Duration::from_millis(1), 1));
+        let mut handles = Vec::new();
+        for _ in 0..2 {
+            let w = q.start_worker();
+            handles.push(thread::spawn(pool_worker(
+                Arc::clone(&q),
+                w,
+                StealPolicy::Steal,
+                shrink,
+                Arc::clone(&got),
+            )));
+        }
+        for seq in 0..2 {
+            let mut j = job(seq);
+            loop {
+                match q.dispatch(1, j, 2) {
+                    Dispatch::Placed => break,
+                    Dispatch::Grow(back) => {
+                        // Dynamic sizing's grow edge: every active
+                        // inbox full and a worker slot free.
+                        j = back;
+                        let w = q.start_worker();
+                        handles.push(thread::spawn(pool_worker(
+                            Arc::clone(&q),
+                            w,
+                            StealPolicy::Steal,
+                            shrink,
+                            Arc::clone(&got),
+                        )));
+                    }
+                    Dispatch::Closed => model_violation("pool closed mid-stream".into()),
+                }
+            }
+        }
+        q.close();
+        for h in handles {
+            h.join().unwrap();
+        }
+        model_assert_eq!(got.load(Ordering::SeqCst), 2);
+    });
+    assert_thorough(&report, "pool dispatch-vs-retire");
+}
+
+/// Bounded-inbox backpressure: with depth-1 inboxes, one worker, and
+/// `grow_limit` already reached, the dispatcher must *block* on a full
+/// pool — never drop, never grow — and every job must still come out
+/// the other side once the worker drains.
+#[test]
+fn pool_backpressure_blocks_instead_of_dropping() {
+    let report = explore(cfg(20_000), || {
+        let q = Arc::new(SharedQueue::new());
+        let got = Arc::new(AtomicUsize::new(0));
+        let w = q.start_worker();
+        let h = thread::spawn(pool_worker(
+            Arc::clone(&q),
+            w,
+            StealPolicy::Pinned,
+            None,
+            Arc::clone(&got),
+        ));
+        for seq in 0..3 {
+            match q.dispatch(1, job(seq), 1) {
+                Dispatch::Placed => {}
+                Dispatch::Grow(_) => model_violation("grow past grow_limit".into()),
+                Dispatch::Closed => model_violation("pool closed mid-stream".into()),
+            }
+        }
+        q.close();
+        h.join().unwrap();
+        model_assert_eq!(got.load(Ordering::SeqCst), 3);
+    });
+    assert_thorough(&report, "pool backpressure");
+}
+
+/// Pipeline fill/drain: a two-deep chain of capacity-1 bounded
+/// channels (the `stage_loop` shape) must deliver every value in
+/// order through every interleaving of producer, stage, and consumer,
+/// and terminate cleanly on sender disconnect.
+#[test]
+fn pipeline_bounded_channels_fill_and_drain_in_order() {
+    let report = explore(cfg(20_000), || {
+        let (tx, rx) = mpsc::sync_channel::<u32>(1);
+        let (tx2, rx2) = mpsc::sync_channel::<u32>(1);
+        let stage = thread::spawn(move || {
+            for v in rx.iter() {
+                if tx2.send(v * 2).is_err() {
+                    break;
+                }
+            }
+        });
+        for v in 0..3u32 {
+            tx.send(v).unwrap();
+        }
+        drop(tx);
+        let out: Vec<u32> = rx2.iter().collect();
+        stage.join().unwrap();
+        model_assert_eq!(out, vec![0, 2, 4]);
+    });
+    assert_thorough(&report, "pipeline fill/drain");
+}
+
+/// Reorder-buffer ordering under replica skew: two arrival threads
+/// deliver interleaved sequence numbers through
+/// [`admit_and_forward`]; the watermark/buffer pair must forward
+/// 0,1,2,3 in order and drain completely, whichever side runs first.
+#[test]
+fn reorder_buffer_forwards_in_order_under_skew() {
+    type Shared = Mutex<(BTreeMap<u32, u32>, u32, Vec<u32>)>;
+    fn deliver(st: &Shared, seq: u32) {
+        let mut g = st.lock().unwrap();
+        let (reorder, next_fwd, out) = &mut *g;
+        admit_and_forward(reorder, next_fwd, seq, seq, |v| {
+            out.push(v);
+            Ok::<(), ()>(())
+        })
+        .unwrap();
+    }
+    let report = explore(cfg(20_000), || {
+        let st = Arc::new(Mutex::new((BTreeMap::new(), 0u32, Vec::new())));
+        let skewed = {
+            let st = Arc::clone(&st);
+            thread::spawn(move || {
+                for seq in [1u32, 3, 5] {
+                    deliver(&st, seq);
+                }
+            })
+        };
+        for seq in [0u32, 2, 4] {
+            deliver(&st, seq);
+        }
+        skewed.join().unwrap();
+        let g = st.lock().unwrap();
+        model_assert_eq!(g.2, vec![0, 1, 2, 3, 4, 5]);
+        model_assert!(g.0.is_empty(), "reorder buffer fully drained");
+    });
+    assert_thorough(&report, "reorder under skew");
+}
+
+/// Failover watermark duplicate-drop: after a replica failover the
+/// replacement replays from its last watermark, so the reply pump
+/// sees overlapping sequence ranges from two sources. The
+/// `seq >= next_fwd` admission test must drop the duplicates and
+/// forward each sequence exactly once, in order, in every
+/// interleaving of original and replayed deliveries.
+#[test]
+fn failover_watermark_drops_duplicates_exactly_once() {
+    type Shared = Mutex<(BTreeMap<u32, u32>, u32, Vec<u32>)>;
+    fn deliver(st: &Shared, seq: u32) {
+        let mut g = st.lock().unwrap();
+        let (reorder, next_fwd, out) = &mut *g;
+        admit_and_forward(reorder, next_fwd, seq, seq, |v| {
+            out.push(v);
+            Ok::<(), ()>(())
+        })
+        .unwrap();
+    }
+    let report = explore(cfg(20_000), || {
+        let st = Arc::new(Mutex::new((BTreeMap::new(), 0u32, Vec::new())));
+        // Original replica delivered 0,1,2 before dying; the failover
+        // replacement replays from watermark 1 and delivers 1,2,3.
+        let replayer = {
+            let st = Arc::clone(&st);
+            thread::spawn(move || {
+                for seq in [1u32, 2, 3] {
+                    deliver(&st, seq);
+                }
+            })
+        };
+        for seq in [0u32, 1, 2] {
+            deliver(&st, seq);
+        }
+        replayer.join().unwrap();
+        let g = st.lock().unwrap();
+        model_assert_eq!(g.2, vec![0, 1, 2, 3]);
+        model_assert!(g.0.is_empty(), "no duplicate left buffered");
+    });
+    assert_thorough(&report, "failover duplicate-drop");
+}
+
+/// Loopback pipe, writer blocked on a full buffer vs reader drop: the
+/// first frame streams chunk-by-chunk to a live reader; the second is
+/// bigger than the pipe capacity, so the writer must wait for drain —
+/// and when the reading end drops instead, the writer must wake and
+/// fail with a clean error, never hang, at every point the drop can
+/// land relative to the partial writes.
+#[test]
+fn loopback_blocked_writer_observes_reader_drop() {
+    let report = explore(cfg(10_000), || {
+        let (mut a, mut b) = LoopbackTransport::pair_with_capacity(8);
+        let writer = thread::spawn(move || {
+            a.send(&Frame::Drain { clip: 1 }).unwrap();
+            let big = Frame::Error {
+                message: "x".repeat(64),
+            };
+            model_assert!(
+                a.send(&big).is_err(),
+                "blocked writer must error once the reader is gone"
+            );
+        });
+        model_assert_eq!(b.recv().unwrap(), Some(Frame::Drain { clip: 1 }));
+        drop(b);
+        writer.join().unwrap();
+    });
+    assert_thorough(&report, "loopback writer-vs-reader-drop");
+}
+
+/// Loopback pipe, streaming then EOF: a frame larger than the pipe
+/// capacity streams chunk-by-chunk to a concurrent reader; after the
+/// writer drops, the reader finishes the frame from the residue and
+/// then sees a clean EOF (`Ok(None)`), never a truncated frame or a
+/// hang.
+#[test]
+fn loopback_reader_drains_residue_then_clean_eof() {
+    let report = explore(cfg(10_000), || {
+        let (mut a, mut b) = LoopbackTransport::pair_with_capacity(8);
+        let writer = thread::spawn(move || {
+            a.send(&Frame::Drain { clip: 7 }).unwrap();
+            // `a` drops here: EOF once the buffered bytes drain.
+        });
+        model_assert_eq!(b.recv().unwrap(), Some(Frame::Drain { clip: 7 }));
+        model_assert!(b.recv().unwrap().is_none(), "clean EOF after writer drop");
+        writer.join().unwrap();
+    });
+    assert_thorough(&report, "loopback stream-then-EOF");
+}
+
+/// Per-hop window retune mid-flight: the congestion tuner shrinks and
+/// grows the hop window while a sender admits frames against it and a
+/// receiver acks them. Credit admission must respect the window at
+/// admission time, in-flight must never exceed the largest window
+/// ever granted, and a shrink below the current in-flight count must
+/// drain without deadlock (the checker proves deadlock-freedom
+/// directly).
+#[test]
+fn hop_window_retune_mid_flight_stays_bounded_and_live() {
+    struct Hop {
+        window: usize,
+        inflight: usize,
+        peak_window: usize,
+    }
+    let report = explore(cfg(20_000), || {
+        let hop = Arc::new((
+            Mutex::new(Hop {
+                window: 2,
+                inflight: 0,
+                peak_window: 2,
+            }),
+            Condvar::new(),
+        ));
+        let sender = {
+            let hop = Arc::clone(&hop);
+            thread::spawn(move || {
+                let (m, cv) = &*hop;
+                for _ in 0..3 {
+                    let mut g = m.lock().unwrap();
+                    while g.inflight >= g.window {
+                        g = cv.wait(g).unwrap();
+                    }
+                    g.inflight += 1;
+                    model_assert!(
+                        g.inflight <= g.peak_window,
+                        "in-flight exceeded every window ever granted"
+                    );
+                    drop(g);
+                    cv.notify_all();
+                }
+            })
+        };
+        let receiver = {
+            let hop = Arc::clone(&hop);
+            thread::spawn(move || {
+                let (m, cv) = &*hop;
+                for _ in 0..3 {
+                    let mut g = m.lock().unwrap();
+                    while g.inflight == 0 {
+                        g = cv.wait(g).unwrap();
+                    }
+                    g.inflight -= 1;
+                    drop(g);
+                    cv.notify_all();
+                }
+            })
+        };
+        // The tuner retunes concurrently with the transfers: shrink
+        // to 1 (possibly below the live in-flight count), then grow.
+        {
+            let (m, cv) = &*hop;
+            let mut g = m.lock().unwrap();
+            g.window = 1;
+            drop(g);
+            cv.notify_all();
+            let mut g = m.lock().unwrap();
+            g.window = 3;
+            g.peak_window = 3;
+            drop(g);
+            cv.notify_all();
+        }
+        sender.join().unwrap();
+        receiver.join().unwrap();
+        let g = hop.0.lock().unwrap();
+        model_assert_eq!(g.inflight, 0);
+    });
+    assert_thorough(&report, "hop window retune");
+}
+
+// ---------------------------------------------------------------------------
+// Seeded-bug self-tests: the checker must catch each class within the
+// default preemption bound and reproduce it from the reported schedule.
+// ---------------------------------------------------------------------------
+
+/// ABBA deadlock: two threads take two locks in opposite orders.
+fn two_lock_deadlock_body() {
+    let a = Arc::new(Mutex::new(0u32));
+    let b = Arc::new(Mutex::new(0u32));
+    let h = {
+        let (a, b) = (Arc::clone(&a), Arc::clone(&b));
+        thread::spawn(move || {
+            let _ga = a.lock().unwrap();
+            let _gb = b.lock().unwrap();
+        })
+    };
+    {
+        let _gb = b.lock().unwrap();
+        let _ga = a.lock().unwrap();
+    }
+    h.join().unwrap();
+}
+
+#[test]
+fn seeded_two_lock_deadlock_is_caught_and_replays() {
+    let report = explore(Config::new(), two_lock_deadlock_body);
+    let failure = report.failure.expect("checker must find the ABBA deadlock");
+    assert_eq!(failure.kind, FailureKind::Deadlock, "trace:\n{}", failure.trace);
+    let replayed = replay(Config::new(), &failure.schedule, two_lock_deadlock_body)
+        .expect("replaying the schedule must reproduce the failure");
+    assert_eq!(replayed.kind, FailureKind::Deadlock);
+}
+
+/// Lost wakeup: the waiter tests the flag *outside* the lock, so the
+/// notify can land in the window between the test and the wait — after
+/// which nobody will ever signal again.
+fn lost_wakeup_body() {
+    let pair = Arc::new((Mutex::new(()), Condvar::new()));
+    let flag = Arc::new(AtomicBool::new(false));
+    let notifier = {
+        let (pair, flag) = (Arc::clone(&pair), Arc::clone(&flag));
+        thread::spawn(move || {
+            flag.store(true, Ordering::SeqCst);
+            pair.1.notify_all();
+        })
+    };
+    if !flag.load(Ordering::SeqCst) {
+        // BUG: the flag can flip (and the notify fire) right here.
+        let g = pair.0.lock().unwrap();
+        let _g = pair.1.wait(g).unwrap();
+    }
+    notifier.join().unwrap();
+}
+
+#[test]
+fn seeded_lost_wakeup_is_caught_and_replays() {
+    let report = explore(Config::new(), lost_wakeup_body);
+    let failure = report.failure.expect("checker must find the lost wakeup");
+    assert_eq!(
+        failure.kind,
+        FailureKind::LostWakeup,
+        "trace:\n{}",
+        failure.trace
+    );
+    let replayed = replay(Config::new(), &failure.schedule, lost_wakeup_body)
+        .expect("replaying the schedule must reproduce the failure");
+    assert_eq!(replayed.kind, FailureKind::LostWakeup);
+}
+
+/// Racy counter: a load/store pair is not an atomic increment; two
+/// threads can both read 0 and both store 1.
+fn racy_counter_body() {
+    let c = Arc::new(AtomicUsize::new(0));
+    let hs: Vec<_> = (0..2)
+        .map(|_| {
+            let c = Arc::clone(&c);
+            thread::spawn(move || {
+                let v = c.load(Ordering::SeqCst);
+                c.store(v + 1, Ordering::SeqCst);
+            })
+        })
+        .collect();
+    for h in hs {
+        h.join().unwrap();
+    }
+    model_assert_eq!(c.load(Ordering::SeqCst), 2);
+}
+
+#[test]
+fn seeded_racy_counter_is_caught_and_replays() {
+    let report = explore(Config::new(), racy_counter_body);
+    let failure = report.failure.expect("checker must find the lost increment");
+    assert!(
+        matches!(failure.kind, FailureKind::Assertion(_)),
+        "expected an assertion failure, got {} — trace:\n{}",
+        failure.kind,
+        failure.trace
+    );
+    let replayed = replay(Config::new(), &failure.schedule, racy_counter_body)
+        .expect("replaying the schedule must reproduce the failure");
+    assert_eq!(replayed.kind, failure.kind);
+}
